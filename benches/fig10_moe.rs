@@ -1,0 +1,14 @@
+//! Bench: Figure 10 — sparse (MoE) checkpoint + E2E speedups
+//! (simulator sweep + table regeneration).
+
+use fastpersist::benchkit::BenchGroup;
+
+fn main() {
+    let mut group = BenchGroup::start("fig10: MoE sweep (simulated)");
+    group.bench("full fig10 sweep", || {
+        let rows = fastpersist::figures::fig10::compute().unwrap();
+        assert_eq!(rows.len(), 4);
+        std::hint::black_box(&rows);
+    });
+    fastpersist::figures::fig10::run().unwrap();
+}

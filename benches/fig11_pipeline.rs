@@ -1,0 +1,74 @@
+//! Bench: Figure 11 — pipelined checkpointing, measured on REAL
+//! training (tiny GPT via PJRT) across gradient-accumulation settings,
+//! plus the paper-scale simulated sweep.
+//!
+//! Real part: per-iteration wall time with sync vs pipelined
+//! checkpointing at GAS ∈ {1, 4, 16}. Higher GAS → more F+B per
+//! optimizer step → more room to hide the write (§2.1.2/§5.6.1).
+
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::io::engine::IoConfig;
+use fastpersist::runtime::artifacts::ArtifactManifest;
+use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
+use fastpersist::util::table::Table;
+
+fn run_mode(
+    manifest: &ArtifactManifest,
+    mode: CkptRunMode,
+    ga: u64,
+    dir: std::path::PathBuf,
+) -> (f64, f64) {
+    let cfg = TrainerConfig {
+        model: "tiny".into(),
+        steps: 8,
+        ckpt_every: 1,
+        ckpt_dir: dir,
+        mode,
+        strategy: WriterStrategy::AllReplicas,
+        io: IoConfig::fastpersist().microbench(),
+        dp_writers: 2,
+        grad_accum: ga,
+        seed: 0,
+        keep_last: 1,
+        log_every: 0,
+    };
+    let mut t = Trainer::new(manifest, cfg).unwrap();
+    t.run().unwrap();
+    (t.recorder.summary("iter_s").p50, t.total_stall() / 8.0)
+}
+
+fn main() {
+    let manifest = match ArtifactManifest::load(&ArtifactManifest::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("skipping real part ({e}); simulated sweep only");
+            fastpersist::figures::fig11::run().unwrap();
+            return;
+        }
+    };
+    let dir = fastpersist::io::engine::scratch_dir("bench-fig11").unwrap();
+    println!("\n=== fig11 (real): tiny GPT, per-iteration ckpt, sync vs pipelined ===");
+    let mut table = Table::new(vec![
+        "GAS", "sync iter p50 (ms)", "pipe iter p50 (ms)", "sync stall/iter (ms)",
+        "pipe stall/iter (ms)",
+    ]);
+    for ga in [1u64, 4, 16] {
+        let (sync_iter, sync_stall) =
+            run_mode(&manifest, CkptRunMode::Sync, ga, dir.join(format!("s{ga}")));
+        let (pipe_iter, pipe_stall) =
+            run_mode(&manifest, CkptRunMode::Pipelined, ga, dir.join(format!("p{ga}")));
+        table.row(vec![
+            ga.to_string(),
+            format!("{:.1}", sync_iter * 1e3),
+            format!("{:.1}", pipe_iter * 1e3),
+            format!("{:.2}", sync_stall * 1e3),
+            format!("{:.2}", pipe_stall * 1e3),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(single-vCPU container: pipelining removes the *stall*; wall-clock");
+    println!(" gains require a second core — see EXPERIMENTS.md)");
+
+    fastpersist::figures::fig11::run().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

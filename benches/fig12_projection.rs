@@ -1,0 +1,14 @@
+//! Bench: Figure 12 — projection to DP=128 (simulator) + timing of the
+//! projection sweep.
+
+use fastpersist::benchkit::BenchGroup;
+
+fn main() {
+    let mut group = BenchGroup::start("fig12: DP projection sweep (simulated)");
+    group.bench("full fig12 sweep", || {
+        let sweep = fastpersist::sim::project::fig12_sweep().unwrap();
+        assert_eq!(sweep.len(), 12);
+        std::hint::black_box(&sweep);
+    });
+    fastpersist::figures::fig12::run().unwrap();
+}

@@ -1,0 +1,45 @@
+//! Bench: Figure 7 family — single-writer write path on real disk.
+//!
+//! Times the three engines (buffered baseline, direct single-buffer,
+//! direct double-buffer) over checkpoint and IO-buffer sizes, in
+//! pagecache-as-NVMe mode (see `figures::fig7` for the substrate note).
+//!
+//!     cargo bench --bench fig7_io_buffer
+//!     FASTPERSIST_BENCH_FAST=1 cargo bench ...   (CI-speed)
+
+use fastpersist::benchkit::BenchGroup;
+use fastpersist::io::engine::{write_file, EngineKind, IoConfig};
+use fastpersist::util::bytes::MB;
+
+fn main() {
+    let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
+    let dir = fastpersist::io::engine::scratch_dir("bench-fig7").unwrap();
+    let ckpt_sizes: &[u64] = if fast { &[16, 128] } else { &[16, 64, 256] };
+    let buf_sizes: &[u64] = if fast { &[8] } else { &[2, 8, 32] };
+
+    for &ck in ckpt_sizes {
+        let data = vec![0x55u8; (ck * MB) as usize];
+        let mut group = BenchGroup::start(&format!("fig7: {ck} MB checkpoint"));
+        let path = dir.join("bench.bin");
+        group.bench_bytes("baseline buffered 64KB chunks", data.len() as u64, || {
+            write_file(&IoConfig::baseline().microbench(), &path, &data).unwrap();
+        });
+        for &buf in buf_sizes {
+            for (name, kind) in
+                [("single", EngineKind::DirectSingle), ("double", EngineKind::DirectDouble)]
+            {
+                let cfg = IoConfig::with_kind(kind)
+                    .with_buf_size((buf * MB) as usize)
+                    .microbench();
+                group.bench_bytes(
+                    &format!("direct-{name} io_buf={buf}MB"),
+                    data.len() as u64,
+                    || {
+                        write_file(&cfg, &path, &data).unwrap();
+                    },
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

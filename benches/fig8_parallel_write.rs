@@ -1,0 +1,50 @@
+//! Bench: Figure 8 family — parallel checkpoint writes.
+//!
+//! Part 1 (real): the CheckpointEngine writing one store with 1/2/4
+//! parallel writer threads on local disk (single-vCPU container: this
+//! measures protocol overhead, not device parallelism).
+//! Part 2 (simulated): the paper-scale Replica-vs-Socket sweep.
+
+use std::collections::BTreeMap;
+
+use fastpersist::benchkit::BenchGroup;
+use fastpersist::checkpoint::engine::CheckpointEngine;
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::cluster::topology::RankPlacement;
+use fastpersist::io::engine::IoConfig;
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+
+fn group_of(n: usize) -> Vec<RankPlacement> {
+    (0..n)
+        .map(|r| RankPlacement { rank: r, node: 0, socket: r % 2, local_gpu: r })
+        .collect()
+}
+
+fn main() {
+    let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
+    let size = if fast { 32 << 20 } else { 128 << 20 };
+    let dir = fastpersist::io::engine::scratch_dir("bench-fig8").unwrap();
+
+    let mut store = TensorStore::new();
+    store
+        .push(Tensor::new("payload", DType::U8, vec![size], vec![0xa5u8; size]).unwrap())
+        .unwrap();
+
+    let mut group = BenchGroup::start(&format!(
+        "fig8: parallel checkpoint write ({} MiB store, real disk)",
+        size >> 20
+    ));
+    for writers in [1usize, 2, 4] {
+        let engine =
+            CheckpointEngine::new(IoConfig::fastpersist().microbench(), WriterStrategy::AllReplicas);
+        let g = group_of(writers);
+        let d = dir.join(format!("w{writers}"));
+        group.bench_bytes(&format!("{writers} writers"), size as u64, || {
+            engine.write(&store, BTreeMap::new(), &d, &g).unwrap();
+        });
+    }
+
+    println!("\nfig8 paper-scale simulation:");
+    fastpersist::figures::fig8::run().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

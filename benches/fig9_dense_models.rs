@@ -1,0 +1,15 @@
+//! Bench: Figure 9 — dense-model checkpoint + E2E speedups at up to
+//! 128 GPUs (simulator sweep; also times the sweep itself so simulator
+//! regressions are caught).
+
+use fastpersist::benchkit::BenchGroup;
+
+fn main() {
+    let mut group = BenchGroup::start("fig9: dense-model sweep (simulated)");
+    group.bench("full fig9 sweep", || {
+        let rows = fastpersist::figures::fig9::compute().unwrap();
+        assert!(!rows.is_empty());
+        std::hint::black_box(&rows);
+    });
+    fastpersist::figures::fig9::run().unwrap();
+}

@@ -1,0 +1,63 @@
+//! Bench: checkpoint-serialization hot path — the CPU-side costs the
+//! engine pays per checkpoint regardless of storage: snapshot, header
+//! encode, stream digest, range emission, partition planning.
+//!
+//! These run on every iteration in the per-iteration-checkpointing
+//! regime, so they must stay far below the write time (§Perf targets).
+
+use std::collections::BTreeMap;
+
+use fastpersist::benchkit::BenchGroup;
+use fastpersist::checkpoint::plan::WritePlan;
+use fastpersist::serialize::format::checksum64_slice;
+use fastpersist::serialize::writer::SerializedCheckpoint;
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+
+fn store_mb(mb: usize) -> TensorStore {
+    let mut s = TensorStore::new();
+    // a realistic tensor mix: a few large + many small
+    let large = mb * (1 << 20) / 4;
+    for i in 0..3 {
+        s.push(Tensor::new(&format!("big{i}"), DType::U8, vec![large], vec![7u8; large]).unwrap())
+            .unwrap();
+    }
+    for i in 0..64 {
+        s.push(Tensor::new(&format!("small{i}"), DType::F32, vec![256], vec![1u8; 1024]).unwrap())
+            .unwrap();
+    }
+    s
+}
+
+fn main() {
+    let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
+    let mb = if fast { 64 } else { 256 };
+    let store = store_mb(mb);
+    let bytes = store.total_bytes();
+
+    let mut group = BenchGroup::start(&format!("serialize hot path ({mb} MB store)"));
+    group.bench("snapshot (Arc clones)", || {
+        std::hint::black_box(store.snapshot());
+    });
+    group.bench_bytes("SerializedCheckpoint::new (header + digest)", bytes, || {
+        std::hint::black_box(SerializedCheckpoint::new(&store, BTreeMap::new()));
+    });
+    let ser = SerializedCheckpoint::new(&store, BTreeMap::new());
+    group.bench_bytes("emit_range full stream", ser.total_len(), || {
+        let mut n = 0u64;
+        ser.emit_range(0, ser.total_len(), &mut |p| {
+            n += p.len() as u64;
+            Ok(())
+        })
+        .unwrap();
+        std::hint::black_box(n);
+    });
+    let payload = vec![3u8; (bytes as usize).min(64 << 20)];
+    group.bench_bytes("checksum64_slice", payload.len() as u64, || {
+        std::hint::black_box(checksum64_slice(&payload));
+    });
+    group.bench("WritePlan::balanced DP=1024", || {
+        let writers: Vec<usize> = (0..1024).collect();
+        let plan = WritePlan::balanced(173_000_000_000, &writers).unwrap();
+        std::hint::black_box(plan);
+    });
+}

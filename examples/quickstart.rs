@@ -1,0 +1,57 @@
+//! Quickstart: train a tiny GPT via the AOT-compiled PJRT artifacts and
+//! checkpoint **every iteration** three ways — torch.save-style
+//! baseline, FastPersist synchronous, and FastPersist pipelined —
+//! then print the per-iteration cost of each.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::runtime::artifacts::ArtifactManifest;
+use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
+use fastpersist::util::table::Table;
+
+fn main() -> fastpersist::Result<()> {
+    let manifest = ArtifactManifest::load(&ArtifactManifest::default_dir())?;
+    let base_dir = scratch_dir("quickstart")?;
+    println!("FastPersist quickstart: model `tiny`, 20 steps, checkpoint every iteration\n");
+
+    let mut table = Table::new(vec![
+        "mode", "final loss", "iter p50 (ms)", "ckpt stall total (ms)", "ckpts",
+    ]);
+    for (label, mode) in [
+        ("baseline (torch.save)", CkptRunMode::Baseline),
+        ("fastpersist sync", CkptRunMode::Sync),
+        ("fastpersist pipelined", CkptRunMode::Pipelined),
+    ] {
+        let cfg = TrainerConfig {
+            model: "tiny".into(),
+            steps: 20,
+            ckpt_every: 1,
+            ckpt_dir: base_dir.join(label.replace(' ', "-")),
+            mode,
+            strategy: WriterStrategy::AllReplicas,
+            io: IoConfig::fastpersist().microbench(),
+            dp_writers: 2,
+            grad_accum: 1,
+            seed: 0,
+            keep_last: 2,
+            log_every: 0,
+        };
+        let mut trainer = Trainer::new(&manifest, cfg)?;
+        let loss = trainer.run()?;
+        table.row(vec![
+            label.to_string(),
+            format!("{loss:.4}"),
+            format!("{:.1}", trainer.recorder.summary("iter_s").p50 * 1e3),
+            format!("{:.1}", trainer.total_stall() * 1e3),
+            trainer.recorder.counter("ckpts").to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("note: identical training trajectory in all three modes; only the");
+    println!("checkpoint write path differs. Pipelined mode hides the write behind");
+    println!("the next iteration's forward/backward (paper §4.3).");
+    let _ = std::fs::remove_dir_all(&base_dir);
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Recovery drill — the paper's §3.3 motivation made concrete.
+//!
+//! 1. Trains a tiny GPT with per-iteration FastPersist checkpointing.
+//! 2. Simulates a failure (training state dropped mid-run).
+//! 3. Resumes from the latest durable checkpoint and verifies the
+//!    resumed trajectory is bit-identical to an uninterrupted run.
+//! 4. Prints the Eq. 2 recovery-cost table: expected GPU-time lost per
+//!    interruption for checkpoint intervals n ∈ {1, 10, 100}.
+
+use fastpersist::model::gpt3::find;
+use fastpersist::runtime::artifacts::ArtifactManifest;
+use fastpersist::io::engine::scratch_dir;
+use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
+use fastpersist::util::table::Table;
+
+fn main() -> fastpersist::Result<()> {
+    let manifest = ArtifactManifest::load(&ArtifactManifest::default_dir())?;
+    let dir = scratch_dir("recovery")?;
+
+    // --- uninterrupted reference: 12 steps ---------------------------
+    let mut cfg = TrainerConfig::quick("tiny", dir.join("ref"));
+    cfg.steps = 12;
+    cfg.mode = CkptRunMode::Pipelined;
+    cfg.keep_last = 0;
+    let mut reference = Trainer::new(&manifest, cfg.clone())?;
+    reference.run()?;
+    println!("reference run: 12 steps, final step {}", reference.state.step);
+
+    // --- failing run: crashes after step 8 ---------------------------
+    let mut cfg_fail = cfg.clone();
+    cfg_fail.ckpt_dir = dir.join("victim");
+    cfg_fail.steps = 8;
+    let mut victim = Trainer::new(&manifest, cfg_fail.clone())?;
+    victim.run()?;
+    drop(victim); // power loss: all volatile state gone
+    println!("victim run: crashed after step 8 (in-memory state dropped)");
+
+    // --- recovery: resume from latest durable checkpoint -------------
+    let mut cfg_resume = cfg_fail;
+    cfg_resume.steps = 4; // finish the remaining 12-8 steps
+    let mut resumed = Trainer::resume(&manifest, cfg_resume)?;
+    println!("resumed from step {} (latest durable checkpoint)", resumed.state.step);
+    assert_eq!(resumed.state.step, 8, "per-iteration ckpt → zero lost steps");
+    resumed.run()?;
+
+    assert_eq!(resumed.state.step, reference.state.step);
+    assert_eq!(
+        resumed.state.theta, reference.state.theta,
+        "resumed trajectory diverged from uninterrupted run"
+    );
+    println!("resumed trajectory is bit-identical to the uninterrupted run ✓\n");
+
+    // --- Eq. 2: expected recovery cost table --------------------------
+    println!("=== Eq. 2: expected GPU-seconds lost per interruption ===");
+    println!("(n/2 · m · t — gpt3-13b, m = 2048 GPUs, t = iteration seconds)\n");
+    let m13 = find("gpt3-13b").unwrap();
+    let iter_s = m13.iter_time(128, 1).total();
+    let mut t = Table::new(vec![
+        "ckpt interval n", "expected loss (GPU-hours)", "note",
+    ]);
+    for (n, note) in [
+        (1u64, "FastPersist: per-iteration, <2% overhead"),
+        (10, "typical compromise"),
+        (100, "baseline: ckpt cost forces infrequency"),
+    ] {
+        let cost = m13.recovery_cost_gpu_secs(n, 2048, iter_s) / 3600.0;
+        t.row(vec![n.to_string(), format!("{cost:.1}"), note.to_string()]);
+    }
+    println!("{}", t.render());
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

@@ -1,0 +1,224 @@
+"""AOT lowering: JAX train/eval/pack entrypoints -> HLO text artifacts.
+
+This is the only place Python touches the pipeline; it runs at `make
+artifacts` time and never again. Each entrypoint is jitted, lowered, and
+written as HLO *text* (NOT a serialized HloModuleProto: jax >= 0.5 emits
+64-bit instruction ids that the Rust side's xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md).
+
+Outputs, under --outdir (default ../artifacts):
+  train_step_<cfg>.hlo.txt   fwd+bwd+fused-Adam (Pallas kernels inlined)
+  eval_loss_<cfg>.hlo.txt    loss-only step
+  pack_fp16_<cfg>.hlo.txt    checkpoint fp16 pack kernel
+  fused_adam_unit.hlo.txt    standalone Adam kernel (runtime unit tests)
+  ffn_unit.hlo.txt           standalone FFN kernel (runtime unit tests)
+  manifest.json              shapes/dtypes/tensor-table for the Rust side
+
+Usage: python -m compile.aot [--outdir DIR] [--configs tiny,small,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ffn as ffn_mod
+from .kernels import fused_adam as adam_mod
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def _write(outdir, fname, text):
+    path = os.path.join(outdir, fname)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return fname
+
+
+def lower_config(cfg: model.ModelConfig, outdir: str) -> dict:
+    """Lower all entrypoints for one model config; return manifest entry."""
+    n = model.padded_params(cfg)
+    B, T = cfg.batch, cfg.seq
+    f32v = jax.ShapeDtypeStruct((n,), jnp.float32)
+    stepv = jax.ShapeDtypeStruct((1,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((B, T + 1), jnp.int32)
+
+    train = jax.jit(lambda t, m, v, s, x: model.train_step(t, m, v, s, x, cfg))
+    ev = jax.jit(lambda t, x: model.eval_loss(t, x, cfg))
+    pack = jax.jit(lambda t: model.pack_step(t, cfg))
+    grad = jax.jit(lambda t, x: model.grad_step(t, x, cfg))
+    adam = jax.jit(lambda t, g, m, v, s: model.adam_step(t, g, m, v, s, cfg))
+
+    files = {
+        "train_step": _write(
+            outdir, f"train_step_{cfg.name}.hlo.txt",
+            to_hlo_text(train.lower(f32v, f32v, f32v, stepv, toks))),
+        "eval_loss": _write(
+            outdir, f"eval_loss_{cfg.name}.hlo.txt",
+            to_hlo_text(ev.lower(f32v, toks))),
+        "pack_fp16": _write(
+            outdir, f"pack_fp16_{cfg.name}.hlo.txt",
+            to_hlo_text(pack.lower(f32v))),
+        "grad_step": _write(
+            outdir, f"grad_step_{cfg.name}.hlo.txt",
+            to_hlo_text(grad.lower(f32v, toks))),
+        "adam_step": _write(
+            outdir, f"adam_step_{cfg.name}.hlo.txt",
+            to_hlo_text(adam.lower(f32v, f32v, f32v, f32v, stepv))),
+    }
+
+    tensors, off = [], 0
+    for name, shape in model.tensor_table(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        tensors.append({"name": name, "shape": list(shape),
+                        "offset": off, "size": size})
+        off += size
+
+    return {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layer": cfg.n_layer, "n_head": cfg.n_head, "seq": cfg.seq,
+            "batch": cfg.batch, "d_ff": cfg.d_ff,
+        },
+        "n_params": model.num_params(cfg),
+        "n_padded": n,
+        "tensors": tensors,
+        "entrypoints": {
+            "train_step": {
+                "file": files["train_step"],
+                "inputs": [
+                    _spec("theta", "f32", (n,)), _spec("m", "f32", (n,)),
+                    _spec("v", "f32", (n,)), _spec("step", "f32", (1,)),
+                    _spec("tokens", "i32", (B, T + 1)),
+                ],
+                "outputs": [
+                    _spec("theta", "f32", (n,)), _spec("m", "f32", (n,)),
+                    _spec("v", "f32", (n,)), _spec("loss", "f32", ()),
+                ],
+            },
+            "eval_loss": {
+                "file": files["eval_loss"],
+                "inputs": [_spec("theta", "f32", (n,)),
+                           _spec("tokens", "i32", (B, T + 1))],
+                "outputs": [_spec("loss", "f32", ())],
+            },
+            "pack_fp16": {
+                "file": files["pack_fp16"],
+                "inputs": [_spec("theta", "f32", (n,))],
+                "outputs": [_spec("theta_fp16", "f16", (n,))],
+            },
+            "grad_step": {
+                "file": files["grad_step"],
+                "inputs": [_spec("theta", "f32", (n,)),
+                           _spec("tokens", "i32", (B, T + 1))],
+                "outputs": [_spec("grads", "f32", (n,)),
+                            _spec("loss", "f32", ())],
+            },
+            "adam_step": {
+                "file": files["adam_step"],
+                "inputs": [
+                    _spec("theta", "f32", (n,)), _spec("g", "f32", (n,)),
+                    _spec("m", "f32", (n,)), _spec("v", "f32", (n,)),
+                    _spec("step", "f32", (1,)),
+                ],
+                "outputs": [
+                    _spec("theta", "f32", (n,)), _spec("m", "f32", (n,)),
+                    _spec("v", "f32", (n,)),
+                ],
+            },
+        },
+    }
+
+
+def lower_unit_kernels(outdir: str) -> dict:
+    """Standalone kernel HLOs for Rust runtime unit tests."""
+    n = adam_mod.BLOCK * 2
+    f32v = jax.ShapeDtypeStruct((n,), jnp.float32)
+    stepv = jax.ShapeDtypeStruct((), jnp.float32)
+    adam = jax.jit(lambda t, g, m, v, s: adam_mod.fused_adam(t, g, m, v, s))
+    adam_file = _write(outdir, "fused_adam_unit.hlo.txt",
+                       to_hlo_text(adam.lower(f32v, f32v, f32v, f32v, stepv)))
+
+    m_dim, d, h = 256, 64, 256
+    x = jax.ShapeDtypeStruct((m_dim, d), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((d, h), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((h, d), jnp.float32)
+    ffn_jit = jax.jit(lambda a, b, c: (ffn_mod.ffn(a, b, c),))
+    ffn_file = _write(outdir, "ffn_unit.hlo.txt",
+                      to_hlo_text(ffn_jit.lower(x, w1, w2)))
+    return {
+        "fused_adam_unit": {
+            "file": adam_file, "n": n,
+            "inputs": [_spec("theta", "f32", (n,)), _spec("g", "f32", (n,)),
+                       _spec("m", "f32", (n,)), _spec("v", "f32", (n,)),
+                       _spec("step", "f32", ())],
+            "outputs": [_spec("theta", "f32", (n,)), _spec("m", "f32", (n,)),
+                        _spec("v", "f32", (n,))],
+        },
+        "ffn_unit": {
+            "file": ffn_file, "m": m_dim, "d": d, "h": h,
+            "inputs": [_spec("x", "f32", (m_dim, d)),
+                       _spec("w1", "f32", (d, h)),
+                       _spec("w2", "f32", (h, d))],
+            "outputs": [_spec("y", "f32", (m_dim, d))],
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,gpt20m,gpt100m",
+                    help="comma-separated model.CONFIGS names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "param_align": model.PARAM_ALIGN,
+        "adam": {"lr": adam_mod.LR, "beta1": adam_mod.BETA1,
+                 "beta2": adam_mod.BETA2, "eps": adam_mod.EPS},
+        "configs": {},
+        "units": lower_unit_kernels(args.outdir),
+    }
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        cfg = model.CONFIGS[name]
+        print(f"lowering {name} (params={model.num_params(cfg):,})...",
+              flush=True)
+        manifest["configs"][name] = lower_config(cfg, args.outdir)
+
+    path = os.path.join(args.outdir, "manifest.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=2)
+    os.replace(tmp, path)
+    print(f"wrote {path} ({len(manifest['configs'])} configs)")
+
+
+if __name__ == "__main__":
+    main()

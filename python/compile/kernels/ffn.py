@@ -1,0 +1,112 @@
+"""Fused transformer FFN block as a Pallas kernel (L1).
+
+The FFN (two matmuls around a GELU) is the FLOPs hot-spot of the GPT-3
+architecture's forward/backward passes — the `F`/`B` phases whose latency
+the paper's Eq. 1 bandwidth bound (B_C >= S_C / (T_F + T_B)) is computed
+from, and the work the pipelined checkpointer overlaps with.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the forward kernel tiles the
+token dimension M into TILE_M-row blocks; each grid step keeps one
+(TILE_M, D) activation tile plus both weight matrices VMEM-resident and
+drives the MXU with (TILE_M, D) @ (D, H) and (TILE_M, H) @ (H, D)
+contractions, accumulating in f32. For the repo's largest lowered config
+(D=768, H=3072) the VMEM footprint at bf16 weights is ~2*D*H*2B = 9.4 MiB
++ 3 activation tiles — inside the 16 MiB budget; larger D would tile H as
+well. GELU is fused between the matmuls so the (M, H) intermediate never
+round-trips to HBM (the paper-era memory-bound gap Pallas-class kernels
+close).
+
+The backward pass is provided as a second Pallas kernel (single grid
+step, whole-array blocks — interpret mode; a TPU build would tile it like
+the forward) wired up through jax.custom_vjp so that jax.grad through the
+L2 model lowers *both* directions into the exported HLO.
+
+Correctness: kernels.ref.ffn_ref / ffn_bwd_ref.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gelu, gelu_grad
+
+# Token-dimension tile. M (=B*T) must be a multiple of this; model configs
+# guarantee it (all use B*T >= 128 and powers of two).
+TILE_M = 128
+
+
+def _ffn_fwd_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    h = gelu(x_ref[...] @ w1_ref[...])
+    o_ref[...] = h @ w2_ref[...]
+
+
+def _ffn_fwd_pallas(x, w1, w2):
+    m, d = x.shape
+    dh = w1.shape[1]
+    tile_m = TILE_M if m % TILE_M == 0 else m
+    return pl.pallas_call(
+        _ffn_fwd_kernel,
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, dh), lambda i: (0, 0)),
+            pl.BlockSpec((dh, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def _ffn_bwd_kernel(x_ref, w1_ref, w2_ref, dy_ref, dx_ref, dw1_ref, dw2_ref):
+    x = x_ref[...]
+    w1 = w1_ref[...]
+    w2 = w2_ref[...]
+    dy = dy_ref[...]
+    a = x @ w1
+    h = gelu(a)
+    dh = (dy @ w2.T) * gelu_grad(a)
+    dx_ref[...] = dh @ w1.T
+    dw1_ref[...] = x.T @ dh
+    dw2_ref[...] = h.T @ dy
+
+
+def _ffn_bwd_pallas(x, w1, w2, dy):
+    m, d = x.shape
+    dh = w1.shape[1]
+    whole = lambda shape: pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        _ffn_bwd_kernel,
+        in_specs=[whole((m, d)), whole((d, dh)), whole((dh, d)), whole((m, d))],
+        out_specs=[whole((m, d)), whole((d, dh)), whole((dh, d))],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, d), x.dtype),
+            jax.ShapeDtypeStruct((d, dh), w1.dtype),
+            jax.ShapeDtypeStruct((dh, d), w2.dtype),
+        ],
+        interpret=True,
+    )(x, w1, w2, dy)
+
+
+@jax.custom_vjp
+def ffn(x, w1, w2):
+    """Fused FFN block: gelu(x @ w1) @ w2, forward+backward in Pallas.
+
+    Args:
+      x: f32[M, D] activations (M = batch * seq, M % TILE_M == 0 for the
+         tiled path; other M fall back to a single whole-array tile).
+      w1: f32[D, H], w2: f32[H, D].
+    """
+    return _ffn_fwd_pallas(x, w1, w2)
+
+
+def _ffn_vjp_fwd(x, w1, w2):
+    return _ffn_fwd_pallas(x, w1, w2), (x, w1, w2)
+
+
+def _ffn_vjp_bwd(res, dy):
+    x, w1, w2 = res
+    return _ffn_bwd_pallas(x, w1, w2, dy)
+
+
+ffn.defvjp(_ffn_vjp_fwd, _ffn_vjp_bwd)

@@ -1,0 +1,100 @@
+"""Fused Adam optimizer step as a Pallas kernel (L1).
+
+This is the optimizer (`O`) pass of the paper's Fig. 3 dependency graph:
+the op whose *output* the checkpoint persists, and the op the pipelined
+checkpoint executor synchronizes against. Fusing the whole Adam update
+(moment updates + bias correction + parameter update) into one kernel
+gives a single, clean O -> C data-dependency edge and avoids materializing
+mhat/vhat intermediates in HBM.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): a 1-D grid over
+`BLOCK`-sized tiles of the flat parameter vector. Per grid step the kernel
+holds 7 VMEM-resident blocks (theta, g, m, v in; theta', m', v' out) of
+BLOCK f32 elements: 7 * 8192 * 4 B = 224 KiB, far under the ~16 MiB VMEM
+budget, leaving room for the implicit HBM<->VMEM double buffering the
+Pallas pipeline emitter inserts between grid steps. The kernel is purely
+elementwise (VPU-bound); its roofline is HBM bandwidth.
+
+Executed with interpret=True everywhere in this repo (CPU PJRT cannot run
+Mosaic custom-calls); correctness is pinned to kernels.ref.adam_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size of the flat parameter vector. The model pads its flat
+# parameter count up to a multiple of this (see model.PARAM_ALIGN).
+BLOCK = 8192
+
+# Default hyperparameters (match ref.adam_ref and the Rust manifest).
+LR = 1e-3
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def _adam_kernel(bc_ref, theta_ref, g_ref, m_ref, v_ref,
+                 out_theta_ref, out_m_ref, out_v_ref,
+                 *, lr, b1, b2, eps):
+    """One BLOCK-sized tile of the fused Adam update.
+
+    bc_ref holds the two step-dependent bias-correction denominators
+    (1 - b1**step, 1 - b2**step); they are computed once outside the
+    kernel so the kernel body stays elementwise.
+    """
+    bc1 = bc_ref[0]
+    bc2 = bc_ref[1]
+    g = g_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    out_theta_ref[...] = theta_ref[...] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    out_m_ref[...] = m
+    out_v_ref[...] = v
+
+
+def fused_adam(theta, g, m, v, step, lr=LR, b1=BETA1, b2=BETA2, eps=EPS,
+               block=None):
+    """Apply one fused Adam step over the flat parameter vector.
+
+    Args:
+      theta, g, m, v: f32[N] with N a multiple of `block` (default BLOCK).
+      step: 1-based step number (scalar, traced ok) for bias correction.
+      block: tile size override. On a real TPU the default (8192) keeps
+        the working set deep inside VMEM; for the CPU-interpret AOT path
+        the L2 model passes a larger block (see model.adam_block) because
+        XLA-CPU executes each grid step as a full-buffer
+        dynamic-update-slice — O(N) copy per step — making many small
+        steps catastrophically slow (measured 105 s/iter for 12M params
+        at block=8192; see EXPERIMENTS.md §Perf).
+    Returns:
+      (theta', m', v'): updated f32[N] triple.
+    """
+    block = block or BLOCK
+    n = theta.shape[0]
+    if n % block != 0:
+        raise ValueError(f"fused_adam requires N % {block} == 0, got {n}")
+    step = jnp.asarray(step, dtype=theta.dtype)
+    bc = jnp.stack([1.0 - b1**step, 1.0 - b2**step])
+
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps),
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),  # bias corrections, broadcast
+            vec_spec, vec_spec, vec_spec, vec_spec,
+        ],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), theta.dtype),
+            jax.ShapeDtypeStruct((n,), theta.dtype),
+            jax.ShapeDtypeStruct((n,), theta.dtype),
+        ],
+        interpret=True,
+    )(bc, theta, g, m, v)
+    return tuple(out)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jnp ops only. pytest (python/tests/test_kernels.py)
+sweeps shapes/dtypes with hypothesis and asserts allclose between kernel
+and oracle. The oracles are also what the L2 model would compute if the
+Pallas kernels were swapped out, so they double as the semantic spec.
+"""
+
+import jax.numpy as jnp
+
+# tanh-approximate GELU, written out explicitly so the Pallas kernels and
+# the oracle share the exact same formula (jax.nn.gelu's internals may
+# change between releases).
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+_GELU_K = 0.044715
+
+
+def gelu(x):
+    """tanh-approximate GELU: 0.5*x*(1 + tanh(c*(x + k*x^3)))."""
+    return 0.5 * x * (1.0 + jnp.tanh(_GELU_C * (x + _GELU_K * x * x * x)))
+
+
+def gelu_grad(x):
+    """Analytic derivative of `gelu` (used by the FFN backward kernel)."""
+    inner = _GELU_C * (x + _GELU_K * x * x * x)
+    t = jnp.tanh(inner)
+    dinner = _GELU_C * (1.0 + 3.0 * _GELU_K * x * x)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * dinner
+
+
+def adam_ref(theta, g, m, v, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """Reference fused Adam update (bias-corrected, no weight decay).
+
+    `step` is the 1-based step number (float or 0-d array). Returns the
+    updated (theta, m, v) triple, mirroring kernels.fused_adam.
+    """
+    step = jnp.asarray(step, dtype=theta.dtype)
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    mhat = m2 / bc1
+    vhat = v2 / bc2
+    theta2 = theta - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return theta2, m2, v2
+
+
+def ffn_ref(x, w1, w2):
+    """Reference fused FFN block: gelu(x @ w1) @ w2."""
+    return gelu(x @ w1) @ w2
+
+
+def ffn_bwd_ref(x, w1, w2, dy):
+    """Reference backward pass of `ffn_ref` -> (dx, dw1, dw2)."""
+    a = x @ w1
+    h = gelu(a)
+    dh = (dy @ w2.T) * gelu_grad(a)
+    dx = dh @ w1.T
+    dw1 = x.T @ dh
+    dw2 = h.T @ dy
+    return dx, dw1, dw2
+
+
+def pack_fp16_ref(theta):
+    """Reference checkpoint-pack: cast the flat fp32 master parameters to
+    the fp16 serialization dtype (the paper's 2-byte model-parameter half
+    of the 14-bytes-per-parameter checkpoint state)."""
+    return theta.astype(jnp.float16)

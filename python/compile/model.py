@@ -1,0 +1,269 @@
+"""L2: GPT-3-architecture transformer fwd/bwd/optimize in JAX.
+
+The model state is a single flat f32 parameter vector `theta` (plus Adam
+moments `m`, `v` of the same shape), which is exactly the view the
+checkpoint system wants: the Rust coordinator treats model state as flat
+byte streams to partition among DP writers at byte granularity (§4.2 of
+the paper), and the manifest's tensor table (name, offset, shape) supplies
+the serialized-tensor metadata that torch.save-style checkpoints carry.
+
+`train_step(theta, m, v, step, tokens)` performs forward + backward +
+fused-Adam update and returns (theta', m', v', loss). It is lowered ONCE
+to HLO text by aot.py and executed from Rust via PJRT; Python never runs
+at training time.
+
+Pallas kernels used (lowered into the same HLO):
+  - kernels.ffn.ffn          fused FFN block, fwd + bwd (custom_vjp)
+  - kernels.fused_adam       fused Adam update over the flat vector
+  - kernels.pack.pack_fp16   fp16 packing for the checkpoint write path
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ffn import ffn
+from .kernels.fused_adam import BLOCK as ADAM_BLOCK
+from .kernels.fused_adam import BETA1, BETA2, EPS, LR, fused_adam
+from .kernels.pack import pack_fp16
+
+# Flat parameter vectors are padded to a multiple of this so the 1-D
+# Pallas grids divide evenly. Padding slots receive zero grads and stay 0.
+PARAM_ALIGN = ADAM_BLOCK
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """GPT-style decoder configuration (pre-LN, learned positions, tied
+    embedding/output projection, no biases except LayerNorm)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layer: int
+    n_head: int
+    seq: int        # training sequence length T (tokens input is [B, T+1])
+    batch: int      # per-rank micro-batch B
+    d_ff: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+
+# Model zoo lowered by aot.py. `tiny`/`small` are for tests and CI-speed
+# examples; `gpt20m`/`gpt100m` are the end-to-end training configs
+# (EXPERIMENTS.md records the real runs).
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig("tiny", vocab=256, d_model=64, n_layer=2, n_head=2,
+                    seq=32, batch=4, d_ff=256),
+        ModelConfig("small", vocab=512, d_model=128, n_layer=2, n_head=4,
+                    seq=64, batch=4, d_ff=512),
+        ModelConfig("gpt20m", vocab=4096, d_model=384, n_layer=6, n_head=6,
+                    seq=128, batch=8, d_ff=1536),
+        ModelConfig("gpt100m", vocab=8192, d_model=768, n_layer=12, n_head=12,
+                    seq=256, batch=8, d_ff=3072),
+    ]
+}
+
+
+def tensor_table(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) table of the logical tensors inside the flat
+    parameter vector. The order defines the byte layout the checkpoint
+    serializer records; layers are stacked on a leading axis."""
+    L, D, V, T, H = cfg.n_layer, cfg.d_model, cfg.vocab, cfg.seq, cfg.d_ff
+    return [
+        ("embed.weight", (V, D)),
+        ("pos_embed.weight", (T, D)),
+        ("blocks.ln1.scale", (L, D)),
+        ("blocks.ln1.bias", (L, D)),
+        ("blocks.attn.wqkv", (L, D, 3 * D)),
+        ("blocks.attn.wo", (L, D, D)),
+        ("blocks.ln2.scale", (L, D)),
+        ("blocks.ln2.bias", (L, D)),
+        ("blocks.ffn.w1", (L, D, H)),
+        ("blocks.ffn.w2", (L, H, D)),
+        ("final_ln.scale", (D,)),
+        ("final_ln.bias", (D,)),
+    ]
+
+
+def num_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in tensor_table(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    return total
+
+
+# Maximum 1-D Pallas grid steps for the optimizer/pack kernels in the
+# CPU-interpret AOT build. XLA-CPU lowers each grid step to a
+# full-output dynamic-update-slice (an O(N) copy), so many small steps
+# are catastrophic off-TPU: gpt20m at block=8192 (1496 steps) measured
+# 105 s per optimizer call vs ~0.5 s at 8 steps (EXPERIMENTS.md §Perf).
+# A real-TPU build would keep block=8192 and let the Mosaic pipeline
+# double-buffer HBM<->VMEM instead (DESIGN.md §Hardware-Adaptation).
+MAX_FLAT_GRID = 1
+
+
+def adam_block(cfg: ModelConfig) -> int:
+    """Tile size for the flat-vector kernels of this config: the
+    smallest PARAM_ALIGN multiple that caps the grid at MAX_FLAT_GRID."""
+    n = num_params(cfg)
+    per = -(-n // MAX_FLAT_GRID)  # ceil
+    return -(-per // PARAM_ALIGN) * PARAM_ALIGN
+
+
+def padded_params(cfg: ModelConfig) -> int:
+    """Flat length: num_params padded up to a whole number of blocks."""
+    n = num_params(cfg)
+    block = adam_block(cfg)
+    return -(-n // block) * block
+
+
+def _offsets(cfg: ModelConfig) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+    out, off = {}, 0
+    for name, shape in tensor_table(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = (off, shape)
+        off += size
+    return out
+
+
+def unflatten(theta: jnp.ndarray, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vector into the named parameter tree (static offsets,
+    so XLA fuses these slices away)."""
+    params = {}
+    for name, (off, shape) in _offsets(cfg).items():
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = jax.lax.slice(theta, (off,), (off + size,)).reshape(shape)
+    return params
+
+
+def init_theta(cfg: ModelConfig, seed: int = 0) -> jnp.ndarray:
+    """GPT-2-style init, flattened and padded to PARAM_ALIGN."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in tensor_table(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".bias"):
+            t = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(".scale"):
+            t = jnp.ones(shape, jnp.float32)
+        else:
+            scale = 0.02
+            # residual-path projections get the 1/sqrt(2L) shrink
+            if name.endswith("attn.wo") or name.endswith("ffn.w2"):
+                scale = 0.02 / float(jnp.sqrt(2.0 * cfg.n_layer))
+            t = scale * jax.random.normal(sub, shape, jnp.float32)
+        parts.append(t.reshape(-1))
+    flat = jnp.concatenate(parts)
+    pad = padded_params(cfg) - flat.shape[0]
+    return jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(x, wqkv, wo, n_head):
+    """Causal multi-head self-attention. x: [B, T, D]."""
+    B, T, D = x.shape
+    hd = D // n_head
+    qkv = x @ wqkv  # [B, T, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(B, T, n_head, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask, att, jnp.float32(-1e9))
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return y @ wo
+
+
+def forward(theta: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Next-token logits. tokens: i32[B, T] (inputs only)."""
+    p = unflatten(theta, cfg)
+    B, T = tokens.shape
+    x = p["embed.weight"][tokens] + p["pos_embed.weight"][:T][None, :, :]
+    for l in range(cfg.n_layer):
+        h = _layer_norm(x, p["blocks.ln1.scale"][l], p["blocks.ln1.bias"][l])
+        x = x + _attention(h, p["blocks.attn.wqkv"][l], p["blocks.attn.wo"][l],
+                           cfg.n_head)
+        h = _layer_norm(x, p["blocks.ln2.scale"][l], p["blocks.ln2.bias"][l])
+        # Fused Pallas FFN over the flattened token dimension.
+        hf = h.reshape(B * T, cfg.d_model)
+        f = ffn(hf, p["blocks.ffn.w1"][l], p["blocks.ffn.w2"][l])
+        x = x + f.reshape(B, T, cfg.d_model)
+    x = _layer_norm(x, p["final_ln.scale"], p["final_ln.bias"])
+    return x @ p["embed.weight"].T  # tied output projection
+
+
+def loss_fn(theta: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Mean next-token cross-entropy. tokens: i32[B, T+1]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(theta, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def train_step(theta, m, v, step, tokens, cfg: ModelConfig):
+    """One training iteration: fwd + bwd + fused Adam.
+
+    Args:
+      theta, m, v: f32[N_pad] flat state.
+      step: f32[1] 1-based step number (bias correction).
+      tokens: i32[B, T+1] token batch (inputs ++ shifted targets).
+    Returns:
+      (theta', m', v', loss) — loss is f32 scalar.
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(theta, tokens, cfg)
+    theta2, m2, v2 = fused_adam(theta, grads, m, v, step[0],
+                                lr=LR, b1=BETA1, b2=BETA2, eps=EPS,
+                                block=adam_block(cfg))
+    return theta2, m2, v2, loss
+
+
+def grad_step(theta, tokens, cfg: ModelConfig):
+    """Forward + backward only: returns (grads, loss).
+
+    Split out from `train_step` so the Rust coordinator can overlap the
+    checkpoint write of iteration i with F/B of iteration i+1 and
+    synchronize exactly at the optimizer boundary (paper Fig. 3/§4.3).
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(theta, tokens, cfg)
+    return grads, loss
+
+
+def adam_step(theta, g, m, v, step, cfg: ModelConfig):
+    """Optimizer pass only: fused Adam over the flat state (Pallas)."""
+    return fused_adam(theta, g, m, v, step[0], lr=LR, b1=BETA1, b2=BETA2,
+                      eps=EPS, block=adam_block(cfg))
+
+
+def pack_step(theta, cfg: ModelConfig):
+    """Checkpoint pack: flat f32 master params -> f16 for serialization
+    (the accelerator-side producer of the checkpoint's 2-byte weights)."""
+    return (pack_fp16(theta, block=adam_block(cfg)),)
+
+
+def eval_loss(theta, tokens, cfg: ModelConfig):
+    """Loss-only evaluation step (no state update)."""
+    return (loss_fn(theta, tokens, cfg),)

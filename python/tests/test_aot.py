@@ -1,0 +1,72 @@
+"""AOT pipeline: HLO text emission + manifest consistency.
+
+Lowers the tiny config in-process (fast) and checks the artifacts the Rust
+side depends on. Also validates an existing artifacts/ dir if present.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    f = jax.jit(lambda x: (x * 2.0 + 1.0,))
+    text = aot.to_hlo_text(f.lower(jax.ShapeDtypeStruct((4,), jnp.float32)))
+    assert "ENTRY" in text and "f32[4]" in text
+
+
+def test_lower_config_tiny(tmp_path):
+    cfg = model.CONFIGS["tiny"]
+    entry = aot.lower_config(cfg, str(tmp_path))
+    # entrypoint files exist and look like HLO text
+    for ep in entry["entrypoints"].values():
+        path = tmp_path / ep["file"]
+        assert path.exists()
+        head = path.read_text()[:4000]
+        assert "HloModule" in head
+    # tensor table covers exactly n_params
+    total = sum(t["size"] for t in entry["tensors"])
+    assert total == entry["n_params"]
+    offs = [t["offset"] for t in entry["tensors"]]
+    assert offs == sorted(offs) and offs[0] == 0
+    for a, b in zip(entry["tensors"], entry["tensors"][1:]):
+        assert a["offset"] + a["size"] == b["offset"]
+    # shapes in the train_step signature agree with padded size
+    n = entry["n_padded"]
+    ins = entry["entrypoints"]["train_step"]["inputs"]
+    assert ins[0]["shape"] == [n] and ins[3]["shape"] == [1]
+    assert ins[4]["shape"] == [cfg.batch, cfg.seq + 1]
+
+
+def test_unit_kernel_manifest(tmp_path):
+    units = aot.lower_unit_kernels(str(tmp_path))
+    assert (tmp_path / units["fused_adam_unit"]["file"]).exists()
+    assert (tmp_path / units["ffn_unit"]["file"]).exists()
+    assert units["fused_adam_unit"]["n"] % model.PARAM_ALIGN == 0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts/ not built (run `make artifacts`)",
+)
+def test_existing_artifacts_manifest_consistent():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    assert manifest["param_align"] == model.PARAM_ALIGN
+    for name, entry in manifest["configs"].items():
+        cfg = model.CONFIGS[name]
+        assert entry["n_params"] == model.num_params(cfg)
+        assert entry["n_padded"] == model.padded_params(cfg)
+        for ep in entry["entrypoints"].values():
+            assert os.path.exists(os.path.join(ARTIFACTS, ep["file"])), \
+                ep["file"]
+    for unit in manifest["units"].values():
+        assert os.path.exists(os.path.join(ARTIFACTS, unit["file"]))

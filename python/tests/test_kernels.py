@@ -1,0 +1,207 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps).
+
+These are the core correctness signal for the kernels that get lowered
+into the exported HLO. Shapes/dtypes/values are swept with hypothesis;
+interpret-mode Pallas is slow, so example counts are kept moderate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ffn import TILE_M, ffn
+from compile.kernels.fused_adam import BLOCK, fused_adam
+from compile.kernels.pack import pack_fp16
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _randn(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape,
+                                     jnp.float32)
+
+
+# ---------------------------------------------------------------- fused_adam
+
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(min_value=1, max_value=3),
+    step=st.integers(min_value=1, max_value=1000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_adam_matches_ref(nblocks, step, seed):
+    n = nblocks * BLOCK
+    theta = _randn(seed, (n,))
+    g = _randn(seed + 1, (n,))
+    m = _randn(seed + 2, (n,), 0.1)
+    v = jnp.abs(_randn(seed + 3, (n,), 0.1))
+    got = fused_adam(theta, g, m, v, float(step))
+    want = ref.adam_ref(theta, g, m, v, float(step))
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    lr=st.floats(min_value=1e-5, max_value=1e-1),
+    b1=st.floats(min_value=0.5, max_value=0.99),
+    b2=st.floats(min_value=0.9, max_value=0.9999),
+)
+def test_adam_hyperparams(lr, b1, b2):
+    n = BLOCK
+    theta, g = _randn(0, (n,)), _randn(1, (n,))
+    m, v = jnp.zeros((n,)), jnp.zeros((n,))
+    got = fused_adam(theta, g, m, v, 1.0, lr=lr, b1=b1, b2=b2)
+    want = ref.adam_ref(theta, g, m, v, 1.0, lr=lr, b1=b1, b2=b2)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_adam_zero_grad_keeps_theta():
+    """Padding slots (zero grad, zero moments) must not drift."""
+    n = BLOCK
+    theta = _randn(0, (n,))
+    z = jnp.zeros((n,))
+    t2, m2, v2 = fused_adam(theta, z, z, z, 1.0)
+    np.testing.assert_allclose(t2, theta, atol=0.0)
+    np.testing.assert_allclose(m2, z, atol=0.0)
+    np.testing.assert_allclose(v2, z, atol=0.0)
+
+
+def test_adam_first_step_bias_correction():
+    """At step 1 with zero moments, update must equal -lr * sign-ish form:
+    mhat = g, vhat = g^2 => theta - lr * g / (|g| + eps)."""
+    n = BLOCK
+    g = _randn(1, (n,))
+    theta = jnp.zeros((n,))
+    z = jnp.zeros((n,))
+    t2, _, _ = fused_adam(theta, g, z, z, 1.0, lr=0.01)
+    expect = -0.01 * g / (jnp.abs(g) + 1e-8)
+    np.testing.assert_allclose(t2, expect, rtol=1e-4, atol=1e-6)
+
+
+def test_adam_rejects_unaligned():
+    n = BLOCK + 1
+    z = jnp.zeros((n,))
+    with pytest.raises(ValueError):
+        fused_adam(z, z, z, z, 1.0)
+
+
+def test_adam_under_jit():
+    n = BLOCK
+    theta, g = _randn(0, (n,)), _randn(1, (n,))
+    z = jnp.zeros((n,))
+    f = jax.jit(lambda t, g, m, v, s: fused_adam(t, g, m, v, s))
+    got = f(theta, g, z, z, 7.0)
+    want = ref.adam_ref(theta, g, z, z, 7.0)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- pack_fp16
+
+
+@settings(**SETTINGS)
+@given(nblocks=st.integers(min_value=1, max_value=4),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_pack_matches_ref(nblocks, seed):
+    theta = _randn(seed, (nblocks * BLOCK,), 3.0)
+    got = pack_fp16(theta)
+    assert got.dtype == jnp.float16
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.pack_fp16_ref(theta)))
+
+
+def test_pack_handles_extremes():
+    x = jnp.zeros((BLOCK,), jnp.float32)
+    x = x.at[0].set(1e30).at[1].set(-1e30).at[2].set(1e-30).at[3].set(jnp.nan)
+    got = np.asarray(pack_fp16(x))
+    assert np.isposinf(got[0]) and np.isneginf(got[1])
+    assert got[2] == 0.0 and np.isnan(got[3])
+
+
+def test_pack_rejects_unaligned():
+    with pytest.raises(ValueError):
+        pack_fp16(jnp.zeros((BLOCK - 1,)))
+
+
+# ---------------------------------------------------------------------- ffn
+
+
+@settings(**SETTINGS)
+@given(
+    mtiles=st.integers(min_value=1, max_value=3),
+    d=st.sampled_from([16, 64]),
+    h=st.sampled_from([32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ffn_forward_matches_ref(mtiles, d, h, seed):
+    m = mtiles * TILE_M
+    x = _randn(seed, (m, d))
+    w1 = _randn(seed + 1, (d, h), 0.2)
+    w2 = _randn(seed + 2, (h, d), 0.2)
+    np.testing.assert_allclose(ffn(x, w1, w2), ref.ffn_ref(x, w1, w2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ffn_nontile_m_falls_back():
+    """M not divisible by TILE_M uses a whole-array tile; same numerics."""
+    x = _randn(0, (96, 32))
+    w1 = _randn(1, (32, 64), 0.2)
+    w2 = _randn(2, (64, 32), 0.2)
+    np.testing.assert_allclose(ffn(x, w1, w2), ref.ffn_ref(x, w1, w2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_ffn_grads_match_ref(seed):
+    x = _randn(seed, (TILE_M, 32))
+    w1 = _randn(seed + 1, (32, 64), 0.2)
+    w2 = _randn(seed + 2, (64, 32), 0.2)
+
+    def f(fn):
+        return lambda *a: jnp.sum(jnp.sin(fn(*a)))
+
+    got = jax.grad(f(ffn), argnums=(0, 1, 2))(x, w1, w2)
+    want = jax.grad(f(ref.ffn_ref), argnums=(0, 1, 2))(x, w1, w2)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_ffn_bwd_kernel_matches_bwd_ref():
+    from compile.kernels.ffn import _ffn_bwd_pallas
+
+    x = _randn(0, (64, 16))
+    w1 = _randn(1, (16, 32), 0.3)
+    w2 = _randn(2, (32, 16), 0.3)
+    dy = _randn(3, (64, 16))
+    got = _ffn_bwd_pallas(x, w1, w2, dy)
+    want = ref.ffn_bwd_ref(x, w1, w2, dy)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- gelu
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_gelu_matches_jax_nn(seed):
+    x = _randn(seed, (512,), 4.0)
+    np.testing.assert_allclose(ref.gelu(x),
+                               jax.nn.gelu(x, approximate=True),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_gelu_grad_matches_autodiff(seed):
+    x = _randn(seed, (256,), 4.0)
+    auto = jax.vmap(jax.grad(ref.gelu))(x)
+    np.testing.assert_allclose(ref.gelu_grad(x), auto, rtol=1e-5, atol=1e-6)

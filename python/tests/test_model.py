@@ -1,0 +1,197 @@
+"""L2 correctness: model shapes, flat-parameter layout, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.fused_adam import BLOCK
+
+TINY = model.CONFIGS["tiny"]
+SMALL = model.CONFIGS["small"]
+
+
+def _tokens(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (cfg.batch, cfg.seq + 1), 0, cfg.vocab,
+                              jnp.int32)
+
+
+# ------------------------------------------------------------------ layout
+
+
+def test_param_count_formula():
+    """Tensor-table total matches the analytic GPT param count."""
+    for cfg in (TINY, SMALL):
+        L, D, V, T, H = (cfg.n_layer, cfg.d_model, cfg.vocab, cfg.seq,
+                         cfg.d_ff)
+        expect = V * D + T * D + L * (4 * D + 3 * D * D + D * D + 2 * D * H) \
+            + 2 * D
+        assert model.num_params(cfg) == expect
+
+
+def test_padded_alignment():
+    for cfg in model.CONFIGS.values():
+        n = model.padded_params(cfg)
+        assert n % model.PARAM_ALIGN == 0
+        assert 0 <= n - model.num_params(cfg) < model.PARAM_ALIGN
+
+
+def test_tensor_table_offsets_are_contiguous():
+    off = 0
+    for name, shape in model.tensor_table(TINY):
+        size = int(np.prod(shape))
+        assert size > 0, name
+        off += size
+    assert off == model.num_params(TINY)
+
+
+def test_unflatten_roundtrip():
+    theta = model.init_theta(TINY, seed=3)
+    p = model.unflatten(theta, TINY)
+    flat = jnp.concatenate([p[name].reshape(-1)
+                            for name, _ in model.tensor_table(TINY)])
+    np.testing.assert_array_equal(np.asarray(flat),
+                                  np.asarray(theta[: flat.shape[0]]))
+
+
+def test_init_padding_is_zero():
+    theta = model.init_theta(TINY)
+    n = model.num_params(TINY)
+    np.testing.assert_array_equal(np.asarray(theta[n:]),
+                                  np.zeros(theta.shape[0] - n, np.float32))
+
+
+def test_init_deterministic():
+    a = model.init_theta(TINY, seed=1)
+    b = model.init_theta(TINY, seed=1)
+    c = model.init_theta(TINY, seed=2)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+# ----------------------------------------------------------------- forward
+
+
+def test_forward_shapes():
+    theta = model.init_theta(TINY)
+    toks = _tokens(TINY)[:, :-1]
+    logits = model.forward(theta, toks, TINY)
+    assert logits.shape == (TINY.batch, TINY.seq, TINY.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    """Fresh init should predict ~uniformly: loss ~ ln(vocab)."""
+    theta = model.init_theta(TINY)
+    loss = model.loss_fn(theta, _tokens(TINY), TINY)
+    assert abs(float(loss) - np.log(TINY.vocab)) < 0.5
+
+
+def test_forward_is_causal():
+    """Changing a future token must not affect earlier logits."""
+    theta = model.init_theta(TINY)
+    toks = _tokens(TINY)[:, :-1]
+    base = model.forward(theta, toks, TINY)
+    mod = toks.at[:, -1].set((toks[:, -1] + 1) % TINY.vocab)
+    out = model.forward(theta, mod, TINY)
+    np.testing.assert_allclose(np.asarray(base[:, :-1]),
+                               np.asarray(out[:, :-1]), rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(base[:, -1]), np.asarray(out[:, -1]))
+
+
+# -------------------------------------------------------------- train_step
+
+
+def test_train_step_shapes_and_finiteness():
+    cfg = TINY
+    theta = model.init_theta(cfg)
+    z = jnp.zeros_like(theta)
+    t2, m2, v2, loss = model.train_step(theta, z, z, jnp.ones((1,)),
+                                        _tokens(cfg), cfg)
+    assert t2.shape == theta.shape and m2.shape == theta.shape
+    assert v2.shape == theta.shape and loss.shape == ()
+    for arr in (t2, m2, v2, loss):
+        assert bool(jnp.all(jnp.isfinite(arr)))
+
+
+def test_train_step_padding_stays_zero():
+    cfg = TINY
+    theta = model.init_theta(cfg)
+    z = jnp.zeros_like(theta)
+    n = model.num_params(cfg)
+    t, m, v = theta, z, z
+    for step in range(1, 4):
+        t, m, v, _ = model.train_step(t, m, v,
+                                      jnp.array([float(step)], jnp.float32),
+                                      _tokens(cfg, step), cfg)
+    pad = np.asarray(t[n:])
+    np.testing.assert_array_equal(pad, np.zeros_like(pad))
+
+
+def test_loss_decreases_on_fixed_batch():
+    """Memorization sanity: repeated steps on one batch reduce loss."""
+    cfg = TINY
+    theta = model.init_theta(cfg)
+    z = jnp.zeros_like(theta)
+    toks = _tokens(cfg, 42)
+    step_fn = jax.jit(
+        lambda t, m, v, s: model.train_step(t, m, v, s, toks, cfg))
+    t, m, v = theta, z, z
+    losses = []
+    for step in range(1, 21):
+        t, m, v, loss = step_fn(t, m, v,
+                                jnp.array([float(step)], jnp.float32))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_train_step_matches_manual_composition():
+    """train_step == value_and_grad + adam_ref composed by hand."""
+    from compile.kernels import ref
+
+    cfg = TINY
+    theta = model.init_theta(cfg)
+    z = jnp.zeros_like(theta)
+    toks = _tokens(cfg, 7)
+    t2, m2, v2, loss = model.train_step(theta, z, z, jnp.ones((1,)), toks,
+                                        cfg)
+    want_loss, grads = jax.value_and_grad(model.loss_fn)(theta, toks, cfg)
+    wt, wm, wv = ref.adam_ref(theta, grads, z, z, 1.0)
+    np.testing.assert_allclose(float(loss), float(want_loss), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(t2), np.asarray(wt), rtol=1e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(wm), rtol=1e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(wv), rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_pack_step_roundtrip():
+    theta = model.init_theta(TINY)
+    (packed,) = model.pack_step(theta, TINY)
+    assert packed.dtype == jnp.float16
+    np.testing.assert_allclose(np.asarray(packed).astype(np.float32),
+                               np.asarray(theta), atol=2e-3, rtol=2e-3)
+
+
+def test_eval_loss_matches_loss_fn():
+    theta = model.init_theta(TINY)
+    toks = _tokens(TINY)
+    (l1,) = model.eval_loss(theta, toks, TINY)
+    l2 = model.loss_fn(theta, toks, TINY)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+# --------------------------------------------------------- checkpoint sizes
+
+
+def test_checkpoint_state_is_14ish_bytes_per_param():
+    """Paper §2.1.3: fp16 weights + fp32 master + m + v = 14 B/param."""
+    cfg = TINY
+    n = model.padded_params(cfg)
+    fp16_bytes = 2 * n
+    fp32_state_bytes = 3 * 4 * n  # master + m + v
+    total = fp16_bytes + fp32_state_bytes
+    assert total == 14 * n

@@ -1,0 +1,5 @@
+//! Baseline checkpointing — the `torch.save()` comparator (§3.1).
+
+pub mod torch_save;
+
+pub use torch_save::TorchSave;

@@ -1,0 +1,115 @@
+//! `torch.save()`-style baseline writer.
+//!
+//! Structure matched to the paper's description of the baseline (§2.1.3,
+//! §3.1): the *first rank of each model slice* serializes the full
+//! checkpoint state and writes it through the traditional buffered I/O
+//! stack as a sequence of small writes — no alignment, no pinned
+//! staging, no write parallelism, while the other DP ranks stall.
+//! The serialization format is the same as FastPersist's (the paper
+//! changes only the disk-write path, §5.1), so comparisons isolate the
+//! I/O techniques.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::checkpoint::engine::{CheckpointEngine, CheckpointOutcome};
+use crate::io::engine::IoConfig;
+use crate::tensor::TensorStore;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Baseline single-writer checkpointing facade.
+pub struct TorchSave {
+    engine: CheckpointEngine,
+}
+
+impl Default for TorchSave {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TorchSave {
+    pub fn new() -> TorchSave {
+        TorchSave { engine: CheckpointEngine::baseline() }
+    }
+
+    /// With a custom buffered chunk size (for microbenchmarks).
+    pub fn with_chunk(chunk: usize) -> TorchSave {
+        let mut cfg = IoConfig::baseline();
+        cfg.buffered_chunk = chunk;
+        TorchSave { engine: CheckpointEngine::new(cfg, crate::checkpoint::WriterStrategy::Rank0) }
+    }
+
+    /// Save a checkpoint: rank 0 writes everything, buffered.
+    pub fn save(
+        &self,
+        store: &TensorStore,
+        extra: BTreeMap<String, Json>,
+        dir: &Path,
+    ) -> Result<CheckpointOutcome> {
+        self.engine.write_single(store, extra, dir)
+    }
+
+    /// Save and report the latency training would observe: with the
+    /// baseline, *all* ranks stall for the full write (Fig. 4a).
+    pub fn save_blocking(
+        &self,
+        store: &TensorStore,
+        extra: BTreeMap<String, Json>,
+        dir: &Path,
+    ) -> Result<(CheckpointOutcome, Duration)> {
+        let t0 = Instant::now();
+        let out = self.save(store, extra, dir)?;
+        Ok((out, t0.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::load::load_checkpoint;
+    use crate::io::engine::scratch_dir;
+    use crate::tensor::{DType, Tensor};
+    use crate::util::rng::Rng;
+
+    fn store(n: usize) -> TensorStore {
+        let mut s = TensorStore::new();
+        let mut data = vec![0u8; n];
+        Rng::new(4).fill_bytes(&mut data);
+        s.push(Tensor::new("blob", DType::U8, vec![n], data).unwrap()).unwrap();
+        s
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let dir = scratch_dir("torchsave").unwrap();
+        let s = store(300_000);
+        let out = TorchSave::new().save(&s, BTreeMap::new(), &dir).unwrap();
+        assert_eq!(out.stats.len(), 1);
+        assert!(!out.stats[0].o_direct); // traditional path
+        let (loaded, _, _) = load_checkpoint(&dir, 1).unwrap();
+        assert!(loaded.content_eq(&s));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn many_small_writes_counted() {
+        let dir = scratch_dir("torchsave-ops").unwrap();
+        let s = store(5 << 20);
+        let out = TorchSave::with_chunk(64 << 10).save(&s, BTreeMap::new(), &dir).unwrap();
+        // 5 MiB at 64 KiB chunks → at least 80 write ops
+        assert!(out.stats[0].write_ops >= 80, "ops={}", out.stats[0].write_ops);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn blocking_latency_covers_write() {
+        let dir = scratch_dir("torchsave-lat").unwrap();
+        let s = store(1 << 20);
+        let (out, stall) = TorchSave::new().save_blocking(&s, BTreeMap::new(), &dir).unwrap();
+        assert!(stall >= out.stats[0].elapsed);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,189 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, timed sampling, trimmed statistics, and a compact
+//! report format. The `benches/*.rs` targets (`harness = false`) use this
+//! to regenerate the paper's tables/figures as timing runs; the same
+//! harness backs `fastpersist repro` where measured (not simulated)
+//! numbers are involved.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Configuration for a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Trim this fraction of the highest samples (OS noise on shared CI).
+    pub trim_frac: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, sample_iters: 10, trim_frac: 0.1 }
+    }
+}
+
+impl BenchConfig {
+    pub fn quick() -> Self {
+        BenchConfig { warmup_iters: 1, sample_iters: 5, trim_frac: 0.0 }
+    }
+
+    /// Honors FASTPERSIST_BENCH_FAST=1 for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// One benchmark measurement result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional bytes processed per iteration (enables GB/s reporting).
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_gbps(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| crate::util::bytes::gbps(b, self.summary.p50))
+    }
+
+    pub fn report_line(&self) -> String {
+        let mut s = format!(
+            "{:<44} p50 {:>10}  mean {:>10} ±{:>5.1}%",
+            self.name,
+            fmt_duration(self.summary.p50),
+            fmt_duration(self.summary.mean),
+            self.summary.rsd() * 100.0
+        );
+        if let Some(t) = self.throughput_gbps() {
+            s.push_str(&format!("  {t:>8.2} GB/s"));
+        }
+        s
+    }
+}
+
+/// Time `f` under `cfg`; each call of `f` is one iteration.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    bench_with_bytes(name, cfg, None, &mut f)
+}
+
+/// Like [`bench`] but annotates bytes/iter for throughput reporting.
+pub fn bench_bytes<F: FnMut()>(
+    name: &str,
+    cfg: &BenchConfig,
+    bytes_per_iter: u64,
+    mut f: F,
+) -> BenchResult {
+    bench_with_bytes(name, cfg, Some(bytes_per_iter), &mut f)
+}
+
+fn bench_with_bytes(
+    name: &str,
+    cfg: &BenchConfig,
+    bytes_per_iter: Option<u64>,
+    f: &mut dyn FnMut(),
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.sample_iters);
+    for _ in 0..cfg.sample_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    // Trim the top tail (scheduling noise).
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let keep = samples.len()
+        - ((samples.len() as f64 * cfg.trim_frac).floor() as usize).min(samples.len() - 1);
+    let summary = Summary::of(&samples[..keep]);
+    BenchResult { name: name.to_string(), summary, bytes_per_iter }
+}
+
+/// Format a duration in seconds with adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Group runner: collects results and prints a header + lines.
+pub struct BenchGroup {
+    pub title: String,
+    pub cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    pub fn new(title: &str) -> BenchGroup {
+        BenchGroup { title: title.to_string(), cfg: BenchConfig::from_env(), results: Vec::new() }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let r = bench(name, &self.cfg, f);
+        println!("  {}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: u64, f: F) -> &BenchResult {
+        let r = bench_bytes(name, &self.cfg, bytes, f);
+        println!("  {}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn start(title: &str) -> BenchGroup {
+        println!("\n=== {title} ===");
+        BenchGroup::new(title)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig { warmup_iters: 1, sample_iters: 8, trim_frac: 0.1 };
+        let r = bench("sleep50us", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        });
+        assert!(r.summary.p50 >= 40e-6, "p50={}", r.summary.p50);
+        assert!(r.summary.n >= 7);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let cfg = BenchConfig::quick();
+        let data = vec![0u8; 1 << 20];
+        let r = bench_bytes("memcpy-1MiB", &cfg, data.len() as u64, || {
+            let copy = data.clone();
+            std::hint::black_box(&copy);
+        });
+        let t = r.throughput_gbps().unwrap();
+        assert!(t > 0.01, "throughput={t}");
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(2.5), "2.500 s");
+        assert_eq!(fmt_duration(0.0025), "2.500 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_duration(5e-9), "5.0 ns");
+    }
+}

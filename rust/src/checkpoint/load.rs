@@ -1,0 +1,143 @@
+//! Parallel checkpoint loading + allgather reassembly (paper §4.2).
+//!
+//! Loading a parallel checkpoint is the inverse of writing: each DP rank
+//! reads its partition file (in parallel), then the partitions are
+//! assembled ("allgather") back into the logical serialized stream,
+//! verified against the manifest digest, and parsed into a
+//! [`TensorStore`].
+
+use std::path::Path;
+
+use crate::checkpoint::manifest::CheckpointManifest;
+use crate::serialize::format::{checksum64_slice, FormatHeader};
+use crate::serialize::reader::parse_checkpoint;
+use crate::tensor::TensorStore;
+use crate::util::threadpool::parallel_map;
+use crate::{Error, Result};
+
+/// Load one checkpoint directory; `threads` parallel partition readers
+/// (the DP ranks of the loading job).
+pub fn load_checkpoint(
+    dir: &Path,
+    threads: usize,
+) -> Result<(TensorStore, FormatHeader, CheckpointManifest)> {
+    let manifest = CheckpointManifest::load(dir)?;
+    let jobs: Vec<(std::path::PathBuf, u64)> = manifest
+        .partitions
+        .iter()
+        .map(|p| (dir.join(&p.file), p.end - p.start))
+        .collect();
+    // Parallel partition reads (rank-local step of the two-step load).
+    let parts: Vec<Result<Vec<u8>>> = parallel_map(threads, jobs, |(path, expect)| {
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::Format(format!("partition {}: {e}", path.display())))?;
+        if bytes.len() as u64 != expect {
+            return Err(Error::Format(format!(
+                "partition {} is {} bytes, manifest says {expect}",
+                path.display(),
+                bytes.len()
+            )));
+        }
+        Ok(bytes)
+    });
+    // Allgather: concatenate in partition order.
+    let mut stream = Vec::with_capacity(manifest.total_len as usize);
+    for part in parts {
+        stream.extend_from_slice(&part?);
+    }
+    if stream.len() as u64 != manifest.total_len {
+        return Err(Error::Format(format!(
+            "assembled {} bytes, manifest says {}",
+            stream.len(),
+            manifest.total_len
+        )));
+    }
+    let digest = checksum64_slice(&stream);
+    if digest != manifest.digest {
+        return Err(Error::Format(format!(
+            "stream digest mismatch: computed {digest:#x}, manifest {:#x}",
+            manifest.digest
+        )));
+    }
+    let (store, header) = parse_checkpoint(&stream)?;
+    Ok((store, header, manifest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::engine::CheckpointEngine;
+    use crate::checkpoint::strategy::WriterStrategy;
+    use crate::cluster::{ClusterSpec, Parallelism, Topology};
+    use crate::io::engine::scratch_dir;
+    use crate::tensor::{DType, Tensor};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn write_sample(dir: &Path, dp: usize) -> TensorStore {
+        let mut rng = Rng::new(23);
+        let mut store = TensorStore::new();
+        let mut data = vec![0u8; 100_000];
+        rng.fill_bytes(&mut data);
+        store
+            .push(Tensor::new("payload", DType::U8, vec![100_000], data).unwrap())
+            .unwrap();
+        let topo =
+            Topology::new(ClusterSpec::dgx2(1), Parallelism::dense(dp, 1, 1)).unwrap();
+        CheckpointEngine::fastpersist(WriterStrategy::AllReplicas)
+            .write(&store, BTreeMap::new(), dir, &topo.dp_group(0))
+            .unwrap();
+        store
+    }
+
+    #[test]
+    fn detects_missing_partition() {
+        let dir = scratch_dir("load-missing").unwrap();
+        write_sample(&dir, 4);
+        // remove one partition file
+        let manifest = CheckpointManifest::load(&dir).unwrap();
+        std::fs::remove_file(dir.join(&manifest.partitions[2].file)).unwrap();
+        assert!(load_checkpoint(&dir, 2).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn detects_corrupted_partition() {
+        let dir = scratch_dir("load-corrupt").unwrap();
+        write_sample(&dir, 4);
+        let manifest = CheckpointManifest::load(&dir).unwrap();
+        let pfile = dir.join(&manifest.partitions[1].file);
+        let mut bytes = std::fs::read(&pfile).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x5a;
+        std::fs::write(&pfile, bytes).unwrap();
+        match load_checkpoint(&dir, 2) {
+            Err(Error::Format(msg)) => assert!(msg.contains("digest"), "{msg}"),
+            other => panic!("expected digest error, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn detects_truncated_partition() {
+        let dir = scratch_dir("load-trunc").unwrap();
+        write_sample(&dir, 2);
+        let manifest = CheckpointManifest::load(&dir).unwrap();
+        let pfile = dir.join(&manifest.partitions[0].file);
+        let bytes = std::fs::read(&pfile).unwrap();
+        std::fs::write(&pfile, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(load_checkpoint(&dir, 2).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn thread_count_does_not_matter() {
+        let dir = scratch_dir("load-threads").unwrap();
+        let store = write_sample(&dir, 8);
+        for threads in [1, 2, 8] {
+            let (loaded, _, _) = load_checkpoint(&dir, threads).unwrap();
+            assert!(loaded.content_eq(&store));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

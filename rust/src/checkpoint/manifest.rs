@@ -1,0 +1,195 @@
+//! Per-checkpoint manifest: ties partition files back into one logical
+//! serialized stream.
+//!
+//! Parallel checkpoints are written as one file per writer (the ranks'
+//! local SSDs in the paper). The manifest — written by partition 0's
+//! writer after all partitions are durable — records the stream length,
+//! the partition table, and the digest, so loading can verify and
+//! reassemble (allgather) the full checkpoint state.
+
+use std::path::{Path, PathBuf};
+
+use crate::checkpoint::plan::{Partition, WritePlan};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+pub const MANIFEST_FILE: &str = "checkpoint.json";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointManifest {
+    pub total_len: u64,
+    pub digest: u64,
+    pub step: u64,
+    pub partitions: Vec<PartitionEntry>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionEntry {
+    pub file: String,
+    pub writer_rank: usize,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl CheckpointManifest {
+    pub fn from_plan(plan: &WritePlan, digest: u64, step: u64) -> CheckpointManifest {
+        CheckpointManifest {
+            total_len: plan.total_len,
+            digest,
+            step,
+            partitions: plan
+                .partitions
+                .iter()
+                .map(|p| PartitionEntry {
+                    file: Self::partition_file(p),
+                    writer_rank: p.writer_rank,
+                    start: p.start,
+                    end: p.end,
+                })
+                .collect(),
+        }
+    }
+
+    /// Canonical partition filename for a plan entry.
+    pub fn partition_file(p: &Partition) -> String {
+        format!("part-{:04}-rank{:05}.fpck", p.index, p.writer_rank)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_len", Json::from(self.total_len as i64)),
+            ("digest_hi", Json::from((self.digest >> 32) as i64)),
+            ("digest_lo", Json::from((self.digest & 0xffff_ffff) as i64)),
+            ("step", Json::from(self.step as i64)),
+            (
+                "partitions",
+                Json::arr(self.partitions.iter().map(|p| {
+                    Json::obj(vec![
+                        ("file", Json::str(&p.file)),
+                        ("writer_rank", Json::from(p.writer_rank)),
+                        ("start", Json::from(p.start as i64)),
+                        ("end", Json::from(p.end as i64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CheckpointManifest> {
+        let hi = v.get("digest_hi")?.as_i64()? as u64;
+        let lo = v.get("digest_lo")?.as_i64()? as u64;
+        let partitions = v
+            .get("partitions")?
+            .as_array()?
+            .iter()
+            .map(|p| {
+                Ok(PartitionEntry {
+                    file: p.get("file")?.as_str()?.to_string(),
+                    writer_rank: p.get("writer_rank")?.as_usize()?,
+                    start: p.get("start")?.as_i64()? as u64,
+                    end: p.get("end")?.as_i64()? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CheckpointManifest {
+            total_len: v.get("total_len")?.as_i64()? as u64,
+            digest: (hi << 32) | (lo & 0xffff_ffff),
+            step: v.get("step")?.as_i64()? as u64,
+            partitions,
+        })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(MANIFEST_FILE);
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, self.to_json().to_string_pretty())?;
+        // atomic publish: the manifest appearing means the checkpoint is
+        // complete and durable
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    pub fn load(dir: &Path) -> Result<CheckpointManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Format(format!("manifest {}: {e}", path.display())))?;
+        let m = Self::from_json(&Json::parse(&text)?)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Partition table must tile [0, total_len) contiguously.
+    pub fn validate(&self) -> Result<()> {
+        let mut pos = 0u64;
+        for p in &self.partitions {
+            if p.start != pos || p.end < p.start {
+                return Err(Error::Format(format!(
+                    "partition {} not contiguous (start {} expected {pos})",
+                    p.file, p.start
+                )));
+            }
+            pos = p.end;
+        }
+        if pos != self.total_len {
+            return Err(Error::Format(format!(
+                "partitions cover {pos} of {} bytes",
+                self.total_len
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> CheckpointManifest {
+        let plan = WritePlan::balanced(100, &[0, 5, 9]).unwrap();
+        CheckpointManifest::from_plan(&plan, 0xabcd_ef01_2345_6789, 7)
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = manifest();
+        let j = m.to_json();
+        let back = CheckpointManifest::from_json(&j).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::io::engine::scratch_dir("manifest").unwrap();
+        let m = manifest();
+        m.save(&dir).unwrap();
+        let back = CheckpointManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_gaps() {
+        let mut m = manifest();
+        m.partitions[1].start += 1;
+        assert!(m.validate().is_err());
+        let mut m2 = manifest();
+        m2.total_len += 5;
+        assert!(m2.validate().is_err());
+    }
+
+    #[test]
+    fn filenames_are_unique_and_ordered() {
+        let m = manifest();
+        let names: std::collections::BTreeSet<_> =
+            m.partitions.iter().map(|p| &p.file).collect();
+        assert_eq!(names.len(), m.partitions.len());
+        assert!(m.partitions[0].file.starts_with("part-0000"));
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = crate::io::engine::scratch_dir("manifest-miss").unwrap();
+        assert!(CheckpointManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,30 @@
+//! The FastPersist checkpoint engine (paper §4) — parallel, pipelined,
+//! NVMe-optimized checkpoint creation and loading.
+//!
+//! * [`plan`] — byte-granularity partitioning of the serialized stream
+//!   over DP writers (load imbalance ≤ 1 byte, §4.2).
+//! * [`strategy`] — writer-subset selection: rank 0 only (baseline), all
+//!   replicas, one writer per CPU socket, or a fixed count, chosen to
+//!   maximize I/O-hardware utilization while minimizing contention.
+//! * [`engine`] — the parallel write coordinator: each selected writer
+//!   persists its partition through its own [`crate::io`] sink,
+//!   communication-free.
+//! * [`pipeline`] — the decoupled executor overlapping checkpoint writes
+//!   with the next iteration's forward/backward (§4.3).
+//! * [`load`] — parallel checkpoint loading + allgather reassembly.
+//! * [`manifest`] — the per-checkpoint manifest tying partitions back
+//!   into one logical stream.
+
+pub mod engine;
+pub mod load;
+pub mod manifest;
+pub mod pipeline;
+pub mod plan;
+pub mod strategy;
+
+pub use engine::{CheckpointEngine, CheckpointOutcome};
+pub use load::load_checkpoint;
+pub use manifest::CheckpointManifest;
+pub use pipeline::PipelinedCheckpointer;
+pub use plan::{Partition, WritePlan};
+pub use strategy::WriterStrategy;

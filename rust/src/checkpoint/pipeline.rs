@@ -1,0 +1,251 @@
+//! Pipelined (decoupled) checkpointing (paper §4.3).
+//!
+//! Fig. 3's dependency analysis: checkpoint *C_i* depends on optimizer
+//! *O_i* (it reads the updated model) and *O_{i+1}* depends on *C_i*
+//! completing (otherwise a failure could lose an un-persisted update
+//! while training has already moved past it). Forward/backward of
+//! iteration *i+1* depend on neither, so *C_i* can overlap them.
+//!
+//! Protocol (per §4.3's main/helper cooperation):
+//!
+//! ```text
+//! main thread                          helper thread
+//! ───────────                          ─────────────
+//! F_i, B_i
+//! wait_previous()  ◄─────────────────  done(C_{i-1})
+//! O_i
+//! request(snapshot_i)  ──────────────► write C_i (direct to durable
+//! F_{i+1}, B_{i+1}   (overlapped)        storage — no volatile
+//! wait_previous()  ◄─────────────────    snapshot phase)
+//! O_{i+1} ...
+//! ```
+//!
+//! The snapshot is an `Arc` clone of the tensor buffers (zero copy); the
+//! helper never allocates payload memory and never blocks the main
+//! thread except at the `wait_previous` synchronization point — which is
+//! exactly the paper's stall-only-if-checkpoint-still-running semantics.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::checkpoint::engine::{CheckpointEngine, CheckpointOutcome};
+use crate::cluster::topology::RankPlacement;
+use crate::tensor::TensorStore;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+struct Request {
+    snapshot: TensorStore,
+    extra: BTreeMap<String, Json>,
+    dir: PathBuf,
+}
+
+/// Decoupled checkpoint executor: owns a helper thread running the
+/// checkpoint engine.
+pub struct PipelinedCheckpointer {
+    req_tx: Option<Sender<Request>>,
+    done_rx: Receiver<Result<CheckpointOutcome>>,
+    helper: Option<JoinHandle<()>>,
+    outstanding: bool,
+    /// Cumulative time the main thread spent blocked in wait_previous —
+    /// the checkpoint *stall* the paper measures as training overhead.
+    pub stall: Duration,
+    pub completed: Vec<CheckpointOutcome>,
+}
+
+impl PipelinedCheckpointer {
+    /// Spawn the helper around `engine`; `group` is the DP group used
+    /// for every checkpoint (fixed at setup, §4.2).
+    pub fn new(engine: CheckpointEngine, group: Vec<RankPlacement>) -> PipelinedCheckpointer {
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (done_tx, done_rx) = mpsc::channel();
+        let helper = std::thread::Builder::new()
+            .name("ckpt-helper".into())
+            .spawn(move || {
+                // Infinite loop: block for a request, write, signal (§4.3).
+                for req in req_rx {
+                    let result = engine.write(&req.snapshot, req.extra, &req.dir, &group);
+                    if done_tx.send(result).is_err() {
+                        break; // main side gone
+                    }
+                }
+            })
+            .expect("spawn checkpoint helper");
+        PipelinedCheckpointer {
+            req_tx: Some(req_tx),
+            done_rx,
+            helper: Some(helper),
+            outstanding: false,
+            stall: Duration::ZERO,
+            completed: Vec::new(),
+        }
+    }
+
+    /// Block until the previously requested checkpoint (if any) is
+    /// durable. Call **before** the optimizer step.
+    pub fn wait_previous(&mut self) -> Result<()> {
+        if !self.outstanding {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let outcome = self
+            .done_rx
+            .recv()
+            .map_err(|_| Error::Internal("checkpoint helper died".into()))??;
+        self.stall += t0.elapsed();
+        self.outstanding = false;
+        self.completed.push(outcome);
+        Ok(())
+    }
+
+    /// Hand the post-optimizer state to the helper. Call **after** the
+    /// optimizer step. The snapshot is zero-copy (`Arc` clones).
+    pub fn request(
+        &mut self,
+        store: &TensorStore,
+        extra: BTreeMap<String, Json>,
+        dir: PathBuf,
+    ) -> Result<()> {
+        assert!(
+            !self.outstanding,
+            "request() while a checkpoint is outstanding — call wait_previous() first"
+        );
+        self.req_tx
+            .as_ref()
+            .expect("checkpointer finished")
+            .send(Request { snapshot: store.snapshot(), extra, dir })
+            .map_err(|_| Error::Internal("checkpoint helper died".into()))?;
+        self.outstanding = true;
+        Ok(())
+    }
+
+    /// True if a checkpoint write is currently in flight.
+    pub fn in_flight(&self) -> bool {
+        self.outstanding
+    }
+
+    /// Drain the last outstanding checkpoint and shut the helper down;
+    /// returns all completed outcomes.
+    pub fn finish(mut self) -> Result<Vec<CheckpointOutcome>> {
+        self.wait_previous()?;
+        drop(self.req_tx.take());
+        if let Some(h) = self.helper.take() {
+            h.join().map_err(|_| Error::Internal("helper panicked".into()))?;
+        }
+        Ok(std::mem::take(&mut self.completed))
+    }
+}
+
+impl Drop for PipelinedCheckpointer {
+    fn drop(&mut self) {
+        drop(self.req_tx.take());
+        if let Some(h) = self.helper.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::load::load_checkpoint;
+    use crate::checkpoint::strategy::WriterStrategy;
+    use crate::io::engine::scratch_dir;
+    use crate::tensor::{DType, Tensor};
+    use crate::util::rng::Rng;
+
+    fn solo_group() -> Vec<RankPlacement> {
+        vec![RankPlacement { rank: 0, node: 0, socket: 0, local_gpu: 0 }]
+    }
+
+    fn store_with(step: u8, nbytes: usize) -> TensorStore {
+        let mut s = TensorStore::new();
+        let mut data = vec![step; nbytes];
+        Rng::new(step as u64).fill_bytes(&mut data[..nbytes / 2]);
+        s.push(Tensor::new("w", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+        s
+    }
+
+    fn extra(step: i64) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        m.insert("step".into(), Json::Int(step));
+        m
+    }
+
+    #[test]
+    fn overlapped_iterations_produce_every_checkpoint() {
+        let dir = scratch_dir("pipe-every").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let mut pipe = PipelinedCheckpointer::new(engine, solo_group());
+        let iters = 5;
+        for i in 0..iters {
+            // F/B of iteration i would run here, overlapped with C_{i-1}
+            pipe.wait_previous().unwrap(); // before O_i
+            let store = store_with(i as u8, 200_000); // O_i output
+            pipe.request(&store, extra(i), dir.join(format!("step{i}"))).unwrap();
+        }
+        let outcomes = pipe.finish().unwrap();
+        assert_eq!(outcomes.len(), iters as usize);
+        // every checkpoint corresponds to exactly its iteration's state
+        for i in 0..iters {
+            let (loaded, header, _) = load_checkpoint(&dir.join(format!("step{i}")), 2).unwrap();
+            assert_eq!(header.extra["step"], Json::Int(i));
+            assert!(loaded.content_eq(&store_with(i as u8, 200_000)));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_isolates_from_next_optimizer_update() {
+        // The checkpoint of iteration i must contain O_i's output even if
+        // the main thread mutates the store while the write is in flight.
+        let dir = scratch_dir("pipe-iso").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let mut pipe = PipelinedCheckpointer::new(engine, solo_group());
+        let mut store = store_with(1, 500_000);
+        pipe.request(&store, extra(1), dir.join("c1")).unwrap();
+        // "next iteration" mutates the live store immediately
+        store.update("w", vec![99u8; 500_000]).unwrap();
+        pipe.wait_previous().unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("c1"), 1).unwrap();
+        assert!(loaded.content_eq(&store_with(1, 500_000)));
+        drop(pipe);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "outstanding")]
+    fn double_request_without_wait_panics() {
+        let dir = scratch_dir("pipe-double").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let mut pipe = PipelinedCheckpointer::new(engine, solo_group());
+        let store = store_with(0, 1000);
+        pipe.request(&store, extra(0), dir.join("a")).unwrap();
+        // violates the O_{i+1} -> C_i dependency: must wait first
+        let _ = pipe.request(&store, extra(1), dir.join("b"));
+    }
+
+    #[test]
+    fn stall_accounts_wait_time() {
+        let dir = scratch_dir("pipe-stall").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let mut pipe = PipelinedCheckpointer::new(engine, solo_group());
+        let store = store_with(0, 4 << 20);
+        pipe.request(&store, extra(0), dir.join("c")).unwrap();
+        // no overlapped compute: all write time becomes stall
+        pipe.wait_previous().unwrap();
+        assert!(pipe.stall > Duration::ZERO);
+        drop(pipe);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn finish_without_requests_is_ok() {
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let pipe = PipelinedCheckpointer::new(engine, solo_group());
+        assert!(pipe.finish().unwrap().is_empty());
+    }
+}

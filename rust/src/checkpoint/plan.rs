@@ -1,0 +1,187 @@
+//! Byte-granularity write partitioning (paper §4.2, "load balancing").
+//!
+//! DP replicas hold identical model state, so any rank can write any
+//! byte range of the serialized checkpoint. Partitioning at *byte*
+//! granularity — after serialization, so it reflects exactly what goes
+//! to disk — bounds load imbalance to one byte, which layer- or
+//! tensor-granularity splits cannot do for heterogeneous layer sizes.
+//!
+//! The plan is computed once at training setup (communication-free
+//! checkpointing: each writer already knows its range) and reused every
+//! iteration until the topology changes.
+
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::topology::RankPlacement;
+use crate::{Error, Result};
+
+/// One writer's byte range of the serialized stream: `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    pub writer_rank: usize,
+    pub index: usize,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Partition {
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A complete, validated partitioning of one checkpoint stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WritePlan {
+    pub total_len: u64,
+    pub partitions: Vec<Partition>,
+}
+
+impl WritePlan {
+    /// Split `total_len` bytes over `writers` (selected DP ranks), in
+    /// rank order, near-evenly: the first `total % n` partitions get one
+    /// extra byte — imbalance is at most 1 byte.
+    pub fn balanced(total_len: u64, writers: &[usize]) -> Result<WritePlan> {
+        if writers.is_empty() {
+            return Err(Error::Config("write plan needs >= 1 writer".into()));
+        }
+        let n = writers.len() as u64;
+        let base = total_len / n;
+        let extra = total_len % n;
+        let mut partitions = Vec::with_capacity(writers.len());
+        let mut start = 0u64;
+        for (i, &rank) in writers.iter().enumerate() {
+            let len = base + u64::from((i as u64) < extra);
+            partitions.push(Partition { writer_rank: rank, index: i, start, end: start + len });
+            start += len;
+        }
+        debug_assert_eq!(start, total_len);
+        Ok(WritePlan { total_len, partitions })
+    }
+
+    /// Build a plan from a DP group + writer strategy.
+    pub fn from_strategy(
+        total_len: u64,
+        group: &[RankPlacement],
+        strategy: WriterStrategy,
+        sockets_per_node: usize,
+    ) -> Result<WritePlan> {
+        let writers = strategy.select(group, sockets_per_node)?;
+        let ranks: Vec<usize> = writers.iter().map(|p| p.rank).collect();
+        WritePlan::balanced(total_len, &ranks)
+    }
+
+    pub fn writers(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Max partition length (the latency-determining write).
+    pub fn max_partition(&self) -> u64 {
+        self.partitions.iter().map(|p| p.len()).max().unwrap_or(0)
+    }
+
+    /// Validate invariants: contiguous, disjoint, covering, balanced.
+    pub fn validate(&self) -> Result<()> {
+        let mut pos = 0u64;
+        for (i, p) in self.partitions.iter().enumerate() {
+            if p.index != i {
+                return Err(Error::Internal(format!("partition {i} has index {}", p.index)));
+            }
+            if p.start != pos || p.end < p.start {
+                return Err(Error::Internal(format!("partition {i} not contiguous")));
+            }
+            pos = p.end;
+        }
+        if pos != self.total_len {
+            return Err(Error::Internal("partitions do not cover stream".into()));
+        }
+        let min = self.partitions.iter().map(|p| p.len()).min().unwrap_or(0);
+        let max = self.max_partition();
+        if max - min > 1 {
+            return Err(Error::Internal(format!("imbalance {} > 1 byte", max - min)));
+        }
+        Ok(())
+    }
+
+    /// The partition a given writer rank owns, if any.
+    pub fn for_rank(&self, rank: usize) -> Option<&Partition> {
+        self.partitions.iter().find(|p| p.writer_rank == rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn splits_evenly_with_remainder_up_front() {
+        let plan = WritePlan::balanced(10, &[0, 1, 2]).unwrap();
+        plan.validate().unwrap();
+        let lens: Vec<u64> = plan.partitions.iter().map(|p| p.len()).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        assert_eq!(plan.partitions[1].start, 4);
+    }
+
+    #[test]
+    fn single_writer_takes_all() {
+        let plan = WritePlan::balanced(1234, &[7]).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.partitions[0].writer_rank, 7);
+        assert_eq!(plan.partitions[0].len(), 1234);
+    }
+
+    #[test]
+    fn more_writers_than_bytes() {
+        let plan = WritePlan::balanced(2, &[0, 1, 2, 3]).unwrap();
+        plan.validate().unwrap();
+        let lens: Vec<u64> = plan.partitions.iter().map(|p| p.len()).collect();
+        assert_eq!(lens, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn zero_length_stream() {
+        let plan = WritePlan::balanced(0, &[0, 1]).unwrap();
+        plan.validate().unwrap();
+        assert!(plan.partitions.iter().all(|p| p.is_empty()));
+    }
+
+    #[test]
+    fn no_writers_is_error() {
+        assert!(WritePlan::balanced(10, &[]).is_err());
+    }
+
+    #[test]
+    fn for_rank_lookup() {
+        let plan = WritePlan::balanced(100, &[4, 9]).unwrap();
+        assert_eq!(plan.for_rank(9).unwrap().index, 1);
+        assert!(plan.for_rank(5).is_none());
+    }
+
+    #[test]
+    fn prop_partition_invariants() {
+        forall("balanced plan invariants", 256, |g| {
+            let total = g.u64(0, 1 << 42);
+            let n = g.usize(1, 64);
+            let writers: Vec<usize> = (0..n).collect();
+            let plan = WritePlan::balanced(total, &writers).unwrap();
+            plan.validate().is_ok()
+                && plan.partitions.len() == n
+                && plan.partitions.iter().map(|p| p.len()).sum::<u64>() == total
+        });
+    }
+
+    #[test]
+    fn prop_deterministic() {
+        forall("plans are deterministic", 64, |g| {
+            let total = g.u64(0, 1 << 30);
+            let n = g.usize(1, 16);
+            let writers: Vec<usize> = (0..n).map(|i| i * 3).collect();
+            WritePlan::balanced(total, &writers).unwrap()
+                == WritePlan::balanced(total, &writers).unwrap()
+        });
+    }
+}

@@ -1,0 +1,279 @@
+//! Writer-subset selection (paper §4.2, "hardware efficiency").
+//!
+//! Using *all* DP ranks as checkpoint writers can be sub-optimal: tiny
+//! per-rank partitions write inefficiently, and many writers per node
+//! contend for the shared RAID volume / PCIe. FastPersist therefore
+//! supports writing with a subset of the DP ranks — but not an arbitrary
+//! subset: the chosen ranks must maximize I/O-hardware coverage (spread
+//! over nodes, then over CPU sockets) while minimizing per-device
+//! contention. Two ranks on one node while another node sits idle is the
+//! pathology the paper calls out (Fig. 6).
+
+use crate::cluster::topology::RankPlacement;
+use crate::{Error, Result};
+
+/// How to pick checkpoint writers from a DP group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriterStrategy {
+    /// Only the group's first rank writes (the torch.save baseline,
+    /// Fig. 6a).
+    Rank0,
+    /// Every DP replica writes a partition ("Replica" in §5.3.2,
+    /// Fig. 6b).
+    AllReplicas,
+    /// One writer per occupied CPU socket ("Socket" in §5.3.2) — higher
+    /// per-writer volume, minimal PCIe/DRAM contention.
+    PerSocket,
+    /// One writer per occupied node.
+    PerNode,
+    /// Exactly `n` writers, spread round-robin across nodes then sockets
+    /// (Fig. 6c's "subset" with the paper's coverage rule).
+    FixedCount(usize),
+}
+
+impl WriterStrategy {
+    pub fn name(self) -> String {
+        match self {
+            WriterStrategy::Rank0 => "rank0".into(),
+            WriterStrategy::AllReplicas => "replica".into(),
+            WriterStrategy::PerSocket => "socket".into(),
+            WriterStrategy::PerNode => "node".into(),
+            WriterStrategy::FixedCount(n) => format!("fixed{n}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<WriterStrategy> {
+        match s {
+            "rank0" | "baseline" => Ok(WriterStrategy::Rank0),
+            "replica" | "all" => Ok(WriterStrategy::AllReplicas),
+            "socket" => Ok(WriterStrategy::PerSocket),
+            "node" => Ok(WriterStrategy::PerNode),
+            other => {
+                if let Some(n) = other.strip_prefix("fixed") {
+                    let n: usize = n
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad strategy {other:?}")))?;
+                    return Ok(WriterStrategy::FixedCount(n));
+                }
+                Err(Error::Config(format!("unknown strategy {other:?}")))
+            }
+        }
+    }
+
+    /// Select writers from a DP group (ranks holding identical state).
+    ///
+    /// Selection is deterministic and depends only on (group, strategy),
+    /// satisfying §4.2's setup-time partitioning: every rank computes the
+    /// same selection without communication.
+    pub fn select(
+        self,
+        group: &[RankPlacement],
+        _sockets_per_node: usize,
+    ) -> Result<Vec<RankPlacement>> {
+        if group.is_empty() {
+            return Err(Error::Config("empty DP group".into()));
+        }
+        let picked = match self {
+            WriterStrategy::Rank0 => vec![group[0]],
+            WriterStrategy::AllReplicas => group.to_vec(),
+            WriterStrategy::PerSocket => {
+                let mut seen = std::collections::BTreeSet::new();
+                group
+                    .iter()
+                    .filter(|p| seen.insert((p.node, p.socket)))
+                    .copied()
+                    .collect()
+            }
+            WriterStrategy::PerNode => {
+                let mut seen = std::collections::BTreeSet::new();
+                group.iter().filter(|p| seen.insert(p.node)).copied().collect()
+            }
+            WriterStrategy::FixedCount(n) => {
+                if n == 0 {
+                    return Err(Error::Config("fixed0 selects no writers".into()));
+                }
+                spread_select(group, n.min(group.len()))
+            }
+        };
+        Ok(picked)
+    }
+}
+
+/// Pick `n` ranks maximizing hardware coverage: iterate rounds, each
+/// round taking at most one new rank per node (cycling sockets within
+/// the node), until `n` are chosen. This realizes the paper's rule —
+/// spread over I/O hardware first, stack writers per device last.
+fn spread_select(group: &[RankPlacement], n: usize) -> Vec<RankPlacement> {
+    use std::collections::BTreeMap;
+    // node -> ranks (in group order), grouped
+    let mut by_node: BTreeMap<usize, Vec<RankPlacement>> = BTreeMap::new();
+    for p in group {
+        by_node.entry(p.node).or_default().push(*p);
+    }
+    // within each node, order by socket-alternation to cover sockets
+    // early: sort by (socket, local_gpu) then interleave sockets.
+    for ranks in by_node.values_mut() {
+        ranks.sort_by_key(|p| (p.socket, p.local_gpu));
+        let mut by_socket: BTreeMap<usize, Vec<RankPlacement>> = BTreeMap::new();
+        for p in ranks.drain(..) {
+            by_socket.entry(p.socket).or_default().push(p);
+        }
+        let mut interleaved = Vec::new();
+        let mut queues: Vec<_> = by_socket.into_values().collect();
+        let nqueues = queues.len();
+        let mut idx = 0;
+        while queues.iter().any(|q| !q.is_empty()) {
+            let q = &mut queues[idx % nqueues];
+            if !q.is_empty() {
+                interleaved.push(q.remove(0));
+            }
+            idx += 1;
+        }
+        *ranks = interleaved;
+    }
+    let mut picked = Vec::with_capacity(n);
+    let mut round = 0;
+    while picked.len() < n {
+        let mut advanced = false;
+        for ranks in by_node.values() {
+            if picked.len() == n {
+                break;
+            }
+            if let Some(p) = ranks.get(round) {
+                picked.push(*p);
+                advanced = true;
+            }
+        }
+        if !advanced {
+            break; // group exhausted
+        }
+        round += 1;
+    }
+    picked.sort_by_key(|p| p.rank);
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, Parallelism, Topology};
+
+    fn group(nodes: usize, dp: usize, mp: usize, slice: usize) -> Vec<RankPlacement> {
+        let t = Topology::new(
+            ClusterSpec::dgx2(nodes),
+            Parallelism { dp, tp: mp, pp: 1, ep: 1 },
+        )
+        .unwrap();
+        t.dp_group(slice)
+    }
+
+    #[test]
+    fn rank0_selects_first() {
+        let g = group(2, 4, 8, 3);
+        let w = WriterStrategy::Rank0.select(&g, 2).unwrap();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].rank, 3);
+    }
+
+    #[test]
+    fn all_replicas_selects_all() {
+        let g = group(2, 4, 8, 0);
+        let w = WriterStrategy::AllReplicas.select(&g, 2).unwrap();
+        assert_eq!(w.len(), 4);
+    }
+
+    #[test]
+    fn per_socket_covers_each_socket_once() {
+        // dp=16, mp=1 on one node: 16 ranks over 2 sockets → 2 writers
+        let g = group(1, 16, 1, 0);
+        let w = WriterStrategy::PerSocket.select(&g, 2).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_ne!(w[0].socket, w[1].socket);
+    }
+
+    #[test]
+    fn per_node_covers_each_node_once() {
+        // dp=8, mp=16 on 8 nodes: one replica/node → 8 ranks on 8 nodes
+        let g = group(8, 8, 16, 5);
+        let w = WriterStrategy::PerNode.select(&g, 2).unwrap();
+        assert_eq!(w.len(), 8);
+        let nodes: std::collections::BTreeSet<_> = w.iter().map(|p| p.node).collect();
+        assert_eq!(nodes.len(), 8);
+    }
+
+    #[test]
+    fn fixed_count_spreads_across_nodes_first() {
+        // dp=32, mp=1 on 2 nodes (16 ranks/node). Picking 4 writers must
+        // use both nodes (2+2), not stack 4 on node 0 (paper Fig. 6c).
+        let g = group(2, 32, 1, 0);
+        let w = WriterStrategy::FixedCount(4).select(&g, 2).unwrap();
+        assert_eq!(w.len(), 4);
+        let per_node = [0, 1].map(|n| w.iter().filter(|p| p.node == n).count());
+        assert_eq!(per_node, [2, 2]);
+        // and within a node, sockets covered before doubling up
+        for n in 0..2 {
+            let sockets: std::collections::BTreeSet<_> =
+                w.iter().filter(|p| p.node == n).map(|p| p.socket).collect();
+            assert_eq!(sockets.len(), 2);
+        }
+    }
+
+    #[test]
+    fn fixed_count_caps_at_group_size() {
+        let g = group(1, 4, 1, 0);
+        let w = WriterStrategy::FixedCount(100).select(&g, 2).unwrap();
+        assert_eq!(w.len(), 4);
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let g = group(4, 16, 4, 2);
+        for strat in [
+            WriterStrategy::AllReplicas,
+            WriterStrategy::PerSocket,
+            WriterStrategy::PerNode,
+            WriterStrategy::FixedCount(6),
+        ] {
+            assert_eq!(strat.select(&g, 2).unwrap(), strat.select(&g, 2).unwrap());
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for (s, want) in [
+            ("rank0", WriterStrategy::Rank0),
+            ("replica", WriterStrategy::AllReplicas),
+            ("socket", WriterStrategy::PerSocket),
+            ("node", WriterStrategy::PerNode),
+            ("fixed8", WriterStrategy::FixedCount(8)),
+        ] {
+            assert_eq!(WriterStrategy::parse(s).unwrap(), want);
+        }
+        assert!(WriterStrategy::parse("bogus").is_err());
+        assert!(WriterStrategy::FixedCount(0).select(&group(1, 2, 1, 0), 2).is_err());
+    }
+
+    #[test]
+    fn prop_selection_subset_and_coverage() {
+        crate::prop::forall("writer selection invariants", 64, |g| {
+            let nodes = 1 << g.usize(0, 3);
+            let dp = 1 << g.usize(0, 4);
+            let mp = 1 << g.usize(0, 3);
+            let spec = ClusterSpec::dgx2(nodes);
+            if dp * mp > spec.total_gpus() {
+                return true; // skip invalid combos
+            }
+            let topo = Topology::new(spec, Parallelism { dp, tp: mp, pp: 1, ep: 1 }).unwrap();
+            let grp = topo.dp_group(g.usize(0, mp - 1));
+            let n = g.usize(1, dp);
+            let sel = WriterStrategy::FixedCount(n).select(&grp, 2).unwrap();
+            // subset of group, no duplicates, exactly min(n, dp) writers
+            let ranks: std::collections::BTreeSet<_> = sel.iter().map(|p| p.rank).collect();
+            let group_ranks: std::collections::BTreeSet<_> =
+                grp.iter().map(|p| p.rank).collect();
+            ranks.len() == sel.len()
+                && sel.len() == n.min(dp)
+                && ranks.is_subset(&group_ranks)
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Cluster substrate: hardware topology + calibrated storage bandwidth
+//! model for the paper-scale (8× DGX-2) experiments.
+//!
+//! The checkpoint engine itself only needs [`topology`] (where each rank
+//! lives, for writer selection). The [`bandwidth`] model feeds the
+//! discrete-event simulator ([`crate::sim`]) that reproduces the
+//! multi-node figures; its constants are calibrated to numbers the paper
+//! states directly (see DESIGN.md §6).
+
+pub mod bandwidth;
+pub mod spec;
+pub mod topology;
+
+pub use spec::ClusterSpec;
+pub use topology::{Parallelism, RankPlacement, Topology};

@@ -1,0 +1,136 @@
+//! Hardware specification of the evaluation cluster (paper §5.2.1) plus
+//! the calibrated I/O-path constants (DESIGN.md §6).
+
+/// Physical description of one homogeneous cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub sockets_per_node: usize,
+    /// Local NVMe RAID-0 peak write bandwidth per node, GB/s (decimal).
+    pub node_write_gbps: f64,
+    /// NVMe SSDs per node (RAID-0 members).
+    pub ssds_per_node: usize,
+    // ---- calibrated write-path constants ------------------------------
+    /// FastPersist single-writer asymptotic rate, GB/s — bounded by the
+    /// PCIe D2H staging hop (paper Fig. 7: 10.9 GB/s at 512 MB).
+    pub fp_single_max_gbps: f64,
+    /// Write-size half-saturation constant, bytes: per-writer efficiency
+    /// = w / (w + half). Fit to Fig. 7 (16 MB → 5.18, 512 MB → 10.9).
+    pub fp_size_half: f64,
+    /// Per-checkpoint fixed overhead for a FastPersist writer, seconds
+    /// (launch + file create + final fsync). Fit to Fig. 8's 8-node
+    /// aggregate (129.8 GB/s at 16 writers over 10 GB).
+    pub fp_overhead_s: f64,
+    /// Node-level contention: capacity factor 1/(1 + c*(k-1)) for k
+    /// concurrent direct writers on one node. Fit to Fig. 8.
+    pub fp_contention: f64,
+    /// Baseline (torch.save) single-writer rate, GB/s (Fig. 2: ~3% of
+    /// the 24.8 GB/s node peak).
+    pub base_single_gbps: f64,
+    /// Baseline per-writer degradation with k writers per node:
+    /// rate / (1 + c*(k-1)). Fit to Fig. 2 (16 writers → ~7× single).
+    pub base_contention: f64,
+    /// Baseline fixed overhead per checkpoint, seconds (serialization
+    /// setup, allocator traffic).
+    pub base_overhead_s: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed: 8× DGX-2 (16 V100-32GB each), 8 local NVMe
+    /// SSDs per node in RAID-0 with 24.8 GB/s peak write.
+    pub fn dgx2(nodes: usize) -> ClusterSpec {
+        ClusterSpec {
+            nodes,
+            gpus_per_node: 16,
+            sockets_per_node: 2,
+            node_write_gbps: 24.8,
+            ssds_per_node: 8,
+            fp_single_max_gbps: 11.3,
+            fp_size_half: 18.0 * 1e6,
+            fp_overhead_s: 0.020,
+            fp_contention: 0.04,
+            base_single_gbps: 0.744, // 3% of 24.8
+            base_contention: 0.085,
+            base_overhead_s: 0.120,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Cluster-wide peak write bandwidth, GB/s.
+    pub fn cluster_write_gbps(&self) -> f64 {
+        self.nodes as f64 * self.node_write_gbps
+    }
+
+    pub fn gpus_per_socket(&self) -> usize {
+        self.gpus_per_node / self.sockets_per_node
+    }
+
+    /// FastPersist per-writer streaming rate for one `write_size`-byte
+    /// partition, GB/s, before node contention.
+    pub fn fp_writer_gbps(&self, write_size: u64) -> f64 {
+        let w = write_size as f64;
+        self.fp_single_max_gbps * (w / (w + self.fp_size_half))
+    }
+
+    /// Node capacity with `k` concurrent FastPersist writers, GB/s.
+    pub fn fp_node_capacity_gbps(&self, k: usize) -> f64 {
+        if k == 0 {
+            return 0.0;
+        }
+        self.node_write_gbps / (1.0 + self.fp_contention * (k as f64 - 1.0))
+    }
+
+    /// Baseline per-writer rate with `k` baseline writers on the node.
+    pub fn base_writer_gbps(&self, k: usize) -> f64 {
+        self.base_single_gbps / (1.0 + self.base_contention * (k.max(1) as f64 - 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgx2_shape() {
+        let c = ClusterSpec::dgx2(8);
+        assert_eq!(c.total_gpus(), 128);
+        assert_eq!(c.gpus_per_socket(), 8);
+        assert!((c.cluster_write_gbps() - 198.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn writer_rate_matches_fig7_anchors() {
+        let c = ClusterSpec::dgx2(1);
+        // 16 MB → ~5.2 GB/s, 512 MB → ~10.9 GB/s (paper Fig. 7)
+        let r16 = c.fp_writer_gbps(16 * 1_000_000);
+        let r512 = c.fp_writer_gbps(512 * 1_000_000);
+        assert!((r16 - 5.18).abs() < 0.3, "r16={r16}");
+        assert!((r512 - 10.9).abs() < 0.3, "r512={r512}");
+        // monotone in write size
+        assert!(c.fp_writer_gbps(1 << 20) < r16);
+        assert!(r16 < r512);
+    }
+
+    #[test]
+    fn baseline_matches_fig2_anchors() {
+        let c = ClusterSpec::dgx2(1);
+        // single writer ~3% of node peak
+        assert!((c.base_writer_gbps(1) / c.node_write_gbps - 0.03).abs() < 0.005);
+        // 16 writers → aggregate ~7x single (Fig. 2 gpt3-13b vs 0.7b)
+        let agg16 = 16.0 * c.base_writer_gbps(16);
+        let ratio = agg16 / c.base_writer_gbps(1);
+        assert!((ratio - 7.0).abs() < 1.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn contention_reduces_capacity() {
+        let c = ClusterSpec::dgx2(1);
+        assert!(c.fp_node_capacity_gbps(1) > c.fp_node_capacity_gbps(4));
+        assert!(c.fp_node_capacity_gbps(4) > c.fp_node_capacity_gbps(16));
+        assert_eq!(c.fp_node_capacity_gbps(0), 0.0);
+    }
+}

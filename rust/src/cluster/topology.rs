@@ -1,0 +1,180 @@
+//! Rank topology: how DP/TP/PP/EP ranks map onto nodes, sockets, GPUs.
+//!
+//! Conventions (matching Megatron/DeepSpeed-style launchers, §2.1.1):
+//! ranks are dense, consecutive ranks fill a node before spilling to the
+//! next, and a model replica occupies `mp = tp*pp*ep` *consecutive*
+//! ranks. Replica `d` therefore holds ranks `[d*mp, (d+1)*mp)`; the DP
+//! group of model-slice `s` is `{ d*mp + s : d in 0..dp }` — one rank
+//! per replica, spread across the machines. That spread is exactly the
+//! parallel I/O FastPersist's write parallelism harvests (§4.2).
+
+use crate::cluster::ClusterSpec;
+use crate::{Error, Result};
+
+/// Parallelism degrees of a training job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    /// Expert parallelism (MoE); 1 for dense models.
+    pub ep: usize,
+}
+
+impl Parallelism {
+    pub fn dense(dp: usize, tp: usize, pp: usize) -> Parallelism {
+        Parallelism { dp, tp, pp, ep: 1 }
+    }
+
+    /// Model-parallel degree: ranks per model replica.
+    pub fn mp(&self) -> usize {
+        self.tp * self.pp * self.ep
+    }
+
+    pub fn world(&self) -> usize {
+        self.dp * self.mp()
+    }
+}
+
+/// Physical placement of one rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankPlacement {
+    pub rank: usize,
+    pub node: usize,
+    pub socket: usize,
+    pub local_gpu: usize,
+}
+
+/// A concrete mapping of a job's ranks onto a cluster.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub spec: ClusterSpec,
+    pub par: Parallelism,
+}
+
+impl Topology {
+    pub fn new(spec: ClusterSpec, par: Parallelism) -> Result<Topology> {
+        if par.dp == 0 || par.tp == 0 || par.pp == 0 || par.ep == 0 {
+            return Err(Error::Config("parallelism degrees must be >= 1".into()));
+        }
+        if par.world() > spec.total_gpus() {
+            return Err(Error::Config(format!(
+                "world size {} exceeds cluster GPUs {}",
+                par.world(),
+                spec.total_gpus()
+            )));
+        }
+        Ok(Topology { spec, par })
+    }
+
+    pub fn world(&self) -> usize {
+        self.par.world()
+    }
+
+    /// Physical placement of `rank` (dense fill, node-major).
+    pub fn placement(&self, rank: usize) -> RankPlacement {
+        assert!(rank < self.world(), "rank {rank} out of range");
+        let node = rank / self.spec.gpus_per_node;
+        let local_gpu = rank % self.spec.gpus_per_node;
+        let socket = local_gpu / self.spec.gpus_per_socket();
+        RankPlacement { rank, node, socket, local_gpu }
+    }
+
+    /// The DP group (one rank per replica) owning model slice `slice`.
+    pub fn dp_group(&self, slice: usize) -> Vec<RankPlacement> {
+        assert!(slice < self.par.mp(), "slice {slice} out of range");
+        (0..self.par.dp)
+            .map(|d| self.placement(d * self.par.mp() + slice))
+            .collect()
+    }
+
+    /// Number of model slices (= checkpoint files per checkpoint).
+    pub fn slices(&self) -> usize {
+        self.par.mp()
+    }
+
+    /// Ranks per node that belong to the given set (node -> count).
+    pub fn per_node_counts(&self, ranks: &[RankPlacement]) -> Vec<usize> {
+        let mut counts = vec![0usize; self.spec.nodes];
+        for r in ranks {
+            counts[r.node] += 1;
+        }
+        counts
+    }
+
+    /// Distinct (node, socket) pairs covered by the given ranks.
+    pub fn socket_coverage(&self, ranks: &[RankPlacement]) -> usize {
+        let mut seen = std::collections::BTreeSet::new();
+        for r in ranks {
+            seen.insert((r.node, r.socket));
+        }
+        seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(nodes: usize, dp: usize, tp: usize, pp: usize) -> Topology {
+        Topology::new(ClusterSpec::dgx2(nodes), Parallelism::dense(dp, tp, pp)).unwrap()
+    }
+
+    #[test]
+    fn placement_dense_fill() {
+        let t = topo(2, 2, 16, 1);
+        let p0 = t.placement(0);
+        assert_eq!((p0.node, p0.socket, p0.local_gpu), (0, 0, 0));
+        let p8 = t.placement(8);
+        assert_eq!((p8.node, p8.socket), (0, 1)); // second socket
+        let p16 = t.placement(16);
+        assert_eq!((p16.node, p16.local_gpu), (1, 0));
+    }
+
+    #[test]
+    fn dp_group_is_one_rank_per_replica() {
+        // gpt3-13b-like: mp=16, one replica per DGX-2 node
+        let t = topo(8, 8, 16, 1);
+        let g = t.dp_group(3);
+        assert_eq!(g.len(), 8);
+        for (d, p) in g.iter().enumerate() {
+            assert_eq!(p.rank, d * 16 + 3);
+            assert_eq!(p.node, d); // each replica on its own node
+        }
+    }
+
+    #[test]
+    fn dp_group_small_mp_shares_nodes() {
+        // mp=1: all DP ranks of slice 0 = all ranks
+        let t = topo(1, 16, 1, 1);
+        let g = t.dp_group(0);
+        assert_eq!(g.len(), 16);
+        assert!(g.iter().all(|p| p.node == 0));
+        assert_eq!(t.socket_coverage(&g), 2);
+    }
+
+    #[test]
+    fn world_size_validation() {
+        assert!(Topology::new(ClusterSpec::dgx2(1), Parallelism::dense(2, 16, 1)).is_err());
+        assert!(Topology::new(ClusterSpec::dgx2(1), Parallelism::dense(0, 1, 1)).is_err());
+    }
+
+    #[test]
+    fn moe_parallelism_counts() {
+        // 1.8B-MoE: EP=16, DP<=8 on 8 nodes (paper §5.5)
+        let par = Parallelism { dp: 8, tp: 1, pp: 1, ep: 16 };
+        assert_eq!(par.mp(), 16);
+        assert_eq!(par.world(), 128);
+        let t = Topology::new(ClusterSpec::dgx2(8), par).unwrap();
+        assert_eq!(t.slices(), 16);
+        assert_eq!(t.dp_group(0).len(), 8);
+    }
+
+    #[test]
+    fn per_node_counts_sum() {
+        let t = topo(4, 4, 8, 1);
+        let g = t.dp_group(5);
+        let counts = t.per_node_counts(&g);
+        assert_eq!(counts.iter().sum::<usize>(), g.len());
+    }
+}

@@ -1,0 +1,74 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for the fastpersist crate.
+#[derive(Debug)]
+pub enum Error {
+    /// Underlying I/O failure (file, O_DIRECT, etc).
+    Io(std::io::Error),
+    /// PJRT / XLA runtime failure.
+    Xla(String),
+    /// Malformed JSON (manifest, config files).
+    Json { msg: String, offset: usize },
+    /// Checkpoint format violation (bad magic, truncated, digest mismatch).
+    Format(String),
+    /// Invalid configuration or argument.
+    Config(String),
+    /// Internal invariant violation.
+    Internal(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Json { msg, offset } => {
+                write!(f, "json error at byte {offset}: {msg}")
+            }
+            Error::Format(m) => write!(f, "checkpoint format error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// `bail!`-style helper for config errors.
+#[macro_export]
+macro_rules! config_err {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::Config(format!($($arg)*)))
+    };
+}
+
+/// `bail!`-style helper for internal invariant violations.
+#[macro_export]
+macro_rules! internal_err {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::Internal(format!($($arg)*)))
+    };
+}

@@ -1,0 +1,111 @@
+//! Figure 1: impact of data parallelism on training time — compute
+//! shrinks with DP while the (baseline) checkpoint cost is constant, so
+//! checkpointing increasingly dominates.
+//!
+//! Paper anchors: dense (a) checkpoint share grows ~50% → ~89% over
+//! DP 8→64; sparse MoE (b) ~82% → ~96% over DP 1→8.
+
+use crate::cluster::bandwidth::WritePath;
+use crate::cluster::ClusterSpec;
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::model::gpt3::find;
+use crate::sim::ckpt_sim::simulate_model_checkpoint;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+use crate::Result;
+
+pub struct Fig1Row {
+    pub model: String,
+    pub dp: usize,
+    pub compute_s: f64,
+    pub ckpt_s: f64,
+    pub ckpt_share: f64,
+}
+
+pub fn compute() -> Result<Vec<Fig1Row>> {
+    let mut rows = Vec::new();
+    // dense: gpt3-1.3b (mp=2, DP 8..64 fits 8 DGX-2 nodes at DP=64)
+    let dense = find("gpt3-1.3b").unwrap();
+    for dp in [8usize, 16, 32, 64] {
+        let nodes = (dp * dense.mp()).div_ceil(16);
+        let spec = ClusterSpec::dgx2(nodes.max(1));
+        let compute = dense.iter_time(dp, 1).total();
+        let ckpt = simulate_model_checkpoint(
+            &spec, dense, dp, WriterStrategy::Rank0, WritePath::Baseline,
+        )?
+        .result
+        .latency_s;
+        rows.push(Fig1Row {
+            model: dense.name.to_string(),
+            dp,
+            compute_s: compute,
+            ckpt_s: ckpt,
+            ckpt_share: ckpt / (ckpt + compute),
+        });
+    }
+    // sparse: gpt3-1.8B-MoE (EP=16, DP 1..8)
+    let moe = find("gpt3-1.8b-moe").unwrap();
+    for dp in [1usize, 2, 4, 8] {
+        let nodes = (dp * moe.mp()).div_ceil(16);
+        let spec = ClusterSpec::dgx2(nodes.max(1));
+        let compute = moe.iter_time(dp, 1).total();
+        let ckpt =
+            simulate_model_checkpoint(&spec, moe, dp, WriterStrategy::Rank0, WritePath::Baseline)?
+                .result
+                .latency_s;
+        rows.push(Fig1Row {
+            model: moe.name.to_string(),
+            dp,
+            compute_s: compute,
+            ckpt_s: ckpt,
+            ckpt_share: ckpt / (ckpt + compute),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run() -> Result<()> {
+    let rows = compute()?;
+    let mut t = Table::new(vec!["model", "DP", "compute (s)", "ckpt (s)", "ckpt share"]);
+    for r in &rows {
+        t.row(vec![
+            r.model.clone(),
+            r.dp.to_string(),
+            fnum(r.compute_s),
+            fnum(r.ckpt_s),
+            format!("{:.0}%", r.ckpt_share * 100.0),
+        ]);
+    }
+    println!("\n== Figure 1: checkpoint share of iteration time vs DP ==");
+    println!("paper: dense 50%→89% (DP 8→64); sparse 82%→96% (DP 1→8)\n{}", t.render());
+    let json = Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("model", Json::str(&r.model)),
+            ("dp", Json::from(r.dp)),
+            ("compute_s", Json::from(r.compute_s)),
+            ("ckpt_s", Json::from(r.ckpt_s)),
+            ("ckpt_share", Json::from(r.ckpt_share)),
+        ])
+    }));
+    super::save_result("fig1", &json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_share_grows_with_dp() {
+        let rows = compute().unwrap();
+        let dense: Vec<&Fig1Row> =
+            rows.iter().filter(|r| r.model == "gpt3-1.3b").collect();
+        assert!(dense.windows(2).all(|w| w[1].ckpt_share > w[0].ckpt_share));
+        // shape anchors: starts ≥ 25%, ends ≥ 70%
+        assert!(dense[0].ckpt_share > 0.25, "{}", dense[0].ckpt_share);
+        assert!(dense.last().unwrap().ckpt_share > 0.70);
+        let moe: Vec<&Fig1Row> =
+            rows.iter().filter(|r| r.model == "gpt3-1.8b-moe").collect();
+        assert!(moe[0].ckpt_share > 0.5);
+        assert!(moe.last().unwrap().ckpt_share > 0.85);
+    }
+}

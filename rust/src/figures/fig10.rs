@@ -1,0 +1,127 @@
+//! Figure 10: FastPersist on the sparse gpt3-1.8B-MoE model (EP=16,
+//! 67 GB checkpoints, DP ≤ 8).
+//!
+//! Paper anchors: checkpoint speedup 7× at DP=1 up to 32× at DP=8; E2E
+//! speedup ~15× at DP=8; baseline stuck around ~4 GB/s while
+//! FastPersist scales near-linearly toward the hardware bound.
+
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::bandwidth::WritePath;
+use crate::cluster::ClusterSpec;
+use crate::model::gpt3::find;
+use crate::sim::ckpt_sim::simulate_model_checkpoint;
+use crate::sim::trainsim::{simulate_training, CkptMode};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::Result;
+
+pub struct Fig10Row {
+    pub dp: usize,
+    pub nodes: usize,
+    pub base_gbps: f64,
+    pub fp_gbps: f64,
+    pub ckpt_speedup: f64,
+    pub e2e_speedup: f64,
+}
+
+pub fn compute() -> Result<Vec<Fig10Row>> {
+    let m = find("gpt3-1.8b-moe").unwrap();
+    let mut rows = Vec::new();
+    for dp in [1usize, 2, 4, 8] {
+        let nodes = dp; // EP=16 → one replica per DGX-2 node
+        let spec = ClusterSpec::dgx2(nodes);
+        let base =
+            simulate_model_checkpoint(&spec, m, dp, WriterStrategy::Rank0, WritePath::Baseline)?;
+        let fp = simulate_model_checkpoint(
+            &spec, m, dp, WriterStrategy::AllReplicas, WritePath::FastPersist,
+        )?;
+        let base_train = simulate_training(&spec, m, dp, 1, CkptMode::Baseline)?;
+        let fp_train = simulate_training(
+            &spec, m, dp, 1, CkptMode::Pipelined(WriterStrategy::AllReplicas),
+        )?;
+        rows.push(Fig10Row {
+            dp,
+            nodes,
+            base_gbps: base.result.agg_gbps,
+            fp_gbps: fp.result.agg_gbps,
+            ckpt_speedup: base.result.latency_s / fp.result.latency_s,
+            e2e_speedup: base_train.iter / fp_train.iter,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run() -> Result<()> {
+    let rows = compute()?;
+    let mut t =
+        Table::new(vec!["DP", "nodes", "base GB/s", "FP GB/s", "ckpt speedup", "E2E speedup"]);
+    for r in &rows {
+        t.row(vec![
+            r.dp.to_string(),
+            r.nodes.to_string(),
+            format!("{:.1}", r.base_gbps),
+            format!("{:.1}", r.fp_gbps),
+            format!("{:.1}x", r.ckpt_speedup),
+            format!("{:.1}x", r.e2e_speedup),
+        ]);
+    }
+    println!("\n== Figure 10: gpt3-1.8B-MoE (EP=16, 67 GB checkpoints) ==");
+    println!("paper: ckpt 7x@DP1 → 32x@DP8; E2E ~15x@DP8; baseline ~4 GB/s\n{}", t.render());
+    let json = Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("dp", Json::from(r.dp)),
+            ("nodes", Json::from(r.nodes)),
+            ("base_gbps", Json::from(r.base_gbps)),
+            ("fp_gbps", Json::from(r.fp_gbps)),
+            ("ckpt_speedup", Json::from(r.ckpt_speedup)),
+            ("e2e_speedup", Json::from(r.e2e_speedup)),
+        ])
+    }));
+    super::save_result("fig10", &json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_stuck_low_fp_scales() {
+        let rows = compute().unwrap();
+        // baseline roughly flat and low
+        assert!(rows.iter().all(|r| r.base_gbps < 12.0), "{:?}",
+            rows.iter().map(|r| r.base_gbps).collect::<Vec<_>>());
+        // FastPersist scales near-linearly with nodes
+        let ratio = rows[3].fp_gbps / rows[0].fp_gbps;
+        assert!(ratio > 4.0, "scaling ratio={ratio}");
+    }
+
+    #[test]
+    fn speedups_grow_with_dp_and_bracket_paper() {
+        let rows = compute().unwrap();
+        assert!(rows.windows(2).all(|w| w[1].ckpt_speedup > w[0].ckpt_speedup));
+        // DP=1 ≈ 7x, DP=8 ≈ 32x in the paper; accept the right bands
+        assert!(rows[0].ckpt_speedup > 2.0 && rows[0].ckpt_speedup < 20.0,
+            "dp1: {}", rows[0].ckpt_speedup);
+        assert!(rows[3].ckpt_speedup > 15.0 && rows[3].ckpt_speedup < 80.0,
+            "dp8: {}", rows[3].ckpt_speedup);
+    }
+
+    #[test]
+    fn e2e_speedup_large_at_dp8() {
+        // paper: ~15x at DP=8 — sparse models amplify FastPersist's win
+        let rows = compute().unwrap();
+        assert!(rows[3].e2e_speedup > 5.0, "dp8 e2e: {}", rows[3].e2e_speedup);
+        // and bigger than the dense 13b at the same DP (paper §5.5.2)
+        let spec = ClusterSpec::dgx2(8);
+        let dense = find("gpt3-13b").unwrap();
+        let dense_su = simulate_training(&spec, dense, 8, 1, CkptMode::Baseline).unwrap().iter
+            / simulate_training(
+                &spec, dense, 8, 1,
+                CkptMode::Pipelined(WriterStrategy::PerSocket),
+            )
+            .unwrap()
+            .iter;
+        assert!(rows[3].e2e_speedup > dense_su, "moe {} vs dense {dense_su}",
+            rows[3].e2e_speedup);
+    }
+}

@@ -1,0 +1,163 @@
+//! Figure 11: pipelined checkpointing — (a) sensitivity of the
+//! per-iteration-checkpointing slowdown to gradient accumulation (GAS
+//! 1–512, gpt3-1.3b, DP=1), with and without pipelining; (b) slowdown
+//! of the dense models on 8 nodes, with and without pipelining.
+//!
+//! Paper anchors: pipelining wins for GAS < 64 and reaches ≤8% slowdown
+//! by GAS=8; on 8 nodes the 1.3b–13b models see <5% overhead with
+//! pipelining.
+
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::ClusterSpec;
+use crate::model::gpt3::{find, MODEL_ZOO};
+use crate::sim::trainsim::{simulate_training, simulate_training_fixed_micro, CkptMode};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::Result;
+
+pub struct GasRow {
+    pub gas: u64,
+    pub sync_slowdown: f64,
+    pub pipe_slowdown: f64,
+}
+
+pub struct ModelRow {
+    pub model: String,
+    pub dp: usize,
+    pub sync_slowdown: f64,
+    pub pipe_slowdown: f64,
+}
+
+pub fn compute_gas_sweep() -> Result<Vec<GasRow>> {
+    // gpt3-1.3b, DP=1 on one node (paper uses 2 GPUs of one box) with a
+    // fixed micro-batch: per-replica batch = mb * GAS, so compute grows
+    // with GAS while the checkpoint stays constant (§2.1.2, §5.6.1).
+    let spec = ClusterSpec::dgx2(1);
+    let m = find("gpt3-1.3b").unwrap();
+    let strat = WriterStrategy::AllReplicas;
+    let mb = 1u64;
+    let mut rows = Vec::new();
+    let mut gas = 1u64;
+    while gas <= 512 {
+        let sync =
+            simulate_training_fixed_micro(&spec, m, 1, mb, gas, CkptMode::Sync(strat))?;
+        let pipe =
+            simulate_training_fixed_micro(&spec, m, 1, mb, gas, CkptMode::Pipelined(strat))?;
+        rows.push(GasRow {
+            gas,
+            sync_slowdown: sync.slowdown,
+            pipe_slowdown: pipe.slowdown,
+        });
+        gas *= 2;
+    }
+    Ok(rows)
+}
+
+pub fn compute_model_sweep() -> Result<Vec<ModelRow>> {
+    let spec = ClusterSpec::dgx2(8);
+    let strat = WriterStrategy::PerSocket;
+    let mut rows = Vec::new();
+    for m in MODEL_ZOO.iter().filter(|m| m.dense) {
+        let dp = 128 / m.mp();
+        let sync = simulate_training(&spec, m, dp, 8, CkptMode::Sync(strat))?;
+        let pipe = simulate_training(&spec, m, dp, 8, CkptMode::Pipelined(strat))?;
+        rows.push(ModelRow {
+            model: m.name.to_string(),
+            dp,
+            sync_slowdown: sync.slowdown,
+            pipe_slowdown: pipe.slowdown,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run() -> Result<()> {
+    let gas_rows = compute_gas_sweep()?;
+    let mut t = Table::new(vec!["GAS", "sync slowdown", "pipelined slowdown"]);
+    for r in &gas_rows {
+        t.row(vec![
+            r.gas.to_string(),
+            format!("{:.1}%", (r.sync_slowdown - 1.0) * 100.0),
+            format!("{:.1}%", (r.pipe_slowdown - 1.0) * 100.0),
+        ]);
+    }
+    println!("\n== Figure 11(a): GAS sensitivity, gpt3-1.3b DP=1 ==");
+    println!("paper: pipelining better for GAS<64; ~8% slowdown at GAS=8\n{}", t.render());
+
+    let model_rows = compute_model_sweep()?;
+    let mut t2 = Table::new(vec!["model", "DP", "sync slowdown", "pipelined slowdown"]);
+    for r in &model_rows {
+        t2.row(vec![
+            r.model.clone(),
+            r.dp.to_string(),
+            format!("{:.1}%", (r.sync_slowdown - 1.0) * 100.0),
+            format!("{:.1}%", (r.pipe_slowdown - 1.0) * 100.0),
+        ]);
+    }
+    println!("== Figure 11(b): per-iteration ckpt slowdown on 8 nodes ==");
+    println!("paper: <5% for 1.3b-13b with pipelining\n{}", t2.render());
+
+    let json = Json::obj(vec![
+        (
+            "gas_sweep",
+            Json::arr(gas_rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("gas", Json::from(r.gas as i64)),
+                    ("sync_slowdown", Json::from(r.sync_slowdown)),
+                    ("pipe_slowdown", Json::from(r.pipe_slowdown)),
+                ])
+            })),
+        ),
+        (
+            "models",
+            Json::arr(model_rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("model", Json::str(&r.model)),
+                    ("dp", Json::from(r.dp)),
+                    ("sync_slowdown", Json::from(r.sync_slowdown)),
+                    ("pipe_slowdown", Json::from(r.pipe_slowdown)),
+                ])
+            })),
+        ),
+    ]);
+    super::save_result("fig11", &json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipelining_wins_at_low_gas_converges_high() {
+        let rows = compute_gas_sweep().unwrap();
+        let low = &rows[0]; // GAS=1
+        assert!(low.pipe_slowdown < low.sync_slowdown);
+        let high = rows.last().unwrap(); // GAS=512
+        assert!((high.sync_slowdown - high.pipe_slowdown).abs() < 0.05);
+        // slowdown decreases monotonically with GAS
+        assert!(rows.windows(2).all(|w| w[1].pipe_slowdown <= w[0].pipe_slowdown + 1e-9));
+    }
+
+    #[test]
+    fn gas8_slowdown_near_paper() {
+        // paper: ~8% at GAS=8 with pipelining
+        let rows = compute_gas_sweep().unwrap();
+        let r8 = rows.iter().find(|r| r.gas == 8).unwrap();
+        assert!(
+            r8.pipe_slowdown - 1.0 < 0.25,
+            "gas8 pipelined slowdown {}",
+            r8.pipe_slowdown
+        );
+    }
+
+    #[test]
+    fn models_under_5pct_with_pipelining() {
+        for r in compute_model_sweep().unwrap() {
+            if r.model != "gpt3-0.7b" {
+                // paper's <5% claim covers 1.3b..13b
+                assert!(r.pipe_slowdown < 1.05, "{}: {}", r.model, r.pipe_slowdown);
+            }
+            assert!(r.pipe_slowdown <= r.sync_slowdown + 1e-9);
+        }
+    }
+}

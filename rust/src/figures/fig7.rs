@@ -1,0 +1,166 @@
+//! Figure 7 (+ appendix Figs. 13/14): single-writer microbenchmark on
+//! **real local disk** — FastPersist speedup over the torch.save-style
+//! buffered baseline, sweeping IO-buffer size and checkpoint size, in
+//! single- and double-buffer modes.
+//!
+//! Paper anchors (on NVMe RAID-0): single buffer 1.8–3.6×, double
+//! buffer 1.8–6.6×; benefits grow with checkpoint size; best IO-buffer
+//! size is checkpoint-size dependent; double ≥ single almost always.
+//!
+//! Substrate note: the container's virtio disk (~0.4 GB/s, fsync-bound)
+//! would hide every software-path difference, so this experiment runs
+//! in [`IoConfig::microbench`] mode — the page cache stands in for the
+//! fast NVMe array and the measured differences are exactly the
+//! paper's subject: small copying buffered writes (torch.save) vs.
+//! large aligned staged writes with single/double buffering.
+
+use crate::io::engine::{write_file, EngineKind, IoConfig};
+use crate::util::bytes::MB;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::Result;
+
+pub struct Fig7Cell {
+    pub ckpt_mb: u64,
+    pub io_buf_mb: u64,
+    pub mode: &'static str,
+    pub gbps: f64,
+    pub speedup_vs_baseline: f64,
+}
+
+/// Median-of-k timing for one engine config writing `data`.
+fn measure(cfg: &IoConfig, dir: &std::path::Path, data: &[u8], reps: usize) -> Result<f64> {
+    let mut times = Vec::with_capacity(reps);
+    for i in 0..reps {
+        let path = dir.join(format!("ckpt-{}-{i}.bin", cfg.kind.name()));
+        let stats = write_file(cfg, &path, data)?;
+        times.push(stats.elapsed.as_secs_f64());
+        let _ = std::fs::remove_file(&path);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(times[times.len() / 2])
+}
+
+pub fn compute(fast: bool) -> Result<Vec<Fig7Cell>> {
+    let dir = crate::io::engine::scratch_dir("fig7")?;
+    let (ckpt_sizes, buf_sizes, reps): (Vec<u64>, Vec<u64>, usize) = if fast {
+        (vec![16, 128], vec![2, 8, 32], 3)
+    } else {
+        (vec![16, 32, 64, 128, 256, 512], vec![2, 4, 8, 16, 32, 64, 128], 5)
+    };
+    let mut out = Vec::new();
+    for &ckpt_mb in &ckpt_sizes {
+        let mut data = vec![0u8; (ckpt_mb * MB) as usize];
+        let head = (MB as usize).min(data.len());
+        Rng::new(ckpt_mb).fill_bytes(&mut data[..head]);
+        let base_cfg = IoConfig::baseline().microbench();
+        let base_t = measure(&base_cfg, &dir, &data, reps)?;
+        let base_gbps = crate::util::bytes::gbps(data.len() as u64, base_t);
+        out.push(Fig7Cell {
+            ckpt_mb,
+            io_buf_mb: 0,
+            mode: "baseline",
+            gbps: base_gbps,
+            speedup_vs_baseline: 1.0,
+        });
+        for &buf_mb in &buf_sizes {
+            for (mode, kind) in
+                [("single", EngineKind::DirectSingle), ("double", EngineKind::DirectDouble)]
+            {
+                let cfg =
+                    IoConfig::with_kind(kind).with_buf_size((buf_mb * MB) as usize).microbench();
+                let t = measure(&cfg, &dir, &data, reps)?;
+                let gbps = crate::util::bytes::gbps(data.len() as u64, t);
+                out.push(Fig7Cell {
+                    ckpt_mb,
+                    io_buf_mb: buf_mb,
+                    mode,
+                    gbps,
+                    speedup_vs_baseline: base_t / t,
+                });
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(out)
+}
+
+pub fn run(fast: bool) -> Result<()> {
+    let cells = compute(fast)?;
+    let ckpt_sizes: Vec<u64> = {
+        let mut v: Vec<u64> = cells.iter().map(|c| c.ckpt_mb).collect();
+        v.dedup();
+        v
+    };
+    println!("\n== Figure 7/13/14: single-writer speedup over torch.save (real disk) ==");
+    println!("paper: single 1.8-3.6x, double 1.8-6.6x, growing with ckpt size\n");
+    for &ck in &ckpt_sizes {
+        let mut t = Table::new(vec!["io buf (MB)", "single x", "double x"]);
+        let bufs: Vec<u64> = cells
+            .iter()
+            .filter(|c| c.ckpt_mb == ck && c.mode == "single")
+            .map(|c| c.io_buf_mb)
+            .collect();
+        for b in bufs {
+            let s = cells
+                .iter()
+                .find(|c| c.ckpt_mb == ck && c.io_buf_mb == b && c.mode == "single")
+                .unwrap();
+            let d = cells
+                .iter()
+                .find(|c| c.ckpt_mb == ck && c.io_buf_mb == b && c.mode == "double")
+                .unwrap();
+            t.row(vec![
+                b.to_string(),
+                format!("{:.2}", s.speedup_vs_baseline),
+                format!("{:.2}", d.speedup_vs_baseline),
+            ]);
+        }
+        let base = cells
+            .iter()
+            .find(|c| c.ckpt_mb == ck && c.mode == "baseline")
+            .unwrap();
+        println!("{ck} MB checkpoint (baseline {:.2} GB/s):\n{}", base.gbps, t.render());
+    }
+    let json = Json::arr(cells.iter().map(|c| {
+        Json::obj(vec![
+            ("ckpt_mb", Json::from(c.ckpt_mb as i64)),
+            ("io_buf_mb", Json::from(c.io_buf_mb as i64)),
+            ("mode", Json::str(c.mode)),
+            ("gbps", Json::from(c.gbps)),
+            ("speedup", Json::from(c.speedup_vs_baseline)),
+        ])
+    }));
+    super::save_result("fig7", &json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structural_invariants_on_this_substrate() {
+        // The container substrate (DRAM-speed "SSD") compresses the
+        // paper's 1.8-6.6x gap — both paths are memcpy-bound here (see
+        // EXPERIMENTS.md). What must still hold structurally:
+        // (1) the NVMe path is never catastrophically slower than the
+        //     baseline (floor guards regressions), and
+        // (2) double buffering is at least as good as single buffering
+        //     on aggregate (overlap never hurts).
+        let cells = compute(true).unwrap();
+        let geo = |mode: &str| {
+            let v: Vec<f64> = cells
+                .iter()
+                .filter(|c| c.mode == mode)
+                .map(|c| c.speedup_vs_baseline.ln())
+                .collect();
+            (v.iter().sum::<f64>() / v.len() as f64).exp()
+        };
+        let single = geo("single");
+        let double = geo("double");
+        assert!(single > 0.6, "single geomean speedup {single}");
+        assert!(double > 0.6, "double geomean speedup {double}");
+        assert!(double > single * 0.92, "double {double} vs single {single}");
+    }
+}

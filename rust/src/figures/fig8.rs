@@ -1,0 +1,151 @@
+//! Figure 8 (+ appendix Fig. 15): parallel checkpoint write of
+//! gpt3-0.7b (~10 GB) across 1/2/4/8 nodes, sweeping the write
+//! parallelism degree, Replica (spread over all DP ranks) vs Socket
+//! (one writer per CPU socket).
+//!
+//! Paper anchors: best on 2 nodes = 8 writers at 41.8 GB/s (91% of
+//! peak); best on 8 nodes = 16 writers (Socket) at 129.8 GB/s; Replica
+//! degrades past the per-node sweet spot.
+
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::bandwidth::WritePath;
+use crate::cluster::ClusterSpec;
+use crate::model::gpt3::find;
+use crate::sim::ckpt_sim::simulate_model_checkpoint;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::Result;
+
+pub struct Fig8Cell {
+    pub nodes: usize,
+    pub writers: usize,
+    pub strategy: String,
+    pub gbps: f64,
+    pub peak_frac: f64,
+}
+
+pub fn compute() -> Result<Vec<Fig8Cell>> {
+    let m = find("gpt3-0.7b").unwrap(); // mp=1 → one slice, group = all
+    let mut out = Vec::new();
+    for nodes in [1usize, 2, 4, 8] {
+        let spec = ClusterSpec::dgx2(nodes);
+        let dp = nodes * 16;
+        // Replica-style: sweep writer counts spread across the cluster.
+        let mut k = 1usize;
+        while k <= dp {
+            let sim = simulate_model_checkpoint(
+                &spec,
+                m,
+                dp,
+                WriterStrategy::FixedCount(k),
+                WritePath::FastPersist,
+            )?;
+            out.push(Fig8Cell {
+                nodes,
+                writers: sim.writers,
+                strategy: "replica".into(),
+                gbps: sim.result.agg_gbps,
+                peak_frac: sim.result.peak_frac,
+            });
+            k *= 2;
+        }
+        // Socket: one writer per CPU socket.
+        let sim = simulate_model_checkpoint(
+            &spec,
+            m,
+            dp,
+            WriterStrategy::PerSocket,
+            WritePath::FastPersist,
+        )?;
+        out.push(Fig8Cell {
+            nodes,
+            writers: sim.writers,
+            strategy: "socket".into(),
+            gbps: sim.result.agg_gbps,
+            peak_frac: sim.result.peak_frac,
+        });
+    }
+    Ok(out)
+}
+
+pub fn run() -> Result<()> {
+    let cells = compute()?;
+    println!("\n== Figure 8/15: parallel write of gpt3-0.7b (10 GB), simulated cluster ==");
+    println!("paper: 2 nodes best 41.8 GB/s @8 writers; 8 nodes best ~130 GB/s @16 (Socket)\n");
+    for nodes in [1usize, 2, 4, 8] {
+        let mut t = Table::new(vec!["writers", "strategy", "GB/s", "% of peak"]);
+        for c in cells.iter().filter(|c| c.nodes == nodes) {
+            t.row(vec![
+                c.writers.to_string(),
+                c.strategy.clone(),
+                format!("{:.1}", c.gbps),
+                format!("{:.0}%", c.peak_frac * 100.0),
+            ]);
+        }
+        println!("{nodes} node(s):\n{}", t.render());
+    }
+    let json = Json::arr(cells.iter().map(|c| {
+        Json::obj(vec![
+            ("nodes", Json::from(c.nodes)),
+            ("writers", Json::from(c.writers)),
+            ("strategy", Json::str(&c.strategy)),
+            ("gbps", Json::from(c.gbps)),
+            ("peak_frac", Json::from(c.peak_frac)),
+        ])
+    }));
+    super::save_result("fig8", &json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_node_best_near_paper() {
+        let cells = compute().unwrap();
+        let best2 = cells
+            .iter()
+            .filter(|c| c.nodes == 2)
+            .map(|c| c.gbps)
+            .fold(0.0f64, f64::max);
+        assert!(best2 > 33.0 && best2 < 50.0, "best2={best2}");
+    }
+
+    #[test]
+    fn eight_node_best_exceeds_100gbps() {
+        let cells = compute().unwrap();
+        let best8 = cells
+            .iter()
+            .filter(|c| c.nodes == 8)
+            .map(|c| c.gbps)
+            .fold(0.0f64, f64::max);
+        assert!(best8 > 100.0, "best8={best8}");
+    }
+
+    #[test]
+    fn replica_degrades_past_sweet_spot_on_8_nodes() {
+        let cells = compute().unwrap();
+        let replica8: Vec<&Fig8Cell> = cells
+            .iter()
+            .filter(|c| c.nodes == 8 && c.strategy == "replica")
+            .collect();
+        let best = replica8.iter().map(|c| c.gbps).fold(0.0f64, f64::max);
+        let at_max_writers = replica8.last().unwrap().gbps;
+        assert!(at_max_writers < best * 0.85, "no degradation: {at_max_writers} vs {best}");
+    }
+
+    #[test]
+    fn socket_competitive_at_8_nodes() {
+        let cells = compute().unwrap();
+        let socket8 = cells
+            .iter()
+            .find(|c| c.nodes == 8 && c.strategy == "socket")
+            .unwrap();
+        let best8 = cells
+            .iter()
+            .filter(|c| c.nodes == 8)
+            .map(|c| c.gbps)
+            .fold(0.0f64, f64::max);
+        assert!(socket8.gbps > 0.8 * best8, "socket {} vs best {best8}", socket8.gbps);
+    }
+}

@@ -1,0 +1,51 @@
+//! Reproduction of every table and figure in the paper's evaluation
+//! (`fastpersist repro <exp>`).
+//!
+//! Each module regenerates one experiment: it prints the paper's
+//! rows/series next to our measured/simulated values and writes a JSON
+//! result file under `results/`. Single-writer I/O experiments (Fig. 7
+//! family) measure **real disk I/O**; cluster-scale experiments run on
+//! the calibrated simulator (see DESIGN.md §3 for the substitution
+//! argument).
+
+pub mod fig1;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig2;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Where result JSON files land.
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("FASTPERSIST_RESULTS").unwrap_or_else(|_| "results".into()),
+    )
+}
+
+/// Write one experiment's JSON result file.
+pub fn save_result(name: &str, value: &Json) -> Result<()> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{name}.json")), value.to_string_pretty())?;
+    Ok(())
+}
+
+/// Run every experiment (the `repro all` path).
+pub fn run_all(fast: bool) -> Result<()> {
+    fig1::run()?;
+    fig2::run()?;
+    table1::run()?;
+    fig7::run(fast)?;
+    fig8::run()?;
+    fig9::run()?;
+    fig10::run()?;
+    fig11::run()?;
+    fig12::run()?;
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Table 1: required write bandwidth B_C (Eq. 1) to hide checkpoint
+//! creation behind the next iteration's forward+backward, at the
+//! maximum valid DP for each model's published GBS.
+
+use crate::model::gpt3::find;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+use crate::Result;
+
+pub struct Table1Row {
+    pub model: String,
+    pub dp: usize,
+    pub nodes: usize,
+    pub bc_gbps: f64,
+    pub paper_bc: f64,
+}
+
+pub fn compute() -> Vec<Table1Row> {
+    // (model, max DP, paper nodes, paper B_C)
+    let cases = [
+        ("gpt3-0.7b", 256usize, 16usize, 34.0),
+        ("gpt3-1.3b", 512, 64, 59.0),
+        ("gpt3-2.7b", 512, 128, 81.0),
+        ("gpt3-6.7b", 1024, 512, 160.0),
+        ("gpt3-13b", 1024, 1024, 28.0),
+    ];
+    cases
+        .iter()
+        .map(|&(name, dp, nodes, paper)| {
+            let m = find(name).unwrap();
+            Table1Row {
+                model: name.to_string(),
+                dp,
+                nodes,
+                bc_gbps: m.required_bc_gbps(dp, 1),
+                paper_bc: paper,
+            }
+        })
+        .collect()
+}
+
+pub fn run() -> Result<()> {
+    let rows = compute();
+    let mut t = Table::new(vec!["model", "DP", "# nodes", "B_C model (GB/s)", "B_C paper (GB/s)"]);
+    for r in &rows {
+        t.row(vec![
+            r.model.clone(),
+            r.dp.to_string(),
+            r.nodes.to_string(),
+            fnum(r.bc_gbps),
+            fnum(r.paper_bc),
+        ]);
+    }
+    println!("\n== Table 1: required write bandwidth to hide checkpointing ==");
+    println!("{}", t.render());
+    let json = Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("model", Json::str(&r.model)),
+            ("dp", Json::from(r.dp)),
+            ("nodes", Json::from(r.nodes)),
+            ("bc_gbps", Json::from(r.bc_gbps)),
+            ("paper_bc_gbps", Json::from(r.paper_bc)),
+        ])
+    }));
+    super::save_result("table1", &json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_3x_of_paper_and_same_trend() {
+        let rows = compute();
+        for r in &rows {
+            let ratio = r.bc_gbps / r.paper_bc;
+            assert!(
+                (1.0 / 3.0..=3.0).contains(&ratio),
+                "{}: model {:.0} vs paper {:.0}",
+                r.model,
+                r.bc_gbps,
+                r.paper_bc
+            );
+        }
+        // rise through 6.7B, drop at 13B (PP bubble + tiny micro-batch)
+        assert!(rows[3].bc_gbps > rows[0].bc_gbps);
+        assert!(rows[4].bc_gbps < rows[3].bc_gbps);
+    }
+}

@@ -1,0 +1,76 @@
+//! Alignment arithmetic for the direct-I/O path.
+//!
+//! Direct I/O (and SSD block interfaces generally) require offset, length
+//! and memory alignment — 512 B on classic Linux block devices, 4 KiB on
+//! modern NVMe namespaces. The paper (§4.1) splits each checkpoint into
+//! the largest aligned *prefix* (fast path) and a tiny unaligned *suffix*
+//! (traditional I/O), instead of padding the file.
+
+/// Default alignment: 4 KiB covers O_DIRECT on every modern fs/namespace.
+pub const DEFAULT_ALIGN: usize = 4096;
+
+/// Largest multiple of `align` that is <= `len`.
+#[inline]
+pub fn align_down(len: u64, align: u64) -> u64 {
+    debug_assert!(align.is_power_of_two());
+    len & !(align - 1)
+}
+
+/// Smallest multiple of `align` that is >= `len`.
+#[inline]
+pub fn align_up(len: u64, align: u64) -> u64 {
+    debug_assert!(align.is_power_of_two());
+    len.checked_add(align - 1).expect("align_up overflow") & !(align - 1)
+}
+
+#[inline]
+pub fn is_aligned(v: u64, align: u64) -> bool {
+    debug_assert!(align.is_power_of_two());
+    v & (align - 1) == 0
+}
+
+/// Split `total` into (aligned prefix, unaligned suffix) — paper §4.1.
+/// The suffix is always < align, so for GB-scale checkpoints it is a
+/// negligible fraction written through the traditional path.
+#[inline]
+pub fn prefix_suffix(total: u64, align: u64) -> (u64, u64) {
+    let prefix = align_down(total, align);
+    (prefix, total - prefix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn align_basics() {
+        assert_eq!(align_down(4097, 4096), 4096);
+        assert_eq!(align_down(4096, 4096), 4096);
+        assert_eq!(align_down(4095, 4096), 0);
+        assert_eq!(align_up(1, 4096), 4096);
+        assert_eq!(align_up(0, 4096), 0);
+        assert!(is_aligned(8192, 4096));
+        assert!(!is_aligned(8191, 4096));
+    }
+
+    #[test]
+    fn prefix_suffix_split() {
+        let (p, s) = prefix_suffix(10_000, 4096);
+        assert_eq!((p, s), (8192, 1808));
+        let (p, s) = prefix_suffix(8192, 4096);
+        assert_eq!((p, s), (8192, 0));
+        let (p, s) = prefix_suffix(100, 4096);
+        assert_eq!((p, s), (0, 100));
+    }
+
+    #[test]
+    fn prop_prefix_suffix_invariants() {
+        forall("prefix+suffix==total, suffix<align", 512, |g| {
+            let align = 1u64 << g.u64(0, 16);
+            let total = g.u64(0, 1 << 40);
+            let (p, s) = prefix_suffix(total, align);
+            p + s == total && s < align && is_aligned(p, align)
+        });
+    }
+}

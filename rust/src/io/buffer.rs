@@ -1,0 +1,214 @@
+//! Aligned ("pinned") staging buffers and a reusable pool.
+//!
+//! These stand in for the page-locked CPU memory the paper stages
+//! checkpoint data through (accelerator → pinned DRAM → NVMe). The two
+//! properties that matter are reproduced exactly: (i) the memory is
+//! alignment-guaranteed so direct I/O can DMA from it, and (ii) buffers
+//! are allocated once and recycled, so the write hot path never touches
+//! the allocator (paper §4.3: the helper thread does not allocate).
+
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::io::align::DEFAULT_ALIGN;
+
+/// A heap buffer whose base address is aligned to `align` bytes.
+pub struct AlignedBuf {
+    ptr: *mut u8,
+    cap: usize,
+    align: usize,
+    /// Bytes currently staged (filled) in the buffer.
+    pub len: usize,
+}
+
+// SAFETY: AlignedBuf owns its allocation exclusively; the raw pointer is
+// never shared. Moving it across threads is sound.
+unsafe impl Send for AlignedBuf {}
+
+impl AlignedBuf {
+    pub fn new(cap: usize, align: usize) -> AlignedBuf {
+        assert!(align.is_power_of_two() && cap > 0);
+        let layout = Layout::from_size_align(cap, align).expect("layout");
+        // zeroed so O_DIRECT tail padding never leaks heap garbage to disk
+        let ptr = unsafe { alloc_zeroed(layout) };
+        assert!(!ptr.is_null(), "aligned alloc failed");
+        AlignedBuf { ptr, cap, align, len: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn align(&self) -> usize {
+        self.align
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.cap) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.cap) }
+    }
+
+    /// Filled prefix.
+    pub fn filled(&self) -> &[u8] {
+        &self.as_slice()[..self.len]
+    }
+
+    /// Remaining capacity.
+    pub fn remaining(&self) -> usize {
+        self.cap - self.len
+    }
+
+    /// Stage bytes into the buffer (the "D2H copy" hop). Returns the
+    /// number of bytes actually copied (bounded by remaining capacity).
+    pub fn stage(&mut self, src: &[u8]) -> usize {
+        let n = src.len().min(self.remaining());
+        let dst = self.len;
+        self.as_mut_slice()[dst..dst + n].copy_from_slice(&src[..n]);
+        self.len += n;
+        n
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        let layout = Layout::from_size_align(self.cap, self.align).unwrap();
+        unsafe { dealloc(self.ptr, layout) };
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBuf(cap={}, align={}, len={})", self.cap, self.align, self.len)
+    }
+}
+
+/// Fixed pool of staging buffers. `acquire` blocks until a buffer is
+/// free — this is exactly the backpressure the double-buffered writer
+/// relies on (at most `n` writes in flight).
+#[derive(Clone)]
+pub struct BufferPool {
+    rx: Arc<Mutex<Receiver<AlignedBuf>>>,
+    tx: Sender<AlignedBuf>,
+    buf_size: usize,
+    count: usize,
+}
+
+impl BufferPool {
+    pub fn new(count: usize, buf_size: usize) -> BufferPool {
+        Self::with_align(count, buf_size, DEFAULT_ALIGN)
+    }
+
+    pub fn with_align(count: usize, buf_size: usize, align: usize) -> BufferPool {
+        assert!(count > 0);
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..count {
+            tx.send(AlignedBuf::new(buf_size, align)).unwrap();
+        }
+        BufferPool { rx: Arc::new(Mutex::new(rx)), tx, buf_size, count }
+    }
+
+    /// Block until a free buffer is available; the buffer comes back
+    /// cleared.
+    pub fn acquire(&self) -> AlignedBuf {
+        let mut buf = self
+            .rx
+            .lock()
+            .unwrap()
+            .recv()
+            .expect("buffer pool closed");
+        buf.clear();
+        buf
+    }
+
+    /// Non-blocking acquire.
+    pub fn try_acquire(&self) -> Option<AlignedBuf> {
+        self.rx.lock().unwrap().try_recv().ok().map(|mut b| {
+            b.clear();
+            b
+        })
+    }
+
+    /// Return a buffer to the pool.
+    pub fn release(&self, buf: AlignedBuf) {
+        let _ = self.tx.send(buf);
+    }
+
+    pub fn buf_size(&self) -> usize {
+        self.buf_size
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_respected() {
+        for align in [512usize, 4096, 65536] {
+            let b = AlignedBuf::new(align * 2, align);
+            assert_eq!(b.as_slice().as_ptr() as usize % align, 0);
+        }
+    }
+
+    #[test]
+    fn stage_fills_and_bounds() {
+        let mut b = AlignedBuf::new(8, 512);
+        assert_eq!(b.stage(&[1, 2, 3]), 3);
+        assert_eq!(b.stage(&[4, 5, 6, 7, 8, 9]), 5); // truncated at capacity
+        assert_eq!(b.filled(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(b.remaining(), 0);
+        b.clear();
+        assert_eq!(b.remaining(), 8);
+    }
+
+    #[test]
+    fn zeroed_on_alloc() {
+        let b = AlignedBuf::new(4096, 4096);
+        assert!(b.as_slice().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn pool_blocks_until_release() {
+        let pool = BufferPool::new(1, 64);
+        let b = pool.acquire();
+        assert!(pool.try_acquire().is_none());
+        pool.release(b);
+        assert!(pool.try_acquire().is_some());
+    }
+
+    #[test]
+    fn pool_recycles_cleared() {
+        let pool = BufferPool::new(2, 64);
+        let mut b = pool.acquire();
+        b.stage(&[9; 10]);
+        pool.release(b);
+        let _other = pool.acquire();
+        let recycled = pool.acquire();
+        assert_eq!(recycled.len, 0);
+    }
+
+    #[test]
+    fn pool_cross_thread() {
+        let pool = BufferPool::new(2, 1024);
+        let p2 = pool.clone();
+        let h = std::thread::spawn(move || {
+            let mut b = p2.acquire();
+            b.stage(&[1; 100]);
+            p2.release(b);
+        });
+        h.join().unwrap();
+        assert!(pool.try_acquire().is_some());
+    }
+}

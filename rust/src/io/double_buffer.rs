@@ -1,0 +1,270 @@
+//! Staged writer with single/double buffering (paper Fig. 5).
+//!
+//! The checkpoint byte stream is staged into aligned pinned buffers (the
+//! accelerator→DRAM hop) and drained to storage by a dedicated drain
+//! worker (the DRAM→NVMe hop). With a 1-buffer pool the two hops
+//! serialize (Fig. 5a, "single buffer mode"); with a 2-buffer pool the
+//! drain of buffer *k* overlaps the staging of buffer *k+1* (Fig. 5b,
+//! "double buffer mode") — the pool's blocking `acquire` provides the
+//! backpressure.
+
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::io::buffer::{AlignedBuf, BufferPool};
+use crate::{Error, Result};
+
+/// A full (or final) staged buffer queued for drain at a file offset.
+struct Job {
+    buf: AlignedBuf,
+    offset: u64,
+    len: usize,
+}
+
+/// Counters from the drain worker.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DrainStats {
+    pub bytes: u64,
+    pub ops: u64,
+}
+
+/// Order-preserving staged writer over a file handle.
+pub struct StagedWriter {
+    pool: BufferPool,
+    current: Option<AlignedBuf>,
+    /// Next *file* offset at which the current buffer will land.
+    submit_offset: u64,
+    /// Total bytes staged so far (logical stream position).
+    staged: u64,
+    tx: Option<Sender<Job>>,
+    drain: Option<JoinHandle<DrainStats>>,
+    err: Arc<Mutex<Option<Error>>>,
+}
+
+impl StagedWriter {
+    /// `buffers` = 1 → single-buffer mode; 2 → double-buffer mode.
+    /// `file` is the (possibly O_DIRECT) handle the drain worker writes.
+    pub fn new(file: File, buffers: usize, buf_size: usize, align: usize) -> StagedWriter {
+        assert!(buffers >= 1);
+        assert!(buf_size % align == 0, "buf_size must be align-multiple");
+        let pool = BufferPool::with_align(buffers, buf_size, align);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let err = Arc::new(Mutex::new(None::<Error>));
+        let drain_err = Arc::clone(&err);
+        let drain_pool = pool.clone();
+        let drain = std::thread::Builder::new()
+            .name("ckpt-drain".into())
+            .spawn(move || {
+                let mut stats = DrainStats::default();
+                for job in rx {
+                    // Skip writes after the first error, but keep
+                    // recycling buffers so the producer can't deadlock.
+                    if drain_err.lock().unwrap().is_none() {
+                        match file.write_all_at(&job.buf.filled()[..job.len], job.offset) {
+                            Ok(()) => {
+                                stats.bytes += job.len as u64;
+                                stats.ops += 1;
+                            }
+                            Err(e) => {
+                                *drain_err.lock().unwrap() = Some(Error::Io(e));
+                            }
+                        }
+                    }
+                    drain_pool.release(job.buf);
+                }
+                stats
+            })
+            .expect("spawn drain worker");
+        StagedWriter {
+            pool,
+            current: None,
+            submit_offset: 0,
+            staged: 0,
+            tx: Some(tx),
+            drain: Some(drain),
+            err,
+        }
+    }
+
+    fn check_err(&self) -> Result<()> {
+        if let Some(e) = self.err.lock().unwrap().take() {
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Stage bytes; full buffers are submitted to the drain worker.
+    pub fn stage(&mut self, mut data: &[u8]) -> Result<()> {
+        while !data.is_empty() {
+            self.check_err()?;
+            if self.current.is_none() {
+                // Blocks when all buffers are in flight → backpressure.
+                self.current = Some(self.pool.acquire());
+            }
+            let buf = self.current.as_mut().unwrap();
+            let n = buf.stage(data);
+            self.staged += n as u64;
+            data = &data[n..];
+            if buf.remaining() == 0 {
+                self.submit_full()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn submit_full(&mut self) -> Result<()> {
+        let buf = self.current.take().expect("submit without buffer");
+        let len = buf.len;
+        let offset = self.submit_offset;
+        self.submit_offset += len as u64;
+        self.tx
+            .as_ref()
+            .expect("writer closed")
+            .send(Job { buf, offset, len })
+            .map_err(|_| Error::Internal("drain worker died".into()))?;
+        Ok(())
+    }
+
+    /// Total bytes staged (logical stream length).
+    pub fn staged_bytes(&self) -> u64 {
+        self.staged
+    }
+
+    /// Finish: submit the *aligned* prefix of the final partial buffer
+    /// through the drain worker, return `(suffix_bytes, suffix_offset,
+    /// drain_stats)` — the caller writes the sub-alignment suffix through
+    /// the traditional path (paper §4.1).
+    pub fn finish(mut self) -> Result<(Vec<u8>, u64, DrainStats)> {
+        let align = match &self.current {
+            Some(b) => b.align(),
+            None => crate::io::align::DEFAULT_ALIGN,
+        };
+        let mut suffix = Vec::new();
+        if let Some(buf) = self.current.take() {
+            let filled = buf.len;
+            let aligned = crate::io::align::align_down(filled as u64, align as u64) as usize;
+            suffix.extend_from_slice(&buf.filled()[aligned..]);
+            if aligned > 0 {
+                let offset = self.submit_offset;
+                self.submit_offset += aligned as u64;
+                self.tx
+                    .as_ref()
+                    .unwrap()
+                    .send(Job { buf, offset, len: aligned })
+                    .map_err(|_| Error::Internal("drain worker died".into()))?;
+            } else {
+                self.pool.release(buf);
+            }
+        }
+        let suffix_offset = self.submit_offset;
+        drop(self.tx.take()); // close queue → drain exits after last job
+        let stats = self
+            .drain
+            .take()
+            .unwrap()
+            .join()
+            .map_err(|_| Error::Internal("drain worker panicked".into()))?;
+        self.check_err()?;
+        Ok((suffix, suffix_offset, stats))
+    }
+}
+
+impl Drop for StagedWriter {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.drain.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::engine::scratch_dir;
+    use crate::util::rng::Rng;
+
+    fn run_staged(buffers: usize, buf_size: usize, pieces: &[Vec<u8>]) -> Vec<u8> {
+        let dir = scratch_dir(&format!("staged-{buffers}-{buf_size}")).unwrap();
+        let path = dir.join("out.bin");
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .unwrap();
+        let mut w = StagedWriter::new(file.try_clone().unwrap(), buffers, buf_size, 512);
+        for p in pieces {
+            w.stage(p).unwrap();
+        }
+        let total: usize = pieces.iter().map(|p| p.len()).sum();
+        assert_eq!(w.staged_bytes(), total as u64);
+        let (suffix, suffix_off, _stats) = w.finish().unwrap();
+        // caller-side suffix write
+        file.write_all_at(&suffix, suffix_off).unwrap();
+        file.set_len(total as u64).unwrap();
+        let out = std::fs::read(&path).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        out
+    }
+
+    #[test]
+    fn single_and_double_roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut pieces = Vec::new();
+        for _ in 0..20 {
+            let len = rng.range_usize(1, 3000);
+            let mut p = vec![0u8; len];
+            rng.fill_bytes(&mut p);
+            pieces.push(p);
+        }
+        let expect: Vec<u8> = pieces.concat();
+        for buffers in [1, 2] {
+            let got = run_staged(buffers, 1024, &pieces);
+            assert_eq!(got, expect, "buffers={buffers}");
+        }
+    }
+
+    #[test]
+    fn exact_buffer_multiples() {
+        let data = vec![7u8; 4096];
+        let got = run_staged(2, 1024, &[data.clone()]);
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn tiny_stream_all_suffix() {
+        let data = vec![1u8, 2, 3];
+        let got = run_staged(2, 1024, &[data.clone()]);
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let got = run_staged(1, 512, &[]);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn prop_order_preserved_any_chunking() {
+        crate::prop::forall("staged writer preserves order", 24, |g| {
+            let total = g.usize(0, 6000);
+            let mut data = vec![0u8; total];
+            Rng::new(g.u64(0, u64::MAX)).fill_bytes(&mut data);
+            // random chunking
+            let mut pieces = Vec::new();
+            let mut pos = 0;
+            while pos < total {
+                let n = g.usize(1, (total - pos).min(1500));
+                pieces.push(data[pos..pos + n].to_vec());
+                pos += n;
+            }
+            let buffers = g.usize(1, 2);
+            let got = run_staged(buffers, 512, &pieces);
+            got == data
+        });
+    }
+}

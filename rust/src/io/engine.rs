@@ -1,0 +1,211 @@
+//! Write-engine abstraction: the seam between checkpoint serialization
+//! (which produces an ordered byte stream of serialized tensors) and the
+//! storage backend (buffered vs NVMe-optimized).
+//!
+//! This mirrors the paper's integration trick: `torch.save()` accepts a
+//! file-like object, and FastPersist slots in as a compatible writer so
+//! serialization is unchanged and only the disk writes differ (§5.1).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::io::align::DEFAULT_ALIGN;
+use crate::Result;
+
+/// Which write engine to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Traditional buffered I/O in small chunks — the `torch.save()`
+    /// baseline (§3.1).
+    Buffered,
+    /// NVMe-optimized: aligned direct writes from a single pinned staging
+    /// buffer (stage, then drain, serially — Fig. 5a).
+    DirectSingle,
+    /// NVMe-optimized with double buffering: drain of buffer *k* overlaps
+    /// staging of buffer *k+1* (Fig. 5b).
+    DirectDouble,
+}
+
+impl EngineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Buffered => "buffered",
+            EngineKind::DirectSingle => "direct-single",
+            EngineKind::DirectDouble => "direct-double",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "buffered" | "baseline" | "torch" => Ok(EngineKind::Buffered),
+            "direct-single" | "single" => Ok(EngineKind::DirectSingle),
+            "direct-double" | "double" | "fastpersist" => Ok(EngineKind::DirectDouble),
+            other => crate::config_err!("unknown engine {other:?}"),
+        }
+    }
+}
+
+/// Tuning knobs for the write path.
+#[derive(Debug, Clone)]
+pub struct IoConfig {
+    pub kind: EngineKind,
+    /// Staging ("IO buffer") size — the paper sweeps 2–128 MB (Fig. 7).
+    pub io_buf_size: usize,
+    /// Direct-I/O alignment (offset/length/memory).
+    pub align: usize,
+    /// Baseline chunk size (torch.save-style small buffered writes —
+    /// CPython's pickle framing emits ~64 KiB frames).
+    pub buffered_chunk: usize,
+    /// fsync/fdatasync on finish — durability is the point of the paper's
+    /// no-volatile-snapshot design, so default true for ALL engines (fair
+    /// comparisons).
+    pub sync_on_finish: bool,
+    /// Try O_DIRECT; fall back to aligned pwrite if the fs refuses.
+    pub try_o_direct: bool,
+}
+
+impl Default for IoConfig {
+    fn default() -> Self {
+        IoConfig {
+            kind: EngineKind::DirectDouble,
+            io_buf_size: 32 << 20, // paper Fig. 7 best region for large ckpts
+            align: DEFAULT_ALIGN,
+            buffered_chunk: 64 << 10,
+            sync_on_finish: true,
+            try_o_direct: true,
+        }
+    }
+}
+
+impl IoConfig {
+    pub fn baseline() -> IoConfig {
+        IoConfig { kind: EngineKind::Buffered, ..Default::default() }
+    }
+
+    pub fn fastpersist() -> IoConfig {
+        IoConfig::default()
+    }
+
+    pub fn with_kind(kind: EngineKind) -> IoConfig {
+        IoConfig { kind, ..Default::default() }
+    }
+
+    pub fn with_buf_size(mut self, size: usize) -> IoConfig {
+        self.io_buf_size = size;
+        self
+    }
+
+    /// Microbenchmark mode ("pagecache-as-NVMe"): no fsync, no O_DIRECT.
+    ///
+    /// The container's virtio disk sustains only ~0.4 GB/s and is the
+    /// bottleneck for every path once durability is forced, hiding all
+    /// software-path differences. The paper's single-writer effects live
+    /// in the software path (staging copies, chunk sizes, overlap), so
+    /// the Fig. 7 family measures against the page cache standing in for
+    /// the fast NVMe array. DESIGN.md §3 records this substitution.
+    pub fn microbench(mut self) -> IoConfig {
+        self.sync_on_finish = false;
+        self.try_o_direct = false;
+        self
+    }
+}
+
+/// Statistics from one completed checkpoint-file write.
+#[derive(Debug, Clone, Default)]
+pub struct WriteStats {
+    pub total_bytes: u64,
+    /// Bytes written through the aligned fast path.
+    pub aligned_bytes: u64,
+    /// Bytes written through the traditional suffix path.
+    pub suffix_bytes: u64,
+    /// Number of storage write ops issued.
+    pub write_ops: u64,
+    /// Wall time from sink creation to durable finish.
+    pub elapsed: Duration,
+    /// Whether O_DIRECT was actually engaged.
+    pub o_direct: bool,
+}
+
+impl WriteStats {
+    pub fn gbps(&self) -> f64 {
+        crate::util::bytes::gbps(self.total_bytes, self.elapsed.as_secs_f64())
+    }
+}
+
+/// Byte-stream sink for one checkpoint file. Writes preserve order; the
+/// bytes on disk are exactly the concatenation of all `write` calls.
+pub trait Sink: Send {
+    /// Append bytes to the checkpoint stream.
+    fn write(&mut self, data: &[u8]) -> Result<()>;
+    /// Flush everything, make durable (per config), return stats.
+    fn finish(self: Box<Self>) -> Result<WriteStats>;
+}
+
+/// Factory for sinks. One engine instance owns its buffer pool / worker
+/// threads and is reused across checkpoints (setup cost off the hot
+/// path).
+pub trait WriteEngine: Send + Sync {
+    fn kind(&self) -> EngineKind;
+    /// Open a sink writing to `path`; `expected_size` (if known) lets the
+    /// engine pre-allocate the file.
+    fn create(&self, path: &Path, expected_size: Option<u64>) -> Result<Box<dyn Sink>>;
+}
+
+/// Instantiate the engine described by `cfg`.
+pub fn build_engine(cfg: &IoConfig) -> Box<dyn WriteEngine> {
+    match cfg.kind {
+        EngineKind::Buffered => Box::new(crate::io::sync_engine::BufferedEngine::new(cfg.clone())),
+        EngineKind::DirectSingle | EngineKind::DirectDouble => {
+            Box::new(crate::io::direct_engine::DirectEngine::new(cfg.clone()))
+        }
+    }
+}
+
+/// Convenience: write `data` to `path` with engine `cfg`, return stats.
+pub fn write_file(cfg: &IoConfig, path: &Path, data: &[u8]) -> Result<WriteStats> {
+    let engine = build_engine(cfg);
+    let mut sink = engine.create(path, Some(data.len() as u64))?;
+    sink.write(data)?;
+    sink.finish()
+}
+
+/// Helper used by tests/benches: a scratch directory honoring
+/// FASTPERSIST_SCRATCH (so benchmarks can target a real disk).
+pub fn scratch_dir(tag: &str) -> Result<PathBuf> {
+    let base = std::env::var("FASTPERSIST_SCRATCH")
+        .unwrap_or_else(|_| std::env::temp_dir().display().to_string());
+    let pid = std::process::id();
+    let dir = Path::new(&base).join(format!("fastpersist-{tag}-{pid}"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("fastpersist").unwrap(), EngineKind::DirectDouble);
+        assert_eq!(EngineKind::parse("torch").unwrap(), EngineKind::Buffered);
+        assert_eq!(EngineKind::parse("single").unwrap(), EngineKind::DirectSingle);
+        assert!(EngineKind::parse("x").is_err());
+    }
+
+    #[test]
+    fn stats_gbps() {
+        let s = WriteStats {
+            total_bytes: 2_000_000_000,
+            elapsed: Duration::from_secs(1),
+            ..Default::default()
+        };
+        assert!((s.gbps() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_builders() {
+        assert_eq!(IoConfig::baseline().kind, EngineKind::Buffered);
+        assert_eq!(IoConfig::fastpersist().kind, EngineKind::DirectDouble);
+        assert_eq!(IoConfig::default().with_buf_size(123).io_buf_size, 123);
+    }
+}

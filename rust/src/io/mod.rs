@@ -1,0 +1,32 @@
+//! NVMe-optimized write path (paper §4.1).
+//!
+//! The paper's first technique replaces the traditional buffered I/O
+//! stack (what `torch.save` uses) with an NVMe-aware path:
+//!
+//! * **Aligned direct writes** ([`direct_engine`]): data is written in
+//!   large, alignment-respecting chunks from DMA-able buffers —
+//!   `O_DIRECT` where the filesystem allows, aligned `pwrite` otherwise.
+//! * **Pinned staging buffers** ([`buffer`]): the accelerator→DRAM hop
+//!   lands in page-locked, alignment-guaranteed buffers from a reusable
+//!   pool (no allocation on the hot path).
+//! * **Double buffering** ([`double_buffer`]): two staging buffers let
+//!   the copy into buffer *k+1* overlap the drain of buffer *k* to
+//!   storage, hiding the extra hop the missing GPU↔NVMe peer-DMA forces.
+//! * **Pending-byte aggregation** ([`pending_queue`]): serialized-tensor
+//!   writes of arbitrary sizes are queued and flushed only at alignment
+//!   boundaries, preserving on-disk byte order exactly (§4.1 "data size
+//!   restrictions").
+//! * **Prefix/suffix split** ([`align`]): the largest aligned prefix goes
+//!   through the fast path; the sub-alignment suffix is written with
+//!   traditional I/O into the same file — no padding, no format change.
+
+pub mod align;
+pub mod buffer;
+pub mod direct_engine;
+pub mod double_buffer;
+pub mod engine;
+pub mod pending_queue;
+pub mod sync_engine;
+
+pub use buffer::{AlignedBuf, BufferPool};
+pub use engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};

@@ -1,0 +1,240 @@
+//! `fastpersist` — CLI for the FastPersist reproduction.
+//!
+//! Subcommands:
+//!   repro <exp>   regenerate a paper table/figure (fig1..fig12, table1, all)
+//!   train         run real PJRT training with checkpointing
+//!   resume        resume training from the latest checkpoint
+//!   ckpt-write    one-off checkpoint write microbenchmark
+//!   info          show artifact/model information
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::figures;
+use fastpersist::io::engine::{EngineKind, IoConfig};
+use fastpersist::runtime::artifacts::ArtifactManifest;
+use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
+use fastpersist::util::bytes::human;
+use fastpersist::util::cli::ArgSpec;
+use fastpersist::util::table::Table;
+use fastpersist::{Error, Result};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(Error::Config(msg)) => {
+            eprintln!("{msg}");
+            ExitCode::from(2)
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "fastpersist — FastPersist: accelerating model checkpointing (reproduction)\n\n\
+     usage: fastpersist <command> [options]\n\n\
+     commands:\n\
+       repro <exp> [--fast]   regenerate paper experiments:\n\
+                              fig1 fig2 table1 fig7 fig8 fig9 fig10 fig11 fig12 all\n\
+       train [opts]           real PJRT training with per-iteration checkpointing\n\
+       resume [opts]          resume training from the latest checkpoint\n\
+       ckpt-write [opts]      checkpoint-write microbenchmark on local disk\n\
+       info                   artifact manifest / model zoo summary\n\n\
+     run with `<command> --help` for per-command options\n"
+        .to_string()
+}
+
+fn dispatch(mut args: Vec<String>) -> Result<()> {
+    if args.is_empty() {
+        return Err(Error::Config(usage()));
+    }
+    let cmd = args.remove(0);
+    match cmd.as_str() {
+        "repro" => cmd_repro(args),
+        "train" => cmd_train(args, false),
+        "resume" => cmd_train(args, true),
+        "ckpt-write" => cmd_ckpt_write(args),
+        "info" => cmd_info(),
+        "-h" | "--help" | "help" => Err(Error::Config(usage())),
+        other => Err(Error::Config(format!("unknown command {other:?}\n\n{}", usage()))),
+    }
+}
+
+fn cmd_repro(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("fastpersist repro", "regenerate paper tables/figures")
+        .flag("fast", "smaller sweeps for CI-speed runs");
+    let parsed = spec.parse(args)?;
+    let fast = parsed.has("fast");
+    let which = parsed
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    match which {
+        "fig1" => figures::fig1::run(),
+        "fig2" => figures::fig2::run(),
+        "table1" => figures::table1::run(),
+        "fig7" => figures::fig7::run(fast),
+        "fig8" => figures::fig8::run(),
+        "fig9" => figures::fig9::run(),
+        "fig10" => figures::fig10::run(),
+        "fig11" => figures::fig11::run(),
+        "fig12" => figures::fig12::run(),
+        "all" => figures::run_all(fast),
+        other => Err(Error::Config(format!("unknown experiment {other:?}"))),
+    }
+}
+
+fn train_spec(name: &'static str) -> ArgSpec {
+    ArgSpec::new(name, "real PJRT training with FastPersist checkpointing")
+        .opt("model", "model config (tiny/small/gpt20m/gpt100m)", "gpt20m")
+        .opt("steps", "training iterations", "100")
+        .opt("ckpt-every", "checkpoint every n iterations (0=off)", "1")
+        .opt("ckpt-dir", "checkpoint directory", "ckpts")
+        .opt("mode", "none|baseline|sync|pipelined", "pipelined")
+        .opt("strategy", "rank0|replica|socket|node|fixedN", "replica")
+        .opt("engine", "buffered|single|double", "double")
+        .opt("io-buf", "IO buffer size", "32MiB")
+        .opt("writers", "parallel DP writer threads", "2")
+        .opt("ga", "gradient accumulation steps", "1")
+        .opt("seed", "init/data seed", "0")
+        .opt("keep-last", "checkpoints retained (0=all)", "3")
+        .opt("log-every", "progress print interval", "10")
+}
+
+fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
+    let parsed = train_spec(if resume { "fastpersist resume" } else { "fastpersist train" })
+        .parse(args)?;
+    let manifest = ArtifactManifest::load(&ArtifactManifest::default_dir())?;
+    let mut io = IoConfig::with_kind(EngineKind::parse(parsed.get("engine"))?);
+    io.io_buf_size = parsed.get_size("io-buf")? as usize;
+    let cfg = TrainerConfig {
+        model: parsed.get("model").to_string(),
+        steps: parsed.get_usize("steps")? as u64,
+        ckpt_every: parsed.get_usize("ckpt-every")? as u64,
+        ckpt_dir: PathBuf::from(parsed.get("ckpt-dir")),
+        mode: CkptRunMode::parse(parsed.get("mode"))?,
+        strategy: WriterStrategy::parse(parsed.get("strategy"))?,
+        io,
+        dp_writers: parsed.get_usize("writers")?,
+        grad_accum: parsed.get_usize("ga")? as u64,
+        seed: parsed.get_usize("seed")? as u64,
+        keep_last: parsed.get_usize("keep-last")?,
+        log_every: parsed.get_usize("log-every")? as u64,
+    };
+    let mut trainer = if resume {
+        let t = Trainer::resume(&manifest, cfg)?;
+        println!("resumed at step {}", t.state.step);
+        t
+    } else {
+        Trainer::new(&manifest, cfg)?
+    };
+    println!(
+        "training {} ({} params, ckpt {} per iteration, mode {:?})",
+        trainer.cfg.model,
+        trainer.state.artifact.n_params,
+        human(trainer.state.checkpoint_bytes()),
+        trainer.cfg.mode,
+    );
+    let final_loss = trainer.run()?;
+    let r = &trainer.recorder;
+    println!("\ndone: {} steps, final loss {final_loss:.4}", trainer.state.step);
+    println!(
+        "iter p50 {:>8.1} ms | fb {:>8.1} ms | opt {:>6.1} ms | stall total {:.3} s | ckpts {}",
+        r.summary("iter_s").p50 * 1e3,
+        r.summary("fb_s").p50 * 1e3,
+        r.summary("opt_s").p50 * 1e3,
+        trainer.total_stall(),
+        r.counter("ckpts"),
+    );
+    Ok(())
+}
+
+fn cmd_ckpt_write(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("fastpersist ckpt-write", "checkpoint write microbenchmark")
+        .opt("size", "checkpoint payload size", "256MiB")
+        .opt("engine", "buffered|single|double", "double")
+        .opt("io-buf", "IO buffer size", "32MiB")
+        .opt("writers", "parallel writer threads", "1")
+        .opt("reps", "repetitions (median reported)", "3")
+        .flag("durable", "fsync + O_DIRECT (measures the raw device)");
+    let parsed = spec.parse(args)?;
+    let size = parsed.get_size("size")? as usize;
+    let mut io = IoConfig::with_kind(EngineKind::parse(parsed.get("engine"))?);
+    io.io_buf_size = parsed.get_size("io-buf")? as usize;
+    if !parsed.has("durable") {
+        io = io.microbench();
+    }
+    let writers = parsed.get_usize("writers")?.max(1);
+    let reps = parsed.get_usize("reps")?.max(1);
+
+    use fastpersist::checkpoint::engine::CheckpointEngine;
+    use fastpersist::cluster::topology::RankPlacement;
+    use fastpersist::tensor::{DType, Tensor, TensorStore};
+    let mut store = TensorStore::new();
+    store
+        .push(Tensor::new("payload", DType::U8, vec![size], vec![0x5au8; size]).unwrap())
+        .unwrap();
+    let group: Vec<RankPlacement> = (0..writers)
+        .map(|r| RankPlacement { rank: r, node: 0, socket: r % 2, local_gpu: r })
+        .collect();
+    let engine = CheckpointEngine::new(io, WriterStrategy::AllReplicas);
+    let dir = fastpersist::io::engine::scratch_dir("ckpt-write")?;
+    let mut times = Vec::new();
+    for i in 0..reps {
+        let d = dir.join(format!("rep{i}"));
+        let out = engine.write(&store, Default::default(), &d, &group)?;
+        times.push(out.latency.as_secs_f64());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let t = times[times.len() / 2];
+    println!(
+        "{} via {} x{}: {:.1} ms median, {:.2} GB/s",
+        human(size as u64),
+        engine.io_cfg.kind.name(),
+        writers,
+        t * 1e3,
+        size as f64 / 1e9 / t
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("== model zoo (paper Table 2) ==");
+    let mut t = Table::new(vec!["model", "params", "MP", "GBS", "ckpt size", "max DP"]);
+    for m in fastpersist::model::MODEL_ZOO {
+        t.row(vec![
+            m.name.to_string(),
+            format!("{:.1}B", m.params as f64 / 1e9),
+            m.mp().to_string(),
+            m.gbs.to_string(),
+            human(m.ckpt_bytes),
+            m.max_dp().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    match ArtifactManifest::load(&ArtifactManifest::default_dir()) {
+        Ok(manifest) => {
+            println!("== AOT artifacts ({}) ==", manifest.dir.display());
+            let mut t = Table::new(vec!["config", "params", "padded", "entrypoints"]);
+            for (name, c) in &manifest.configs {
+                t.row(vec![
+                    name.clone(),
+                    c.n_params.to_string(),
+                    c.n_padded.to_string(),
+                    c.entrypoints.keys().cloned().collect::<Vec<_>>().join(","),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        Err(e) => println!("(artifacts not available: {e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Lightweight metrics: named timers/counters and a JSON report writer
+//! used by the training loop, examples, and the `repro` harness.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::Result;
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates named sample series (seconds, bytes, ratios...).
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    series: BTreeMap<String, Vec<f64>>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(value);
+    }
+
+    pub fn record_duration(&mut self, name: &str, d: Duration) {
+        self.record(name, d.as_secs_f64());
+    }
+
+    pub fn count(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn samples(&self, name: &str) -> &[f64] {
+        self.series.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn summary(&self, name: &str) -> Summary {
+        Summary::of(self.samples(name))
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.samples(name).iter().sum()
+    }
+
+    /// Serialize all series summaries + counters for a results file.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Vec::new();
+        for (name, samples) in &self.series {
+            let s = Summary::of(samples);
+            obj.push((
+                name.as_str(),
+                Json::obj(vec![
+                    ("n", Json::from(s.n)),
+                    ("mean", Json::from(s.mean)),
+                    ("p50", Json::from(s.p50)),
+                    ("p95", Json::from(s.p95)),
+                    ("min", Json::from(s.min)),
+                    ("max", Json::from(s.max)),
+                    ("total", Json::from(samples.iter().sum::<f64>())),
+                ]),
+            ));
+        }
+        let counters: Vec<(&str, Json)> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.as_str(), Json::from(v as i64)))
+            .collect();
+        Json::obj(vec![
+            ("series", Json::obj(obj)),
+            ("counters", Json::obj(counters)),
+        ])
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut r = Recorder::new();
+        for v in [1.0, 2.0, 3.0] {
+            r.record("lat", v);
+        }
+        r.count("ckpts", 2);
+        r.count("ckpts", 1);
+        assert_eq!(r.samples("lat").len(), 3);
+        assert_eq!(r.summary("lat").p50, 2.0);
+        assert_eq!(r.total("lat"), 6.0);
+        assert_eq!(r.counter("ckpts"), 3);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut r = Recorder::new();
+        r.record("x", 0.5);
+        r.count("n", 7);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").unwrap().get("n").unwrap().as_i64().unwrap(), 7);
+        let mean = j.get("series").unwrap().get("x").unwrap().get("mean").unwrap();
+        assert_eq!(mean.as_f64().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = crate::io::engine::scratch_dir("metrics").unwrap();
+        let path = dir.join("sub").join("report.json");
+        let mut r = Recorder::new();
+        r.record("a", 1.0);
+        r.write_json(&path).unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.secs() >= 0.002);
+    }
+}

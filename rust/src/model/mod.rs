@@ -1,0 +1,5 @@
+//! Model zoo + analytic iteration-time model for the paper's workloads.
+
+pub mod gpt3;
+
+pub use gpt3::{GptModel, IterBreakdown, MODEL_ZOO};

@@ -1,0 +1,272 @@
+//! `artifacts/manifest.json` — the Python→Rust interchange contract.
+//!
+//! Produced once by `python -m compile.aot` (see `python/compile/aot.py`)
+//! and parsed here; it carries the model configs, flat-parameter layout
+//! (the serialized-tensor metadata table), and the HLO entrypoint
+//! signatures the runtime validates inputs against.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+pub const SUPPORTED_VERSION: i64 = 1;
+
+/// One logical tensor inside the flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Element offset within the flat vector.
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One HLO entrypoint (train_step / eval_loss / pack_fp16 / units).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<(String, DType, Vec<usize>)>,
+    pub outputs: Vec<(String, DType, Vec<usize>)>,
+}
+
+/// One lowered model config.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub n_padded: usize,
+    pub tensors: Vec<TensorEntry>,
+    pub entrypoints: BTreeMap<String, EntrySpec>,
+}
+
+/// Adam hyperparameters baked into the train_step HLO.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHyper {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+/// The whole parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub param_align: usize,
+    pub adam: AdamHyper,
+    pub configs: BTreeMap<String, ModelArtifact>,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<(String, DType, Vec<usize>)>> {
+    v.as_array()?
+        .iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")?
+                .as_array()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok((
+                s.get("name")?.as_str()?.to_string(),
+                DType::parse(s.get("dtype")?.as_str()?)?,
+                shape,
+            ))
+        })
+        .collect()
+}
+
+fn parse_entry(v: &Json) -> Result<EntrySpec> {
+    Ok(EntrySpec {
+        file: v.get("file")?.as_str()?.to_string(),
+        inputs: parse_specs(v.get("inputs")?)?,
+        outputs: parse_specs(v.get("outputs")?)?,
+    })
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Config(format!(
+                "{}: {e} — run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let version = v.get("version")?.as_i64()?;
+        if version != SUPPORTED_VERSION {
+            return Err(Error::Config(format!("manifest version {version} unsupported")));
+        }
+        let adam = v.get("adam")?;
+        let adam = AdamHyper {
+            lr: adam.get("lr")?.as_f64()?,
+            beta1: adam.get("beta1")?.as_f64()?,
+            beta2: adam.get("beta2")?.as_f64()?,
+            eps: adam.get("eps")?.as_f64()?,
+        };
+        let mut configs = BTreeMap::new();
+        for (name, c) in v.get("configs")?.as_object()? {
+            let model = c.get("model")?;
+            let tensors = c
+                .get("tensors")?
+                .as_array()?
+                .iter()
+                .map(|t| {
+                    Ok(TensorEntry {
+                        name: t.get("name")?.as_str()?.to_string(),
+                        shape: t
+                            .get("shape")?
+                            .as_array()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                        offset: t.get("offset")?.as_usize()?,
+                        size: t.get("size")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut entrypoints = BTreeMap::new();
+            for (ep_name, ep) in c.get("entrypoints")?.as_object()? {
+                entrypoints.insert(ep_name.clone(), parse_entry(ep)?);
+            }
+            configs.insert(
+                name.clone(),
+                ModelArtifact {
+                    name: name.clone(),
+                    vocab: model.get("vocab")?.as_usize()?,
+                    d_model: model.get("d_model")?.as_usize()?,
+                    n_layer: model.get("n_layer")?.as_usize()?,
+                    n_head: model.get("n_head")?.as_usize()?,
+                    seq: model.get("seq")?.as_usize()?,
+                    batch: model.get("batch")?.as_usize()?,
+                    n_params: c.get("n_params")?.as_usize()?,
+                    n_padded: c.get("n_padded")?.as_usize()?,
+                    tensors,
+                    entrypoints,
+                },
+            );
+        }
+        let m = ArtifactManifest {
+            dir: dir.to_path_buf(),
+            param_align: v.get("param_align")?.as_usize()?,
+            adam,
+            configs,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Default artifacts directory: $FASTPERSIST_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FASTPERSIST_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelArtifact> {
+        self.configs.get(name).ok_or_else(|| {
+            Error::Config(format!(
+                "model config {name:?} not in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Absolute path of an entrypoint's HLO file.
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (name, c) in &self.configs {
+            if c.n_padded % self.param_align != 0 {
+                return Err(Error::Config(format!("{name}: n_padded not aligned")));
+            }
+            let mut off = 0usize;
+            for t in &c.tensors {
+                if t.offset != off {
+                    return Err(Error::Config(format!(
+                        "{name}/{}: offset {} expected {off}",
+                        t.name, t.offset
+                    )));
+                }
+                let elems: usize = t.shape.iter().product();
+                if elems != t.size {
+                    return Err(Error::Config(format!("{name}/{}: shape/size mismatch", t.name)));
+                }
+                off += t.size;
+            }
+            if off != c.n_params {
+                return Err(Error::Config(format!(
+                    "{name}: tensor table covers {off} of {} params",
+                    c.n_params
+                )));
+            }
+            for ep in ["train_step", "eval_loss", "pack_fp16"] {
+                if !c.entrypoints.contains_key(ep) {
+                    return Err(Error::Config(format!("{name}: missing entrypoint {ep}")));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // repo-root artifacts (tests run from the crate root)
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&artifacts_dir()).unwrap();
+        assert!(m.configs.contains_key("tiny"));
+        let tiny = m.config("tiny").unwrap();
+        assert_eq!(tiny.entrypoints["train_step"].inputs.len(), 5);
+        assert_eq!(tiny.entrypoints["train_step"].outputs.len(), 4);
+        assert!(m.hlo_path(&tiny.entrypoints["train_step"]).exists());
+        assert!((m.adam.lr - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tensor_table_is_contiguous_in_real_manifest() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = ArtifactManifest::load(&artifacts_dir()).unwrap();
+        for c in m.configs.values() {
+            let total: usize = c.tensors.iter().map(|t| t.size).sum();
+            assert_eq!(total, c.n_params, "{}", c.name);
+            assert!(c.n_padded >= c.n_params);
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent-path")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,205 @@
+//! PJRT client wrapper: HLO text → compiled executable → execution.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO **text** is the
+//! interchange format (jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects in proto form; the text parser reassigns
+//! ids). All entrypoints are lowered with `return_tuple=True`, so every
+//! execution result is a tuple literal.
+
+use std::path::Path;
+
+use crate::runtime::artifacts::{ArtifactManifest, EntrySpec};
+use crate::{Error, Result};
+
+/// Owning wrapper around the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Config(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Load an entrypoint from the artifact manifest.
+    pub fn load_entry(&self, manifest: &ArtifactManifest, entry: &EntrySpec) -> Result<Executable> {
+        self.load_hlo(&manifest.hlo_path(entry))
+    }
+}
+
+/// A compiled computation ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    ///
+    /// Inputs are transferred via `buffer_from_host_literal` into
+    /// Rust-owned `PjRtBuffer`s and run through `execute_b`. Do NOT use
+    /// the crate's `execute::<Literal>` here: its C++ shim leaks every
+    /// input device buffer (`buffer.release()` with no matching free),
+    /// ~250 MB/iteration for the gpt20m train step — it OOM-killed a
+    /// 300-step run at 36 GB RSS (EXPERIMENTS.md §Perf #3).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let client = self.exe.client();
+        let buffers = inputs
+            .iter()
+            .map(|l| client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Build a rank-1 f32 literal.
+pub fn lit_f32(values: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(values)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(values).reshape(dims)?)
+}
+
+/// Extract a f32 vector from a literal (converting from F16 if needed).
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    match lit.ty()? {
+        xla::ElementType::F32 => Ok(lit.to_vec::<f32>()?),
+        other => {
+            let conv = lit.convert(xla::ElementType::F32.primitive_type())?;
+            let _ = other;
+            Ok(conv.to_vec::<f32>()?)
+        }
+    }
+}
+
+/// Extract the scalar f32 (e.g. the loss output).
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn fused_adam_unit_hlo_matches_rust_reference() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // Parse the units table from the manifest JSON directly.
+        let text = std::fs::read_to_string(artifacts_dir().join("manifest.json")).unwrap();
+        let manifest = Json::parse(&text).unwrap();
+        let unit = manifest.get("units").unwrap().get("fused_adam_unit").unwrap();
+        let n = unit.get("n").unwrap().as_usize().unwrap();
+        let file = unit.get("file").unwrap().as_str().unwrap();
+
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo(&artifacts_dir().join(file)).unwrap();
+
+        let mut rng = crate::util::rng::Rng::new(3);
+        let theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let m = vec![0f32; n];
+        let v = vec![0f32; n];
+        let out = exe
+            .run(&[
+                lit_f32(&theta),
+                lit_f32(&g),
+                lit_f32(&m),
+                lit_f32(&v),
+                xla::Literal::scalar(1f32),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let theta2 = to_f32_vec(&out[0]).unwrap();
+        // Rust-side Adam reference (step 1, zero moments):
+        // mhat = g, vhat = g^2 → theta - lr * g / (|g| + eps)
+        for i in 0..n {
+            let expect = theta[i] - 1e-3 * g[i] / (g[i].abs() + 1e-8);
+            assert!(
+                (theta2[i] - expect).abs() < 1e-5,
+                "i={i}: {} vs {expect}",
+                theta2[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pack_fp16_hlo_matches_rust_f16() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = ArtifactManifest::load(&artifacts_dir()).unwrap();
+        let tiny = m.config("tiny").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_entry(&m, &tiny.entrypoints["pack_fp16"]).unwrap();
+        let n = tiny.n_padded;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let theta: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let out = exe.run(&[lit_f32(&theta)]).unwrap();
+        let packed = to_f32_vec(&out[0]).unwrap(); // f16 → f32
+        // must equal our Rust f16 codec applied to theta
+        for i in (0..n).step_by(97) {
+            let expect =
+                crate::util::f16::f16_bits_to_f32(crate::util::f16::f32_to_f16_bits(theta[i]));
+            assert_eq!(packed[i], expect, "i={i}");
+        }
+    }
+
+    #[test]
+    fn eval_loss_runs_and_is_near_uniform() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = ArtifactManifest::load(&artifacts_dir()).unwrap();
+        let tiny = m.config("tiny").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_entry(&m, &tiny.entrypoints["eval_loss"]).unwrap();
+        let n = tiny.n_padded;
+        // zero params → logits all equal → loss == ln(vocab)
+        let theta = vec![0f32; n];
+        let toks: Vec<i32> = (0..tiny.batch * (tiny.seq + 1))
+            .map(|i| (i % tiny.vocab) as i32)
+            .collect();
+        let out = exe
+            .run(&[
+                lit_f32(&theta),
+                lit_i32(&toks, &[tiny.batch as i64, (tiny.seq + 1) as i64]).unwrap(),
+            ])
+            .unwrap();
+        let loss = to_f32_scalar(&out[0]).unwrap();
+        let expect = (tiny.vocab as f32).ln();
+        assert!((loss - expect).abs() < 0.05, "loss={loss} expect={expect}");
+    }
+}

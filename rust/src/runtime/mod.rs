@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path. Python never runs here — `make artifacts` is the
+//! only compile-path step.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactManifest, EntrySpec, ModelArtifact, TensorEntry};
+pub use client::{Executable, Runtime};

@@ -1,0 +1,300 @@
+//! On-disk checkpoint container format.
+//!
+//! ```text
+//! offset 0:  magic  "FPCK"                      (4 bytes)
+//!            version u32 LE                     (4 bytes)
+//!            header_len u64 LE                  (8 bytes)
+//!            header JSON (header_len bytes)
+//!            data section (tensor payloads, contiguous, in header order)
+//! ```
+//!
+//! The header JSON carries the tensor metadata table (name/dtype/shape/
+//! offset — the serialized-tensor metadata of §2.1.3), free-form `extra`
+//! training state (step counter, data-iterator cursor, LR schedule), the
+//! data-section length, and a 64-bit digest of the data section for
+//! integrity verification at load.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::TensorMeta;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+pub const MAGIC: [u8; 4] = *b"FPCK";
+pub const VERSION: u32 = 1;
+/// Fixed-size preamble before the header JSON.
+pub const PREAMBLE_LEN: usize = 16;
+
+/// Parsed header of a checkpoint stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FormatHeader {
+    pub tensors: Vec<TensorMeta>,
+    /// Free-form training extras (step, lr, data cursor, ...).
+    pub extra: BTreeMap<String, Json>,
+    pub data_len: u64,
+    pub digest: u64,
+}
+
+impl FormatHeader {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::from(VERSION as i64)),
+            ("tensors", Json::arr(self.tensors.iter().map(|t| t.to_json()))),
+            ("extra", Json::Object(self.extra.clone())),
+            ("data_len", Json::from(self.data_len as i64)),
+            // u64 digest split to stay inside i64-safe JSON integers
+            ("digest_hi", Json::from((self.digest >> 32) as i64)),
+            ("digest_lo", Json::from((self.digest & 0xffff_ffff) as i64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FormatHeader> {
+        let version = v.get("version")?.as_i64()?;
+        if version != VERSION as i64 {
+            return Err(Error::Format(format!("unsupported version {version}")));
+        }
+        let tensors = v
+            .get("tensors")?
+            .as_array()?
+            .iter()
+            .map(TensorMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let extra = v.get("extra")?.as_object()?.clone();
+        let hi = v.get("digest_hi")?.as_i64()? as u64;
+        let lo = v.get("digest_lo")?.as_i64()? as u64;
+        Ok(FormatHeader {
+            tensors,
+            extra,
+            data_len: v.get("data_len")?.as_i64()? as u64,
+            digest: (hi << 32) | (lo & 0xffff_ffff),
+        })
+    }
+
+    /// Encode preamble + header JSON into bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let json = self.to_json().to_string_compact();
+        let mut out = Vec::with_capacity(PREAMBLE_LEN + json.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(json.len() as u64).to_le_bytes());
+        out.extend_from_slice(json.as_bytes());
+        out
+    }
+
+    /// Decode from the start of `bytes`; returns (header, header_bytes).
+    pub fn decode(bytes: &[u8]) -> Result<(FormatHeader, usize)> {
+        if bytes.len() < PREAMBLE_LEN {
+            return Err(Error::Format("truncated preamble".into()));
+        }
+        if bytes[..4] != MAGIC {
+            return Err(Error::Format(format!("bad magic {:?}", &bytes[..4])));
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::Format(format!("unsupported version {version}")));
+        }
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let end = PREAMBLE_LEN
+            .checked_add(hlen)
+            .ok_or_else(|| Error::Format("header length overflow".into()))?;
+        if bytes.len() < end {
+            return Err(Error::Format("truncated header".into()));
+        }
+        let json = std::str::from_utf8(&bytes[PREAMBLE_LEN..end])
+            .map_err(|_| Error::Format("header not utf-8".into()))?;
+        let header = FormatHeader::from_json(&Json::parse(json)?)?;
+        Ok((header, end))
+    }
+}
+
+/// Streaming 64-bit checksum (not crypto; an integrity check against
+/// torn/partial parallel writes). Chunking-invariant: feeding the same
+/// bytes in any split produces the same digest. The aligned interior of
+/// each chunk is processed 8 bytes per step (memory-bound in release).
+#[derive(Debug, Clone)]
+pub struct Checksum64 {
+    h: u64,
+    carry: u64,
+    carry_len: usize,
+}
+
+impl Default for Checksum64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Checksum64 {
+    pub fn new() -> Checksum64 {
+        Checksum64 { h: 0xcbf29ce484222325, carry: 0, carry_len: 0 }
+    }
+
+    #[inline]
+    fn mix(&mut self, word: u64) {
+        const MUL: u64 = 0x9e3779b97f4a7c15;
+        self.h = (self.h ^ word).wrapping_mul(MUL);
+        self.h ^= self.h >> 29;
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        // finish a pending partial word byte-by-byte
+        while self.carry_len > 0 && !data.is_empty() {
+            self.carry |= (data[0] as u64) << (8 * self.carry_len);
+            self.carry_len += 1;
+            data = &data[1..];
+            if self.carry_len == 8 {
+                let word = self.carry;
+                self.carry = 0;
+                self.carry_len = 0;
+                self.mix(word);
+            }
+        }
+        if data.is_empty() {
+            return; // a partial word may still be pending in carry
+        }
+        // here carry is empty: fast path over whole words
+        debug_assert_eq!(self.carry_len, 0);
+        let mut words = data.chunks_exact(8);
+        for w in &mut words {
+            self.mix(u64::from_le_bytes(w.try_into().unwrap()));
+        }
+        // stash the tail
+        for (i, &b) in words.remainder().iter().enumerate() {
+            self.carry |= (b as u64) << (8 * i);
+        }
+        self.carry_len = words.remainder().len();
+    }
+
+    pub fn finalize(mut self) -> u64 {
+        if self.carry_len > 0 {
+            let word = self.carry | ((self.carry_len as u64) << 56);
+            self.mix(word);
+        }
+        self.h
+    }
+}
+
+/// Checksum over an iterator of chunks (chunking-invariant).
+pub fn checksum64(chunks: impl Iterator<Item = impl AsRef<[u8]>>) -> u64 {
+    let mut c = Checksum64::new();
+    for chunk in chunks {
+        c.update(chunk.as_ref());
+    }
+    c.finalize()
+}
+
+/// Checksum over a single contiguous slice (8-bytes-at-a-time fast path).
+pub fn checksum64_slice(data: &[u8]) -> u64 {
+    const MUL: u64 = 0x9e3779b97f4a7c15;
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let word = u64::from_le_bytes(c.try_into().unwrap());
+        h = (h ^ word).wrapping_mul(MUL);
+        h ^= h >> 29;
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut carry = 0u64;
+        for (i, &b) in rem.iter().enumerate() {
+            carry |= (b as u64) << (8 * i);
+        }
+        carry |= (rem.len() as u64) << 56;
+        h = (h ^ carry).wrapping_mul(MUL);
+        h ^= h >> 29;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    fn header() -> FormatHeader {
+        let mut extra = BTreeMap::new();
+        extra.insert("step".to_string(), Json::Int(42));
+        FormatHeader {
+            tensors: vec![
+                TensorMeta { name: "a".into(), dtype: DType::F32, shape: vec![4], offset: 0 },
+                TensorMeta { name: "b".into(), dtype: DType::F16, shape: vec![2, 2], offset: 16 },
+            ],
+            extra,
+            data_len: 24,
+            digest: 0xdead_beef_cafe_f00d,
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let h = header();
+        let enc = h.encode();
+        let (dec, consumed) = FormatHeader::decode(&enc).unwrap();
+        assert_eq!(dec, h);
+        assert_eq!(consumed, enc.len());
+    }
+
+    #[test]
+    fn decode_with_trailing_data_ok() {
+        let mut enc = header().encode();
+        let hdr_len = enc.len();
+        enc.extend_from_slice(&[0u8; 24]);
+        let (_, consumed) = FormatHeader::decode(&enc).unwrap();
+        assert_eq!(consumed, hdr_len);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let h = header();
+        let enc = h.encode();
+        // bad magic
+        let mut bad = enc.clone();
+        bad[0] = b'X';
+        assert!(FormatHeader::decode(&bad).is_err());
+        // bad version
+        let mut bad = enc.clone();
+        bad[4] = 99;
+        assert!(FormatHeader::decode(&bad).is_err());
+        // truncation at every prefix must error, never panic
+        for cut in [0, 3, 15, 17, enc.len() - 1] {
+            assert!(FormatHeader::decode(&enc[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn checksum_chunking_invariant() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_001).collect();
+        let whole = checksum64_slice(&data);
+        let c1 = checksum64(data.chunks(7));
+        let c2 = checksum64(data.chunks(4096));
+        let c3 = checksum64([&data[..1], &data[1..]].into_iter());
+        assert_eq!(whole, c1);
+        assert_eq!(whole, c2);
+        assert_eq!(whole, c3);
+    }
+
+    #[test]
+    fn checksum_detects_changes() {
+        let a = vec![1u8; 1000];
+        let mut b = a.clone();
+        b[999] = 2;
+        assert_ne!(checksum64_slice(&a), checksum64_slice(&b));
+        // length extension with zeros changes it too
+        let mut c = a.clone();
+        c.push(0);
+        assert_ne!(checksum64_slice(&a), checksum64_slice(&c));
+    }
+
+    #[test]
+    fn prop_checksum_split_invariance() {
+        crate::prop::forall("checksum split-invariant", 64, |g| {
+            let len = g.usize(0, 4000);
+            let mut data = vec![0u8; len];
+            crate::util::rng::Rng::new(g.u64(0, u64::MAX)).fill_bytes(&mut data);
+            let split = g.usize(0, len);
+            let whole = checksum64_slice(&data);
+            let parts = checksum64([&data[..split], &data[split..]].into_iter());
+            whole == parts
+        });
+    }
+}

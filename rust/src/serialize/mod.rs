@@ -1,0 +1,17 @@
+//! Checkpoint serialization — the `torch.save()`-compatible layer.
+//!
+//! A checkpoint is a single logical byte stream: a self-describing
+//! header (tensor metadata table + training extras, §2.1.3) followed by
+//! the tensor payloads in declaration order, closed by a digest. The
+//! stream abstraction matters: FastPersist's DP write parallelism
+//! partitions the *serialized stream* at byte granularity (§4.2), so
+//! [`writer::SerializedCheckpoint::write_range`] can emit any byte
+//! subrange without materializing the whole stream.
+
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use format::{checksum64, checksum64_slice, FormatHeader, MAGIC, VERSION};
+pub use reader::read_checkpoint;
+pub use writer::SerializedCheckpoint;

@@ -1,0 +1,121 @@
+//! Checkpoint reader: parse + verify a serialized checkpoint stream and
+//! reconstruct the [`TensorStore`].
+
+use std::path::Path;
+
+use crate::serialize::format::{checksum64_slice, FormatHeader};
+use crate::tensor::{Tensor, TensorMeta, TensorStore};
+use crate::{Error, Result};
+
+/// Parse a full checkpoint stream from memory; verifies the data digest.
+pub fn parse_checkpoint(bytes: &[u8]) -> Result<(TensorStore, FormatHeader)> {
+    let (header, data_start) = FormatHeader::decode(bytes)?;
+    let data = bytes
+        .get(data_start..)
+        .ok_or_else(|| Error::Format("missing data section".into()))?;
+    if data.len() as u64 != header.data_len {
+        return Err(Error::Format(format!(
+            "data section is {} bytes, header says {}",
+            data.len(),
+            header.data_len
+        )));
+    }
+    let digest = checksum64_slice(data);
+    if digest != header.digest {
+        return Err(Error::Format(format!(
+            "digest mismatch: computed {digest:#x}, header {:#x}",
+            header.digest
+        )));
+    }
+    TensorMeta::check_contiguous(&header.tensors)?;
+    let mut store = TensorStore::new();
+    for meta in &header.tensors {
+        let start = meta.offset as usize;
+        let end = start + meta.nbytes() as usize;
+        if end > data.len() {
+            return Err(Error::Format(format!("tensor {} exceeds data section", meta.name)));
+        }
+        store.push(Tensor::new(
+            &meta.name,
+            meta.dtype,
+            meta.shape.clone(),
+            data[start..end].to_vec(),
+        )?)?;
+    }
+    Ok((store, header))
+}
+
+/// Read + parse a checkpoint file.
+pub fn read_checkpoint(path: &Path) -> Result<(TensorStore, FormatHeader)> {
+    let bytes = std::fs::read(path)?;
+    parse_checkpoint(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serialize::writer::SerializedCheckpoint;
+    use crate::tensor::DType;
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn sample_store() -> TensorStore {
+        let mut rng = Rng::new(7);
+        let mut s = TensorStore::new();
+        let mut w = vec![0u8; 4 * 100];
+        rng.fill_bytes(&mut w);
+        s.push(Tensor::new("w", DType::F32, vec![10, 10], w).unwrap()).unwrap();
+        s.push(Tensor::from_i32("step", vec![], &[42]).unwrap()).unwrap();
+        let mut h = vec![0u8; 2 * 33];
+        rng.fill_bytes(&mut h);
+        s.push(Tensor::new("half", DType::F16, vec![33], h).unwrap()).unwrap();
+        s
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let store = sample_store();
+        let mut extra = BTreeMap::new();
+        extra.insert("lr".into(), Json::Float(0.001));
+        let ser = SerializedCheckpoint::new(&store, extra);
+        let (loaded, header) = parse_checkpoint(&ser.to_bytes()).unwrap();
+        assert!(loaded.content_eq(&store));
+        assert_eq!(header.extra["lr"], Json::Float(0.001));
+    }
+
+    #[test]
+    fn detects_payload_corruption() {
+        let store = sample_store();
+        let ser = SerializedCheckpoint::new(&store, BTreeMap::new());
+        let mut bytes = ser.to_bytes();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        match parse_checkpoint(&bytes) {
+            Err(Error::Format(msg)) => assert!(msg.contains("digest"), "{msg}"),
+            other => panic!("expected digest error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let store = sample_store();
+        let ser = SerializedCheckpoint::new(&store, BTreeMap::new());
+        let bytes = ser.to_bytes();
+        for cut in [bytes.len() - 1, bytes.len() - 100, 20] {
+            assert!(parse_checkpoint(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::io::engine::scratch_dir("reader").unwrap();
+        let path = dir.join("ck.fpck");
+        let store = sample_store();
+        let ser = SerializedCheckpoint::new(&store, BTreeMap::new());
+        std::fs::write(&path, ser.to_bytes()).unwrap();
+        let (loaded, _) = read_checkpoint(&path).unwrap();
+        assert!(loaded.content_eq(&store));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

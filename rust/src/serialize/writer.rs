@@ -1,0 +1,210 @@
+//! Serialized-checkpoint view: header + zero-copy payload references.
+//!
+//! `SerializedCheckpoint` is the bridge between a [`TensorStore`]
+//! snapshot and the write engines. It materializes only the header; the
+//! tensor payloads stay as `Arc` references into the snapshot (the
+//! helper thread "does not allocate GPU memory … reads existing
+//! tensors", §4.3). Any byte range of the logical stream can be emitted
+//! — the primitive the byte-granularity DP partitioner builds on.
+
+use std::collections::BTreeMap;
+
+use crate::io::pending_queue::PendingQueue;
+use crate::io::Sink;
+use crate::serialize::format::{checksum64, FormatHeader};
+use crate::tensor::TensorStore;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Coalesce threshold for serializer→sink writes (PendingQueue flush).
+const COALESCE: usize = 1 << 20;
+
+/// An immutable serialized view of one checkpoint.
+pub struct SerializedCheckpoint {
+    header_bytes: Vec<u8>,
+    snapshot: TensorStore,
+    data_len: u64,
+}
+
+impl SerializedCheckpoint {
+    /// Serialize `store` (cheap: snapshots Arcs, encodes header JSON,
+    /// one digest pass over payload bytes).
+    pub fn new(store: &TensorStore, extra: BTreeMap<String, Json>) -> SerializedCheckpoint {
+        let snapshot = store.snapshot();
+        let data_len = snapshot.total_bytes();
+        let digest = checksum64(snapshot.iter().map(|t| t.data.as_slice()));
+        let header = FormatHeader { tensors: snapshot.metas(), extra, data_len, digest };
+        SerializedCheckpoint { header_bytes: header.encode(), snapshot, data_len }
+    }
+
+    /// Total length of the logical stream (header + data).
+    pub fn total_len(&self) -> u64 {
+        self.header_bytes.len() as u64 + self.data_len
+    }
+
+    pub fn header_len(&self) -> u64 {
+        self.header_bytes.len() as u64
+    }
+
+    pub fn data_len(&self) -> u64 {
+        self.data_len
+    }
+
+    /// Emit stream bytes `[start, end)` to `out` in order. Pieces are
+    /// the header slice plus payload slices of overlapping tensors; no
+    /// intermediate stream buffer is built.
+    pub fn emit_range(
+        &self,
+        start: u64,
+        end: u64,
+        out: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        assert!(start <= end && end <= self.total_len(), "bad range");
+        let mut pos = start;
+        // header overlap
+        let hlen = self.header_bytes.len() as u64;
+        if pos < hlen && pos < end {
+            let stop = end.min(hlen);
+            out(&self.header_bytes[pos as usize..stop as usize])?;
+            pos = stop;
+        }
+        if pos >= end {
+            return Ok(());
+        }
+        // payload overlap: walk tensors; offsets are stream-relative
+        let mut toff = hlen;
+        for t in self.snapshot.iter() {
+            let tlen = t.nbytes();
+            let tend = toff + tlen;
+            if tend > pos && toff < end {
+                let s = pos.max(toff) - toff;
+                let e = end.min(tend) - toff;
+                out(&t.data[s as usize..e as usize])?;
+                pos = end.min(tend);
+                if pos >= end {
+                    break;
+                }
+            }
+            toff = tend;
+        }
+        debug_assert_eq!(pos, end, "range not fully emitted");
+        Ok(())
+    }
+
+    /// Write stream bytes `[start, end)` to a sink, coalescing small
+    /// pieces through a pending queue (§4.1's aggregation applied at the
+    /// serializer boundary).
+    pub fn write_range_to(&self, start: u64, end: u64, sink: &mut dyn Sink) -> Result<()> {
+        let mut queue = PendingQueue::new(COALESCE);
+        self.emit_range(start, end, &mut |piece| {
+            queue.append(piece, |block| sink.write(block))
+        })?;
+        queue.drain(|block| sink.write(block))
+    }
+
+    /// Materialize the whole stream (tests / small checkpoints only).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.total_len() as usize);
+        self.emit_range(0, self.total_len(), &mut |p| {
+            out.extend_from_slice(p);
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serialize::format::FormatHeader;
+    use crate::tensor::{DType, Tensor, TensorStore};
+    use crate::util::rng::Rng;
+
+    fn store(seed: u64, sizes: &[usize]) -> TensorStore {
+        let mut rng = Rng::new(seed);
+        let mut s = TensorStore::new();
+        for (i, &n) in sizes.iter().enumerate() {
+            let mut data = vec![0u8; n];
+            rng.fill_bytes(&mut data);
+            s.push(Tensor::new(&format!("t{i}"), DType::U8, vec![n], data).unwrap())
+                .unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn stream_decodes_back() {
+        let s = store(1, &[64, 3, 4096]);
+        let mut extra = BTreeMap::new();
+        extra.insert("step".into(), Json::Int(7));
+        let ser = SerializedCheckpoint::new(&s, extra);
+        let bytes = ser.to_bytes();
+        assert_eq!(bytes.len() as u64, ser.total_len());
+        let (hdr, consumed) = FormatHeader::decode(&bytes).unwrap();
+        assert_eq!(hdr.data_len, 64 + 3 + 4096);
+        assert_eq!(hdr.extra["step"], Json::Int(7));
+        assert_eq!(bytes.len() - consumed, hdr.data_len as usize);
+    }
+
+    #[test]
+    fn range_emission_matches_full_stream() {
+        let s = store(2, &[100, 1, 777, 4096, 13]);
+        let ser = SerializedCheckpoint::new(&s, BTreeMap::new());
+        let full = ser.to_bytes();
+        let total = ser.total_len();
+        for (start, end) in [
+            (0, total),
+            (0, 1),
+            (total - 1, total),
+            (50, 60),
+            (0, ser.header_len()),
+            (ser.header_len(), total),
+            (ser.header_len() + 99, ser.header_len() + 102), // spans t0/t1
+            (7, 7), // empty
+        ] {
+            let mut got = Vec::new();
+            ser.emit_range(start, end, &mut |p| {
+                got.extend_from_slice(p);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(got, full[start as usize..end as usize], "[{start},{end})");
+        }
+    }
+
+    #[test]
+    fn empty_store_serializes() {
+        let ser = SerializedCheckpoint::new(&TensorStore::new(), BTreeMap::new());
+        let bytes = ser.to_bytes();
+        let (hdr, consumed) = FormatHeader::decode(&bytes).unwrap();
+        assert_eq!(hdr.data_len, 0);
+        assert_eq!(consumed as u64, ser.total_len());
+    }
+
+    #[test]
+    fn prop_any_partition_reassembles() {
+        crate::prop::forall("serialized ranges tile the stream", 48, |g| {
+            let ntensors = g.usize(0, 5);
+            let sizes: Vec<usize> = (0..ntensors).map(|_| g.usize(0, 2000)).collect();
+            let s = store(g.u64(0, u64::MAX), &sizes);
+            let ser = SerializedCheckpoint::new(&s, BTreeMap::new());
+            let full = ser.to_bytes();
+            // random cut points
+            let total = ser.total_len();
+            let mut cuts: Vec<u64> = (0..g.usize(0, 6)).map(|_| g.u64(0, total)).collect();
+            cuts.push(0);
+            cuts.push(total);
+            cuts.sort();
+            let mut assembled = Vec::new();
+            for w in cuts.windows(2) {
+                ser.emit_range(w[0], w[1], &mut |p| {
+                    assembled.extend_from_slice(p);
+                    Ok(())
+                })
+                .unwrap();
+            }
+            assembled == full
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Checkpoint-write simulation at cluster scale.
+//!
+//! Couples the real planner/strategy code (the same
+//! [`WriterStrategy::select`] and [`WritePlan::balanced`] that drive
+//! actual disk writes) to the calibrated bandwidth model: every model
+//! slice's DP group selects its writers, every writer gets its byte
+//! partition, and all writers across all slices hit the storage model
+//! simultaneously — the communication-free parallel write of §4.2.
+
+use crate::checkpoint::plan::WritePlan;
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::bandwidth::{simulate_write, SimWrite, WritePath, WriterLoad};
+use crate::cluster::{ClusterSpec, Topology};
+use crate::model::GptModel;
+use crate::Result;
+
+/// Simulated checkpoint write of one model on one cluster.
+#[derive(Debug, Clone)]
+pub struct CkptSim {
+    pub result: SimWrite,
+    /// Writers participating across all slices.
+    pub writers: usize,
+    /// Bytes per writer (max partition).
+    pub max_partition: u64,
+}
+
+/// Simulate checkpointing `model` at data parallelism `dp` with the given
+/// writer strategy and I/O path.
+pub fn simulate_model_checkpoint(
+    spec: &ClusterSpec,
+    model: &GptModel,
+    dp: usize,
+    strategy: WriterStrategy,
+    path: WritePath,
+) -> Result<CkptSim> {
+    let topo = Topology::new(spec.clone(), model.parallelism(dp))?;
+    let slices = topo.slices();
+    // Each slice checkpoints its share of the state (§2.1.1: one file
+    // per slice); shares are near-equal for transformer stacks.
+    let slice_bytes = model.ckpt_bytes / slices as u64;
+    let mut loads: Vec<WriterLoad> = Vec::new();
+    let mut writers = 0usize;
+    let mut max_partition = 0u64;
+    for s in 0..slices {
+        let group = topo.dp_group(s);
+        let selected = strategy.select(&group, spec.sockets_per_node)?;
+        let ranks: Vec<usize> = selected.iter().map(|p| p.rank).collect();
+        let plan = WritePlan::balanced(slice_bytes, &ranks)?;
+        writers += selected.len();
+        max_partition = max_partition.max(plan.max_partition());
+        for (placement, part) in selected.iter().zip(&plan.partitions) {
+            loads.push(WriterLoad::from_placement(placement, part.len()));
+        }
+    }
+    Ok(CkptSim { result: simulate_write(spec, path, &loads), writers, max_partition })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt3::find;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::dgx2(8)
+    }
+
+    #[test]
+    fn fig9a_speedup_range_at_128_gpus() {
+        // Paper Fig. 9(a): checkpoint speedups on 128 GPUs range from
+        // ~28x (gpt3-13b, DP=8) to ~116x (gpt3-0.7b, DP=128).
+        let s = spec();
+        let m07 = find("gpt3-0.7b").unwrap();
+        let m13 = find("gpt3-13b").unwrap();
+        let base07 =
+            simulate_model_checkpoint(&s, m07, 128, WriterStrategy::Rank0, WritePath::Baseline)
+                .unwrap();
+        let fp07 = simulate_model_checkpoint(
+            &s, m07, 128, WriterStrategy::AllReplicas, WritePath::FastPersist,
+        )
+        .unwrap();
+        let speedup07 = base07.result.latency_s / fp07.result.latency_s;
+        assert!(speedup07 > 50.0 && speedup07 < 250.0, "0.7b speedup={speedup07}");
+
+        let base13 =
+            simulate_model_checkpoint(&s, m13, 8, WriterStrategy::Rank0, WritePath::Baseline)
+                .unwrap();
+        let fp13 = simulate_model_checkpoint(
+            &s, m13, 8, WriterStrategy::AllReplicas, WritePath::FastPersist,
+        )
+        .unwrap();
+        let speedup13 = base13.result.latency_s / fp13.result.latency_s;
+        assert!(speedup13 > 10.0 && speedup13 < 60.0, "13b speedup={speedup13}");
+        // smaller model at higher DP enjoys the larger speedup
+        assert!(speedup07 > speedup13);
+    }
+
+    #[test]
+    fn fig9b_throughput_scales_with_dp() {
+        let s = spec();
+        let m = find("gpt3-6.7b").unwrap();
+        let mut last = 0.0;
+        for dp in [2, 4, 8, 16] {
+            let sim = simulate_model_checkpoint(
+                &s, m, dp, WriterStrategy::AllReplicas, WritePath::FastPersist,
+            )
+            .unwrap();
+            assert!(sim.result.agg_gbps > last, "dp={dp}");
+            last = sim.result.agg_gbps;
+        }
+        // peak approaches a large fraction of the 198.4 GB/s cluster peak
+        assert!(last > 0.5 * s.cluster_write_gbps(), "agg={last}");
+    }
+
+    #[test]
+    fn writer_counts_match_strategy() {
+        let s = spec();
+        let m = find("gpt3-13b").unwrap(); // mp=16 → 16 slices
+        let all = simulate_model_checkpoint(
+            &s, m, 8, WriterStrategy::AllReplicas, WritePath::FastPersist,
+        )
+        .unwrap();
+        assert_eq!(all.writers, 16 * 8);
+        let r0 =
+            simulate_model_checkpoint(&s, m, 8, WriterStrategy::Rank0, WritePath::FastPersist)
+                .unwrap();
+        assert_eq!(r0.writers, 16);
+    }
+
+    #[test]
+    fn moe_baseline_is_slow_fig10() {
+        // Paper Fig. 10(b): baseline ~4 GB/s for the MoE model.
+        let s = spec();
+        let m = find("gpt3-1.8b-moe").unwrap();
+        let base =
+            simulate_model_checkpoint(&s, m, 8, WriterStrategy::Rank0, WritePath::Baseline)
+                .unwrap();
+        assert!(base.result.agg_gbps < 8.0, "agg={}", base.result.agg_gbps);
+        let fp = simulate_model_checkpoint(
+            &s, m, 8, WriterStrategy::AllReplicas, WritePath::FastPersist,
+        )
+        .unwrap();
+        let speedup = base.result.latency_s / fp.result.latency_s;
+        assert!(speedup > 15.0, "moe speedup={speedup}");
+    }
+
+    #[test]
+    fn invalid_dp_errors() {
+        let s = ClusterSpec::dgx2(1);
+        let m = find("gpt3-13b").unwrap();
+        assert!(simulate_model_checkpoint(
+            &s, m, 8, WriterStrategy::AllReplicas, WritePath::FastPersist
+        )
+        .is_err()); // 128 ranks > 16 GPUs
+    }
+}

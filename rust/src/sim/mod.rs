@@ -1,0 +1,10 @@
+//! Discrete-event-style training/checkpoint simulator for paper-scale
+//! experiments (the multi-node figures run here; single-writer effects
+//! are measured for real in [`crate::io`]).
+
+pub mod ckpt_sim;
+pub mod project;
+pub mod trainsim;
+
+pub use ckpt_sim::{simulate_model_checkpoint, CkptSim};
+pub use trainsim::{simulate_training, CkptMode, TrainSim};

@@ -1,0 +1,113 @@
+//! Projection to DP degrees beyond the physical cluster (paper §5.7,
+//! Fig. 12): scale the simulated cluster with DP (nodes = world/16) and
+//! compare baseline vs. FastPersist end-to-end iteration time.
+
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::ClusterSpec;
+use crate::model::gpt3::{find, gpt3_13b_full_tp};
+use crate::model::GptModel;
+use crate::sim::trainsim::{simulate_training, CkptMode};
+use crate::Result;
+
+/// One projected data point.
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub model: String,
+    pub dp: usize,
+    pub nodes: usize,
+    pub baseline_iter: f64,
+    pub fastpersist_iter: f64,
+    pub speedup: f64,
+    /// FastPersist checkpoint overhead vs. compute-only training.
+    pub fp_overhead: f64,
+}
+
+/// Project `model` to the given DP degree on a cluster sized to fit.
+pub fn project(model: &GptModel, dp: usize) -> Result<Projection> {
+    let world = dp * model.mp();
+    let nodes = world.div_ceil(16);
+    let spec = ClusterSpec::dgx2(nodes);
+    let strat = WriterStrategy::PerSocket;
+    let base = simulate_training(&spec, model, dp, 1, CkptMode::Baseline)?;
+    let fp = simulate_training(&spec, model, dp, 1, CkptMode::Pipelined(strat))?;
+    Ok(Projection {
+        model: model.name.to_string(),
+        dp,
+        nodes,
+        baseline_iter: base.iter,
+        fastpersist_iter: fp.iter,
+        speedup: base.iter / fp.iter,
+        fp_overhead: fp.slowdown - 1.0,
+    })
+}
+
+/// The paper's Fig. 12 sweep: 6.7B and 13B (TP+PP), and 13B full-TP,
+/// projected to DP ∈ {16, 32, 64, 128}.
+pub fn fig12_sweep() -> Result<Vec<Projection>> {
+    let mut out = Vec::new();
+    let dps = [16usize, 32, 64, 128];
+    for dp in dps {
+        out.push(project(find("gpt3-6.7b").unwrap(), dp)?);
+    }
+    for dp in dps {
+        out.push(project(find("gpt3-13b").unwrap(), dp)?);
+    }
+    let full_tp = gpt3_13b_full_tp();
+    for dp in dps {
+        let mut p = project(&full_tp, dp)?;
+        p.model = "gpt3-13b-fulltp".into();
+        out.push(p);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_grows_with_dp() {
+        // Fig. 12: baseline overhead grows with DP while FastPersist
+        // stays ~flat, so the projected speedup increases.
+        let m = find("gpt3-6.7b").unwrap();
+        let s16 = project(m, 16).unwrap().speedup;
+        let s128 = project(m, 128).unwrap().speedup;
+        assert!(s128 > s16 * 2.0, "s16={s16} s128={s128}");
+    }
+
+    #[test]
+    fn fp_overhead_stays_negligible() {
+        // Paper: FastPersist keeps checkpoint overhead < 2% out to
+        // thousands of GPUs.
+        for p in fig12_sweep().unwrap() {
+            assert!(p.fp_overhead < 0.02, "{} dp={}: {}", p.model, p.dp, p.fp_overhead);
+        }
+    }
+
+    #[test]
+    fn speedups_in_paper_range_at_dp128() {
+        // Paper: up to 10.2x (6.7B), 3.6x (13B), 11.3x (13B full TP).
+        let sweep = fig12_sweep().unwrap();
+        let at = |name: &str| {
+            sweep
+                .iter()
+                .find(|p| p.model == name && p.dp == 128)
+                .unwrap()
+                .speedup
+        };
+        let s67 = at("gpt3-6.7b");
+        let s13 = at("gpt3-13b");
+        let s13ftp = at("gpt3-13b-fulltp");
+        assert!(s67 > 3.0 && s67 < 30.0, "6.7b={s67}");
+        assert!(s13 > 1.5 && s13 < 12.0, "13b={s13}");
+        // full-TP removes the PP bubble → bigger speedup than TP+PP
+        assert!(s13ftp > s13, "fulltp={s13ftp} vs {s13}");
+    }
+
+    #[test]
+    fn nodes_scale_with_world() {
+        let m = find("gpt3-13b").unwrap();
+        let p = project(m, 128).unwrap();
+        assert_eq!(p.nodes, 128 * 16 / 16);
+    }
+}

@@ -1,0 +1,223 @@
+//! End-to-end training simulation with per-iteration checkpointing
+//! (Fig. 4's four timelines).
+//!
+//! Steady-state per-iteration accounting:
+//!
+//! * `None`        — T = F+B + O (no checkpoint).
+//! * `Baseline`    — T = F+B + O + C_base: rank 0 writes synchronously,
+//!   all other ranks stall (Fig. 4a).
+//! * `Sync`        — T = F+B + O + C_fp: NVMe+parallel write, still
+//!   synchronous (Fig. 4b/c).
+//! * `Pipelined`   — C_i overlaps F+B of iteration i+1; the next
+//!   optimizer stalls only for max(0, C_fp − (F+B)) (Fig. 4d).
+//!
+//! Checkpoint latencies come from [`crate::sim::ckpt_sim`]; compute
+//! times from the analytic model in [`crate::model`].
+
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::bandwidth::WritePath;
+use crate::cluster::ClusterSpec;
+use crate::model::GptModel;
+use crate::sim::ckpt_sim::simulate_model_checkpoint;
+use crate::Result;
+
+/// Checkpointing mode for the simulated run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CkptMode {
+    None,
+    /// torch.save: single writer per slice, buffered, synchronous.
+    Baseline,
+    /// FastPersist write path, but synchronous (no pipelining).
+    Sync(WriterStrategy),
+    /// Full FastPersist: parallel writes + pipelining.
+    Pipelined(WriterStrategy),
+}
+
+/// Steady-state per-iteration simulation result.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainSim {
+    /// Forward+backward seconds.
+    pub fb: f64,
+    /// Optimizer seconds.
+    pub opt: f64,
+    /// Checkpoint write latency (0 when mode == None).
+    pub ckpt_latency: f64,
+    /// Per-iteration training stall caused by checkpointing.
+    pub stall: f64,
+    /// Effective iteration seconds.
+    pub iter: f64,
+    /// Slowdown vs. checkpoint-free training (1.0 = free).
+    pub slowdown: f64,
+}
+
+/// Simulate steady-state training of `model` at `dp`/`ga` with
+/// checkpointing every iteration under `mode`.
+pub fn simulate_training(
+    spec: &ClusterSpec,
+    model: &GptModel,
+    dp: usize,
+    ga: u64,
+    mode: CkptMode,
+) -> Result<TrainSim> {
+    let it = model.iter_time(dp, ga);
+    let compute = it.total();
+    let (ckpt_latency, stall) = match mode {
+        CkptMode::None => (0.0, 0.0),
+        CkptMode::Baseline => {
+            let c = simulate_model_checkpoint(
+                spec, model, dp, WriterStrategy::Rank0, WritePath::Baseline,
+            )?
+            .result
+            .latency_s;
+            (c, c)
+        }
+        CkptMode::Sync(strategy) => {
+            let c = simulate_model_checkpoint(spec, model, dp, strategy, WritePath::FastPersist)?
+                .result
+                .latency_s;
+            (c, c)
+        }
+        CkptMode::Pipelined(strategy) => {
+            let c = simulate_model_checkpoint(spec, model, dp, strategy, WritePath::FastPersist)?
+                .result
+                .latency_s;
+            // overlap with next iteration's F+B (§4.3)
+            (c, (c - it.fb).max(0.0))
+        }
+    };
+    let iter = compute + stall;
+    Ok(TrainSim {
+        fb: it.fb,
+        opt: it.opt,
+        ckpt_latency,
+        stall,
+        iter,
+        slowdown: iter / compute,
+    })
+}
+
+/// §5.6.1 GAS-sweep variant: fixed micro-batch `mb`, per-replica batch
+/// mb·ga (compute grows with GAS while the checkpoint stays constant).
+pub fn simulate_training_fixed_micro(
+    spec: &ClusterSpec,
+    model: &GptModel,
+    dp: usize,
+    mb: u64,
+    ga: u64,
+    mode: CkptMode,
+) -> Result<TrainSim> {
+    let fb = model.fb_time_fixed_micro(mb, ga);
+    let opt = model.opt_time();
+    let compute = fb + opt;
+    let (ckpt_latency, stall) = match mode {
+        CkptMode::None => (0.0, 0.0),
+        CkptMode::Baseline => {
+            let c = simulate_model_checkpoint(
+                spec, model, dp, WriterStrategy::Rank0, WritePath::Baseline,
+            )?
+            .result
+            .latency_s;
+            (c, c)
+        }
+        CkptMode::Sync(strategy) => {
+            let c = simulate_model_checkpoint(spec, model, dp, strategy, WritePath::FastPersist)?
+                .result
+                .latency_s;
+            (c, c)
+        }
+        CkptMode::Pipelined(strategy) => {
+            let c = simulate_model_checkpoint(spec, model, dp, strategy, WritePath::FastPersist)?
+                .result
+                .latency_s;
+            (c, (c - fb).max(0.0))
+        }
+    };
+    let iter = compute + stall;
+    Ok(TrainSim { fb, opt, ckpt_latency, stall, iter, slowdown: iter / compute })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt3::find;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::dgx2(8)
+    }
+
+    #[test]
+    fn fig4_ordering_baseline_sync_pipelined() {
+        let s = spec();
+        let m = find("gpt3-2.7b").unwrap();
+        let base = simulate_training(&s, m, 32, 1, CkptMode::Baseline).unwrap();
+        let sync =
+            simulate_training(&s, m, 32, 1, CkptMode::Sync(WriterStrategy::AllReplicas)).unwrap();
+        let pipe =
+            simulate_training(&s, m, 32, 1, CkptMode::Pipelined(WriterStrategy::AllReplicas))
+                .unwrap();
+        let none = simulate_training(&s, m, 32, 1, CkptMode::None).unwrap();
+        assert!(base.iter > sync.iter, "NVMe+parallel must beat baseline");
+        assert!(sync.iter >= pipe.iter, "pipelining must not hurt");
+        assert!(pipe.iter >= none.iter, "checkpointing is never free-er than free");
+    }
+
+    #[test]
+    fn fig11b_dense_models_under_5pct_overhead() {
+        // Paper Fig. 11(b): on 8 nodes, 1.3b–13b models checkpoint every
+        // iteration with < 5% slowdown under full FastPersist.
+        let s = spec();
+        for name in ["gpt3-1.3b", "gpt3-2.7b", "gpt3-6.7b", "gpt3-13b"] {
+            let m = find(name).unwrap();
+            let dp = 128 / m.mp();
+            let sim =
+                simulate_training(&s, m, dp, 8, CkptMode::Pipelined(WriterStrategy::PerSocket))
+                    .unwrap();
+            assert!(sim.slowdown < 1.05, "{name}: slowdown {}", sim.slowdown);
+        }
+    }
+
+    #[test]
+    fn fig11a_pipelining_helps_low_gas() {
+        // Paper Fig. 11(a): gpt3-1.3b DP=1 — pipelining beats sync for
+        // GAS < 64, converging at high GAS where compute dwarfs I/O.
+        let s = ClusterSpec::dgx2(1);
+        let m = find("gpt3-1.3b").unwrap();
+        let strat = WriterStrategy::AllReplicas;
+        let low_sync = simulate_training(&s, m, 1, 4, CkptMode::Sync(strat)).unwrap();
+        let low_pipe = simulate_training(&s, m, 1, 4, CkptMode::Pipelined(strat)).unwrap();
+        assert!(low_pipe.slowdown < low_sync.slowdown);
+        let hi_sync = simulate_training(&s, m, 1, 512, CkptMode::Sync(strat)).unwrap();
+        let hi_pipe = simulate_training(&s, m, 1, 512, CkptMode::Pipelined(strat)).unwrap();
+        // at GAS=512 both are near-free and near-equal
+        assert!(hi_sync.slowdown < 1.1 && hi_pipe.slowdown < 1.1);
+        let gap = (hi_sync.slowdown - hi_pipe.slowdown).abs();
+        assert!(gap < 0.05, "gap={gap}");
+    }
+
+    #[test]
+    fn e2e_speedup_range_fig9c() {
+        // Paper Fig. 9(c): E2E speedups at 128 GPUs from 1.6x (13b) to
+        // 21.8x (0.7b). Check our simulation lands in range and ordering.
+        let s = spec();
+        let m07 = find("gpt3-0.7b").unwrap();
+        let m13 = find("gpt3-13b").unwrap();
+        let strat = WriterStrategy::PerSocket;
+        let su07 = simulate_training(&s, m07, 128, 1, CkptMode::Baseline).unwrap().iter
+            / simulate_training(&s, m07, 128, 1, CkptMode::Pipelined(strat)).unwrap().iter;
+        let su13 = simulate_training(&s, m13, 8, 1, CkptMode::Baseline).unwrap().iter
+            / simulate_training(&s, m13, 8, 1, CkptMode::Pipelined(strat)).unwrap().iter;
+        assert!(su07 > 8.0 && su07 < 60.0, "0.7b e2e speedup={su07}");
+        assert!(su13 > 1.05 && su13 < 3.0, "13b e2e speedup={su13}");
+        assert!(su07 > su13);
+    }
+
+    #[test]
+    fn stall_is_zero_when_fb_covers_write() {
+        let s = spec();
+        let m = find("gpt3-6.7b").unwrap();
+        let sim = simulate_training(&s, m, 16, 16, CkptMode::Pipelined(WriterStrategy::PerSocket))
+            .unwrap();
+        assert_eq!(sim.stall, 0.0, "ckpt {} fb {}", sim.ckpt_latency, sim.fb);
+        assert!((sim.slowdown - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,85 @@
+//! Element dtypes shared by the checkpoint format, the runtime, and the
+//! manifest (which uses the JAX-side short names "f32"/"f16"/"i32").
+
+use crate::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::U8 => 1,
+        }
+    }
+
+    /// Manifest/JAX short name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" | "float32" => Ok(DType::F32),
+            "f16" | "float16" => Ok(DType::F16),
+            "i32" | "int32" => Ok(DType::I32),
+            "u8" | "uint8" => Ok(DType::U8),
+            other => Err(Error::Config(format!("unknown dtype {other:?}"))),
+        }
+    }
+
+    /// Stable on-disk tag for the checkpoint format.
+    pub fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F16 => 1,
+            DType::I32 => 2,
+            DType::U8 => 3,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<DType> {
+        match tag {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::F16),
+            2 => Ok(DType::I32),
+            3 => Ok(DType::U8),
+            other => Err(Error::Format(format!("bad dtype tag {other}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::F16.size(), 2);
+        assert_eq!(DType::I32.size(), 4);
+        assert_eq!(DType::U8.size(), 1);
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for d in [DType::F32, DType::F16, DType::I32, DType::U8] {
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+            assert_eq!(DType::from_tag(d.tag()).unwrap(), d);
+        }
+        assert!(DType::parse("bf16").is_err());
+        assert!(DType::from_tag(9).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Tensor metadata — the serialization-side description of each tensor
+//! (name, dtype, shape, byte span). This is the analogue of the metadata
+//! torch.save attaches to each serialized tensor (§2.1.3 of the paper):
+//! checkpoint creation is a *sequence* of writes of serialized tensors,
+//! each carrying its own header, not one flat blob.
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Byte offset of this tensor's payload within the checkpoint *data
+    /// section* (not counting container header/index).
+    pub offset: u64,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(if self.shape.is_empty() { 1 } else { 0 })
+    }
+
+    pub fn nbytes(&self) -> u64 {
+        (self.elems() * self.dtype.size()) as u64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("dtype", Json::str(self.dtype.name())),
+            ("shape", Json::arr(self.shape.iter().map(|&s| Json::from(s)))),
+            ("offset", Json::from(self.offset as i64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TensorMeta> {
+        let shape = v
+            .get("shape")?
+            .as_array()?
+            .iter()
+            .map(|s| s.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorMeta {
+            name: v.get("name")?.as_str()?.to_string(),
+            dtype: DType::parse(v.get("dtype")?.as_str()?)?,
+            shape,
+            offset: v.get("offset")?.as_i64()? as u64,
+        })
+    }
+
+    /// Validate that a list of metas tile a data section contiguously.
+    pub fn check_contiguous(metas: &[TensorMeta]) -> Result<u64> {
+        let mut off = 0u64;
+        for m in metas {
+            if m.offset != off {
+                return Err(Error::Format(format!(
+                    "tensor {} at offset {} but expected {off}",
+                    m.name, m.offset
+                )));
+            }
+            off += m.nbytes();
+        }
+        Ok(off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(name: &str, shape: &[usize], offset: u64) -> TensorMeta {
+        TensorMeta { name: name.into(), dtype: DType::F32, shape: shape.to_vec(), offset }
+    }
+
+    #[test]
+    fn elems_and_bytes() {
+        assert_eq!(meta("a", &[2, 3], 0).elems(), 6);
+        assert_eq!(meta("a", &[2, 3], 0).nbytes(), 24);
+        // scalar (rank-0) has one element
+        assert_eq!(meta("s", &[], 0).elems(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = TensorMeta { name: "w".into(), dtype: DType::F16, shape: vec![4, 8], offset: 128 };
+        let j = m.to_json();
+        assert_eq!(TensorMeta::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn contiguity_check() {
+        let ok = vec![meta("a", &[2], 0), meta("b", &[3], 8)];
+        assert_eq!(TensorMeta::check_contiguous(&ok).unwrap(), 20);
+        let bad = vec![meta("a", &[2], 0), meta("b", &[3], 12)];
+        assert!(TensorMeta::check_contiguous(&bad).is_err());
+    }
+}

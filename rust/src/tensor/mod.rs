@@ -1,0 +1,10 @@
+//! Host-side tensor representation: the model state the checkpoint
+//! system serializes, and the buffers the PJRT runtime feeds/reads.
+
+pub mod dtype;
+pub mod meta;
+pub mod store;
+
+pub use dtype::DType;
+pub use meta::TensorMeta;
+pub use store::{Tensor, TensorStore};

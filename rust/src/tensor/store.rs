@@ -1,0 +1,265 @@
+//! Named host tensors — the in-memory model state.
+//!
+//! A [`TensorStore`] is the unit the checkpoint engine persists: an
+//! ordered collection of named tensors (parameters, Adam moments, and
+//! training bookkeeping like the step counter and data-iterator cursor —
+//! the paper's "checkpoint state", §2.1.3). Data lives in plain byte
+//! buffers; dtype-typed views are provided for the runtime.
+
+use std::sync::Arc;
+
+use crate::tensor::{DType, TensorMeta};
+use crate::{Error, Result};
+
+/// One named tensor, bytes + metadata. Payload is Arc'd so checkpointing
+/// can hold a zero-copy snapshot reference while training threads move on
+/// (the helper thread "reads existing tensors, does not allocate", §4.3).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Arc<Vec<u8>>,
+}
+
+impl Tensor {
+    pub fn new(name: &str, dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Tensor> {
+        let elems: usize = shape.iter().product::<usize>().max(usize::from(shape.is_empty()));
+        if elems * dtype.size() != data.len() {
+            return Err(Error::Config(format!(
+                "tensor {name}: shape {shape:?} x {} B/elem != {} data bytes",
+                dtype.size(),
+                data.len()
+            )));
+        }
+        Ok(Tensor { name: name.to_string(), dtype, shape, data: Arc::new(data) })
+    }
+
+    pub fn from_f32(name: &str, shape: Vec<usize>, values: &[f32]) -> Result<Tensor> {
+        // Bulk byte view (little-endian hosts; checked in tests). The
+        // element-wise to_le_bytes loop cost ~3 full passes per
+        // checkpoint of the 3 flat optimizer tensors (§Perf).
+        #[cfg(target_endian = "little")]
+        let data = unsafe {
+            std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4).to_vec()
+        };
+        #[cfg(target_endian = "big")]
+        let data = {
+            let mut data = Vec::with_capacity(values.len() * 4);
+            for v in values {
+                data.extend_from_slice(&v.to_le_bytes());
+            }
+            data
+        };
+        Tensor::new(name, DType::F32, shape, data)
+    }
+
+    pub fn from_i32(name: &str, shape: Vec<usize>, values: &[i32]) -> Result<Tensor> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor::new(name, DType::I32, shape, data)
+    }
+
+    pub fn zeros(name: &str, dtype: DType, shape: Vec<usize>) -> Tensor {
+        let elems: usize = shape.iter().product::<usize>().max(usize::from(shape.is_empty()));
+        Tensor {
+            name: name.to_string(),
+            dtype,
+            shape,
+            data: Arc::new(vec![0u8; elems * dtype.size()]),
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(usize::from(self.shape.is_empty()))
+    }
+
+    pub fn nbytes(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    /// f32 view (little-endian host assumed — checked in tests).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::Config(format!("{}: not f32", self.name)));
+        }
+        #[cfg(target_endian = "little")]
+        {
+            // Bulk conversion (resume path handles 3 full-size tensors).
+            let mut out = vec![0f32; self.data.len() / 4];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    self.data.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    self.data.len(),
+                );
+            }
+            Ok(out)
+        }
+        #[cfg(target_endian = "big")]
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::Config(format!("{}: not i32", self.name)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Ordered collection of named tensors. Order defines serialization
+/// layout, so it is part of the checkpoint contract.
+#[derive(Debug, Clone, Default)]
+pub struct TensorStore {
+    tensors: Vec<Tensor>,
+}
+
+impl TensorStore {
+    pub fn new() -> TensorStore {
+        TensorStore::default()
+    }
+
+    pub fn push(&mut self, t: Tensor) -> Result<()> {
+        if self.get(&t.name).is_some() {
+            return Err(Error::Config(format!("duplicate tensor {}", t.name)));
+        }
+        self.tensors.push(t);
+        Ok(())
+    }
+
+    /// Replace an existing tensor's payload (shape/dtype must match).
+    pub fn update(&mut self, name: &str, data: Vec<u8>) -> Result<()> {
+        let t = self
+            .tensors
+            .iter_mut()
+            .find(|t| t.name == name)
+            .ok_or_else(|| Error::Config(format!("no tensor {name}")))?;
+        if data.len() != t.data.len() {
+            return Err(Error::Config(format!(
+                "update {name}: {} bytes != {}",
+                data.len(),
+                t.data.len()
+            )));
+        }
+        t.data = Arc::new(data);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Tensor> {
+        self.tensors.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total payload bytes (the checkpoint's data-section size).
+    pub fn total_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.nbytes()).sum()
+    }
+
+    /// Metadata table with contiguous offsets in store order.
+    pub fn metas(&self) -> Vec<TensorMeta> {
+        let mut out = Vec::with_capacity(self.tensors.len());
+        let mut off = 0u64;
+        for t in &self.tensors {
+            out.push(TensorMeta {
+                name: t.name.clone(),
+                dtype: t.dtype,
+                shape: t.shape.clone(),
+                offset: off,
+            });
+            off += t.nbytes();
+        }
+        out
+    }
+
+    /// Cheap snapshot: clones Arcs, not payloads. This is what the
+    /// pipelined checkpointer captures at optimizer time.
+    pub fn snapshot(&self) -> TensorStore {
+        self.clone()
+    }
+
+    /// Exact content equality (names, shapes, dtypes, bytes).
+    pub fn content_eq(&self, other: &TensorStore) -> bool {
+        self.tensors.len() == other.tensors.len()
+            && self.tensors.iter().zip(other.tensors.iter()).all(|(a, b)| {
+                a.name == b.name
+                    && a.dtype == b.dtype
+                    && a.shape == b.shape
+                    && a.data == b.data
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_size_validation() {
+        assert!(Tensor::new("x", DType::F32, vec![2, 2], vec![0; 16]).is_ok());
+        assert!(Tensor::new("x", DType::F32, vec![2, 2], vec![0; 15]).is_err());
+        assert!(Tensor::new("s", DType::F32, vec![], vec![0; 4]).is_ok()); // scalar
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let t = Tensor::from_f32("x", vec![3], &vals).unwrap();
+        assert_eq!(t.as_f32().unwrap(), vals);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn store_ordering_and_offsets() {
+        let mut s = TensorStore::new();
+        s.push(Tensor::zeros("a", DType::F32, vec![4])).unwrap();
+        s.push(Tensor::zeros("b", DType::F16, vec![8])).unwrap();
+        let metas = s.metas();
+        assert_eq!(metas[0].offset, 0);
+        assert_eq!(metas[1].offset, 16);
+        assert_eq!(s.total_bytes(), 32);
+        assert!(s.push(Tensor::zeros("a", DType::U8, vec![1])).is_err());
+    }
+
+    #[test]
+    fn snapshot_is_isolated_from_updates() {
+        let mut s = TensorStore::new();
+        s.push(Tensor::from_f32("w", vec![2], &[1.0, 2.0]).unwrap()).unwrap();
+        let snap = s.snapshot();
+        s.update("w", vec![0u8; 8]).unwrap();
+        // snapshot still sees the old payload
+        assert_eq!(snap.get("w").unwrap().as_f32().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(s.get("w").unwrap().as_f32().unwrap(), vec![0.0, 0.0]);
+        assert!(!s.content_eq(&snap));
+    }
+
+    #[test]
+    fn update_validates() {
+        let mut s = TensorStore::new();
+        s.push(Tensor::zeros("w", DType::F32, vec![2])).unwrap();
+        assert!(s.update("w", vec![0; 4]).is_err());
+        assert!(s.update("nope", vec![0; 8]).is_err());
+        assert!(s.update("w", vec![1; 8]).is_ok());
+    }
+}

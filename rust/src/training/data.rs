@@ -1,0 +1,101 @@
+//! Synthetic token corpus for the end-to-end training runs.
+//!
+//! Deterministic, cursor-addressable (batch `k` is a pure function of
+//! the seed and `k`), which is what makes the checkpointed `data_cursor`
+//! meaningful: resuming from a checkpoint replays the exact remaining
+//! sample stream.
+//!
+//! The corpus has learnable structure — sequences are noisy copies of a
+//! small template bank, so a GPT can drive the loss well below the
+//! uniform baseline ln(vocab) by memorizing the templates — while the
+//! noise keeps the task non-degenerate.
+
+use crate::util::rng::Rng;
+
+/// Template-bank corpus generator.
+#[derive(Debug, Clone)]
+pub struct SyntheticCorpus {
+    vocab: usize,
+    seq: usize,
+    batch: usize,
+    seed: u64,
+    templates: Vec<Vec<i32>>,
+    /// Per-token probability of random corruption.
+    noise: f64,
+}
+
+impl SyntheticCorpus {
+    pub fn new(vocab: usize, seq: usize, batch: usize, seed: u64) -> SyntheticCorpus {
+        let mut rng = Rng::new(seed ^ 0xc0ffee);
+        let n_templates = 8;
+        let templates = (0..n_templates)
+            .map(|_| {
+                // templates built from a small alphabet subset → strong
+                // token-level regularities to learn
+                let alphabet: Vec<i32> =
+                    (0..16).map(|_| rng.below(vocab as u64) as i32).collect();
+                (0..seq + 1).map(|_| *rng.choose(&alphabet)).collect()
+            })
+            .collect();
+        SyntheticCorpus { vocab, seq, batch, seed, templates, noise: 0.02 }
+    }
+
+    /// Batch `cursor` as a flat row-major [batch, seq+1] i32 buffer.
+    pub fn batch_at(&self, cursor: u64) -> Vec<i32> {
+        let mut rng = Rng::new(self.seed.wrapping_add(cursor.wrapping_mul(0x9e3779b97f4a7c15)));
+        let mut out = Vec::with_capacity(self.batch * (self.seq + 1));
+        for _ in 0..self.batch {
+            let template = &self.templates[rng.below(self.templates.len() as u64) as usize];
+            for &tok in template {
+                if rng.bool(self.noise) {
+                    out.push(rng.below(self.vocab as u64) as i32);
+                } else {
+                    out.push(tok);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.batch, self.seq + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_cursor_addressable() {
+        let c = SyntheticCorpus::new(256, 32, 4, 7);
+        assert_eq!(c.batch_at(5), c.batch_at(5));
+        assert_ne!(c.batch_at(5), c.batch_at(6));
+        // a fresh generator with the same seed agrees (resume semantics)
+        let c2 = SyntheticCorpus::new(256, 32, 4, 7);
+        assert_eq!(c.batch_at(123), c2.batch_at(123));
+    }
+
+    #[test]
+    fn tokens_in_range_and_shape() {
+        let c = SyntheticCorpus::new(256, 32, 4, 1);
+        let b = c.batch_at(0);
+        assert_eq!(b.len(), 4 * 33);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_has_learnable_structure() {
+        // token distribution must be far from uniform (template reuse)
+        let c = SyntheticCorpus::new(256, 32, 4, 2);
+        let mut counts = vec![0usize; 256];
+        for cursor in 0..50 {
+            for &t in &c.batch_at(cursor) {
+                counts[t as usize] += 1;
+            }
+        }
+        let used = counts.iter().filter(|&&n| n > 0).count();
+        // 8 templates × 16-symbol alphabets + noise: well under vocab
+        assert!(used < 200, "used={used}");
+    }
+}

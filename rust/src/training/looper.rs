@@ -1,0 +1,480 @@
+//! The training loop: PJRT-executed GPT training with per-iteration
+//! FastPersist checkpointing.
+//!
+//! Each iteration runs the AOT-compiled `grad_step` (forward+backward)
+//! and `adam_step` (fused-Adam optimizer) HLOs, with the checkpoint
+//! lifecycle of Fig. 3/§4.3 around them:
+//!
+//! ```text
+//! grads, loss = grad_step(θ, batch)      // F+B — overlaps C_{i-1}
+//! wait_previous()                        // O_i ← C_{i-1} dependency
+//! θ,m,v = adam_step(θ, grads, m, v, i)   // O_i
+//! request_checkpoint(state_i)            // C_i (helper thread)
+//! ```
+
+use std::path::PathBuf;
+
+use crate::checkpoint::engine::CheckpointEngine;
+use crate::checkpoint::load::load_checkpoint;
+use crate::checkpoint::pipeline::PipelinedCheckpointer;
+use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::topology::RankPlacement;
+use crate::io::engine::IoConfig;
+use crate::metrics::{Recorder, Timer};
+use crate::runtime::artifacts::ArtifactManifest;
+use crate::runtime::client::{lit_f32, lit_i32, to_f32_scalar, to_f32_vec, Executable, Runtime};
+use crate::training::data::SyntheticCorpus;
+use crate::training::state::TrainState;
+use crate::{Error, Result};
+
+/// Checkpointing mode for a real training run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptRunMode {
+    /// No checkpointing.
+    None,
+    /// torch.save-style: buffered single writer, synchronous.
+    Baseline,
+    /// FastPersist write path, synchronous (no pipelining).
+    Sync,
+    /// Full FastPersist: parallel writers + pipelined with F/B.
+    Pipelined,
+}
+
+impl CkptRunMode {
+    pub fn parse(s: &str) -> Result<CkptRunMode> {
+        match s {
+            "none" => Ok(CkptRunMode::None),
+            "baseline" | "torch" => Ok(CkptRunMode::Baseline),
+            "sync" => Ok(CkptRunMode::Sync),
+            "pipelined" | "fastpersist" => Ok(CkptRunMode::Pipelined),
+            other => crate::config_err!("unknown checkpoint mode {other:?}"),
+        }
+    }
+}
+
+/// Configuration for a training run.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub model: String,
+    pub steps: u64,
+    /// Checkpoint every n iterations (0 = never; 1 = the paper's
+    /// frequent-checkpointing regime).
+    pub ckpt_every: u64,
+    pub ckpt_dir: PathBuf,
+    pub mode: CkptRunMode,
+    pub strategy: WriterStrategy,
+    pub io: IoConfig,
+    /// Simulated DP writer ranks (threads) for parallel writes.
+    pub dp_writers: usize,
+    /// Gradient-accumulation steps per optimizer update (§2.1.2): F+B
+    /// runs `grad_accum` times per iteration, grads are averaged, and
+    /// one Adam step is applied.
+    pub grad_accum: u64,
+    pub seed: u64,
+    /// Keep only the most recent k checkpoints (0 = keep all).
+    pub keep_last: usize,
+    /// Print a progress line every n steps (0 = silent).
+    pub log_every: u64,
+}
+
+impl TrainerConfig {
+    pub fn quick(model: &str, dir: PathBuf) -> TrainerConfig {
+        TrainerConfig {
+            model: model.to_string(),
+            steps: 10,
+            ckpt_every: 1,
+            ckpt_dir: dir,
+            mode: CkptRunMode::Pipelined,
+            strategy: WriterStrategy::AllReplicas,
+            io: IoConfig::fastpersist(),
+            dp_writers: 2,
+            grad_accum: 1,
+            seed: 0,
+            keep_last: 2,
+            log_every: 0,
+        }
+    }
+}
+
+/// The training driver.
+pub struct Trainer {
+    pub cfg: TrainerConfig,
+    pub state: TrainState,
+    pub recorder: Recorder,
+    grad_exe: Executable,
+    adam_exe: Executable,
+    corpus: SyntheticCorpus,
+    group: Vec<RankPlacement>,
+    pipe: Option<PipelinedCheckpointer>,
+}
+
+impl Trainer {
+    /// Build a trainer, initializing fresh state.
+    pub fn new(manifest: &ArtifactManifest, cfg: TrainerConfig) -> Result<Trainer> {
+        let artifact = manifest.config(&cfg.model)?.clone();
+        let state = TrainState::init(&artifact, cfg.seed);
+        Self::with_state(manifest, cfg, state)
+    }
+
+    /// Build a trainer resuming from the latest checkpoint in
+    /// `cfg.ckpt_dir` (error if none found).
+    pub fn resume(manifest: &ArtifactManifest, cfg: TrainerConfig) -> Result<Trainer> {
+        let artifact = manifest.config(&cfg.model)?.clone();
+        let latest = Self::latest_checkpoint(&cfg.ckpt_dir)?
+            .ok_or_else(|| Error::Config(format!(
+                "no checkpoint found under {}",
+                cfg.ckpt_dir.display()
+            )))?;
+        let (store, header, _) = load_checkpoint(&latest, cfg.dp_writers.max(1))?;
+        let state = TrainState::from_store(&artifact, &store, &header.extra)?;
+        Self::with_state(manifest, cfg, state)
+    }
+
+    fn with_state(
+        manifest: &ArtifactManifest,
+        cfg: TrainerConfig,
+        state: TrainState,
+    ) -> Result<Trainer> {
+        let artifact = &state.artifact;
+        let rt = Runtime::cpu()?;
+        let grad_exe = rt.load_entry(manifest, &artifact.entrypoints["grad_step"])?;
+        let adam_exe = rt.load_entry(manifest, &artifact.entrypoints["adam_step"])?;
+        let corpus =
+            SyntheticCorpus::new(artifact.vocab, artifact.seq, artifact.batch, cfg.seed ^ 0xda7a);
+        // Simulated single-node DP group: dp_writers ranks on node 0.
+        let group: Vec<RankPlacement> = (0..cfg.dp_writers.max(1))
+            .map(|r| RankPlacement { rank: r, node: 0, socket: r % 2, local_gpu: r })
+            .collect();
+        let pipe = match cfg.mode {
+            CkptRunMode::Pipelined if cfg.ckpt_every > 0 => {
+                let engine = CheckpointEngine::new(cfg.io.clone(), cfg.strategy);
+                Some(PipelinedCheckpointer::new(engine, group.clone()))
+            }
+            _ => None,
+        };
+        Ok(Trainer {
+            cfg,
+            state,
+            recorder: Recorder::new(),
+            grad_exe,
+            adam_exe,
+            corpus,
+            group,
+            pipe,
+        })
+    }
+
+    /// Newest checkpoint directory (by step number) under `dir`.
+    pub fn latest_checkpoint(dir: &std::path::Path) -> Result<Option<PathBuf>> {
+        if !dir.exists() {
+            return Ok(None);
+        }
+        let mut best: Option<(u64, PathBuf)> = None;
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if let Some(step) = name.strip_prefix("step-").and_then(|s| s.parse::<u64>().ok()) {
+                if path.join(crate::checkpoint::manifest::MANIFEST_FILE).exists()
+                    && best.as_ref().map_or(true, |(b, _)| step > *b)
+                {
+                    best = Some((step, path));
+                }
+            }
+        }
+        Ok(best.map(|(_, p)| p))
+    }
+
+    fn step_dir(&self, step: u64) -> PathBuf {
+        self.cfg.ckpt_dir.join(format!("step-{step:08}"))
+    }
+
+    /// Run `cfg.steps` training iterations; returns final mean loss of
+    /// the last 10 steps.
+    pub fn run(&mut self) -> Result<f64> {
+        for _ in 0..self.cfg.steps {
+            self.train_one_step()?;
+            let step = self.state.step;
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                let losses = self.recorder.samples("loss");
+                let recent = &losses[losses.len().saturating_sub(self.cfg.log_every as usize)..];
+                let mean: f64 = recent.iter().sum::<f64>() / recent.len() as f64;
+                println!(
+                    "step {:>6}  loss {:.4}  iter {:>8.1} ms  stall {:>6.2} ms",
+                    step,
+                    mean,
+                    self.recorder.summary("iter_s").p50 * 1e3,
+                    self.recorder.summary("stall_s").mean * 1e3,
+                );
+            }
+        }
+        // drain the last in-flight checkpoint
+        if let Some(pipe) = self.pipe.as_mut() {
+            pipe.wait_previous()?;
+        }
+        let losses = self.recorder.samples("loss");
+        let tail = &losses[losses.len().saturating_sub(10)..];
+        Ok(tail.iter().sum::<f64>() / tail.len().max(1) as f64)
+    }
+
+    /// One training iteration with the Fig. 3 checkpoint lifecycle.
+    pub fn train_one_step(&mut self) -> Result<f32> {
+        let iter_timer = Timer::start();
+
+        // F+B (× grad_accum micro-batches, §2.1.2) — overlaps any
+        // in-flight checkpoint write (C_{i-1}).
+        let (b, t1) = self.corpus.shape();
+        let ga = self.cfg.grad_accum.max(1);
+        let fb_timer = Timer::start();
+        let mut grads: Vec<f32> = Vec::new();
+        let mut loss = 0f32;
+        for micro in 0..ga {
+            let batch = self.corpus.batch_at(self.state.data_cursor + micro);
+            let out = self.grad_exe.run(&[
+                lit_f32(&self.state.theta),
+                lit_i32(&batch, &[b as i64, t1 as i64])?,
+            ])?;
+            let g = to_f32_vec(&out[0])?;
+            loss += to_f32_scalar(&out[1])?;
+            if grads.is_empty() {
+                grads = g;
+            } else {
+                for (a, x) in grads.iter_mut().zip(&g) {
+                    *a += x;
+                }
+            }
+        }
+        if ga > 1 {
+            let inv = 1.0 / ga as f32;
+            for g in &mut grads {
+                *g *= inv;
+            }
+        }
+        let loss = loss / ga as f32;
+        self.recorder.record("fb_s", fb_timer.secs());
+
+        // Synchronization point: O_i must not run before C_{i-1} is
+        // durable (§4.3).
+        if let Some(pipe) = self.pipe.as_mut() {
+            let stall = Timer::start();
+            pipe.wait_previous()?;
+            self.recorder.record("stall_s", stall.secs());
+        }
+
+        // O_i: fused Adam via the Pallas-lowered HLO.
+        let opt_timer = Timer::start();
+        let next_step = self.state.step + 1;
+        let out = self.adam_exe.run(&[
+            lit_f32(&self.state.theta),
+            lit_f32(&grads),
+            lit_f32(&self.state.m),
+            lit_f32(&self.state.v),
+            lit_f32(&[next_step as f32]),
+        ])?;
+        self.state.theta = to_f32_vec(&out[0])?;
+        self.state.m = to_f32_vec(&out[1])?;
+        self.state.v = to_f32_vec(&out[2])?;
+        self.state.step = next_step;
+        self.state.data_cursor += ga;
+        self.recorder.record("opt_s", opt_timer.secs());
+        self.recorder.record("loss", loss as f64);
+
+        // C_i: checkpoint per mode.
+        if self.cfg.ckpt_every > 0 && next_step % self.cfg.ckpt_every == 0 {
+            let dir = self.step_dir(next_step);
+            let store = self.state.to_store();
+            let extras = self.state.extras();
+            match self.cfg.mode {
+                CkptRunMode::None => {}
+                CkptRunMode::Baseline => {
+                    let ck = Timer::start();
+                    let out = CheckpointEngine::baseline().write(&store, extras, &dir, &self.group)?;
+                    self.recorder.record("stall_s", ck.secs());
+                    self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
+                    self.recorder.count("ckpts", 1);
+                }
+                CkptRunMode::Sync => {
+                    let ck = Timer::start();
+                    let engine = CheckpointEngine::new(self.cfg.io.clone(), self.cfg.strategy);
+                    let out = engine.write(&store, extras, &dir, &self.group)?;
+                    self.recorder.record("stall_s", ck.secs());
+                    self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
+                    self.recorder.count("ckpts", 1);
+                }
+                CkptRunMode::Pipelined => {
+                    let pipe = self.pipe.as_mut().expect("pipelined mode has helper");
+                    pipe.request(&store, extras, dir)?;
+                    self.recorder.count("ckpts", 1);
+                }
+            }
+            self.prune_old(next_step)?;
+        }
+
+        self.recorder.record("iter_s", iter_timer.secs());
+        Ok(loss)
+    }
+
+    /// Delete checkpoints older than keep_last (never the newest).
+    fn prune_old(&self, newest: u64) -> Result<()> {
+        if self.cfg.keep_last == 0 {
+            return Ok(());
+        }
+        let mut steps: Vec<u64> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.cfg.ckpt_dir) {
+            for entry in entries.flatten() {
+                if let Some(s) = entry
+                    .file_name()
+                    .to_str()
+                    .and_then(|n| n.strip_prefix("step-"))
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    steps.push(s);
+                }
+            }
+        }
+        steps.sort_unstable();
+        let cutoff = steps.len().saturating_sub(self.cfg.keep_last);
+        for &s in &steps[..cutoff] {
+            if s != newest {
+                let _ = std::fs::remove_dir_all(self.step_dir(s));
+            }
+        }
+        Ok(())
+    }
+
+    /// Collect per-mode stall totals for reporting.
+    pub fn total_stall(&self) -> f64 {
+        let recorded = self.recorder.total("stall_s");
+        match &self.pipe {
+            Some(p) => recorded.max(p.stall.as_secs_f64()),
+            None => recorded,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<ArtifactManifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ArtifactManifest::load(&dir).ok()
+    }
+
+    fn scratch(tag: &str) -> PathBuf {
+        crate::io::engine::scratch_dir(tag).unwrap()
+    }
+
+    #[test]
+    fn tiny_training_reduces_loss() {
+        let Some(m) = manifest() else { return };
+        let dir = scratch("train-loss");
+        let mut cfg = TrainerConfig::quick("tiny", dir.clone());
+        cfg.steps = 30;
+        cfg.ckpt_every = 0;
+        cfg.mode = CkptRunMode::None;
+        let mut t = Trainer::new(&m, cfg).unwrap();
+        let first = t.train_one_step().unwrap();
+        for _ in 0..29 {
+            t.train_one_step().unwrap();
+        }
+        let last = *t.recorder.samples("loss").last().unwrap();
+        assert!(
+            (last as f32) < first - 0.5,
+            "loss did not decrease: {first} -> {last}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn per_iteration_checkpointing_produces_checkpoints() {
+        let Some(m) = manifest() else { return };
+        let dir = scratch("train-ckpt");
+        let mut cfg = TrainerConfig::quick("tiny", dir.clone());
+        cfg.steps = 5;
+        cfg.keep_last = 0; // keep all
+        let mut t = Trainer::new(&m, cfg).unwrap();
+        t.run().unwrap();
+        for step in 1..=5u64 {
+            let d = dir.join(format!("step-{step:08}"));
+            assert!(d.join("checkpoint.json").exists(), "missing {d:?}");
+        }
+        assert_eq!(t.recorder.counter("ckpts"), 5);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_restores_exact_state_and_stream() {
+        let Some(m) = manifest() else { return };
+        let dir = scratch("train-resume");
+        // train 6 steps with checkpoints
+        let mut cfg = TrainerConfig::quick("tiny", dir.clone());
+        cfg.steps = 6;
+        cfg.keep_last = 0;
+        let mut t1 = Trainer::new(&m, cfg.clone()).unwrap();
+        t1.run().unwrap();
+        let theta_after6 = t1.state.theta.clone();
+        // keep training to 8 for the reference trajectory (no further
+        // checkpoints, so step-6 stays the latest on disk)
+        t1.cfg.steps = 2;
+        t1.cfg.ckpt_every = 0;
+        let mut t_ref = t1;
+        t_ref.run().unwrap();
+
+        // resume from the step-6 checkpoint and train the same 2 steps
+        let mut t2 = Trainer::resume(&m, cfg).unwrap();
+        assert_eq!(t2.state.step, 6);
+        assert_eq!(t2.state.theta, theta_after6);
+        t2.cfg.steps = 2;
+        t2.run().unwrap();
+        assert_eq!(t2.state.step, t_ref.state.step);
+        assert_eq!(t2.state.theta, t_ref.state.theta, "resumed trajectory diverged");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn modes_produce_identical_checkpoint_content() {
+        let Some(m) = manifest() else { return };
+        let base_dir = scratch("train-modes");
+        let mut stores = Vec::new();
+        for (tag, mode) in [
+            ("b", CkptRunMode::Baseline),
+            ("s", CkptRunMode::Sync),
+            ("p", CkptRunMode::Pipelined),
+        ] {
+            let dir = base_dir.join(tag);
+            let mut cfg = TrainerConfig::quick("tiny", dir.clone());
+            cfg.steps = 3;
+            cfg.mode = mode;
+            let mut t = Trainer::new(&m, cfg).unwrap();
+            t.run().unwrap();
+            let latest = Trainer::latest_checkpoint(&dir).unwrap().unwrap();
+            let (store, header, _) =
+                crate::checkpoint::load::load_checkpoint(&latest, 2).unwrap();
+            assert_eq!(header.extra["step"], crate::util::json::Json::Int(3));
+            stores.push(store);
+        }
+        assert!(stores[0].content_eq(&stores[1]), "baseline vs sync differ");
+        assert!(stores[1].content_eq(&stores[2]), "sync vs pipelined differ");
+        std::fs::remove_dir_all(&base_dir).unwrap();
+    }
+
+    #[test]
+    fn keep_last_prunes() {
+        let Some(m) = manifest() else { return };
+        let dir = scratch("train-prune");
+        let mut cfg = TrainerConfig::quick("tiny", dir.clone());
+        cfg.steps = 6;
+        cfg.keep_last = 2;
+        cfg.mode = CkptRunMode::Sync;
+        let mut t = Trainer::new(&m, cfg).unwrap();
+        t.run().unwrap();
+        let dirs: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_str().unwrap_or("").starts_with("step-"))
+            .collect();
+        assert!(dirs.len() <= 3, "pruning failed: {} dirs", dirs.len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

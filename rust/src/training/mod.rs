@@ -1,0 +1,10 @@
+//! Real training: PJRT-executed GPT training loop with FastPersist
+//! checkpointing (the end-to-end proof that all layers compose).
+
+pub mod data;
+pub mod looper;
+pub mod state;
+
+pub use data::SyntheticCorpus;
+pub use looper::{CkptRunMode, Trainer, TrainerConfig};
+pub use state::TrainState;

@@ -1,0 +1,218 @@
+//! Training state: the flat parameter vector + Adam moments + step —
+//! exactly the paper's checkpoint state (§2.1.3).
+//!
+//! The serialized form is mixed-precision, 14 bytes/param:
+//! * per-tensor fp16 model weights (`model.<name>`, 2 B/param) — the
+//!   inference-usable half, packed from the fp32 master copy;
+//! * flat fp32 master copy + Adam m + v (12 B/param);
+//! * training extras (step counter, data cursor) in the stream header.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::artifacts::ModelArtifact;
+use crate::tensor::{DType, Tensor, TensorStore};
+use crate::util::f16::encode_f16;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// Host-resident training state for one model replica.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub artifact: ModelArtifact,
+    /// fp32 master parameters, padded to the Pallas grid (n_padded).
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Completed optimizer steps (1-based for the next step's bias
+    /// correction).
+    pub step: u64,
+    /// Data-iterator cursor (batches consumed) — restored on resume so
+    /// training continues on the exact sample stream.
+    pub data_cursor: u64,
+}
+
+impl TrainState {
+    /// GPT-2-style init (0.02 normals for weights, zeros/ones for
+    /// biases/scales, padding zeroed), seeded and deterministic.
+    pub fn init(artifact: &ModelArtifact, seed: u64) -> TrainState {
+        let n = artifact.n_padded;
+        let mut theta = vec![0f32; n];
+        let mut rng = Rng::new(seed);
+        for t in &artifact.tensors {
+            let scale = if t.name.ends_with(".bias") {
+                0.0
+            } else if t.name.ends_with(".scale") {
+                // LayerNorm scales start at one
+                for slot in &mut theta[t.offset..t.offset + t.size] {
+                    *slot = 1.0;
+                }
+                continue;
+            } else if t.name.ends_with("attn.wo") || t.name.ends_with("ffn.w2") {
+                0.02 / (2.0 * artifact.n_layer as f64).sqrt()
+            } else {
+                0.02
+            };
+            if scale != 0.0 {
+                for slot in &mut theta[t.offset..t.offset + t.size] {
+                    *slot = (rng.normal() * scale) as f32;
+                }
+            }
+        }
+        TrainState {
+            artifact: artifact.clone(),
+            theta,
+            m: vec![0f32; n],
+            v: vec![0f32; n],
+            step: 0,
+            data_cursor: 0,
+        }
+    }
+
+    pub fn n_padded(&self) -> usize {
+        self.artifact.n_padded
+    }
+
+    /// Serialize to the checkpoint [`TensorStore`] (the §2.1.3 state).
+    pub fn to_store(&self) -> TensorStore {
+        let mut store = TensorStore::new();
+        // fp16 model weights, one serialized tensor per logical tensor
+        for t in &self.artifact.tensors {
+            let slice = &self.theta[t.offset..t.offset + t.size];
+            let tensor = Tensor::new(
+                &format!("model.{}", t.name),
+                DType::F16,
+                t.shape.clone(),
+                encode_f16(slice),
+            )
+            .expect("fp16 tensor");
+            store.push(tensor).expect("unique tensor names");
+        }
+        // fp32 optimizer state, flat (padded — the Pallas grid shape)
+        let n = self.n_padded();
+        store
+            .push(Tensor::from_f32("optimizer.master", vec![n], &self.theta).unwrap())
+            .unwrap();
+        store.push(Tensor::from_f32("optimizer.m", vec![n], &self.m).unwrap()).unwrap();
+        store.push(Tensor::from_f32("optimizer.v", vec![n], &self.v).unwrap()).unwrap();
+        store
+    }
+
+    /// Header extras (step counter, data cursor, model name).
+    pub fn extras(&self) -> BTreeMap<String, Json> {
+        let mut extra = BTreeMap::new();
+        extra.insert("step".into(), Json::Int(self.step as i64));
+        extra.insert("data_cursor".into(), Json::Int(self.data_cursor as i64));
+        extra.insert("model".into(), Json::str(&self.artifact.name));
+        extra
+    }
+
+    /// Restore from a loaded checkpoint store + header extras.
+    pub fn from_store(
+        artifact: &ModelArtifact,
+        store: &TensorStore,
+        extra: &BTreeMap<String, Json>,
+    ) -> Result<TrainState> {
+        let n = artifact.n_padded;
+        let get_flat = |name: &str| -> Result<Vec<f32>> {
+            let t = store
+                .get(name)
+                .ok_or_else(|| Error::Format(format!("checkpoint missing {name}")))?;
+            let v = t.as_f32()?;
+            if v.len() != n {
+                return Err(Error::Format(format!(
+                    "{name}: {} elems, model wants {n}",
+                    v.len()
+                )));
+            }
+            Ok(v)
+        };
+        let theta = get_flat("optimizer.master")?;
+        let m = get_flat("optimizer.m")?;
+        let v = get_flat("optimizer.v")?;
+        let step = extra
+            .get("step")
+            .and_then(|j| j.as_i64().ok())
+            .ok_or_else(|| Error::Format("checkpoint missing step".into()))? as u64;
+        let data_cursor = extra
+            .get("data_cursor")
+            .and_then(|j| j.as_i64().ok())
+            .unwrap_or(0) as u64;
+        let name = extra.get("model").and_then(|j| j.as_str().ok().map(String::from));
+        if let Some(name) = name {
+            if name != artifact.name {
+                return Err(Error::Config(format!(
+                    "checkpoint is for model {name:?}, loading as {:?}",
+                    artifact.name
+                )));
+            }
+        }
+        Ok(TrainState { artifact: artifact.clone(), theta, m, v, step, data_cursor })
+    }
+
+    /// Checkpoint-state size in bytes (≈14 B/param, §2.1.3).
+    pub fn checkpoint_bytes(&self) -> u64 {
+        2 * self.artifact.n_params as u64 + 12 * self.artifact.n_padded as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactManifest;
+    use std::path::PathBuf;
+
+    fn tiny() -> Option<ModelArtifact> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ArtifactManifest::load(&dir).ok().map(|m| m.config("tiny").unwrap().clone())
+    }
+
+    #[test]
+    fn init_is_deterministic_and_structured() {
+        let Some(art) = tiny() else { return };
+        let a = TrainState::init(&art, 1);
+        let b = TrainState::init(&art, 1);
+        let c = TrainState::init(&art, 2);
+        assert_eq!(a.theta, b.theta);
+        assert_ne!(a.theta, c.theta);
+        // scales are ones
+        let scale_t = art.tensors.iter().find(|t| t.name.ends_with("ln1.scale")).unwrap();
+        assert!(a.theta[scale_t.offset..scale_t.offset + 4].iter().all(|&x| x == 1.0));
+        // padding is zero
+        assert!(a.theta[art.n_params..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn store_roundtrip_restores_exactly() {
+        let Some(art) = tiny() else { return };
+        let mut s = TrainState::init(&art, 3);
+        s.step = 41;
+        s.data_cursor = 17;
+        s.m[5] = 0.25;
+        s.v[9] = 0.125;
+        let store = s.to_store();
+        let restored = TrainState::from_store(&art, &store, &s.extras()).unwrap();
+        assert_eq!(restored.theta, s.theta);
+        assert_eq!(restored.m, s.m);
+        assert_eq!(restored.v, s.v);
+        assert_eq!(restored.step, 41);
+        assert_eq!(restored.data_cursor, 17);
+    }
+
+    #[test]
+    fn checkpoint_is_14_bytes_per_param() {
+        let Some(art) = tiny() else { return };
+        let s = TrainState::init(&art, 0);
+        assert_eq!(s.to_store().total_bytes(), s.checkpoint_bytes());
+    }
+
+    #[test]
+    fn wrong_model_rejected() {
+        let Some(art) = tiny() else { return };
+        let s = TrainState::init(&art, 0);
+        let store = s.to_store();
+        let mut extras = s.extras();
+        extras.insert("model".into(), Json::str("other-model"));
+        assert!(TrainState::from_store(&art, &store, &extras).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Byte-size formatting/parsing helpers (MiB-based, matching the paper's
+//! GB/sec figures which are decimal-GB per second).
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * 1024;
+pub const GIB: u64 = 1024 * 1024 * 1024;
+
+pub const KB: u64 = 1000;
+pub const MB: u64 = 1000 * 1000;
+pub const GB: u64 = 1000 * 1000 * 1000;
+
+/// Human-readable binary size, e.g. `512.0 MiB`.
+pub fn human(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= GIB {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.1} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.1} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Throughput in decimal GB/s (what the paper reports).
+pub fn gbps(bytes: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / seconds / GB as f64
+}
+
+/// Parse sizes like `16MB`, `4MiB`, `512`, `1.5GB` (case-insensitive).
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| c.is_ascii_alphabetic()).unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let num: f64 = num.trim().parse().ok()?;
+    if num < 0.0 {
+        return None;
+    }
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" => KB,
+        "kib" => KIB,
+        "m" | "mb" => MB,
+        "mib" => MIB,
+        "g" | "gb" => GB,
+        "gib" => GIB,
+        _ => return None,
+    };
+    Some((num * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human(512), "512 B");
+        assert_eq!(human(2048), "2.0 KiB");
+        assert_eq!(human(3 * MIB), "3.0 MiB");
+        assert_eq!(human(5 * GIB + GIB / 2), "5.50 GiB");
+    }
+
+    #[test]
+    fn gbps_math() {
+        assert!((gbps(GB, 1.0) - 1.0).abs() < 1e-12);
+        assert!((gbps(10 * GB, 2.0) - 5.0).abs() < 1e-12);
+        assert_eq!(gbps(GB, 0.0), 0.0);
+    }
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size("16MB"), Some(16 * MB));
+        assert_eq!(parse_size("16MiB"), Some(16 * MIB));
+        assert_eq!(parse_size("1.5gb"), Some(1_500_000_000));
+        assert_eq!(parse_size("4k"), Some(4000));
+        assert_eq!(parse_size("junk"), None);
+        assert_eq!(parse_size("-3MB"), None);
+    }
+}

@@ -1,0 +1,213 @@
+//! Minimal command-line argument parser (no clap offline).
+//!
+//! Supports: positional args, `--flag`, `--key value`, `--key=value`,
+//! and generates usage text from declared options. Each subcommand of the
+//! `fastpersist` binary builds one `ArgSpec`.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Declared option (for usage text + validation).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parser + registry for one (sub)command.
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+/// Parse result: options by name, plus positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        ArgSpec { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("  --{} <v>", o.name)
+            } else {
+                format!("  --{}", o.name)
+            };
+            s.push_str(&format!("{left:<26}{}", o.help));
+            if let Some(d) = o.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Parse raw tokens. Unknown `--options` are errors; `-h/--help`
+    /// yields Error::Config carrying the usage text.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "-h" || tok == "--help" {
+                return Err(Error::Config(self.usage()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| Error::Config(format!(
+                        "unknown option --{key}\n\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| {
+                            Error::Config(format!("--{key} requires a value"))
+                        })?,
+                    };
+                    args.values.insert(key, val);
+                } else {
+                    if inline.is_some() {
+                        return Err(Error::Config(format!("--{key} takes no value")));
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        // Apply defaults; check required.
+        for o in &self.opts {
+            if o.takes_value && !args.values.contains_key(o.name) {
+                match o.default {
+                    Some(d) => {
+                        args.values.insert(o.name.to_string(), d.to_string());
+                    }
+                    None => {
+                        return Err(Error::Config(format!(
+                            "missing required option --{}\n\n{}", o.name, self.usage())));
+                    }
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(String::as_str).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name}: expected integer, got {:?}", self.get(name))))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name}: expected number, got {:?}", self.get(name))))
+    }
+
+    /// Parse a size option like `16MB`.
+    pub fn get_size(&self, name: &str) -> Result<u64> {
+        super::bytes::parse_size(self.get(name))
+            .ok_or_else(|| Error::Config(format!("--{name}: bad size {:?}", self.get(name))))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "a test command")
+            .opt("model", "model name", "tiny")
+            .opt_req("out", "output path")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args> {
+        spec().parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let a = parse(&["--out", "x.json"]).unwrap();
+        assert_eq!(a.get("model"), "tiny");
+        assert_eq!(a.get("out"), "x.json");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse(&["--out=y", "--model=gpt20m", "--verbose", "pos1"]).unwrap();
+        assert_eq!(a.get("model"), "gpt20m");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(parse(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--out", "x", "--bogus"]).is_err());
+    }
+
+    #[test]
+    fn value_parsers() {
+        let s = ArgSpec::new("t", "").opt("n", "", "8").opt("buf", "", "16MB");
+        let a = s.parse(Vec::new()).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 8);
+        assert_eq!(a.get_size("buf").unwrap(), 16_000_000);
+    }
+
+    #[test]
+    fn help_is_config_error_with_usage() {
+        match parse(&["--help"]) {
+            Err(Error::Config(msg)) => assert!(msg.contains("--model")),
+            other => panic!("expected usage error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! IEEE 754 half-precision (binary16) conversion.
+//!
+//! The checkpoint state stores model weights in fp16 (2 bytes/param,
+//! §2.1.3) while the master copy and Adam moments stay fp32. Rust has no
+//! native f16, so the trainer packs/unpacks with these routines; their
+//! equivalence with the Pallas `pack_fp16` kernel is pinned by a runtime
+//! test against the AOT-compiled HLO.
+
+/// Convert f32 → f16 bits (round-to-nearest-even, IEEE semantics).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        let nan = if mant != 0 { 0x0200 | ((mant >> 13) as u16 & 0x03ff) } else { 0 };
+        return sign | 0x7c00 | if mant != 0 && nan & 0x3ff == 0 { 1 } else { nan };
+    }
+    // unbiased exponent
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign; // underflow → signed zero
+        }
+        // add implicit leading 1, shift into subnormal position
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        // round to nearest even
+        let rem = m & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half & 1) == 1) {
+            half + 1
+        } else {
+            half
+        };
+        return sign | rounded as u16;
+    }
+    // normal: round mantissa from 23 to 10 bits, nearest even
+    let half = (mant >> 13) as u16;
+    let rem = mant & 0x1fff;
+    let mut out = sign | ((e as u16) << 10) | half;
+    if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        out = out.wrapping_add(1); // may carry into exponent — correct
+    }
+    out
+}
+
+/// Convert f16 bits → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: normalize
+            let mut e = 127 - 15 - 10;
+            let mut m = m;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03ff;
+            sign | (((e + 10 + 1) as u32) << 23) | (m << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, m) => sign | 0x7f80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode a f32 slice as little-endian f16 bytes.
+pub fn encode_f16(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 2);
+    for &v in values {
+        out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian f16 bytes to f32.
+pub fn decode_f16(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.000061035156] {
+            let h = f32_to_f16_bits(v);
+            assert_eq!(f16_bits_to_f32(h), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // overflow saturates to inf
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e30)), f32::INFINITY);
+        // underflow to zero
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-30)), 0.0);
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0); // max finite
+        assert_eq!(f16_bits_to_f32(0x0001), 5.9604645e-8); // min subnormal
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        for bits in [0x0001u16, 0x0010, 0x03ff, 0x8001] {
+            let f = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(f), bits, "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0009765625 = 1 + 2^-10 exactly representable; halfway cases
+        let exact = f16_bits_to_f32(0x3c01);
+        let halfway_down = (1.0 + exact) / 2.0; // halfway between 0x3c00/0x3c01
+        let h = f32_to_f16_bits(halfway_down);
+        assert_eq!(h, 0x3c00, "ties to even");
+    }
+
+    #[test]
+    fn encode_decode_slices() {
+        let vals = [1.5f32, -0.25, 3.0, 0.0];
+        let bytes = encode_f16(&vals);
+        assert_eq!(bytes.len(), 8);
+        assert_eq!(decode_f16(&bytes), vals);
+    }
+
+    #[test]
+    fn prop_all_f16_bits_roundtrip_through_f32() {
+        // every finite f16 value must roundtrip bit-exactly
+        for bits in 0..=0xffffu16 {
+            let exp = (bits >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan handled above
+            }
+            let f = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(f), bits, "bits={bits:#06x} f={f}");
+        }
+    }
+
+    #[test]
+    fn prop_conversion_error_bounded() {
+        crate::prop::forall("f16 relative error < 2^-10", 256, |g| {
+            let mag = (g.f64_unit() * 8.0 - 4.0) as f32; // exponent range
+            let x = 10f32.powf(mag) * if g.bool() { 1.0 } else { -1.0 };
+            if !x.is_finite() || x.abs() > 65000.0 || x.abs() < 1e-4 {
+                return true;
+            }
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            ((y - x) / x).abs() < 1.0 / 1024.0
+        });
+    }
+}

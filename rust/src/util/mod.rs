@@ -1,0 +1,12 @@
+//! Support substrates built from scratch (the offline environment has no
+//! serde/clap/rand/criterion, so each is a small, tested, purpose-built
+//! implementation).
+
+pub mod bytes;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

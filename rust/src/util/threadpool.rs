@@ -1,0 +1,165 @@
+//! Small fixed-size thread pool.
+//!
+//! Backs the async I/O engine's submission queue (the libaio/io_uring
+//! analogue: submit aligned writes, poll completions) and the parallel
+//! checkpoint writers. No tokio offline; plain threads + channels are
+//! also closer to what the write path wants (blocking pwrite syscalls).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> ThreadPool {
+        assert!(threads > 0, "ThreadPool requires >= 1 thread");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Submit a job; never blocks.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Submit a job returning a value; the returned handle joins on it.
+    pub fn submit<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        self.execute(move || {
+            let _ = tx.send(f());
+        });
+        TaskHandle { rx }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Join handle for a submitted task.
+pub struct TaskHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> TaskHandle<T> {
+    /// Block until the task completes. Panics if the worker panicked.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("task panicked")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Run a closure over each item of `items` on `threads` workers, in
+/// order-preserving fashion; returns the collected outputs.
+pub fn parallel_map<T, U, F>(threads: usize, items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send + 'static,
+    U: Send + 'static,
+    F: Fn(T) -> U + Send + Sync + 'static,
+{
+    let pool = ThreadPool::new(threads.max(1), "pmap");
+    let f = Arc::new(f);
+    let handles: Vec<TaskHandle<U>> = items
+        .into_iter()
+        .map(|item| {
+            let f = Arc::clone(&f);
+            pool.submit(move || f(item))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit(move || c.fetch_add(1, Ordering::SeqCst))
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_returns_values() {
+        let pool = ThreadPool::new(2, "t");
+        let h = pool.submit(|| 6 * 7);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2, "t");
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(4, (0..50).collect::<Vec<i32>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

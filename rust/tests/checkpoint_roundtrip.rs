@@ -1,0 +1,122 @@
+//! Integration: checkpoint write → load roundtrips through the public
+//! API, across engines, strategies, DP degrees, and store shapes.
+
+use std::collections::BTreeMap;
+
+use fastpersist::checkpoint::engine::CheckpointEngine;
+use fastpersist::checkpoint::load::load_checkpoint;
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::cluster::{ClusterSpec, Parallelism, Topology};
+use fastpersist::io::engine::{scratch_dir, EngineKind, IoConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::util::json::Json;
+use fastpersist::util::rng::Rng;
+
+fn random_store(seed: u64, ntensors: usize, max_bytes: usize) -> TensorStore {
+    let mut rng = Rng::new(seed);
+    let mut store = TensorStore::new();
+    for i in 0..ntensors {
+        let n = rng.range_usize(1, max_bytes);
+        let mut data = vec![0u8; n];
+        rng.fill_bytes(&mut data);
+        store
+            .push(Tensor::new(&format!("t{i}"), DType::U8, vec![n], data).unwrap())
+            .unwrap();
+    }
+    store
+}
+
+fn dp_group(dp: usize) -> Vec<fastpersist::cluster::RankPlacement> {
+    Topology::new(ClusterSpec::dgx2(1), Parallelism::dense(dp, 1, 1))
+        .unwrap()
+        .dp_group(0)
+}
+
+#[test]
+fn all_engines_and_strategies_roundtrip() {
+    let dir = scratch_dir("it-roundtrip").unwrap();
+    let store = random_store(1, 9, 200_000);
+    let mut extra = BTreeMap::new();
+    extra.insert("step".into(), Json::Int(9));
+    for kind in [EngineKind::Buffered, EngineKind::DirectSingle, EngineKind::DirectDouble] {
+        for strategy in [
+            WriterStrategy::Rank0,
+            WriterStrategy::AllReplicas,
+            WriterStrategy::PerSocket,
+            WriterStrategy::FixedCount(3),
+        ] {
+            let d = dir.join(format!("{}-{}", kind.name(), strategy.name()));
+            let engine = CheckpointEngine::new(IoConfig::with_kind(kind), strategy);
+            let out = engine.write(&store, extra.clone(), &d, &dp_group(8)).unwrap();
+            assert_eq!(out.manifest.step, 9);
+            let (loaded, header, manifest) = load_checkpoint(&d, 4).unwrap();
+            assert!(loaded.content_eq(&store), "{kind:?}/{strategy:?}");
+            assert_eq!(header.extra["step"], Json::Int(9));
+            assert_eq!(manifest.total_len, out.total_bytes);
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn engines_produce_identical_streams() {
+    // The on-disk logical stream must be byte-identical regardless of
+    // which engine or how many writers produced it (§5.1: only the disk
+    // writes differ, serialization unchanged).
+    let dir = scratch_dir("it-identical").unwrap();
+    let store = random_store(2, 5, 100_000);
+    let mut digests = Vec::new();
+    for (tag, kind, dp) in [
+        ("buf1", EngineKind::Buffered, 1usize),
+        ("dir1", EngineKind::DirectDouble, 1),
+        ("dir8", EngineKind::DirectDouble, 8),
+    ] {
+        let d = dir.join(tag);
+        let engine = CheckpointEngine::new(IoConfig::with_kind(kind), WriterStrategy::AllReplicas);
+        let out = engine.write(&store, BTreeMap::new(), &d, &dp_group(dp)).unwrap();
+        digests.push(out.manifest.digest);
+    }
+    assert!(digests.windows(2).all(|w| w[0] == w[1]), "{digests:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn fuzz_roundtrip_many_shapes() {
+    let dir = scratch_dir("it-fuzz").unwrap();
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed * 7 + 1);
+        let store = random_store(seed, rng.range_usize(0, 6), 50_000);
+        let dp = 1 << rng.range_usize(0, 3);
+        let kind = *rng.choose(&[EngineKind::Buffered, EngineKind::DirectSingle,
+            EngineKind::DirectDouble]);
+        let d = dir.join(format!("f{seed}"));
+        let engine = CheckpointEngine::new(IoConfig::with_kind(kind), WriterStrategy::AllReplicas);
+        engine.write(&store, BTreeMap::new(), &d, &dp_group(dp)).unwrap();
+        let (loaded, _, _) = load_checkpoint(&d, 2).unwrap();
+        assert!(loaded.content_eq(&store), "seed={seed}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn concurrent_checkpoints_do_not_interfere() {
+    // Several checkpoints written concurrently into distinct dirs (the
+    // MoE slice pattern) must all verify.
+    let dir = scratch_dir("it-concurrent").unwrap();
+    std::thread::scope(|scope| {
+        for slice in 0..6u64 {
+            let d = dir.join(format!("slice{slice}"));
+            scope.spawn(move || {
+                let store = random_store(slice + 100, 4, 80_000);
+                let engine = CheckpointEngine::new(
+                    IoConfig::fastpersist().microbench(),
+                    WriterStrategy::AllReplicas,
+                );
+                engine.write(&store, BTreeMap::new(), &d, &dp_group(2)).unwrap();
+                let (loaded, _, _) = load_checkpoint(&d, 2).unwrap();
+                assert!(loaded.content_eq(&store));
+            });
+        }
+    });
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,104 @@
+//! Integration: the full three-layer stack through the public API —
+//! AOT artifacts → PJRT execution → training → pipelined FastPersist
+//! checkpointing → failure → resume.
+//!
+//! Skipped gracefully when `make artifacts` has not been run.
+
+use std::path::PathBuf;
+
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::runtime::artifacts::ArtifactManifest;
+use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactManifest::load(&dir).ok()
+}
+
+fn cfg(model: &str, dir: PathBuf) -> TrainerConfig {
+    TrainerConfig {
+        model: model.into(),
+        steps: 6,
+        ckpt_every: 1,
+        ckpt_dir: dir,
+        mode: CkptRunMode::Pipelined,
+        strategy: WriterStrategy::AllReplicas,
+        io: IoConfig::fastpersist().microbench(),
+        dp_writers: 2,
+        grad_accum: 1,
+        seed: 42,
+        keep_last: 0,
+        log_every: 0,
+    }
+}
+
+#[test]
+fn crash_resume_trajectory_is_exact() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let dir = scratch_dir("fs-crash").unwrap();
+
+    // uninterrupted 6-step reference
+    let mut reference = Trainer::new(&m, cfg("tiny", dir.join("ref"))).unwrap();
+    reference.run().unwrap();
+
+    // victim crashes after 4 steps
+    let mut victim_cfg = cfg("tiny", dir.join("victim"));
+    victim_cfg.steps = 4;
+    let mut victim = Trainer::new(&m, victim_cfg.clone()).unwrap();
+    victim.run().unwrap();
+    drop(victim);
+
+    // resume and finish
+    let mut resume_cfg = victim_cfg;
+    resume_cfg.steps = 2;
+    let mut resumed = Trainer::resume(&m, resume_cfg).unwrap();
+    assert_eq!(resumed.state.step, 4);
+    resumed.run().unwrap();
+
+    assert_eq!(resumed.state.step, reference.state.step);
+    assert_eq!(resumed.state.theta, reference.state.theta);
+    assert_eq!(resumed.state.m, reference.state.m);
+    assert_eq!(resumed.state.v, reference.state.v);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn gradient_accumulation_preserves_resume_semantics() {
+    let Some(m) = manifest() else { return };
+    let dir = scratch_dir("fs-ga").unwrap();
+    let mut c = cfg("tiny", dir.join("ga"));
+    c.grad_accum = 3;
+    c.steps = 4;
+    let mut t1 = Trainer::new(&m, c.clone()).unwrap();
+    t1.run().unwrap();
+    assert_eq!(t1.state.data_cursor, 12); // 4 steps x 3 micro-batches
+
+    let mut c2 = c;
+    c2.steps = 2;
+    let mut t2 = Trainer::resume(&m, c2).unwrap();
+    assert_eq!(t2.state.data_cursor, 12);
+    t2.run().unwrap();
+    assert_eq!(t2.state.step, 6);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn ga_smooths_but_does_not_change_scale_of_loss() {
+    let Some(m) = manifest() else { return };
+    let dir = scratch_dir("fs-galoss").unwrap();
+    let mut c = cfg("tiny", dir.join("x"));
+    c.ckpt_every = 0;
+    c.mode = CkptRunMode::None;
+    c.steps = 3;
+    c.grad_accum = 4;
+    let mut t = Trainer::new(&m, c).unwrap();
+    t.run().unwrap();
+    let losses = t.recorder.samples("loss");
+    // near ln(vocab)=5.55 at init for tiny (vocab=256)
+    assert!((losses[0] - (256f64).ln()).abs() < 0.7, "{losses:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

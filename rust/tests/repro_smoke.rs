@@ -1,0 +1,28 @@
+//! Integration: every paper experiment regenerates end-to-end and
+//! produces a parseable result file.
+
+use fastpersist::figures;
+use fastpersist::util::json::Json;
+
+#[test]
+fn all_experiments_regenerate() {
+    let dir = fastpersist::io::engine::scratch_dir("repro-smoke").unwrap();
+    std::env::set_var("FASTPERSIST_RESULTS", &dir);
+    figures::run_all(true).unwrap();
+    for name in
+        ["fig1", "fig2", "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12"]
+    {
+        let path = dir.join(format!("{name}.json"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let v = Json::parse(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let nonempty = match &v {
+            Json::Array(a) => !a.is_empty(),
+            Json::Object(o) => !o.is_empty(),
+            _ => false,
+        };
+        assert!(nonempty, "{name} result is empty");
+    }
+    std::env::remove_var("FASTPERSIST_RESULTS");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
