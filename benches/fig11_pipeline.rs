@@ -26,6 +26,7 @@ fn run_mode(
         mode,
         strategy: WriterStrategy::AllReplicas,
         io: IoConfig::fastpersist().microbench(),
+        devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,
         grad_accum: ga,
         seed: 0,

@@ -4,12 +4,26 @@
 //! direct double-buffer) over checkpoint and IO-buffer sizes, in
 //! pagecache-as-NVMe mode (see `figures::fig7` for the substrate note).
 //!
+//! Each configuration runs through a persistent [`IoRuntime`]
+//! constructed once *outside* the timed region, so iterations measure
+//! the steady-state write path (recycled staging buffers, persistent
+//! writer/drain threads) — the regime the paper's Fig. 7 sweeps.
+//!
 //!     cargo bench --bench fig7_io_buffer
 //!     FASTPERSIST_BENCH_FAST=1 cargo bench ...   (CI-speed)
+//!
+//! Emits `BENCH_fig7.json` (benchkit JSON) for trajectory tracking.
 
-use fastpersist::benchkit::BenchGroup;
-use fastpersist::io::engine::{write_file, EngineKind, IoConfig};
+use std::sync::Arc;
+
+use fastpersist::benchkit::{write_bench_json, BenchGroup};
+use fastpersist::io::engine::{EngineKind, IoConfig};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig, WriteJob};
 use fastpersist::util::bytes::MB;
+
+fn runtime_for(cfg: IoConfig) -> IoRuntime {
+    IoRuntime::new(IoRuntimeConfig { io: cfg, ..IoRuntimeConfig::default() })
+}
 
 fn main() {
     let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
@@ -17,29 +31,41 @@ fn main() {
     let ckpt_sizes: &[u64] = if fast { &[16, 128] } else { &[16, 64, 256] };
     let buf_sizes: &[u64] = if fast { &[8] } else { &[2, 8, 32] };
 
+    let mut groups = Vec::new();
     for &ck in ckpt_sizes {
-        let data = vec![0x55u8; (ck * MB) as usize];
+        let data = Arc::new(vec![0x55u8; (ck * MB) as usize]);
         let mut group = BenchGroup::start(&format!("fig7: {ck} MB checkpoint"));
         let path = dir.join("bench.bin");
+        let baseline = runtime_for(IoConfig::baseline().microbench());
         group.bench_bytes("baseline buffered 64KB chunks", data.len() as u64, || {
-            write_file(&IoConfig::baseline().microbench(), &path, &data).unwrap();
+            baseline
+                .submit(WriteJob::bytes(Arc::clone(&data), path.clone()))
+                .wait()
+                .unwrap();
         });
         for &buf in buf_sizes {
             for (name, kind) in
                 [("single", EngineKind::DirectSingle), ("double", EngineKind::DirectDouble)]
             {
-                let cfg = IoConfig::with_kind(kind)
-                    .with_buf_size((buf * MB) as usize)
-                    .microbench();
+                let rt = runtime_for(
+                    IoConfig::with_kind(kind)
+                        .with_buf_size((buf * MB) as usize)
+                        .microbench(),
+                );
                 group.bench_bytes(
                     &format!("direct-{name} io_buf={buf}MB"),
                     data.len() as u64,
                     || {
-                        write_file(&cfg, &path, &data).unwrap();
+                        rt.submit(WriteJob::bytes(Arc::clone(&data), path.clone()))
+                            .wait()
+                            .unwrap();
                     },
                 );
             }
         }
+        groups.push(group);
     }
+    let refs: Vec<&BenchGroup> = groups.iter().collect();
+    let _ = write_bench_json("fig7", &refs);
     let _ = std::fs::remove_dir_all(&dir);
 }

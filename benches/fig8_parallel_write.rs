@@ -3,15 +3,25 @@
 //! Part 1 (real): the CheckpointEngine writing one store with 1/2/4
 //! parallel writer threads on local disk (single-vCPU container: this
 //! measures protocol overhead, not device parallelism).
-//! Part 2 (simulated): the paper-scale Replica-vs-Socket sweep.
+//! Part 2 (real): device fan-out — the same store at a fixed writer
+//! count striped across 1/2/4 `DeviceMap` mount points (simulated SSDs;
+//! on one physical disk this measures the routing/striping overhead,
+//! on real multi-SSD hosts point FASTPERSIST_SCRATCH at one mount and
+//! the device roots at the others).
+//! Part 3 (simulated): the paper-scale Replica-vs-Socket sweep.
+//!
+//! Emits `BENCH_fig8.json` (benchkit JSON) for trajectory tracking.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use fastpersist::benchkit::BenchGroup;
+use fastpersist::benchkit::{write_bench_json, BenchGroup};
 use fastpersist::checkpoint::engine::CheckpointEngine;
 use fastpersist::checkpoint::strategy::WriterStrategy;
 use fastpersist::cluster::topology::RankPlacement;
+use fastpersist::io::device::DeviceMap;
 use fastpersist::io::engine::IoConfig;
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
 use fastpersist::tensor::{DType, Tensor, TensorStore};
 
 fn group_of(n: usize) -> Vec<RankPlacement> {
@@ -30,19 +40,54 @@ fn main() {
         .push(Tensor::new("payload", DType::U8, vec![size], vec![0xa5u8; size]).unwrap())
         .unwrap();
 
-    let mut group = BenchGroup::start(&format!(
+    // Part 1: writer-count sweep. ONE persistent runtime serves every
+    // configuration — engines are constructed outside the timed region
+    // and staging buffers are recycled across all iterations.
+    let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        ..IoRuntimeConfig::default()
+    }));
+    let mut writers_group = BenchGroup::start(&format!(
         "fig8: parallel checkpoint write ({} MiB store, real disk)",
         size >> 20
     ));
     for writers in [1usize, 2, 4] {
         let engine =
-            CheckpointEngine::new(IoConfig::fastpersist().microbench(), WriterStrategy::AllReplicas);
+            CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas);
         let g = group_of(writers);
         let d = dir.join(format!("w{writers}"));
-        group.bench_bytes(&format!("{writers} writers"), size as u64, || {
+        writers_group.bench_bytes(&format!("{writers} writers"), size as u64, || {
             engine.write(&store, BTreeMap::new(), &d, &g).unwrap();
         });
     }
+    let allocs = runtime.staging().allocations();
+    println!(
+        "  staging pool: {} buffers allocated total, {} checkouts (reuse across all runs)",
+        allocs,
+        runtime.staging().acquires()
+    );
+
+    // Part 2: device fan-out at a fixed writer count.
+    let mut devices_group = BenchGroup::start(&format!(
+        "fig8: device fan-out ({} MiB store, 4 writers, simulated SSD roots)",
+        size >> 20
+    ));
+    for ndev in [1usize, 2, 4] {
+        let devmap = DeviceMap::simulated(ndev, &dir.join(format!("ssds{ndev}"))).unwrap();
+        let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist().microbench(),
+            devices: devmap,
+            ..IoRuntimeConfig::default()
+        }));
+        let engine = CheckpointEngine::with_runtime(rt, WriterStrategy::AllReplicas);
+        let g = group_of(4);
+        let d = dir.join(format!("dev{ndev}"));
+        devices_group.bench_bytes(&format!("{ndev} devices"), size as u64, || {
+            engine.write(&store, BTreeMap::new(), &d, &g).unwrap();
+        });
+    }
+
+    let _ = write_bench_json("fig8", &[&writers_group, &devices_group]);
 
     println!("\nfig8 paper-scale simulation:");
     fastpersist::figures::fig8::run().unwrap();

@@ -29,6 +29,7 @@ fn main() -> fastpersist::Result<()> {
         mode: CkptRunMode::Pipelined,
         strategy: WriterStrategy::AllReplicas,
         io: IoConfig::fastpersist().microbench(),
+        devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,
         grad_accum: 1,
         seed: 0,

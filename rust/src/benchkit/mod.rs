@@ -6,8 +6,10 @@
 //! harness backs `fastpersist repro` where measured (not simulated)
 //! numbers are involved.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Configuration for a benchmark run.
@@ -53,6 +55,26 @@ impl BenchResult {
     pub fn throughput_gbps(&self) -> Option<f64> {
         self.bytes_per_iter
             .map(|b| crate::util::bytes::gbps(b, self.summary.p50))
+    }
+
+    /// Machine-readable form for the `BENCH_*.json` trajectory files.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(&self.name)),
+            ("n", Json::from(self.summary.n)),
+            ("p50_s", Json::Float(self.summary.p50)),
+            ("mean_s", Json::Float(self.summary.mean)),
+            ("min_s", Json::Float(self.summary.min)),
+            ("max_s", Json::Float(self.summary.max)),
+            ("rsd", Json::Float(self.summary.rsd())),
+        ];
+        if let Some(b) = self.bytes_per_iter {
+            fields.push(("bytes_per_iter", Json::from(b as i64)));
+        }
+        if let Some(t) = self.throughput_gbps() {
+            fields.push(("gbps", Json::Float(t)));
+        }
+        Json::obj(fields)
     }
 
     pub fn report_line(&self) -> String {
@@ -151,6 +173,28 @@ impl BenchGroup {
         println!("\n=== {title} ===");
         BenchGroup::new(title)
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            ("results", Json::arr(self.results.iter().map(|r| r.to_json()))),
+        ])
+    }
+}
+
+/// Write the benchkit JSON for one bench target: `BENCH_<tag>.json`
+/// under `FASTPERSIST_BENCH_OUT` (default: current directory). These
+/// files track the performance trajectory across PRs.
+pub fn write_bench_json(tag: &str, groups: &[&BenchGroup]) -> crate::Result<PathBuf> {
+    let out_dir = std::env::var("FASTPERSIST_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = Path::new(&out_dir).join(format!("BENCH_{tag}.json"));
+    let doc = Json::obj(vec![
+        ("bench", Json::str(tag)),
+        ("groups", Json::arr(groups.iter().map(|g| g.to_json()))),
+    ]);
+    std::fs::write(&path, doc.to_string_pretty())?;
+    println!("bench json -> {}", path.display());
+    Ok(path)
 }
 
 #[cfg(test)]
@@ -177,6 +221,28 @@ mod tests {
         });
         let t = r.throughput_gbps().unwrap();
         assert!(t > 0.01, "throughput={t}");
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let cfg = BenchConfig::quick();
+        let mut g = BenchGroup { title: "t".into(), cfg, results: Vec::new() };
+        g.bench_bytes("x", 1000, || {});
+        let dir = crate::io::engine::scratch_dir("benchkit-json").unwrap();
+        std::env::set_var("FASTPERSIST_BENCH_OUT", &dir);
+        let path = write_bench_json("unit", &[&g]).unwrap();
+        std::env::remove_var("FASTPERSIST_BENCH_OUT");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "unit");
+        let results = v.get("groups").unwrap().as_array().unwrap()[0]
+            .get("results")
+            .unwrap()
+            .as_array()
+            .unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "x");
+        assert_eq!(results[0].get("bytes_per_iter").unwrap().as_i64().unwrap(), 1000);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,15 +1,21 @@
 //! Parallel checkpoint write coordinator (paper §4.2).
 //!
 //! Given a model-state snapshot and the DP group holding replicas of it,
-//! the engine: (1) serializes once (header + zero-copy payload refs),
-//! (2) derives the byte-granularity [`WritePlan`] from the configured
-//! [`WriterStrategy`], (3) runs each selected writer concurrently — each
-//! writes only its partition, through its own NVMe-optimized sink, with
-//! no inter-writer communication — and (4) publishes the manifest once
-//! every partition is durable.
+//! the engine: (1) serializes once (header + zero-copy payload refs,
+//! with the stream digest folded into that single pass), (2) derives the
+//! byte-granularity [`WritePlan`] from the configured [`WriterStrategy`],
+//! (3) routes each partition onto a device of the runtime's
+//! [`crate::io::DeviceMap`] and submits it to the persistent writer pool
+//! — each [`crate::io::Ticket`] completes when that partition is
+//! durable, with no inter-writer communication — and (4) publishes the
+//! manifest once every ticket has completed.
 //!
-//! Writers are threads here (simulated ranks); the per-writer code path
-//! is exactly what a real rank process would run.
+//! The engine owns **no** I/O resources: staging buffers, drain workers
+//! and writer threads all belong to the long-lived
+//! [`IoRuntime`], shared across checkpoints (and across engines — the
+//! pipelined helper and direct `write` calls feed one submission queue).
+//! `CheckpointEngine::new` spins up a private runtime for drop-in
+//! compatibility; `CheckpointEngine::with_runtime` shares one.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -20,11 +26,12 @@ use crate::checkpoint::manifest::CheckpointManifest;
 use crate::checkpoint::plan::WritePlan;
 use crate::checkpoint::strategy::WriterStrategy;
 use crate::cluster::topology::RankPlacement;
-use crate::io::engine::{build_engine, IoConfig, WriteStats};
+use crate::io::engine::{EngineKind, IoConfig, WriteStats};
+use crate::io::runtime::{IoRuntime, IoRuntimeConfig, Ticket, WriteJob};
 use crate::serialize::writer::SerializedCheckpoint;
 use crate::tensor::TensorStore;
 use crate::util::json::Json;
-use crate::{Error, Result};
+use crate::Result;
 
 /// Result of one completed checkpoint.
 #[derive(Debug)]
@@ -43,16 +50,43 @@ impl CheckpointOutcome {
     }
 }
 
-/// The FastPersist checkpoint engine.
+/// The FastPersist checkpoint engine: a thin coordinator over a shared
+/// [`IoRuntime`]. Cloning shares the runtime (cheap).
+#[derive(Clone)]
 pub struct CheckpointEngine {
     pub io_cfg: IoConfig,
     pub strategy: WriterStrategy,
     pub sockets_per_node: usize,
+    runtime: Arc<IoRuntime>,
 }
 
 impl CheckpointEngine {
+    /// Drop-in constructor: builds a private runtime from `io_cfg`.
+    /// Prefer [`CheckpointEngine::with_runtime`] to share one runtime
+    /// across engines and checkpoints.
     pub fn new(io_cfg: IoConfig, strategy: WriterStrategy) -> CheckpointEngine {
-        CheckpointEngine { io_cfg, strategy, sockets_per_node: 2 }
+        let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: io_cfg,
+            ..IoRuntimeConfig::default()
+        }));
+        Self::with_runtime(runtime, strategy)
+    }
+
+    /// An engine submitting into an existing shared runtime.
+    pub fn with_runtime(runtime: Arc<IoRuntime>, strategy: WriterStrategy) -> CheckpointEngine {
+        CheckpointEngine {
+            io_cfg: runtime.io_config().clone(),
+            strategy,
+            sockets_per_node: 2,
+            runtime,
+        }
+    }
+
+    /// Override the engine kind for this engine's submissions (e.g. a
+    /// buffered baseline sharing a FastPersist runtime).
+    pub fn with_kind(mut self, kind: EngineKind) -> CheckpointEngine {
+        self.io_cfg.kind = kind;
+        self
     }
 
     /// The torch.save-equivalent configuration: single writer, buffered.
@@ -65,10 +99,17 @@ impl CheckpointEngine {
         CheckpointEngine::new(IoConfig::fastpersist(), strategy)
     }
 
+    /// The runtime this engine submits into.
+    pub fn runtime(&self) -> &Arc<IoRuntime> {
+        &self.runtime
+    }
+
     /// Write a checkpoint of `store` into `dir` using the DP `group`.
     ///
     /// `extra` is free-form training state recorded in the stream header
-    /// (step counter, data cursor, LR schedule — §2.1.3).
+    /// (step counter, data cursor, LR schedule — §2.1.3). Partition
+    /// files land in `dir`, or striped across the runtime's device map
+    /// with their assignment recorded in the manifest.
     pub fn write(
         &self,
         store: &TensorStore,
@@ -82,51 +123,44 @@ impl CheckpointEngine {
             .get("step")
             .and_then(|j| j.as_i64().ok())
             .unwrap_or(0) as u64;
+        // One serialization pass: header, payload refs, stream digest.
         let ser = Arc::new(SerializedCheckpoint::new(store, extra));
+        let digest = ser.stream_digest();
         let plan =
             WritePlan::from_strategy(ser.total_len(), group, self.strategy, self.sockets_per_node)?;
         plan.validate()?;
 
-        // Stream digest (over header+data) for reassembly verification —
-        // streaming, zero-copy (§Perf: the original collected the whole
-        // stream into Vecs, a full extra copy per checkpoint).
-        let mut hasher = crate::serialize::format::Checksum64::new();
-        ser.emit_range(0, ser.total_len(), &mut |p| {
-            hasher.update(p);
-            Ok(())
-        })?;
-        let digest = hasher.finalize();
-
-        // Concurrent partition writers (one thread per simulated rank).
-        let results: Vec<Result<WriteStats>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = plan
-                .partitions
-                .iter()
-                .map(|p| {
-                    let ser = Arc::clone(&ser);
-                    let io_cfg = self.io_cfg.clone();
-                    let path = dir.join(CheckpointManifest::partition_file(p));
-                    let (s, e) = (p.start, p.end);
-                    scope.spawn(move || -> Result<WriteStats> {
-                        let engine = build_engine(&io_cfg);
-                        let mut sink = engine.create(&path, Some(e - s))?;
-                        ser.write_range_to(s, e, sink.as_mut())?;
-                        sink.finish()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(Error::Internal("writer panicked".into())))
-                })
-                .collect()
-        });
-        let stats: Vec<WriteStats> = results.into_iter().collect::<Result<Vec<_>>>()?;
+        // Route partitions across devices and submit them all to the
+        // persistent writer pool; tickets complete as partitions become
+        // durable. No engine construction, no thread spawn, no staging
+        // allocation happens past this point — only submissions.
+        let devices = self.runtime.devices();
+        let mut routed: Vec<Option<String>> = Vec::with_capacity(plan.partitions.len());
+        let tickets: Vec<Ticket> = plan
+            .partitions
+            .iter()
+            .map(|p| {
+                let file = CheckpointManifest::partition_file(p);
+                let path = match devices.partition_dir(dir, p.index) {
+                    Some((device_dir, root)) => {
+                        routed.push(Some(root));
+                        device_dir.join(file)
+                    }
+                    None => {
+                        routed.push(None);
+                        dir.join(file)
+                    }
+                };
+                self.runtime
+                    .submit(WriteJob::range(Arc::clone(&ser), p.start, p.end, path)
+                        .with_kind(self.io_cfg.kind))
+            })
+            .collect();
+        let stats: Vec<WriteStats> =
+            tickets.into_iter().map(Ticket::wait).collect::<Result<Vec<_>>>()?;
 
         // All partitions durable → publish the manifest (atomic rename).
-        let manifest = CheckpointManifest::from_plan(&plan, digest, step);
+        let manifest = CheckpointManifest::from_routed_plan(&plan, &routed, digest, step);
         manifest.save(dir)?;
 
         Ok(CheckpointOutcome {
@@ -154,6 +188,7 @@ mod tests {
     use super::*;
     use crate::checkpoint::load::load_checkpoint;
     use crate::cluster::{ClusterSpec, Parallelism, Topology};
+    use crate::io::device::DeviceMap;
     use crate::io::engine::scratch_dir;
     use crate::tensor::{DType, Tensor};
     use crate::util::rng::Rng;
@@ -248,5 +283,69 @@ mod tests {
         let (loaded, _, _) = load_checkpoint(&dir, 2).unwrap();
         assert!(loaded.is_empty());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn steady_state_checkpoints_allocate_zero_staging_buffers() {
+        // Acceptance: across N consecutive checkpoints through one
+        // engine, the staging pool performs ZERO allocations after
+        // warm-up — buffer acquisition is off the hot path, engines are
+        // built once, sinks only recycle.
+        let dir = scratch_dir("engine-steady").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let store = sample_store(200_000, 3);
+        // warm-up: one checkpoint plus a deterministic pool prewarm
+        engine.write(&store, extra(0), &dir.join("warm"), &group(4)).unwrap();
+        engine.runtime().staging().prewarm();
+        let allocs = engine.runtime().staging().allocations();
+        let acquires = engine.runtime().staging().acquires();
+        for i in 1..=3i64 {
+            let out = engine
+                .write(&store, extra(i), &dir.join(format!("s{i}")), &group(4))
+                .unwrap();
+            assert_eq!(out.manifest.step, i as u64);
+        }
+        assert_eq!(
+            engine.runtime().staging().allocations(),
+            allocs,
+            "steady-state checkpoints must not allocate staging buffers"
+        );
+        assert!(
+            engine.runtime().staging().acquires() > acquires,
+            "checkpoints must recycle pool buffers (acquires should climb)"
+        );
+        for i in 1..=3 {
+            let (loaded, _, _) = load_checkpoint(&dir.join(format!("s{i}")), 2).unwrap();
+            assert!(loaded.content_eq(&store));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn multi_device_write_records_assignments_and_reloads() {
+        let base = scratch_dir("engine-devmap").unwrap();
+        let dir = base.join("ckpt");
+        let devices = DeviceMap::simulated(2, &base.join("devices")).unwrap();
+        let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist().microbench(),
+            devices,
+            ..IoRuntimeConfig::default()
+        }));
+        let engine = CheckpointEngine::with_runtime(runtime, WriterStrategy::AllReplicas);
+        let store = sample_store(40_000, 5);
+        let out = engine.write(&store, extra(7), &dir, &group(4)).unwrap();
+        // every partition recorded on exactly one of the two devices
+        assert_eq!(out.manifest.devices().len(), 2);
+        for p in &out.manifest.partitions {
+            assert!(p.device.is_some());
+            assert!(
+                !dir.join(&p.file).exists(),
+                "device-routed partition must not land in the checkpoint dir"
+            );
+        }
+        let (loaded, header, _) = load_checkpoint(&dir, 2).unwrap();
+        assert!(loaded.content_eq(&store));
+        assert_eq!(header.extra["step"], Json::Int(7));
+        std::fs::remove_dir_all(&base).unwrap();
     }
 }

@@ -1,19 +1,29 @@
 //! Parallel checkpoint loading + allgather reassembly (paper §4.2).
 //!
 //! Loading a parallel checkpoint is the inverse of writing: each DP rank
-//! reads its partition file (in parallel), then the partitions are
-//! assembled ("allgather") back into the logical serialized stream,
-//! verified against the manifest digest, and parsed into a
-//! [`TensorStore`].
+//! reads its partition file (in parallel) from the device the manifest
+//! recorded for it, then the partitions are assembled ("allgather") back
+//! into the logical serialized stream, verified against the manifest's
+//! stream digest, and parsed into a [`TensorStore`].
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use crate::checkpoint::manifest::CheckpointManifest;
-use crate::serialize::format::{checksum64_slice, FormatHeader};
+use crate::checkpoint::manifest::{CheckpointManifest, PartitionEntry};
+use crate::io::device::DeviceMap;
+use crate::serialize::format::{stream_digest_of, FormatHeader};
 use crate::serialize::reader::parse_checkpoint;
 use crate::tensor::TensorStore;
 use crate::util::threadpool::parallel_map;
 use crate::{Error, Result};
+
+/// On-disk location of a partition: the manifest's recorded device
+/// assignment resolved against the checkpoint directory.
+pub fn partition_path(dir: &Path, entry: &PartitionEntry) -> PathBuf {
+    match &entry.device {
+        Some(root) => DeviceMap::resolve_in(Path::new(root), dir).join(&entry.file),
+        None => dir.join(&entry.file),
+    }
+}
 
 /// Load one checkpoint directory; `threads` parallel partition readers
 /// (the DP ranks of the loading job).
@@ -25,7 +35,7 @@ pub fn load_checkpoint(
     let jobs: Vec<(std::path::PathBuf, u64)> = manifest
         .partitions
         .iter()
-        .map(|p| (dir.join(&p.file), p.end - p.start))
+        .map(|p| (partition_path(dir, p), p.end - p.start))
         .collect();
     // Parallel partition reads (rank-local step of the two-step load).
     let parts: Vec<Result<Vec<u8>>> = parallel_map(threads, jobs, |(path, expect)| {
@@ -52,7 +62,9 @@ pub fn load_checkpoint(
             manifest.total_len
         )));
     }
-    let digest = checksum64_slice(&stream);
+    // Composite stream digest (header ‖ data halves) — matches the
+    // writer's single-pass digest, see `serialize::format`.
+    let digest = stream_digest_of(&stream)?;
     if digest != manifest.digest {
         return Err(Error::Format(format!(
             "stream digest mismatch: computed {digest:#x}, manifest {:#x}",

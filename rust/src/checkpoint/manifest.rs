@@ -4,8 +4,10 @@
 //! Parallel checkpoints are written as one file per writer (the ranks'
 //! local SSDs in the paper). The manifest — written by partition 0's
 //! writer after all partitions are durable — records the stream length,
-//! the partition table, and the digest, so loading can verify and
-//! reassemble (allgather) the full checkpoint state.
+//! the partition table, the digest, and each partition's **device
+//! assignment** (the [`crate::io::DeviceMap`] mount point it was striped
+//! onto), so loading can verify, locate, and reassemble (allgather) the
+//! full checkpoint state.
 
 use std::path::{Path, PathBuf};
 
@@ -14,6 +16,14 @@ use crate::util::json::Json;
 use crate::{Error, Result};
 
 pub const MANIFEST_FILE: &str = "checkpoint.json";
+
+/// Manifest schema version. v2 = composite stream digest
+/// ([`crate::serialize::format::combine_digests`] over header‖data
+/// halves) + optional per-partition device assignments. v1 manifests
+/// (whole-stream `checksum64_slice` digest, no device field) are
+/// rejected with a clear incompatibility error rather than a misleading
+/// digest mismatch.
+pub const MANIFEST_VERSION: i64 = 2;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct CheckpointManifest {
@@ -29,10 +39,28 @@ pub struct PartitionEntry {
     pub writer_rank: usize,
     pub start: u64,
     pub end: u64,
+    /// Mount-point root of the device this partition was striped onto;
+    /// `None` means the partition lives in the checkpoint directory
+    /// itself (single-device layout). Loaders resolve the actual path
+    /// via [`crate::io::DeviceMap::resolve_in`].
+    pub device: Option<String>,
 }
 
 impl CheckpointManifest {
     pub fn from_plan(plan: &WritePlan, digest: u64, step: u64) -> CheckpointManifest {
+        let unrouted: Vec<Option<String>> = vec![None; plan.partitions.len()];
+        Self::from_routed_plan(plan, &unrouted, digest, step)
+    }
+
+    /// Build a manifest from a plan plus per-partition device roots (as
+    /// recorded by the write path's routing).
+    pub fn from_routed_plan(
+        plan: &WritePlan,
+        devices: &[Option<String>],
+        digest: u64,
+        step: u64,
+    ) -> CheckpointManifest {
+        debug_assert_eq!(devices.len(), plan.partitions.len());
         CheckpointManifest {
             total_len: plan.total_len,
             digest,
@@ -40,14 +68,27 @@ impl CheckpointManifest {
             partitions: plan
                 .partitions
                 .iter()
-                .map(|p| PartitionEntry {
+                .zip(devices)
+                .map(|(p, device)| PartitionEntry {
                     file: Self::partition_file(p),
                     writer_rank: p.writer_rank,
                     start: p.start,
                     end: p.end,
+                    device: device.clone(),
                 })
                 .collect(),
         }
+    }
+
+    /// Distinct device roots referenced by this checkpoint (empty for
+    /// single-device layouts).
+    pub fn devices(&self) -> Vec<&str> {
+        let mut seen = std::collections::BTreeSet::new();
+        self.partitions
+            .iter()
+            .filter_map(|p| p.device.as_deref())
+            .filter(|d| seen.insert(*d))
+            .collect()
     }
 
     /// Canonical partition filename for a plan entry.
@@ -57,6 +98,7 @@ impl CheckpointManifest {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("manifest_version", Json::from(MANIFEST_VERSION)),
             ("total_len", Json::from(self.total_len as i64)),
             ("digest_hi", Json::from((self.digest >> 32) as i64)),
             ("digest_lo", Json::from((self.digest & 0xffff_ffff) as i64)),
@@ -64,18 +106,29 @@ impl CheckpointManifest {
             (
                 "partitions",
                 Json::arr(self.partitions.iter().map(|p| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("file", Json::str(&p.file)),
                         ("writer_rank", Json::from(p.writer_rank)),
                         ("start", Json::from(p.start as i64)),
                         ("end", Json::from(p.end as i64)),
-                    ])
+                    ];
+                    if let Some(device) = &p.device {
+                        fields.push(("device", Json::str(device)));
+                    }
+                    Json::obj(fields)
                 })),
             ),
         ])
     }
 
     pub fn from_json(v: &Json) -> Result<CheckpointManifest> {
+        let version = v.opt("manifest_version").map(Json::as_i64).transpose()?.unwrap_or(1);
+        if version != MANIFEST_VERSION {
+            return Err(Error::Format(format!(
+                "checkpoint manifest is v{version}, this build reads v{MANIFEST_VERSION} \
+                 (the stream-digest algorithm changed); re-create the checkpoint"
+            )));
+        }
         let hi = v.get("digest_hi")?.as_i64()? as u64;
         let lo = v.get("digest_lo")?.as_i64()? as u64;
         let partitions = v
@@ -83,11 +136,16 @@ impl CheckpointManifest {
             .as_array()?
             .iter()
             .map(|p| {
+                let device = match p.opt("device") {
+                    Some(d) => Some(d.as_str()?.to_string()),
+                    None => None,
+                };
                 Ok(PartitionEntry {
                     file: p.get("file")?.as_str()?.to_string(),
                     writer_rank: p.get("writer_rank")?.as_usize()?,
                     start: p.get("start")?.as_i64()? as u64,
                     end: p.get("end")?.as_i64()? as u64,
+                    device,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -165,6 +223,39 @@ mod tests {
         let back = CheckpointManifest::load(&dir).unwrap();
         assert_eq!(back, m);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v1_manifest_rejected_with_clear_error() {
+        let m = manifest();
+        let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
+        fields.remove("manifest_version");
+        match CheckpointManifest::from_json(&Json::Object(fields)) {
+            Err(Error::Format(msg)) => assert!(msg.contains("manifest is v1"), "{msg}"),
+            other => panic!("expected version error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn device_assignments_roundtrip() {
+        let plan = WritePlan::balanced(1000, &[0, 1, 2, 3]).unwrap();
+        let devices = vec![
+            Some("/mnt/ssd0".to_string()),
+            Some("/mnt/ssd1".to_string()),
+            Some("/mnt/ssd0".to_string()),
+            Some("/mnt/ssd1".to_string()),
+        ];
+        let m = CheckpointManifest::from_routed_plan(&plan, &devices, 0x1234, 3);
+        assert_eq!(m.devices(), vec!["/mnt/ssd0", "/mnt/ssd1"]);
+        let back = CheckpointManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.partitions[1].device.as_deref(), Some("/mnt/ssd1"));
+        // single-device manifests carry no device fields
+        let single = manifest();
+        assert!(single.partitions.iter().all(|p| p.device.is_none()));
+        assert!(single.devices().is_empty());
+        let back = CheckpointManifest::from_json(&single.to_json()).unwrap();
+        assert_eq!(back, single);
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! * [`strategy`] — writer-subset selection: rank 0 only (baseline), all
 //!   replicas, one writer per CPU socket, or a fixed count, chosen to
 //!   maximize I/O-hardware utilization while minimizing contention.
-//! * [`engine`] — the parallel write coordinator: each selected writer
-//!   persists its partition through its own [`crate::io`] sink,
+//! * [`engine`] — the parallel write coordinator: each selected writer's
+//!   partition is submitted to the persistent
+//!   [`crate::io::IoRuntime`] writer pool (one ticket per partition),
+//!   striped across the runtime's [`crate::io::DeviceMap`],
 //!   communication-free.
 //! * [`pipeline`] — the decoupled executor overlapping checkpoint writes
 //!   with the next iteration's forward/backward (§4.3).

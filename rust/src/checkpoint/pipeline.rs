@@ -24,6 +24,12 @@
 //! helper never allocates payload memory and never blocks the main
 //! thread except at the `wait_previous` synchronization point — which is
 //! exactly the paper's stall-only-if-checkpoint-still-running semantics.
+//!
+//! The helper owns no I/O resources: it submits partitions into the
+//! engine's shared [`crate::io::IoRuntime`] (staging pool + persistent
+//! writer/drain threads), so pipelined and direct checkpoints interleave
+//! through one submission queue, and back-to-back checkpoints reuse the
+//! same staging buffers.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;

@@ -8,7 +8,12 @@
 //!
 //! The plan is computed once at training setup (communication-free
 //! checkpointing: each writer already knows its range) and reused every
-//! iteration until the topology changes.
+//! iteration until the topology changes. Device placement composes the
+//! same way: partition `i` of a plan is striped onto device
+//! `i % n_devices` of the runtime's [`crate::io::DeviceMap`] — a pure
+//! function of the plan, so writers and loaders agree without
+//! communication (the assignment is additionally recorded per partition
+//! in the checkpoint manifest).
 
 use crate::checkpoint::strategy::WriterStrategy;
 use crate::cluster::topology::RankPlacement;

@@ -14,7 +14,7 @@
 //! paper's subject: small copying buffered writes (torch.save) vs.
 //! large aligned staged writes with single/double buffering.
 
-use crate::io::engine::{write_file, EngineKind, IoConfig};
+use crate::io::engine::{build_engine, EngineKind, IoConfig};
 use crate::util::bytes::MB;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -29,12 +29,17 @@ pub struct Fig7Cell {
     pub speedup_vs_baseline: f64,
 }
 
-/// Median-of-k timing for one engine config writing `data`.
+/// Median-of-k timing for one engine config writing `data`. The engine
+/// (and with it the staging pool) is built once and reused across reps
+/// — construction stays off the measured path.
 fn measure(cfg: &IoConfig, dir: &std::path::Path, data: &[u8], reps: usize) -> Result<f64> {
+    let engine = build_engine(cfg);
     let mut times = Vec::with_capacity(reps);
     for i in 0..reps {
         let path = dir.join(format!("ckpt-{}-{i}.bin", cfg.kind.name()));
-        let stats = write_file(cfg, &path, data)?;
+        let mut sink = engine.create(&path, Some(data.len() as u64))?;
+        sink.write(data)?;
+        let stats = sink.finish()?;
         times.push(stats.elapsed.as_secs_f64());
         let _ = std::fs::remove_file(&path);
     }

@@ -8,6 +8,7 @@
 //! the allocator (paper §4.3: the helper thread does not allocate).
 
 use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -90,15 +91,30 @@ impl std::fmt::Debug for AlignedBuf {
     }
 }
 
-/// Fixed pool of staging buffers. `acquire` blocks until a buffer is
-/// free — this is exactly the backpressure the double-buffered writer
-/// relies on (at most `n` writes in flight).
+/// Capped pool of staging buffers. `acquire` blocks (once the cap is
+/// reached) until a buffer is free — exactly the backpressure the
+/// double-buffered writer relies on (bounded buffers in flight).
+///
+/// Buffers are allocated lazily on first demand, **never past the cap,
+/// and never again once created** — the paper's pinned staging buffers.
+/// After warm-up, [`BufferPool::allocations`] is constant for the
+/// pool's lifetime: the steady-state checkpoint path performs zero
+/// staging allocations, and tests assert exactly that while
+/// [`BufferPool::acquires`] keeps climbing (proof of reuse, not of
+/// idleness). A pool that is never used costs nothing.
 #[derive(Clone)]
 pub struct BufferPool {
     rx: Arc<Mutex<Receiver<AlignedBuf>>>,
     tx: Sender<AlignedBuf>,
     buf_size: usize,
+    align: usize,
     count: usize,
+    /// Buffers created so far (grows to `count`, then freezes).
+    created: Arc<Mutex<usize>>,
+    /// Staging buffers ever allocated into this pool.
+    allocations: Arc<AtomicU64>,
+    /// Cumulative successful checkouts (blocking + non-blocking).
+    acquires: Arc<AtomicU64>,
 }
 
 impl BufferPool {
@@ -109,15 +125,44 @@ impl BufferPool {
     pub fn with_align(count: usize, buf_size: usize, align: usize) -> BufferPool {
         assert!(count > 0);
         let (tx, rx) = mpsc::channel();
-        for _ in 0..count {
-            tx.send(AlignedBuf::new(buf_size, align)).unwrap();
+        BufferPool {
+            rx: Arc::new(Mutex::new(rx)),
+            tx,
+            buf_size,
+            align,
+            count,
+            created: Arc::new(Mutex::new(0)),
+            allocations: Arc::new(AtomicU64::new(0)),
+            acquires: Arc::new(AtomicU64::new(0)),
         }
-        BufferPool { rx: Arc::new(Mutex::new(rx)), tx, buf_size, count }
     }
 
-    /// Block until a free buffer is available; the buffer comes back
-    /// cleared.
+    /// Create a buffer if the cap allows (warm-up only).
+    fn grow(&self) -> Option<AlignedBuf> {
+        {
+            let mut created = self.created.lock().unwrap();
+            if *created >= self.count {
+                return None;
+            }
+            *created += 1;
+        }
+        self.allocations.fetch_add(1, Ordering::Relaxed);
+        Some(AlignedBuf::new(self.buf_size, self.align))
+    }
+
+    /// Get a free (recycled) buffer, cleared; blocks when the pool is at
+    /// its cap and everything is checked out, creates a buffer during
+    /// warm-up otherwise.
     pub fn acquire(&self) -> AlignedBuf {
+        if let Ok(mut buf) = self.rx.lock().unwrap().try_recv() {
+            buf.clear();
+            self.acquires.fetch_add(1, Ordering::Relaxed);
+            return buf;
+        }
+        if let Some(buf) = self.grow() {
+            self.acquires.fetch_add(1, Ordering::Relaxed);
+            return buf;
+        }
         let mut buf = self
             .rx
             .lock()
@@ -125,13 +170,19 @@ impl BufferPool {
             .recv()
             .expect("buffer pool closed");
         buf.clear();
+        self.acquires.fetch_add(1, Ordering::Relaxed);
         buf
     }
 
-    /// Non-blocking acquire.
+    /// Non-blocking acquire (recycled buffer, or warm-up growth).
     pub fn try_acquire(&self) -> Option<AlignedBuf> {
-        self.rx.lock().unwrap().try_recv().ok().map(|mut b| {
+        if let Ok(mut b) = self.rx.lock().unwrap().try_recv() {
             b.clear();
+            self.acquires.fetch_add(1, Ordering::Relaxed);
+            return Some(b);
+        }
+        self.grow().map(|b| {
+            self.acquires.fetch_add(1, Ordering::Relaxed);
             b
         })
     }
@@ -141,12 +192,37 @@ impl BufferPool {
         let _ = self.tx.send(buf);
     }
 
+    /// Deterministically finish warm-up: allocate every not-yet-created
+    /// buffer up to the cap and place it on the free list. After this,
+    /// [`BufferPool::allocations`] can never change again.
+    pub fn prewarm(&self) {
+        while let Some(buf) = self.grow() {
+            let _ = self.tx.send(buf);
+        }
+    }
+
     pub fn buf_size(&self) -> usize {
         self.buf_size
     }
 
+    pub fn align(&self) -> usize {
+        self.align
+    }
+
     pub fn count(&self) -> usize {
         self.count
+    }
+
+    /// Total staging-buffer allocations performed for this pool. Grows
+    /// only during warm-up (bounded by `count`), then constant for the
+    /// pool's lifetime; the hot path only recycles.
+    pub fn allocations(&self) -> u64 {
+        self.allocations.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative buffer checkouts over the pool's lifetime.
+    pub fn acquires(&self) -> u64 {
+        self.acquires.load(Ordering::Relaxed)
     }
 }
 
@@ -197,6 +273,27 @@ mod tests {
         let _other = pool.acquire();
         let recycled = pool.acquire();
         assert_eq!(recycled.len, 0);
+    }
+
+    #[test]
+    fn allocation_counter_freezes_after_warmup_while_acquires_climb() {
+        let pool = BufferPool::new(2, 64);
+        assert_eq!(pool.allocations(), 0, "lazy pool: unused costs nothing");
+        // warm-up: first checkouts create up to the cap
+        let a = pool.acquire();
+        let b = pool.acquire();
+        assert_eq!(pool.allocations(), 2);
+        pool.release(a);
+        pool.release(b);
+        // steady state: recycle only
+        for _ in 0..10 {
+            let a = pool.acquire();
+            let b = pool.acquire();
+            pool.release(a);
+            pool.release(b);
+        }
+        assert_eq!(pool.allocations(), 2, "pool must never allocate past its cap");
+        assert_eq!(pool.acquires(), 22);
     }
 
     #[test]

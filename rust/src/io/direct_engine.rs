@@ -7,30 +7,72 @@
 //! back to aligned `pwrite` on a regular descriptor — the *structure* of
 //! the path (alignment, staging, overlap, prefix/suffix split) is
 //! identical, which is what the microbenchmarks measure.
+//!
+//! The engine does **not** own per-sink buffers or threads: staging
+//! buffers come from a [`BufferPool`] and drains go through a
+//! [`DrainPool`], both either private to the engine (standalone
+//! construction, resources created once per engine) or shared across
+//! every engine of an [`crate::io::runtime::IoRuntime`]. Either way,
+//! creating a sink allocates nothing.
 
 use std::fs::{File, OpenOptions};
 use std::os::unix::fs::{FileExt, OpenOptionsExt};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::io::double_buffer::StagedWriter;
+use crate::io::buffer::BufferPool;
+use crate::io::double_buffer::{DrainPool, StagedWriter};
 use crate::io::engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
 use crate::Result;
 
+/// `O_DIRECT` without a libc dependency (Linux; zero elsewhere, where
+/// the open falls back to the buffered descriptor anyway).
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "x86")))]
+const O_DIRECT: i32 = 0o40000;
+#[cfg(all(
+    target_os = "linux",
+    not(any(target_arch = "x86_64", target_arch = "x86"))
+))]
+const O_DIRECT: i32 = 0o200000;
+#[cfg(not(target_os = "linux"))]
+const O_DIRECT: i32 = 0;
+
 pub struct DirectEngine {
     cfg: IoConfig,
+    pool: BufferPool,
+    drain: DrainPool,
 }
 
 impl DirectEngine {
-    pub fn new(mut cfg: IoConfig) -> DirectEngine {
-        // io buffer must be an alignment multiple and nonzero
-        let align = cfg.align.max(512);
-        cfg.align = align;
-        cfg.io_buf_size = cfg.io_buf_size.max(align).next_multiple_of(align);
-        DirectEngine { cfg }
+    /// Standalone engine owning its (engine-lifetime) staging pool and
+    /// drain worker.
+    pub fn new(cfg: IoConfig) -> DirectEngine {
+        let cfg = cfg.normalized();
+        let buffers = match cfg.kind {
+            EngineKind::DirectDouble => 2,
+            _ => 1,
+        };
+        let pool = BufferPool::with_align(buffers, cfg.io_buf_size, cfg.align);
+        let drain = DrainPool::new(1);
+        DirectEngine::with_resources(cfg, pool, drain)
     }
 
-    fn buffers(&self) -> usize {
+    /// Engine borrowing runtime-owned resources; the hot path never
+    /// allocates staging memory or spawns threads.
+    pub fn with_resources(cfg: IoConfig, pool: BufferPool, drain: DrainPool) -> DirectEngine {
+        let mut cfg = cfg.normalized();
+        // The shared pool's geometry wins: buffers were sized/aligned at
+        // runtime construction.
+        cfg.align = pool.align();
+        let clamped = cfg.io_buf_size.min(pool.buf_size()).max(pool.align());
+        cfg.io_buf_size =
+            crate::io::align::align_down(clamped as u64, pool.align() as u64) as usize;
+        DirectEngine { cfg, pool, drain }
+    }
+
+    /// Per-sink cap on in-flight staged buffers (Fig. 5 a/b).
+    fn max_inflight(&self) -> usize {
         match self.cfg.kind {
             EngineKind::DirectDouble => 2,
             _ => 1,
@@ -39,12 +81,12 @@ impl DirectEngine {
 
     /// Open `path` for direct writes; returns (file, o_direct_engaged).
     fn open_direct(&self, path: &Path) -> Result<(File, bool)> {
-        if self.cfg.try_o_direct {
+        if self.cfg.try_o_direct && O_DIRECT != 0 {
             let attempt = OpenOptions::new()
                 .create(true)
                 .write(true)
                 .truncate(true)
-                .custom_flags(libc::O_DIRECT)
+                .custom_flags(O_DIRECT)
                 .open(path);
             if let Ok(f) = attempt {
                 return Ok((f, true));
@@ -70,21 +112,24 @@ impl WriteEngine for DirectEngine {
             // metadata updates.
             direct_file.set_len(crate::io::align::align_up(size, self.cfg.align as u64))?;
         }
-        // Size staging buffers to the data: for small checkpoints the
-        // configured IO buffer would be mostly idle allocation cost
-        // (zeroed pages). Never below one alignment unit.
-        let buf_size = match expected_size {
+        // Right-size the staged chunk to the data: pooled buffers are
+        // fixed-capacity, but a small checkpoint should drain after its
+        // last byte, not after a 32 MB high-water mark. Never below one
+        // alignment unit.
+        let chunk = match expected_size {
             Some(size) => {
                 let need = crate::io::align::align_up(size, self.cfg.align as u64) as usize;
                 self.cfg.io_buf_size.min(need.max(self.cfg.align))
             }
             None => self.cfg.io_buf_size,
         };
+        let direct_file = Arc::new(direct_file);
         let writer = StagedWriter::new(
-            direct_file.try_clone()?,
-            self.buffers(),
-            buf_size,
-            self.cfg.align,
+            Arc::clone(&direct_file),
+            self.pool.clone(),
+            self.drain.clone(),
+            self.max_inflight(),
+            chunk,
         );
         Ok(Box::new(DirectSink {
             writer: Some(writer),
@@ -99,7 +144,7 @@ impl WriteEngine for DirectEngine {
 
 struct DirectSink {
     writer: Option<StagedWriter>,
-    direct_file: File,
+    direct_file: Arc<File>,
     suffix_file: File,
     sync: bool,
     o_direct: bool,
@@ -218,6 +263,62 @@ mod tests {
         let e = engine(EngineKind::DirectSingle, 5000);
         assert_eq!(e.cfg.io_buf_size % 4096, 0);
         assert!(e.cfg.io_buf_size >= 5000);
+    }
+
+    #[test]
+    fn engine_reuse_does_not_allocate_buffers() {
+        // The satellite regression: sinks must borrow, never allocate.
+        let dir = scratch_dir("direct-reuse").unwrap();
+        let e = engine(EngineKind::DirectDouble, 16 << 10);
+        // warm-up write + deterministic prewarm of the rest of the pool
+        let mut sink = e.create(&dir.join("warm.bin"), Some(50_000)).unwrap();
+        sink.write(&[1u8; 50_000]).unwrap();
+        sink.finish().unwrap();
+        e.pool.prewarm();
+        let allocs = e.pool.allocations();
+        for i in 0..5 {
+            let path = dir.join(format!("f{i}.bin"));
+            let data = vec![i as u8; 60_000 + i * 123];
+            let mut sink = e.create(&path, Some(data.len() as u64)).unwrap();
+            sink.write(&data).unwrap();
+            sink.finish().unwrap();
+            assert_eq!(std::fs::read(&path).unwrap(), data);
+        }
+        assert_eq!(
+            e.pool.allocations(),
+            allocs,
+            "steady-state create()/finish() must not allocate"
+        );
+        assert!(e.pool.acquires() >= 5, "sinks must check buffers out of the pool");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shared_resources_between_engines() {
+        let dir = scratch_dir("direct-shared").unwrap();
+        let pool = BufferPool::with_align(2, 8192, 4096);
+        let drain = DrainPool::new(1);
+        let single = DirectEngine::with_resources(
+            IoConfig { kind: EngineKind::DirectSingle, align: 4096, ..IoConfig::default() },
+            pool.clone(),
+            drain.clone(),
+        );
+        let double = DirectEngine::with_resources(
+            IoConfig { kind: EngineKind::DirectDouble, align: 4096, ..IoConfig::default() },
+            pool.clone(),
+            drain,
+        );
+        for (tag, e) in [("s", &single), ("d", &double)] {
+            let path = dir.join(format!("{tag}.bin"));
+            let data = vec![7u8; 20_000];
+            let mut sink = e.create(&path, Some(data.len() as u64)).unwrap();
+            sink.write(&data).unwrap();
+            sink.finish().unwrap();
+            assert_eq!(std::fs::read(&path).unwrap(), data);
+        }
+        assert!(pool.allocations() <= 2, "engines share the caller's capped pool");
+        assert!(pool.acquires() > 0, "engines must draw from the shared pool");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

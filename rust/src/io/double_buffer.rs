@@ -1,130 +1,212 @@
-//! Staged writer with single/double buffering (paper Fig. 5).
+//! Staged writer with single/double buffering (paper Fig. 5), built on
+//! *shared* runtime resources.
 //!
 //! The checkpoint byte stream is staged into aligned pinned buffers (the
-//! accelerator→DRAM hop) and drained to storage by a dedicated drain
-//! worker (the DRAM→NVMe hop). With a 1-buffer pool the two hops
-//! serialize (Fig. 5a, "single buffer mode"); with a 2-buffer pool the
-//! drain of buffer *k* overlaps the staging of buffer *k+1* (Fig. 5b,
-//! "double buffer mode") — the pool's blocking `acquire` provides the
-//! backpressure.
+//! accelerator→DRAM hop) borrowed from a [`BufferPool`], and drained to
+//! storage by a persistent [`DrainPool`] (the DRAM→SSD hop). With a
+//! per-sink in-flight cap of 1 the two hops serialize (Fig. 5a, "single
+//! buffer mode"); with a cap of 2 the drain of buffer *k* overlaps the
+//! staging of buffer *k+1* (Fig. 5b, "double buffer mode").
+//!
+//! Neither the buffers nor the drain threads are created per checkpoint:
+//! the [`crate::io::runtime::IoRuntime`] (or a standalone engine) owns
+//! both for its whole lifetime, and sinks only *borrow*. Drain writes
+//! are positioned (`pwrite`-style), so any number of sinks can share one
+//! drain pool without ordering coordination.
 
 use std::fs::File;
 use std::os::unix::fs::FileExt;
-use std::sync::mpsc::{self, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
 
 use crate::io::buffer::{AlignedBuf, BufferPool};
+use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
 
-/// A full (or final) staged buffer queued for drain at a file offset.
-struct Job {
-    buf: AlignedBuf,
-    offset: u64,
-    len: usize,
-}
-
-/// Counters from the drain worker.
+/// Counters from the drain path.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct DrainStats {
     pub bytes: u64,
     pub ops: u64,
 }
 
-/// Order-preserving staged writer over a file handle.
+/// Persistent pool of drain workers shared by every staged sink.
+///
+/// A drain job is one positioned write of a staged buffer; the worker
+/// writes, returns the buffer to its staging pool, and reports the
+/// outcome on the submitting sink's completion channel. Workers never
+/// block on anything but the write syscall itself, so sinks waiting on
+/// completions (or on `BufferPool::acquire`) always make progress.
+#[derive(Clone)]
+pub struct DrainPool {
+    pool: Arc<ThreadPool>,
+}
+
+impl DrainPool {
+    pub fn new(threads: usize) -> DrainPool {
+        DrainPool { pool: Arc::new(ThreadPool::new(threads.max(1), "ckpt-drain")) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Submit one positioned write of `buf[..len]` at `offset`. The
+    /// buffer is returned to `staging` and the result (bytes written)
+    /// is sent on `done` regardless of success.
+    pub fn submit(
+        &self,
+        file: Arc<File>,
+        buf: AlignedBuf,
+        offset: u64,
+        len: usize,
+        staging: BufferPool,
+        done: Sender<Result<u64>>,
+    ) {
+        self.pool.execute(move || {
+            let result = file
+                .write_all_at(&buf.filled()[..len], offset)
+                .map(|()| len as u64)
+                .map_err(Error::Io);
+            // Recycle before reporting so producers blocked in acquire()
+            // wake even if the sink has stopped listening.
+            staging.release(buf);
+            let _ = done.send(result);
+        });
+    }
+}
+
+/// Order-preserving staged writer over a file handle; buffers come from
+/// a shared pool, drains go through a shared drain pool.
 pub struct StagedWriter {
+    file: Arc<File>,
     pool: BufferPool,
+    drain: DrainPool,
     current: Option<AlignedBuf>,
+    /// Per-sink cap on submitted-but-unfinished drains: 1 = single
+    /// buffering, 2 = double buffering.
+    max_inflight: usize,
+    /// Bytes staged per buffer before submission (≤ pool buffer
+    /// capacity; right-sized to the expected stream so small checkpoints
+    /// drain promptly).
+    chunk: usize,
     /// Next *file* offset at which the current buffer will land.
     submit_offset: u64,
     /// Total bytes staged so far (logical stream position).
     staged: u64,
-    tx: Option<Sender<Job>>,
-    drain: Option<JoinHandle<DrainStats>>,
-    err: Arc<Mutex<Option<Error>>>,
+    inflight: usize,
+    done_tx: Sender<Result<u64>>,
+    done_rx: Receiver<Result<u64>>,
+    stats: DrainStats,
+    err: Option<Error>,
 }
 
 impl StagedWriter {
-    /// `buffers` = 1 → single-buffer mode; 2 → double-buffer mode.
-    /// `file` is the (possibly O_DIRECT) handle the drain worker writes.
-    pub fn new(file: File, buffers: usize, buf_size: usize, align: usize) -> StagedWriter {
-        assert!(buffers >= 1);
-        assert!(buf_size % align == 0, "buf_size must be align-multiple");
-        let pool = BufferPool::with_align(buffers, buf_size, align);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let err = Arc::new(Mutex::new(None::<Error>));
-        let drain_err = Arc::clone(&err);
-        let drain_pool = pool.clone();
-        let drain = std::thread::Builder::new()
-            .name("ckpt-drain".into())
-            .spawn(move || {
-                let mut stats = DrainStats::default();
-                for job in rx {
-                    // Skip writes after the first error, but keep
-                    // recycling buffers so the producer can't deadlock.
-                    if drain_err.lock().unwrap().is_none() {
-                        match file.write_all_at(&job.buf.filled()[..job.len], job.offset) {
-                            Ok(()) => {
-                                stats.bytes += job.len as u64;
-                                stats.ops += 1;
-                            }
-                            Err(e) => {
-                                *drain_err.lock().unwrap() = Some(Error::Io(e));
-                            }
-                        }
-                    }
-                    drain_pool.release(job.buf);
-                }
-                stats
-            })
-            .expect("spawn drain worker");
+    /// `max_inflight` = 1 → single-buffer mode; 2 → double-buffer mode.
+    /// `chunk` is clamped to `[align, pool.buf_size()]` and must be an
+    /// alignment multiple. `file` is the (possibly O_DIRECT) handle the
+    /// drain workers write.
+    pub fn new(
+        file: Arc<File>,
+        pool: BufferPool,
+        drain: DrainPool,
+        max_inflight: usize,
+        chunk: usize,
+    ) -> StagedWriter {
+        assert!(max_inflight >= 1);
+        let chunk = chunk.clamp(pool.align(), pool.buf_size());
+        assert!(chunk % pool.align() == 0, "chunk must be an alignment multiple");
+        let (done_tx, done_rx) = mpsc::channel();
         StagedWriter {
+            file,
             pool,
+            drain,
             current: None,
+            max_inflight,
+            chunk,
             submit_offset: 0,
             staged: 0,
-            tx: Some(tx),
-            drain: Some(drain),
-            err,
+            inflight: 0,
+            done_tx,
+            done_rx,
+            stats: DrainStats::default(),
+            err: None,
         }
     }
 
-    fn check_err(&self) -> Result<()> {
-        if let Some(e) = self.err.lock().unwrap().take() {
-            return Err(e);
-        }
-        Ok(())
-    }
-
-    /// Stage bytes; full buffers are submitted to the drain worker.
+    /// Stage bytes; full chunks are submitted to the drain pool.
     pub fn stage(&mut self, mut data: &[u8]) -> Result<()> {
         while !data.is_empty() {
             self.check_err()?;
             if self.current.is_none() {
-                // Blocks when all buffers are in flight → backpressure.
+                // Backpressure, two layers: the per-sink in-flight cap
+                // (single vs double buffering), then the global pool.
+                while self.inflight >= self.max_inflight {
+                    self.collect_one();
+                }
+                self.check_err()?;
                 self.current = Some(self.pool.acquire());
             }
             let buf = self.current.as_mut().unwrap();
-            let n = buf.stage(data);
+            let room = self.chunk - buf.len;
+            let n = room.min(data.len());
+            buf.stage(&data[..n]);
             self.staged += n as u64;
             data = &data[n..];
-            if buf.remaining() == 0 {
-                self.submit_full()?;
+            if buf.len == self.chunk {
+                self.submit_full();
             }
         }
         Ok(())
     }
 
-    fn submit_full(&mut self) -> Result<()> {
+    fn submit_full(&mut self) {
         let buf = self.current.take().expect("submit without buffer");
         let len = buf.len;
+        self.submit_buf(buf, len);
+    }
+
+    fn submit_buf(&mut self, buf: AlignedBuf, len: usize) {
         let offset = self.submit_offset;
         self.submit_offset += len as u64;
-        self.tx
-            .as_ref()
-            .expect("writer closed")
-            .send(Job { buf, offset, len })
-            .map_err(|_| Error::Internal("drain worker died".into()))?;
+        self.inflight += 1;
+        self.drain.submit(
+            Arc::clone(&self.file),
+            buf,
+            offset,
+            len,
+            self.pool.clone(),
+            self.done_tx.clone(),
+        );
+    }
+
+    /// Receive one drain completion, folding it into stats/err.
+    fn collect_one(&mut self) {
+        match self.done_rx.recv() {
+            Ok(Ok(bytes)) => {
+                self.stats.bytes += bytes;
+                self.stats.ops += 1;
+                self.inflight -= 1;
+            }
+            Ok(Err(e)) => {
+                if self.err.is_none() {
+                    self.err = Some(e);
+                }
+                self.inflight -= 1;
+            }
+            Err(_) => {
+                if self.err.is_none() {
+                    self.err = Some(Error::Internal("drain pool died".into()));
+                }
+                self.inflight = 0;
+            }
+        }
+    }
+
+    fn check_err(&mut self) -> Result<()> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
         Ok(())
     }
 
@@ -134,49 +216,48 @@ impl StagedWriter {
     }
 
     /// Finish: submit the *aligned* prefix of the final partial buffer
-    /// through the drain worker, return `(suffix_bytes, suffix_offset,
-    /// drain_stats)` — the caller writes the sub-alignment suffix through
-    /// the traditional path (paper §4.1).
+    /// through the drain pool, wait for all in-flight drains, return
+    /// `(suffix_bytes, suffix_offset, drain_stats)` — the caller writes
+    /// the sub-alignment suffix through the traditional path (§4.1).
     pub fn finish(mut self) -> Result<(Vec<u8>, u64, DrainStats)> {
-        let align = match &self.current {
-            Some(b) => b.align(),
-            None => crate::io::align::DEFAULT_ALIGN,
-        };
+        let align = self.pool.align();
         let mut suffix = Vec::new();
         if let Some(buf) = self.current.take() {
             let filled = buf.len;
             let aligned = crate::io::align::align_down(filled as u64, align as u64) as usize;
             suffix.extend_from_slice(&buf.filled()[aligned..]);
             if aligned > 0 {
-                let offset = self.submit_offset;
-                self.submit_offset += aligned as u64;
-                self.tx
-                    .as_ref()
-                    .unwrap()
-                    .send(Job { buf, offset, len: aligned })
-                    .map_err(|_| Error::Internal("drain worker died".into()))?;
+                self.submit_buf(buf, aligned);
             } else {
                 self.pool.release(buf);
             }
         }
         let suffix_offset = self.submit_offset;
-        drop(self.tx.take()); // close queue → drain exits after last job
-        let stats = self
-            .drain
-            .take()
-            .unwrap()
-            .join()
-            .map_err(|_| Error::Internal("drain worker panicked".into()))?;
+        while self.inflight > 0 {
+            self.collect_one();
+        }
         self.check_err()?;
-        Ok((suffix, suffix_offset, stats))
+        Ok((suffix, suffix_offset, self.stats))
     }
 }
 
 impl Drop for StagedWriter {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.drain.take() {
-            let _ = h.join();
+        // A sink dropped without finish() must not strand its staging
+        // buffer; in-flight buffers are recycled by the drain workers
+        // unconditionally.
+        if let Some(buf) = self.current.take() {
+            self.pool.release(buf);
+        }
+        // Wait out any in-flight drains (the pre-runtime code joined its
+        // drain thread here, and that join was load-bearing): a caller
+        // that drops a failed sink and immediately re-creates the same
+        // path must not race stale positioned writes into the new file.
+        while self.inflight > 0 {
+            match self.done_rx.recv() {
+                Ok(_) => self.inflight -= 1,
+                Err(_) => break,
+            }
         }
     }
 }
@@ -196,7 +277,10 @@ mod tests {
             .truncate(true)
             .open(&path)
             .unwrap();
-        let mut w = StagedWriter::new(file.try_clone().unwrap(), buffers, buf_size, 512);
+        let file = Arc::new(file);
+        let pool = BufferPool::with_align(buffers, buf_size, 512);
+        let drain = DrainPool::new(1);
+        let mut w = StagedWriter::new(Arc::clone(&file), pool, drain, buffers, buf_size);
         for p in pieces {
             w.stage(p).unwrap();
         }
@@ -246,6 +330,72 @@ mod tests {
     fn empty_stream() {
         let got = run_staged(1, 512, &[]);
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn shared_pool_and_drain_serve_concurrent_sinks() {
+        // Many sinks over ONE pool and ONE drain pool: the multi-writer
+        // configuration the IoRuntime runs. Order within each file must
+        // hold; the pool must not leak buffers.
+        let dir = scratch_dir("staged-shared").unwrap();
+        let pool = BufferPool::with_align(3, 2048, 512);
+        let drain = DrainPool::new(2);
+        std::thread::scope(|scope| {
+            for i in 0..4usize {
+                let pool = pool.clone();
+                let drain = drain.clone();
+                let path = dir.join(format!("f{i}.bin"));
+                scope.spawn(move || {
+                    let data = vec![i as u8 + 1; 10_000 + i * 513];
+                    let file = Arc::new(
+                        std::fs::OpenOptions::new()
+                            .create(true)
+                            .write(true)
+                            .truncate(true)
+                            .open(&path)
+                            .unwrap(),
+                    );
+                    let mut w =
+                        StagedWriter::new(Arc::clone(&file), pool, drain, 2, 2048);
+                    for chunk in data.chunks(777) {
+                        w.stage(chunk).unwrap();
+                    }
+                    let (suffix, off, _) = w.finish().unwrap();
+                    file.write_all_at(&suffix, off).unwrap();
+                    file.set_len(data.len() as u64).unwrap();
+                    assert_eq!(std::fs::read(&path).unwrap(), data);
+                });
+            }
+        });
+        // every buffer returned to the pool (try_acquire can recycle or
+        // finish warm-up, but never exceed the cap)
+        let mut held = Vec::new();
+        for _ in 0..3 {
+            held.push(pool.try_acquire().expect("buffer leaked"));
+        }
+        assert!(pool.try_acquire().is_none(), "cap exceeded");
+        assert!(pool.allocations() <= 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dropped_sink_returns_buffer() {
+        let dir = scratch_dir("staged-drop").unwrap();
+        let pool = BufferPool::with_align(1, 1024, 512);
+        let drain = DrainPool::new(1);
+        let file = Arc::new(
+            std::fs::OpenOptions::new()
+                .create(true)
+                .write(true)
+                .truncate(true)
+                .open(dir.join("x.bin"))
+                .unwrap(),
+        );
+        let mut w = StagedWriter::new(file, pool.clone(), drain, 1, 1024);
+        w.stage(&[1, 2, 3]).unwrap();
+        drop(w);
+        assert!(pool.try_acquire().is_some(), "current buffer not recycled on drop");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

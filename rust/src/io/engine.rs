@@ -95,6 +95,18 @@ impl IoConfig {
         self
     }
 
+    /// Normalize alignment/buffer sizing: align ≥ 512 and a power of
+    /// two (callers guarantee the latter), IO buffer a nonzero multiple
+    /// of the alignment. Engines and the [`crate::io::runtime::IoRuntime`]
+    /// apply this once at construction so every sink sees coherent
+    /// geometry.
+    pub fn normalized(mut self) -> IoConfig {
+        let align = self.align.max(512);
+        self.align = align;
+        self.io_buf_size = self.io_buf_size.max(align).next_multiple_of(align);
+        self
+    }
+
     /// Microbenchmark mode ("pagecache-as-NVMe"): no fsync, no O_DIRECT.
     ///
     /// The container's virtio disk sustains only ~0.4 GB/s and is the
@@ -141,9 +153,12 @@ pub trait Sink: Send {
     fn finish(self: Box<Self>) -> Result<WriteStats>;
 }
 
-/// Factory for sinks. One engine instance owns its buffer pool / worker
-/// threads and is reused across checkpoints (setup cost off the hot
-/// path).
+/// Factory for sinks. An engine instance *borrows* its staging pool and
+/// drain workers — either private engine-lifetime resources (standalone
+/// construction) or the shared pools of an
+/// [`crate::io::runtime::IoRuntime`] — and is reused across
+/// checkpoints; `create` allocates no staging memory and spawns no
+/// threads.
 pub trait WriteEngine: Send + Sync {
     fn kind(&self) -> EngineKind;
     /// Open a sink writing to `path`; `expected_size` (if known) lets the
@@ -162,6 +177,8 @@ pub fn build_engine(cfg: &IoConfig) -> Box<dyn WriteEngine> {
 }
 
 /// Convenience: write `data` to `path` with engine `cfg`, return stats.
+/// Builds a throwaway engine — for one-off writes only; hot paths go
+/// through a persistent [`crate::io::runtime::IoRuntime`].
 pub fn write_file(cfg: &IoConfig, path: &Path, data: &[u8]) -> Result<WriteStats> {
     let engine = build_engine(cfg);
     let mut sink = engine.create(path, Some(data.len() as u64))?;

@@ -19,14 +19,28 @@
 //! * **Prefix/suffix split** ([`align`]): the largest aligned prefix goes
 //!   through the fast path; the sub-alignment suffix is written with
 //!   traditional I/O into the same file — no padding, no format change.
+//!
+//! All of the above is owned by the **persistent I/O runtime**
+//! ([`runtime`]): one long-lived [`runtime::IoRuntime`] holds the
+//! staging pool, the drain workers, and a persistent writer pool driven
+//! by a submission/completion ticket queue (`submit(WriteJob) ->
+//! Ticket`, `Ticket::wait() -> WriteStats`), plus a [`device::DeviceMap`]
+//! striping checkpoint partitions across the SSDs of the training
+//! environment. Engines borrow from the runtime; nothing on the
+//! steady-state checkpoint path allocates staging memory or spawns
+//! threads.
 
 pub mod align;
 pub mod buffer;
+pub mod device;
 pub mod direct_engine;
 pub mod double_buffer;
 pub mod engine;
 pub mod pending_queue;
+pub mod runtime;
 pub mod sync_engine;
 
 pub use buffer::{AlignedBuf, BufferPool};
+pub use device::DeviceMap;
 pub use engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
+pub use runtime::{IoRuntime, IoRuntimeConfig, Ticket, WriteJob, WriteSource};

@@ -11,6 +11,10 @@
 //!    asynchronous writes from a pinned staging-buffer pool, with
 //!    double-buffering to overlap the accelerator→DRAM copy with the
 //!    DRAM→SSD drain, and an aligned-prefix/unaligned-suffix file split.
+//!    All I/O resources live in a persistent [`io::IoRuntime`]: one
+//!    recycled staging pool, persistent writer/drain thread pools fed by
+//!    a submission/completion ticket queue, and an [`io::DeviceMap`]
+//!    striping checkpoint partitions across the available SSDs.
 //! 2. **Parallel checkpoint writes across data-parallel ranks**
 //!    ([`checkpoint::plan`], [`checkpoint::strategy`]): byte-granularity
 //!    partitioning of the serialized checkpoint over DP replicas, with
@@ -31,8 +35,9 @@
 //! Paper-scale experiments (8× DGX-2, 128 V100s, 24.8 GB/s of NVMe per
 //! node) run on a calibrated cluster/storage simulator ([`cluster`],
 //! [`sim`]); single-writer I/O effects are measured for real on local
-//! disk. See `DESIGN.md` for the substitution table and the
-//! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured.
+//! disk. See `DESIGN.md` (repo root) for the substitution table —
+//! page-cache-as-NVMe, threads-as-ranks, `DeviceMap`-as-SSD-array —
+//! and the PJRT stub arrangement.
 
 pub mod baseline;
 pub mod benchkit;

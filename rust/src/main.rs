@@ -12,6 +12,7 @@ use std::process::ExitCode;
 
 use fastpersist::checkpoint::strategy::WriterStrategy;
 use fastpersist::figures;
+use fastpersist::io::device::DeviceMap;
 use fastpersist::io::engine::{EngineKind, IoConfig};
 use fastpersist::runtime::artifacts::ArtifactManifest;
 use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
@@ -100,11 +101,28 @@ fn train_spec(name: &'static str) -> ArgSpec {
         .opt("strategy", "rank0|replica|socket|node|fixedN", "replica")
         .opt("engine", "buffered|single|double", "double")
         .opt("io-buf", "IO buffer size", "32MiB")
+        .opt("devices", "none | simN (N simulated SSDs) | dir,dir,...", "none")
         .opt("writers", "parallel DP writer threads", "2")
         .opt("ga", "gradient accumulation steps", "1")
         .opt("seed", "init/data seed", "0")
         .opt("keep-last", "checkpoints retained (0=all)", "3")
         .opt("log-every", "progress print interval", "10")
+}
+
+/// Parse a `--devices` spec into a [`DeviceMap`]: `none`, `simN`
+/// (N simulated SSDs under `base/devices`), or comma-separated mount
+/// points.
+fn parse_devices(spec: &str, base: &std::path::Path) -> Result<DeviceMap> {
+    match spec {
+        "" | "none" | "single" => Ok(DeviceMap::single()),
+        sim if sim.starts_with("sim") => {
+            let n: usize = sim[3..]
+                .parse()
+                .map_err(|_| Error::Config(format!("bad device spec {spec:?}")))?;
+            DeviceMap::simulated(n, &base.join("devices"))
+        }
+        roots => DeviceMap::from_roots(roots.split(',').map(PathBuf::from).collect()),
+    }
 }
 
 fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
@@ -113,14 +131,17 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
     let manifest = ArtifactManifest::load(&ArtifactManifest::default_dir())?;
     let mut io = IoConfig::with_kind(EngineKind::parse(parsed.get("engine"))?);
     io.io_buf_size = parsed.get_size("io-buf")? as usize;
+    let ckpt_dir = PathBuf::from(parsed.get("ckpt-dir"));
+    let devices = parse_devices(parsed.get("devices"), &ckpt_dir)?;
     let cfg = TrainerConfig {
         model: parsed.get("model").to_string(),
         steps: parsed.get_usize("steps")? as u64,
         ckpt_every: parsed.get_usize("ckpt-every")? as u64,
-        ckpt_dir: PathBuf::from(parsed.get("ckpt-dir")),
+        ckpt_dir,
         mode: CkptRunMode::parse(parsed.get("mode"))?,
         strategy: WriterStrategy::parse(parsed.get("strategy"))?,
         io,
+        devices,
         dp_writers: parsed.get_usize("writers")?,
         grad_accum: parsed.get_usize("ga")? as u64,
         seed: parsed.get_usize("seed")? as u64,
@@ -160,6 +181,7 @@ fn cmd_ckpt_write(args: Vec<String>) -> Result<()> {
         .opt("size", "checkpoint payload size", "256MiB")
         .opt("engine", "buffered|single|double", "double")
         .opt("io-buf", "IO buffer size", "32MiB")
+        .opt("devices", "none | simN | dir,dir,...", "none")
         .opt("writers", "parallel writer threads", "1")
         .opt("reps", "repetitions (median reported)", "3")
         .flag("durable", "fsync + O_DIRECT (measures the raw device)");
@@ -175,6 +197,7 @@ fn cmd_ckpt_write(args: Vec<String>) -> Result<()> {
 
     use fastpersist::checkpoint::engine::CheckpointEngine;
     use fastpersist::cluster::topology::RankPlacement;
+    use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
     use fastpersist::tensor::{DType, Tensor, TensorStore};
     let mut store = TensorStore::new();
     store
@@ -183,8 +206,17 @@ fn cmd_ckpt_write(args: Vec<String>) -> Result<()> {
     let group: Vec<RankPlacement> = (0..writers)
         .map(|r| RankPlacement { rank: r, node: 0, socket: r % 2, local_gpu: r })
         .collect();
-    let engine = CheckpointEngine::new(io, WriterStrategy::AllReplicas);
     let dir = fastpersist::io::engine::scratch_dir("ckpt-write")?;
+    let devices = parse_devices(parsed.get("devices"), &dir)?;
+    let defaults = IoRuntimeConfig::default();
+    let runtime = std::sync::Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io,
+        devices,
+        // honor --writers as true write concurrency
+        writer_threads: writers.max(defaults.writer_threads),
+        ..defaults
+    }));
+    let engine = CheckpointEngine::with_runtime(runtime, WriterStrategy::AllReplicas);
     let mut times = Vec::new();
     for i in 0..reps {
         let d = dir.join(format!("rep{i}"));

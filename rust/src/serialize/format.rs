@@ -83,23 +83,7 @@ impl FormatHeader {
 
     /// Decode from the start of `bytes`; returns (header, header_bytes).
     pub fn decode(bytes: &[u8]) -> Result<(FormatHeader, usize)> {
-        if bytes.len() < PREAMBLE_LEN {
-            return Err(Error::Format("truncated preamble".into()));
-        }
-        if bytes[..4] != MAGIC {
-            return Err(Error::Format(format!("bad magic {:?}", &bytes[..4])));
-        }
-        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
-        if version != VERSION {
-            return Err(Error::Format(format!("unsupported version {version}")));
-        }
-        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-        let end = PREAMBLE_LEN
-            .checked_add(hlen)
-            .ok_or_else(|| Error::Format("header length overflow".into()))?;
-        if bytes.len() < end {
-            return Err(Error::Format("truncated header".into()));
-        }
+        let end = header_extent(bytes)?;
         let json = std::str::from_utf8(&bytes[PREAMBLE_LEN..end])
             .map_err(|_| Error::Format("header not utf-8".into()))?;
         let header = FormatHeader::from_json(&Json::parse(json)?)?;
@@ -172,6 +156,56 @@ impl Checksum64 {
         }
         self.h
     }
+}
+
+/// Combine the header digest and the data digest into the checkpoint's
+/// *stream digest* (order-sensitive: swapping the halves changes it).
+///
+/// Writers compute the data digest during the **single** payload
+/// traversal of serialization, hash the (KB-scale) header bytes, and
+/// combine — the manifest digest no longer costs a second full-stream
+/// pass per checkpoint. Loaders recompute both halves from the
+/// assembled stream (see [`stream_digest_of`]) and compare.
+pub fn combine_digests(header_digest: u64, data_digest: u64) -> u64 {
+    const MUL: u64 = 0x9e3779b97f4a7c15;
+    let mut h: u64 = 0x84222325_cbf29ce4; // distinct IV from Checksum64
+    h = (h ^ header_digest).wrapping_mul(MUL);
+    h ^= h >> 29;
+    h = (h ^ data_digest).wrapping_mul(MUL);
+    h ^= h >> 29;
+    h
+}
+
+/// Byte length of the container prefix (preamble + header JSON) at the
+/// start of `bytes`; validates magic/version/bounds without parsing the
+/// header JSON itself.
+pub fn header_extent(bytes: &[u8]) -> Result<usize> {
+    if bytes.len() < PREAMBLE_LEN {
+        return Err(Error::Format("truncated preamble".into()));
+    }
+    if bytes[..4] != MAGIC {
+        return Err(Error::Format(format!("bad magic {:?}", &bytes[..4])));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::Format(format!("unsupported version {version}")));
+    }
+    let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let end = PREAMBLE_LEN
+        .checked_add(hlen)
+        .ok_or_else(|| Error::Format("header length overflow".into()))?;
+    if bytes.len() < end {
+        return Err(Error::Format("truncated header".into()));
+    }
+    Ok(end)
+}
+
+/// Stream digest of a fully assembled checkpoint stream: header digest
+/// and data digest computed in one linear scan, then combined. This is
+/// the loader-side counterpart of the writer's single-pass digest.
+pub fn stream_digest_of(stream: &[u8]) -> Result<u64> {
+    let end = header_extent(stream)?;
+    Ok(combine_digests(checksum64_slice(&stream[..end]), checksum64_slice(&stream[end..])))
 }
 
 /// Checksum over an iterator of chunks (chunking-invariant).
@@ -259,6 +293,34 @@ mod tests {
         for cut in [0, 3, 15, 17, enc.len() - 1] {
             assert!(FormatHeader::decode(&enc[..cut]).is_err(), "cut={cut}");
         }
+    }
+
+    #[test]
+    fn stream_digest_splits_at_header_boundary() {
+        let h = header();
+        let mut stream = h.encode();
+        let hdr_len = stream.len();
+        stream.extend_from_slice(&[7u8; 24]);
+        let expect = combine_digests(
+            checksum64_slice(&stream[..hdr_len]),
+            checksum64_slice(&stream[hdr_len..]),
+        );
+        assert_eq!(stream_digest_of(&stream).unwrap(), expect);
+        // sensitive to either half
+        let mut bad_data = stream.clone();
+        *bad_data.last_mut().unwrap() ^= 1;
+        assert_ne!(stream_digest_of(&bad_data).unwrap(), expect);
+        let mut bad_hdr = stream.clone();
+        bad_hdr[PREAMBLE_LEN + 1] ^= 1;
+        assert_ne!(stream_digest_of(&bad_hdr).unwrap(), expect);
+        // truncated stream is an error, not a wrong digest
+        assert!(stream_digest_of(&stream[..10]).is_err());
+    }
+
+    #[test]
+    fn combine_digests_is_order_sensitive() {
+        assert_ne!(combine_digests(1, 2), combine_digests(2, 1));
+        assert_ne!(combine_digests(0, 0), 0);
     }
 
     #[test]

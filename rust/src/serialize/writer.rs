@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 
 use crate::io::pending_queue::PendingQueue;
 use crate::io::Sink;
-use crate::serialize::format::{checksum64, FormatHeader};
+use crate::serialize::format::{checksum64, checksum64_slice, combine_digests, FormatHeader};
 use crate::tensor::TensorStore;
 use crate::util::json::Json;
 use crate::Result;
@@ -24,22 +24,39 @@ pub struct SerializedCheckpoint {
     header_bytes: Vec<u8>,
     snapshot: TensorStore,
     data_len: u64,
+    /// Digest of the whole logical stream (header ‖ data), folded from
+    /// the single serialization-time payload pass — the checkpoint
+    /// engine records this in the manifest without re-hashing.
+    stream_digest: u64,
 }
 
 impl SerializedCheckpoint {
     /// Serialize `store` (cheap: snapshots Arcs, encodes header JSON,
-    /// one digest pass over payload bytes).
+    /// **one** digest pass over payload bytes — the data digest feeds
+    /// both the header and, combined with the header digest, the
+    /// manifest's stream digest; the engine's former second full-stream
+    /// hash per checkpoint is gone).
     pub fn new(store: &TensorStore, extra: BTreeMap<String, Json>) -> SerializedCheckpoint {
         let snapshot = store.snapshot();
         let data_len = snapshot.total_bytes();
-        let digest = checksum64(snapshot.iter().map(|t| t.data.as_slice()));
-        let header = FormatHeader { tensors: snapshot.metas(), extra, data_len, digest };
-        SerializedCheckpoint { header_bytes: header.encode(), snapshot, data_len }
+        let data_digest = checksum64(snapshot.iter().map(|t| t.data.as_slice()));
+        let header =
+            FormatHeader { tensors: snapshot.metas(), extra, data_len, digest: data_digest };
+        let header_bytes = header.encode();
+        let stream_digest = combine_digests(checksum64_slice(&header_bytes), data_digest);
+        SerializedCheckpoint { header_bytes, snapshot, data_len, stream_digest }
     }
 
     /// Total length of the logical stream (header + data).
     pub fn total_len(&self) -> u64 {
         self.header_bytes.len() as u64 + self.data_len
+    }
+
+    /// Digest of the logical stream, for the checkpoint manifest.
+    /// Matches [`crate::serialize::format::stream_digest_of`] over the
+    /// assembled bytes.
+    pub fn stream_digest(&self) -> u64 {
+        self.stream_digest
     }
 
     pub fn header_len(&self) -> u64 {
@@ -171,6 +188,18 @@ mod tests {
             .unwrap();
             assert_eq!(got, full[start as usize..end as usize], "[{start},{end})");
         }
+    }
+
+    #[test]
+    fn stream_digest_matches_assembled_stream() {
+        let s = store(5, &[1000, 1, 4096]);
+        let ser = SerializedCheckpoint::new(&s, BTreeMap::new());
+        let bytes = ser.to_bytes();
+        assert_eq!(
+            ser.stream_digest(),
+            crate::serialize::format::stream_digest_of(&bytes).unwrap(),
+            "single-pass digest must equal the digest of the assembled stream"
+        );
     }
 
     #[test]

@@ -13,13 +13,16 @@
 //! ```
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::checkpoint::engine::CheckpointEngine;
 use crate::checkpoint::load::load_checkpoint;
 use crate::checkpoint::pipeline::PipelinedCheckpointer;
 use crate::checkpoint::strategy::WriterStrategy;
 use crate::cluster::topology::RankPlacement;
-use crate::io::engine::IoConfig;
+use crate::io::device::DeviceMap;
+use crate::io::engine::{EngineKind, IoConfig};
+use crate::io::runtime::{IoRuntime, IoRuntimeConfig};
 use crate::metrics::{Recorder, Timer};
 use crate::runtime::artifacts::ArtifactManifest;
 use crate::runtime::client::{lit_f32, lit_i32, to_f32_scalar, to_f32_vec, Executable, Runtime};
@@ -64,6 +67,9 @@ pub struct TrainerConfig {
     pub mode: CkptRunMode,
     pub strategy: WriterStrategy,
     pub io: IoConfig,
+    /// Storage mount points to stripe checkpoint partitions across
+    /// (empty map = everything in `ckpt_dir`).
+    pub devices: DeviceMap,
     /// Simulated DP writer ranks (threads) for parallel writes.
     pub dp_writers: usize,
     /// Gradient-accumulation steps per optimizer update (§2.1.2): F+B
@@ -87,6 +93,7 @@ impl TrainerConfig {
             mode: CkptRunMode::Pipelined,
             strategy: WriterStrategy::AllReplicas,
             io: IoConfig::fastpersist(),
+            devices: DeviceMap::single(),
             dp_writers: 2,
             grad_accum: 1,
             seed: 0,
@@ -105,6 +112,12 @@ pub struct Trainer {
     adam_exe: Executable,
     corpus: SyntheticCorpus,
     group: Vec<RankPlacement>,
+    /// The long-lived I/O subsystem: staging buffers, writer/drain
+    /// threads, device map — shared by every checkpoint of this run.
+    io_runtime: Arc<IoRuntime>,
+    /// Synchronous-mode engine (Baseline/Sync), built once at setup —
+    /// engine construction is off the per-iteration hot path.
+    engine: Option<CheckpointEngine>,
     pipe: Option<PipelinedCheckpointer>,
 }
 
@@ -145,13 +158,41 @@ impl Trainer {
         let group: Vec<RankPlacement> = (0..cfg.dp_writers.max(1))
             .map(|r| RankPlacement { rank: r, node: 0, socket: r % 2, local_gpu: r })
             .collect();
-        let pipe = match cfg.mode {
-            CkptRunMode::Pipelined if cfg.ckpt_every > 0 => {
-                let engine = CheckpointEngine::new(cfg.io.clone(), cfg.strategy);
-                Some(PipelinedCheckpointer::new(engine, group.clone()))
+        // One persistent I/O runtime for the whole run: every checkpoint
+        // (sync or pipelined) borrows its staging buffers and writer
+        // threads, and its device map routes the partitions.
+        let defaults = IoRuntimeConfig::default();
+        let io_runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: cfg.io.clone(),
+            devices: cfg.devices.clone(),
+            // "N writers" must mean N concurrent partition writes: size
+            // the persistent pool to the DP writer count.
+            writer_threads: cfg.dp_writers.max(defaults.writer_threads),
+            ..defaults
+        }));
+        let ckpt_on = cfg.ckpt_every > 0;
+        let mut engine = None;
+        let mut pipe = None;
+        match cfg.mode {
+            CkptRunMode::None => {}
+            CkptRunMode::Baseline if ckpt_on => {
+                // torch.save-equivalent: buffered single writer, through
+                // the same shared runtime.
+                engine = Some(
+                    CheckpointEngine::with_runtime(Arc::clone(&io_runtime), WriterStrategy::Rank0)
+                        .with_kind(EngineKind::Buffered),
+                );
             }
-            _ => None,
-        };
+            CkptRunMode::Sync if ckpt_on => {
+                engine =
+                    Some(CheckpointEngine::with_runtime(Arc::clone(&io_runtime), cfg.strategy));
+            }
+            CkptRunMode::Pipelined if ckpt_on => {
+                let e = CheckpointEngine::with_runtime(Arc::clone(&io_runtime), cfg.strategy);
+                pipe = Some(PipelinedCheckpointer::new(e, group.clone()));
+            }
+            _ => {}
+        }
         Ok(Trainer {
             cfg,
             state,
@@ -160,8 +201,16 @@ impl Trainer {
             adam_exe,
             corpus,
             group,
+            io_runtime,
+            engine,
             pipe,
         })
+    }
+
+    /// The run's persistent I/O runtime (staging-pool counters, device
+    /// map — useful for instrumentation and tests).
+    pub fn io_runtime(&self) -> &Arc<IoRuntime> {
+        &self.io_runtime
     }
 
     /// Newest checkpoint directory (by step number) under `dir`.
@@ -285,16 +334,12 @@ impl Trainer {
             let extras = self.state.extras();
             match self.cfg.mode {
                 CkptRunMode::None => {}
-                CkptRunMode::Baseline => {
+                // Baseline and Sync share the persistent engine built at
+                // setup: no per-iteration engine construction, staging
+                // buffers recycled from the shared runtime pool.
+                CkptRunMode::Baseline | CkptRunMode::Sync => {
                     let ck = Timer::start();
-                    let out = CheckpointEngine::baseline().write(&store, extras, &dir, &self.group)?;
-                    self.recorder.record("stall_s", ck.secs());
-                    self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
-                    self.recorder.count("ckpts", 1);
-                }
-                CkptRunMode::Sync => {
-                    let ck = Timer::start();
-                    let engine = CheckpointEngine::new(self.cfg.io.clone(), self.cfg.strategy);
+                    let engine = self.engine.as_ref().expect("sync mode has engine");
                     let out = engine.write(&store, extras, &dir, &self.group)?;
                     self.recorder.record("stall_s", ck.secs());
                     self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
@@ -335,7 +380,11 @@ impl Trainer {
         let cutoff = steps.len().saturating_sub(self.cfg.keep_last);
         for &s in &steps[..cutoff] {
             if s != newest {
-                let _ = std::fs::remove_dir_all(self.step_dir(s));
+                let dir = self.step_dir(s);
+                // device-side partitions first: the GC tag needs the
+                // checkpoint dir to still exist
+                self.cfg.devices.remove_checkpoint(&dir);
+                let _ = std::fs::remove_dir_all(&dir);
             }
         }
         Ok(())

@@ -25,6 +25,7 @@ fn cfg(model: &str, dir: PathBuf) -> TrainerConfig {
         mode: CkptRunMode::Pipelined,
         strategy: WriterStrategy::AllReplicas,
         io: IoConfig::fastpersist().microbench(),
+        devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,
         grad_accum: 1,
         seed: 42,

@@ -1,0 +1,190 @@
+//! Integration: the persistent I/O runtime under concurrent load —
+//! pipelined + direct checkpoints interleaved through ONE shared
+//! runtime, multi-device striping with manifest-recorded assignments,
+//! and zero steady-state staging allocations across the whole workload.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use fastpersist::checkpoint::engine::CheckpointEngine;
+use fastpersist::checkpoint::load::load_checkpoint;
+use fastpersist::checkpoint::pipeline::PipelinedCheckpointer;
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::cluster::topology::RankPlacement;
+use fastpersist::cluster::{ClusterSpec, Parallelism, Topology};
+use fastpersist::io::device::DeviceMap;
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::util::json::Json;
+use fastpersist::util::rng::Rng;
+
+fn store_with(seed: u64, nbytes: usize) -> TensorStore {
+    let mut rng = Rng::new(seed);
+    let mut s = TensorStore::new();
+    let mut data = vec![0u8; nbytes];
+    rng.fill_bytes(&mut data);
+    s.push(Tensor::new("payload", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+    s
+}
+
+fn extra(step: i64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".into(), Json::Int(step));
+    m
+}
+
+fn dp_group(dp: usize) -> Vec<RankPlacement> {
+    Topology::new(ClusterSpec::dgx2(1), Parallelism::dense(dp, 1, 1))
+        .unwrap()
+        .dp_group(0)
+}
+
+fn shared_runtime(devices: DeviceMap) -> Arc<IoRuntime> {
+    Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        devices,
+        ..IoRuntimeConfig::default()
+    }))
+}
+
+#[test]
+fn interleaved_pipelined_and_direct_checkpoints_share_one_runtime() {
+    let dir = scratch_dir("it-shared-runtime").unwrap();
+    let runtime = shared_runtime(DeviceMap::single());
+
+    // Pipelined helper and direct engine both submit into the SAME
+    // runtime's writer pool and staging buffers.
+    let pipe_engine =
+        CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas);
+    let direct_engine =
+        CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas);
+    let mut pipe = PipelinedCheckpointer::new(pipe_engine, dp_group(2));
+
+    let iters = 4i64;
+    let mut pipe_stores = Vec::new();
+    let mut direct_stores = Vec::new();
+    for i in 0..iters {
+        pipe.wait_previous().unwrap();
+        let ps = store_with(100 + i as u64, 150_000);
+        pipe.request(&ps, extra(i), dir.join(format!("pipe{i}"))).unwrap();
+        pipe_stores.push(ps);
+        // while the pipelined write is in flight, a direct checkpoint
+        // of a different store goes through the same runtime
+        let ds = store_with(200 + i as u64, 90_000);
+        direct_engine
+            .write(&ds, extra(i), &dir.join(format!("direct{i}")), &dp_group(4))
+            .unwrap();
+        direct_stores.push(ds);
+    }
+    let outcomes = pipe.finish().unwrap();
+    assert_eq!(outcomes.len(), iters as usize);
+
+    for i in 0..iters {
+        let (loaded, header, _) = load_checkpoint(&dir.join(format!("pipe{i}")), 2).unwrap();
+        assert!(loaded.content_eq(&pipe_stores[i as usize]), "pipe{i}");
+        assert_eq!(header.extra["step"], Json::Int(i));
+        let (loaded, header, _) = load_checkpoint(&dir.join(format!("direct{i}")), 2).unwrap();
+        assert!(loaded.content_eq(&direct_stores[i as usize]), "direct{i}");
+        assert_eq!(header.extra["step"], Json::Int(i));
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn steady_state_interleaving_never_allocates_staging_buffers() {
+    let dir = scratch_dir("it-steady").unwrap();
+    let runtime = shared_runtime(DeviceMap::single());
+    let engine = CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas);
+
+    // warm-up: one checkpoint plus a deterministic pool prewarm
+    engine
+        .write(&store_with(1, 120_000), extra(0), &dir.join("warm"), &dp_group(4))
+        .unwrap();
+    runtime.staging().prewarm();
+    let allocs = runtime.staging().allocations();
+    let acquires = runtime.staging().acquires();
+
+    // three more checkpoints + concurrent direct writes from threads
+    std::thread::scope(|scope| {
+        for t in 0..3u64 {
+            let engine = engine.clone();
+            let d = dir.join(format!("t{t}"));
+            scope.spawn(move || {
+                let s = store_with(10 + t, 80_000);
+                engine.write(&s, extra(t as i64), &d, &dp_group(2)).unwrap();
+                let (loaded, _, _) = load_checkpoint(&d, 2).unwrap();
+                assert!(loaded.content_eq(&s));
+            });
+        }
+    });
+    assert_eq!(
+        runtime.staging().allocations(),
+        allocs,
+        "no staging-buffer allocation allowed on the steady-state path"
+    );
+    assert!(runtime.staging().acquires() > acquires, "writes must recycle pooled buffers");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn multi_device_dp8_roundtrip_is_bit_identical() {
+    // Acceptance: a DP=8 checkpoint striped across >= 2 DeviceMap mount
+    // points reloads bit-identically via the manifest's recorded device
+    // assignments.
+    let base = scratch_dir("it-devmap8").unwrap();
+    let devices = DeviceMap::simulated(2, &base.join("ssds")).unwrap();
+    let runtime = shared_runtime(devices);
+    let engine = CheckpointEngine::with_runtime(runtime, WriterStrategy::AllReplicas);
+
+    let store = store_with(42, 500_000);
+    let dir = base.join("ckpt");
+    let out = engine.write(&store, extra(9), &dir, &dp_group(8)).unwrap();
+    assert_eq!(out.stats.len(), 8);
+    assert_eq!(out.manifest.devices().len(), 2, "both devices must be used");
+    // partitions alternate across the two devices
+    for (i, p) in out.manifest.partitions.iter().enumerate() {
+        let root = p.device.as_deref().expect("device recorded");
+        assert!(root.ends_with(&format!("ssd{}", i % 2)), "partition {i} on {root}");
+    }
+
+    let (loaded, header, manifest) = load_checkpoint(&dir, 4).unwrap();
+    assert!(loaded.content_eq(&store), "multi-device reload must be bit-identical");
+    assert_eq!(header.extra["step"], Json::Int(9));
+    assert_eq!(manifest.digest, out.manifest.digest);
+
+    // integrity: corrupting a partition ON A DEVICE is caught at load
+    let victim = &manifest.partitions[3];
+    let vpath = fastpersist::checkpoint::load::partition_path(&dir, victim);
+    let mut bytes = std::fs::read(&vpath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x5a;
+    std::fs::write(&vpath, bytes).unwrap();
+    assert!(load_checkpoint(&dir, 2).is_err(), "digest must catch device-side corruption");
+
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn pipelined_checkpoints_stripe_across_devices_too() {
+    let base = scratch_dir("it-devpipe").unwrap();
+    let devices = DeviceMap::simulated(3, &base.join("ssds")).unwrap();
+    let runtime = shared_runtime(devices);
+    let engine = CheckpointEngine::with_runtime(runtime, WriterStrategy::AllReplicas);
+    let mut pipe = PipelinedCheckpointer::new(engine, dp_group(4));
+
+    let mut stores = Vec::new();
+    for i in 0..3i64 {
+        pipe.wait_previous().unwrap();
+        let s = store_with(300 + i as u64, 120_000);
+        pipe.request(&s, extra(i), base.join(format!("ck{i}"))).unwrap();
+        stores.push(s);
+    }
+    let outcomes = pipe.finish().unwrap();
+    for (i, out) in outcomes.iter().enumerate() {
+        assert_eq!(out.manifest.devices().len(), 3, "ck{i} must stripe over all devices");
+        let (loaded, _, _) = load_checkpoint(&base.join(format!("ck{i}")), 2).unwrap();
+        assert!(loaded.content_eq(&stores[i]));
+    }
+    std::fs::remove_dir_all(&base).unwrap();
+}
