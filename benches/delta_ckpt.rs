@@ -1,0 +1,147 @@
+//! Bench: full vs incremental (delta) checkpointing — bytes written and
+//! latency per checkpoint, through one shared [`IoRuntime`].
+//!
+//! Workload: a model-state payload where <5% of the parameters mutate
+//! per iteration (the sparse-update regime of embedding-heavy models —
+//! the case Check-N-Run's differential checkpointing targets). Each
+//! iteration is checkpointed twice: as a full snapshot through the
+//! parallel [`CheckpointEngine`], and as a chunk-granular delta through
+//! [`DeltaCheckpointer`]. The delta side should write an order of
+//! magnitude fewer bytes (acceptance: ≥80% fewer at <5% mutation).
+//!
+//! Emits `BENCH_delta.json` (benchkit JSON) for trajectory tracking.
+//!
+//!     cargo bench --bench delta_ckpt
+//!     FASTPERSIST_BENCH_FAST=1 cargo bench --bench delta_ckpt   (CI-speed)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastpersist::benchkit::{write_bench_json, BenchGroup, BenchResult};
+use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+use fastpersist::checkpoint::engine::CheckpointEngine;
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::util::bytes::human;
+use fastpersist::util::json::Json;
+use fastpersist::util::rng::Rng;
+use fastpersist::util::stats::Summary;
+use fastpersist::util::table::Table;
+
+/// Mutate `frac` of the payload per step: a contiguous hot region whose
+/// position advances each step (sparse, locality-friendly updates).
+fn mutate(store: &mut TensorStore, frac: f64, step: u64) {
+    let t = store.get("params").unwrap();
+    let mut data = t.data.as_slice().to_vec();
+    let n = ((data.len() as f64) * frac) as usize;
+    let start = (step as usize * 3 * n) % (data.len() - n.max(1));
+    let mut rng = Rng::new(step ^ 0xde17a);
+    rng.fill_bytes(&mut data[start..start + n]);
+    store.update("params", data).unwrap();
+}
+
+fn extra(step: u64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Int(step as i64));
+    m
+}
+
+fn main() {
+    let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
+    let payload: usize = if fast { 8 << 20 } else { 32 << 20 };
+    let iters: u64 = if fast { 5 } else { 10 };
+    let mutation = 0.04; // <5% of parameters per iteration
+    let chunk_size: u64 = 256 << 10;
+
+    let base = scratch_dir("bench-delta").unwrap();
+    let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        ..IoRuntimeConfig::default()
+    }));
+    runtime.staging().prewarm();
+    let engine =
+        CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas);
+    let mut delta = DeltaCheckpointer::new(
+        Arc::clone(&runtime),
+        DeltaConfig { chunk_size, max_chain: u64::MAX },
+    );
+
+    let mut store = TensorStore::new();
+    let mut data = vec![0u8; payload];
+    Rng::new(1).fill_bytes(&mut data);
+    store.push(Tensor::new("params", DType::U8, vec![payload], data).unwrap()).unwrap();
+
+    println!(
+        "\n=== delta vs full checkpoint ({} payload, {:.0}% mutation/iter, {} chunks) ===",
+        human(payload as u64),
+        mutation * 100.0,
+        human(chunk_size),
+    );
+
+    // warm both paths (first delta write is the chain base = full cost)
+    engine.write_single(&store, extra(0), &base.join("full").join("step-00000000")).unwrap();
+    delta.write(&store, extra(0), &base.join("chain").join("step-00000000")).unwrap();
+
+    let mut full_lat = Vec::new();
+    let mut delta_lat = Vec::new();
+    let mut full_bytes = 0u64;
+    let mut delta_bytes = 0u64;
+    for step in 1..=iters {
+        mutate(&mut store, mutation, step);
+        let t0 = Instant::now();
+        let out = engine
+            .write_single(&store, extra(step), &base.join("full").join(format!("step-{step:08}")))
+            .unwrap();
+        full_lat.push(t0.elapsed().as_secs_f64());
+        full_bytes += out.total_bytes;
+        let t0 = Instant::now();
+        let out = delta
+            .write(&store, extra(step), &base.join("chain").join(format!("step-{step:08}")))
+            .unwrap();
+        delta_lat.push(t0.elapsed().as_secs_f64());
+        delta_bytes += out.written_bytes;
+        assert!(!out.is_base, "steady-state writes must be deltas");
+    }
+
+    let saved = 1.0 - delta_bytes as f64 / full_bytes as f64;
+    let full = Summary::of(&full_lat);
+    let dlt = Summary::of(&delta_lat);
+    let mut table = Table::new(vec![
+        "path", "bytes/ckpt", "latency p50 (ms)", "written vs full",
+    ]);
+    table.row(vec![
+        "full snapshot".into(),
+        human(full_bytes / iters),
+        format!("{:.2}", full.p50 * 1e3),
+        "100%".into(),
+    ]);
+    table.row(vec![
+        "delta (dirty chunks)".into(),
+        human(delta_bytes / iters),
+        format!("{:.2}", dlt.p50 * 1e3),
+        format!("{:.1}%", (1.0 - saved) * 100.0),
+    ]);
+    println!("{}", table.render());
+    println!(
+        "delta writes {:.1}% fewer bytes than full at {:.0}% mutation (target: >=80%)",
+        saved * 100.0,
+        mutation * 100.0
+    );
+
+    let mut group = BenchGroup::new("delta vs full checkpoint bytes/latency");
+    group.results.push(BenchResult {
+        name: "full-snapshot".into(),
+        summary: full,
+        bytes_per_iter: Some(full_bytes / iters),
+    });
+    group.results.push(BenchResult {
+        name: format!("delta-incremental (writes {:.1}% of full)", (1.0 - saved) * 100.0),
+        summary: dlt,
+        bytes_per_iter: Some(delta_bytes / iters),
+    });
+    let _ = write_bench_json("delta", &[&group]);
+    let _ = std::fs::remove_dir_all(&base);
+}

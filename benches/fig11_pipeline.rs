@@ -5,19 +5,32 @@
 //! Real part: per-iteration wall time with sync vs pipelined
 //! checkpointing at GAS ∈ {1, 4, 16}. Higher GAS → more F+B per
 //! optimizer step → more room to hide the write (§2.1.2/§5.6.1).
+//!
+//! All trainer runs submit into **one shared [`IoRuntime`]** (PR 1's
+//! persistent staging pool + writer pool), so back-to-back modes reuse
+//! the same staging buffers and writer threads — steady-state, not
+//! cold-start, numbers. Emits `BENCH_fig11.json` (benchkit JSON) for
+//! trajectory tracking.
 
+use std::sync::Arc;
+
+use fastpersist::benchkit::{write_bench_json, BenchGroup, BenchResult};
+use fastpersist::checkpoint::delta::CheckpointStrategy;
 use fastpersist::checkpoint::strategy::WriterStrategy;
 use fastpersist::io::engine::IoConfig;
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
 use fastpersist::runtime::artifacts::ArtifactManifest;
 use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
+use fastpersist::util::stats::Summary;
 use fastpersist::util::table::Table;
 
 fn run_mode(
     manifest: &ArtifactManifest,
+    runtime: &Arc<IoRuntime>,
     mode: CkptRunMode,
     ga: u64,
     dir: std::path::PathBuf,
-) -> (f64, f64) {
+) -> (Vec<f64>, f64) {
     let cfg = TrainerConfig {
         model: "tiny".into(),
         steps: 8,
@@ -25,6 +38,7 @@ fn run_mode(
         ckpt_dir: dir,
         mode,
         strategy: WriterStrategy::AllReplicas,
+        ckpt_strategy: CheckpointStrategy::Full,
         io: IoConfig::fastpersist().microbench(),
         devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,
@@ -33,9 +47,9 @@ fn run_mode(
         keep_last: 1,
         log_every: 0,
     };
-    let mut t = Trainer::new(manifest, cfg).unwrap();
+    let mut t = Trainer::new_with_runtime(manifest, cfg, Arc::clone(runtime)).unwrap();
     t.run().unwrap();
-    (t.recorder.summary("iter_s").p50, t.total_stall() / 8.0)
+    (t.recorder.samples("iter_s").to_vec(), t.total_stall() / 8.0)
 }
 
 fn main() {
@@ -48,27 +62,63 @@ fn main() {
         }
     };
     let dir = fastpersist::io::engine::scratch_dir("bench-fig11").unwrap();
+    // One persistent I/O runtime for every mode/GAS combination below:
+    // staging buffers are allocated once, writer threads live across
+    // all runs (the PR 1 steady-state regime).
+    let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        ..IoRuntimeConfig::default()
+    }));
+    runtime.staging().prewarm();
     println!("\n=== fig11 (real): tiny GPT, per-iteration ckpt, sync vs pipelined ===");
+    let mut group = BenchGroup::new("fig11: sync vs pipelined iteration time (shared runtime)");
     let mut table = Table::new(vec![
         "GAS", "sync iter p50 (ms)", "pipe iter p50 (ms)", "sync stall/iter (ms)",
         "pipe stall/iter (ms)",
     ]);
     for ga in [1u64, 4, 16] {
-        let (sync_iter, sync_stall) =
-            run_mode(&manifest, CkptRunMode::Sync, ga, dir.join(format!("s{ga}")));
-        let (pipe_iter, pipe_stall) =
-            run_mode(&manifest, CkptRunMode::Pipelined, ga, dir.join(format!("p{ga}")));
+        let (sync_iters, sync_stall) = run_mode(
+            &manifest,
+            &runtime,
+            CkptRunMode::Sync,
+            ga,
+            dir.join(format!("s{ga}")),
+        );
+        let (pipe_iters, pipe_stall) = run_mode(
+            &manifest,
+            &runtime,
+            CkptRunMode::Pipelined,
+            ga,
+            dir.join(format!("p{ga}")),
+        );
+        let sync = Summary::of(&sync_iters);
+        let pipe = Summary::of(&pipe_iters);
         table.row(vec![
             ga.to_string(),
-            format!("{:.1}", sync_iter * 1e3),
-            format!("{:.1}", pipe_iter * 1e3),
+            format!("{:.1}", sync.p50 * 1e3),
+            format!("{:.1}", pipe.p50 * 1e3),
             format!("{:.2}", sync_stall * 1e3),
             format!("{:.2}", pipe_stall * 1e3),
         ]);
+        group.results.push(BenchResult {
+            name: format!("iter/sync ga{ga}"),
+            summary: sync,
+            bytes_per_iter: None,
+        });
+        group.results.push(BenchResult {
+            name: format!("iter/pipelined ga{ga}"),
+            summary: pipe,
+            bytes_per_iter: None,
+        });
     }
     println!("{}", table.render());
-    println!("(single-vCPU container: pipelining removes the *stall*; wall-clock");
-    println!(" gains require a second core — see EXPERIMENTS.md)");
+    let allocs = runtime.staging().allocations();
+    println!(
+        "(shared runtime: {} staging allocations across all {} runs; single-vCPU",
+        allocs, 6
+    );
+    println!(" containers show pipelining as removed *stall* — see ARCHITECTURE.md §1)");
+    let _ = write_bench_json("fig11", &[&group]);
 
     fastpersist::figures::fig11::run().unwrap();
     let _ = std::fs::remove_dir_all(&dir);

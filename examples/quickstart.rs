@@ -31,6 +31,7 @@ fn main() -> fastpersist::Result<()> {
             ckpt_dir: base_dir.join(label.replace(' ', "-")),
             mode,
             strategy: WriterStrategy::AllReplicas,
+            ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::Full,
             io: IoConfig::fastpersist().microbench(),
             devices: fastpersist::io::device::DeviceMap::single(),
             dp_writers: 2,

@@ -6,7 +6,7 @@
 //!     cargo run --release --example train_e2e               # gpt20m, 300 steps
 //!     cargo run --release --example train_e2e gpt100m 60    # 91M params
 //!
-//! The run is recorded in EXPERIMENTS.md (§E2E).
+//! See ARCHITECTURE.md for the substitution table behind the numbers.
 
 use fastpersist::checkpoint::strategy::WriterStrategy;
 use fastpersist::io::engine::{scratch_dir, IoConfig};
@@ -28,6 +28,7 @@ fn main() -> fastpersist::Result<()> {
         ckpt_dir: ckpt_dir.clone(),
         mode: CkptRunMode::Pipelined,
         strategy: WriterStrategy::AllReplicas,
+        ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::Full,
         io: IoConfig::fastpersist().microbench(),
         devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,

@@ -31,6 +31,7 @@ impl Default for TorchSave {
 }
 
 impl TorchSave {
+    /// A baseline writer with default buffered configuration.
     pub fn new() -> TorchSave {
         TorchSave { engine: CheckpointEngine::baseline() }
     }

@@ -15,7 +15,9 @@ use crate::util::stats::Summary;
 /// Configuration for a benchmark run.
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
+    /// Untimed iterations before sampling.
     pub warmup_iters: usize,
+    /// Timed iterations collected.
     pub sample_iters: usize,
     /// Trim this fraction of the highest samples (OS noise on shared CI).
     pub trim_frac: f64,
@@ -28,6 +30,7 @@ impl Default for BenchConfig {
 }
 
 impl BenchConfig {
+    /// Minimal sampling for CI-speed runs.
     pub fn quick() -> Self {
         BenchConfig { warmup_iters: 1, sample_iters: 5, trim_frac: 0.0 }
     }
@@ -45,13 +48,16 @@ impl BenchConfig {
 /// One benchmark measurement result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Result label (shown in reports and JSON).
     pub name: String,
+    /// Trimmed timing statistics.
     pub summary: Summary,
     /// Optional bytes processed per iteration (enables GB/s reporting).
     pub bytes_per_iter: Option<u64>,
 }
 
 impl BenchResult {
+    /// Median throughput when `bytes_per_iter` is known.
     pub fn throughput_gbps(&self) -> Option<f64> {
         self.bytes_per_iter
             .map(|b| crate::util::bytes::gbps(b, self.summary.p50))
@@ -77,6 +83,7 @@ impl BenchResult {
         Json::obj(fields)
     }
 
+    /// One human-readable report line.
     pub fn report_line(&self) -> String {
         let mut s = format!(
             "{:<44} p50 {:>10}  mean {:>10} ±{:>5.1}%",
@@ -145,16 +152,21 @@ pub fn fmt_duration(secs: f64) -> String {
 
 /// Group runner: collects results and prints a header + lines.
 pub struct BenchGroup {
+    /// Group title printed above the result lines.
     pub title: String,
+    /// Sampling configuration shared by the group's benches.
     pub cfg: BenchConfig,
+    /// Results collected so far.
     pub results: Vec<BenchResult>,
 }
 
 impl BenchGroup {
+    /// A group using the environment's [`BenchConfig`].
     pub fn new(title: &str) -> BenchGroup {
         BenchGroup { title: title.to_string(), cfg: BenchConfig::from_env(), results: Vec::new() }
     }
 
+    /// Time `f` and record the result under `name`.
     pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
         let r = bench(name, &self.cfg, f);
         println!("  {}", r.report_line());
@@ -162,6 +174,7 @@ impl BenchGroup {
         self.results.last().unwrap()
     }
 
+    /// Like [`BenchGroup::bench`], annotating bytes/iter for GB/s.
     pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: u64, f: F) -> &BenchResult {
         let r = bench_bytes(name, &self.cfg, bytes, f);
         println!("  {}", r.report_line());
@@ -169,11 +182,13 @@ impl BenchGroup {
         self.results.last().unwrap()
     }
 
+    /// Print the group header and return the new group.
     pub fn start(title: &str) -> BenchGroup {
         println!("\n=== {title} ===");
         BenchGroup::new(title)
     }
 
+    /// Machine-readable form for `BENCH_*.json`.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("title", Json::str(&self.title)),

@@ -1,0 +1,1006 @@
+//! Incremental (delta) checkpointing over the shared I/O runtime.
+//!
+//! FastPersist makes the *write path* fast; this module makes the
+//! *written bytes* small, which is what per-iteration checkpointing at
+//! the ROADMAP's scale ultimately needs. The idea follows Check-N-Run's
+//! differential checkpointing: between consecutive checkpoints most of
+//! the serialized state is unchanged, so only the changed part needs to
+//! reach storage — the rest can be *referenced* from earlier
+//! checkpoints.
+//!
+//! ## Mechanism
+//!
+//! The serialized stream (header ‖ tensor payloads, exactly the bytes a
+//! full checkpoint would write) is cut into a fixed grid of
+//! `chunk_size`-byte chunks. Each chunk is hashed in a single pass over
+//! the stream ([`chunk_hashes`], reusing the streaming
+//! [`Checksum64`] digest machinery). The hashes are
+//! diffed against the previous checkpoint's chunk table:
+//!
+//! * **dirty** chunks (hash or length changed, or no predecessor) are
+//!   submitted to the shared [`IoRuntime`] writer pool as one
+//!   [`WriteJob`] each — striped across the runtime's
+//!   [`crate::io::DeviceMap`] exactly like full-checkpoint partitions;
+//! * **clean** chunks are *inherited*: the new manifest's chunk table
+//!   entry points at the sibling checkpoint directory that physically
+//!   holds the chunk file.
+//!
+//! The resulting manifest (v3, [`DeltaSection`]) is **fully resolved**:
+//! loading never walks ancestor manifests, it just reads each chunk
+//! from the directory its entry names, reassembles the stream, and
+//! verifies the stream digest — bit-identical to loading a full
+//! checkpoint of the same state. The manifest is published last
+//! (atomic rename), so an interrupted delta flush leaves no manifest
+//! and recovery simply falls back to the newest complete checkpoint.
+//!
+//! ## Chains, compaction, GC
+//!
+//! Deltas form a chain: `base ← Δ₁ ← Δ₂ …`. Every
+//! [`DeltaConfig::max_chain`] deltas the chain is *compacted*: the next
+//! checkpoint is written as a fresh base (all chunks local), breaking
+//! every reference to older directories. [`prune_chain`] then garbage
+//! collects: unreferenced checkpoint directories are removed outright,
+//! while directories still holding chunks that live checkpoints
+//! reference are demoted to chunk stores (manifest dropped) and their
+//! *dead* chunk files — those no retained manifest references — are
+//! deleted.
+//!
+//! Chain members must be sibling directories (the trainer's
+//! `step-NNNNNNNN` layout); the manifest records directory *names*, not
+//! paths, so a whole checkpoint tree can be relocated as long as
+//! single-device layouts are used (device routing pins directories, see
+//! [`crate::io::DeviceMap::checkpoint_tag`]).
+//!
+//! Chunk hashes are 64-bit non-cryptographic checksums: ample for
+//! corruption detection and change tracking of trusted local state (a
+//! colliding *and* torn update is what the stream digest still
+//! catches), not a content-addressing security boundary.
+//!
+//! Cost notes (candidate follow-ups, tracked in ROADMAP.md):
+//!
+//! * a delta write makes **two** CPU passes over the state —
+//!   serialization's digest pass, then the grid-hash pass. They cannot
+//!   be fused under the current container format because chunk 0
+//!   contains the header, and the header embeds the data digest, so
+//!   grid hashing can only start after the digest pass completes.
+//!   Chunking the data section separately from the header would remove
+//!   the second pass.
+//! * a **base** (or compaction) checkpoint writes every chunk as its
+//!   own file — `total_len / chunk_size` WriteJobs, each with its own
+//!   create/fsync — where the partitioned full path writes one file
+//!   per DP writer. At production state sizes the every-`max_chain`-th
+//!   checkpoint therefore stalls longer than a plain full snapshot;
+//!   coalescing chunk runs into segment files (manifest records
+//!   per-chunk offsets) would fix it without giving up chunk-level
+//!   inheritance.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::checkpoint::engine::CheckpointOutcome;
+use crate::checkpoint::manifest::{
+    CheckpointManifest, ChunkEntry, DeltaSection, MANIFEST_FILE,
+};
+use crate::io::device::DeviceMap;
+use crate::io::engine::WriteStats;
+use crate::io::runtime::{IoRuntime, Ticket, WriteJob};
+use crate::serialize::format::{checksum64_slice, Checksum64};
+use crate::serialize::writer::SerializedCheckpoint;
+use crate::tensor::TensorStore;
+use crate::util::json::Json;
+use crate::util::threadpool::parallel_map;
+use crate::{Error, Result};
+
+/// Tuning knobs for incremental checkpointing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeltaConfig {
+    /// Chunk-grid size in bytes. The default (1 MiB) is a multiple of
+    /// every supported I/O alignment; small sizes track changes more
+    /// precisely but write more, smaller files.
+    pub chunk_size: u64,
+    /// Maximum deltas after a base before the chain is compacted into a
+    /// fresh base (0 = every checkpoint is a base).
+    pub max_chain: u64,
+}
+
+impl Default for DeltaConfig {
+    fn default() -> Self {
+        DeltaConfig { chunk_size: 1 << 20, max_chain: 8 }
+    }
+}
+
+impl DeltaConfig {
+    /// Clamp the chunk size to at least one I/O alignment unit (4 KiB)
+    /// so chunk files keep the direct-write fast path.
+    pub fn normalized(self) -> DeltaConfig {
+        DeltaConfig { chunk_size: self.chunk_size.max(4096), ..self }
+    }
+}
+
+/// Which checkpoint layout the trainer produces each iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckpointStrategy {
+    /// Full snapshot every time: byte-partitioned parallel writes via
+    /// [`crate::checkpoint::CheckpointEngine`].
+    Full,
+    /// Chunk-granular incremental checkpoints via [`DeltaCheckpointer`].
+    Delta(DeltaConfig),
+}
+
+impl CheckpointStrategy {
+    /// Short CLI name: `full`, or `delta<max_chain>`.
+    pub fn name(self) -> String {
+        match self {
+            CheckpointStrategy::Full => "full".into(),
+            CheckpointStrategy::Delta(d) => format!("delta{}", d.max_chain),
+        }
+    }
+
+    /// Parse `full`, `delta`, or `delta<N>` (N = max chain length).
+    pub fn parse(s: &str) -> Result<CheckpointStrategy> {
+        match s {
+            "full" => Ok(CheckpointStrategy::Full),
+            "delta" => Ok(CheckpointStrategy::Delta(DeltaConfig::default())),
+            other => {
+                if let Some(n) = other.strip_prefix("delta") {
+                    let max_chain: u64 = n
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad checkpoint strategy {other:?}")))?;
+                    return Ok(CheckpointStrategy::Delta(DeltaConfig {
+                        max_chain,
+                        ..DeltaConfig::default()
+                    }));
+                }
+                Err(Error::Config(format!("unknown checkpoint strategy {other:?}")))
+            }
+        }
+    }
+}
+
+/// Hash + length of one chunk of a serialized stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkDigest {
+    /// Streaming checksum of the chunk's bytes.
+    pub hash: u64,
+    /// Chunk length (== grid size except for the final chunk).
+    pub len: u64,
+}
+
+/// Chunk-grid hashes of a serialized checkpoint, computed in **one**
+/// pass over the stream (no materialization): pieces from
+/// [`SerializedCheckpoint::emit_range`] are split at grid boundaries
+/// and fed to a per-chunk [`Checksum64`]. Chunk `i`'s hash equals
+/// `checksum64_slice` of stream bytes `[i*chunk_size, ...)`.
+pub fn chunk_hashes(ser: &SerializedCheckpoint, chunk_size: u64) -> Vec<ChunkDigest> {
+    assert!(chunk_size > 0, "chunk_size must be positive");
+    let total = ser.total_len();
+    let mut out: Vec<ChunkDigest> = Vec::with_capacity((total / chunk_size) as usize + 1);
+    let mut cur = Checksum64::new();
+    let mut filled = 0u64;
+    ser.emit_range(0, total, &mut |piece| {
+        let mut rest = piece;
+        while !rest.is_empty() {
+            let room = (chunk_size - filled).min(rest.len() as u64) as usize;
+            cur.update(&rest[..room]);
+            filled += room as u64;
+            rest = &rest[room..];
+            if filled == chunk_size {
+                let done = std::mem::replace(&mut cur, Checksum64::new());
+                out.push(ChunkDigest { hash: done.finalize(), len: chunk_size });
+                filled = 0;
+            }
+        }
+        Ok(())
+    })
+    .expect("in-memory chunk hashing cannot fail");
+    if filled > 0 {
+        out.push(ChunkDigest { hash: cur.finalize(), len: filled });
+    }
+    out
+}
+
+/// Result of one incremental checkpoint write.
+#[derive(Debug)]
+pub struct DeltaOutcome {
+    /// The published (v3) manifest.
+    pub manifest: CheckpointManifest,
+    /// Per-dirty-chunk write stats, chunk order.
+    pub stats: Vec<WriteStats>,
+    /// Wall latency: serialize start → manifest durable.
+    pub latency: Duration,
+    /// Logical stream length (what a full checkpoint would write).
+    pub total_bytes: u64,
+    /// Bytes actually written (dirty chunks only).
+    pub written_bytes: u64,
+    /// Chunks in the stream's grid.
+    pub chunks_total: usize,
+    /// Dirty chunks written by this checkpoint.
+    pub chunks_written: usize,
+    /// True if this checkpoint is a chain base (all chunks local).
+    pub is_base: bool,
+}
+
+impl DeltaOutcome {
+    /// Fraction of the stream that did **not** have to be written.
+    pub fn savings(&self) -> f64 {
+        if self.total_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.written_bytes as f64 / self.total_bytes as f64
+    }
+
+    /// View as a generic [`CheckpointOutcome`] (the pipelined helper's
+    /// common currency).
+    pub fn into_outcome(self) -> CheckpointOutcome {
+        CheckpointOutcome {
+            manifest: self.manifest,
+            stats: self.stats,
+            latency: self.latency,
+            total_bytes: self.total_bytes,
+        }
+    }
+}
+
+/// The previous checkpoint's resolved chunk table, kept in memory so
+/// steady-state diffing costs no manifest re-parse.
+struct PrevCheckpoint {
+    parent: PathBuf,
+    dir_name: String,
+    chain_len: u64,
+    chunk_size: u64,
+    chunks: Vec<ResolvedChunk>,
+}
+
+#[derive(Clone)]
+struct ResolvedChunk {
+    hash: u64,
+    len: u64,
+    /// Directory name that physically holds the chunk file.
+    source: String,
+    device: Option<String>,
+}
+
+/// Chunk-granular incremental checkpoint writer over a shared
+/// [`IoRuntime`].
+///
+/// Stateful: remembers the previous checkpoint's chunk table to diff
+/// against (resumable from an on-disk manifest via
+/// [`DeltaCheckpointer::resume_from`]). All I/O goes through the
+/// runtime's persistent writer pool and device map, interleaving with
+/// any other checkpoint traffic on the same runtime.
+pub struct DeltaCheckpointer {
+    runtime: Arc<IoRuntime>,
+    cfg: DeltaConfig,
+    prev: Option<PrevCheckpoint>,
+}
+
+impl DeltaCheckpointer {
+    /// A delta writer submitting into `runtime`; the first write is a
+    /// base checkpoint.
+    pub fn new(runtime: Arc<IoRuntime>, cfg: DeltaConfig) -> DeltaCheckpointer {
+        DeltaCheckpointer { runtime, cfg: cfg.normalized(), prev: None }
+    }
+
+    /// The runtime this writer submits into.
+    pub fn runtime(&self) -> &Arc<IoRuntime> {
+        &self.runtime
+    }
+
+    /// The (normalized) delta configuration.
+    pub fn config(&self) -> DeltaConfig {
+        self.cfg
+    }
+
+    /// Adopt the checkpoint at `dir` as the chain predecessor, so the
+    /// next write diffs against it (crash/restart resume). Returns
+    /// `true` if `dir` holds a compatible delta manifest; a full
+    /// (partitioned) or differently-chunked manifest leaves the writer
+    /// in base mode and returns `false`.
+    pub fn resume_from(&mut self, dir: &Path) -> Result<bool> {
+        let manifest = CheckpointManifest::load(dir)?;
+        let Some(delta) = &manifest.delta else {
+            self.prev = None;
+            return Ok(false);
+        };
+        if delta.chunk_size != self.cfg.chunk_size {
+            self.prev = None;
+            return Ok(false);
+        }
+        let dir_name = dir_name_of(dir)?;
+        let chunks = delta
+            .chunks
+            .iter()
+            .map(|c| ResolvedChunk {
+                hash: c.hash,
+                len: c.len,
+                source: c.source.clone().unwrap_or_else(|| dir_name.clone()),
+                device: c.device.clone(),
+            })
+            .collect();
+        self.prev = Some(PrevCheckpoint {
+            parent: dir.parent().map(Path::to_path_buf).unwrap_or_default(),
+            dir_name,
+            chain_len: delta.chain_len,
+            chunk_size: delta.chunk_size,
+            chunks,
+        });
+        Ok(true)
+    }
+
+    /// Force the next write to be a fresh base (explicit compaction).
+    pub fn compact_next(&mut self) {
+        self.prev = None;
+    }
+
+    /// Deltas written since the current chain's base (None = next write
+    /// is a base).
+    pub fn chain_len(&self) -> Option<u64> {
+        self.prev.as_ref().map(|p| p.chain_len)
+    }
+
+    /// Write an incremental checkpoint of `store` into `dir`.
+    ///
+    /// `dir` must be a sibling of the previous checkpoint's directory
+    /// (same parent); otherwise — or when the chain has reached
+    /// [`DeltaConfig::max_chain`], or no predecessor exists — a base
+    /// checkpoint is written instead. Only dirty chunks are submitted
+    /// to the writer pool; the manifest is published last.
+    pub fn write(
+        &mut self,
+        store: &TensorStore,
+        extra: BTreeMap<String, Json>,
+        dir: &Path,
+    ) -> Result<DeltaOutcome> {
+        let start = Instant::now();
+        std::fs::create_dir_all(dir)?;
+        let dir_name = dir_name_of(dir)?;
+        let parent = dir.parent().map(Path::to_path_buf).unwrap_or_default();
+        let step = extra.get("step").and_then(|j| j.as_i64().ok()).unwrap_or(0) as u64;
+
+        // One serialization pass (header + digest), one hashing pass
+        // (chunk grid); payloads stay zero-copy Arc references.
+        let ser = Arc::new(SerializedCheckpoint::new(store, extra));
+        let digest = ser.stream_digest();
+        let grid = chunk_hashes(&ser, self.cfg.chunk_size);
+
+        // Delta-eligible only against a same-grid sibling predecessor
+        // with chain headroom; anything else starts a fresh base. The
+        // predecessor state is *taken*: if this write fails midway the
+        // next attempt conservatively starts a fresh base instead of
+        // diffing against a chain whose tail never committed.
+        let (is_base, base_name, chain_len, prev_chunks) = match self.prev.take() {
+            Some(p)
+                if p.chunk_size == self.cfg.chunk_size
+                    && p.parent == parent
+                    && p.chain_len < self.cfg.max_chain =>
+            {
+                (false, Some(p.dir_name), p.chain_len + 1, p.chunks)
+            }
+            _ => (true, None, 0, Vec::new()),
+        };
+
+        // Diff against the predecessor grid; submit dirty chunks to the
+        // persistent writer pool, inherit clean ones. The manifest's
+        // chunk table and the in-memory resolved table (next diff's
+        // input) are built together in this single pass.
+        let mut tickets: Vec<Ticket> = Vec::new();
+        let mut entries: Vec<ChunkEntry> = Vec::with_capacity(grid.len());
+        let mut resolved: Vec<ResolvedChunk> = Vec::with_capacity(grid.len());
+        let mut written = 0u64;
+        let mut offset = 0u64;
+        for (i, ch) in grid.iter().enumerate() {
+            let clean = !is_base
+                && prev_chunks.get(i).is_some_and(|p| p.hash == ch.hash && p.len == ch.len);
+            if clean {
+                let p = &prev_chunks[i];
+                entries.push(ChunkEntry {
+                    hash: ch.hash,
+                    len: ch.len,
+                    source: Some(p.source.clone()),
+                    device: p.device.clone(),
+                });
+                resolved.push(p.clone());
+            } else {
+                let file = DeltaSection::chunk_file(i);
+                let (chunk_dir, device) = match self.runtime.devices().partition_dir(dir, i) {
+                    Some((d, root)) => (d, Some(root)),
+                    None => (dir.to_path_buf(), None),
+                };
+                tickets.push(self.runtime.submit(WriteJob::range(
+                    Arc::clone(&ser),
+                    offset,
+                    offset + ch.len,
+                    chunk_dir.join(file),
+                )));
+                written += ch.len;
+                resolved.push(ResolvedChunk {
+                    hash: ch.hash,
+                    len: ch.len,
+                    source: dir_name.clone(),
+                    device: device.clone(),
+                });
+                entries.push(ChunkEntry { hash: ch.hash, len: ch.len, source: None, device });
+            }
+            offset += ch.len;
+        }
+        let chunks_written = tickets.len();
+        let stats: Vec<WriteStats> =
+            tickets.into_iter().map(Ticket::wait).collect::<Result<Vec<_>>>()?;
+
+        // All dirty chunks durable → publish the manifest. Its presence
+        // is the commit point of the whole delta.
+        let delta = DeltaSection {
+            base: base_name,
+            chain_len,
+            chunk_size: self.cfg.chunk_size,
+            chunks: entries,
+        };
+        let manifest = CheckpointManifest::from_delta(ser.total_len(), digest, step, delta);
+        manifest.validate()?;
+        manifest.save(dir)?;
+
+        // Remember the resolved table for the next diff.
+        self.prev = Some(PrevCheckpoint {
+            parent,
+            dir_name,
+            chain_len,
+            chunk_size: self.cfg.chunk_size,
+            chunks: resolved,
+        });
+
+        Ok(DeltaOutcome {
+            total_bytes: ser.total_len(),
+            written_bytes: written,
+            chunks_total: grid.len(),
+            chunks_written,
+            is_base,
+            manifest,
+            stats,
+            latency: start.elapsed(),
+        })
+    }
+}
+
+fn dir_name_of(dir: &Path) -> Result<String> {
+    dir.file_name()
+        .and_then(|n| n.to_str())
+        .map(str::to_string)
+        .ok_or_else(|| {
+            Error::Config(format!("checkpoint dir {} has no utf-8 name", dir.display()))
+        })
+}
+
+/// On-disk location of chunk `index` of the delta checkpoint at `dir`:
+/// the entry's source directory (a sibling of `dir`, or `dir` itself),
+/// with the device assignment resolved against that *source* directory.
+pub fn chunk_path(dir: &Path, index: usize, entry: &ChunkEntry) -> PathBuf {
+    let owner = match &entry.source {
+        Some(s) => dir.parent().map(Path::to_path_buf).unwrap_or_default().join(s),
+        None => dir.to_path_buf(),
+    };
+    let file = DeltaSection::chunk_file(index);
+    match &entry.device {
+        Some(root) => DeviceMap::resolve_in(Path::new(root), &owner).join(file),
+        None => owner.join(file),
+    }
+}
+
+/// Reassemble the logical stream of the delta checkpoint at `dir`:
+/// `threads` parallel chunk readers, each verifying its chunk's
+/// recorded hash (precise corruption reports before the caller's
+/// whole-stream digest check).
+pub fn assemble_delta_stream(
+    dir: &Path,
+    manifest: &CheckpointManifest,
+    threads: usize,
+) -> Result<Vec<u8>> {
+    let delta = manifest
+        .delta
+        .as_ref()
+        .ok_or_else(|| Error::Internal("assemble_delta_stream on a full manifest".into()))?;
+    let jobs: Vec<(PathBuf, u64, u64)> = delta
+        .chunks
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (chunk_path(dir, i, c), c.len, c.hash))
+        .collect();
+    let parts: Vec<Result<Vec<u8>>> = parallel_map(threads.max(1), jobs, |(path, len, hash)| {
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::Format(format!("chunk {}: {e}", path.display())))?;
+        if bytes.len() as u64 != len {
+            return Err(Error::Format(format!(
+                "chunk {} is {} bytes, manifest says {len}",
+                path.display(),
+                bytes.len()
+            )));
+        }
+        let got = checksum64_slice(&bytes);
+        if got != hash {
+            return Err(Error::Format(format!(
+                "chunk {} hash mismatch: computed {got:#x}, manifest {hash:#x}",
+                path.display()
+            )));
+        }
+        Ok(bytes)
+    });
+    let mut stream = Vec::with_capacity(manifest.total_len as usize);
+    for part in parts {
+        stream.extend_from_slice(&part?);
+    }
+    if stream.len() as u64 != manifest.total_len {
+        return Err(Error::Format(format!(
+            "assembled {} bytes, manifest says {}",
+            stream.len(),
+            manifest.total_len
+        )));
+    }
+    Ok(stream)
+}
+
+/// What [`prune_chain`] did.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Checkpoint directories removed outright.
+    pub removed_dirs: usize,
+    /// Directories demoted to chunk stores (manifest dropped, live
+    /// chunks retained because newer checkpoints reference them).
+    pub demoted_dirs: usize,
+    /// Dead chunk files deleted from demoted directories.
+    pub removed_chunks: usize,
+}
+
+/// Chain-aware pruning + garbage collection for a directory of
+/// `step-NNNNNNNN` checkpoints (the trainer layout).
+///
+/// Keeps the newest `keep_last` *complete* checkpoints (manifest
+/// present) loadable. Older directories are:
+///
+/// * **removed** entirely (including device-side partition/chunk dirs)
+///   when no kept checkpoint references their chunks;
+/// * **demoted** to chunk stores when kept deltas still reference some
+///   of their chunks: the manifest is deleted (the checkpoint is no
+///   longer loadable or resumable) and every chunk file *not*
+///   referenced by a kept manifest — a dead chunk — is reclaimed, on
+///   the main filesystem and on every device root.
+///
+/// Directories newer than the newest kept manifest (e.g. an in-flight
+/// pipelined write that has not published its manifest yet) are never
+/// touched, and neither is the step named by `protect` — pass the step
+/// just written so a run that reuses a directory containing *stale
+/// higher-numbered* checkpoints can never prune its own newest work
+/// (the trainer always does). `keep_last == 0` (keep everything) is a
+/// no-op.
+pub fn prune_chain(
+    parent: &Path,
+    keep_last: usize,
+    devices: &DeviceMap,
+    protect: Option<u64>,
+) -> Result<PruneStats> {
+    let mut stats = PruneStats::default();
+    if keep_last == 0 {
+        return Ok(stats);
+    }
+    // All step dirs. Manifests are parsed *lazily* (kept checkpoints
+    // only): a steady-state prune on the training hot path costs at
+    // most `keep_last + 1` manifest parses, not one per directory, and
+    // nothing at all while fewer than keep_last checkpoints exist.
+    let mut dirs: Vec<(u64, PathBuf, bool)> = Vec::new();
+    let Ok(entries) = std::fs::read_dir(parent) else { return Ok(stats) };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if let Some(step) = name.strip_prefix("step-").and_then(|s| s.parse::<u64>().ok()) {
+            let has_manifest = path.join(MANIFEST_FILE).exists();
+            dirs.push((step, path, has_manifest));
+        }
+    }
+    dirs.sort_by_key(|(step, _, _)| *step);
+    let complete = dirs.iter().filter(|(_, _, m)| *m).count();
+    if complete <= keep_last {
+        return Ok(stats);
+    }
+    // The newest `keep_last` complete checkpoints stay loadable, plus
+    // the protected (just-written) one whatever its step number.
+    // Unparseable manifests are treated as incomplete (skipped here,
+    // reclaimed below like any other unreferenced old directory).
+    let mut kept: BTreeMap<u64, CheckpointManifest> = BTreeMap::new();
+    for (step, path, has_manifest) in dirs.iter().rev() {
+        if kept.len() >= keep_last {
+            break;
+        }
+        if *has_manifest {
+            if let Ok(m) = CheckpointManifest::load(path) {
+                kept.insert(*step, m);
+            }
+        }
+    }
+    if let Some(p) = protect {
+        if !kept.contains_key(&p) {
+            if let Some((_, path, _)) = dirs.iter().find(|(s, _, h)| *s == p && *h) {
+                if let Ok(m) = CheckpointManifest::load(path) {
+                    kept.insert(p, m);
+                }
+            }
+        }
+    }
+    let Some(max_kept) = kept.keys().next_back().copied() else { return Ok(stats) };
+    // Live chunk files per directory name, from kept manifests.
+    let mut live: BTreeMap<String, std::collections::BTreeSet<String>> = BTreeMap::new();
+    let mut required: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    for (step, path, _) in &dirs {
+        let Some(m) = kept.get(step) else { continue };
+        let own = dir_name_of(path)?;
+        if let Some(delta) = m.delta.as_ref() {
+            for (i, c) in delta.chunks.iter().enumerate() {
+                let owner = c.source.clone().unwrap_or_else(|| own.clone());
+                if c.source.is_some() {
+                    required.insert(owner.clone());
+                }
+                live.entry(owner).or_default().insert(DeltaSection::chunk_file(i));
+            }
+        }
+    }
+    for (step, path, _) in &dirs {
+        if kept.contains_key(step) || *step > max_kept || Some(*step) == protect {
+            continue; // kept, protected, or possibly still being written
+        }
+        let name = dir_name_of(path)?;
+        if required.contains(&name) {
+            // Demote: no longer loadable, but its live chunks feed
+            // newer deltas. Reclaim the dead ones everywhere.
+            let _ = std::fs::remove_file(path.join(MANIFEST_FILE));
+            let live_here = live.get(&name);
+            stats.removed_chunks += gc_chunk_files(path, live_here);
+            for root in devices.roots() {
+                stats.removed_chunks +=
+                    gc_chunk_files(&DeviceMap::resolve_in(root, path), live_here);
+            }
+            stats.demoted_dirs += 1;
+        } else {
+            devices.remove_checkpoint(path);
+            let _ = std::fs::remove_dir_all(path);
+            stats.removed_dirs += 1;
+        }
+    }
+    Ok(stats)
+}
+
+/// Delete `chunk-*.fpck` files in `dir` that are not in `live`.
+fn gc_chunk_files(
+    dir: &Path,
+    live: Option<&std::collections::BTreeSet<String>>,
+) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let dead = name.starts_with("chunk-")
+            && name.ends_with(".fpck")
+            && live.map_or(true, |set| !set.contains(name));
+        if dead && std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::load::load_checkpoint;
+    use crate::io::engine::{scratch_dir, IoConfig};
+    use crate::io::runtime::IoRuntimeConfig;
+    use crate::tensor::{DType, Tensor};
+    use crate::util::rng::Rng;
+
+    const CS: u64 = 4096;
+
+    fn runtime() -> Arc<IoRuntime> {
+        Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist().microbench(),
+            ..IoRuntimeConfig::default()
+        }))
+    }
+
+    fn ckpt(runtime: Arc<IoRuntime>, max_chain: u64) -> DeltaCheckpointer {
+        DeltaCheckpointer::new(runtime, DeltaConfig { chunk_size: CS, max_chain })
+    }
+
+    fn store(seed: u64, nbytes: usize) -> TensorStore {
+        let mut rng = Rng::new(seed);
+        let mut s = TensorStore::new();
+        let mut data = vec![0u8; nbytes];
+        rng.fill_bytes(&mut data);
+        s.push(Tensor::new("w", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+        s
+    }
+
+    /// Mutate `frac` of the tensor, contiguous, starting mid-way.
+    fn mutate(s: &mut TensorStore, frac: f64, tag: u8) {
+        let t = s.get("w").unwrap();
+        let mut data = t.data.as_slice().to_vec();
+        let n = (data.len() as f64 * frac) as usize;
+        let start = data.len() / 3;
+        for b in &mut data[start..start + n] {
+            *b ^= tag | 1;
+        }
+        s.update("w", data).unwrap();
+    }
+
+    fn extra(step: i64) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        m.insert("step".to_string(), Json::Int(step));
+        m
+    }
+
+    #[test]
+    fn chunk_hashes_match_slice_checksums() {
+        let s = store(1, 3 * CS as usize + 123);
+        let ser = SerializedCheckpoint::new(&s, extra(0));
+        let bytes = ser.to_bytes();
+        let grid = chunk_hashes(&ser, CS);
+        assert_eq!(grid.len(), bytes.len().div_ceil(CS as usize));
+        let mut off = 0usize;
+        for (i, ch) in grid.iter().enumerate() {
+            let end = off + ch.len as usize;
+            assert_eq!(ch.hash, checksum64_slice(&bytes[off..end]), "chunk {i}");
+            off = end;
+        }
+        assert_eq!(off, bytes.len());
+        // grid size 1 byte and giant grid both tile correctly
+        let one = chunk_hashes(&ser, 1);
+        assert_eq!(one.len(), bytes.len());
+        let giant = chunk_hashes(&ser, 1 << 30);
+        assert_eq!(giant.len(), 1);
+        assert_eq!(giant[0].hash, checksum64_slice(&bytes));
+    }
+
+    #[test]
+    fn base_then_delta_reloads_bit_identically() {
+        let dir = scratch_dir("delta-chain").unwrap();
+        let rt = runtime();
+        let mut ck = ckpt(rt, 8);
+        let mut s = store(7, 40 * CS as usize);
+        let base = ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        assert!(base.is_base);
+        assert_eq!(base.written_bytes, base.total_bytes);
+
+        mutate(&mut s, 0.04, 0x10);
+        let d1 = ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
+        assert!(!d1.is_base);
+        assert!(
+            d1.written_bytes * 5 < d1.total_bytes,
+            "4% mutation must write a small fraction ({} of {})",
+            d1.written_bytes,
+            d1.total_bytes
+        );
+        let snap2 = s.snapshot();
+
+        mutate(&mut s, 0.02, 0x20);
+        let d2 = ck.write(&s, extra(3), &dir.join("step-00000003")).unwrap();
+        assert!(!d2.is_base);
+        assert_eq!(d2.manifest.delta.as_ref().unwrap().chain_len, 2);
+
+        // every link of the chain loads bit-identically
+        let (l1, h1, m1) = load_checkpoint(&dir.join("step-00000002"), 3).unwrap();
+        assert!(l1.content_eq(&snap2));
+        assert_eq!(h1.extra["step"], Json::Int(2));
+        assert!(m1.is_delta());
+        let (l2, _, _) = load_checkpoint(&dir.join("step-00000003"), 3).unwrap();
+        assert!(l2.content_eq(&s));
+        let (l0, _, _) = load_checkpoint(&dir.join("step-00000001"), 3).unwrap();
+        assert!(l0.content_eq(&store(7, 40 * CS as usize)));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unchanged_state_writes_zero_chunks() {
+        let dir = scratch_dir("delta-zero").unwrap();
+        let rt = runtime();
+        let mut ck = ckpt(rt, 8);
+        let s = store(3, 10 * CS as usize);
+        ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        // same state, same extras -> identical stream -> nothing dirty
+        let d = ck.write(&s, extra(1), &dir.join("step-00000002")).unwrap();
+        assert_eq!(d.chunks_written, 0);
+        assert_eq!(d.written_bytes, 0);
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+        assert!(loaded.content_eq(&s));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chain_compacts_after_max_chain() {
+        let dir = scratch_dir("delta-compact").unwrap();
+        let rt = runtime();
+        let mut ck = ckpt(rt, 2);
+        let mut s = store(9, 8 * CS as usize);
+        for step in 1..=5u64 {
+            let out = ck.write(&s, extra(step as i64), &dir.join(format!("step-{step:08}"))).unwrap();
+            // chain: base(1), d(2), d(3), base(4), d(5)
+            let expect_base = step == 1 || step == 4;
+            assert_eq!(out.is_base, expect_base, "step {step}");
+            mutate(&mut s, 0.1, step as u8);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_from_manifest_continues_chain() {
+        let dir = scratch_dir("delta-resume").unwrap();
+        let rt = runtime();
+        let mut ck = ckpt(Arc::clone(&rt), 8);
+        let mut s = store(11, 12 * CS as usize);
+        ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        mutate(&mut s, 0.05, 1);
+        ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
+
+        // "restart": a fresh writer resumes from the on-disk manifest
+        let mut ck2 = ckpt(rt, 8);
+        assert!(ck2.resume_from(&dir.join("step-00000002")).unwrap());
+        assert_eq!(ck2.chain_len(), Some(1));
+        mutate(&mut s, 0.05, 2);
+        let d = ck2.write(&s, extra(3), &dir.join("step-00000003")).unwrap();
+        assert!(!d.is_base, "resumed writer must continue the chain");
+        assert!(d.written_bytes < d.total_bytes / 2);
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000003"), 2).unwrap();
+        assert!(loaded.content_eq(&s));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_demotes_required_dirs_and_reclaims_dead_chunks() {
+        let dir = scratch_dir("delta-prune").unwrap();
+        let devices = DeviceMap::single();
+        let rt = runtime();
+        let mut ck = ckpt(rt, 8);
+        let mut s = store(5, 10 * CS as usize);
+        ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        mutate(&mut s, 0.08, 1); // dirties a few chunks
+        ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
+
+        let base_dir = dir.join("step-00000001");
+        let chunks_before = std::fs::read_dir(&base_dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with("chunk-"))
+            .count();
+
+        let stats = prune_chain(&dir, 1, &devices, Some(2)).unwrap();
+        assert_eq!(stats.removed_dirs, 0);
+        assert_eq!(stats.demoted_dirs, 1, "base still referenced -> demoted, not removed");
+        assert!(stats.removed_chunks > 0, "chunks rewritten by the delta are dead in the base");
+        assert!(!base_dir.join(MANIFEST_FILE).exists(), "demoted dir loses its manifest");
+        let chunks_after = std::fs::read_dir(&base_dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with("chunk-"))
+            .count();
+        assert_eq!(chunks_before, chunks_after + stats.removed_chunks);
+
+        // the kept delta still reloads bit-identically from the store
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+        assert!(loaded.content_eq(&s));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_removes_unreferenced_dirs_after_compaction() {
+        let dir = scratch_dir("delta-prune-gc").unwrap();
+        let devices = DeviceMap::single();
+        let rt = runtime();
+        let mut ck = ckpt(rt, 8);
+        let mut s = store(6, 6 * CS as usize);
+        ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        mutate(&mut s, 0.1, 1);
+        ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
+        // compaction: step 3 is a fresh base, chain references die
+        ck.compact_next();
+        let out = ck.write(&s, extra(3), &dir.join("step-00000003")).unwrap();
+        assert!(out.is_base);
+
+        let stats = prune_chain(&dir, 1, &devices, Some(3)).unwrap();
+        assert_eq!(stats.removed_dirs, 2, "pre-compaction chain is unreferenced");
+        assert_eq!(stats.demoted_dirs, 0);
+        assert!(!dir.join("step-00000001").exists());
+        assert!(!dir.join("step-00000002").exists());
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000003"), 2).unwrap();
+        assert!(loaded.content_eq(&s));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_never_touches_the_protected_step_even_if_stale_steps_are_newer() {
+        // A fresh run reusing a directory that still holds higher-
+        // numbered checkpoints from a previous run must not have its
+        // just-written checkpoint pruned out from under it.
+        let dir = scratch_dir("delta-prune-stale").unwrap();
+        let devices = DeviceMap::single();
+        let rt = runtime();
+        // stale previous run: steps 8 and 9
+        let mut old = ckpt(Arc::clone(&rt), 8);
+        let s_old = store(21, 6 * CS as usize);
+        old.write(&s_old, extra(8), &dir.join("step-00000008")).unwrap();
+        old.write(&s_old, extra(9), &dir.join("step-00000009")).unwrap();
+        // fresh run writes step 1 and prunes with keep_last=1
+        let mut fresh = ckpt(rt, 8);
+        let s_new = store(22, 6 * CS as usize);
+        fresh.write(&s_new, extra(1), &dir.join("step-00000001")).unwrap();
+        prune_chain(&dir, 1, &devices, Some(1)).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000001"), 2).unwrap();
+        assert!(loaded.content_eq(&s_new), "protected checkpoint must survive pruning");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        assert_eq!(CheckpointStrategy::parse("full").unwrap(), CheckpointStrategy::Full);
+        let CheckpointStrategy::Delta(d) = CheckpointStrategy::parse("delta").unwrap() else {
+            panic!("delta parses to Delta");
+        };
+        assert_eq!(d, DeltaConfig::default());
+        let CheckpointStrategy::Delta(d) = CheckpointStrategy::parse("delta4").unwrap() else {
+            panic!("delta4 parses to Delta");
+        };
+        assert_eq!(d.max_chain, 4);
+        assert!(CheckpointStrategy::parse("bogus").is_err());
+        assert!(CheckpointStrategy::parse("deltaX").is_err());
+        assert_eq!(CheckpointStrategy::Delta(DeltaConfig::default()).name(), "delta8");
+    }
+
+    #[test]
+    fn multi_device_delta_routes_and_reloads() {
+        let base = scratch_dir("delta-devmap").unwrap();
+        let devices = DeviceMap::simulated(2, &base.join("devices")).unwrap();
+        let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist().microbench(),
+            devices: devices.clone(),
+            ..IoRuntimeConfig::default()
+        }));
+        let mut ck = DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: CS, max_chain: 8 });
+        let mut s = store(13, 9 * CS as usize);
+        let dir = base.join("ckpts");
+        ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        mutate(&mut s, 0.3, 1);
+        let d = ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
+        assert!(d.manifest.devices().len() >= 2, "chunks must stripe across devices");
+        // no chunk file lands in the checkpoint dir itself
+        let local = std::fs::read_dir(dir.join("step-00000002"))
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with("chunk-"))
+            .count();
+        assert_eq!(local, 0);
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+        assert!(loaded.content_eq(&s));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn prop_dirty_detection_never_misses_changes() {
+        crate::prop::forall("delta reload equals live state", 12, |g| {
+            let dir = scratch_dir("delta-prop").unwrap();
+            let rt = runtime();
+            let mut ck = ckpt(rt, 8);
+            let nbytes = g.usize(1, 6 * CS as usize);
+            let mut s = store(g.u64(0, u64::MAX), nbytes);
+            ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+            // random point mutations
+            let t = s.get("w").unwrap();
+            let mut data = t.data.as_slice().to_vec();
+            for _ in 0..g.usize(0, 8) {
+                let i = g.usize(0, data.len() - 1);
+                data[i] ^= 0x5a;
+            }
+            s.update("w", data).unwrap();
+            ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
+            let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+            let ok = loaded.content_eq(&s);
+            std::fs::remove_dir_all(&dir).unwrap();
+            ok
+        });
+    }
+}

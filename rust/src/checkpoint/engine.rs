@@ -36,15 +36,18 @@ use crate::Result;
 /// Result of one completed checkpoint.
 #[derive(Debug)]
 pub struct CheckpointOutcome {
+    /// The published manifest.
     pub manifest: CheckpointManifest,
     /// Per-partition write stats, plan order.
     pub stats: Vec<WriteStats>,
     /// Wall latency: serialize start → manifest durable.
     pub latency: Duration,
+    /// Logical stream length in bytes.
     pub total_bytes: u64,
 }
 
 impl CheckpointOutcome {
+    /// Effective checkpoint throughput in decimal GB/s.
     pub fn gbps(&self) -> f64 {
         crate::util::bytes::gbps(self.total_bytes, self.latency.as_secs_f64())
     }
@@ -54,8 +57,11 @@ impl CheckpointOutcome {
 /// [`IoRuntime`]. Cloning shares the runtime (cheap).
 #[derive(Clone)]
 pub struct CheckpointEngine {
+    /// Write-path configuration for this engine's submissions.
     pub io_cfg: IoConfig,
+    /// Writer-subset selection strategy.
     pub strategy: WriterStrategy,
+    /// Sockets per node assumed by socket-aware strategies.
     pub sockets_per_node: usize,
     runtime: Arc<IoRuntime>,
 }

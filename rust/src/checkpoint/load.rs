@@ -5,6 +5,13 @@
 //! recorded for it, then the partitions are assembled ("allgather") back
 //! into the logical serialized stream, verified against the manifest's
 //! stream digest, and parsed into a [`TensorStore`].
+//!
+//! Incremental checkpoints (manifest v3 with a
+//! [`crate::checkpoint::manifest::DeltaSection`]) reassemble from their
+//! *chunk* table instead — each chunk read in parallel from whichever
+//! sibling checkpoint directory the table names — and then flow through
+//! the same digest verification and parsing, so a base + delta chain
+//! reloads bit-identically to the full snapshot it represents.
 
 use std::path::{Path, PathBuf};
 
@@ -32,29 +39,37 @@ pub fn load_checkpoint(
     threads: usize,
 ) -> Result<(TensorStore, FormatHeader, CheckpointManifest)> {
     let manifest = CheckpointManifest::load(dir)?;
-    let jobs: Vec<(std::path::PathBuf, u64)> = manifest
-        .partitions
-        .iter()
-        .map(|p| (partition_path(dir, p), p.end - p.start))
-        .collect();
-    // Parallel partition reads (rank-local step of the two-step load).
-    let parts: Vec<Result<Vec<u8>>> = parallel_map(threads, jobs, |(path, expect)| {
-        let bytes = std::fs::read(&path)
-            .map_err(|e| Error::Format(format!("partition {}: {e}", path.display())))?;
-        if bytes.len() as u64 != expect {
-            return Err(Error::Format(format!(
-                "partition {} is {} bytes, manifest says {expect}",
-                path.display(),
-                bytes.len()
-            )));
+    let stream = if manifest.is_delta() {
+        // Chunked incremental checkpoint: reassemble from the chunk
+        // table (each chunk verified against its recorded hash).
+        crate::checkpoint::delta::assemble_delta_stream(dir, &manifest, threads)?
+    } else {
+        let jobs: Vec<(std::path::PathBuf, u64)> = manifest
+            .partitions
+            .iter()
+            .map(|p| (partition_path(dir, p), p.end - p.start))
+            .collect();
+        // Parallel partition reads (rank-local step of the two-step
+        // load).
+        let parts: Vec<Result<Vec<u8>>> = parallel_map(threads, jobs, |(path, expect)| {
+            let bytes = std::fs::read(&path)
+                .map_err(|e| Error::Format(format!("partition {}: {e}", path.display())))?;
+            if bytes.len() as u64 != expect {
+                return Err(Error::Format(format!(
+                    "partition {} is {} bytes, manifest says {expect}",
+                    path.display(),
+                    bytes.len()
+                )));
+            }
+            Ok(bytes)
+        });
+        // Allgather: concatenate in partition order.
+        let mut stream = Vec::with_capacity(manifest.total_len as usize);
+        for part in parts {
+            stream.extend_from_slice(&part?);
         }
-        Ok(bytes)
-    });
-    // Allgather: concatenate in partition order.
-    let mut stream = Vec::with_capacity(manifest.total_len as usize);
-    for part in parts {
-        stream.extend_from_slice(&part?);
-    }
+        stream
+    };
     if stream.len() as u64 != manifest.total_len {
         return Err(Error::Format(format!(
             "assembled {} bytes, manifest says {}",

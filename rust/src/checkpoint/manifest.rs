@@ -1,5 +1,5 @@
-//! Per-checkpoint manifest: ties partition files back into one logical
-//! serialized stream.
+//! Per-checkpoint manifest: ties partition (or chunk) files back into
+//! one logical serialized stream.
 //!
 //! Parallel checkpoints are written as one file per writer (the ranks'
 //! local SSDs in the paper). The manifest — written by partition 0's
@@ -8,6 +8,18 @@
 //! assignment** (the [`crate::io::DeviceMap`] mount point it was striped
 //! onto), so loading can verify, locate, and reassemble (allgather) the
 //! full checkpoint state.
+//!
+//! Since manifest **v3** the same file also describes *incremental*
+//! checkpoints (see [`crate::checkpoint::delta`]): instead of a
+//! partition table, a delta manifest carries a [`DeltaSection`] — the
+//! base-checkpoint reference plus a per-chunk table whose entries say,
+//! for every fixed-size chunk of the stream, which sibling checkpoint
+//! directory holds the chunk's bytes and what the chunk's content hash
+//! is. Exactly one of the two tables is populated: `partitions` for
+//! full (partitioned) checkpoints, `delta` for chunked ones. The
+//! manifest is always published last, via atomic rename, so its
+//! presence means the checkpoint — and, for deltas, every chunk it
+//! references — is complete and durable.
 
 use std::path::{Path, PathBuf};
 
@@ -15,29 +27,50 @@ use crate::checkpoint::plan::{Partition, WritePlan};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
+/// File name of the manifest inside a checkpoint directory.
 pub const MANIFEST_FILE: &str = "checkpoint.json";
 
-/// Manifest schema version. v2 = composite stream digest
-/// ([`crate::serialize::format::combine_digests`] over header‖data
-/// halves) + optional per-partition device assignments. v1 manifests
-/// (whole-stream `checksum64_slice` digest, no device field) are
-/// rejected with a clear incompatibility error rather than a misleading
-/// digest mismatch.
-pub const MANIFEST_VERSION: i64 = 2;
+/// Manifest schema version. v3 = v2 plus the optional [`DeltaSection`]
+/// (base-checkpoint reference + per-chunk table) for incremental
+/// checkpoints; v2 manifests (composite stream digest over header‖data
+/// halves, optional per-partition device assignments, no delta section)
+/// are still read. v1 manifests (whole-stream `checksum64_slice`
+/// digest, no device field) are rejected with a clear incompatibility
+/// error rather than a misleading digest mismatch.
+pub const MANIFEST_VERSION: i64 = 3;
 
+/// Oldest manifest version this build can still read (v2: same digest
+/// algorithm as v3, no delta section).
+pub const MANIFEST_MIN_READ_VERSION: i64 = 2;
+
+/// The per-checkpoint manifest: stream length + digest + exactly one of
+/// a partition table (full checkpoint) or a [`DeltaSection`] (chunked
+/// incremental checkpoint).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CheckpointManifest {
+    /// Length in bytes of the logical serialized stream.
     pub total_len: u64,
+    /// Composite stream digest (header‖data halves, see
+    /// [`crate::serialize::format::combine_digests`]).
     pub digest: u64,
+    /// Training step this checkpoint captures.
     pub step: u64,
+    /// Partition table of a full checkpoint; empty for delta manifests.
     pub partitions: Vec<PartitionEntry>,
+    /// Chunk table of an incremental checkpoint; `None` for full ones.
+    pub delta: Option<DeltaSection>,
 }
 
+/// One partition file of a full (non-delta) checkpoint.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PartitionEntry {
+    /// Partition file name (see [`CheckpointManifest::partition_file`]).
     pub file: String,
+    /// DP rank that wrote this partition.
     pub writer_rank: usize,
+    /// First byte (inclusive) of the stream range this file holds.
     pub start: u64,
+    /// One past the last byte of the stream range this file holds.
     pub end: u64,
     /// Mount-point root of the device this partition was striped onto;
     /// `None` means the partition lives in the checkpoint directory
@@ -46,7 +79,168 @@ pub struct PartitionEntry {
     pub device: Option<String>,
 }
 
+/// Incremental-checkpoint extension of the manifest (v3): the chunk
+/// table plus the chain linkage that lets
+/// [`crate::checkpoint::load::load_checkpoint`] rebuild the stream from
+/// a base + delta chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaSection {
+    /// Directory *name* (not path) of the immediately preceding
+    /// checkpoint in the chain — a sibling of this checkpoint's
+    /// directory. `None` marks a base checkpoint (all chunks local).
+    pub base: Option<String>,
+    /// Number of deltas since the chain's base (0 for the base itself).
+    pub chain_len: u64,
+    /// Fixed chunk size in bytes; the final chunk may be shorter.
+    pub chunk_size: u64,
+    /// One entry per chunk of the stream, in stream order. The table is
+    /// fully *resolved*: each entry names the checkpoint directory that
+    /// physically holds the chunk file, so loading never walks ancestor
+    /// manifests.
+    pub chunks: Vec<ChunkEntry>,
+}
+
+/// One fixed-size chunk of an incremental checkpoint's stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkEntry {
+    /// Content hash of the chunk's bytes
+    /// ([`crate::serialize::format::checksum64_slice`]), used for dirty
+    /// detection when the *next* delta diffs against this table.
+    pub hash: u64,
+    /// Chunk length in bytes (== `chunk_size` except for the last).
+    pub len: u64,
+    /// Sibling directory name holding the chunk file; `None` means this
+    /// checkpoint's own directory (the chunk was written by this
+    /// checkpoint — a *dirty* chunk).
+    pub source: Option<String>,
+    /// Device root the chunk file was striped onto (resolved against
+    /// the *source* checkpoint directory); `None` = no device routing.
+    pub device: Option<String>,
+}
+
+impl DeltaSection {
+    /// Canonical chunk file name for chunk `index`.
+    pub fn chunk_file(index: usize) -> String {
+        format!("chunk-{index:06}.fpck")
+    }
+
+    /// Distinct sibling directory names this manifest's chunk table
+    /// references (not including the checkpoint's own directory) — the
+    /// ancestors that must stay alive for this checkpoint to load.
+    pub fn required_dirs(&self) -> Vec<&str> {
+        let mut seen = std::collections::BTreeSet::new();
+        self.chunks
+            .iter()
+            .filter_map(|c| c.source.as_deref())
+            .filter(|d| seen.insert(*d))
+            .collect()
+    }
+
+    /// Bytes held in *this* checkpoint's directory (the dirty chunks).
+    pub fn local_bytes(&self) -> u64 {
+        self.chunks.iter().filter(|c| c.source.is_none()).map(|c| c.len).sum()
+    }
+
+    /// Chunk table tiles `[0, total_len)`: every chunk is `chunk_size`
+    /// bytes except a shorter final chunk.
+    pub fn validate(&self, total_len: u64) -> Result<()> {
+        if self.chunk_size == 0 {
+            return Err(Error::Format("delta manifest has chunk_size 0".into()));
+        }
+        let mut pos = 0u64;
+        for (i, c) in self.chunks.iter().enumerate() {
+            let last = i + 1 == self.chunks.len();
+            if c.len == 0 || c.len > self.chunk_size || (!last && c.len != self.chunk_size) {
+                return Err(Error::Format(format!(
+                    "chunk {i} has length {} (chunk_size {})",
+                    c.len, self.chunk_size
+                )));
+            }
+            pos += c.len;
+        }
+        if pos != total_len {
+            return Err(Error::Format(format!(
+                "chunks cover {pos} of {total_len} bytes"
+            )));
+        }
+        if self.base.is_none() {
+            if let Some(i) = self.chunks.iter().position(|c| c.source.is_some()) {
+                return Err(Error::Format(format!(
+                    "base checkpoint references foreign chunk {i}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("chain_len", Json::from(self.chain_len as i64)),
+            ("chunk_size", Json::from(self.chunk_size as i64)),
+            (
+                "chunks",
+                Json::arr(self.chunks.iter().map(|c| {
+                    let mut f = vec![
+                        ("hash_hi", Json::from((c.hash >> 32) as i64)),
+                        ("hash_lo", Json::from((c.hash & 0xffff_ffff) as i64)),
+                        ("len", Json::from(c.len as i64)),
+                    ];
+                    if let Some(src) = &c.source {
+                        f.push(("source", Json::str(src)));
+                    }
+                    if let Some(dev) = &c.device {
+                        f.push(("device", Json::str(dev)));
+                    }
+                    Json::obj(f)
+                })),
+            ),
+        ];
+        if let Some(base) = &self.base {
+            fields.push(("base", Json::str(base)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json) -> Result<DeltaSection> {
+        let base = match v.opt("base") {
+            Some(b) => Some(b.as_str()?.to_string()),
+            None => None,
+        };
+        let chunks = v
+            .get("chunks")?
+            .as_array()?
+            .iter()
+            .map(|c| {
+                let hi = c.get("hash_hi")?.as_i64()? as u64;
+                let lo = c.get("hash_lo")?.as_i64()? as u64;
+                let source = match c.opt("source") {
+                    Some(s) => Some(s.as_str()?.to_string()),
+                    None => None,
+                };
+                let device = match c.opt("device") {
+                    Some(d) => Some(d.as_str()?.to_string()),
+                    None => None,
+                };
+                Ok(ChunkEntry {
+                    hash: (hi << 32) | (lo & 0xffff_ffff),
+                    len: c.get("len")?.as_i64()? as u64,
+                    source,
+                    device,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeltaSection {
+            base,
+            chain_len: v.get("chain_len")?.as_i64()? as u64,
+            chunk_size: v.get("chunk_size")?.as_i64()? as u64,
+            chunks,
+        })
+    }
+}
+
 impl CheckpointManifest {
+    /// Build a full-checkpoint manifest from a plan with no device
+    /// routing (single-device layout).
     pub fn from_plan(plan: &WritePlan, digest: u64, step: u64) -> CheckpointManifest {
         let unrouted: Vec<Option<String>> = vec![None; plan.partitions.len()];
         Self::from_routed_plan(plan, &unrouted, digest, step)
@@ -77,16 +271,38 @@ impl CheckpointManifest {
                     device: device.clone(),
                 })
                 .collect(),
+            delta: None,
         }
     }
 
-    /// Distinct device roots referenced by this checkpoint (empty for
-    /// single-device layouts).
+    /// Build an incremental-checkpoint manifest around a chunk table.
+    pub fn from_delta(
+        total_len: u64,
+        digest: u64,
+        step: u64,
+        delta: DeltaSection,
+    ) -> CheckpointManifest {
+        CheckpointManifest { total_len, digest, step, partitions: Vec::new(), delta: Some(delta) }
+    }
+
+    /// True if this manifest describes a chunked incremental checkpoint.
+    pub fn is_delta(&self) -> bool {
+        self.delta.is_some()
+    }
+
+    /// Distinct device roots referenced by this checkpoint — partition
+    /// or chunk entries (empty for single-device layouts).
     pub fn devices(&self) -> Vec<&str> {
         let mut seen = std::collections::BTreeSet::new();
         self.partitions
             .iter()
             .filter_map(|p| p.device.as_deref())
+            .chain(
+                self.delta
+                    .iter()
+                    .flat_map(|d| d.chunks.iter())
+                    .filter_map(|c| c.device.as_deref()),
+            )
             .filter(|d| seen.insert(*d))
             .collect()
     }
@@ -96,8 +312,10 @@ impl CheckpointManifest {
         format!("part-{:04}-rank{:05}.fpck", p.index, p.writer_rank)
     }
 
+    /// Serialize to the manifest JSON document (always written at
+    /// [`MANIFEST_VERSION`]).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("manifest_version", Json::from(MANIFEST_VERSION)),
             ("total_len", Json::from(self.total_len as i64)),
             ("digest_hi", Json::from((self.digest >> 32) as i64)),
@@ -118,14 +336,20 @@ impl CheckpointManifest {
                     Json::obj(fields)
                 })),
             ),
-        ])
+        ];
+        if let Some(delta) = &self.delta {
+            fields.push(("delta", delta.to_json()));
+        }
+        Json::obj(fields)
     }
 
+    /// Parse a manifest JSON document (v2 or v3; older rejected).
     pub fn from_json(v: &Json) -> Result<CheckpointManifest> {
         let version = v.opt("manifest_version").map(Json::as_i64).transpose()?.unwrap_or(1);
-        if version != MANIFEST_VERSION {
+        if !(MANIFEST_MIN_READ_VERSION..=MANIFEST_VERSION).contains(&version) {
             return Err(Error::Format(format!(
-                "checkpoint manifest is v{version}, this build reads v{MANIFEST_VERSION} \
+                "checkpoint manifest is v{version}, this build reads \
+                 v{MANIFEST_MIN_READ_VERSION}..v{MANIFEST_VERSION} \
                  (the stream-digest algorithm changed); re-create the checkpoint"
             )));
         }
@@ -149,14 +373,20 @@ impl CheckpointManifest {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        let delta = match v.opt("delta") {
+            Some(d) => Some(DeltaSection::from_json(d)?),
+            None => None,
+        };
         Ok(CheckpointManifest {
             total_len: v.get("total_len")?.as_i64()? as u64,
             digest: (hi << 32) | (lo & 0xffff_ffff),
             step: v.get("step")?.as_i64()? as u64,
             partitions,
+            delta,
         })
     }
 
+    /// Write the manifest into `dir` (atomic: temp file + rename).
     pub fn save(&self, dir: &Path) -> Result<PathBuf> {
         let path = dir.join(MANIFEST_FILE);
         let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
@@ -167,6 +397,7 @@ impl CheckpointManifest {
         Ok(path)
     }
 
+    /// Read and validate the manifest of the checkpoint in `dir`.
     pub fn load(dir: &Path) -> Result<CheckpointManifest> {
         let path = dir.join(MANIFEST_FILE);
         let text = std::fs::read_to_string(&path)
@@ -176,8 +407,17 @@ impl CheckpointManifest {
         Ok(m)
     }
 
-    /// Partition table must tile [0, total_len) contiguously.
+    /// Whichever table is present must tile [0, total_len) contiguously
+    /// (partition table for full checkpoints, chunk table for deltas).
     pub fn validate(&self) -> Result<()> {
+        if let Some(delta) = &self.delta {
+            if !self.partitions.is_empty() {
+                return Err(Error::Format(
+                    "manifest has both a partition table and a delta section".into(),
+                ));
+            }
+            return delta.validate(self.total_len);
+        }
         let mut pos = 0u64;
         for p in &self.partitions {
             if p.start != pos || p.end < p.start {
@@ -275,6 +515,78 @@ mod tests {
             m.partitions.iter().map(|p| &p.file).collect();
         assert_eq!(names.len(), m.partitions.len());
         assert!(m.partitions[0].file.starts_with("part-0000"));
+    }
+
+    fn delta_manifest() -> CheckpointManifest {
+        let delta = DeltaSection {
+            base: Some("step-00000003".into()),
+            chain_len: 2,
+            chunk_size: 64,
+            chunks: vec![
+                ChunkEntry { hash: 0x11, len: 64, source: Some("step-00000001".into()), device: None },
+                ChunkEntry {
+                    hash: 0x22,
+                    len: 64,
+                    source: None,
+                    device: Some("/mnt/ssd1".into()),
+                },
+                ChunkEntry { hash: 0x33, len: 10, source: None, device: None },
+            ],
+        };
+        CheckpointManifest::from_delta(138, 0xfeed_f00d, 4, delta)
+    }
+
+    #[test]
+    fn delta_json_roundtrip() {
+        let m = delta_manifest();
+        m.validate().unwrap();
+        let back = CheckpointManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert!(back.is_delta());
+        assert_eq!(back.devices(), vec!["/mnt/ssd1"]);
+        let d = back.delta.as_ref().unwrap();
+        assert_eq!(d.required_dirs(), vec!["step-00000001"]);
+        assert_eq!(d.local_bytes(), 74);
+    }
+
+    #[test]
+    fn v2_manifest_without_delta_still_reads() {
+        let m = manifest();
+        let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
+        fields.insert("manifest_version".into(), Json::Int(2));
+        let back = CheckpointManifest::from_json(&Json::Object(fields)).unwrap();
+        assert_eq!(back, m);
+        assert!(!back.is_delta());
+    }
+
+    #[test]
+    fn delta_validation_catches_bad_tables() {
+        // wrong coverage
+        let mut m = delta_manifest();
+        m.total_len += 1;
+        assert!(m.validate().is_err());
+        // interior chunk shorter than chunk_size
+        let mut m = delta_manifest();
+        m.delta.as_mut().unwrap().chunks[0].len = 63;
+        assert!(m.validate().is_err());
+        // both tables populated
+        let mut m = delta_manifest();
+        m.partitions = manifest().partitions;
+        assert!(m.validate().is_err());
+        // a base checkpoint must be self-contained
+        let mut m = delta_manifest();
+        m.delta.as_mut().unwrap().base = None;
+        assert!(m.validate().is_err(), "foreign chunk in a base must fail validation");
+        // chunk_size 0
+        let mut m = delta_manifest();
+        m.delta.as_mut().unwrap().chunk_size = 0;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn chunk_file_names_are_ordered() {
+        assert_eq!(DeltaSection::chunk_file(0), "chunk-000000.fpck");
+        assert!(DeltaSection::chunk_file(1) < DeltaSection::chunk_file(10));
     }
 
     #[test]

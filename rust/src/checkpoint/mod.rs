@@ -16,7 +16,12 @@
 //! * [`load`] — parallel checkpoint loading + allgather reassembly.
 //! * [`manifest`] — the per-checkpoint manifest tying partitions back
 //!   into one logical stream.
+//! * [`delta`] — chunk-granular incremental checkpointing: diff the
+//!   serialized stream against the previous checkpoint's chunk table,
+//!   write only dirty chunks through the shared runtime, reference the
+//!   rest; with chain compaction and dead-chunk garbage collection.
 
+pub mod delta;
 pub mod engine;
 pub mod load;
 pub mod manifest;
@@ -24,6 +29,7 @@ pub mod pipeline;
 pub mod plan;
 pub mod strategy;
 
+pub use delta::{CheckpointStrategy, DeltaCheckpointer, DeltaConfig, DeltaOutcome};
 pub use engine::{CheckpointEngine, CheckpointOutcome};
 pub use load::load_checkpoint;
 pub use manifest::CheckpointManifest;

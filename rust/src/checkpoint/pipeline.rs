@@ -37,6 +37,7 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::checkpoint::delta::DeltaCheckpointer;
 use crate::checkpoint::engine::{CheckpointEngine, CheckpointOutcome};
 use crate::cluster::topology::RankPlacement;
 use crate::tensor::TensorStore;
@@ -49,6 +50,27 @@ struct Request {
     dir: PathBuf,
 }
 
+/// What the helper thread runs per request: a full parallel write or an
+/// incremental delta write. Owned by the helper so stateful writers
+/// (the delta chain diff state) live where the writes happen.
+enum HelperWriter {
+    Full { engine: CheckpointEngine, group: Vec<RankPlacement> },
+    Delta(DeltaCheckpointer),
+}
+
+impl HelperWriter {
+    fn write(&mut self, req: Request) -> Result<CheckpointOutcome> {
+        match self {
+            HelperWriter::Full { engine, group } => {
+                engine.write(&req.snapshot, req.extra, &req.dir, group)
+            }
+            HelperWriter::Delta(ckpt) => ckpt
+                .write(&req.snapshot, req.extra, &req.dir)
+                .map(crate::checkpoint::delta::DeltaOutcome::into_outcome),
+        }
+    }
+}
+
 /// Decoupled checkpoint executor: owns a helper thread running the
 /// checkpoint engine.
 pub struct PipelinedCheckpointer {
@@ -59,6 +81,7 @@ pub struct PipelinedCheckpointer {
     /// Cumulative time the main thread spent blocked in wait_previous —
     /// the checkpoint *stall* the paper measures as training overhead.
     pub stall: Duration,
+    /// Outcomes of every completed checkpoint, in order.
     pub completed: Vec<CheckpointOutcome>,
 }
 
@@ -66,6 +89,17 @@ impl PipelinedCheckpointer {
     /// Spawn the helper around `engine`; `group` is the DP group used
     /// for every checkpoint (fixed at setup, §4.2).
     pub fn new(engine: CheckpointEngine, group: Vec<RankPlacement>) -> PipelinedCheckpointer {
+        Self::with_writer(HelperWriter::Full { engine, group })
+    }
+
+    /// Spawn the helper around an incremental [`DeltaCheckpointer`]:
+    /// per-iteration delta checkpoints overlapped with forward/backward,
+    /// with the chain diff state living on the helper thread.
+    pub fn delta(ckpt: DeltaCheckpointer) -> PipelinedCheckpointer {
+        Self::with_writer(HelperWriter::Delta(ckpt))
+    }
+
+    fn with_writer(mut writer: HelperWriter) -> PipelinedCheckpointer {
         let (req_tx, req_rx) = mpsc::channel::<Request>();
         let (done_tx, done_rx) = mpsc::channel();
         let helper = std::thread::Builder::new()
@@ -73,7 +107,7 @@ impl PipelinedCheckpointer {
             .spawn(move || {
                 // Infinite loop: block for a request, write, signal (§4.3).
                 for req in req_rx {
-                    let result = engine.write(&req.snapshot, req.extra, &req.dir, &group);
+                    let result = writer.write(req);
                     if done_tx.send(result).is_err() {
                         break; // main side gone
                     }
@@ -253,5 +287,39 @@ mod tests {
         let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
         let pipe = PipelinedCheckpointer::new(engine, solo_group());
         assert!(pipe.finish().unwrap().is_empty());
+    }
+
+    #[test]
+    fn pipelined_delta_chain_reloads_every_step() {
+        use crate::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+        use crate::io::engine::IoConfig;
+        use crate::io::runtime::{IoRuntime, IoRuntimeConfig};
+        use std::sync::Arc;
+
+        let dir = scratch_dir("pipe-delta").unwrap();
+        let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist().microbench(),
+            ..IoRuntimeConfig::default()
+        }));
+        let ckpt =
+            DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: 4096, max_chain: 8 });
+        let mut pipe = PipelinedCheckpointer::delta(ckpt);
+        for i in 0..4i64 {
+            pipe.wait_previous().unwrap();
+            let store = store_with(i as u8, 120_000);
+            pipe.request(&store, extra(i), dir.join(format!("step-{i:08}"))).unwrap();
+        }
+        let outcomes = pipe.finish().unwrap();
+        assert_eq!(outcomes.len(), 4);
+        // later checkpoints are deltas off the first (base) one
+        assert!(outcomes[1].manifest.is_delta());
+        assert_eq!(outcomes[1].manifest.delta.as_ref().unwrap().chain_len, 1);
+        for i in 0..4i64 {
+            let (loaded, header, _) =
+                load_checkpoint(&dir.join(format!("step-{i:08}")), 2).unwrap();
+            assert_eq!(header.extra["step"], Json::Int(i));
+            assert!(loaded.content_eq(&store_with(i as u8, 120_000)));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

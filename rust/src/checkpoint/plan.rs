@@ -22,17 +22,23 @@ use crate::{Error, Result};
 /// One writer's byte range of the serialized stream: `[start, end)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Partition {
+    /// DP rank that writes this partition.
     pub writer_rank: usize,
+    /// Position in the plan (also the device-striping key).
     pub index: usize,
+    /// First byte (inclusive) of the stream range.
     pub start: u64,
+    /// One past the last byte of the stream range.
     pub end: u64,
 }
 
 impl Partition {
+    /// Partition length in bytes.
     pub fn len(&self) -> u64 {
         self.end - self.start
     }
 
+    /// True for zero-length partitions.
     pub fn is_empty(&self) -> bool {
         self.start == self.end
     }
@@ -41,7 +47,9 @@ impl Partition {
 /// A complete, validated partitioning of one checkpoint stream.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WritePlan {
+    /// Length of the serialized stream being partitioned.
     pub total_len: u64,
+    /// Partitions in stream order.
     pub partitions: Vec<Partition>,
 }
 
@@ -79,6 +87,7 @@ impl WritePlan {
         WritePlan::balanced(total_len, &ranks)
     }
 
+    /// Number of writers (= partitions) in the plan.
     pub fn writers(&self) -> usize {
         self.partitions.len()
     }

@@ -32,6 +32,7 @@ pub enum WriterStrategy {
 }
 
 impl WriterStrategy {
+    /// Stable CLI/report name.
     pub fn name(self) -> String {
         match self {
             WriterStrategy::Rank0 => "rank0".into(),
@@ -42,6 +43,7 @@ impl WriterStrategy {
         }
     }
 
+    /// Parse a CLI strategy name (`rank0`, `replica`, `fixedN`, ...).
     pub fn parse(s: &str) -> Result<WriterStrategy> {
         match s {
             "rank0" | "baseline" => Ok(WriterStrategy::Rank0),

@@ -29,12 +29,16 @@ pub enum WritePath {
 /// One writer's assignment: where it runs and how many bytes it writes.
 #[derive(Debug, Clone, Copy)]
 pub struct WriterLoad {
+    /// Machine the writer runs on.
     pub node: usize,
+    /// CPU socket the writer runs on.
     pub socket: usize,
+    /// Bytes this writer persists.
     pub bytes: u64,
 }
 
 impl WriterLoad {
+    /// A load at a rank's physical placement.
     pub fn from_placement(p: &RankPlacement, bytes: u64) -> WriterLoad {
         WriterLoad { node: p.node, socket: p.socket, bytes }
     }

@@ -1,11 +1,14 @@
 //! Hardware specification of the evaluation cluster (paper §5.2.1) plus
-//! the calibrated I/O-path constants (DESIGN.md §6).
+//! the calibrated I/O-path constants (ARCHITECTURE.md §6).
 
 /// Physical description of one homogeneous cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
+    /// Machine count.
     pub nodes: usize,
+    /// GPUs per machine.
     pub gpus_per_node: usize,
+    /// CPU sockets per machine.
     pub sockets_per_node: usize,
     /// Local NVMe RAID-0 peak write bandwidth per node, GB/s (decimal).
     pub node_write_gbps: f64,
@@ -56,6 +59,7 @@ impl ClusterSpec {
         }
     }
 
+    /// GPUs in the whole cluster.
     pub fn total_gpus(&self) -> usize {
         self.nodes * self.gpus_per_node
     }
@@ -65,6 +69,7 @@ impl ClusterSpec {
         self.nodes as f64 * self.node_write_gbps
     }
 
+    /// GPUs attached to each CPU socket.
     pub fn gpus_per_socket(&self) -> usize {
         self.gpus_per_node / self.sockets_per_node
     }

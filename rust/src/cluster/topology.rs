@@ -14,14 +14,18 @@ use crate::{Error, Result};
 /// Parallelism degrees of a training job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Parallelism {
+    /// Data parallelism (model replicas).
     pub dp: usize,
+    /// Tensor parallelism.
     pub tp: usize,
+    /// Pipeline parallelism.
     pub pp: usize,
     /// Expert parallelism (MoE); 1 for dense models.
     pub ep: usize,
 }
 
 impl Parallelism {
+    /// Dense-model degrees (no expert parallelism).
     pub fn dense(dp: usize, tp: usize, pp: usize) -> Parallelism {
         Parallelism { dp, tp, pp, ep: 1 }
     }
@@ -31,6 +35,7 @@ impl Parallelism {
         self.tp * self.pp * self.ep
     }
 
+    /// Total rank count.
     pub fn world(&self) -> usize {
         self.dp * self.mp()
     }
@@ -39,20 +44,27 @@ impl Parallelism {
 /// Physical placement of one rank.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RankPlacement {
+    /// Global rank id.
     pub rank: usize,
+    /// Machine index.
     pub node: usize,
+    /// CPU socket index within the node.
     pub socket: usize,
+    /// GPU index within the node.
     pub local_gpu: usize,
 }
 
 /// A concrete mapping of a job's ranks onto a cluster.
 #[derive(Debug, Clone)]
 pub struct Topology {
+    /// The physical cluster.
     pub spec: ClusterSpec,
+    /// The job's parallelism degrees.
     pub par: Parallelism,
 }
 
 impl Topology {
+    /// Validate that the job fits the cluster.
     pub fn new(spec: ClusterSpec, par: Parallelism) -> Result<Topology> {
         if par.dp == 0 || par.tp == 0 || par.pp == 0 || par.ep == 0 {
             return Err(Error::Config("parallelism degrees must be >= 1".into()));
@@ -67,6 +79,7 @@ impl Topology {
         Ok(Topology { spec, par })
     }
 
+    /// Total rank count of the job.
     pub fn world(&self) -> usize {
         self.par.world()
     }

@@ -14,14 +14,21 @@ use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 use crate::Result;
 
+/// One (model, DP) point of Figure 1.
 pub struct Fig1Row {
+    /// Model name.
     pub model: String,
+    /// Data-parallel degree.
     pub dp: usize,
+    /// Per-iteration compute time (seconds).
     pub compute_s: f64,
+    /// Baseline checkpoint time (seconds).
     pub ckpt_s: f64,
+    /// Checkpoint share of the iteration (0..1).
     pub ckpt_share: f64,
 }
 
+/// Compute every row of the figure.
 pub fn compute() -> Result<Vec<Fig1Row>> {
     let mut rows = Vec::new();
     // dense: gpt3-1.3b (mp=2, DP 8..64 fits 8 DGX-2 nodes at DP=64)
@@ -64,6 +71,7 @@ pub fn compute() -> Result<Vec<Fig1Row>> {
     Ok(rows)
 }
 
+/// Print the figure and save its JSON result.
 pub fn run() -> Result<()> {
     let rows = compute()?;
     let mut t = Table::new(vec!["model", "DP", "compute (s)", "ckpt (s)", "ckpt share"]);

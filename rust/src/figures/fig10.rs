@@ -15,15 +15,23 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::Result;
 
+/// One DP point of Figure 10 (sparse MoE model).
 pub struct Fig10Row {
+    /// Data-parallel degree.
     pub dp: usize,
+    /// Machine count (one replica per node at EP=16).
     pub nodes: usize,
+    /// Baseline throughput (decimal GB/s).
     pub base_gbps: f64,
+    /// FastPersist throughput (decimal GB/s).
     pub fp_gbps: f64,
+    /// Checkpoint-latency speedup over baseline.
     pub ckpt_speedup: f64,
+    /// End-to-end training speedup.
     pub e2e_speedup: f64,
 }
 
+/// Simulate every row of the figure.
 pub fn compute() -> Result<Vec<Fig10Row>> {
     let m = find("gpt3-1.8b-moe").unwrap();
     let mut rows = Vec::new();
@@ -51,6 +59,7 @@ pub fn compute() -> Result<Vec<Fig10Row>> {
     Ok(rows)
 }
 
+/// Print the figure and save its JSON result.
 pub fn run() -> Result<()> {
     let rows = compute()?;
     let mut t =

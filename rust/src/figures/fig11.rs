@@ -15,19 +15,29 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::Result;
 
+/// One gradient-accumulation point of Fig. 11a.
 pub struct GasRow {
+    /// Gradient-accumulation steps per optimizer update.
     pub gas: u64,
+    /// Slowdown with synchronous checkpointing (1.0 = none).
     pub sync_slowdown: f64,
+    /// Slowdown with pipelined checkpointing.
     pub pipe_slowdown: f64,
 }
 
+/// One model point of Fig. 11b.
 pub struct ModelRow {
+    /// Model name.
     pub model: String,
+    /// Data-parallel degree.
     pub dp: usize,
+    /// Slowdown with synchronous checkpointing (1.0 = none).
     pub sync_slowdown: f64,
+    /// Slowdown with pipelined checkpointing.
     pub pipe_slowdown: f64,
 }
 
+/// Simulate the GAS sensitivity sweep (Fig. 11a).
 pub fn compute_gas_sweep() -> Result<Vec<GasRow>> {
     // gpt3-1.3b, DP=1 on one node (paper uses 2 GPUs of one box) with a
     // fixed micro-batch: per-replica batch = mb * GAS, so compute grows
@@ -53,6 +63,7 @@ pub fn compute_gas_sweep() -> Result<Vec<GasRow>> {
     Ok(rows)
 }
 
+/// Simulate the per-model sweep on 8 nodes (Fig. 11b).
 pub fn compute_model_sweep() -> Result<Vec<ModelRow>> {
     let spec = ClusterSpec::dgx2(8);
     let strat = WriterStrategy::PerSocket;
@@ -71,6 +82,7 @@ pub fn compute_model_sweep() -> Result<Vec<ModelRow>> {
     Ok(rows)
 }
 
+/// Print the figure and save its JSON result.
 pub fn run() -> Result<()> {
     let gas_rows = compute_gas_sweep()?;
     let mut t = Table::new(vec!["GAS", "sync slowdown", "pipelined slowdown"]);

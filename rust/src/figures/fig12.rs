@@ -9,6 +9,7 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::Result;
 
+/// Print the projection table and save its JSON result.
 pub fn run() -> Result<()> {
     let sweep = fig12_sweep()?;
     let mut t = Table::new(vec![

@@ -14,13 +14,19 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::Result;
 
+/// One (model, nodes) point of Figure 2.
 pub struct Fig2Cell {
+    /// Model name.
     pub model: String,
+    /// Machine count.
     pub nodes: usize,
+    /// Baseline write throughput (decimal GB/s).
     pub gbps: f64,
+    /// Percentage of the deliverable SSD peak.
     pub peak_pct: f64,
 }
 
+/// Compute every cell of the figure.
 pub fn compute() -> Result<Vec<Fig2Cell>> {
     let mut out = Vec::new();
     for m in MODEL_ZOO.iter().filter(|m| m.dense) {
@@ -43,6 +49,7 @@ pub fn compute() -> Result<Vec<Fig2Cell>> {
     Ok(out)
 }
 
+/// Print the figure and save its JSON result.
 pub fn run() -> Result<()> {
     let cells = compute()?;
     let mut t = Table::new(vec!["model", "1 node", "2 nodes", "4 nodes", "8 nodes"]);

@@ -21,11 +21,17 @@ use crate::util::rng::Rng;
 use crate::util::table::Table;
 use crate::Result;
 
+/// One measured point of the Fig. 7 sweep.
 pub struct Fig7Cell {
+    /// Checkpoint size (decimal MB).
     pub ckpt_mb: u64,
+    /// IO (staging) buffer size (decimal MB).
     pub io_buf_mb: u64,
+    /// Engine mode label (single/double).
     pub mode: &'static str,
+    /// Measured throughput (decimal GB/s).
     pub gbps: f64,
+    /// Speedup over the buffered baseline at the same sizes.
     pub speedup_vs_baseline: f64,
 }
 
@@ -47,6 +53,7 @@ fn measure(cfg: &IoConfig, dir: &std::path::Path, data: &[u8], reps: usize) -> R
     Ok(times[times.len() / 2])
 }
 
+/// Measure every cell of the sweep on local disk.
 pub fn compute(fast: bool) -> Result<Vec<Fig7Cell>> {
     let dir = crate::io::engine::scratch_dir("fig7")?;
     let (ckpt_sizes, buf_sizes, reps): (Vec<u64>, Vec<u64>, usize) = if fast {
@@ -91,6 +98,7 @@ pub fn compute(fast: bool) -> Result<Vec<Fig7Cell>> {
     Ok(out)
 }
 
+/// Print the figure and save its JSON result.
 pub fn run(fast: bool) -> Result<()> {
     let cells = compute(fast)?;
     let ckpt_sizes: Vec<u64> = {
@@ -148,7 +156,7 @@ mod tests {
     fn structural_invariants_on_this_substrate() {
         // The container substrate (DRAM-speed "SSD") compresses the
         // paper's 1.8-6.6x gap — both paths are memcpy-bound here (see
-        // EXPERIMENTS.md). What must still hold structurally:
+        // ARCHITECTURE.md §1). What must still hold structurally:
         // (1) the NVMe path is never catastrophically slower than the
         //     baseline (floor guards regressions), and
         // (2) double buffering is at least as good as single buffering

@@ -16,14 +16,21 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::Result;
 
+/// One simulated point of the Fig. 8 sweep.
 pub struct Fig8Cell {
+    /// Machine count.
     pub nodes: usize,
+    /// Parallel writer count.
     pub writers: usize,
+    /// Writer-selection strategy label.
     pub strategy: String,
+    /// Aggregate write throughput (decimal GB/s).
     pub gbps: f64,
+    /// Fraction of the cluster's deliverable peak (0..1).
     pub peak_frac: f64,
 }
 
+/// Simulate every cell of the sweep.
 pub fn compute() -> Result<Vec<Fig8Cell>> {
     let m = find("gpt3-0.7b").unwrap(); // mp=1 → one slice, group = all
     let mut out = Vec::new();
@@ -68,6 +75,7 @@ pub fn compute() -> Result<Vec<Fig8Cell>> {
     Ok(out)
 }
 
+/// Print the figure and save its JSON result.
 pub fn run() -> Result<()> {
     let cells = compute()?;
     println!("\n== Figure 8/15: parallel write of gpt3-0.7b (10 GB), simulated cluster ==");

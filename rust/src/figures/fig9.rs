@@ -17,11 +17,17 @@ use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 use crate::Result;
 
+/// One (model, DP) point of Figure 9.
 pub struct Fig9Row {
+    /// Model name.
     pub model: String,
+    /// Data-parallel degree.
     pub dp: usize,
+    /// Checkpoint-latency speedup over baseline.
     pub ckpt_speedup: f64,
+    /// FastPersist aggregate throughput (decimal GB/s).
     pub fp_gbps: f64,
+    /// End-to-end training speedup.
     pub e2e_speedup: f64,
 }
 
@@ -58,6 +64,7 @@ pub fn compute() -> Result<Vec<Fig9Row>> {
     Ok(rows)
 }
 
+/// Print the figure and save its JSON result.
 pub fn run() -> Result<()> {
     let rows = compute()?;
     let mut t = Table::new(vec!["model", "DP", "GPUs", "ckpt speedup", "FP GB/s", "E2E speedup"]);

@@ -5,7 +5,7 @@
 //! rows/series next to our measured/simulated values and writes a JSON
 //! result file under `results/`. Single-writer I/O experiments (Fig. 7
 //! family) measure **real disk I/O**; cluster-scale experiments run on
-//! the calibrated simulator (see DESIGN.md §3 for the substitution
+//! the calibrated simulator (see ARCHITECTURE.md §1 for the substitution
 //! argument).
 
 pub mod fig1;

@@ -7,14 +7,21 @@ use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 use crate::Result;
 
+/// One model row of Table 1.
 pub struct Table1Row {
+    /// Model name.
     pub model: String,
+    /// Maximum valid data-parallel degree.
     pub dp: usize,
+    /// Paper's node count for that DP.
     pub nodes: usize,
+    /// Required write bandwidth from Eq. 1 (decimal GB/s).
     pub bc_gbps: f64,
+    /// The paper's stated B_C (decimal GB/s).
     pub paper_bc: f64,
 }
 
+/// Compute every row of the table.
 pub fn compute() -> Vec<Table1Row> {
     // (model, max DP, paper nodes, paper B_C)
     let cases = [
@@ -39,6 +46,7 @@ pub fn compute() -> Vec<Table1Row> {
         .collect()
 }
 
+/// Print the table and save its JSON result.
 pub fn run() -> Result<()> {
     let rows = compute();
     let mut t = Table::new(vec!["model", "DP", "# nodes", "B_C model (GB/s)", "B_C paper (GB/s)"]);

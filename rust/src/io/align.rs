@@ -23,6 +23,7 @@ pub fn align_up(len: u64, align: u64) -> u64 {
     len.checked_add(align - 1).expect("align_up overflow") & !(align - 1)
 }
 
+/// True when `v` is a multiple of `align`.
 #[inline]
 pub fn is_aligned(v: u64, align: u64) -> bool {
     debug_assert!(align.is_power_of_two());

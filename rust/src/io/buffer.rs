@@ -28,6 +28,7 @@ pub struct AlignedBuf {
 unsafe impl Send for AlignedBuf {}
 
 impl AlignedBuf {
+    /// Allocate a zeroed buffer of `cap` bytes at the given alignment.
     pub fn new(cap: usize, align: usize) -> AlignedBuf {
         assert!(align.is_power_of_two() && cap > 0);
         let layout = Layout::from_size_align(cap, align).expect("layout");
@@ -37,18 +38,22 @@ impl AlignedBuf {
         AlignedBuf { ptr, cap, align, len: 0 }
     }
 
+    /// Total buffer capacity in bytes.
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Base-address alignment in bytes.
     pub fn align(&self) -> usize {
         self.align
     }
 
+    /// Whole buffer as a byte slice (including unfilled tail).
     pub fn as_slice(&self) -> &[u8] {
         unsafe { std::slice::from_raw_parts(self.ptr, self.cap) }
     }
 
+    /// Whole buffer as a mutable byte slice.
     pub fn as_mut_slice(&mut self) -> &mut [u8] {
         unsafe { std::slice::from_raw_parts_mut(self.ptr, self.cap) }
     }
@@ -73,6 +78,7 @@ impl AlignedBuf {
         n
     }
 
+    /// Reset the filled length to zero (capacity unchanged).
     pub fn clear(&mut self) {
         self.len = 0;
     }
@@ -118,10 +124,13 @@ pub struct BufferPool {
 }
 
 impl BufferPool {
+    /// A pool of `count` buffers of `buf_size` bytes at the default
+    /// alignment.
     pub fn new(count: usize, buf_size: usize) -> BufferPool {
         Self::with_align(count, buf_size, DEFAULT_ALIGN)
     }
 
+    /// A pool with an explicit buffer alignment.
     pub fn with_align(count: usize, buf_size: usize, align: usize) -> BufferPool {
         assert!(count > 0);
         let (tx, rx) = mpsc::channel();
@@ -201,14 +210,17 @@ impl BufferPool {
         }
     }
 
+    /// Size of each pooled buffer in bytes.
     pub fn buf_size(&self) -> usize {
         self.buf_size
     }
 
+    /// Alignment of the pooled buffers.
     pub fn align(&self) -> usize {
         self.align
     }
 
+    /// Pool cap: the maximum number of buffers ever allocated.
     pub fn count(&self) -> usize {
         self.count
     }

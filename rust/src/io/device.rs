@@ -3,7 +3,7 @@
 //!
 //! A [`DeviceMap`] is an ordered set of mount points (real NVMe mounts
 //! in production; sibling directories standing in for per-socket SSDs in
-//! this reproduction — see DESIGN.md). Checkpoint partitions are striped
+//! this reproduction — see ARCHITECTURE.md). Checkpoint partitions are striped
 //! round-robin across the devices, so a DP=8 checkpoint over a 4-device
 //! map keeps all four SSDs writing concurrently instead of funneling
 //! every partition through one filesystem.
@@ -60,6 +60,7 @@ impl DeviceMap {
         self.roots.len()
     }
 
+    /// True for the degenerate single-device map.
     pub fn is_empty(&self) -> bool {
         self.roots.is_empty()
     }
@@ -69,6 +70,7 @@ impl DeviceMap {
         self.roots.len() > 1
     }
 
+    /// The configured mount-point roots, in striping order.
     pub fn roots(&self) -> &[PathBuf] {
         &self.roots
     }

@@ -38,6 +38,7 @@ const O_DIRECT: i32 = 0o200000;
 #[cfg(not(target_os = "linux"))]
 const O_DIRECT: i32 = 0;
 
+/// The NVMe-optimized (aligned, staged, direct) write engine.
 pub struct DirectEngine {
     cfg: IoConfig,
     pool: BufferPool,

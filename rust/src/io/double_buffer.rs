@@ -26,7 +26,9 @@ use crate::{Error, Result};
 /// Counters from the drain path.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct DrainStats {
+    /// Bytes drained to storage.
     pub bytes: u64,
+    /// Positioned write ops issued.
     pub ops: u64,
 }
 
@@ -43,10 +45,12 @@ pub struct DrainPool {
 }
 
 impl DrainPool {
+    /// A pool of `threads` persistent drain workers.
     pub fn new(threads: usize) -> DrainPool {
         DrainPool { pool: Arc::new(ThreadPool::new(threads.max(1), "ckpt-drain")) }
     }
 
+    /// Number of drain workers.
     pub fn threads(&self) -> usize {
         self.pool.threads()
     }

@@ -27,6 +27,7 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Stable CLI/report name.
     pub fn name(self) -> &'static str {
         match self {
             EngineKind::Buffered => "buffered",
@@ -35,6 +36,7 @@ impl EngineKind {
         }
     }
 
+    /// Parse a CLI engine name (several aliases per kind).
     pub fn parse(s: &str) -> Result<EngineKind> {
         match s {
             "buffered" | "baseline" | "torch" => Ok(EngineKind::Buffered),
@@ -48,6 +50,7 @@ impl EngineKind {
 /// Tuning knobs for the write path.
 #[derive(Debug, Clone)]
 pub struct IoConfig {
+    /// Which write engine services the writes.
     pub kind: EngineKind,
     /// Staging ("IO buffer") size — the paper sweeps 2–128 MB (Fig. 7).
     pub io_buf_size: usize,
@@ -78,18 +81,22 @@ impl Default for IoConfig {
 }
 
 impl IoConfig {
+    /// The torch.save-equivalent buffered configuration.
     pub fn baseline() -> IoConfig {
         IoConfig { kind: EngineKind::Buffered, ..Default::default() }
     }
 
+    /// The default FastPersist (double-buffered direct) configuration.
     pub fn fastpersist() -> IoConfig {
         IoConfig::default()
     }
 
+    /// Defaults with an explicit engine kind.
     pub fn with_kind(kind: EngineKind) -> IoConfig {
         IoConfig { kind, ..Default::default() }
     }
 
+    /// Override the staging-buffer size.
     pub fn with_buf_size(mut self, size: usize) -> IoConfig {
         self.io_buf_size = size;
         self
@@ -114,7 +121,7 @@ impl IoConfig {
     /// software-path differences. The paper's single-writer effects live
     /// in the software path (staging copies, chunk sizes, overlap), so
     /// the Fig. 7 family measures against the page cache standing in for
-    /// the fast NVMe array. DESIGN.md §3 records this substitution.
+    /// the fast NVMe array. ARCHITECTURE.md §1 records this substitution.
     pub fn microbench(mut self) -> IoConfig {
         self.sync_on_finish = false;
         self.try_o_direct = false;
@@ -125,6 +132,7 @@ impl IoConfig {
 /// Statistics from one completed checkpoint-file write.
 #[derive(Debug, Clone, Default)]
 pub struct WriteStats {
+    /// Total payload bytes written to the file.
     pub total_bytes: u64,
     /// Bytes written through the aligned fast path.
     pub aligned_bytes: u64,
@@ -139,6 +147,7 @@ pub struct WriteStats {
 }
 
 impl WriteStats {
+    /// Achieved throughput in decimal GB/s.
     pub fn gbps(&self) -> f64 {
         crate::util::bytes::gbps(self.total_bytes, self.elapsed.as_secs_f64())
     }
@@ -160,6 +169,7 @@ pub trait Sink: Send {
 /// checkpoints; `create` allocates no staging memory and spawns no
 /// threads.
 pub trait WriteEngine: Send + Sync {
+    /// Which engine this is (for reporting).
     fn kind(&self) -> EngineKind;
     /// Open a sink writing to `path`; `expected_size` (if known) lets the
     /// engine pre-allocate the file.

@@ -26,6 +26,7 @@ pub struct PendingQueue {
 }
 
 impl PendingQueue {
+    /// A queue flushing whole `flush_size`-byte blocks.
     pub fn new(flush_size: usize) -> PendingQueue {
         assert!(flush_size > 0);
         PendingQueue { buf: Vec::with_capacity(flush_size), flush_size, appended: 0, flushed: 0 }
@@ -75,14 +76,17 @@ impl PendingQueue {
         Ok(())
     }
 
+    /// Bytes currently buffered (not yet flushed).
     pub fn pending(&self) -> usize {
         self.buf.len()
     }
 
+    /// Total bytes appended over the queue's lifetime.
     pub fn appended_bytes(&self) -> u64 {
         self.appended
     }
 
+    /// Total bytes flushed out so far.
     pub fn flushed_bytes(&self) -> u64 {
         self.flushed
     }

@@ -78,6 +78,7 @@ pub enum WriteSource {
 }
 
 impl WriteSource {
+    /// Number of bytes this source will write.
     pub fn len(&self) -> u64 {
         match self {
             WriteSource::Range { start, end, .. } => end - start,
@@ -85,6 +86,7 @@ impl WriteSource {
         }
     }
 
+    /// True for zero-length sources.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -99,7 +101,9 @@ impl WriteSource {
 
 /// One unit of work for the writer pool: persist `source` to `path`.
 pub struct WriteJob {
+    /// What to write.
     pub source: WriteSource,
+    /// Destination file path.
     pub path: PathBuf,
     /// Engine override; `None` uses the runtime's configured kind. Lets
     /// a baseline (buffered) and a FastPersist engine share one runtime.
@@ -117,6 +121,7 @@ impl WriteJob {
         WriteJob { source: WriteSource::Bytes(data), path, kind: None }
     }
 
+    /// Override the engine kind for this job only.
     pub fn with_kind(mut self, kind: EngineKind) -> WriteJob {
         self.kind = Some(kind);
         self
@@ -181,6 +186,8 @@ pub struct IoRuntime {
 }
 
 impl IoRuntime {
+    /// Build the runtime: allocate-on-demand staging pool, persistent
+    /// drain + writer pools, device map.
     pub fn new(cfg: IoRuntimeConfig) -> IoRuntime {
         let io = cfg.io.normalized();
         let staging =

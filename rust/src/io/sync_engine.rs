@@ -14,11 +14,13 @@ use std::time::Instant;
 use crate::io::engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
 use crate::Result;
 
+/// The buffered (torch.save-style) write engine.
 pub struct BufferedEngine {
     cfg: IoConfig,
 }
 
 impl BufferedEngine {
+    /// An engine writing through std buffered I/O per `cfg`.
     pub fn new(cfg: IoConfig) -> BufferedEngine {
         BufferedEngine { cfg }
     }

@@ -35,9 +35,11 @@
 //! Paper-scale experiments (8× DGX-2, 128 V100s, 24.8 GB/s of NVMe per
 //! node) run on a calibrated cluster/storage simulator ([`cluster`],
 //! [`sim`]); single-writer I/O effects are measured for real on local
-//! disk. See `DESIGN.md` (repo root) for the substitution table —
+//! disk. See `ARCHITECTURE.md` (repo root) for the substitution table —
 //! page-cache-as-NVMe, threads-as-ranks, `DeviceMap`-as-SSD-array —
 //! and the PJRT stub arrangement.
+
+#![warn(missing_docs)]
 
 pub mod baseline;
 pub mod benchkit;

@@ -99,6 +99,8 @@ fn train_spec(name: &'static str) -> ArgSpec {
         .opt("ckpt-dir", "checkpoint directory", "ckpts")
         .opt("mode", "none|baseline|sync|pipelined", "pipelined")
         .opt("strategy", "rank0|replica|socket|node|fixedN", "replica")
+        .opt("ckpt", "full | delta | deltaN (incremental, compact after N; \
+                       --strategy applies to full only)", "full")
         .opt("engine", "buffered|single|double", "double")
         .opt("io-buf", "IO buffer size", "32MiB")
         .opt("devices", "none | simN (N simulated SSDs) | dir,dir,...", "none")
@@ -140,6 +142,9 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
         ckpt_dir,
         mode: CkptRunMode::parse(parsed.get("mode"))?,
         strategy: WriterStrategy::parse(parsed.get("strategy"))?,
+        ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::parse(
+            parsed.get("ckpt"),
+        )?,
         io,
         devices,
         dp_writers: parsed.get_usize("writers")?,
@@ -173,6 +178,15 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
         trainer.total_stall(),
         r.counter("ckpts"),
     );
+    let written = r.total("ckpt_written_bytes");
+    if written > 0.0 {
+        println!(
+            "ckpt bytes written {} total ({} per full snapshot) — strategy {}",
+            human(written as u64),
+            human(trainer.state.checkpoint_bytes()),
+            trainer.cfg.ckpt_strategy.name(),
+        );
+    }
     Ok(())
 }
 

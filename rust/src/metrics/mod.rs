@@ -15,14 +15,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Timer {
         Timer { start: Instant::now() }
     }
 
+    /// Time since [`Timer::start`].
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Elapsed seconds as f64.
     pub fn secs(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
@@ -36,34 +39,42 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// An empty recorder.
     pub fn new() -> Recorder {
         Recorder::default()
     }
 
+    /// Append one sample to the named series.
     pub fn record(&mut self, name: &str, value: f64) {
         self.series.entry(name.to_string()).or_default().push(value);
     }
 
+    /// Append a duration sample (in seconds) to the named series.
     pub fn record_duration(&mut self, name: &str, d: Duration) {
         self.record(name, d.as_secs_f64());
     }
 
+    /// Increment the named counter.
     pub fn count(&mut self, name: &str, by: u64) {
         *self.counters.entry(name.to_string()).or_default() += by;
     }
 
+    /// All samples of a series (empty if never recorded).
     pub fn samples(&self, name: &str) -> &[f64] {
         self.series.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
+    /// Current value of a counter (0 if never counted).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Summary statistics of a series.
     pub fn summary(&self, name: &str) -> Summary {
         Summary::of(self.samples(name))
     }
 
+    /// Sum of all samples of a series.
     pub fn total(&self, name: &str) -> f64 {
         self.samples(name).iter().sum()
     }
@@ -97,6 +108,7 @@ impl Recorder {
         ])
     }
 
+    /// Write the JSON report to `path` (creating parent dirs).
     pub fn write_json(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;

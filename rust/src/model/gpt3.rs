@@ -5,8 +5,7 @@
 //! a FLOPs model (6·N·tokens) with a V100 MFU curve composed of a base
 //! utilization, a small-micro-batch penalty, and the pipeline-parallel
 //! bubble — fitted so that the paper's Table 1 required-bandwidth values
-//! are reproduced to the right order and trend (see EXPERIMENTS.md for
-//! paper-vs-model deltas).
+//! are reproduced to the right order and trend.
 
 use crate::cluster::topology::Parallelism;
 
@@ -26,15 +25,20 @@ pub const V100_HBM_BPS: f64 = 900e9;
 /// One evaluation model (paper Table 2).
 #[derive(Debug, Clone)]
 pub struct GptModel {
+    /// Model name (paper Table 2).
     pub name: &'static str,
     /// Total parameters.
     pub params: u64,
     /// Parameters active per token (== params for dense; for MoE, the
     /// non-expert + one-expert share).
     pub active_params: u64,
+    /// True for dense models, false for MoE.
     pub dense: bool,
+    /// Tensor-parallel degree.
     pub tp: usize,
+    /// Pipeline-parallel degree.
     pub pp: usize,
+    /// Expert-parallel degree (1 for dense).
     pub ep: usize,
     /// Published global batch size.
     pub gbs: u64,
@@ -43,10 +47,12 @@ pub struct GptModel {
 }
 
 impl GptModel {
+    /// Model-parallel degree: ranks per replica.
     pub fn mp(&self) -> usize {
         self.tp * self.pp * self.ep
     }
 
+    /// The job's [`Parallelism`] at data-parallel degree `dp`.
     pub fn parallelism(&self, dp: usize) -> Parallelism {
         Parallelism { dp, tp: self.tp, pp: self.pp, ep: self.ep }
     }
@@ -124,6 +130,7 @@ pub struct IterBreakdown {
 }
 
 impl IterBreakdown {
+    /// Total iteration seconds (F+B + optimizer).
     pub fn total(&self) -> f64 {
         self.fb + self.opt
     }

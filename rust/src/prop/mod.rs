@@ -28,6 +28,7 @@ pub struct Gen {
     /// When Some, draws replay from this override log instead of the rng.
     replay: Option<Vec<u64>>,
     replay_idx: usize,
+    /// Failure message recorded by the runner (for reporting).
     pub failure: Option<String>,
 }
 
@@ -53,10 +54,12 @@ impl Gen {
         v
     }
 
+    /// Draw a usize in [lo, hi] inclusive.
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
         self.u64(lo as u64, hi as u64) as usize
     }
 
+    /// Draw a uniform boolean.
     pub fn bool(&mut self) -> bool {
         self.u64(0, 1) == 1
     }

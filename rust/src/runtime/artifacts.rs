@@ -12,57 +12,83 @@ use crate::tensor::DType;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
+/// Manifest schema version this build understands.
 pub const SUPPORTED_VERSION: i64 = 1;
 
 /// One logical tensor inside the flat parameter vector.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorEntry {
+    /// Tensor name.
     pub name: String,
+    /// Dimension sizes.
     pub shape: Vec<usize>,
     /// Element offset within the flat vector.
     pub offset: usize,
+    /// Element count.
     pub size: usize,
 }
 
 /// One HLO entrypoint (train_step / eval_loss / pack_fp16 / units).
 #[derive(Debug, Clone)]
 pub struct EntrySpec {
+    /// HLO file name relative to the artifacts dir.
     pub file: String,
+    /// Input signature: (name, dtype, shape) per argument.
     pub inputs: Vec<(String, DType, Vec<usize>)>,
+    /// Output signature: (name, dtype, shape) per result.
     pub outputs: Vec<(String, DType, Vec<usize>)>,
 }
 
 /// One lowered model config.
 #[derive(Debug, Clone)]
 pub struct ModelArtifact {
+    /// Config name (tiny/small/gpt20m/...).
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Hidden dimension.
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layer: usize,
+    /// Attention head count.
     pub n_head: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Batch size the HLOs were lowered at.
     pub batch: usize,
+    /// Real parameter count.
     pub n_params: usize,
+    /// Parameter count padded to the Pallas grid.
     pub n_padded: usize,
+    /// Flat-vector layout of every logical tensor.
     pub tensors: Vec<TensorEntry>,
+    /// Lowered HLO entrypoints by name.
     pub entrypoints: BTreeMap<String, EntrySpec>,
 }
 
 /// Adam hyperparameters baked into the train_step HLO.
 #[derive(Debug, Clone, Copy)]
 pub struct AdamHyper {
+    /// Learning rate.
     pub lr: f64,
+    /// First-moment decay.
     pub beta1: f64,
+    /// Second-moment decay.
     pub beta2: f64,
+    /// Denominator epsilon.
     pub eps: f64,
 }
 
 /// The whole parsed manifest.
 #[derive(Debug, Clone)]
 pub struct ArtifactManifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Flat-parameter alignment (the Pallas grid unit).
     pub param_align: usize,
+    /// Adam hyperparameters baked into the HLOs.
     pub adam: AdamHyper,
+    /// Model configs by name.
     pub configs: BTreeMap<String, ModelArtifact>,
 }
 
@@ -174,6 +200,7 @@ impl ArtifactManifest {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    /// Look a model config up by name.
     pub fn config(&self, name: &str) -> Result<&ModelArtifact> {
         self.configs.get(name).ok_or_else(|| {
             Error::Config(format!(

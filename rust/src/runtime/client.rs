@@ -22,6 +22,7 @@ impl Runtime {
         Ok(Runtime { client: xla::PjRtClient::cpu()? })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -46,6 +47,7 @@ impl Runtime {
 /// A compiled computation ready to run.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Source HLO path (for error messages).
     pub name: String,
 }
 
@@ -57,7 +59,7 @@ impl Executable {
     /// the crate's `execute::<Literal>` here: its C++ shim leaks every
     /// input device buffer (`buffer.release()` with no matching free),
     /// ~250 MB/iteration for the gpt20m train step — it OOM-killed a
-    /// 300-step run at 36 GB RSS (EXPERIMENTS.md §Perf #3).
+    /// 300-step run at 36 GB RSS before this was fixed.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         let client = self.exe.client();
         let buffers = inputs

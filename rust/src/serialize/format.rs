@@ -20,22 +20,35 @@ use crate::tensor::TensorMeta;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
+/// Container magic bytes.
 pub const MAGIC: [u8; 4] = *b"FPCK";
+/// Container format version.
 pub const VERSION: u32 = 1;
 /// Fixed-size preamble before the header JSON.
 pub const PREAMBLE_LEN: usize = 16;
+/// Encoded headers (preamble + JSON) are space-padded up to a multiple
+/// of this. Integer fields in the header JSON (digests, step counters)
+/// jitter in decimal width between checkpoints; without padding that
+/// jitter shifts every payload byte, which would turn almost every
+/// chunk dirty under [`crate::checkpoint::delta`]'s fixed chunk grid.
+/// Trailing spaces are JSON whitespace, so decoding is unchanged.
+pub const HEADER_PAD: usize = 256;
 
 /// Parsed header of a checkpoint stream.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FormatHeader {
+    /// Tensor metadata table, in payload order.
     pub tensors: Vec<TensorMeta>,
     /// Free-form training extras (step, lr, data cursor, ...).
     pub extra: BTreeMap<String, Json>,
+    /// Data-section length in bytes.
     pub data_len: u64,
+    /// Digest of the data section.
     pub digest: u64,
 }
 
 impl FormatHeader {
+    /// Serialize to the header JSON document.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::from(VERSION as i64)),
@@ -48,6 +61,7 @@ impl FormatHeader {
         ])
     }
 
+    /// Parse from the header JSON document.
     pub fn from_json(v: &Json) -> Result<FormatHeader> {
         let version = v.get("version")?.as_i64()?;
         if version != VERSION as i64 {
@@ -70,14 +84,19 @@ impl FormatHeader {
         })
     }
 
-    /// Encode preamble + header JSON into bytes.
+    /// Encode preamble + header JSON into bytes, space-padded so the
+    /// total is a multiple of [`HEADER_PAD`] (stable payload offsets
+    /// across checkpoints of the same model — see [`HEADER_PAD`]).
     pub fn encode(&self) -> Vec<u8> {
         let json = self.to_json().to_string_compact();
-        let mut out = Vec::with_capacity(PREAMBLE_LEN + json.len());
+        let total = (PREAMBLE_LEN + json.len()).next_multiple_of(HEADER_PAD);
+        let hlen = total - PREAMBLE_LEN;
+        let mut out = Vec::with_capacity(total);
         out.extend_from_slice(&MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
-        out.extend_from_slice(&(json.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(hlen as u64).to_le_bytes());
         out.extend_from_slice(json.as_bytes());
+        out.resize(total, b' ');
         out
     }
 
@@ -109,6 +128,7 @@ impl Default for Checksum64 {
 }
 
 impl Checksum64 {
+    /// A fresh digest state.
     pub fn new() -> Checksum64 {
         Checksum64 { h: 0xcbf29ce484222325, carry: 0, carry_len: 0 }
     }
@@ -120,6 +140,7 @@ impl Checksum64 {
         self.h ^= self.h >> 29;
     }
 
+    /// Feed bytes into the digest (any chunking).
     pub fn update(&mut self, mut data: &[u8]) {
         // finish a pending partial word byte-by-byte
         while self.carry_len > 0 && !data.is_empty() {
@@ -149,6 +170,7 @@ impl Checksum64 {
         self.carry_len = words.remainder().len();
     }
 
+    /// Consume the state and produce the digest value.
     pub fn finalize(mut self) -> u64 {
         if self.carry_len > 0 {
             let word = self.carry | ((self.carry_len as u64) << 56);
@@ -266,6 +288,27 @@ mod tests {
         let (dec, consumed) = FormatHeader::decode(&enc).unwrap();
         assert_eq!(dec, h);
         assert_eq!(consumed, enc.len());
+    }
+
+    #[test]
+    fn header_length_is_padded_and_stable_across_integer_jitter() {
+        // Different digests/steps have different decimal widths; the
+        // padded encoding must keep the header length identical so
+        // payload offsets don't shift between checkpoints (the delta
+        // layer's chunk grid depends on this).
+        let mut a = header();
+        let mut b = header();
+        a.digest = 1; // "1" — shortest possible digit strings
+        b.digest = u64::MAX; // longest
+        b.extra.insert("step".to_string(), Json::Int(999_999));
+        let ea = a.encode();
+        let eb = b.encode();
+        assert_eq!(ea.len() % HEADER_PAD, 0);
+        assert_eq!(ea.len(), eb.len(), "digit jitter must not change header length");
+        // padding decodes transparently
+        let (da, consumed) = FormatHeader::decode(&ea).unwrap();
+        assert_eq!(da, a);
+        assert_eq!(consumed, ea.len());
     }
 
     #[test]

@@ -59,10 +59,12 @@ impl SerializedCheckpoint {
         self.stream_digest
     }
 
+    /// Encoded header length (preamble + header JSON) in bytes.
     pub fn header_len(&self) -> u64 {
         self.header_bytes.len() as u64
     }
 
+    /// Data-section length in bytes.
     pub fn data_len(&self) -> u64 {
         self.data_len
     }

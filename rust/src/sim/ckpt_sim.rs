@@ -17,6 +17,7 @@ use crate::Result;
 /// Simulated checkpoint write of one model on one cluster.
 #[derive(Debug, Clone)]
 pub struct CkptSim {
+    /// Storage-model outcome (latency, throughput, peak fraction).
     pub result: SimWrite,
     /// Writers participating across all slices.
     pub writers: usize,

@@ -12,11 +12,17 @@ use crate::Result;
 /// One projected data point.
 #[derive(Debug, Clone)]
 pub struct Projection {
+    /// Model name.
     pub model: String,
+    /// Projected data-parallel degree.
     pub dp: usize,
+    /// Cluster size needed for that DP.
     pub nodes: usize,
+    /// Baseline per-iteration seconds.
     pub baseline_iter: f64,
+    /// FastPersist per-iteration seconds.
     pub fastpersist_iter: f64,
+    /// Baseline / FastPersist iteration-time ratio.
     pub speedup: f64,
     /// FastPersist checkpoint overhead vs. compute-only training.
     pub fp_overhead: f64,

@@ -24,6 +24,7 @@ use crate::Result;
 /// Checkpointing mode for the simulated run.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum CkptMode {
+    /// No checkpointing.
     None,
     /// torch.save: single writer per slice, buffered, synchronous.
     Baseline,

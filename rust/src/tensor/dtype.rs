@@ -3,15 +3,21 @@
 
 use crate::{Error, Result};
 
+/// Element type of a tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
+    /// 32-bit IEEE float.
     F32,
+    /// 16-bit IEEE float (storage only on the host side).
     F16,
+    /// 32-bit signed integer.
     I32,
+    /// Raw byte.
     U8,
 }
 
 impl DType {
+    /// Bytes per element.
     pub fn size(self) -> usize {
         match self {
             DType::F32 | DType::I32 => 4,
@@ -30,6 +36,7 @@ impl DType {
         }
     }
 
+    /// Parse a short or long dtype name (`f32`/`float32`, ...).
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "f32" | "float32" => Ok(DType::F32),
@@ -50,6 +57,7 @@ impl DType {
         }
     }
 
+    /// Inverse of [`DType::tag`].
     pub fn from_tag(tag: u8) -> Result<DType> {
         match tag {
             0 => Ok(DType::F32),

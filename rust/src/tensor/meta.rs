@@ -8,10 +8,14 @@ use crate::tensor::DType;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
+/// Serialized description of one tensor in the checkpoint header.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorMeta {
+    /// Tensor name (unique within the checkpoint).
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Dimension sizes; empty = scalar.
     pub shape: Vec<usize>,
     /// Byte offset of this tensor's payload within the checkpoint *data
     /// section* (not counting container header/index).
@@ -19,14 +23,17 @@ pub struct TensorMeta {
 }
 
 impl TensorMeta {
+    /// Element count (1 for scalars).
     pub fn elems(&self) -> usize {
         self.shape.iter().product::<usize>().max(if self.shape.is_empty() { 1 } else { 0 })
     }
 
+    /// Payload size in bytes.
     pub fn nbytes(&self) -> u64 {
         (self.elems() * self.dtype.size()) as u64
     }
 
+    /// Serialize to the header JSON representation.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(&self.name)),
@@ -36,6 +43,7 @@ impl TensorMeta {
         ])
     }
 
+    /// Parse from the header JSON representation.
     pub fn from_json(v: &Json) -> Result<TensorMeta> {
         let shape = v
             .get("shape")?

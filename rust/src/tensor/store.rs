@@ -16,13 +16,19 @@ use crate::{Error, Result};
 /// (the helper thread "reads existing tensors, does not allocate", §4.3).
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// Unique name within its store (serialization key).
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Dimension sizes; empty = scalar.
     pub shape: Vec<usize>,
+    /// Raw little-endian payload bytes, shared with snapshots.
     pub data: Arc<Vec<u8>>,
 }
 
 impl Tensor {
+    /// Build a tensor, validating that `data` matches `shape` × dtype
+    /// size.
     pub fn new(name: &str, dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Tensor> {
         let elems: usize = shape.iter().product::<usize>().max(usize::from(shape.is_empty()));
         if elems * dtype.size() != data.len() {
@@ -35,6 +41,7 @@ impl Tensor {
         Ok(Tensor { name: name.to_string(), dtype, shape, data: Arc::new(data) })
     }
 
+    /// An f32 tensor from host values (little-endian payload).
     pub fn from_f32(name: &str, shape: Vec<usize>, values: &[f32]) -> Result<Tensor> {
         // Bulk byte view (little-endian hosts; checked in tests). The
         // element-wise to_le_bytes loop cost ~3 full passes per
@@ -54,6 +61,7 @@ impl Tensor {
         Tensor::new(name, DType::F32, shape, data)
     }
 
+    /// An i32 tensor from host values (little-endian payload).
     pub fn from_i32(name: &str, shape: Vec<usize>, values: &[i32]) -> Result<Tensor> {
         let mut data = Vec::with_capacity(values.len() * 4);
         for v in values {
@@ -62,6 +70,7 @@ impl Tensor {
         Tensor::new(name, DType::I32, shape, data)
     }
 
+    /// An all-zero tensor of the given shape.
     pub fn zeros(name: &str, dtype: DType, shape: Vec<usize>) -> Tensor {
         let elems: usize = shape.iter().product::<usize>().max(usize::from(shape.is_empty()));
         Tensor {
@@ -72,10 +81,12 @@ impl Tensor {
         }
     }
 
+    /// Element count (1 for scalars).
     pub fn elems(&self) -> usize {
         self.shape.iter().product::<usize>().max(usize::from(self.shape.is_empty()))
     }
 
+    /// Payload size in bytes.
     pub fn nbytes(&self) -> u64 {
         self.data.len() as u64
     }
@@ -106,6 +117,7 @@ impl Tensor {
             .collect())
     }
 
+    /// i32 view of the payload.
     pub fn as_i32(&self) -> Result<Vec<i32>> {
         if self.dtype != DType::I32 {
             return Err(Error::Config(format!("{}: not i32", self.name)));
@@ -126,10 +138,12 @@ pub struct TensorStore {
 }
 
 impl TensorStore {
+    /// An empty store.
     pub fn new() -> TensorStore {
         TensorStore::default()
     }
 
+    /// Append a tensor; names must be unique.
     pub fn push(&mut self, t: Tensor) -> Result<()> {
         if self.get(&t.name).is_some() {
             return Err(Error::Config(format!("duplicate tensor {}", t.name)));
@@ -156,18 +170,22 @@ impl TensorStore {
         Ok(())
     }
 
+    /// Look a tensor up by name.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.tensors.iter().find(|t| t.name == name)
     }
 
+    /// Iterate tensors in store (= serialization) order.
     pub fn iter(&self) -> impl Iterator<Item = &Tensor> {
         self.tensors.iter()
     }
 
+    /// Number of tensors.
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
 
+    /// True when the store holds no tensors.
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }

@@ -25,6 +25,7 @@ pub struct SyntheticCorpus {
 }
 
 impl SyntheticCorpus {
+    /// A corpus over `vocab` tokens producing `[batch, seq+1]` batches.
     pub fn new(vocab: usize, seq: usize, batch: usize, seed: u64) -> SyntheticCorpus {
         let mut rng = Rng::new(seed ^ 0xc0ffee);
         let n_templates = 8;
@@ -57,6 +58,7 @@ impl SyntheticCorpus {
         out
     }
 
+    /// `(batch, seq+1)` of every produced batch.
     pub fn shape(&self) -> (usize, usize) {
         (self.batch, self.seq + 1)
     }

@@ -15,6 +15,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::checkpoint::delta::{self, CheckpointStrategy, DeltaCheckpointer};
 use crate::checkpoint::engine::CheckpointEngine;
 use crate::checkpoint::load::load_checkpoint;
 use crate::checkpoint::pipeline::PipelinedCheckpointer;
@@ -44,6 +45,7 @@ pub enum CkptRunMode {
 }
 
 impl CkptRunMode {
+    /// Parse a CLI mode name.
     pub fn parse(s: &str) -> Result<CkptRunMode> {
         match s {
             "none" => Ok(CkptRunMode::None),
@@ -58,14 +60,29 @@ impl CkptRunMode {
 /// Configuration for a training run.
 #[derive(Debug, Clone)]
 pub struct TrainerConfig {
+    /// Model config name (from the artifact manifest).
     pub model: String,
+    /// Training iterations to run.
     pub steps: u64,
     /// Checkpoint every n iterations (0 = never; 1 = the paper's
     /// frequent-checkpointing regime).
     pub ckpt_every: u64,
+    /// Directory receiving `step-NNNNNNNN` checkpoint dirs.
     pub ckpt_dir: PathBuf,
+    /// How checkpoint writes relate to compute (sync/pipelined/...).
     pub mode: CkptRunMode,
+    /// Which DP ranks write (rank0/replica/socket/...). Applies to
+    /// full-snapshot checkpoints only: delta checkpoints are diffed and
+    /// written by one logical writer (chunk jobs still fan out over the
+    /// runtime's writer pool and device map), so this knob is inert
+    /// under `CheckpointStrategy::Delta`.
     pub strategy: WriterStrategy,
+    /// Full snapshots every checkpoint, or chunk-granular deltas
+    /// (incremental checkpointing — [`crate::checkpoint::delta`]).
+    /// Delta applies to `Sync` and `Pipelined` modes; `Baseline` is the
+    /// torch.save stand-in and stays full-snapshot.
+    pub ckpt_strategy: CheckpointStrategy,
+    /// Write-path tuning (engine kind, staging size, durability).
     pub io: IoConfig,
     /// Storage mount points to stripe checkpoint partitions across
     /// (empty map = everything in `ckpt_dir`).
@@ -76,6 +93,7 @@ pub struct TrainerConfig {
     /// runs `grad_accum` times per iteration, grads are averaged, and
     /// one Adam step is applied.
     pub grad_accum: u64,
+    /// Init + data seed.
     pub seed: u64,
     /// Keep only the most recent k checkpoints (0 = keep all).
     pub keep_last: usize,
@@ -84,6 +102,8 @@ pub struct TrainerConfig {
 }
 
 impl TrainerConfig {
+    /// Small defaults for tests/examples: 10 steps, per-iteration
+    /// pipelined full checkpoints.
     pub fn quick(model: &str, dir: PathBuf) -> TrainerConfig {
         TrainerConfig {
             model: model.to_string(),
@@ -92,6 +112,7 @@ impl TrainerConfig {
             ckpt_dir: dir,
             mode: CkptRunMode::Pipelined,
             strategy: WriterStrategy::AllReplicas,
+            ckpt_strategy: CheckpointStrategy::Full,
             io: IoConfig::fastpersist(),
             devices: DeviceMap::single(),
             dp_writers: 2,
@@ -105,8 +126,11 @@ impl TrainerConfig {
 
 /// The training driver.
 pub struct Trainer {
+    /// The run's configuration.
     pub cfg: TrainerConfig,
+    /// Live training state (parameters, moments, step).
     pub state: TrainState,
+    /// Per-iteration metrics (loss, timings, counters).
     pub recorder: Recorder,
     grad_exe: Executable,
     adam_exe: Executable,
@@ -118,7 +142,12 @@ pub struct Trainer {
     /// Synchronous-mode engine (Baseline/Sync), built once at setup —
     /// engine construction is off the per-iteration hot path.
     engine: Option<CheckpointEngine>,
+    /// Synchronous delta writer (Sync mode + Delta strategy); in
+    /// Pipelined mode the delta writer lives on the helper thread.
+    delta: Option<DeltaCheckpointer>,
     pipe: Option<PipelinedCheckpointer>,
+    /// Pipelined outcomes already harvested into the recorder.
+    pipe_seen: usize,
 }
 
 impl Trainer {
@@ -126,7 +155,21 @@ impl Trainer {
     pub fn new(manifest: &ArtifactManifest, cfg: TrainerConfig) -> Result<Trainer> {
         let artifact = manifest.config(&cfg.model)?.clone();
         let state = TrainState::init(&artifact, cfg.seed);
-        Self::with_state(manifest, cfg, state)
+        Self::with_state(manifest, cfg, state, None, false)
+    }
+
+    /// Build a trainer (fresh state) submitting checkpoints into an
+    /// existing shared [`IoRuntime`] instead of constructing a private
+    /// one — several trainers (or trainers + direct writes) can then
+    /// share one staging pool, writer pool, and device map.
+    pub fn new_with_runtime(
+        manifest: &ArtifactManifest,
+        cfg: TrainerConfig,
+        runtime: Arc<IoRuntime>,
+    ) -> Result<Trainer> {
+        let artifact = manifest.config(&cfg.model)?.clone();
+        let state = TrainState::init(&artifact, cfg.seed);
+        Self::with_state(manifest, cfg, state, Some(runtime), false)
     }
 
     /// Build a trainer resuming from the latest checkpoint in
@@ -140,13 +183,15 @@ impl Trainer {
             )))?;
         let (store, header, _) = load_checkpoint(&latest, cfg.dp_writers.max(1))?;
         let state = TrainState::from_store(&artifact, &store, &header.extra)?;
-        Self::with_state(manifest, cfg, state)
+        Self::with_state(manifest, cfg, state, None, true)
     }
 
     fn with_state(
         manifest: &ArtifactManifest,
         cfg: TrainerConfig,
         state: TrainState,
+        shared_runtime: Option<Arc<IoRuntime>>,
+        resumed: bool,
     ) -> Result<Trainer> {
         let artifact = &state.artifact;
         let rt = Runtime::cpu()?;
@@ -160,22 +205,55 @@ impl Trainer {
             .collect();
         // One persistent I/O runtime for the whole run: every checkpoint
         // (sync or pipelined) borrows its staging buffers and writer
-        // threads, and its device map routes the partitions.
-        let defaults = IoRuntimeConfig::default();
-        let io_runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
-            io: cfg.io.clone(),
-            devices: cfg.devices.clone(),
-            // "N writers" must mean N concurrent partition writes: size
-            // the persistent pool to the DP writer count.
-            writer_threads: cfg.dp_writers.max(defaults.writer_threads),
-            ..defaults
-        }));
+        // threads, and its device map routes the partitions. A caller
+        // may inject an already-shared runtime instead.
+        let io_runtime = match shared_runtime {
+            Some(rt) => rt,
+            None => {
+                let defaults = IoRuntimeConfig::default();
+                Arc::new(IoRuntime::new(IoRuntimeConfig {
+                    io: cfg.io.clone(),
+                    devices: cfg.devices.clone(),
+                    // "N writers" must mean N concurrent partition
+                    // writes: size the persistent pool to the DP writer
+                    // count.
+                    writer_threads: cfg.dp_writers.max(defaults.writer_threads),
+                    ..defaults
+                }))
+            }
+        };
         let ckpt_on = cfg.ckpt_every > 0;
+        let delta_cfg = match cfg.ckpt_strategy {
+            CheckpointStrategy::Full => None,
+            CheckpointStrategy::Delta(d) => Some(d),
+        };
+        // A *resumed* delta writer re-attaches its chain to the newest
+        // on-disk manifest (the checkpoint the state was loaded from).
+        // Fresh runs always start a base — attaching would make the new
+        // run's checkpoints reference whatever stale chain happens to
+        // live in a reused directory.
+        let make_delta = |d| -> Result<DeltaCheckpointer> {
+            let mut dk = DeltaCheckpointer::new(Arc::clone(&io_runtime), d);
+            if resumed {
+                if let Some(latest) = Self::latest_checkpoint(&cfg.ckpt_dir)? {
+                    let _ = dk.resume_from(&latest);
+                }
+            }
+            Ok(dk)
+        };
         let mut engine = None;
+        let mut delta = None;
         let mut pipe = None;
         match cfg.mode {
             CkptRunMode::None => {}
             CkptRunMode::Baseline if ckpt_on => {
+                if delta_cfg.is_some() {
+                    return Err(Error::Config(
+                        "baseline mode is the full-snapshot torch.save stand-in; \
+                         delta checkpointing needs mode sync or pipelined"
+                            .into(),
+                    ));
+                }
                 // torch.save-equivalent: buffered single writer, through
                 // the same shared runtime.
                 engine = Some(
@@ -183,14 +261,20 @@ impl Trainer {
                         .with_kind(EngineKind::Buffered),
                 );
             }
-            CkptRunMode::Sync if ckpt_on => {
-                engine =
-                    Some(CheckpointEngine::with_runtime(Arc::clone(&io_runtime), cfg.strategy));
-            }
-            CkptRunMode::Pipelined if ckpt_on => {
-                let e = CheckpointEngine::with_runtime(Arc::clone(&io_runtime), cfg.strategy);
-                pipe = Some(PipelinedCheckpointer::new(e, group.clone()));
-            }
+            CkptRunMode::Sync if ckpt_on => match delta_cfg {
+                Some(d) => delta = Some(make_delta(d)?),
+                None => {
+                    engine =
+                        Some(CheckpointEngine::with_runtime(Arc::clone(&io_runtime), cfg.strategy));
+                }
+            },
+            CkptRunMode::Pipelined if ckpt_on => match delta_cfg {
+                Some(d) => pipe = Some(PipelinedCheckpointer::delta(make_delta(d)?)),
+                None => {
+                    let e = CheckpointEngine::with_runtime(Arc::clone(&io_runtime), cfg.strategy);
+                    pipe = Some(PipelinedCheckpointer::new(e, group.clone()));
+                }
+            },
             _ => {}
         }
         Ok(Trainer {
@@ -203,8 +287,36 @@ impl Trainer {
             group,
             io_runtime,
             engine,
+            delta,
             pipe,
+            pipe_seen: 0,
         })
+    }
+
+    /// Record latency + written-bytes metrics for pipelined checkpoints
+    /// that completed since the last harvest (the helper's
+    /// [`crate::checkpoint::CheckpointOutcome`]s carry
+    /// per-partition/per-chunk [`crate::io::WriteStats`]; summing their
+    /// `total_bytes` gives the bytes actually written — for deltas,
+    /// dirty chunks only).
+    fn harvest_pipe_outcomes(&mut self) {
+        let harvested: Vec<(f64, u64)> = match self.pipe.as_ref() {
+            Some(pipe) => pipe.completed[self.pipe_seen..]
+                .iter()
+                .map(|o| {
+                    (
+                        o.latency.as_secs_f64(),
+                        o.stats.iter().map(|s| s.total_bytes).sum::<u64>(),
+                    )
+                })
+                .collect(),
+            None => return,
+        };
+        self.pipe_seen += harvested.len();
+        for (latency, bytes) in harvested {
+            self.recorder.record("ckpt_latency_s", latency);
+            self.recorder.record("ckpt_written_bytes", bytes as f64);
+        }
     }
 
     /// The run's persistent I/O runtime (staging-pool counters, device
@@ -260,6 +372,7 @@ impl Trainer {
         if let Some(pipe) = self.pipe.as_mut() {
             pipe.wait_previous()?;
         }
+        self.harvest_pipe_outcomes();
         let losses = self.recorder.samples("loss");
         let tail = &losses[losses.len().saturating_sub(10)..];
         Ok(tail.iter().sum::<f64>() / tail.len().max(1) as f64)
@@ -307,6 +420,7 @@ impl Trainer {
             let stall = Timer::start();
             pipe.wait_previous()?;
             self.recorder.record("stall_s", stall.secs());
+            self.harvest_pipe_outcomes();
         }
 
         // O_i: fused Adam via the Pallas-lowered HLO.
@@ -334,6 +448,16 @@ impl Trainer {
             let extras = self.state.extras();
             match self.cfg.mode {
                 CkptRunMode::None => {}
+                // Sync + delta: only dirty chunks go to storage.
+                CkptRunMode::Sync if self.delta.is_some() => {
+                    let ck = Timer::start();
+                    let delta = self.delta.as_mut().expect("delta mode has writer");
+                    let out = delta.write(&store, extras, &dir)?;
+                    self.recorder.record("stall_s", ck.secs());
+                    self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
+                    self.recorder.record("ckpt_written_bytes", out.written_bytes as f64);
+                    self.recorder.count("ckpts", 1);
+                }
                 // Baseline and Sync share the persistent engine built at
                 // setup: no per-iteration engine construction, staging
                 // buffers recycled from the shared runtime pool.
@@ -343,6 +467,7 @@ impl Trainer {
                     let out = engine.write(&store, extras, &dir, &self.group)?;
                     self.recorder.record("stall_s", ck.secs());
                     self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
+                    self.recorder.record("ckpt_written_bytes", out.total_bytes as f64);
                     self.recorder.count("ckpts", 1);
                 }
                 CkptRunMode::Pipelined => {
@@ -359,34 +484,26 @@ impl Trainer {
     }
 
     /// Delete checkpoints older than keep_last (never the newest).
+    ///
+    /// Pruning is always chain-aware
+    /// ([`crate::checkpoint::delta::prune_chain`]), whatever the current
+    /// strategy: full manifests reference no foreign chunks and are
+    /// simply removed when old, while directories whose chunks are still
+    /// referenced by kept deltas — including chains left by a *previous*
+    /// run with a different strategy — are demoted to chunk stores and
+    /// their dead chunks reclaimed. GC uses the runtime's device map
+    /// (the one writes were actually routed with); `cfg.devices` may be
+    /// a stale default when a shared runtime was injected.
     fn prune_old(&self, newest: u64) -> Result<()> {
         if self.cfg.keep_last == 0 {
             return Ok(());
         }
-        let mut steps: Vec<u64> = Vec::new();
-        if let Ok(entries) = std::fs::read_dir(&self.cfg.ckpt_dir) {
-            for entry in entries.flatten() {
-                if let Some(s) = entry
-                    .file_name()
-                    .to_str()
-                    .and_then(|n| n.strip_prefix("step-"))
-                    .and_then(|s| s.parse::<u64>().ok())
-                {
-                    steps.push(s);
-                }
-            }
-        }
-        steps.sort_unstable();
-        let cutoff = steps.len().saturating_sub(self.cfg.keep_last);
-        for &s in &steps[..cutoff] {
-            if s != newest {
-                let dir = self.step_dir(s);
-                // device-side partitions first: the GC tag needs the
-                // checkpoint dir to still exist
-                self.cfg.devices.remove_checkpoint(&dir);
-                let _ = std::fs::remove_dir_all(&dir);
-            }
-        }
+        delta::prune_chain(
+            &self.cfg.ckpt_dir,
+            self.cfg.keep_last,
+            self.io_runtime.devices(),
+            Some(newest),
+        )?;
         Ok(())
     }
 
@@ -506,6 +623,46 @@ mod tests {
         assert!(stores[0].content_eq(&stores[1]), "baseline vs sync differ");
         assert!(stores[1].content_eq(&stores[2]), "sync vs pipelined differ");
         std::fs::remove_dir_all(&base_dir).unwrap();
+    }
+
+    #[test]
+    fn delta_mode_trains_checkpoints_and_resumes_exactly() {
+        use crate::checkpoint::delta::{CheckpointStrategy, DeltaConfig};
+        let Some(m) = manifest() else { return };
+        let dir = scratch("train-delta");
+        let mut cfg = TrainerConfig::quick("tiny", dir.clone());
+        cfg.steps = 5;
+        cfg.keep_last = 0;
+        cfg.mode = CkptRunMode::Sync;
+        cfg.ckpt_strategy =
+            CheckpointStrategy::Delta(DeltaConfig { chunk_size: 4096, max_chain: 8 });
+        let mut t = Trainer::new(&m, cfg.clone()).unwrap();
+        t.run().unwrap();
+        let theta_after5 = t.state.theta.clone();
+        // all five checkpoints exist, steps 2.. are deltas
+        for step in 1..=5u64 {
+            let d = dir.join(format!("step-{step:08}"));
+            let mf = crate::checkpoint::manifest::CheckpointManifest::load(&d).unwrap();
+            assert!(mf.is_delta(), "step {step}");
+            assert_eq!(mf.delta.as_ref().unwrap().chain_len, step - 1);
+        }
+        // a delta-chain resume restores bit-identical state
+        let t2 = Trainer::resume(&m, cfg).unwrap();
+        assert_eq!(t2.state.step, 5);
+        assert_eq!(t2.state.theta, theta_after5);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn baseline_mode_rejects_delta_strategy() {
+        use crate::checkpoint::delta::{CheckpointStrategy, DeltaConfig};
+        let Some(m) = manifest() else { return };
+        let dir = scratch("train-delta-baseline");
+        let mut cfg = TrainerConfig::quick("tiny", dir.clone());
+        cfg.mode = CkptRunMode::Baseline;
+        cfg.ckpt_strategy = CheckpointStrategy::Delta(DeltaConfig::default());
+        assert!(Trainer::new(&m, cfg).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

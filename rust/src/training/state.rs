@@ -19,10 +19,13 @@ use crate::{Error, Result};
 /// Host-resident training state for one model replica.
 #[derive(Debug, Clone)]
 pub struct TrainState {
+    /// The model's lowered-artifact description.
     pub artifact: ModelArtifact,
     /// fp32 master parameters, padded to the Pallas grid (n_padded).
     pub theta: Vec<f32>,
+    /// Adam first-moment estimates.
     pub m: Vec<f32>,
+    /// Adam second-moment estimates.
     pub v: Vec<f32>,
     /// Completed optimizer steps (1-based for the next step's bias
     /// correction).
@@ -69,6 +72,7 @@ impl TrainState {
         }
     }
 
+    /// Padded parameter count (the Pallas grid size).
     pub fn n_padded(&self) -> usize {
         self.artifact.n_padded
     }

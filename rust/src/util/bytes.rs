@@ -1,12 +1,18 @@
 //! Byte-size formatting/parsing helpers (MiB-based, matching the paper's
 //! GB/sec figures which are decimal-GB per second).
 
+/// One binary kibibyte.
 pub const KIB: u64 = 1024;
+/// One binary mebibyte.
 pub const MIB: u64 = 1024 * 1024;
+/// One binary gibibyte.
 pub const GIB: u64 = 1024 * 1024 * 1024;
 
+/// One decimal kilobyte.
 pub const KB: u64 = 1000;
+/// One decimal megabyte.
 pub const MB: u64 = 1000 * 1000;
+/// One decimal gigabyte (the paper's GB/s unit).
 pub const GB: u64 = 1000 * 1000 * 1000;
 
 /// Human-readable binary size, e.g. `512.0 MiB`.

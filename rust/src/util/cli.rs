@@ -11,16 +11,22 @@ use crate::{Error, Result};
 /// Declared option (for usage text + validation).
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name (without the `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// True for `--key value` options, false for bare flags.
     pub takes_value: bool,
+    /// Default value; `None` makes the option required.
     pub default: Option<&'static str>,
 }
 
 /// Parser + registry for one (sub)command.
 #[derive(Debug, Default)]
 pub struct ArgSpec {
+    /// Command name shown in usage text.
     pub name: &'static str,
+    /// One-line command description.
     pub about: &'static str,
     opts: Vec<OptSpec>,
 }
@@ -30,29 +36,35 @@ pub struct ArgSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional (non-option) arguments, in order.
     pub positional: Vec<String>,
 }
 
 impl ArgSpec {
+    /// A new spec with no options yet.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         ArgSpec { name, about, opts: Vec::new() }
     }
 
+    /// Declare a value option with a default.
     pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, takes_value: true, default: Some(default) });
         self
     }
 
+    /// Declare a required value option.
     pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, takes_value: true, default: None });
         self
     }
 
+    /// Declare a boolean flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, takes_value: false, default: None });
         self
     }
 
+    /// Generated usage text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
         for o in &self.opts {
@@ -127,16 +139,19 @@ impl ArgSpec {
 }
 
 impl Args {
+    /// Value of an option (its default if not given; "" if unknown).
     pub fn get(&self, name: &str) -> &str {
         self.values.get(name).map(String::as_str).unwrap_or("")
     }
 
+    /// Parse an option value as an unsigned integer.
     pub fn get_usize(&self, name: &str) -> Result<usize> {
         self.get(name)
             .parse()
             .map_err(|_| Error::Config(format!("--{name}: expected integer, got {:?}", self.get(name))))
     }
 
+    /// Parse an option value as a float.
     pub fn get_f64(&self, name: &str) -> Result<f64> {
         self.get(name)
             .parse()
@@ -149,6 +164,7 @@ impl Args {
             .ok_or_else(|| Error::Config(format!("--{name}: bad size {:?}", self.get(name))))
     }
 
+    /// True when the flag was passed.
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }

@@ -14,16 +14,24 @@ use crate::{Error, Result};
 /// deterministic — results files diff cleanly between runs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Integer (i64 fast path for offsets/sizes).
     Int(i64),
+    /// Floating-point number.
     Float(f64),
+    /// String.
     Str(String),
+    /// Ordered array.
     Array(Vec<Json>),
+    /// Object with sorted keys (deterministic emission).
     Object(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -37,6 +45,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// Borrow as an object, or a type error.
     pub fn as_object(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Object(m) => Ok(m),
@@ -44,6 +53,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an array, or a type error.
     pub fn as_array(&self) -> Result<&[Json]> {
         match self {
             Json::Array(v) => Ok(v),
@@ -51,6 +61,7 @@ impl Json {
         }
     }
 
+    /// Borrow as a string, or a type error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -58,6 +69,7 @@ impl Json {
         }
     }
 
+    /// Integer value (accepts fraction-free floats), or a type error.
     pub fn as_i64(&self) -> Result<i64> {
         match self {
             Json::Int(i) => Ok(*i),
@@ -66,12 +78,14 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, or an error.
     pub fn as_usize(&self) -> Result<usize> {
         let i = self.as_i64()?;
         usize::try_from(i)
             .map_err(|_| Error::Json { msg: format!("negative size {i}"), offset: 0 })
     }
 
+    /// Numeric value (int or float), or a type error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Int(i) => Ok(*i as f64),
@@ -80,6 +94,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, or a type error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -105,6 +120,7 @@ impl Json {
 
     // ---- emission --------------------------------------------------------
 
+    /// Emit with two-space indentation and a trailing newline.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.emit(&mut out, Some(0));
@@ -112,6 +128,7 @@ impl Json {
         out
     }
 
+    /// Emit without any whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
         self.emit(&mut out, None);
@@ -152,14 +169,17 @@ impl Json {
 
     // ---- builders --------------------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from an iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Array(items.into_iter().collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }

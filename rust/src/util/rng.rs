@@ -13,6 +13,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a generator (any seed is fine, including 0).
     pub fn new(seed: u64) -> Self {
         // SplitMix64 stream to fill the state; avoids all-zero state.
         let mut x = seed;
@@ -31,6 +32,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9e3779b97f4a7c15))
     }
 
+    /// Next uniform 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -46,6 +48,7 @@ impl Rng {
         result
     }
 
+    /// Next uniform 32-bit value (high bits of the 64-bit stream).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -74,6 +77,7 @@ impl Rng {
         }
     }
 
+    /// Uniform usize in [lo, hi] inclusive.
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }
@@ -95,6 +99,7 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }

@@ -3,12 +3,19 @@
 /// Summary of a sample set (durations in seconds, throughput, etc).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Number of samples.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median (interpolated).
     pub p50: f64,
+    /// 95th percentile (interpolated).
     pub p95: f64,
+    /// Largest sample.
     pub max: f64,
 }
 

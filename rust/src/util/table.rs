@@ -9,10 +9,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
         Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
     }
 
+    /// Append a row (arity must match the header).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
@@ -20,10 +22,12 @@ impl Table {
         self
     }
 
+    /// True when no rows have been added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Render to an aligned plain-text block.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();

@@ -18,6 +18,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn `threads` workers named `{name}-{i}`.
     pub fn new(threads: usize, name: &str) -> ThreadPool {
         assert!(threads > 0, "ThreadPool requires >= 1 thread");
         let (tx, rx) = mpsc::channel::<Job>();
@@ -62,6 +63,7 @@ impl ThreadPool {
         TaskHandle { rx }
     }
 
+    /// Number of worker threads.
     pub fn threads(&self) -> usize {
         self.workers.len()
     }

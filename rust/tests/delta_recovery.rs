@@ -1,0 +1,180 @@
+//! Crash-recovery drill for incremental (delta) checkpointing.
+//!
+//! The delta commit protocol: dirty chunks first, manifest last (atomic
+//! rename). So a crash mid-flush leaves a directory *without* a
+//! manifest, and recovery must (a) skip it, falling back to the newest
+//! complete checkpoint of the chain, and (b) let a restarted writer
+//! resume the chain from that checkpoint — all bit-identically.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+use fastpersist::checkpoint::load::load_checkpoint;
+use fastpersist::checkpoint::manifest::MANIFEST_FILE;
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::training::looper::Trainer;
+use fastpersist::util::json::Json;
+use fastpersist::util::rng::Rng;
+
+const CS: u64 = 4096;
+
+fn runtime() -> Arc<IoRuntime> {
+    Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        ..IoRuntimeConfig::default()
+    }))
+}
+
+fn store(seed: u64, nbytes: usize) -> TensorStore {
+    let mut rng = Rng::new(seed);
+    let mut s = TensorStore::new();
+    let mut data = vec![0u8; nbytes];
+    rng.fill_bytes(&mut data);
+    s.push(Tensor::new("w", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+    s
+}
+
+fn mutate(s: &mut TensorStore, frac: f64, tag: u8) {
+    let t = s.get("w").unwrap();
+    let mut data = t.data.as_slice().to_vec();
+    let n = (data.len() as f64 * frac) as usize;
+    let start = data.len() / 4;
+    for b in &mut data[start..start + n] {
+        *b ^= tag | 1;
+    }
+    s.update("w", data).unwrap();
+}
+
+fn extra(step: i64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Int(step));
+    m
+}
+
+#[test]
+fn interrupted_delta_flush_falls_back_to_last_complete_chain() {
+    let dir = scratch_dir("delta-crash").unwrap();
+    let rt = runtime();
+    let mut ck = DeltaCheckpointer::new(Arc::clone(&rt), DeltaConfig {
+        chunk_size: CS,
+        max_chain: 8,
+    });
+
+    // healthy chain: base + delta
+    let mut s = store(42, 30 * CS as usize);
+    ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+    mutate(&mut s, 0.04, 1);
+    ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
+    let state_at_2 = s.snapshot();
+
+    // "crash" mid-flush of step 3: chunks hit storage but the manifest
+    // was never published. Removing the manifest of a completed write
+    // reproduces that exact on-disk state (the manifest is written
+    // strictly last, via atomic rename).
+    mutate(&mut s, 0.04, 2);
+    let step3 = dir.join("step-00000003");
+    ck.write(&s, extra(3), &step3).unwrap();
+    std::fs::remove_file(step3.join(MANIFEST_FILE)).unwrap();
+    assert!(
+        std::fs::read_dir(&step3).unwrap().flatten().count() > 0,
+        "crash drill needs flushed chunks on disk"
+    );
+
+    // recovery: the incomplete directory is invisible to discovery and
+    // unloadable directly
+    let latest = Trainer::latest_checkpoint(&dir).unwrap().unwrap();
+    assert!(latest.ends_with("step-00000002"), "latest = {latest:?}");
+    assert!(load_checkpoint(&step3, 2).is_err());
+
+    // the surviving chain reloads bit-identically
+    let (loaded, header, manifest) = load_checkpoint(&latest, 3).unwrap();
+    assert!(loaded.content_eq(&state_at_2));
+    assert_eq!(header.extra["step"], Json::Int(2));
+    assert_eq!(manifest.delta.as_ref().unwrap().chain_len, 1);
+
+    // a restarted writer resumes the chain from the fallback checkpoint
+    let mut ck2 = DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: CS, max_chain: 8 });
+    assert!(ck2.resume_from(&latest).unwrap());
+    let mut s2 = state_at_2.snapshot();
+    mutate(&mut s2, 0.04, 3);
+    let out = ck2.write(&s2, extra(3), &dir.join("step-00000004")).unwrap();
+    assert!(!out.is_base, "resume must continue the chain, not restart it");
+    assert!(
+        out.written_bytes * 2 < out.total_bytes,
+        "resumed delta must still skip clean chunks ({} of {})",
+        out.written_bytes,
+        out.total_bytes
+    );
+    let (reloaded, _, _) = load_checkpoint(&dir.join("step-00000004"), 2).unwrap();
+    assert!(reloaded.content_eq(&s2));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn base_delta_delta_chain_is_bit_identical_through_load() {
+    let dir = scratch_dir("delta-chain-e2e").unwrap();
+    let rt = runtime();
+    let mut ck = DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: CS, max_chain: 8 });
+    let mut s = store(7, 25 * CS as usize + 777);
+    let mut snapshots = Vec::new();
+    for step in 1..=3i64 {
+        ck.write(&s, extra(step), &dir.join(format!("step-{step:08}"))).unwrap();
+        snapshots.push(s.snapshot());
+        mutate(&mut s, 0.03, step as u8);
+    }
+    // loading any link reproduces the exact serialized state: compare
+    // both content and the re-serialized byte stream.
+    for (i, snap) in snapshots.iter().enumerate() {
+        let step = i as i64 + 1;
+        let (loaded, header, _) =
+            load_checkpoint(&dir.join(format!("step-{step:08}")), 2).unwrap();
+        assert!(loaded.content_eq(snap), "step {step}");
+        assert_eq!(header.extra["step"], Json::Int(step));
+        let a = fastpersist::serialize::writer::SerializedCheckpoint::new(&loaded, extra(step))
+            .to_bytes();
+        let b = fastpersist::serialize::writer::SerializedCheckpoint::new(snap, extra(step))
+            .to_bytes();
+        assert_eq!(a, b, "step {step}: reload must be bit-identical");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn compaction_gc_reclaims_dead_chunks_across_prune() {
+    use fastpersist::checkpoint::delta::prune_chain;
+    use fastpersist::io::device::DeviceMap;
+
+    let dir = scratch_dir("delta-gc-e2e").unwrap();
+    let devices = DeviceMap::single();
+    let rt = runtime();
+    let mut ck = DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: CS, max_chain: 2 });
+    let mut s = store(13, 16 * CS as usize);
+    // base(1) <- d(2) <- d(3), then compaction makes 4 a fresh base
+    for step in 1..=4i64 {
+        ck.write(&s, extra(step), &dir.join(format!("step-{step:08}"))).unwrap();
+        mutate(&mut s, 0.06, step as u8);
+    }
+
+    // keep the two newest complete checkpoints: step 4 (base) and
+    // step 3 (delta still referencing steps 1/2's chunks)
+    let stats = prune_chain(&dir, 2, &devices, Some(4)).unwrap();
+    assert_eq!(stats.removed_dirs + stats.demoted_dirs, 2);
+    assert!(stats.demoted_dirs >= 1, "referenced ancestors must be demoted, not removed");
+    assert!(stats.removed_chunks > 0, "dead chunks must be reclaimed");
+    // kept checkpoints still load
+    for step in [3i64, 4] {
+        assert!(load_checkpoint(&dir.join(format!("step-{step:08}")), 2).is_ok(), "step {step}");
+    }
+
+    // once the old chain ages out entirely, its directories disappear
+    let stats = prune_chain(&dir, 1, &devices, Some(4)).unwrap();
+    assert!(stats.removed_dirs >= 1);
+    assert!(!dir.join("step-00000001").exists());
+    assert!(!dir.join("step-00000002").exists());
+    assert!(!dir.join("step-00000003").exists());
+    assert!(load_checkpoint(&dir.join("step-00000004"), 2).is_ok());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

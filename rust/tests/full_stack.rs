@@ -24,6 +24,7 @@ fn cfg(model: &str, dir: PathBuf) -> TrainerConfig {
         ckpt_dir: dir,
         mode: CkptRunMode::Pipelined,
         strategy: WriterStrategy::AllReplicas,
+        ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::Full,
         io: IoConfig::fastpersist().microbench(),
         devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,

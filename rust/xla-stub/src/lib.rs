@@ -28,7 +28,7 @@ impl Error {
         Error {
             msg: format!(
                 "{what}: PJRT runtime unavailable (built against the bundled xla stub; \
-                 see DESIGN.md to enable real execution)"
+                 see ARCHITECTURE.md to enable real execution)"
             ),
         }
     }
