@@ -1,5 +1,6 @@
-//! Bench: full vs incremental (delta) checkpointing — bytes written and
-//! latency per checkpoint, through one shared [`IoRuntime`].
+//! Bench: full vs incremental (delta) checkpointing — bytes written,
+//! latency, WriteJob (segment) counts and fsyncs per checkpoint,
+//! through one shared [`IoRuntime`].
 //!
 //! Workload: a model-state payload where <5% of the parameters mutate
 //! per iteration (the sparse-update regime of embedding-heavy models —
@@ -7,9 +8,17 @@
 //! iteration is checkpointed twice: as a full snapshot through the
 //! parallel [`CheckpointEngine`], and as a chunk-granular delta through
 //! [`DeltaCheckpointer`]. The delta side should write an order of
-//! magnitude fewer bytes (acceptance: ≥80% fewer at <5% mutation).
+//! magnitude fewer bytes (acceptance: ≥80% fewer at <5% mutation), and
+//! — since segment stores — a bounded number of WriteJobs per
+//! checkpoint however many chunks are dirty.
 //!
-//! Emits `BENCH_delta.json` (benchkit JSON) for trajectory tracking.
+//! A separate durable section (fsync on) demonstrates the coalescing
+//! win directly: a base of N chunks issues one fsync per *segment*,
+//! not one per chunk.
+//!
+//! Emits `BENCH_delta.json` (benchkit JSON) for trajectory tracking:
+//! `bytes_per_iter` on the segment rows is **bytes per WriteJob**, and
+//! row names carry jobs/fsyncs per checkpoint.
 //!
 //!     cargo bench --bench delta_ckpt
 //!     FASTPERSIST_BENCH_FAST=1 cargo bench --bench delta_ckpt   (CI-speed)
@@ -49,6 +58,73 @@ fn extra(step: u64) -> BTreeMap<String, Json> {
     m
 }
 
+fn payload_store(payload: usize) -> TensorStore {
+    let mut store = TensorStore::new();
+    let mut data = vec![0u8; payload];
+    Rng::new(1).fill_bytes(&mut data);
+    store.push(Tensor::new("params", DType::U8, vec![payload], data).unwrap()).unwrap();
+    store
+}
+
+/// Durable section: count WriteJobs and fsyncs for a base + one delta.
+fn fsync_accounting(payload: usize, chunk_size: u64, group: &mut BenchGroup) {
+    let base = scratch_dir("bench-delta-fsync").unwrap();
+    let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist(), // durable: fsync on finish
+        ..IoRuntimeConfig::default()
+    }));
+    let mut delta = DeltaCheckpointer::new(
+        Arc::clone(&runtime),
+        DeltaConfig { chunk_size, max_chain: u64::MAX, ..DeltaConfig::default() },
+    );
+    let mut store = payload_store(payload);
+
+    let t0 = Instant::now();
+    let b = delta.write(&store, extra(0), &base.join("step-00000000")).unwrap();
+    let base_lat = t0.elapsed().as_secs_f64();
+    mutate(&mut store, 0.04, 1);
+    let t0 = Instant::now();
+    let d = delta.write(&store, extra(1), &base.join("step-00000001")).unwrap();
+    let delta_lat = t0.elapsed().as_secs_f64();
+
+    println!(
+        "durable base:  {} chunks -> {} segment WriteJobs, {} fsyncs ({} per job)",
+        b.chunks_total,
+        b.segments_written,
+        b.fsyncs,
+        human(b.bytes_per_job()),
+    );
+    println!(
+        "durable delta: {} dirty chunks -> {} segment WriteJobs, {} fsyncs ({} per job)",
+        d.chunks_written,
+        d.segments_written,
+        d.fsyncs,
+        human(d.bytes_per_job()),
+    );
+    assert_eq!(b.fsyncs, b.segments_written as u64, "one fsync per segment");
+    assert!(
+        (b.segments_written as usize) < b.chunks_total,
+        "base must coalesce chunks into fewer segment writes"
+    );
+    group.results.push(BenchResult {
+        name: format!(
+            "durable-base ({} chunks, {} jobs, {} fsyncs)",
+            b.chunks_total, b.segments_written, b.fsyncs
+        ),
+        summary: Summary::of(&[base_lat]),
+        bytes_per_iter: Some(b.bytes_per_job()),
+    });
+    group.results.push(BenchResult {
+        name: format!(
+            "durable-delta ({} dirty chunks, {} jobs, {} fsyncs)",
+            d.chunks_written, d.segments_written, d.fsyncs
+        ),
+        summary: Summary::of(&[delta_lat]),
+        bytes_per_iter: Some(d.bytes_per_job()),
+    });
+    let _ = std::fs::remove_dir_all(&base);
+}
+
 fn main() {
     let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
     let payload: usize = if fast { 8 << 20 } else { 32 << 20 };
@@ -66,13 +142,10 @@ fn main() {
         CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas);
     let mut delta = DeltaCheckpointer::new(
         Arc::clone(&runtime),
-        DeltaConfig { chunk_size, max_chain: u64::MAX },
+        DeltaConfig { chunk_size, max_chain: u64::MAX, ..DeltaConfig::default() },
     );
 
-    let mut store = TensorStore::new();
-    let mut data = vec![0u8; payload];
-    Rng::new(1).fill_bytes(&mut data);
-    store.push(Tensor::new("params", DType::U8, vec![payload], data).unwrap()).unwrap();
+    let mut store = payload_store(payload);
 
     println!(
         "\n=== delta vs full checkpoint ({} payload, {:.0}% mutation/iter, {} chunks) ===",
@@ -83,12 +156,20 @@ fn main() {
 
     // warm both paths (first delta write is the chain base = full cost)
     engine.write_single(&store, extra(0), &base.join("full").join("step-00000000")).unwrap();
-    delta.write(&store, extra(0), &base.join("chain").join("step-00000000")).unwrap();
+    let warm = delta.write(&store, extra(0), &base.join("chain").join("step-00000000")).unwrap();
+    println!(
+        "base: {} chunks coalesced into {} segment WriteJobs ({} per job)",
+        warm.chunks_total,
+        warm.segments_written,
+        human(warm.bytes_per_job()),
+    );
 
     let mut full_lat = Vec::new();
     let mut delta_lat = Vec::new();
     let mut full_bytes = 0u64;
     let mut delta_bytes = 0u64;
+    let mut delta_jobs = 0u64;
+    let mut delta_fsyncs = 0u64;
     for step in 1..=iters {
         mutate(&mut store, mutation, step);
         let t0 = Instant::now();
@@ -103,32 +184,42 @@ fn main() {
             .unwrap();
         delta_lat.push(t0.elapsed().as_secs_f64());
         delta_bytes += out.written_bytes;
+        delta_jobs += out.segments_written as u64;
+        delta_fsyncs += out.fsyncs;
         assert!(!out.is_base, "steady-state writes must be deltas");
     }
 
     let saved = 1.0 - delta_bytes as f64 / full_bytes as f64;
     let full = Summary::of(&full_lat);
     let dlt = Summary::of(&delta_lat);
+    let jobs_per_ckpt = delta_jobs as f64 / iters as f64;
+    let bytes_per_job = if delta_jobs == 0 { 0 } else { delta_bytes / delta_jobs };
     let mut table = Table::new(vec![
-        "path", "bytes/ckpt", "latency p50 (ms)", "written vs full",
+        "path", "bytes/ckpt", "latency p50 (ms)", "jobs/ckpt", "bytes/job", "written vs full",
     ]);
     table.row(vec![
         "full snapshot".into(),
         human(full_bytes / iters),
         format!("{:.2}", full.p50 * 1e3),
+        "1".into(),
+        human(full_bytes / iters),
         "100%".into(),
     ]);
     table.row(vec![
-        "delta (dirty chunks)".into(),
+        "delta (segment-packed)".into(),
         human(delta_bytes / iters),
         format!("{:.2}", dlt.p50 * 1e3),
+        format!("{jobs_per_ckpt:.1}"),
+        human(bytes_per_job),
         format!("{:.1}%", (1.0 - saved) * 100.0),
     ]);
     println!("{}", table.render());
     println!(
-        "delta writes {:.1}% fewer bytes than full at {:.0}% mutation (target: >=80%)",
+        "delta writes {:.1}% fewer bytes than full at {:.0}% mutation (target: >=80%); \
+         fsyncs/ckpt in this microbench config: {:.1} (durability off)",
         saved * 100.0,
-        mutation * 100.0
+        mutation * 100.0,
+        delta_fsyncs as f64 / iters as f64,
     );
 
     let mut group = BenchGroup::new("delta vs full checkpoint bytes/latency");
@@ -138,10 +229,18 @@ fn main() {
         bytes_per_iter: Some(full_bytes / iters),
     });
     group.results.push(BenchResult {
-        name: format!("delta-incremental (writes {:.1}% of full)", (1.0 - saved) * 100.0),
+        name: format!(
+            "delta-incremental (writes {:.1}% of full, {jobs_per_ckpt:.1} jobs/ckpt)",
+            (1.0 - saved) * 100.0
+        ),
         summary: dlt,
         bytes_per_iter: Some(delta_bytes / iters),
     });
-    let _ = write_bench_json("delta", &[&group]);
+
+    println!("\n=== segment coalescing, durable (fsync per WriteJob) ===");
+    let mut seg_group = BenchGroup::new("segment coalescing: WriteJobs + fsyncs per checkpoint");
+    fsync_accounting(if fast { 4 << 20 } else { 16 << 20 }, chunk_size, &mut seg_group);
+
+    let _ = write_bench_json("delta", &[&group, &seg_group]);
     let _ = std::fs::remove_dir_all(&base);
 }

@@ -45,6 +45,7 @@ fn run_mode(
         grad_accum: ga,
         seed: 0,
         keep_last: 1,
+        gc_occupancy: 0.5,
         log_every: 0,
     };
     let mut t = Trainer::new_with_runtime(manifest, cfg, Arc::clone(runtime)).unwrap();

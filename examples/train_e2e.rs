@@ -35,6 +35,7 @@ fn main() -> fastpersist::Result<()> {
         grad_accum: 1,
         seed: 0,
         keep_last: 2,
+        gc_occupancy: 0.5,
         log_every: 10,
     };
     let mut trainer = Trainer::new(&manifest, cfg)?;

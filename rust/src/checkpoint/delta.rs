@@ -1,4 +1,5 @@
-//! Incremental (delta) checkpointing over the shared I/O runtime.
+//! Incremental (delta) checkpointing over the shared I/O runtime, with
+//! segment-file chunk stores.
 //!
 //! FastPersist makes the *write path* fast; this module makes the
 //! *written bytes* small, which is what per-iteration checkpointing at
@@ -11,27 +12,40 @@
 //! ## Mechanism
 //!
 //! The serialized stream (header ‖ tensor payloads, exactly the bytes a
-//! full checkpoint would write) is cut into a fixed grid of
-//! `chunk_size`-byte chunks. Each chunk is hashed in a single pass over
-//! the stream ([`chunk_hashes`], reusing the streaming
-//! [`Checksum64`] digest machinery). The hashes are
-//! diffed against the previous checkpoint's chunk table:
+//! full checkpoint would write) is cut into a *header-split* chunk
+//! grid: chunk 0 is the whole encoded header, chunks 1.. tile the data
+//! section in [`DeltaConfig::chunk_size`] steps. The grid hashes are
+//! computed **inside** the single serialization pass
+//! ([`crate::serialize::writer::SerializedCheckpoint::new_chunked`]
+//! feeds a [`crate::serialize::format::ChunkedChecksum`]), so delta
+//! creation makes exactly one CPU pass over the state bytes — there is
+//! no separate grid-hash pass. The hashes are diffed against the
+//! previous checkpoint's chunk table:
 //!
 //! * **dirty** chunks (hash or length changed, or no predecessor) are
-//!   submitted to the shared [`IoRuntime`] writer pool as one
-//!   [`WriteJob`] each — striped across the runtime's
-//!   [`crate::io::DeviceMap`] exactly like full-checkpoint partitions;
+//!   packed into a bounded number of large **segment files** — one
+//!   [`WriteJob`] and one fsync per *segment*, not per chunk — striped
+//!   across the runtime's [`crate::io::DeviceMap`] exactly like
+//!   full-checkpoint partitions. This is §4.1's aligned-batched-writes
+//!   discipline applied to the base/compaction path: a base of N chunks
+//!   used to cost N small files + N fsyncs, now it costs
+//!   `⌈bytes / segment_bytes⌉` (at least one per device) large
+//!   sequential writes;
 //! * **clean** chunks are *inherited*: the new manifest's chunk table
-//!   entry points at the sibling checkpoint directory that physically
-//!   holds the chunk file.
+//!   entry points at the `(sibling directory, segment, offset)` that
+//!   physically holds the chunk's bytes.
 //!
-//! The resulting manifest (v3, [`DeltaSection`]) is **fully resolved**:
-//! loading never walks ancestor manifests, it just reads each chunk
-//! from the directory its entry names, reassembles the stream, and
-//! verifies the stream digest — bit-identical to loading a full
-//! checkpoint of the same state. The manifest is published last
-//! (atomic rename), so an interrupted delta flush leaves no manifest
-//! and recovery simply falls back to the newest complete checkpoint.
+//! The resulting manifest (v4,
+//! [`crate::checkpoint::manifest::DeltaSection`]) is **fully
+//! resolved**: loading never walks ancestor manifests, it reads each
+//! chunk from the segment its entry addresses, reassembles the stream,
+//! and verifies the stream digest — bit-identical to loading a full
+//! checkpoint of the same state. The manifest is published last (atomic
+//! rename), so an interrupted delta flush leaves no manifest and
+//! recovery simply falls back to the newest complete checkpoint.
+//! Checkpoints written by the previous per-chunk-file layout (manifest
+//! v3) remain loadable; see `docs/FORMATS.md` for the on-disk format
+//! reference.
 //!
 //! ## Chains, compaction, GC
 //!
@@ -41,9 +55,17 @@
 //! every reference to older directories. [`prune_chain`] then garbage
 //! collects: unreferenced checkpoint directories are removed outright,
 //! while directories still holding chunks that live checkpoints
-//! reference are demoted to chunk stores (manifest dropped) and their
-//! *dead* chunk files — those no retained manifest references — are
-//! deleted.
+//! reference are demoted to chunk stores (manifest dropped). GC is
+//! **segment-granular** with live-bytes accounting: a demoted
+//! directory's segment file is deleted when no kept manifest references
+//! any chunk in it, and *sparsely rewritten* — live byte ranges copied
+//! to identical offsets in a fresh file, dead ranges left as holes —
+//! when its live-byte occupancy drops below [`GcPolicy::occupancy`].
+//! Rewriting preserves every chunk's `(segment, offset)` address, so
+//! kept manifests and in-flight writer state stay valid without being
+//! touched. Kept manifests are re-examined every prune; a small
+//! process-wide LRU (`CheckpointManifest::load_cached`, keyed by path +
+//! mtime) makes the steady-state re-parses free.
 //!
 //! Chain members must be sibling directories (the trainer's
 //! `step-NNNNNNNN` layout); the manifest records directory *names*, not
@@ -56,66 +78,169 @@
 //! colliding *and* torn update is what the stream digest still
 //! catches), not a content-addressing security boundary.
 //!
-//! Cost notes (candidate follow-ups, tracked in ROADMAP.md):
+//! # Examples
 //!
-//! * a delta write makes **two** CPU passes over the state —
-//!   serialization's digest pass, then the grid-hash pass. They cannot
-//!   be fused under the current container format because chunk 0
-//!   contains the header, and the header embeds the data digest, so
-//!   grid hashing can only start after the digest pass completes.
-//!   Chunking the data section separately from the header would remove
-//!   the second pass.
-//! * a **base** (or compaction) checkpoint writes every chunk as its
-//!   own file — `total_len / chunk_size` WriteJobs, each with its own
-//!   create/fsync — where the partitioned full path writes one file
-//!   per DP writer. At production state sizes the every-`max_chain`-th
-//!   checkpoint therefore stalls longer than a plain full snapshot;
-//!   coalescing chunk runs into segment files (manifest records
-//!   per-chunk offsets) would fix it without giving up chunk-level
-//!   inheritance.
+//! A base checkpoint packs its chunks into segment files; a subsequent
+//! delta writes only what changed, and both reload bit-identically:
+//!
+//! ```
+//! use std::collections::BTreeMap;
+//! use std::sync::Arc;
+//! use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+//! use fastpersist::checkpoint::load::load_checkpoint;
+//! use fastpersist::io::engine::{scratch_dir, IoConfig};
+//! use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+//! use fastpersist::tensor::{DType, Tensor, TensorStore};
+//!
+//! let dir = scratch_dir("doc-delta").unwrap();
+//! let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+//!     io: IoConfig::fastpersist().microbench(),
+//!     ..IoRuntimeConfig::default()
+//! }));
+//! let cfg = DeltaConfig { chunk_size: 4096, ..DeltaConfig::default() };
+//! let mut ck = DeltaCheckpointer::new(rt, cfg);
+//!
+//! let mut store = TensorStore::new();
+//! store.push(Tensor::new("w", DType::U8, vec![32768], vec![1u8; 32768]).unwrap()).unwrap();
+//! let base = ck.write(&store, BTreeMap::new(), &dir.join("step-00000001")).unwrap();
+//! assert!(base.is_base);
+//! // many chunks coalesce into few segment files (one WriteJob each)
+//! assert!(base.segments_written < base.chunks_total);
+//!
+//! let mut mutated = vec![1u8; 32768];
+//! mutated[9000] = 2;
+//! store.update("w", mutated).unwrap();
+//! let delta = ck.write(&store, BTreeMap::new(), &dir.join("step-00000002")).unwrap();
+//! assert!(!delta.is_base);
+//! assert!(delta.written_bytes < delta.total_bytes / 2);
+//!
+//! let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+//! assert!(loaded.content_eq(&store));
+//! std::fs::remove_dir_all(&dir).unwrap();
+//! ```
 
 use std::collections::BTreeMap;
+use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::checkpoint::engine::CheckpointOutcome;
 use crate::checkpoint::manifest::{
-    CheckpointManifest, ChunkEntry, DeltaSection, MANIFEST_FILE,
+    CheckpointManifest, ChunkEntry, DeltaSection, SegmentRef, MANIFEST_FILE,
 };
 use crate::io::device::DeviceMap;
 use crate::io::engine::WriteStats;
 use crate::io::runtime::{IoRuntime, Ticket, WriteJob};
-use crate::serialize::format::{checksum64_slice, Checksum64};
+use crate::serialize::format::checksum64_slice;
 use crate::serialize::writer::SerializedCheckpoint;
 use crate::tensor::TensorStore;
 use crate::util::json::Json;
 use crate::util::threadpool::parallel_map;
 use crate::{Error, Result};
 
+pub use crate::serialize::format::ChunkDigest;
+
+/// Magic bytes opening every segment store file.
+pub const SEGMENT_MAGIC: [u8; 4] = *b"FPSG";
+
+/// Segment container version.
+pub const SEGMENT_VERSION: u32 = 1;
+
+/// Fixed on-disk length of the segment header: one I/O alignment unit,
+/// so packed **data** chunks start 4 KiB-aligned whenever `chunk_size`
+/// is a multiple of 4 KiB (the stream's header chunk — a 256-byte
+/// multiple — is packed *last* in its segment precisely so it cannot
+/// shift the data chunks off alignment).
+pub const SEGMENT_HEADER_LEN: usize = 4096;
+
+/// Byte offset inside the segment header of the `compacted_live`
+/// GC-bookkeeping field: the live-byte count the last sparse rewrite
+/// compacted against (0 = never compacted). Lets segment GC skip
+/// segments where nothing further died since the last rewrite, on any
+/// filesystem, without guessing allocation granularity.
+pub const SEGMENT_COMPACTED_OFFSET: usize = 24;
+
+/// Encode a segment header: magic ‖ version ‖ segment index ‖ chunk
+/// count ‖ payload length ‖ compacted_live (0 at write time),
+/// zero-padded to [`SEGMENT_HEADER_LEN`].
+pub fn encode_segment_header(index: u32, chunks: u32, payload_len: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(SEGMENT_HEADER_LEN);
+    out.extend_from_slice(&SEGMENT_MAGIC);
+    out.extend_from_slice(&SEGMENT_VERSION.to_le_bytes());
+    out.extend_from_slice(&index.to_le_bytes());
+    out.extend_from_slice(&chunks.to_le_bytes());
+    out.extend_from_slice(&payload_len.to_le_bytes());
+    out.resize(SEGMENT_HEADER_LEN, 0);
+    out
+}
+
+/// Validate the fixed prefix (magic + version) of a segment header.
+pub fn check_segment_header(bytes: &[u8]) -> Result<()> {
+    if bytes.len() < 8 {
+        return Err(Error::Format("truncated segment header".into()));
+    }
+    if bytes[..4] != SEGMENT_MAGIC {
+        return Err(Error::Format(format!("bad segment magic {:?}", &bytes[..4])));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != SEGMENT_VERSION {
+        return Err(Error::Format(format!("unsupported segment version {version}")));
+    }
+    Ok(())
+}
+
 /// Tuning knobs for incremental checkpointing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DeltaConfig {
     /// Chunk-grid size in bytes. The default (1 MiB) is a multiple of
     /// every supported I/O alignment; small sizes track changes more
-    /// precisely but write more, smaller files.
+    /// precisely but inflate the chunk table.
     pub chunk_size: u64,
     /// Maximum deltas after a base before the chain is compacted into a
     /// fresh base (0 = every checkpoint is a base).
     pub max_chain: u64,
+    /// Target payload bytes per segment file. A checkpoint's dirty
+    /// chunks are packed into `⌈dirty_bytes / segment_bytes⌉` segments
+    /// (at least one per device of the runtime's map, never more than
+    /// one per dirty chunk) — each segment is one WriteJob and one
+    /// fsync.
+    pub segment_bytes: u64,
 }
 
 impl Default for DeltaConfig {
     fn default() -> Self {
-        DeltaConfig { chunk_size: 1 << 20, max_chain: 8 }
+        DeltaConfig { chunk_size: 1 << 20, max_chain: 8, segment_bytes: 64 << 20 }
     }
 }
 
 impl DeltaConfig {
-    /// Clamp the chunk size to at least one I/O alignment unit (4 KiB)
-    /// so chunk files keep the direct-write fast path.
+    /// Clamp the knobs to coherent values: chunk size at least one I/O
+    /// alignment unit (4 KiB) so packed chunks keep the direct-write
+    /// fast path, segment size at least one chunk.
     pub fn normalized(self) -> DeltaConfig {
-        DeltaConfig { chunk_size: self.chunk_size.max(4096), ..self }
+        let chunk_size = self.chunk_size.max(4096);
+        DeltaConfig {
+            chunk_size,
+            segment_bytes: self.segment_bytes.max(chunk_size),
+            ..self
+        }
+    }
+}
+
+/// Segment garbage-collection policy for [`prune_chain_with`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GcPolicy {
+    /// Live-byte occupancy threshold below which a demoted directory's
+    /// segment file is sparsely rewritten (dead ranges punched out,
+    /// live chunks kept at identical offsets). `0.0` never rewrites;
+    /// `1.0` rewrites whenever any chunk in the segment is dead.
+    pub occupancy: f64,
+}
+
+impl Default for GcPolicy {
+    fn default() -> Self {
+        GcPolicy { occupancy: 0.5 }
     }
 }
 
@@ -159,65 +284,31 @@ impl CheckpointStrategy {
     }
 }
 
-/// Hash + length of one chunk of a serialized stream.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ChunkDigest {
-    /// Streaming checksum of the chunk's bytes.
-    pub hash: u64,
-    /// Chunk length (== grid size except for the final chunk).
-    pub len: u64,
-}
-
-/// Chunk-grid hashes of a serialized checkpoint, computed in **one**
-/// pass over the stream (no materialization): pieces from
-/// [`SerializedCheckpoint::emit_range`] are split at grid boundaries
-/// and fed to a per-chunk [`Checksum64`]. Chunk `i`'s hash equals
-/// `checksum64_slice` of stream bytes `[i*chunk_size, ...)`.
-pub fn chunk_hashes(ser: &SerializedCheckpoint, chunk_size: u64) -> Vec<ChunkDigest> {
-    assert!(chunk_size > 0, "chunk_size must be positive");
-    let total = ser.total_len();
-    let mut out: Vec<ChunkDigest> = Vec::with_capacity((total / chunk_size) as usize + 1);
-    let mut cur = Checksum64::new();
-    let mut filled = 0u64;
-    ser.emit_range(0, total, &mut |piece| {
-        let mut rest = piece;
-        while !rest.is_empty() {
-            let room = (chunk_size - filled).min(rest.len() as u64) as usize;
-            cur.update(&rest[..room]);
-            filled += room as u64;
-            rest = &rest[room..];
-            if filled == chunk_size {
-                let done = std::mem::replace(&mut cur, Checksum64::new());
-                out.push(ChunkDigest { hash: done.finalize(), len: chunk_size });
-                filled = 0;
-            }
-        }
-        Ok(())
-    })
-    .expect("in-memory chunk hashing cannot fail");
-    if filled > 0 {
-        out.push(ChunkDigest { hash: cur.finalize(), len: filled });
-    }
-    out
-}
-
 /// Result of one incremental checkpoint write.
 #[derive(Debug)]
 pub struct DeltaOutcome {
-    /// The published (v3) manifest.
+    /// The published (v4) manifest.
     pub manifest: CheckpointManifest,
-    /// Per-dirty-chunk write stats, chunk order.
+    /// Per-**segment** write stats, segment order (one WriteJob each).
     pub stats: Vec<WriteStats>,
     /// Wall latency: serialize start → manifest durable.
     pub latency: Duration,
     /// Logical stream length (what a full checkpoint would write).
     pub total_bytes: u64,
-    /// Bytes actually written (dirty chunks only).
+    /// Bytes actually written (dirty chunks only, excluding segment
+    /// headers).
     pub written_bytes: u64,
-    /// Chunks in the stream's grid.
+    /// Chunks in the stream's grid (header chunk included).
     pub chunks_total: usize,
     /// Dirty chunks written by this checkpoint.
     pub chunks_written: usize,
+    /// Segment files (= WriteJobs) this checkpoint issued.
+    pub segments_written: usize,
+    /// fsync/fdatasync calls issued across all segment writes (0 when
+    /// durability is disabled). The coalescing invariant: equals
+    /// `segments_written` under durable configs, never
+    /// `chunks_written`.
+    pub fsyncs: u64,
     /// True if this checkpoint is a chain base (all chunks local).
     pub is_base: bool,
 }
@@ -231,6 +322,16 @@ impl DeltaOutcome {
         1.0 - self.written_bytes as f64 / self.total_bytes as f64
     }
 
+    /// Mean payload bytes per WriteJob (0 when nothing was written) —
+    /// the coalescing metric the delta bench reports.
+    pub fn bytes_per_job(&self) -> u64 {
+        if self.segments_written == 0 {
+            0
+        } else {
+            self.written_bytes / self.segments_written as u64
+        }
+    }
+
     /// View as a generic [`CheckpointOutcome`] (the pipelined helper's
     /// common currency).
     pub fn into_outcome(self) -> CheckpointOutcome {
@@ -239,6 +340,7 @@ impl DeltaOutcome {
             stats: self.stats,
             latency: self.latency,
             total_bytes: self.total_bytes,
+            written_bytes: self.written_bytes,
         }
     }
 }
@@ -257,9 +359,19 @@ struct PrevCheckpoint {
 struct ResolvedChunk {
     hash: u64,
     len: u64,
-    /// Directory name that physically holds the chunk file.
+    /// Directory name that physically holds the chunk's segment.
     source: String,
     device: Option<String>,
+    seg: SegmentRef,
+}
+
+/// One segment of a checkpoint's write plan: merged stream ranges of
+/// consecutive dirty chunks plus accounting.
+#[derive(Default)]
+struct SegPlan {
+    ranges: Vec<(u64, u64)>,
+    chunks: u32,
+    payload: u64,
 }
 
 /// Chunk-granular incremental checkpoint writer over a shared
@@ -296,29 +408,37 @@ impl DeltaCheckpointer {
     /// Adopt the checkpoint at `dir` as the chain predecessor, so the
     /// next write diffs against it (crash/restart resume). Returns
     /// `true` if `dir` holds a compatible delta manifest; a full
-    /// (partitioned) or differently-chunked manifest leaves the writer
-    /// in base mode and returns `false`.
+    /// (partitioned) manifest, a differently-chunked one, or a legacy
+    /// per-chunk-file (v3) one leaves the writer in base mode and
+    /// returns `false`.
     pub fn resume_from(&mut self, dir: &Path) -> Result<bool> {
         let manifest = CheckpointManifest::load(dir)?;
         let Some(delta) = &manifest.delta else {
             self.prev = None;
             return Ok(false);
         };
-        if delta.chunk_size != self.cfg.chunk_size {
+        // A v3 manifest (header_len == 0) uses the uniform whole-stream
+        // grid and per-chunk files: its table cannot seed the
+        // header-split segment diff, so the next write starts a base.
+        if delta.chunk_size != self.cfg.chunk_size || delta.header_len == 0 {
             self.prev = None;
             return Ok(false);
         }
         let dir_name = dir_name_of(dir)?;
-        let chunks = delta
-            .chunks
-            .iter()
-            .map(|c| ResolvedChunk {
+        let mut chunks = Vec::with_capacity(delta.chunks.len());
+        for c in &delta.chunks {
+            let Some(seg) = c.seg else {
+                self.prev = None;
+                return Ok(false);
+            };
+            chunks.push(ResolvedChunk {
                 hash: c.hash,
                 len: c.len,
                 source: c.source.clone().unwrap_or_else(|| dir_name.clone()),
                 device: c.device.clone(),
-            })
-            .collect();
+                seg,
+            });
+        }
         self.prev = Some(PrevCheckpoint {
             parent: dir.parent().map(Path::to_path_buf).unwrap_or_default(),
             dir_name,
@@ -345,8 +465,9 @@ impl DeltaCheckpointer {
     /// `dir` must be a sibling of the previous checkpoint's directory
     /// (same parent); otherwise — or when the chain has reached
     /// [`DeltaConfig::max_chain`], or no predecessor exists — a base
-    /// checkpoint is written instead. Only dirty chunks are submitted
-    /// to the writer pool; the manifest is published last.
+    /// checkpoint is written instead. Dirty chunks are packed into
+    /// segment files (one WriteJob + one fsync each, device-striped);
+    /// the manifest is published last.
     pub fn write(
         &mut self,
         store: &TensorStore,
@@ -359,11 +480,12 @@ impl DeltaCheckpointer {
         let parent = dir.parent().map(Path::to_path_buf).unwrap_or_default();
         let step = extra.get("step").and_then(|j| j.as_i64().ok()).unwrap_or(0) as u64;
 
-        // One serialization pass (header + digest), one hashing pass
-        // (chunk grid); payloads stay zero-copy Arc references.
-        let ser = Arc::new(SerializedCheckpoint::new(store, extra));
+        // Exactly ONE CPU pass over the state bytes: serialization
+        // computes the data digest and the header-split chunk grid
+        // together; payloads stay zero-copy Arc references.
+        let ser = Arc::new(SerializedCheckpoint::new_chunked(store, extra, self.cfg.chunk_size));
         let digest = ser.stream_digest();
-        let grid = chunk_hashes(&ser, self.cfg.chunk_size);
+        let (_, grid) = ser.chunk_grid().expect("new_chunked always carries a grid");
 
         // Delta-eligible only against a same-grid sibling predecessor
         // with chain headroom; anything else starts a fresh base. The
@@ -381,61 +503,145 @@ impl DeltaCheckpointer {
             _ => (true, None, 0, Vec::new()),
         };
 
-        // Diff against the predecessor grid; submit dirty chunks to the
-        // persistent writer pool, inherit clean ones. The manifest's
-        // chunk table and the in-memory resolved table (next diff's
-        // input) are built together in this single pass.
-        let mut tickets: Vec<Ticket> = Vec::new();
-        let mut entries: Vec<ChunkEntry> = Vec::with_capacity(grid.len());
-        let mut resolved: Vec<ResolvedChunk> = Vec::with_capacity(grid.len());
+        // Diff against the predecessor grid: inherit clean chunks,
+        // collect dirty ones for segment packing. Because the grid is
+        // data-relative (chunk 0 = header), data chunks line up across
+        // checkpoints even if the header length changes.
+        let mut entries: Vec<Option<ChunkEntry>> = vec![None; grid.len()];
+        let mut resolved: Vec<Option<ResolvedChunk>> = vec![None; grid.len()];
+        let mut offsets: Vec<u64> = Vec::with_capacity(grid.len());
+        let mut dirty: Vec<usize> = Vec::new();
         let mut written = 0u64;
-        let mut offset = 0u64;
+        let mut off = 0u64;
         for (i, ch) in grid.iter().enumerate() {
+            offsets.push(off);
             let clean = !is_base
                 && prev_chunks.get(i).is_some_and(|p| p.hash == ch.hash && p.len == ch.len);
             if clean {
                 let p = &prev_chunks[i];
-                entries.push(ChunkEntry {
+                entries[i] = Some(ChunkEntry {
                     hash: ch.hash,
                     len: ch.len,
                     source: Some(p.source.clone()),
                     device: p.device.clone(),
+                    seg: Some(p.seg),
                 });
-                resolved.push(p.clone());
+                resolved[i] = Some(p.clone());
             } else {
-                let file = DeltaSection::chunk_file(i);
-                let (chunk_dir, device) = match self.runtime.devices().partition_dir(dir, i) {
-                    Some((d, root)) => (d, Some(root)),
-                    None => (dir.to_path_buf(), None),
-                };
-                tickets.push(self.runtime.submit(WriteJob::range(
-                    Arc::clone(&ser),
-                    offset,
-                    offset + ch.len,
-                    chunk_dir.join(file),
-                )));
+                dirty.push(i);
                 written += ch.len;
-                resolved.push(ResolvedChunk {
-                    hash: ch.hash,
-                    len: ch.len,
-                    source: dir_name.clone(),
-                    device: device.clone(),
-                });
-                entries.push(ChunkEntry { hash: ch.hash, len: ch.len, source: None, device });
             }
-            offset += ch.len;
+            off += ch.len;
         }
-        let chunks_written = tickets.len();
+
+        // Segment plan: enough segments to respect the size cap and to
+        // keep every device writing, never more than one per dirty
+        // chunk. Consecutive dirty chunks merge into single stream
+        // ranges, so a base becomes a handful of large sequential
+        // writes.
+        let devices = self.runtime.devices();
+        let mut segs: Vec<SegPlan> = Vec::new();
+        let mut seg_ref: BTreeMap<usize, SegmentRef> = BTreeMap::new();
+        if !dirty.is_empty() {
+            let by_size = written.div_ceil(self.cfg.segment_bytes).max(1) as usize;
+            let min_parallel = if devices.is_empty() { 1 } else { devices.len() };
+            let n_segs = by_size.max(min_parallel).min(dirty.len());
+            let target = written.div_ceil(n_segs as u64).max(1);
+            // Data chunks pack in stream order; the header chunk — whose
+            // length is a 256-byte (not 4 KiB) multiple — packs LAST in
+            // its segment, so data-chunk offsets stay 4 KiB-aligned for
+            // 4 KiB-multiple grids (and segment GC's hole punching can
+            // free whole blocks under dead data chunks).
+            let order = dirty
+                .iter()
+                .copied()
+                .filter(|&i| i != 0)
+                .chain(dirty.iter().copied().filter(|&i| i == 0));
+            let mut cur = SegPlan::default();
+            for (k, i) in order.enumerate() {
+                // Close the open segment when it reached its byte
+                // target, or when every remaining chunk is needed to
+                // give each remaining segment at least one chunk (the
+                // one-segment-per-device floor).
+                let must_split = dirty.len() - k <= n_segs - segs.len() - 1;
+                if cur.chunks > 0
+                    && (cur.payload >= target || must_split)
+                    && segs.len() + 1 < n_segs
+                {
+                    segs.push(std::mem::take(&mut cur));
+                }
+                seg_ref.insert(i, SegmentRef {
+                    seg: segs.len() as u32,
+                    offset: SEGMENT_HEADER_LEN as u64 + cur.payload,
+                });
+                let (s, e) = (offsets[i], offsets[i] + grid[i].len);
+                match cur.ranges.last_mut() {
+                    Some(last) if last.1 == s => last.1 = e,
+                    _ => cur.ranges.push((s, e)),
+                }
+                cur.chunks += 1;
+                cur.payload += grid[i].len;
+            }
+            if cur.chunks > 0 {
+                segs.push(cur);
+            }
+        }
+
+        // One WriteJob per segment through the persistent writer pool,
+        // striped across the device map by segment index.
+        let mut tickets: Vec<Ticket> = Vec::with_capacity(segs.len());
+        let mut seg_devices: Vec<Option<String>> = Vec::with_capacity(segs.len());
+        for (si, seg) in segs.iter().enumerate() {
+            let file = DeltaSection::segment_file(si);
+            let (seg_dir, device) = match devices.partition_dir(dir, si) {
+                Some((d, root)) => (d, Some(root)),
+                None => (dir.to_path_buf(), None),
+            };
+            let header = encode_segment_header(si as u32, seg.chunks, seg.payload);
+            tickets.push(self.runtime.submit(WriteJob::chunks(
+                Arc::clone(&ser),
+                header,
+                seg.ranges.clone(),
+                seg_dir.join(file),
+            )));
+            seg_devices.push(device);
+        }
+
+        // Fill the dirty entries now that segment routing is known.
+        for &i in &dirty {
+            let r = seg_ref[&i];
+            let device = seg_devices[r.seg as usize].clone();
+            entries[i] = Some(ChunkEntry {
+                hash: grid[i].hash,
+                len: grid[i].len,
+                source: None,
+                device: device.clone(),
+                seg: Some(r),
+            });
+            resolved[i] = Some(ResolvedChunk {
+                hash: grid[i].hash,
+                len: grid[i].len,
+                source: dir_name.clone(),
+                device,
+                seg: r,
+            });
+        }
+
         let stats: Vec<WriteStats> =
             tickets.into_iter().map(Ticket::wait).collect::<Result<Vec<_>>>()?;
+        let fsyncs = stats.iter().map(|s| s.fsyncs).sum();
 
-        // All dirty chunks durable → publish the manifest. Its presence
-        // is the commit point of the whole delta.
+        // All segments durable → publish the manifest. Its presence is
+        // the commit point of the whole delta.
         let delta = DeltaSection {
             base: base_name,
             chain_len,
             chunk_size: self.cfg.chunk_size,
-            chunks: entries,
+            header_len: ser.header_len(),
+            chunks: entries
+                .into_iter()
+                .map(|e| e.expect("every chunk entry filled"))
+                .collect(),
         };
         let manifest = CheckpointManifest::from_delta(ser.total_len(), digest, step, delta);
         manifest.validate()?;
@@ -447,14 +653,19 @@ impl DeltaCheckpointer {
             dir_name,
             chain_len,
             chunk_size: self.cfg.chunk_size,
-            chunks: resolved,
+            chunks: resolved
+                .into_iter()
+                .map(|r| r.expect("every chunk resolved"))
+                .collect(),
         });
 
         Ok(DeltaOutcome {
             total_bytes: ser.total_len(),
             written_bytes: written,
             chunks_total: grid.len(),
-            chunks_written,
+            chunks_written: dirty.len(),
+            segments_written: segs.len(),
+            fsyncs,
             is_base,
             manifest,
             stats,
@@ -472,25 +683,59 @@ fn dir_name_of(dir: &Path) -> Result<String> {
         })
 }
 
-/// On-disk location of chunk `index` of the delta checkpoint at `dir`:
-/// the entry's source directory (a sibling of `dir`, or `dir` itself),
-/// with the device assignment resolved against that *source* directory.
-pub fn chunk_path(dir: &Path, index: usize, entry: &ChunkEntry) -> PathBuf {
+/// Directory that physically holds chunk-store files of `entry` for the
+/// delta checkpoint at `dir`: the entry's source directory (a sibling
+/// of `dir`, or `dir` itself), with the device assignment resolved
+/// against that *source* directory.
+fn owner_dir(dir: &Path, entry: &ChunkEntry) -> PathBuf {
     let owner = match &entry.source {
         Some(s) => dir.parent().map(Path::to_path_buf).unwrap_or_default().join(s),
         None => dir.to_path_buf(),
     };
-    let file = DeltaSection::chunk_file(index);
     match &entry.device {
-        Some(root) => DeviceMap::resolve_in(Path::new(root), &owner).join(file),
-        None => owner.join(file),
+        Some(root) => DeviceMap::resolve_in(Path::new(root), &owner),
+        None => owner,
     }
 }
 
+/// On-disk location of chunk `index` of a **legacy (v3)** delta
+/// checkpoint at `dir`: one `chunk-NNNNNN.fpck` file per chunk in the
+/// entry's source directory.
+pub fn chunk_path(dir: &Path, index: usize, entry: &ChunkEntry) -> PathBuf {
+    owner_dir(dir, entry).join(DeltaSection::chunk_file(index))
+}
+
+/// On-disk location of the segment file holding `entry`'s bytes (v4
+/// layout) for the delta checkpoint at `dir`.
+pub fn segment_path(dir: &Path, entry: &ChunkEntry, seg: SegmentRef) -> PathBuf {
+    owner_dir(dir, entry).join(DeltaSection::segment_file(seg.seg as usize))
+}
+
+/// One unit of parallel read work during stream reassembly.
+enum ReadJob {
+    /// Legacy per-chunk file (v3 layout).
+    File { path: PathBuf, pos: u64, len: u64, hash: u64 },
+    /// One segment file holding several chunks (v4 layout) — opened
+    /// once, chunks read at their recorded offsets.
+    Segment { path: PathBuf, parts: Vec<SegPart> },
+}
+
+struct SegPart {
+    /// Chunk index (error reporting).
+    index: usize,
+    /// Destination offset in the assembled stream.
+    pos: u64,
+    /// Byte offset inside the segment file.
+    off: u64,
+    len: u64,
+    hash: u64,
+}
+
 /// Reassemble the logical stream of the delta checkpoint at `dir`:
-/// `threads` parallel chunk readers, each verifying its chunk's
-/// recorded hash (precise corruption reports before the caller's
-/// whole-stream digest check).
+/// `threads` parallel readers — one job per *segment file* (opened
+/// once, chunks `pread` at their recorded offsets) plus one per legacy
+/// chunk file — each verifying its chunks' recorded hashes (precise
+/// corruption reports before the caller's whole-stream digest check).
 pub fn assemble_delta_stream(
     dir: &Path,
     manifest: &CheckpointManifest,
@@ -500,39 +745,108 @@ pub fn assemble_delta_stream(
         .delta
         .as_ref()
         .ok_or_else(|| Error::Internal("assemble_delta_stream on a full manifest".into()))?;
-    let jobs: Vec<(PathBuf, u64, u64)> = delta
-        .chunks
-        .iter()
-        .enumerate()
-        .map(|(i, c)| (chunk_path(dir, i, c), c.len, c.hash))
-        .collect();
-    let parts: Vec<Result<Vec<u8>>> = parallel_map(threads.max(1), jobs, |(path, len, hash)| {
-        let bytes = std::fs::read(&path)
-            .map_err(|e| Error::Format(format!("chunk {}: {e}", path.display())))?;
-        if bytes.len() as u64 != len {
-            return Err(Error::Format(format!(
-                "chunk {} is {} bytes, manifest says {len}",
-                path.display(),
-                bytes.len()
-            )));
+    let mut seg_jobs: BTreeMap<(String, u32), (PathBuf, Vec<SegPart>)> = BTreeMap::new();
+    let mut jobs: Vec<ReadJob> = Vec::new();
+    let mut pos = 0u64;
+    for (i, c) in delta.chunks.iter().enumerate() {
+        match c.seg {
+            Some(r) => {
+                let key = (c.source.clone().unwrap_or_default(), r.seg);
+                seg_jobs
+                    .entry(key)
+                    .or_insert_with(|| (segment_path(dir, c, r), Vec::new()))
+                    .1
+                    .push(SegPart { index: i, pos, off: r.offset, len: c.len, hash: c.hash });
+            }
+            None => jobs.push(ReadJob::File {
+                path: chunk_path(dir, i, c),
+                pos,
+                len: c.len,
+                hash: c.hash,
+            }),
         }
-        let got = checksum64_slice(&bytes);
-        if got != hash {
-            return Err(Error::Format(format!(
-                "chunk {} hash mismatch: computed {got:#x}, manifest {hash:#x}",
-                path.display()
-            )));
-        }
-        Ok(bytes)
-    });
-    let mut stream = Vec::with_capacity(manifest.total_len as usize);
-    for part in parts {
-        stream.extend_from_slice(&part?);
+        pos += c.len;
     }
-    if stream.len() as u64 != manifest.total_len {
+    jobs.extend(
+        seg_jobs
+            .into_values()
+            .map(|(path, parts)| ReadJob::Segment { path, parts }),
+    );
+    let groups: Vec<Result<Vec<(u64, Vec<u8>)>>> =
+        parallel_map(threads.max(1), jobs, |job| match job {
+            ReadJob::File { path, pos, len, hash } => {
+                let bytes = std::fs::read(&path)
+                    .map_err(|e| Error::Format(format!("chunk {}: {e}", path.display())))?;
+                if bytes.len() as u64 != len {
+                    return Err(Error::Format(format!(
+                        "chunk {} is {} bytes, manifest says {len}",
+                        path.display(),
+                        bytes.len()
+                    )));
+                }
+                let got = checksum64_slice(&bytes);
+                if got != hash {
+                    return Err(Error::Format(format!(
+                        "chunk {} hash mismatch: computed {got:#x}, manifest {hash:#x}",
+                        path.display()
+                    )));
+                }
+                Ok(vec![(pos, bytes)])
+            }
+            ReadJob::Segment { path, parts } => {
+                let file = std::fs::File::open(&path)
+                    .map_err(|e| Error::Format(format!("segment {}: {e}", path.display())))?;
+                let mut hdr = [0u8; 8];
+                file.read_exact_at(&mut hdr, 0)
+                    .map_err(|e| Error::Format(format!("segment {}: {e}", path.display())))?;
+                check_segment_header(&hdr)
+                    .map_err(|e| Error::Format(format!("segment {}: {e}", path.display())))?;
+                let mut out = Vec::with_capacity(parts.len());
+                for p in parts {
+                    let mut buf = vec![0u8; p.len as usize];
+                    file.read_exact_at(&mut buf, p.off).map_err(|e| {
+                        Error::Format(format!(
+                            "segment {} chunk {}: {e}",
+                            path.display(),
+                            p.index
+                        ))
+                    })?;
+                    let got = checksum64_slice(&buf);
+                    if got != p.hash {
+                        return Err(Error::Format(format!(
+                            "segment {} chunk {} hash mismatch: computed {got:#x}, \
+                             manifest {:#x}",
+                            path.display(),
+                            p.index,
+                            p.hash
+                        )));
+                    }
+                    out.push((p.pos, buf));
+                }
+                Ok(out)
+            }
+        });
+    // A validated chunk table tiles [0, total_len) exactly; re-check
+    // coverage here so a caller holding an unvalidated manifest gets an
+    // error, not a panic or a silently zero-filled gap.
+    let mut stream = vec![0u8; manifest.total_len as usize];
+    let mut covered = 0u64;
+    for group in groups {
+        for (pos, bytes) in group? {
+            let end = pos as usize + bytes.len();
+            if end > stream.len() {
+                return Err(Error::Format(format!(
+                    "chunk at stream offset {pos} runs to {end}, past total_len {}",
+                    manifest.total_len
+                )));
+            }
+            stream[pos as usize..end].copy_from_slice(&bytes);
+            covered += bytes.len() as u64;
+        }
+    }
+    if covered != manifest.total_len {
         return Err(Error::Format(format!(
-            "assembled {} bytes, manifest says {}",
-            stream.len(),
+            "assembled {covered} bytes, manifest says {}",
             manifest.total_len
         )));
     }
@@ -547,8 +861,27 @@ pub struct PruneStats {
     /// Directories demoted to chunk stores (manifest dropped, live
     /// chunks retained because newer checkpoints reference them).
     pub demoted_dirs: usize,
-    /// Dead chunk files deleted from demoted directories.
+    /// Dead legacy (v3) chunk files deleted from demoted directories.
     pub removed_chunks: usize,
+    /// Segment files deleted from demoted directories (no kept manifest
+    /// references any chunk in them).
+    pub removed_segments: usize,
+    /// Segment files sparsely rewritten because live-byte occupancy
+    /// fell below [`GcPolicy::occupancy`] (chunk offsets preserved).
+    pub rewritten_segments: usize,
+    /// Dead payload bytes reclaimed from removed + rewritten segments.
+    pub reclaimed_bytes: u64,
+}
+
+/// Chain-aware pruning + garbage collection with the default
+/// [`GcPolicy`]. See [`prune_chain_with`].
+pub fn prune_chain(
+    parent: &Path,
+    keep_last: usize,
+    devices: &DeviceMap,
+    protect: Option<u64>,
+) -> Result<PruneStats> {
+    prune_chain_with(parent, keep_last, devices, protect, GcPolicy::default())
 }
 
 /// Chain-aware pruning + garbage collection for a directory of
@@ -557,13 +890,17 @@ pub struct PruneStats {
 /// Keeps the newest `keep_last` *complete* checkpoints (manifest
 /// present) loadable. Older directories are:
 ///
-/// * **removed** entirely (including device-side partition/chunk dirs)
-///   when no kept checkpoint references their chunks;
+/// * **removed** entirely (including device-side partition/segment
+///   dirs) when no kept checkpoint references their chunks;
 /// * **demoted** to chunk stores when kept deltas still reference some
 ///   of their chunks: the manifest is deleted (the checkpoint is no
-///   longer loadable or resumable) and every chunk file *not*
-///   referenced by a kept manifest — a dead chunk — is reclaimed, on
-///   the main filesystem and on every device root.
+///   longer loadable or resumable) and GC runs **segment-granular**
+///   with live-bytes accounting — segment files with no live chunks are
+///   deleted, segments whose live occupancy is below
+///   [`GcPolicy::occupancy`] are sparsely rewritten (live ranges copied
+///   to identical offsets, dead ranges become holes, atomic rename), so
+///   every surviving chunk's recorded `(segment, offset)` stays valid.
+///   Legacy (v3) per-chunk files are still reclaimed file-by-file.
 ///
 /// Directories newer than the newest kept manifest (e.g. an in-flight
 /// pipelined write that has not published its manifest yet) are never
@@ -572,20 +909,25 @@ pub struct PruneStats {
 /// higher-numbered* checkpoints can never prune its own newest work
 /// (the trainer always does). `keep_last == 0` (keep everything) is a
 /// no-op.
-pub fn prune_chain(
+///
+/// Kept manifests are parsed through the process-wide LRU
+/// (`CheckpointManifest::load_cached`), so a steady-state prune on the
+/// training hot path re-parses nothing.
+pub fn prune_chain_with(
     parent: &Path,
     keep_last: usize,
     devices: &DeviceMap,
     protect: Option<u64>,
+    policy: GcPolicy,
 ) -> Result<PruneStats> {
     let mut stats = PruneStats::default();
     if keep_last == 0 {
         return Ok(stats);
     }
     // All step dirs. Manifests are parsed *lazily* (kept checkpoints
-    // only): a steady-state prune on the training hot path costs at
-    // most `keep_last + 1` manifest parses, not one per directory, and
-    // nothing at all while fewer than keep_last checkpoints exist.
+    // only) and through the LRU cache: a steady-state prune costs at
+    // most `keep_last + 1` cache probes, and nothing at all while fewer
+    // than keep_last checkpoints exist.
     let mut dirs: Vec<(u64, PathBuf, bool)> = Vec::new();
     let Ok(entries) = std::fs::read_dir(parent) else { return Ok(stats) };
     for entry in entries.flatten() {
@@ -605,13 +947,13 @@ pub fn prune_chain(
     // the protected (just-written) one whatever its step number.
     // Unparseable manifests are treated as incomplete (skipped here,
     // reclaimed below like any other unreferenced old directory).
-    let mut kept: BTreeMap<u64, CheckpointManifest> = BTreeMap::new();
+    let mut kept: BTreeMap<u64, Arc<CheckpointManifest>> = BTreeMap::new();
     for (step, path, has_manifest) in dirs.iter().rev() {
         if kept.len() >= keep_last {
             break;
         }
         if *has_manifest {
-            if let Ok(m) = CheckpointManifest::load(path) {
+            if let Ok(m) = CheckpointManifest::load_cached(path) {
                 kept.insert(*step, m);
             }
         }
@@ -619,15 +961,17 @@ pub fn prune_chain(
     if let Some(p) = protect {
         if !kept.contains_key(&p) {
             if let Some((_, path, _)) = dirs.iter().find(|(s, _, h)| *s == p && *h) {
-                if let Ok(m) = CheckpointManifest::load(path) {
+                if let Ok(m) = CheckpointManifest::load_cached(path) {
                     kept.insert(p, m);
                 }
             }
         }
     }
     let Some(max_kept) = kept.keys().next_back().copied() else { return Ok(stats) };
-    // Live chunk files per directory name, from kept manifests.
+    // Live-byte accounting from kept manifests, per owner directory:
+    // legacy chunk-file names, and per-segment live ranges.
     let mut live: BTreeMap<String, std::collections::BTreeSet<String>> = BTreeMap::new();
+    let mut live_segs: BTreeMap<String, BTreeMap<u32, SegmentLive>> = BTreeMap::new();
     let mut required: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
     for (step, path, _) in &dirs {
         let Some(m) = kept.get(step) else { continue };
@@ -638,7 +982,23 @@ pub fn prune_chain(
                 if c.source.is_some() {
                     required.insert(owner.clone());
                 }
-                live.entry(owner).or_default().insert(DeltaSection::chunk_file(i));
+                match c.seg {
+                    Some(r) => {
+                        let seg = live_segs
+                            .entry(owner)
+                            .or_default()
+                            .entry(r.seg)
+                            .or_default();
+                        // several kept manifests may inherit the same
+                        // chunk; count each live range once
+                        if seg.ranges.insert((r.offset, c.len)) {
+                            seg.bytes += c.len;
+                        }
+                    }
+                    None => {
+                        live.entry(owner).or_default().insert(DeltaSection::chunk_file(i));
+                    }
+                }
             }
         }
     }
@@ -647,15 +1007,21 @@ pub fn prune_chain(
             continue; // kept, protected, or possibly still being written
         }
         let name = dir_name_of(path)?;
+        // Whether demoted or removed, this checkpoint's manifest is
+        // gone — drop its parsed chunk table from the LRU too.
+        crate::checkpoint::manifest::evict_cached(path);
         if required.contains(&name) {
             // Demote: no longer loadable, but its live chunks feed
             // newer deltas. Reclaim the dead ones everywhere.
             let _ = std::fs::remove_file(path.join(MANIFEST_FILE));
             let live_here = live.get(&name);
+            let segs_here = live_segs.get(&name);
             stats.removed_chunks += gc_chunk_files(path, live_here);
+            gc_segments(path, segs_here, policy, &mut stats);
             for root in devices.roots() {
-                stats.removed_chunks +=
-                    gc_chunk_files(&DeviceMap::resolve_in(root, path), live_here);
+                let dev_dir = DeviceMap::resolve_in(root, path);
+                stats.removed_chunks += gc_chunk_files(&dev_dir, live_here);
+                gc_segments(&dev_dir, segs_here, policy, &mut stats);
             }
             stats.demoted_dirs += 1;
         } else {
@@ -667,7 +1033,18 @@ pub fn prune_chain(
     Ok(stats)
 }
 
-/// Delete `chunk-*.fpck` files in `dir` that are not in `live`.
+/// Live ranges of one segment file, from kept manifests.
+#[derive(Default)]
+struct SegmentLive {
+    /// `(file offset, length)` of each live chunk, deduplicated (the
+    /// same chunk may be inherited by several kept manifests).
+    ranges: std::collections::BTreeSet<(u64, u64)>,
+    /// Total live payload bytes (each range counted once).
+    bytes: u64,
+}
+
+/// Delete `chunk-*.fpck` files in `dir` that are not in `live`
+/// (legacy v3 chunk stores).
 fn gc_chunk_files(
     dir: &Path,
     live: Option<&std::collections::BTreeSet<String>>,
@@ -685,6 +1062,181 @@ fn gc_chunk_files(
         }
     }
     removed
+}
+
+/// Segment-granular GC over `seg-*.fpseg` files in `dir`: delete fully
+/// dead segments, sparsely rewrite under-occupied ones (live chunk
+/// offsets preserved).
+fn gc_segments(
+    dir: &Path,
+    live: Option<&BTreeMap<u32, SegmentLive>>,
+    policy: GcPolicy,
+    stats: &mut PruneStats,
+) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        // A crash mid-rewrite can orphan a temp copy; it is never
+        // referenced (renames are atomic), so reclaim it here.
+        if name.starts_with("seg-") && name.ends_with(".fpseg.gc") {
+            let _ = std::fs::remove_file(entry.path());
+            continue;
+        }
+        let Some(idx) = name
+            .strip_prefix("seg-")
+            .and_then(|s| s.strip_suffix(".fpseg"))
+            .and_then(|s| s.parse::<u32>().ok())
+        else {
+            continue;
+        };
+        let path = entry.path();
+        // Occupancy is measured against *allocated* payload bytes
+        // (st_blocks), not the apparent size: a sparse rewrite keeps the
+        // apparent size (offsets must not move) but frees dead blocks,
+        // so an already-compacted segment reads as (nearly) fully
+        // occupied on the next prune.
+        let (apparent, allocated) = entry
+            .metadata()
+            .map(|m| {
+                use std::os::unix::fs::MetadataExt;
+                (m.len(), (m.blocks() * 512).min(m.len()))
+            })
+            .unwrap_or((0, 0));
+        let payload = allocated.saturating_sub(SEGMENT_HEADER_LEN as u64);
+        match live.and_then(|m| m.get(&idx)) {
+            None => {
+                if std::fs::remove_file(&path).is_ok() {
+                    stats.removed_segments += 1;
+                    stats.reclaimed_bytes += payload;
+                }
+            }
+            Some(l) => {
+                let occupancy =
+                    if payload == 0 { 1.0 } else { (l.bytes as f64 / payload as f64).min(1.0) };
+                // Convergence guards: skip unless whole 4 KiB blocks are
+                // dead (holes can't be finer), and unless something died
+                // since the last rewrite (the header's compacted_live
+                // latch — filesystem-independent, so the rewrite never
+                // repeats every prune even where hole granularity is
+                // coarser than 4 KiB).
+                let reclaimable = dead_block_bytes(&l.ranges, apparent) > 0;
+                let latched = segment_compacted_live(&path) == Some(l.bytes);
+                if occupancy < policy.occupancy
+                    && reclaimable
+                    && !latched
+                    && rewrite_segment_sparse(&path, &l.ranges, l.bytes).is_ok()
+                {
+                    stats.rewritten_segments += 1;
+                    // account what the rewrite *actually* freed
+                    let after = std::fs::metadata(&path)
+                        .map(|m| {
+                            use std::os::unix::fs::MetadataExt;
+                            (m.blocks() * 512).min(m.len())
+                        })
+                        .unwrap_or(allocated);
+                    stats.reclaimed_bytes += allocated.saturating_sub(after);
+                }
+            }
+        }
+    }
+}
+
+/// Bytes in whole 4 KiB filesystem blocks of `[0, apparent)` covered by
+/// no live range and not by the segment header — the most a sparse
+/// rewrite of this segment can actually free (hole punching is
+/// block-granular).
+fn dead_block_bytes(
+    live: &std::collections::BTreeSet<(u64, u64)>,
+    apparent: u64,
+) -> u64 {
+    const BLK: u64 = 4096;
+    let full_blocks = |start: u64, end: u64| -> u64 {
+        let a = start.next_multiple_of(BLK);
+        let b = end / BLK * BLK;
+        if b > a { b - a } else { 0 }
+    };
+    let mut dead = 0u64;
+    let mut cursor = SEGMENT_HEADER_LEN as u64;
+    for &(off, len) in live.iter() {
+        if off > cursor {
+            dead += full_blocks(cursor, off);
+        }
+        cursor = cursor.max(off + len);
+    }
+    if apparent > cursor {
+        dead += full_blocks(cursor, apparent);
+    }
+    dead
+}
+
+/// Rewrite a segment file keeping only `live` `(offset, len)` ranges
+/// (sorted, deduplicated), each at its **original** offset; dead ranges
+/// become filesystem holes (sparse file). The apparent size is
+/// unchanged and the rewrite is atomic (temp file + rename), so
+/// concurrent readers and recorded manifest offsets stay valid
+/// throughout.
+/// The `compacted_live` latch recorded by the last sparse rewrite of
+/// the segment at `path` (None on read failure or a pre-latch file).
+fn segment_compacted_live(path: &Path) -> Option<u64> {
+    let file = std::fs::File::open(path).ok()?;
+    let mut buf = [0u8; 8];
+    file.read_exact_at(&mut buf, SEGMENT_COMPACTED_OFFSET as u64).ok()?;
+    match u64::from_le_bytes(buf) {
+        0 => None,
+        v => Some(v),
+    }
+}
+
+fn rewrite_segment_sparse(
+    path: &Path,
+    live: &std::collections::BTreeSet<(u64, u64)>,
+    live_bytes: u64,
+) -> Result<()> {
+    let tmp = path.with_extension("fpseg.gc");
+    let result = (|| -> Result<()> {
+        let src = std::fs::File::open(path)?;
+        let total = src.metadata()?.len();
+        let dst = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&tmp)?;
+        // The segment header is always live; stamp the compacted_live
+        // latch so the next prune knows this layout is already compact.
+        let hdr_len = (SEGMENT_HEADER_LEN as u64).min(total) as usize;
+        let mut hdr = vec![0u8; hdr_len];
+        src.read_exact_at(&mut hdr, 0)?;
+        if hdr_len >= SEGMENT_COMPACTED_OFFSET + 8 {
+            hdr[SEGMENT_COMPACTED_OFFSET..SEGMENT_COMPACTED_OFFSET + 8]
+                .copy_from_slice(&live_bytes.to_le_bytes());
+        }
+        dst.write_all_at(&hdr, 0)?;
+        let mut buf = vec![0u8; 1 << 20];
+        for &(off, len) in live.iter() {
+            let mut done = 0u64;
+            while done < len {
+                let n = (buf.len() as u64).min(len - done) as usize;
+                src.read_exact_at(&mut buf[..n], off + done)?;
+                dst.write_all_at(&buf[..n], off + done)?;
+                done += n as u64;
+            }
+        }
+        dst.set_len(total)?;
+        // The original segment was written durably; the replacement must
+        // be too *before* it takes the original's place, or a crash
+        // after the rename could lose live chunks that kept checkpoints
+        // reference.
+        dst.sync_data()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    })();
+    if result.is_err() {
+        // don't leave a dead copy of the live bytes behind (gc_segments
+        // also sweeps stale *.fpseg.gc orphans from crashes)
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
 }
 
 #[cfg(test)]
@@ -705,8 +1257,12 @@ mod tests {
         }))
     }
 
+    fn cfg(max_chain: u64) -> DeltaConfig {
+        DeltaConfig { chunk_size: CS, max_chain, ..DeltaConfig::default() }
+    }
+
     fn ckpt(runtime: Arc<IoRuntime>, max_chain: u64) -> DeltaCheckpointer {
-        DeltaCheckpointer::new(runtime, DeltaConfig { chunk_size: CS, max_chain })
+        DeltaCheckpointer::new(runtime, cfg(max_chain))
     }
 
     fn store(seed: u64, nbytes: usize) -> TensorStore {
@@ -736,26 +1292,32 @@ mod tests {
         m
     }
 
+    fn seg_files(dir: &Path) -> usize {
+        std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.flatten()
+                    .filter(|e| {
+                        let n = e.file_name();
+                        let n = n.to_string_lossy().into_owned();
+                        n.starts_with("seg-") && n.ends_with(".fpseg")
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
     #[test]
-    fn chunk_hashes_match_slice_checksums() {
-        let s = store(1, 3 * CS as usize + 123);
-        let ser = SerializedCheckpoint::new(&s, extra(0));
-        let bytes = ser.to_bytes();
-        let grid = chunk_hashes(&ser, CS);
-        assert_eq!(grid.len(), bytes.len().div_ceil(CS as usize));
-        let mut off = 0usize;
-        for (i, ch) in grid.iter().enumerate() {
-            let end = off + ch.len as usize;
-            assert_eq!(ch.hash, checksum64_slice(&bytes[off..end]), "chunk {i}");
-            off = end;
-        }
-        assert_eq!(off, bytes.len());
-        // grid size 1 byte and giant grid both tile correctly
-        let one = chunk_hashes(&ser, 1);
-        assert_eq!(one.len(), bytes.len());
-        let giant = chunk_hashes(&ser, 1 << 30);
-        assert_eq!(giant.len(), 1);
-        assert_eq!(giant[0].hash, checksum64_slice(&bytes));
+    fn segment_header_roundtrip_and_rejection() {
+        let h = encode_segment_header(3, 17, 123456);
+        assert_eq!(h.len(), SEGMENT_HEADER_LEN);
+        check_segment_header(&h).unwrap();
+        let mut bad = h.clone();
+        bad[0] = b'X';
+        assert!(check_segment_header(&bad).is_err());
+        let mut bad = h.clone();
+        bad[4] = 99;
+        assert!(check_segment_header(&bad).is_err());
+        assert!(check_segment_header(&h[..4]).is_err());
     }
 
     #[test]
@@ -767,6 +1329,10 @@ mod tests {
         let base = ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
         assert!(base.is_base);
         assert_eq!(base.written_bytes, base.total_bytes);
+        // the base's many chunks coalesce into few segment WriteJobs
+        assert!(base.chunks_total > 40);
+        assert!(base.segments_written <= 2, "segments = {}", base.segments_written);
+        assert_eq!(base.stats.len(), base.segments_written);
 
         mutate(&mut s, 0.04, 0x10);
         let d1 = ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
@@ -797,6 +1363,59 @@ mod tests {
     }
 
     #[test]
+    fn base_of_n_chunks_issues_bounded_jobs_and_fsyncs() {
+        // The coalescing acceptance test: a DURABLE base of N chunks
+        // over D devices issues one WriteJob + one fsync per segment —
+        // bounded by D * segments-per-device — not one per chunk.
+        let base = scratch_dir("delta-fsync").unwrap();
+        const D: usize = 2;
+        let devices = DeviceMap::simulated(D, &base.join("devices")).unwrap();
+        let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            // durable: fsync on finish (tmpfs-friendly; O_DIRECT falls
+            // back to aligned pwrite where unsupported)
+            io: IoConfig::fastpersist(),
+            devices: devices.clone(),
+            ..IoRuntimeConfig::default()
+        }));
+        // small segments force several per device
+        let mut ck = DeltaCheckpointer::new(
+            rt,
+            DeltaConfig { chunk_size: CS, max_chain: 8, segment_bytes: 32 * CS },
+        );
+        let n_chunks = 64usize;
+        let s = store(31, n_chunks * CS as usize);
+        let out = ck.write(&s, extra(1), &base.join("ckpts").join("step-00000001")).unwrap();
+        assert!(out.is_base);
+        assert_eq!(out.chunks_total, n_chunks + 1, "data chunks + header chunk");
+
+        // expected ceiling: ceil(bytes / segment_bytes) rounded up to a
+        // multiple of D, far below one-per-chunk
+        let by_size = out.written_bytes.div_ceil(32 * CS) as usize;
+        let max_segments = by_size.max(D);
+        let segments_per_device = max_segments.div_ceil(D);
+        assert!(out.segments_written <= D * segments_per_device);
+        assert!(out.segments_written < n_chunks / 8, "must coalesce, not one job per chunk");
+        assert_eq!(out.stats.len(), out.segments_written, "one WriteJob per segment");
+        assert_eq!(
+            out.fsyncs, out.segments_written as u64,
+            "durable base must fsync once per segment, not per chunk"
+        );
+        // on disk: only segment files, no per-chunk files, striped over
+        // both devices
+        let ckdir = base.join("ckpts").join("step-00000001");
+        assert_eq!(seg_files(&ckdir), 0, "multi-device layout keeps the ckpt dir clean");
+        let on_devices: usize = devices
+            .roots()
+            .iter()
+            .map(|r| seg_files(&DeviceMap::resolve_in(r, &ckdir)))
+            .sum();
+        assert_eq!(on_devices, out.segments_written);
+        let (loaded, _, _) = load_checkpoint(&ckdir, 4).unwrap();
+        assert!(loaded.content_eq(&s));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
     fn unchanged_state_writes_zero_chunks() {
         let dir = scratch_dir("delta-zero").unwrap();
         let rt = runtime();
@@ -807,6 +1426,8 @@ mod tests {
         let d = ck.write(&s, extra(1), &dir.join("step-00000002")).unwrap();
         assert_eq!(d.chunks_written, 0);
         assert_eq!(d.written_bytes, 0);
+        assert_eq!(d.segments_written, 0);
+        assert_eq!(d.fsyncs, 0);
         let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&dir).unwrap();
@@ -819,7 +1440,8 @@ mod tests {
         let mut ck = ckpt(rt, 2);
         let mut s = store(9, 8 * CS as usize);
         for step in 1..=5u64 {
-            let out = ck.write(&s, extra(step as i64), &dir.join(format!("step-{step:08}"))).unwrap();
+            let out =
+                ck.write(&s, extra(step as i64), &dir.join(format!("step-{step:08}"))).unwrap();
             // chain: base(1), d(2), d(3), base(4), d(5)
             let expect_base = step == 1 || step == 4;
             assert_eq!(out.is_base, expect_base, "step {step}");
@@ -852,36 +1474,39 @@ mod tests {
     }
 
     #[test]
-    fn prune_demotes_required_dirs_and_reclaims_dead_chunks() {
+    fn prune_demotes_required_dirs_and_rewrites_underoccupied_segments() {
         let dir = scratch_dir("delta-prune").unwrap();
         let devices = DeviceMap::single();
-        let rt = runtime();
+        // durable runtime: fsync forces block allocation, so the
+        // GC's st_blocks-based occupancy sees the real layout even on
+        // filesystems with delayed allocation
+        let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist(),
+            ..IoRuntimeConfig::default()
+        }));
         let mut ck = ckpt(rt, 8);
         let mut s = store(5, 10 * CS as usize);
         ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
-        mutate(&mut s, 0.08, 1); // dirties a few chunks
+        mutate(&mut s, 0.30, 1); // dirties several chunks
         ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
 
         let base_dir = dir.join("step-00000001");
-        let chunks_before = std::fs::read_dir(&base_dir)
-            .unwrap()
-            .flatten()
-            .filter(|e| e.file_name().to_string_lossy().starts_with("chunk-"))
-            .count();
+        let seg0 = base_dir.join(DeltaSection::segment_file(0));
+        let size_before = std::fs::metadata(&seg0).unwrap().len();
 
-        let stats = prune_chain(&dir, 1, &devices, Some(2)).unwrap();
+        // occupancy 1.0: any dead chunk triggers the sparse rewrite
+        let stats = prune_chain_with(&dir, 1, &devices, Some(2), GcPolicy { occupancy: 1.0 })
+            .unwrap();
         assert_eq!(stats.removed_dirs, 0);
         assert_eq!(stats.demoted_dirs, 1, "base still referenced -> demoted, not removed");
-        assert!(stats.removed_chunks > 0, "chunks rewritten by the delta are dead in the base");
+        assert_eq!(stats.rewritten_segments, 1, "under-occupied segment must be rewritten");
+        assert!(stats.reclaimed_bytes > 0, "chunks rewritten by the delta are dead in the base");
         assert!(!base_dir.join(MANIFEST_FILE).exists(), "demoted dir loses its manifest");
-        let chunks_after = std::fs::read_dir(&base_dir)
-            .unwrap()
-            .flatten()
-            .filter(|e| e.file_name().to_string_lossy().starts_with("chunk-"))
-            .count();
-        assert_eq!(chunks_before, chunks_after + stats.removed_chunks);
+        // rewrite preserves the apparent size (offsets must stay valid)
+        assert_eq!(std::fs::metadata(&seg0).unwrap().len(), size_before);
 
-        // the kept delta still reloads bit-identically from the store
+        // the kept delta still reloads bit-identically from the
+        // rewritten store
         let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&dir).unwrap();
@@ -960,20 +1585,16 @@ mod tests {
             devices: devices.clone(),
             ..IoRuntimeConfig::default()
         }));
-        let mut ck = DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: CS, max_chain: 8 });
+        let mut ck = DeltaCheckpointer::new(rt, cfg(8));
         let mut s = store(13, 9 * CS as usize);
         let dir = base.join("ckpts");
-        ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        let out = ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        assert!(out.segments_written >= 2, "a base must stripe over both devices");
         mutate(&mut s, 0.3, 1);
         let d = ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
         assert!(d.manifest.devices().len() >= 2, "chunks must stripe across devices");
-        // no chunk file lands in the checkpoint dir itself
-        let local = std::fs::read_dir(dir.join("step-00000002"))
-            .unwrap()
-            .flatten()
-            .filter(|e| e.file_name().to_string_lossy().starts_with("chunk-"))
-            .count();
-        assert_eq!(local, 0);
+        // no segment file lands in the checkpoint dir itself
+        assert_eq!(seg_files(&dir.join("step-00000002")), 0);
         let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&base).unwrap();

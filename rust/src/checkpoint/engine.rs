@@ -38,12 +38,18 @@ use crate::Result;
 pub struct CheckpointOutcome {
     /// The published manifest.
     pub manifest: CheckpointManifest,
-    /// Per-partition write stats, plan order.
+    /// Per-partition (full) or per-segment (delta) write stats, plan
+    /// order.
     pub stats: Vec<WriteStats>,
     /// Wall latency: serialize start → manifest durable.
     pub latency: Duration,
     /// Logical stream length in bytes.
     pub total_bytes: u64,
+    /// Payload bytes actually written: the whole stream for a full
+    /// checkpoint, dirty chunks only (excluding segment headers) for a
+    /// delta — the same quantity in both modes, so metrics comparing
+    /// them stay consistent.
+    pub written_bytes: u64,
 }
 
 impl CheckpointOutcome {
@@ -171,6 +177,7 @@ impl CheckpointEngine {
 
         Ok(CheckpointOutcome {
             total_bytes: ser.total_len(),
+            written_bytes: ser.total_len(),
             manifest,
             stats,
             latency: start.elapsed(),

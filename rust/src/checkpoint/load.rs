@@ -6,12 +6,15 @@
 //! into the logical serialized stream, verified against the manifest's
 //! stream digest, and parsed into a [`TensorStore`].
 //!
-//! Incremental checkpoints (manifest v3 with a
+//! Incremental checkpoints (manifest v3/v4 with a
 //! [`crate::checkpoint::manifest::DeltaSection`]) reassemble from their
-//! *chunk* table instead — each chunk read in parallel from whichever
-//! sibling checkpoint directory the table names — and then flow through
-//! the same digest verification and parsing, so a base + delta chain
-//! reloads bit-identically to the full snapshot it represents.
+//! *chunk* table instead — one parallel reader per **segment file**
+//! (v4: chunks `pread` at their recorded offsets; the file is opened
+//! once however many chunks it holds) or per legacy chunk file (v3) —
+//! and then flow through the same digest verification and parsing, so a
+//! base + delta chain reloads bit-identically to the full snapshot it
+//! represents, whichever on-disk layout wrote it. See `docs/FORMATS.md`
+//! for the version matrix.
 
 use std::path::{Path, PathBuf};
 

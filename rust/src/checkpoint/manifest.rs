@@ -20,8 +20,24 @@
 //! manifest is always published last, via atomic rename, so its
 //! presence means the checkpoint — and, for deltas, every chunk it
 //! references — is complete and durable.
+//!
+//! Manifest **v4** changes where a chunk's *bytes* live: instead of one
+//! file per chunk, chunks are packed into a small number of large
+//! **segment files** (see the segment store in
+//! [`crate::checkpoint::delta`]), and each [`ChunkEntry`] carries a
+//! [`SegmentRef`] addressing `(segment id, byte offset)` inside the
+//! source checkpoint's segment store. v4 also splits the chunk grid at
+//! the header boundary ([`DeltaSection::header_len`]): chunk 0 is the
+//! whole encoded header, chunks 1.. tile the data section — which is
+//! what lets serialization hash the grid in its single payload pass.
+//! v3 manifests (per-chunk files, uniform whole-stream grid) are still
+//! read; v1 is rejected with a clear incompatibility error. See
+//! `docs/FORMATS.md` for the full version history.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::SystemTime;
 
 use crate::checkpoint::plan::{Partition, WritePlan};
 use crate::util::json::Json;
@@ -30,17 +46,18 @@ use crate::{Error, Result};
 /// File name of the manifest inside a checkpoint directory.
 pub const MANIFEST_FILE: &str = "checkpoint.json";
 
-/// Manifest schema version. v3 = v2 plus the optional [`DeltaSection`]
-/// (base-checkpoint reference + per-chunk table) for incremental
-/// checkpoints; v2 manifests (composite stream digest over header‖data
-/// halves, optional per-partition device assignments, no delta section)
-/// are still read. v1 manifests (whole-stream `checksum64_slice`
-/// digest, no device field) are rejected with a clear incompatibility
-/// error rather than a misleading digest mismatch.
-pub const MANIFEST_VERSION: i64 = 3;
+/// Manifest schema version. v4 = v3 plus segment-store chunk addressing
+/// ([`SegmentRef`]) and the header-split chunk grid
+/// ([`DeltaSection::header_len`]). v3 (per-chunk-file deltas) and v2
+/// (composite stream digest, optional device assignments, no delta
+/// section) manifests are still read. v1 manifests (whole-stream
+/// `checksum64_slice` digest, no device field) are rejected with a
+/// clear incompatibility error rather than a misleading digest
+/// mismatch. The evolution table lives in `docs/FORMATS.md`.
+pub const MANIFEST_VERSION: i64 = 4;
 
 /// Oldest manifest version this build can still read (v2: same digest
-/// algorithm as v3, no delta section).
+/// algorithm as v4, no delta section).
 pub const MANIFEST_MIN_READ_VERSION: i64 = 2;
 
 /// The per-checkpoint manifest: stream length + digest + exactly one of
@@ -93,11 +110,30 @@ pub struct DeltaSection {
     pub chain_len: u64,
     /// Fixed chunk size in bytes; the final chunk may be shorter.
     pub chunk_size: u64,
+    /// Length of the header chunk (chunk 0) for the v4 header-split
+    /// grid: chunk 0 covers the encoded header, chunks 1.. tile the
+    /// data section in `chunk_size` steps. `0` marks the legacy v3
+    /// uniform grid over the whole stream (header and data mixed).
+    pub header_len: u64,
     /// One entry per chunk of the stream, in stream order. The table is
     /// fully *resolved*: each entry names the checkpoint directory that
-    /// physically holds the chunk file, so loading never walks ancestor
-    /// manifests.
+    /// physically holds the chunk's bytes, so loading never walks
+    /// ancestor manifests.
     pub chunks: Vec<ChunkEntry>,
+}
+
+/// Address of a chunk's bytes inside a segment store (manifest v4): the
+/// segment file id within the source checkpoint, and the absolute byte
+/// offset of the chunk's payload inside that file (past the segment
+/// header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentRef {
+    /// Segment index within the source checkpoint (names the file via
+    /// [`DeltaSection::segment_file`]).
+    pub seg: u32,
+    /// Absolute byte offset of the chunk payload inside the segment
+    /// file (≥ the segment header length).
+    pub offset: u64,
 }
 
 /// One fixed-size chunk of an incremental checkpoint's stream.
@@ -109,19 +145,28 @@ pub struct ChunkEntry {
     pub hash: u64,
     /// Chunk length in bytes (== `chunk_size` except for the last).
     pub len: u64,
-    /// Sibling directory name holding the chunk file; `None` means this
-    /// checkpoint's own directory (the chunk was written by this
+    /// Sibling directory name holding the chunk's bytes; `None` means
+    /// this checkpoint's own directory (the chunk was written by this
     /// checkpoint — a *dirty* chunk).
     pub source: Option<String>,
-    /// Device root the chunk file was striped onto (resolved against
+    /// Device root the chunk's store was striped onto (resolved against
     /// the *source* checkpoint directory); `None` = no device routing.
     pub device: Option<String>,
+    /// Segment-store address of the chunk's bytes (v4). `None` marks
+    /// the legacy v3 layout: one `chunk-NNNNNN.fpck` file per chunk,
+    /// named by the chunk's index via [`DeltaSection::chunk_file`].
+    pub seg: Option<SegmentRef>,
 }
 
 impl DeltaSection {
-    /// Canonical chunk file name for chunk `index`.
+    /// Canonical chunk file name for chunk `index` (legacy v3 layout).
     pub fn chunk_file(index: usize) -> String {
         format!("chunk-{index:06}.fpck")
+    }
+
+    /// Canonical segment file name for segment `index` (v4 layout).
+    pub fn segment_file(index: usize) -> String {
+        format!("seg-{index:06}.fpseg")
     }
 
     /// Distinct sibling directory names this manifest's chunk table
@@ -141,8 +186,11 @@ impl DeltaSection {
         self.chunks.iter().filter(|c| c.source.is_none()).map(|c| c.len).sum()
     }
 
-    /// Chunk table tiles `[0, total_len)`: every chunk is `chunk_size`
-    /// bytes except a shorter final chunk.
+    /// Chunk table tiles `[0, total_len)`. Legacy grid
+    /// (`header_len == 0`): every chunk is `chunk_size` bytes except a
+    /// shorter final chunk. Header-split grid (`header_len > 0`): chunk
+    /// 0 is exactly `header_len` bytes, chunks 1.. tile the rest in
+    /// `chunk_size` steps with a shorter final chunk allowed.
     pub fn validate(&self, total_len: u64) -> Result<()> {
         if self.chunk_size == 0 {
             return Err(Error::Format("delta manifest has chunk_size 0".into()));
@@ -150,10 +198,17 @@ impl DeltaSection {
         let mut pos = 0u64;
         for (i, c) in self.chunks.iter().enumerate() {
             let last = i + 1 == self.chunks.len();
-            if c.len == 0 || c.len > self.chunk_size || (!last && c.len != self.chunk_size) {
+            let ok = if self.header_len > 0 && i == 0 {
+                c.len == self.header_len
+            } else if last {
+                c.len > 0 && c.len <= self.chunk_size
+            } else {
+                c.len == self.chunk_size
+            };
+            if !ok {
                 return Err(Error::Format(format!(
-                    "chunk {i} has length {} (chunk_size {})",
-                    c.len, self.chunk_size
+                    "chunk {i} has length {} (chunk_size {}, header_len {})",
+                    c.len, self.chunk_size, self.header_len
                 )));
             }
             pos += c.len;
@@ -191,10 +246,17 @@ impl DeltaSection {
                     if let Some(dev) = &c.device {
                         f.push(("device", Json::str(dev)));
                     }
+                    if let Some(seg) = &c.seg {
+                        f.push(("seg", Json::from(seg.seg as i64)));
+                        f.push(("off", Json::from(seg.offset as i64)));
+                    }
                     Json::obj(f)
                 })),
             ),
         ];
+        if self.header_len > 0 {
+            fields.push(("header_len", Json::from(self.header_len as i64)));
+        }
         if let Some(base) = &self.base {
             fields.push(("base", Json::str(base)));
         }
@@ -205,6 +267,10 @@ impl DeltaSection {
         let base = match v.opt("base") {
             Some(b) => Some(b.as_str()?.to_string()),
             None => None,
+        };
+        let header_len = match v.opt("header_len") {
+            Some(h) => h.as_i64()? as u64,
+            None => 0,
         };
         let chunks = v
             .get("chunks")?
@@ -221,11 +287,19 @@ impl DeltaSection {
                     Some(d) => Some(d.as_str()?.to_string()),
                     None => None,
                 };
+                let seg = match c.opt("seg") {
+                    Some(s) => Some(SegmentRef {
+                        seg: s.as_i64()? as u32,
+                        offset: c.get("off")?.as_i64()? as u64,
+                    }),
+                    None => None,
+                };
                 Ok(ChunkEntry {
                     hash: (hi << 32) | (lo & 0xffff_ffff),
                     len: c.get("len")?.as_i64()? as u64,
                     source,
                     device,
+                    seg,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -233,6 +307,7 @@ impl DeltaSection {
             base,
             chain_len: v.get("chain_len")?.as_i64()? as u64,
             chunk_size: v.get("chunk_size")?.as_i64()? as u64,
+            header_len,
             chunks,
         })
     }
@@ -394,7 +469,48 @@ impl CheckpointManifest {
         // atomic publish: the manifest appearing means the checkpoint is
         // complete and durable
         std::fs::rename(&tmp, &path)?;
+        // drop any cached parse of the overwritten file (a same-second
+        // rewrite could otherwise serve the stale parse)
+        invalidate_cached(&path);
         Ok(path)
+    }
+
+    /// Like [`CheckpointManifest::load`], backed by a small process-wide
+    /// LRU of parsed manifests keyed by `(path, mtime, file length)`.
+    ///
+    /// Steady-state [`crate::checkpoint::delta::prune_chain`] calls
+    /// re-examine the same `keep_last` kept manifests every iteration;
+    /// the cache makes those re-parses free while a changed file (new
+    /// mtime or length) always re-parses. Paths are compared verbatim —
+    /// callers should address a manifest through one spelling.
+    pub fn load_cached(dir: &Path) -> Result<Arc<CheckpointManifest>> {
+        let path = dir.join(MANIFEST_FILE);
+        let meta = std::fs::metadata(&path)
+            .map_err(|e| Error::Format(format!("manifest {}: {e}", path.display())))?;
+        let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        let len = meta.len();
+        {
+            let mut cache = manifest_cache().lock().unwrap();
+            if let Some(i) = cache
+                .iter()
+                .position(|c| c.path == path && c.mtime == mtime && c.len == len)
+            {
+                let hit = cache.remove(i);
+                let parsed = Arc::clone(&hit.parsed);
+                cache.push(hit); // most-recently-used at the back
+                CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+                return Ok(parsed);
+            }
+        }
+        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+        let parsed = Arc::new(Self::load(dir)?);
+        let mut cache = manifest_cache().lock().unwrap();
+        cache.retain(|c| c.path != path);
+        if cache.len() >= MANIFEST_CACHE_CAP {
+            cache.remove(0); // least-recently-used at the front
+        }
+        cache.push(CachedManifest { path, mtime, len, parsed: Arc::clone(&parsed) });
+        Ok(parsed)
     }
 
     /// Read and validate the manifest of the checkpoint in `dir`.
@@ -436,6 +552,45 @@ impl CheckpointManifest {
         }
         Ok(())
     }
+}
+
+/// Capacity of the process-wide parsed-manifest LRU (a few chains'
+/// worth of kept manifests; entries are small relative to chunk tables
+/// being re-parsed every prune).
+const MANIFEST_CACHE_CAP: usize = 32;
+
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+struct CachedManifest {
+    path: PathBuf,
+    mtime: SystemTime,
+    len: u64,
+    parsed: Arc<CheckpointManifest>,
+}
+
+fn manifest_cache() -> &'static Mutex<Vec<CachedManifest>> {
+    static CACHE: OnceLock<Mutex<Vec<CachedManifest>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn invalidate_cached(path: &Path) {
+    if let Ok(mut cache) = manifest_cache().lock() {
+        cache.retain(|c| c.path != path);
+    }
+}
+
+/// Drop any cached parse for the manifest of the checkpoint at `dir` —
+/// call when deleting or demoting a checkpoint so the (possibly large)
+/// parsed chunk table doesn't stay pinned in the process-wide LRU.
+pub(crate) fn evict_cached(dir: &Path) {
+    invalidate_cached(&dir.join(MANIFEST_FILE));
+}
+
+/// Process-wide `(hits, misses)` of the parsed-manifest cache —
+/// instrumentation for tests and prune diagnostics.
+pub fn manifest_cache_stats() -> (u64, u64) {
+    (CACHE_HITS.load(Ordering::Relaxed), CACHE_MISSES.load(Ordering::Relaxed))
 }
 
 #[cfg(test)]
@@ -517,23 +672,66 @@ mod tests {
         assert!(m.partitions[0].file.starts_with("part-0000"));
     }
 
+    /// Legacy (v3-shaped) delta section: uniform grid, per-chunk files.
     fn delta_manifest() -> CheckpointManifest {
         let delta = DeltaSection {
             base: Some("step-00000003".into()),
             chain_len: 2,
             chunk_size: 64,
+            header_len: 0,
             chunks: vec![
-                ChunkEntry { hash: 0x11, len: 64, source: Some("step-00000001".into()), device: None },
+                ChunkEntry {
+                    hash: 0x11,
+                    len: 64,
+                    source: Some("step-00000001".into()),
+                    device: None,
+                    seg: None,
+                },
                 ChunkEntry {
                     hash: 0x22,
                     len: 64,
                     source: None,
                     device: Some("/mnt/ssd1".into()),
+                    seg: None,
                 },
-                ChunkEntry { hash: 0x33, len: 10, source: None, device: None },
+                ChunkEntry { hash: 0x33, len: 10, source: None, device: None, seg: None },
             ],
         };
         CheckpointManifest::from_delta(138, 0xfeed_f00d, 4, delta)
+    }
+
+    /// v4-shaped delta section: header-split grid, segment-store refs.
+    fn segment_manifest() -> CheckpointManifest {
+        let delta = DeltaSection {
+            base: Some("step-00000003".into()),
+            chain_len: 1,
+            chunk_size: 64,
+            header_len: 100,
+            chunks: vec![
+                ChunkEntry {
+                    hash: 0xaa,
+                    len: 100, // header chunk: its own (padded) length
+                    source: None,
+                    device: None,
+                    seg: Some(SegmentRef { seg: 0, offset: 4096 }),
+                },
+                ChunkEntry {
+                    hash: 0xbb,
+                    len: 64,
+                    source: Some("step-00000003".into()),
+                    device: Some("/mnt/ssd0".into()),
+                    seg: Some(SegmentRef { seg: 1, offset: 4096 + 640 }),
+                },
+                ChunkEntry {
+                    hash: 0xcc,
+                    len: 30,
+                    source: None,
+                    device: None,
+                    seg: Some(SegmentRef { seg: 0, offset: 4196 }),
+                },
+            ],
+        };
+        CheckpointManifest::from_delta(194, 0xdead_0001, 9, delta)
     }
 
     #[test]
@@ -557,6 +755,27 @@ mod tests {
         let back = CheckpointManifest::from_json(&Json::Object(fields)).unwrap();
         assert_eq!(back, m);
         assert!(!back.is_delta());
+    }
+
+    #[test]
+    fn segment_manifest_roundtrip_and_validation() {
+        let m = segment_manifest();
+        m.validate().unwrap();
+        let back = CheckpointManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        let d = back.delta.as_ref().unwrap();
+        assert_eq!(d.header_len, 100);
+        assert_eq!(d.chunks[1].seg, Some(SegmentRef { seg: 1, offset: 4096 + 640 }));
+        // header chunk must be exactly header_len bytes
+        let mut bad = segment_manifest();
+        bad.delta.as_mut().unwrap().chunks[0].len = 64;
+        bad.total_len -= 36;
+        assert!(bad.validate().is_err(), "header chunk length must equal header_len");
+        // legacy manifests parse with header_len 0 and no seg refs
+        let legacy = CheckpointManifest::from_json(&delta_manifest().to_json()).unwrap();
+        let ld = legacy.delta.as_ref().unwrap();
+        assert_eq!(ld.header_len, 0);
+        assert!(ld.chunks.iter().all(|c| c.seg.is_none()));
     }
 
     #[test]
@@ -587,12 +806,37 @@ mod tests {
     fn chunk_file_names_are_ordered() {
         assert_eq!(DeltaSection::chunk_file(0), "chunk-000000.fpck");
         assert!(DeltaSection::chunk_file(1) < DeltaSection::chunk_file(10));
+        assert_eq!(DeltaSection::segment_file(0), "seg-000000.fpseg");
+        assert!(DeltaSection::segment_file(1) < DeltaSection::segment_file(10));
     }
 
     #[test]
     fn missing_manifest_errors() {
         let dir = crate::io::engine::scratch_dir("manifest-miss").unwrap();
         assert!(CheckpointManifest::load(&dir).is_err());
+        assert!(CheckpointManifest::load_cached(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cached_load_hits_and_invalidates_on_save() {
+        let dir = crate::io::engine::scratch_dir("manifest-cache").unwrap();
+        let m = manifest();
+        m.save(&dir).unwrap();
+        let first = CheckpointManifest::load_cached(&dir).unwrap();
+        assert_eq!(*first, m);
+        let (hits0, _) = manifest_cache_stats();
+        let second = CheckpointManifest::load_cached(&dir).unwrap();
+        assert_eq!(*second, m);
+        let (hits1, _) = manifest_cache_stats();
+        assert!(hits1 > hits0, "unchanged manifest must be served from cache");
+        // overwriting through save() must invalidate, even within mtime
+        // granularity: the fresh parse reflects the new content
+        let mut m2 = manifest();
+        m2.step = 99;
+        m2.save(&dir).unwrap();
+        let third = CheckpointManifest::load_cached(&dir).unwrap();
+        assert_eq!(third.step, 99, "stale cached parse served after overwrite");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -17,9 +17,11 @@
 //! * [`manifest`] — the per-checkpoint manifest tying partitions back
 //!   into one logical stream.
 //! * [`delta`] — chunk-granular incremental checkpointing: diff the
-//!   serialized stream against the previous checkpoint's chunk table,
-//!   write only dirty chunks through the shared runtime, reference the
-//!   rest; with chain compaction and dead-chunk garbage collection.
+//!   serialized stream against the previous checkpoint's chunk table
+//!   (hashed inside the serialization pass), pack dirty chunks into
+//!   device-striped segment files through the shared runtime, reference
+//!   the rest; with chain compaction and segment-granular garbage
+//!   collection.
 
 pub mod delta;
 pub mod engine;

@@ -51,8 +51,10 @@ struct Request {
 }
 
 /// What the helper thread runs per request: a full parallel write or an
-/// incremental delta write. Owned by the helper so stateful writers
-/// (the delta chain diff state) live where the writes happen.
+/// incremental delta write (segment-packed — the helper inherits the
+/// same bounded WriteJob/fsync profile as synchronous delta writes).
+/// Owned by the helper so stateful writers (the delta chain diff state)
+/// live where the writes happen.
 enum HelperWriter {
     Full { engine: CheckpointEngine, group: Vec<RankPlacement> },
     Delta(DeltaCheckpointer),
@@ -301,8 +303,10 @@ mod tests {
             io: IoConfig::fastpersist().microbench(),
             ..IoRuntimeConfig::default()
         }));
-        let ckpt =
-            DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: 4096, max_chain: 8 });
+        let ckpt = DeltaCheckpointer::new(
+            rt,
+            DeltaConfig { chunk_size: 4096, max_chain: 8, ..DeltaConfig::default() },
+        );
         let mut pipe = PipelinedCheckpointer::delta(ckpt);
         for i in 0..4i64 {
             pipe.wait_previous().unwrap();

@@ -13,7 +13,10 @@
 //! `i % n_devices` of the runtime's [`crate::io::DeviceMap`] — a pure
 //! function of the plan, so writers and loaders agree without
 //! communication (the assignment is additionally recorded per partition
-//! in the checkpoint manifest).
+//! in the checkpoint manifest). The delta layer's segment stores reuse
+//! exactly this striping with the *segment index* as the key, so
+//! partitioned full checkpoints and segment-packed incremental ones
+//! spread over the same devices the same way.
 
 use crate::checkpoint::strategy::WriterStrategy;
 use crate::cluster::topology::RankPlacement;

@@ -6,7 +6,10 @@
 //! this reproduction — see ARCHITECTURE.md). Checkpoint partitions are striped
 //! round-robin across the devices, so a DP=8 checkpoint over a 4-device
 //! map keeps all four SSDs writing concurrently instead of funneling
-//! every partition through one filesystem.
+//! every partition through one filesystem. The delta layer's segment
+//! stores ([`crate::checkpoint::delta`]) ride the same routing, keyed
+//! by segment index — and size their segment count to at least the
+//! device count, so even a small base keeps every SSD writing.
 //!
 //! Routing is a pure function of `(map, partition index)` — every rank
 //! computes the same assignment without communication, preserving §4.2's

@@ -124,9 +124,8 @@ impl WriteEngine for DirectEngine {
             }
             None => self.cfg.io_buf_size,
         };
-        let direct_file = Arc::new(direct_file);
         let writer = StagedWriter::new(
-            Arc::clone(&direct_file),
+            Arc::new(direct_file),
             self.pool.clone(),
             self.drain.clone(),
             self.max_inflight(),
@@ -134,7 +133,6 @@ impl WriteEngine for DirectEngine {
         );
         Ok(Box::new(DirectSink {
             writer: Some(writer),
-            direct_file,
             suffix_file,
             sync: self.cfg.sync_on_finish,
             o_direct,
@@ -145,7 +143,6 @@ impl WriteEngine for DirectEngine {
 
 struct DirectSink {
     writer: Option<StagedWriter>,
-    direct_file: Arc<File>,
     suffix_file: File,
     sync: bool,
     o_direct: bool,
@@ -166,17 +163,21 @@ impl Sink for DirectSink {
         }
         // Trim pre-allocation padding to the logical length.
         self.suffix_file.set_len(total)?;
+        let mut fsyncs = 0;
         if self.sync {
-            // O_DIRECT bypasses the page cache but not the device cache;
-            // the suffix went through the page cache regardless.
+            // fdatasync is per-inode, not per-descriptor: one call
+            // covers bytes written through both paths (O_DIRECT bypasses
+            // the page cache but not the device cache; the suffix went
+            // through the page cache regardless).
             self.suffix_file.sync_data()?;
-            self.direct_file.sync_data()?;
+            fsyncs = 1;
         }
         Ok(WriteStats {
             total_bytes: total,
             aligned_bytes: drain.bytes,
             suffix_bytes: suffix.len() as u64,
             write_ops: drain.ops + u64::from(!suffix.is_empty()),
+            fsyncs,
             elapsed: self.start.elapsed(),
             o_direct: self.o_direct,
         })

@@ -140,6 +140,11 @@ pub struct WriteStats {
     pub suffix_bytes: u64,
     /// Number of storage write ops issued.
     pub write_ops: u64,
+    /// Number of fsync/fdatasync calls issued at finish (0 when
+    /// durability is off, e.g. [`IoConfig::microbench`]). The
+    /// coalescing win of segment stores shows up here: a base
+    /// checkpoint costs one fsync per *segment*, not per chunk.
+    pub fsyncs: u64,
     /// Wall time from sink creation to durable finish.
     pub elapsed: Duration,
     /// Whether O_DIRECT was actually engaged.

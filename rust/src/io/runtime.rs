@@ -73,6 +73,20 @@ pub enum WriteSource {
     /// Byte range `[start, end)` of a serialized checkpoint (a
     /// partition).
     Range { ser: Arc<SerializedCheckpoint>, start: u64, end: u64 },
+    /// A segment store (see [`crate::checkpoint::delta`]): an encoded
+    /// segment header followed by a set of stream byte ranges of one
+    /// serialized checkpoint, packed back to back. This is how a base
+    /// checkpoint's N dirty chunks become one large sequential write
+    /// (one file, one fsync) instead of N small ones.
+    Chunks {
+        /// The serialized checkpoint the ranges index into.
+        ser: Arc<SerializedCheckpoint>,
+        /// Segment-header bytes written before the first chunk.
+        prefix: Vec<u8>,
+        /// Stream byte ranges `[start, end)`, written in order after
+        /// `prefix`.
+        ranges: Vec<(u64, u64)>,
+    },
     /// A raw byte buffer (microbenchmarks, single-file helpers).
     Bytes(Arc<Vec<u8>>),
 }
@@ -82,6 +96,9 @@ impl WriteSource {
     pub fn len(&self) -> u64 {
         match self {
             WriteSource::Range { start, end, .. } => end - start,
+            WriteSource::Chunks { prefix, ranges, .. } => {
+                prefix.len() as u64 + ranges.iter().map(|(s, e)| e - s).sum::<u64>()
+            }
             WriteSource::Bytes(b) => b.len() as u64,
         }
     }
@@ -94,6 +111,12 @@ impl WriteSource {
     fn write_to(&self, sink: &mut dyn Sink) -> Result<()> {
         match self {
             WriteSource::Range { ser, start, end } => ser.write_range_to(*start, *end, sink),
+            WriteSource::Chunks { ser, prefix, ranges } => {
+                if !prefix.is_empty() {
+                    sink.write(prefix)?;
+                }
+                ser.write_ranges_to(ranges, sink)
+            }
             WriteSource::Bytes(b) => sink.write(b.as_slice()),
         }
     }
@@ -119,6 +142,19 @@ impl WriteJob {
     /// A raw-bytes job with the runtime's default engine kind.
     pub fn bytes(data: Arc<Vec<u8>>, path: PathBuf) -> WriteJob {
         WriteJob { source: WriteSource::Bytes(data), path, kind: None }
+    }
+
+    /// A segment-store job: `prefix` (segment header) followed by the
+    /// given stream ranges of `ser`, with the runtime's default engine
+    /// kind. One such job is one file and one fsync, however many
+    /// chunks it packs.
+    pub fn chunks(
+        ser: Arc<SerializedCheckpoint>,
+        prefix: Vec<u8>,
+        ranges: Vec<(u64, u64)>,
+        path: PathBuf,
+    ) -> WriteJob {
+        WriteJob { source: WriteSource::Chunks { ser, prefix, ranges }, path, kind: None }
     }
 
     /// Override the engine kind for this job only.
@@ -315,6 +351,39 @@ mod tests {
             "steady-state submissions must not allocate staging buffers"
         );
         assert!(rt.staging().acquires() > 0, "direct path must use the shared pool");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chunks_source_writes_prefix_and_ranges() {
+        use crate::serialize::writer::SerializedCheckpoint;
+        use crate::tensor::{DType, Tensor, TensorStore};
+        let dir = scratch_dir("rt-chunks").unwrap();
+        let rt = runtime_with(2, 8 << 10);
+        let mut s = TensorStore::new();
+        let mut data = vec![0u8; 50_000];
+        Rng::new(9).fill_bytes(&mut data);
+        s.push(Tensor::new("w", DType::U8, vec![50_000], data).unwrap()).unwrap();
+        let ser = Arc::new(SerializedCheckpoint::new(&s, Default::default()));
+        let full = ser.to_bytes();
+        let total = ser.total_len();
+        let prefix = vec![7u8; 64];
+        let ranges = vec![(0u64, 1000u64), (30_000, 35_000), (total - 11, total)];
+        let stats = rt
+            .submit(WriteJob::chunks(
+                Arc::clone(&ser),
+                prefix.clone(),
+                ranges.clone(),
+                dir.join("seg.bin"),
+            ))
+            .wait()
+            .unwrap();
+        let mut expect = prefix;
+        for (s0, e0) in ranges {
+            expect.extend_from_slice(&full[s0 as usize..e0 as usize]);
+        }
+        assert_eq!(stats.total_bytes, expect.len() as u64);
+        assert_eq!(std::fs::read(dir.join("seg.bin")).unwrap(), expect);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

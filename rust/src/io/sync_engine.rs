@@ -81,6 +81,7 @@ impl Sink for BufferedSink {
         let file = self.writer.into_inner().map_err(|e| e.into_error())?;
         if self.sync {
             file.sync_data()?;
+            self.stats.fsyncs = 1;
         }
         self.stats.suffix_bytes = self.stats.total_bytes; // all traditional path
         self.stats.elapsed = self.start.elapsed();

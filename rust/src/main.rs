@@ -108,6 +108,9 @@ fn train_spec(name: &'static str) -> ArgSpec {
         .opt("ga", "gradient accumulation steps", "1")
         .opt("seed", "init/data seed", "0")
         .opt("keep-last", "checkpoints retained (0=all)", "3")
+        .opt("gc-occupancy", "segment-GC rewrite threshold in [0,1]: demoted \
+                              chunk stores below this live-byte occupancy are \
+                              sparsely rewritten", "0.5")
         .opt("log-every", "progress print interval", "10")
 }
 
@@ -151,6 +154,7 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
         grad_accum: parsed.get_usize("ga")? as u64,
         seed: parsed.get_usize("seed")? as u64,
         keep_last: parsed.get_usize("keep-last")?,
+        gc_occupancy: parsed.get_f64("gc-occupancy")?.clamp(0.0, 1.0),
         log_every: parsed.get_usize("log-every")? as u64,
     };
     let mut trainer = if resume {
@@ -185,6 +189,16 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
             human(written as u64),
             human(trainer.state.checkpoint_bytes()),
             trainer.cfg.ckpt_strategy.name(),
+        );
+    }
+    let jobs = r.total("ckpt_write_jobs");
+    if jobs > 0.0 {
+        println!(
+            "ckpt write jobs {:.0} total ({:.1}/ckpt), fsyncs {:.0} total \
+             (jobs are segments under --ckpt delta, partitions under full)",
+            jobs,
+            r.summary("ckpt_write_jobs").mean,
+            r.total("ckpt_fsyncs"),
         );
     }
     Ok(())

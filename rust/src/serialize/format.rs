@@ -13,6 +13,30 @@
 //! training state (step counter, data-iterator cursor, LR schedule), the
 //! data-section length, and a 64-bit digest of the data section for
 //! integrity verification at load.
+//!
+//! # Examples
+//!
+//! [`ChunkedChecksum`] digests a byte section **and** its fixed-size
+//! chunk grid in one pass — the primitive that lets
+//! [`crate::checkpoint::delta`] fold dirty-chunk hashing into the
+//! serialization pass instead of re-reading the whole state:
+//!
+//! ```
+//! use fastpersist::serialize::format::{checksum64_slice, ChunkedChecksum};
+//!
+//! let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+//! let mut cc = ChunkedChecksum::new(4096);
+//! cc.update(&data[..1000]); // any chunking of the input
+//! cc.update(&data[1000..]);
+//! let (whole, grid) = cc.finalize();
+//!
+//! // the section digest equals the plain one-shot checksum ...
+//! assert_eq!(whole, checksum64_slice(&data));
+//! // ... and each grid entry equals the checksum of its slice
+//! assert_eq!(grid.len(), 3);
+//! assert_eq!(grid[0].hash, checksum64_slice(&data[..4096]));
+//! assert_eq!(grid[2].len, 10_000 - 2 * 4096);
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -177,6 +201,75 @@ impl Checksum64 {
             self.mix(word);
         }
         self.h
+    }
+}
+
+/// Hash + length of one chunk of a digested byte section — the unit of
+/// dirty-chunk diffing in [`crate::checkpoint::delta`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkDigest {
+    /// Streaming checksum of the chunk's bytes (equals
+    /// [`checksum64_slice`] over the same slice).
+    pub hash: u64,
+    /// Chunk length in bytes (== grid size except for the final chunk).
+    pub len: u64,
+}
+
+/// Single-pass section digest **plus** fixed-grid chunk digests.
+///
+/// Feeding the same bytes in any split produces the same results
+/// (chunking-invariant, like [`Checksum64`]). The section digest equals
+/// [`checksum64`] over the full input; chunk `i`'s hash equals
+/// [`checksum64_slice`] of input bytes `[i*chunk_size, ...)`. This is
+/// how serialization hands the delta layer its chunk grid without a
+/// second pass over the state bytes (see the module example).
+#[derive(Debug, Clone)]
+pub struct ChunkedChecksum {
+    chunk_size: u64,
+    whole: Checksum64,
+    cur: Checksum64,
+    filled: u64,
+    chunks: Vec<ChunkDigest>,
+}
+
+impl ChunkedChecksum {
+    /// A fresh digest over a `chunk_size`-byte grid (must be nonzero).
+    pub fn new(chunk_size: u64) -> ChunkedChecksum {
+        assert!(chunk_size > 0, "chunk_size must be positive");
+        ChunkedChecksum {
+            chunk_size,
+            whole: Checksum64::new(),
+            cur: Checksum64::new(),
+            filled: 0,
+            chunks: Vec::new(),
+        }
+    }
+
+    /// Feed bytes (any chunking); grid boundaries are tracked internally.
+    pub fn update(&mut self, data: &[u8]) {
+        self.whole.update(data);
+        let mut rest = data;
+        while !rest.is_empty() {
+            let room = (self.chunk_size - self.filled).min(rest.len() as u64) as usize;
+            self.cur.update(&rest[..room]);
+            self.filled += room as u64;
+            rest = &rest[room..];
+            if self.filled == self.chunk_size {
+                let done = std::mem::replace(&mut self.cur, Checksum64::new());
+                self.chunks.push(ChunkDigest { hash: done.finalize(), len: self.chunk_size });
+                self.filled = 0;
+            }
+        }
+    }
+
+    /// Consume the state: `(section digest, chunk grid)`. A trailing
+    /// partial chunk becomes the final (short) grid entry; empty input
+    /// yields an empty grid.
+    pub fn finalize(mut self) -> (u64, Vec<ChunkDigest>) {
+        if self.filled > 0 {
+            self.chunks.push(ChunkDigest { hash: self.cur.finalize(), len: self.filled });
+        }
+        (self.whole.finalize(), self.chunks)
     }
 }
 
@@ -388,6 +481,53 @@ mod tests {
         let mut c = a.clone();
         c.push(0);
         assert_ne!(checksum64_slice(&a), checksum64_slice(&c));
+    }
+
+    #[test]
+    fn chunked_checksum_matches_slice_checksums() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(3 * 4096 + 123).collect();
+        let mut cc = ChunkedChecksum::new(4096);
+        // feed in awkward pieces spanning grid boundaries
+        cc.update(&data[..5000]);
+        cc.update(&data[5000..5001]);
+        cc.update(&data[5001..]);
+        let (whole, grid) = cc.finalize();
+        assert_eq!(whole, checksum64_slice(&data));
+        assert_eq!(grid.len(), 4);
+        let mut off = 0usize;
+        for (i, ch) in grid.iter().enumerate() {
+            let end = off + ch.len as usize;
+            assert_eq!(ch.hash, checksum64_slice(&data[off..end]), "chunk {i}");
+            off = end;
+        }
+        assert_eq!(off, data.len());
+        // exact-multiple input has no short tail chunk
+        let mut cc = ChunkedChecksum::new(64);
+        cc.update(&data[..128]);
+        let (_, grid) = cc.finalize();
+        assert_eq!(grid.len(), 2);
+        assert!(grid.iter().all(|c| c.len == 64));
+        // empty input: empty grid, digest of nothing
+        let (whole, grid) = ChunkedChecksum::new(64).finalize();
+        assert_eq!(whole, checksum64_slice(&[]));
+        assert!(grid.is_empty());
+    }
+
+    #[test]
+    fn prop_chunked_checksum_split_invariance() {
+        crate::prop::forall("chunked checksum split-invariant", 32, |g| {
+            let len = g.usize(0, 3000);
+            let mut data = vec![0u8; len];
+            crate::util::rng::Rng::new(g.u64(0, u64::MAX)).fill_bytes(&mut data);
+            let cs = g.usize(1, 600) as u64;
+            let split = g.usize(0, len);
+            let mut a = ChunkedChecksum::new(cs);
+            a.update(&data);
+            let mut b = ChunkedChecksum::new(cs);
+            b.update(&data[..split]);
+            b.update(&data[split..]);
+            a.finalize() == b.finalize()
+        });
     }
 
     #[test]

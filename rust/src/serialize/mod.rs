@@ -5,8 +5,10 @@
 //! the tensor payloads in declaration order, closed by a digest. The
 //! stream abstraction matters: FastPersist's DP write parallelism
 //! partitions the *serialized stream* at byte granularity (§4.2), so
-//! [`writer::SerializedCheckpoint::write_range`] can emit any byte
-//! subrange without materializing the whole stream.
+//! [`writer::SerializedCheckpoint::write_range_to`] can emit any byte
+//! subrange without materializing the whole stream — and
+//! [`writer::SerializedCheckpoint::new_chunked`] folds the delta
+//! layer's chunk-grid hashing into the same single serialization pass.
 
 pub mod format;
 pub mod reader;

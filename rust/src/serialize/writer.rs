@@ -11,7 +11,9 @@ use std::collections::BTreeMap;
 
 use crate::io::pending_queue::PendingQueue;
 use crate::io::Sink;
-use crate::serialize::format::{checksum64, checksum64_slice, combine_digests, FormatHeader};
+use crate::serialize::format::{
+    checksum64, checksum64_slice, combine_digests, ChunkDigest, ChunkedChecksum, FormatHeader,
+};
 use crate::tensor::TensorStore;
 use crate::util::json::Json;
 use crate::Result;
@@ -28,6 +30,10 @@ pub struct SerializedCheckpoint {
     /// the single serialization-time payload pass — the checkpoint
     /// engine records this in the manifest without re-hashing.
     stream_digest: u64,
+    /// `(chunk_size, grid)` when built via
+    /// [`SerializedCheckpoint::new_chunked`]: chunk 0 is the whole
+    /// header, chunks 1.. tile the data section on the fixed grid.
+    chunk_grid: Option<(u64, Vec<ChunkDigest>)>,
 }
 
 impl SerializedCheckpoint {
@@ -44,7 +50,56 @@ impl SerializedCheckpoint {
             FormatHeader { tensors: snapshot.metas(), extra, data_len, digest: data_digest };
         let header_bytes = header.encode();
         let stream_digest = combine_digests(checksum64_slice(&header_bytes), data_digest);
-        SerializedCheckpoint { header_bytes, snapshot, data_len, stream_digest }
+        SerializedCheckpoint { header_bytes, snapshot, data_len, stream_digest, chunk_grid: None }
+    }
+
+    /// Like [`SerializedCheckpoint::new`], additionally computing the
+    /// delta layer's chunk grid **inside** the same single payload pass
+    /// (a [`ChunkedChecksum`] feeds both the data digest and the
+    /// per-chunk hashes, so delta creation makes exactly one CPU pass
+    /// over the state bytes).
+    ///
+    /// The grid is header-split: chunk 0 covers the encoded header
+    /// (whatever its padded length), chunks 1.. tile the data section in
+    /// `chunk_size` steps. Keeping the grid *data-relative* means a
+    /// header that grows past a padding boundary shifts no data chunk —
+    /// only chunk 0 changes.
+    pub fn new_chunked(
+        store: &TensorStore,
+        extra: BTreeMap<String, Json>,
+        chunk_size: u64,
+    ) -> SerializedCheckpoint {
+        assert!(chunk_size > 0, "chunk_size must be positive");
+        let snapshot = store.snapshot();
+        let data_len = snapshot.total_bytes();
+        let mut cc = ChunkedChecksum::new(chunk_size);
+        for t in snapshot.iter() {
+            cc.update(t.data.as_slice());
+        }
+        let (data_digest, data_grid) = cc.finalize();
+        let header =
+            FormatHeader { tensors: snapshot.metas(), extra, data_len, digest: data_digest };
+        let header_bytes = header.encode();
+        let header_digest = checksum64_slice(&header_bytes);
+        let stream_digest = combine_digests(header_digest, data_digest);
+        let mut grid = Vec::with_capacity(data_grid.len() + 1);
+        grid.push(ChunkDigest { hash: header_digest, len: header_bytes.len() as u64 });
+        grid.extend(data_grid);
+        SerializedCheckpoint {
+            header_bytes,
+            snapshot,
+            data_len,
+            stream_digest,
+            chunk_grid: Some((chunk_size, grid)),
+        }
+    }
+
+    /// The chunk grid computed during serialization, as
+    /// `(chunk_size, chunks)` — `None` unless built via
+    /// [`SerializedCheckpoint::new_chunked`]. Chunk 0 is the header;
+    /// the chunks tile the stream contiguously in order.
+    pub fn chunk_grid(&self) -> Option<(u64, &[ChunkDigest])> {
+        self.chunk_grid.as_ref().map(|(cs, g)| (*cs, g.as_slice()))
     }
 
     /// Total length of the logical stream (header + data).
@@ -118,6 +173,20 @@ impl SerializedCheckpoint {
         self.emit_range(start, end, &mut |piece| {
             queue.append(piece, |block| sink.write(block))
         })?;
+        queue.drain(|block| sink.write(block))
+    }
+
+    /// Write several stream ranges back to back through **one** pending
+    /// queue — the segment-store write of [`crate::checkpoint::delta`]:
+    /// non-adjacent dirty chunks coalesce into the large sequential
+    /// writes the NVMe path wants, instead of one small file each.
+    pub fn write_ranges_to(&self, ranges: &[(u64, u64)], sink: &mut dyn Sink) -> Result<()> {
+        let mut queue = PendingQueue::new(COALESCE);
+        for &(start, end) in ranges {
+            self.emit_range(start, end, &mut |piece| {
+                queue.append(piece, |block| sink.write(block))
+            })?;
+        }
         queue.drain(|block| sink.write(block))
     }
 
@@ -202,6 +271,57 @@ mod tests {
             crate::serialize::format::stream_digest_of(&bytes).unwrap(),
             "single-pass digest must equal the digest of the assembled stream"
         );
+    }
+
+    #[test]
+    fn chunked_serialization_grid_matches_slice_checksums() {
+        use crate::serialize::format::checksum64_slice;
+        const CS: u64 = 1024;
+        let s = store(9, &[3000, 17, 2048]);
+        let ser = SerializedCheckpoint::new_chunked(&s, BTreeMap::new(), CS);
+        let bytes = ser.to_bytes();
+        let (cs, grid) = ser.chunk_grid().unwrap();
+        assert_eq!(cs, CS);
+        // chunk 0 is the whole header; the rest tile the data section
+        assert_eq!(grid[0].len, ser.header_len());
+        assert_eq!(grid.len(), 1 + (ser.data_len() as usize).div_ceil(CS as usize));
+        let mut off = 0usize;
+        for (i, ch) in grid.iter().enumerate() {
+            let end = off + ch.len as usize;
+            assert_eq!(ch.hash, checksum64_slice(&bytes[off..end]), "chunk {i}");
+            off = end;
+        }
+        assert_eq!(off, bytes.len());
+        // digest identical to the unchunked constructor's
+        let plain = SerializedCheckpoint::new(&s, BTreeMap::new());
+        assert_eq!(ser.stream_digest(), plain.stream_digest());
+        assert!(plain.chunk_grid().is_none());
+    }
+
+    #[test]
+    fn write_ranges_concatenates_in_order() {
+        struct VecSink(Vec<u8>);
+        impl crate::io::Sink for VecSink {
+            fn write(&mut self, data: &[u8]) -> Result<()> {
+                self.0.extend_from_slice(data);
+                Ok(())
+            }
+            fn finish(self: Box<Self>) -> Result<crate::io::engine::WriteStats> {
+                Ok(Default::default())
+            }
+        }
+        let s = store(3, &[5000, 300]);
+        let ser = SerializedCheckpoint::new(&s, BTreeMap::new());
+        let full = ser.to_bytes();
+        let total = ser.total_len();
+        let ranges = [(0u64, 100u64), (4000, 4500), (total - 7, total)];
+        let mut sink = VecSink(Vec::new());
+        ser.write_ranges_to(&ranges, &mut sink).unwrap();
+        let mut expect = Vec::new();
+        for (s0, e0) in ranges {
+            expect.extend_from_slice(&full[s0 as usize..e0 as usize]);
+        }
+        assert_eq!(sink.0, expect);
     }
 
     #[test]

@@ -97,6 +97,12 @@ pub struct TrainerConfig {
     pub seed: u64,
     /// Keep only the most recent k checkpoints (0 = keep all).
     pub keep_last: usize,
+    /// Segment-GC occupancy threshold (see
+    /// [`crate::checkpoint::delta::GcPolicy`]): demoted chunk stores
+    /// whose live-byte occupancy falls below this are sparsely
+    /// rewritten during pruning. 0.0 never rewrites; 1.0 rewrites on
+    /// any dead chunk.
+    pub gc_occupancy: f64,
     /// Print a progress line every n steps (0 = silent).
     pub log_every: u64,
 }
@@ -119,6 +125,7 @@ impl TrainerConfig {
             grad_accum: 1,
             seed: 0,
             keep_last: 2,
+            gc_occupancy: delta::GcPolicy::default().occupancy,
             log_every: 0,
         }
     }
@@ -293,29 +300,33 @@ impl Trainer {
         })
     }
 
-    /// Record latency + written-bytes metrics for pipelined checkpoints
-    /// that completed since the last harvest (the helper's
-    /// [`crate::checkpoint::CheckpointOutcome`]s carry
-    /// per-partition/per-chunk [`crate::io::WriteStats`]; summing their
-    /// `total_bytes` gives the bytes actually written — for deltas,
-    /// dirty chunks only).
+    /// Record latency + written-bytes + write-job/fsync metrics for
+    /// pipelined checkpoints that completed since the last harvest.
+    /// `written_bytes` is the outcome's payload accounting (for deltas,
+    /// dirty chunks only — the same quantity Sync mode records, so the
+    /// metric is comparable across modes), while job/fsync counts come
+    /// from the per-partition/per-segment [`crate::io::WriteStats`].
     fn harvest_pipe_outcomes(&mut self) {
-        let harvested: Vec<(f64, u64)> = match self.pipe.as_ref() {
+        let harvested: Vec<(f64, u64, u64, u64)> = match self.pipe.as_ref() {
             Some(pipe) => pipe.completed[self.pipe_seen..]
                 .iter()
                 .map(|o| {
                     (
                         o.latency.as_secs_f64(),
-                        o.stats.iter().map(|s| s.total_bytes).sum::<u64>(),
+                        o.written_bytes,
+                        o.stats.len() as u64,
+                        o.stats.iter().map(|s| s.fsyncs).sum::<u64>(),
                     )
                 })
                 .collect(),
             None => return,
         };
         self.pipe_seen += harvested.len();
-        for (latency, bytes) in harvested {
+        for (latency, bytes, jobs, fsyncs) in harvested {
             self.recorder.record("ckpt_latency_s", latency);
             self.recorder.record("ckpt_written_bytes", bytes as f64);
+            self.recorder.record("ckpt_write_jobs", jobs as f64);
+            self.recorder.record("ckpt_fsyncs", fsyncs as f64);
         }
     }
 
@@ -456,6 +467,8 @@ impl Trainer {
                     self.recorder.record("stall_s", ck.secs());
                     self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
                     self.recorder.record("ckpt_written_bytes", out.written_bytes as f64);
+                    self.recorder.record("ckpt_write_jobs", out.segments_written as f64);
+                    self.recorder.record("ckpt_fsyncs", out.fsyncs as f64);
                     self.recorder.count("ckpts", 1);
                 }
                 // Baseline and Sync share the persistent engine built at
@@ -467,7 +480,10 @@ impl Trainer {
                     let out = engine.write(&store, extras, &dir, &self.group)?;
                     self.recorder.record("stall_s", ck.secs());
                     self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
-                    self.recorder.record("ckpt_written_bytes", out.total_bytes as f64);
+                    self.recorder.record("ckpt_written_bytes", out.written_bytes as f64);
+                    self.recorder.record("ckpt_write_jobs", out.stats.len() as f64);
+                    self.recorder
+                        .record("ckpt_fsyncs", out.stats.iter().map(|s| s.fsyncs).sum::<u64>() as f64);
                     self.recorder.count("ckpts", 1);
                 }
                 CkptRunMode::Pipelined => {
@@ -490,19 +506,22 @@ impl Trainer {
     /// strategy: full manifests reference no foreign chunks and are
     /// simply removed when old, while directories whose chunks are still
     /// referenced by kept deltas — including chains left by a *previous*
-    /// run with a different strategy — are demoted to chunk stores and
-    /// their dead chunks reclaimed. GC uses the runtime's device map
-    /// (the one writes were actually routed with); `cfg.devices` may be
-    /// a stale default when a shared runtime was injected.
+    /// run with a different strategy — are demoted to chunk stores,
+    /// with segment-granular GC (dead segments deleted, under-occupied
+    /// ones sparsely rewritten per `cfg.gc_occupancy`). GC uses the
+    /// runtime's device map (the one writes were actually routed with);
+    /// `cfg.devices` may be a stale default when a shared runtime was
+    /// injected.
     fn prune_old(&self, newest: u64) -> Result<()> {
         if self.cfg.keep_last == 0 {
             return Ok(());
         }
-        delta::prune_chain(
+        delta::prune_chain_with(
             &self.cfg.ckpt_dir,
             self.cfg.keep_last,
             self.io_runtime.devices(),
             Some(newest),
+            delta::GcPolicy { occupancy: self.cfg.gc_occupancy },
         )?;
         Ok(())
     }
@@ -634,8 +653,11 @@ mod tests {
         cfg.steps = 5;
         cfg.keep_last = 0;
         cfg.mode = CkptRunMode::Sync;
-        cfg.ckpt_strategy =
-            CheckpointStrategy::Delta(DeltaConfig { chunk_size: 4096, max_chain: 8 });
+        cfg.ckpt_strategy = CheckpointStrategy::Delta(DeltaConfig {
+            chunk_size: 4096,
+            max_chain: 8,
+            ..DeltaConfig::default()
+        });
         let mut t = Trainer::new(&m, cfg.clone()).unwrap();
         t.run().unwrap();
         let theta_after5 = t.state.theta.clone();
@@ -646,6 +668,19 @@ mod tests {
             assert!(mf.is_delta(), "step {step}");
             assert_eq!(mf.delta.as_ref().unwrap().chain_len, step - 1);
         }
+        // segment coalescing is visible in the metrics: each delta
+        // checkpoint issued a bounded number of WriteJobs (segments) and
+        // one fsync per job under the durable default config — never
+        // one per chunk
+        let jobs = t.recorder.samples("ckpt_write_jobs").to_vec();
+        assert_eq!(jobs.len(), 5);
+        assert!(jobs.iter().all(|&j| (1.0..=2.0).contains(&j)), "jobs = {jobs:?}");
+        let fsyncs = t.recorder.samples("ckpt_fsyncs").to_vec();
+        assert_eq!(fsyncs.len(), 5);
+        assert!(
+            fsyncs.iter().zip(&jobs).all(|(f, j)| f == j),
+            "durable delta writes fsync once per segment"
+        );
         // a delta-chain resume restores bit-identical state
         let t2 = Trainer::resume(&m, cfg).unwrap();
         assert_eq!(t2.state.step, 5);

@@ -61,6 +61,7 @@ fn interrupted_delta_flush_falls_back_to_last_complete_chain() {
     let mut ck = DeltaCheckpointer::new(Arc::clone(&rt), DeltaConfig {
         chunk_size: CS,
         max_chain: 8,
+        ..DeltaConfig::default()
     });
 
     // healthy chain: base + delta
@@ -96,7 +97,10 @@ fn interrupted_delta_flush_falls_back_to_last_complete_chain() {
     assert_eq!(manifest.delta.as_ref().unwrap().chain_len, 1);
 
     // a restarted writer resumes the chain from the fallback checkpoint
-    let mut ck2 = DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: CS, max_chain: 8 });
+    let mut ck2 = DeltaCheckpointer::new(
+        rt,
+        DeltaConfig { chunk_size: CS, max_chain: 8, ..DeltaConfig::default() },
+    );
     assert!(ck2.resume_from(&latest).unwrap());
     let mut s2 = state_at_2.snapshot();
     mutate(&mut s2, 0.04, 3);
@@ -117,7 +121,10 @@ fn interrupted_delta_flush_falls_back_to_last_complete_chain() {
 fn base_delta_delta_chain_is_bit_identical_through_load() {
     let dir = scratch_dir("delta-chain-e2e").unwrap();
     let rt = runtime();
-    let mut ck = DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: CS, max_chain: 8 });
+    let mut ck = DeltaCheckpointer::new(
+        rt,
+        DeltaConfig { chunk_size: CS, max_chain: 8, ..DeltaConfig::default() },
+    );
     let mut s = store(7, 25 * CS as usize + 777);
     let mut snapshots = Vec::new();
     for step in 1..=3i64 {
@@ -143,14 +150,22 @@ fn base_delta_delta_chain_is_bit_identical_through_load() {
 }
 
 #[test]
-fn compaction_gc_reclaims_dead_chunks_across_prune() {
-    use fastpersist::checkpoint::delta::prune_chain;
+fn compaction_gc_reclaims_dead_segment_bytes_across_prune() {
+    use fastpersist::checkpoint::delta::{prune_chain, prune_chain_with, GcPolicy};
     use fastpersist::io::device::DeviceMap;
 
     let dir = scratch_dir("delta-gc-e2e").unwrap();
     let devices = DeviceMap::single();
-    let rt = runtime();
-    let mut ck = DeltaCheckpointer::new(rt, DeltaConfig { chunk_size: CS, max_chain: 2 });
+    // durable runtime: fsync forces block allocation, so segment GC's
+    // st_blocks-based occupancy accounting sees the real layout
+    let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist(),
+        ..IoRuntimeConfig::default()
+    }));
+    let mut ck = DeltaCheckpointer::new(
+        rt,
+        DeltaConfig { chunk_size: CS, max_chain: 2, ..DeltaConfig::default() },
+    );
     let mut s = store(13, 16 * CS as usize);
     // base(1) <- d(2) <- d(3), then compaction makes 4 a fresh base
     for step in 1..=4i64 {
@@ -159,12 +174,18 @@ fn compaction_gc_reclaims_dead_chunks_across_prune() {
     }
 
     // keep the two newest complete checkpoints: step 4 (base) and
-    // step 3 (delta still referencing steps 1/2's chunks)
-    let stats = prune_chain(&dir, 2, &devices, Some(4)).unwrap();
+    // step 3 (delta still referencing older chunks). Occupancy 1.0:
+    // any dead chunk triggers the sparse segment rewrite.
+    let stats =
+        prune_chain_with(&dir, 2, &devices, Some(4), GcPolicy { occupancy: 1.0 }).unwrap();
     assert_eq!(stats.removed_dirs + stats.demoted_dirs, 2);
     assert!(stats.demoted_dirs >= 1, "referenced ancestors must be demoted, not removed");
-    assert!(stats.removed_chunks > 0, "dead chunks must be reclaimed");
-    // kept checkpoints still load
+    assert!(
+        stats.removed_segments + stats.rewritten_segments > 0,
+        "dead segment bytes must be reclaimed: {stats:?}"
+    );
+    assert!(stats.reclaimed_bytes > 0, "GC must account reclaimed bytes");
+    // kept checkpoints still load (rewrite preserved chunk offsets)
     for step in [3i64, 4] {
         assert!(load_checkpoint(&dir.join(format!("step-{step:08}")), 2).is_ok(), "step {step}");
     }

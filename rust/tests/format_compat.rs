@@ -1,0 +1,93 @@
+//! On-disk format backward compatibility.
+//!
+//! `rust/tests/fixtures/v3/` holds a checked-in two-checkpoint delta
+//! chain in the **manifest v3** layout (uniform whole-stream chunk
+//! grid, one `chunk-NNNNNN.fpck` file per chunk) exactly as written by
+//! the pre-segment-store code. The current (v4, segment-file) reader
+//! must keep reloading it bit-identically — see `docs/FORMATS.md` for
+//! the version matrix.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+use fastpersist::checkpoint::load::load_checkpoint;
+use fastpersist::checkpoint::manifest::CheckpointManifest;
+use fastpersist::io::engine::IoConfig;
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::util::json::Json;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/v3")
+}
+
+/// The deterministic tensor the fixture generator serialized: byte `i`
+/// is `(i * 131 + 7) % 256`, with step 2 XOR-ing `0x5a` over the 10%
+/// region starting at one third.
+fn expected_store(mutated: bool) -> TensorStore {
+    let nbytes = 6 * 4096 + 777;
+    let mut data: Vec<u8> = (0..nbytes).map(|i| ((i * 131 + 7) % 256) as u8).collect();
+    if mutated {
+        let start = nbytes / 3;
+        let n = nbytes / 10;
+        for b in &mut data[start..start + n] {
+            *b ^= 0x5a;
+        }
+    }
+    let mut s = TensorStore::new();
+    s.push(Tensor::new("w", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+    s
+}
+
+#[test]
+fn v3_per_chunk_file_checkpoints_reload_bit_identically() {
+    let dir = fixture_dir();
+    assert!(dir.join("step-00000001").is_dir(), "fixture missing: {dir:?}");
+
+    // the base (all chunks local, per-chunk files)
+    let (base, header, manifest) = load_checkpoint(&dir.join("step-00000001"), 3).unwrap();
+    assert!(base.content_eq(&expected_store(false)), "v3 base reload diverged");
+    assert_eq!(header.extra["step"], Json::Int(1));
+    let delta = manifest.delta.as_ref().expect("fixture base is a delta-layout manifest");
+    assert_eq!(delta.header_len, 0, "v3 manifests use the legacy uniform grid");
+    assert!(delta.chunks.iter().all(|c| c.seg.is_none()), "v3 chunks carry no segment refs");
+
+    // the delta link: clean chunks resolved from the sibling base dir
+    let (linked, header, manifest) = load_checkpoint(&dir.join("step-00000002"), 3).unwrap();
+    assert!(linked.content_eq(&expected_store(true)), "v3 delta reload diverged");
+    assert_eq!(header.extra["step"], Json::Int(2));
+    let delta = manifest.delta.as_ref().unwrap();
+    assert_eq!(delta.chain_len, 1);
+    assert_eq!(delta.base.as_deref(), Some("step-00000001"));
+    assert!(delta.chunks.iter().any(|c| c.source.is_some()), "delta must inherit chunks");
+}
+
+#[test]
+fn v3_manifest_does_not_seed_a_v4_chain() {
+    // A restarted writer pointed at a v3 checkpoint must fall back to
+    // base mode (its uniform grid cannot seed the header-split segment
+    // diff) rather than silently producing a mixed-layout chain.
+    let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        ..IoRuntimeConfig::default()
+    }));
+    let mut ck = DeltaCheckpointer::new(
+        rt,
+        DeltaConfig { chunk_size: 4096, max_chain: 8, ..DeltaConfig::default() },
+    );
+    let resumed = ck.resume_from(&fixture_dir().join("step-00000002")).unwrap();
+    assert!(!resumed, "v3 manifests must not be adopted as chain predecessors");
+    assert_eq!(ck.chain_len(), None);
+}
+
+#[test]
+fn fixture_manifest_reports_version_3() {
+    let text =
+        std::fs::read_to_string(fixture_dir().join("step-00000002/checkpoint.json")).unwrap();
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(v.get("manifest_version").unwrap().as_i64().unwrap(), 3);
+    // and the current writer emits v4
+    assert_eq!(fastpersist::checkpoint::manifest::MANIFEST_VERSION, 4);
+    let _ = CheckpointManifest::from_json(&v).unwrap();
+}

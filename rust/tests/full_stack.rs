@@ -31,6 +31,7 @@ fn cfg(model: &str, dir: PathBuf) -> TrainerConfig {
         grad_accum: 1,
         seed: 42,
         keep_last: 0,
+        gc_occupancy: 0.5,
         log_every: 0,
     }
 }
