@@ -39,6 +39,7 @@ fn run_mode(
         mode,
         strategy: WriterStrategy::AllReplicas,
         ckpt_strategy: CheckpointStrategy::Full,
+        segment_bytes: 64 << 20,
         io: IoConfig::fastpersist().microbench(),
         devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,

@@ -1,0 +1,213 @@
+//! Bench: checkpoint **restore** through the ReadRuntime — full-snapshot
+//! vs delta-chain reloads over 1/2/4 devices, coalesced vs naive read
+//! plans, through one shared [`IoRuntime`].
+//!
+//! The write path has had a measured runtime since PR 1; this bench
+//! makes restore a measured path too. Workload: a checkpoint written as
+//! (a) a DP=8 full snapshot (8 partition files, device-striped) and
+//! (b) a base + 3-delta chain (segment stores, <5% mutation/iter), then
+//! restored repeatedly:
+//!
+//! * **coalesced** — the default plan: byte-adjacent chunks merge into
+//!   single preads ([`fastpersist::io::read::plan_runs`]);
+//! * **naive** — `RestoreOptions { coalesce: false }`: one pread per
+//!   chunk, the pre-ReadRuntime behavior.
+//!
+//! Row names carry the job/run/pread counters so the coalescing effect
+//! is visible next to the latency; the counter relation
+//! `preads(coalesced) <= preads(naive)` is asserted (deterministic),
+//! and the 4-device sweep prints the latency comparison the acceptance
+//! criterion reads from `BENCH_load.json`.
+//!
+//!     cargo bench --bench load_restore
+//!     FASTPERSIST_BENCH_FAST=1 cargo bench --bench load_restore   (CI-speed)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastpersist::benchkit::{write_bench_json, BenchGroup, BenchResult};
+use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+use fastpersist::checkpoint::engine::CheckpointEngine;
+use fastpersist::checkpoint::load::{load_checkpoint_with, LoadedCheckpoint, RestoreOptions};
+use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::cluster::topology::RankPlacement;
+use fastpersist::io::device::DeviceMap;
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::util::bytes::human;
+use fastpersist::util::json::Json;
+use fastpersist::util::rng::Rng;
+use fastpersist::util::stats::Summary;
+use fastpersist::util::table::Table;
+
+fn extra(step: u64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Int(step as i64));
+    m
+}
+
+fn payload_store(payload: usize) -> TensorStore {
+    let mut store = TensorStore::new();
+    let mut data = vec![0u8; payload];
+    Rng::new(11).fill_bytes(&mut data);
+    store.push(Tensor::new("params", DType::U8, vec![payload], data).unwrap()).unwrap();
+    store
+}
+
+fn mutate(store: &mut TensorStore, frac: f64, step: u64) {
+    let t = store.get("params").unwrap();
+    let mut data = t.data.as_slice().to_vec();
+    let n = ((data.len() as f64) * frac) as usize;
+    let start = (step as usize * 3 * n) % (data.len() - n.max(1));
+    Rng::new(step ^ 0x10ad).fill_bytes(&mut data[start..start + n]);
+    store.update("params", data).unwrap();
+}
+
+fn dp_group(n: usize) -> Vec<RankPlacement> {
+    (0..n).map(|r| RankPlacement { rank: r, node: 0, socket: r % 2, local_gpu: r }).collect()
+}
+
+/// Restore `reps` times; returns (latency summary, last load) and
+/// sanity-checks the content every time.
+fn measure(
+    dir: &std::path::Path,
+    runtime: &IoRuntime,
+    opts: RestoreOptions,
+    reps: usize,
+    expect: &TensorStore,
+) -> (Summary, LoadedCheckpoint) {
+    let mut lat = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let loaded = load_checkpoint_with(dir, runtime, opts).unwrap();
+        lat.push(t0.elapsed().as_secs_f64());
+        assert!(loaded.store.content_eq(expect), "restore diverged at {dir:?}");
+        last = Some(loaded);
+    }
+    (Summary::of(&lat), last.unwrap())
+}
+
+fn row(label: String, summary: Summary, loaded: &LoadedCheckpoint) -> BenchResult {
+    BenchResult {
+        name: format!(
+            "{label} ({} jobs, {} runs, {} preads, {} coalesced)",
+            loaded.stats.jobs, loaded.stats.runs, loaded.stats.preads, loaded.stats.coalesced
+        ),
+        summary,
+        bytes_per_iter: Some(loaded.manifest.total_len),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
+    let payload: usize = if fast { 8 << 20 } else { 32 << 20 };
+    let reps: usize = if fast { 3 } else { 7 };
+    let chunk_size: u64 = 256 << 10;
+    let chain_deltas: u64 = 3;
+
+    let base = scratch_dir("bench-load").unwrap();
+    let mut groups: Vec<BenchGroup> = Vec::new();
+    let mut four_dev: Option<(Summary, Summary)> = None;
+
+    for ndev in [1usize, 2, 4] {
+        let devices = if ndev == 1 {
+            DeviceMap::single()
+        } else {
+            DeviceMap::simulated(ndev, &base.join(format!("ssds{ndev}"))).unwrap()
+        };
+        let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist().microbench(),
+            devices,
+            writer_threads: 8,
+            reader_threads: 8,
+            ..IoRuntimeConfig::default()
+        }));
+        runtime.staging().prewarm();
+        let root = base.join(format!("dev{ndev}"));
+
+        // (a) full snapshot, DP=8
+        let engine =
+            CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas);
+        let full_store = payload_store(payload);
+        let full_dir = root.join("full");
+        engine.write(&full_store, extra(0), &full_dir, &dp_group(8)).unwrap();
+
+        // (b) base + Δ³ chain, segment stores
+        let mut delta = DeltaCheckpointer::new(
+            Arc::clone(&runtime),
+            DeltaConfig { chunk_size, max_chain: u64::MAX, ..DeltaConfig::default() },
+        );
+        let mut chain_store = payload_store(payload);
+        delta.write(&chain_store, extra(0), &root.join("chain/step-00000000")).unwrap();
+        let mut tail = root.join("chain/step-00000000");
+        for step in 1..=chain_deltas {
+            mutate(&mut chain_store, 0.04, step);
+            tail = root.join(format!("chain/step-{step:08}"));
+            delta.write(&chain_store, extra(step), &tail).unwrap();
+        }
+
+        let mut group = BenchGroup::new(&format!(
+            "restore {} over {ndev} device(s): full vs delta chain, coalesced vs naive",
+            human(payload as u64)
+        ));
+        let coalesced = RestoreOptions::default();
+        let naive = RestoreOptions { coalesce: false };
+
+        let (s, l) = measure(&full_dir, &runtime, coalesced, reps, &full_store);
+        group.results.push(row(format!("full dp8 {ndev}dev coalesced"), s, &l));
+        let (s, l) = measure(&full_dir, &runtime, naive, reps, &full_store);
+        group.results.push(row(format!("full dp8 {ndev}dev naive"), s, &l));
+
+        let (cs, cl) = measure(&tail, &runtime, coalesced, reps, &chain_store);
+        group.results.push(row(format!("delta-chain {ndev}dev coalesced"), cs.clone(), &cl));
+        let (ns, nl) = measure(&tail, &runtime, naive, reps, &chain_store);
+        group.results.push(row(format!("delta-chain {ndev}dev naive"), ns.clone(), &nl));
+
+        // deterministic acceptance: coalescing only removes preads
+        assert!(
+            cl.stats.preads <= nl.stats.preads,
+            "coalesced plan must not issue more preads ({} vs {})",
+            cl.stats.preads,
+            nl.stats.preads
+        );
+        assert!(cl.stats.coalesced > 0, "chain restore must find adjacent chunks to merge");
+
+        let mut table = Table::new(vec![
+            "restore", "p50 (ms)", "GB/s", "jobs", "runs", "preads", "coalesced",
+        ]);
+        for (name, s, l) in
+            [("delta coalesced", &cs, &cl), ("delta naive", &ns, &nl)]
+        {
+            table.row(vec![
+                format!("{name} {ndev}dev"),
+                format!("{:.2}", s.p50 * 1e3),
+                format!("{:.2}", fastpersist::util::bytes::gbps(l.manifest.total_len, s.p50)),
+                l.stats.jobs.to_string(),
+                l.stats.runs.to_string(),
+                l.stats.preads.to_string(),
+                l.stats.coalesced.to_string(),
+            ]);
+        }
+        println!("{}", table.render());
+        if ndev == 4 {
+            four_dev = Some((cs, ns));
+        }
+        groups.push(group);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    if let Some((c, n)) = four_dev {
+        println!(
+            "4-device delta-chain restore: coalesced p50 {:.2} ms vs naive {:.2} ms ({})",
+            c.p50 * 1e3,
+            n.p50 * 1e3,
+            if c.p50 <= n.p50 { "coalesced ahead" } else { "within noise — see preads" },
+        );
+    }
+    let refs: Vec<&BenchGroup> = groups.iter().collect();
+    let _ = write_bench_json("load", &refs);
+    let _ = std::fs::remove_dir_all(&base);
+}

@@ -121,7 +121,7 @@ fn main() -> fastpersist::Result<()> {
     println!("{}", table.render());
 
     // verify one slice reloads exactly
-    let (store, header, _) = load_checkpoint(&base.join("fastpersist-0/slice-07"), DP)?;
+    let (store, header, _) = load_checkpoint(&base.join("fastpersist-0/slice-07"), &runtime)?;
     assert!(store.content_eq(&expert_slice_store(7)));
     assert_eq!(header.extra["slice"], Json::Int(7));
     println!("slice 07 reload + allgather verified byte-exact");

@@ -32,6 +32,7 @@ fn main() -> fastpersist::Result<()> {
             mode,
             strategy: WriterStrategy::AllReplicas,
             ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::Full,
+            segment_bytes: 64 << 20,
             io: IoConfig::fastpersist().microbench(),
             devices: fastpersist::io::device::DeviceMap::single(),
             dp_writers: 2,

@@ -90,7 +90,8 @@ mod tests {
         let out = TorchSave::new().save(&s, BTreeMap::new(), &dir).unwrap();
         assert_eq!(out.stats.len(), 1);
         assert!(!out.stats[0].o_direct); // traditional path
-        let (loaded, _, _) = load_checkpoint(&dir, 1).unwrap();
+        let rt = crate::io::IoRuntime::shared(IoConfig::baseline().microbench());
+        let (loaded, _, _) = load_checkpoint(&dir, &rt).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&dir).unwrap();
     }

@@ -98,7 +98,7 @@
 //!     ..IoRuntimeConfig::default()
 //! }));
 //! let cfg = DeltaConfig { chunk_size: 4096, ..DeltaConfig::default() };
-//! let mut ck = DeltaCheckpointer::new(rt, cfg);
+//! let mut ck = DeltaCheckpointer::new(Arc::clone(&rt), cfg);
 //!
 //! let mut store = TensorStore::new();
 //! store.push(Tensor::new("w", DType::U8, vec![32768], vec![1u8; 32768]).unwrap()).unwrap();
@@ -114,7 +114,7 @@
 //! assert!(!delta.is_base);
 //! assert!(delta.written_bytes < delta.total_bytes / 2);
 //!
-//! let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+//! let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), &rt).unwrap();
 //! assert!(loaded.content_eq(&store));
 //! std::fs::remove_dir_all(&dir).unwrap();
 //! ```
@@ -131,12 +131,11 @@ use crate::checkpoint::manifest::{
 };
 use crate::io::device::DeviceMap;
 use crate::io::engine::WriteStats;
+use crate::io::read::{plan_runs, ChunkCheck, PrefixCheck, ReadJob, ReadPart, StreamBuffer};
 use crate::io::runtime::{IoRuntime, Ticket, WriteJob};
-use crate::serialize::format::checksum64_slice;
 use crate::serialize::writer::SerializedCheckpoint;
 use crate::tensor::TensorStore;
 use crate::util::json::Json;
-use crate::util::threadpool::parallel_map;
 use crate::{Error, Result};
 
 pub use crate::serialize::format::ChunkDigest;
@@ -711,41 +710,32 @@ pub fn segment_path(dir: &Path, entry: &ChunkEntry, seg: SegmentRef) -> PathBuf 
     owner_dir(dir, entry).join(DeltaSection::segment_file(seg.seg as usize))
 }
 
-/// One unit of parallel read work during stream reassembly.
-enum ReadJob {
-    /// Legacy per-chunk file (v3 layout).
-    File { path: PathBuf, pos: u64, len: u64, hash: u64 },
-    /// One segment file holding several chunks (v4 layout) — opened
-    /// once, chunks read at their recorded offsets.
-    Segment { path: PathBuf, parts: Vec<SegPart> },
-}
-
-struct SegPart {
-    /// Chunk index (error reporting).
-    index: usize,
-    /// Destination offset in the assembled stream.
-    pos: u64,
-    /// Byte offset inside the segment file.
-    off: u64,
-    len: u64,
-    hash: u64,
-}
-
-/// Reassemble the logical stream of the delta checkpoint at `dir`:
-/// `threads` parallel readers — one job per *segment file* (opened
-/// once, chunks `pread` at their recorded offsets) plus one per legacy
-/// chunk file — each verifying its chunks' recorded hashes (precise
-/// corruption reports before the caller's whole-stream digest check).
-pub fn assemble_delta_stream(
+/// Plan the read jobs that reassemble the delta checkpoint at `dir`
+/// into `dest` (one job per segment file, with byte-adjacent chunks
+/// coalesced into single-pread runs when `coalesce` is set, plus one
+/// job per legacy v3 chunk file). Each chunk's recorded hash is
+/// verified **inside** its read job, right after the bytes land —
+/// precise corruption reports before the caller's stream-digest check,
+/// with no extra pass.
+///
+/// The destination offsets are planned from a *validated* chunk table
+/// (it tiles `[0, total_len)` exactly), which is what makes the jobs'
+/// concurrent writes into `dest` disjoint. The manifest is re-validated
+/// here so a caller holding a hand-built table gets an error, not
+/// overlapping writes.
+pub(crate) fn plan_delta_reads(
     dir: &Path,
     manifest: &CheckpointManifest,
-    threads: usize,
-) -> Result<Vec<u8>> {
+    dest: &Arc<StreamBuffer>,
+    coalesce: bool,
+) -> Result<Vec<ReadJob>> {
     let delta = manifest
         .delta
         .as_ref()
-        .ok_or_else(|| Error::Internal("assemble_delta_stream on a full manifest".into()))?;
-    let mut seg_jobs: BTreeMap<(String, u32), (PathBuf, Vec<SegPart>)> = BTreeMap::new();
+        .ok_or_else(|| Error::Internal("plan_delta_reads on a full manifest".into()))?;
+    manifest.validate()?;
+    type SegParts = (PathBuf, Vec<(ReadPart, ChunkCheck)>);
+    let mut seg_jobs: BTreeMap<(String, u32), SegParts> = BTreeMap::new();
     let mut jobs: Vec<ReadJob> = Vec::new();
     let mut pos = 0u64;
     for (i, c) in delta.chunks.iter().enumerate() {
@@ -756,101 +746,66 @@ pub fn assemble_delta_stream(
                     .entry(key)
                     .or_insert_with(|| (segment_path(dir, c, r), Vec::new()))
                     .1
-                    .push(SegPart { index: i, pos, off: r.offset, len: c.len, hash: c.hash });
+                    .push((
+                        ReadPart { file_off: r.offset, dest_off: pos, len: c.len },
+                        ChunkCheck { index: i, dest_off: pos, len: c.len, hash: c.hash },
+                    ));
             }
-            None => jobs.push(ReadJob::File {
+            None => jobs.push(ReadJob {
                 path: chunk_path(dir, i, c),
-                pos,
-                len: c.len,
-                hash: c.hash,
+                dest: Arc::clone(dest),
+                runs: vec![ReadPart { file_off: 0, dest_off: pos, len: c.len }],
+                checks: vec![ChunkCheck { index: i, dest_off: pos, len: c.len, hash: c.hash }],
+                coalesced: 0,
+                expect_file_len: Some(c.len),
+                prefix_check: None,
+                kind: None,
+                label: "chunk",
             }),
         }
         pos += c.len;
     }
-    jobs.extend(
-        seg_jobs
-            .into_values()
-            .map(|(path, parts)| ReadJob::Segment { path, parts }),
-    );
-    let groups: Vec<Result<Vec<(u64, Vec<u8>)>>> =
-        parallel_map(threads.max(1), jobs, |job| match job {
-            ReadJob::File { path, pos, len, hash } => {
-                let bytes = std::fs::read(&path)
-                    .map_err(|e| Error::Format(format!("chunk {}: {e}", path.display())))?;
-                if bytes.len() as u64 != len {
-                    return Err(Error::Format(format!(
-                        "chunk {} is {} bytes, manifest says {len}",
-                        path.display(),
-                        bytes.len()
-                    )));
-                }
-                let got = checksum64_slice(&bytes);
-                if got != hash {
-                    return Err(Error::Format(format!(
-                        "chunk {} hash mismatch: computed {got:#x}, manifest {hash:#x}",
-                        path.display()
-                    )));
-                }
-                Ok(vec![(pos, bytes)])
-            }
-            ReadJob::Segment { path, parts } => {
-                let file = std::fs::File::open(&path)
-                    .map_err(|e| Error::Format(format!("segment {}: {e}", path.display())))?;
-                let mut hdr = [0u8; 8];
-                file.read_exact_at(&mut hdr, 0)
-                    .map_err(|e| Error::Format(format!("segment {}: {e}", path.display())))?;
-                check_segment_header(&hdr)
-                    .map_err(|e| Error::Format(format!("segment {}: {e}", path.display())))?;
-                let mut out = Vec::with_capacity(parts.len());
-                for p in parts {
-                    let mut buf = vec![0u8; p.len as usize];
-                    file.read_exact_at(&mut buf, p.off).map_err(|e| {
-                        Error::Format(format!(
-                            "segment {} chunk {}: {e}",
-                            path.display(),
-                            p.index
-                        ))
-                    })?;
-                    let got = checksum64_slice(&buf);
-                    if got != p.hash {
-                        return Err(Error::Format(format!(
-                            "segment {} chunk {} hash mismatch: computed {got:#x}, \
-                             manifest {:#x}",
-                            path.display(),
-                            p.index,
-                            p.hash
-                        )));
-                    }
-                    out.push((p.pos, buf));
-                }
-                Ok(out)
-            }
+    for (path, parts) in seg_jobs.into_values() {
+        let n_parts = parts.len();
+        let (ranges, checks): (Vec<ReadPart>, Vec<ChunkCheck>) = parts.into_iter().unzip();
+        let runs = plan_runs(ranges, coalesce);
+        jobs.push(ReadJob {
+            path,
+            dest: Arc::clone(dest),
+            coalesced: (n_parts - runs.len()) as u64,
+            runs,
+            checks,
+            expect_file_len: None, // segments outlive any one checkpoint's view
+            prefix_check: Some(PrefixCheck { len: 8, check: check_segment_header }),
+            kind: None,
+            label: "segment",
         });
-    // A validated chunk table tiles [0, total_len) exactly; re-check
-    // coverage here so a caller holding an unvalidated manifest gets an
-    // error, not a panic or a silently zero-filled gap.
-    let mut stream = vec![0u8; manifest.total_len as usize];
-    let mut covered = 0u64;
-    for group in groups {
-        for (pos, bytes) in group? {
-            let end = pos as usize + bytes.len();
-            if end > stream.len() {
-                return Err(Error::Format(format!(
-                    "chunk at stream offset {pos} runs to {end}, past total_len {}",
-                    manifest.total_len
-                )));
-            }
-            stream[pos as usize..end].copy_from_slice(&bytes);
-            covered += bytes.len() as u64;
-        }
     }
-    if covered != manifest.total_len {
+    Ok(jobs)
+}
+
+/// Reassemble the logical stream of the delta checkpoint at `dir`
+/// through `runtime`'s reader pool: coalesced segment reads into one
+/// single-copy stream buffer, chunk hashes verified inside the read
+/// pass. The full restore path
+/// ([`crate::checkpoint::load::load_checkpoint`]) uses the same
+/// per-segment planner and additionally keeps the
+/// [`crate::io::ReadStats`].
+pub fn assemble_delta_stream(
+    dir: &Path,
+    manifest: &CheckpointManifest,
+    runtime: &IoRuntime,
+) -> Result<Vec<u8>> {
+    let dest = runtime.alloc_stream(manifest.total_len as usize);
+    let jobs = plan_delta_reads(dir, manifest, &dest, true)?;
+    let stats = crate::io::read::run_jobs(runtime, jobs)?;
+    if stats.bytes != manifest.total_len {
         return Err(Error::Format(format!(
-            "assembled {covered} bytes, manifest says {}",
-            manifest.total_len
+            "assembled {} bytes, manifest says {}",
+            stats.bytes, manifest.total_len
         )));
     }
-    Ok(stream)
+    StreamBuffer::into_vec(dest)
 }
 
 /// What [`prune_chain`] did.
@@ -1212,13 +1167,22 @@ fn rewrite_segment_sparse(
                 .copy_from_slice(&live_bytes.to_le_bytes());
         }
         dst.write_all_at(&hdr, 0)?;
+        // Byte-adjacent live chunks coalesce into single read+write
+        // runs (same planner as the restore path; copies are in-place,
+        // so file offset == destination offset).
+        let runs = plan_runs(
+            live.iter()
+                .map(|&(off, len)| ReadPart { file_off: off, dest_off: off, len })
+                .collect(),
+            true,
+        );
         let mut buf = vec![0u8; 1 << 20];
-        for &(off, len) in live.iter() {
+        for run in runs {
             let mut done = 0u64;
-            while done < len {
-                let n = (buf.len() as u64).min(len - done) as usize;
-                src.read_exact_at(&mut buf[..n], off + done)?;
-                dst.write_all_at(&buf[..n], off + done)?;
+            while done < run.len {
+                let n = (buf.len() as u64).min(run.len - done) as usize;
+                src.read_exact_at(&mut buf[..n], run.file_off + done)?;
+                dst.write_all_at(&buf[..n], run.file_off + done)?;
                 done += n as u64;
             }
         }
@@ -1351,13 +1315,13 @@ mod tests {
         assert_eq!(d2.manifest.delta.as_ref().unwrap().chain_len, 2);
 
         // every link of the chain loads bit-identically
-        let (l1, h1, m1) = load_checkpoint(&dir.join("step-00000002"), 3).unwrap();
+        let (l1, h1, m1) = load_checkpoint(&dir.join("step-00000002"), ck.runtime()).unwrap();
         assert!(l1.content_eq(&snap2));
         assert_eq!(h1.extra["step"], Json::Int(2));
         assert!(m1.is_delta());
-        let (l2, _, _) = load_checkpoint(&dir.join("step-00000003"), 3).unwrap();
+        let (l2, _, _) = load_checkpoint(&dir.join("step-00000003"), ck.runtime()).unwrap();
         assert!(l2.content_eq(&s));
-        let (l0, _, _) = load_checkpoint(&dir.join("step-00000001"), 3).unwrap();
+        let (l0, _, _) = load_checkpoint(&dir.join("step-00000001"), ck.runtime()).unwrap();
         assert!(l0.content_eq(&store(7, 40 * CS as usize)));
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -1410,9 +1374,59 @@ mod tests {
             .map(|r| seg_files(&DeviceMap::resolve_in(r, &ckdir)))
             .sum();
         assert_eq!(on_devices, out.segments_written);
-        let (loaded, _, _) = load_checkpoint(&ckdir, 4).unwrap();
+        let (loaded, _, _) = load_checkpoint(&ckdir, ck.runtime()).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn adjacent_chunks_restore_with_one_pread_per_contiguous_run() {
+        use crate::checkpoint::load::{load_checkpoint_with, RestoreOptions};
+        // Acceptance: a v4 checkpoint whose chunks sit byte-adjacent in
+        // one segment restores with ONE pread per contiguous run —
+        // counter-verified via ReadStats — while the naive plan pays
+        // one pread per chunk.
+        let dir = scratch_dir("delta-coalesce").unwrap();
+        let rt = runtime();
+        let mut ck = ckpt(Arc::clone(&rt), 8);
+        let n_chunks = 32usize;
+        let s = store(17, n_chunks * CS as usize);
+        let base = ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        assert!(base.is_base);
+
+        let coalesced =
+            load_checkpoint_with(&dir.join("step-00000001"), &rt, RestoreOptions::default())
+                .unwrap();
+        assert!(coalesced.store.content_eq(&s));
+        assert_eq!(coalesced.stats.jobs as usize, base.segments_written);
+        // data chunks pack adjacently (header chunk last): per segment,
+        // at most two runs (data run + header run), each one pread
+        assert_eq!(coalesced.stats.preads, coalesced.stats.runs, "one pread per run");
+        assert!(
+            coalesced.stats.runs <= 2 * base.segments_written as u64,
+            "adjacent chunks must merge: {} runs over {} segments",
+            coalesced.stats.runs,
+            base.segments_written
+        );
+        assert_eq!(
+            coalesced.stats.coalesced + coalesced.stats.runs,
+            base.chunks_total as u64,
+            "every chunk is either a run head or merged into one"
+        );
+        assert_eq!(coalesced.stats.chunks_verified, base.chunks_total as u64);
+
+        // the naive plan reads chunk by chunk
+        let naive = load_checkpoint_with(
+            &dir.join("step-00000001"),
+            &rt,
+            RestoreOptions { coalesce: false },
+        )
+        .unwrap();
+        assert!(naive.store.content_eq(&s));
+        assert_eq!(naive.stats.coalesced, 0);
+        assert_eq!(naive.stats.preads, base.chunks_total as u64, "naive = one pread per chunk");
+        assert!(coalesced.stats.preads < naive.stats.preads);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
@@ -1428,7 +1442,7 @@ mod tests {
         assert_eq!(d.written_bytes, 0);
         assert_eq!(d.segments_written, 0);
         assert_eq!(d.fsyncs, 0);
-        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), ck.runtime()).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -1468,7 +1482,7 @@ mod tests {
         let d = ck2.write(&s, extra(3), &dir.join("step-00000003")).unwrap();
         assert!(!d.is_base, "resumed writer must continue the chain");
         assert!(d.written_bytes < d.total_bytes / 2);
-        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000003"), 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000003"), ck.runtime()).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -1507,7 +1521,7 @@ mod tests {
 
         // the kept delta still reloads bit-identically from the
         // rewritten store
-        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), ck.runtime()).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -1532,7 +1546,7 @@ mod tests {
         assert_eq!(stats.demoted_dirs, 0);
         assert!(!dir.join("step-00000001").exists());
         assert!(!dir.join("step-00000002").exists());
-        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000003"), 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000003"), ck.runtime()).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -1555,7 +1569,8 @@ mod tests {
         let s_new = store(22, 6 * CS as usize);
         fresh.write(&s_new, extra(1), &dir.join("step-00000001")).unwrap();
         prune_chain(&dir, 1, &devices, Some(1)).unwrap();
-        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000001"), 2).unwrap();
+        let (loaded, _, _) =
+            load_checkpoint(&dir.join("step-00000001"), fresh.runtime()).unwrap();
         assert!(loaded.content_eq(&s_new), "protected checkpoint must survive pruning");
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -1595,7 +1610,7 @@ mod tests {
         assert!(d.manifest.devices().len() >= 2, "chunks must stripe across devices");
         // no segment file lands in the checkpoint dir itself
         assert_eq!(seg_files(&dir.join("step-00000002")), 0);
-        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), ck.runtime()).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&base).unwrap();
     }
@@ -1618,7 +1633,7 @@ mod tests {
             }
             s.update("w", data).unwrap();
             ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
-            let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), 2).unwrap();
+            let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), ck.runtime()).unwrap();
             let ok = loaded.content_eq(&s);
             std::fs::remove_dir_all(&dir).unwrap();
             ok

@@ -239,7 +239,7 @@ mod tests {
             let out = engine.write(&store, extra(3), &ckdir, &group(dp)).unwrap();
             assert_eq!(out.stats.len(), dp);
             assert_eq!(out.manifest.step, 3);
-            let (loaded, header, _) = load_checkpoint(&ckdir, 4).unwrap();
+            let (loaded, header, _) = load_checkpoint(&ckdir, engine.runtime()).unwrap();
             assert!(loaded.content_eq(&store), "dp={dp}");
             assert_eq!(header.extra["step"], Json::Int(3));
         }
@@ -250,11 +250,10 @@ mod tests {
     fn baseline_engine_single_partition() {
         let dir = scratch_dir("engine-base").unwrap();
         let store = sample_store(10_000, 3);
-        let out = CheckpointEngine::baseline()
-            .write(&store, extra(0), &dir, &group(8))
-            .unwrap();
+        let engine = CheckpointEngine::baseline();
+        let out = engine.write(&store, extra(0), &dir, &group(8)).unwrap();
         assert_eq!(out.stats.len(), 1); // rank0 strategy
-        let (loaded, _, _) = load_checkpoint(&dir, 1).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir, engine.runtime()).unwrap();
         assert!(loaded.content_eq(&store));
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -266,7 +265,7 @@ mod tests {
         let engine = CheckpointEngine::fastpersist(WriterStrategy::PerSocket);
         let out = engine.write(&store, extra(1), &dir, &group(16)).unwrap();
         assert_eq!(out.stats.len(), 2); // 2 sockets on a DGX-2 node
-        let (loaded, _, _) = load_checkpoint(&dir, 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir, engine.runtime()).unwrap();
         assert!(loaded.content_eq(&store));
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -279,7 +278,7 @@ mod tests {
         engine.write(&s1, extra(1), &dir, &group(4)).unwrap();
         let s2 = sample_store(5000, 2);
         engine.write(&s2, extra(2), &dir, &group(4)).unwrap();
-        let (loaded, _, manifest) = load_checkpoint(&dir, 2).unwrap();
+        let (loaded, _, manifest) = load_checkpoint(&dir, engine.runtime()).unwrap();
         assert_eq!(manifest.step, 2);
         assert!(loaded.content_eq(&s2));
         std::fs::remove_dir_all(&dir).unwrap();
@@ -293,7 +292,7 @@ mod tests {
             .write(&TensorStore::new(), extra(0), &dir, &group(4))
             .unwrap();
         assert!(out.total_bytes > 0); // header still exists
-        let (loaded, _, _) = load_checkpoint(&dir, 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir, engine.runtime()).unwrap();
         assert!(loaded.is_empty());
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -328,7 +327,8 @@ mod tests {
             "checkpoints must recycle pool buffers (acquires should climb)"
         );
         for i in 1..=3 {
-            let (loaded, _, _) = load_checkpoint(&dir.join(format!("s{i}")), 2).unwrap();
+            let (loaded, _, _) =
+                load_checkpoint(&dir.join(format!("s{i}")), engine.runtime()).unwrap();
             assert!(loaded.content_eq(&store));
         }
         std::fs::remove_dir_all(&dir).unwrap();
@@ -356,7 +356,7 @@ mod tests {
                 "device-routed partition must not land in the checkpoint dir"
             );
         }
-        let (loaded, header, _) = load_checkpoint(&dir, 2).unwrap();
+        let (loaded, header, _) = load_checkpoint(&dir, engine.runtime()).unwrap();
         assert!(loaded.content_eq(&store));
         assert_eq!(header.extra["step"], Json::Int(7));
         std::fs::remove_dir_all(&base).unwrap();

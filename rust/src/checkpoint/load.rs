@@ -1,29 +1,42 @@
-//! Parallel checkpoint loading + allgather reassembly (paper §4.2).
+//! Parallel checkpoint loading + allgather reassembly (paper §4.2),
+//! over the shared I/O runtime's reader pool.
 //!
-//! Loading a parallel checkpoint is the inverse of writing: each DP rank
-//! reads its partition file (in parallel) from the device the manifest
-//! recorded for it, then the partitions are assembled ("allgather") back
-//! into the logical serialized stream, verified against the manifest's
-//! stream digest, and parsed into a [`TensorStore`].
+//! Loading a parallel checkpoint is the inverse of writing, and since
+//! this module was rewired onto [`crate::io::read`] it is structured
+//! like the write path too: the manifest is planned into
+//! [`crate::io::ReadJob`]s — one per partition file (full checkpoints)
+//! or per segment/chunk file (incremental ones) — submitted to the
+//! [`IoRuntime`]'s persistent reader pool, and every job reads its
+//! range **directly into its disjoint slice** of one preallocated
+//! [`crate::io::StreamBuffer`] of `total_len` bytes. There are no
+//! per-part vectors, no concatenation pass, and exactly one stream
+//! allocation per restore (counted by
+//! [`IoRuntime::stream_allocations`]).
 //!
 //! Incremental checkpoints (manifest v3/v4 with a
 //! [`crate::checkpoint::manifest::DeltaSection`]) reassemble from their
-//! *chunk* table instead — one parallel reader per **segment file**
-//! (v4: chunks `pread` at their recorded offsets; the file is opened
-//! once however many chunks it holds) or per legacy chunk file (v3) —
-//! and then flow through the same digest verification and parsing, so a
+//! *chunk* table: v4 segment files get a coalesced read plan (chunks
+//! byte-adjacent in the segment and the stream merge into one large
+//! `pread` — [`crate::io::read::plan_runs`]), v3 legacy chunk files one
+//! job each, and chunk-hash verification is folded into the read pass.
+//! The assembled stream then flows through a **single** verification +
+//! parse pass ([`crate::serialize::reader::parse_verified`] folds the
+//! manifest's composite stream digest into the parse's data pass), so a
 //! base + delta chain reloads bit-identically to the full snapshot it
 //! represents, whichever on-disk layout wrote it. See `docs/FORMATS.md`
-//! for the version matrix.
+//! for the version matrix and ARCHITECTURE.md for the read-path
+//! dataflow.
 
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 use crate::checkpoint::manifest::{CheckpointManifest, PartitionEntry};
 use crate::io::device::DeviceMap;
-use crate::serialize::format::{stream_digest_of, FormatHeader};
-use crate::serialize::reader::parse_checkpoint;
+use crate::io::read::{self, ReadJob, ReadPart, ReadStats, StreamBuffer};
+use crate::io::runtime::IoRuntime;
+use crate::serialize::format::FormatHeader;
+use crate::serialize::reader::parse_verified;
 use crate::tensor::TensorStore;
-use crate::util::threadpool::parallel_map;
 use crate::{Error, Result};
 
 /// On-disk location of a partition: the manifest's recorded device
@@ -35,62 +48,113 @@ pub fn partition_path(dir: &Path, entry: &PartitionEntry) -> PathBuf {
     }
 }
 
-/// Load one checkpoint directory; `threads` parallel partition readers
-/// (the DP ranks of the loading job).
+/// Restore tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RestoreOptions {
+    /// Merge byte-adjacent chunk reads into single preads (default).
+    /// `false` issues the naive one-pread-per-chunk plan — kept for the
+    /// `BENCH_load` coalesced-vs-naive comparison.
+    pub coalesce: bool,
+}
+
+impl Default for RestoreOptions {
+    fn default() -> Self {
+        RestoreOptions { coalesce: true }
+    }
+}
+
+/// A fully restored checkpoint plus the read-path accounting.
+pub struct LoadedCheckpoint {
+    /// The reconstructed tensor state.
+    pub store: TensorStore,
+    /// The parsed stream header (training extras, tensor table).
+    pub header: FormatHeader,
+    /// The checkpoint's manifest.
+    pub manifest: CheckpointManifest,
+    /// Merged counters from every read job of this restore.
+    pub stats: ReadStats,
+    /// Wall latency: manifest parse → store reconstructed.
+    pub latency: Duration,
+}
+
+impl LoadedCheckpoint {
+    /// Effective restore throughput in decimal GB/s (stream bytes over
+    /// total restore wall time, verification and parse included).
+    pub fn gbps(&self) -> f64 {
+        crate::util::bytes::gbps(self.manifest.total_len, self.latency.as_secs_f64())
+    }
+}
+
+/// Load one checkpoint directory through `runtime`'s reader pool.
 pub fn load_checkpoint(
     dir: &Path,
-    threads: usize,
+    runtime: &IoRuntime,
 ) -> Result<(TensorStore, FormatHeader, CheckpointManifest)> {
+    load_checkpoint_with(dir, runtime, RestoreOptions::default())
+        .map(|l| (l.store, l.header, l.manifest))
+}
+
+/// Load with explicit [`RestoreOptions`], returning the read-path
+/// counters alongside the state ([`LoadedCheckpoint`]).
+pub fn load_checkpoint_with(
+    dir: &Path,
+    runtime: &IoRuntime,
+    opts: RestoreOptions,
+) -> Result<LoadedCheckpoint> {
+    let t0 = Instant::now();
     let manifest = CheckpointManifest::load(dir)?;
-    let stream = if manifest.is_delta() {
-        // Chunked incremental checkpoint: reassemble from the chunk
-        // table (each chunk verified against its recorded hash).
-        crate::checkpoint::delta::assemble_delta_stream(dir, &manifest, threads)?
+    // THE stream allocation: one buffer of total_len, assembled in
+    // place by the read jobs (no per-part vectors, no concat).
+    let dest = runtime.alloc_stream(manifest.total_len as usize);
+    let jobs = if manifest.is_delta() {
+        crate::checkpoint::delta::plan_delta_reads(dir, &manifest, &dest, opts.coalesce)?
     } else {
-        let jobs: Vec<(std::path::PathBuf, u64)> = manifest
-            .partitions
-            .iter()
-            .map(|p| (partition_path(dir, p), p.end - p.start))
-            .collect();
-        // Parallel partition reads (rank-local step of the two-step
-        // load).
-        let parts: Vec<Result<Vec<u8>>> = parallel_map(threads, jobs, |(path, expect)| {
-            let bytes = std::fs::read(&path)
-                .map_err(|e| Error::Format(format!("partition {}: {e}", path.display())))?;
-            if bytes.len() as u64 != expect {
-                return Err(Error::Format(format!(
-                    "partition {} is {} bytes, manifest says {expect}",
-                    path.display(),
-                    bytes.len()
-                )));
-            }
-            Ok(bytes)
-        });
-        // Allgather: concatenate in partition order.
-        let mut stream = Vec::with_capacity(manifest.total_len as usize);
-        for part in parts {
-            stream.extend_from_slice(&part?);
-        }
-        stream
+        plan_partition_reads(dir, &manifest, &dest)
     };
-    if stream.len() as u64 != manifest.total_len {
+    let stats = read::run_jobs(runtime, jobs)?;
+    if stats.bytes != manifest.total_len {
         return Err(Error::Format(format!(
             "assembled {} bytes, manifest says {}",
-            stream.len(),
-            manifest.total_len
+            stats.bytes, manifest.total_len
         )));
     }
-    // Composite stream digest (header ‖ data halves) — matches the
-    // writer's single-pass digest, see `serialize::format`.
-    let digest = stream_digest_of(&stream)?;
-    if digest != manifest.digest {
-        return Err(Error::Format(format!(
-            "stream digest mismatch: computed {digest:#x}, manifest {:#x}",
-            manifest.digest
-        )));
-    }
-    let (store, header) = parse_checkpoint(&stream)?;
-    Ok((store, header, manifest))
+    let stream = StreamBuffer::into_vec(dest)?;
+    // Single post-assembly pass: the composite stream digest is folded
+    // into the parse's data pass (matches the writer's single-pass
+    // digest, see `serialize::format`).
+    let (store, header) = parse_verified(&stream, manifest.digest)?;
+    Ok(LoadedCheckpoint { store, header, manifest, stats, latency: t0.elapsed() })
+}
+
+/// Read plan of a full (partitioned) checkpoint: one job per partition
+/// file, reading the file's whole extent into the stream range the
+/// manifest records for it. Errors from these jobs carry the fully
+/// *resolved* path (device routing applied), so a device-mapped
+/// partition whose mount or symlink target is gone reports exactly
+/// which path failed instead of a generic assembly error.
+fn plan_partition_reads(
+    dir: &Path,
+    manifest: &CheckpointManifest,
+    dest: &std::sync::Arc<StreamBuffer>,
+) -> Vec<ReadJob> {
+    manifest
+        .partitions
+        .iter()
+        .map(|p| {
+            let len = p.end - p.start;
+            ReadJob {
+                path: partition_path(dir, p),
+                dest: std::sync::Arc::clone(dest),
+                runs: vec![ReadPart { file_off: 0, dest_off: p.start, len }],
+                checks: Vec::new(),
+                coalesced: 0,
+                expect_file_len: Some(len),
+                prefix_check: None,
+                kind: None,
+                label: "partition",
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -99,10 +163,16 @@ mod tests {
     use crate::checkpoint::engine::CheckpointEngine;
     use crate::checkpoint::strategy::WriterStrategy;
     use crate::cluster::{ClusterSpec, Parallelism, Topology};
-    use crate::io::engine::scratch_dir;
+    use crate::io::engine::{scratch_dir, IoConfig};
+    use crate::io::runtime::IoRuntimeConfig;
     use crate::tensor::{DType, Tensor};
     use crate::util::rng::Rng;
     use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    fn test_runtime() -> Arc<IoRuntime> {
+        IoRuntime::shared(IoConfig::default().microbench())
+    }
 
     fn write_sample(dir: &Path, dp: usize) -> TensorStore {
         let mut rng = Rng::new(23);
@@ -126,9 +196,56 @@ mod tests {
         write_sample(&dir, 4);
         // remove one partition file
         let manifest = CheckpointManifest::load(&dir).unwrap();
-        std::fs::remove_file(dir.join(&manifest.partitions[2].file)).unwrap();
-        assert!(load_checkpoint(&dir, 2).is_err());
+        let removed = dir.join(&manifest.partitions[2].file);
+        std::fs::remove_file(&removed).unwrap();
+        match load_checkpoint(&dir, &test_runtime()) {
+            Err(Error::Format(msg)) => assert!(
+                msg.contains(&manifest.partitions[2].file),
+                "error must name the resolved partition path: {msg}"
+            ),
+            other => panic!("expected partition error, got {other:?}"),
+        }
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_device_mapped_partition_reports_resolved_path() {
+        // A device-routed partition resolves outside the checkpoint
+        // directory (root/fpck-<tag>/part-...); when that target is
+        // gone the error must surface the resolved path, not a generic
+        // "assembled N bytes" report.
+        let base = scratch_dir("load-devmiss").unwrap();
+        let dir = base.join("ckpt");
+        let devices = DeviceMap::simulated(2, &base.join("devices")).unwrap();
+        let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::default().microbench(),
+            devices,
+            ..IoRuntimeConfig::default()
+        }));
+        let mut store = TensorStore::new();
+        store
+            .push(Tensor::new("w", DType::U8, vec![50_000], vec![9u8; 50_000]).unwrap())
+            .unwrap();
+        let topo = Topology::new(ClusterSpec::dgx2(1), Parallelism::dense(4, 1, 1)).unwrap();
+        CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas)
+            .write(&store, BTreeMap::new(), &dir, &topo.dp_group(0))
+            .unwrap();
+        let manifest = CheckpointManifest::load(&dir).unwrap();
+        let entry = &manifest.partitions[1];
+        let resolved = partition_path(&dir, entry);
+        assert!(entry.device.is_some(), "partition must be device-routed");
+        std::fs::remove_file(&resolved).unwrap();
+        match load_checkpoint(&dir, &runtime) {
+            Err(Error::Format(msg)) => {
+                assert!(
+                    msg.contains(&resolved.display().to_string()),
+                    "error must carry the device-resolved path {resolved:?}: {msg}"
+                );
+                assert!(!msg.contains("assembled"), "must not be the generic error: {msg}");
+            }
+            other => panic!("expected resolved-path error, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&base).unwrap();
     }
 
     #[test]
@@ -141,7 +258,7 @@ mod tests {
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0x5a;
         std::fs::write(&pfile, bytes).unwrap();
-        match load_checkpoint(&dir, 2) {
+        match load_checkpoint(&dir, &test_runtime()) {
             Err(Error::Format(msg)) => assert!(msg.contains("digest"), "{msg}"),
             other => panic!("expected digest error, got {other:?}"),
         }
@@ -156,18 +273,43 @@ mod tests {
         let pfile = dir.join(&manifest.partitions[0].file);
         let bytes = std::fs::read(&pfile).unwrap();
         std::fs::write(&pfile, &bytes[..bytes.len() - 10]).unwrap();
-        assert!(load_checkpoint(&dir, 2).is_err());
+        assert!(load_checkpoint(&dir, &test_runtime()).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
-    fn thread_count_does_not_matter() {
+    fn reader_pool_size_does_not_matter() {
         let dir = scratch_dir("load-threads").unwrap();
         let store = write_sample(&dir, 8);
         for threads in [1, 2, 8] {
-            let (loaded, _, _) = load_checkpoint(&dir, threads).unwrap();
+            let rt = IoRuntime::new(IoRuntimeConfig {
+                io: IoConfig::default().microbench(),
+                reader_threads: threads,
+                ..IoRuntimeConfig::default()
+            });
+            let (loaded, _, _) = load_checkpoint(&dir, &rt).unwrap();
             assert!(loaded.content_eq(&store));
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn restore_performs_exactly_one_stream_allocation() {
+        // Buffer accounting: an 8-partition restore assembles through
+        // ONE allocation of total_len bytes — no per-partition vectors.
+        let dir = scratch_dir("load-onealloc").unwrap();
+        let store = write_sample(&dir, 8);
+        let rt = test_runtime();
+        assert_eq!(rt.stream_allocations(), (0, 0));
+        let loaded = load_checkpoint_with(&dir, &rt, RestoreOptions::default()).unwrap();
+        assert!(loaded.store.content_eq(&store));
+        assert_eq!(
+            rt.stream_allocations(),
+            (1, loaded.manifest.total_len),
+            "one restore = one stream allocation of exactly total_len bytes"
+        );
+        assert_eq!(loaded.stats.jobs, 8, "one read job per partition");
+        assert_eq!(loaded.stats.bytes, loaded.manifest.total_len);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

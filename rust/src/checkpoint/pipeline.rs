@@ -221,6 +221,7 @@ mod tests {
     fn overlapped_iterations_produce_every_checkpoint() {
         let dir = scratch_dir("pipe-every").unwrap();
         let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let rt = std::sync::Arc::clone(engine.runtime());
         let mut pipe = PipelinedCheckpointer::new(engine, solo_group());
         let iters = 5;
         for i in 0..iters {
@@ -233,7 +234,7 @@ mod tests {
         assert_eq!(outcomes.len(), iters as usize);
         // every checkpoint corresponds to exactly its iteration's state
         for i in 0..iters {
-            let (loaded, header, _) = load_checkpoint(&dir.join(format!("step{i}")), 2).unwrap();
+            let (loaded, header, _) = load_checkpoint(&dir.join(format!("step{i}")), &rt).unwrap();
             assert_eq!(header.extra["step"], Json::Int(i));
             assert!(loaded.content_eq(&store_with(i as u8, 200_000)));
         }
@@ -246,13 +247,14 @@ mod tests {
         // the main thread mutates the store while the write is in flight.
         let dir = scratch_dir("pipe-iso").unwrap();
         let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let rt = std::sync::Arc::clone(engine.runtime());
         let mut pipe = PipelinedCheckpointer::new(engine, solo_group());
         let mut store = store_with(1, 500_000);
         pipe.request(&store, extra(1), dir.join("c1")).unwrap();
         // "next iteration" mutates the live store immediately
         store.update("w", vec![99u8; 500_000]).unwrap();
         pipe.wait_previous().unwrap();
-        let (loaded, _, _) = load_checkpoint(&dir.join("c1"), 1).unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("c1"), &rt).unwrap();
         assert!(loaded.content_eq(&store_with(1, 500_000)));
         drop(pipe);
         std::fs::remove_dir_all(&dir).unwrap();
@@ -304,7 +306,7 @@ mod tests {
             ..IoRuntimeConfig::default()
         }));
         let ckpt = DeltaCheckpointer::new(
-            rt,
+            Arc::clone(&rt),
             DeltaConfig { chunk_size: 4096, max_chain: 8, ..DeltaConfig::default() },
         );
         let mut pipe = PipelinedCheckpointer::delta(ckpt);
@@ -320,7 +322,7 @@ mod tests {
         assert_eq!(outcomes[1].manifest.delta.as_ref().unwrap().chain_len, 1);
         for i in 0..4i64 {
             let (loaded, header, _) =
-                load_checkpoint(&dir.join(format!("step-{i:08}")), 2).unwrap();
+                load_checkpoint(&dir.join(format!("step-{i:08}")), &rt).unwrap();
             assert_eq!(header.extra["step"], Json::Int(i));
             assert!(loaded.content_eq(&store_with(i as u8, 120_000)));
         }

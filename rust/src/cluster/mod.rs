@@ -5,7 +5,7 @@
 //! lives, for writer selection). The [`bandwidth`] model feeds the
 //! discrete-event simulator ([`crate::sim`]) that reproduces the
 //! multi-node figures; its constants are calibrated to numbers the paper
-//! states directly (see ARCHITECTURE.md §6).
+//! states directly (see ARCHITECTURE.md §8).
 
 pub mod bandwidth;
 pub mod spec;

@@ -1,5 +1,5 @@
 //! Hardware specification of the evaluation cluster (paper §5.2.1) plus
-//! the calibrated I/O-path constants (ARCHITECTURE.md §6).
+//! the calibrated I/O-path constants (ARCHITECTURE.md §8).
 
 /// Physical description of one homogeneous cluster.
 #[derive(Debug, Clone)]

@@ -29,6 +29,13 @@
 //! environment. Engines borrow from the runtime; nothing on the
 //! steady-state checkpoint path allocates staging memory or spawns
 //! threads.
+//!
+//! The **restore path** is the mirror image ([`read`]): the same
+//! runtime owns a persistent reader pool (`submit_read(ReadJob) ->
+//! ReadTicket`), a coalescing planner merging byte-adjacent chunk reads
+//! into large positioned preads, and a single-copy
+//! [`read::StreamBuffer`] that every job assembles its range into
+//! directly.
 
 pub mod align;
 pub mod buffer;
@@ -37,10 +44,12 @@ pub mod direct_engine;
 pub mod double_buffer;
 pub mod engine;
 pub mod pending_queue;
+pub mod read;
 pub mod runtime;
 pub mod sync_engine;
 
 pub use buffer::{AlignedBuf, BufferPool};
 pub use device::DeviceMap;
 pub use engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
-pub use runtime::{IoRuntime, IoRuntimeConfig, Ticket, WriteJob, WriteSource};
+pub use read::{ChunkCheck, ReadJob, ReadPart, ReadStats, StreamBuffer};
+pub use runtime::{IoRuntime, IoRuntimeConfig, ReadTicket, Ticket, WriteJob, WriteSource};

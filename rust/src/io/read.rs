@@ -1,0 +1,614 @@
+//! Read-path runtime primitives: coalesced positioned reads with
+//! single-copy stream assembly (paper §4.2 parallel load, inverted).
+//!
+//! PRs 1–3 gave the *write* path a persistent runtime — staging pool,
+//! writer tickets, device striping, one fsync per segment. This module
+//! is the symmetric half for *restore*: instead of throwaway threadpools
+//! issuing one unbatched `pread` per chunk and copying the stream
+//! through per-part `Vec`s, a restore is planned as [`ReadJob`]s over
+//! the same [`crate::io::runtime::IoRuntime`]:
+//!
+//! * **Single-copy assembly** ([`StreamBuffer`]): the loader allocates
+//!   *one* buffer of the manifest's `total_len` and every job reads its
+//!   partition/chunk range directly into its own disjoint slice. There
+//!   are no per-part vectors and no concatenation pass — file bytes land
+//!   at their final stream offset in one copy.
+//! * **Coalesced runs** ([`plan_runs`]): chunks that are byte-adjacent
+//!   both in their segment file *and* in the assembled stream merge into
+//!   one large positioned read. A v4 base whose dirty chunks were packed
+//!   back-to-back restores with one `pread` per contiguous run, not one
+//!   per chunk. Coalescing never crosses a file (plans are per job, one
+//!   job per file) and never reorders bytes: a merge requires adjacency
+//!   on **both** axes, so a single `pread` lands exactly where the
+//!   chunks belong.
+//! * **Folded verification** ([`ChunkCheck`]): per-chunk hash checks run
+//!   inside the read job, immediately after the bytes arrive (cache-hot)
+//!   — verification piggybacks on the read pass the way
+//!   [`crate::serialize::format::ChunkedChecksum`] piggybacks grid
+//!   hashing on the write-side serialization pass.
+//! * **Engine-kind awareness**: mirroring the write engines, a
+//!   [`EngineKind::Buffered`] job reads in `buffered_chunk`-sized steps
+//!   (the torch.load-style small-read baseline) while the direct kinds
+//!   read each run in `io_buf_size`-sized steps — one large positioned
+//!   read per run at the default 32 MiB buffer. Reads need no staging
+//!   bounce: the destination slice *is* the final resting place.
+//!
+//! [`ReadStats`] counts bytes, payload preads, planned runs, coalesced
+//! merges, and folded chunk verifications, so coalescing is testable
+//! with counters (and reported by the trainer's resume metrics and
+//! `benches/load_restore.rs`).
+//!
+//! Submission mirrors the write side: `IoRuntime::submit_read(ReadJob)
+//! -> ReadTicket`, `ReadTicket::wait() -> ReadStats`, serviced by the
+//! runtime's persistent reader pool.
+
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::io::engine::{EngineKind, IoConfig};
+use crate::io::runtime::{IoRuntime, ReadTicket};
+use crate::serialize::format::checksum64_slice;
+use crate::{Error, Result};
+
+/// The single preallocated assembly buffer of one restore.
+///
+/// Concurrent [`ReadJob`]s write disjoint ranges of it directly (no
+/// intermediate vectors); after every ticket completes the loader
+/// unwraps it into the assembled stream via [`StreamBuffer::into_vec`].
+/// Allocate through [`IoRuntime::alloc_stream`] so the runtime's
+/// stream-allocation counters account for it (the buffer-accounting
+/// acceptance check of the read path).
+pub struct StreamBuffer {
+    /// Raw base of the heap allocation. Kept as a pointer (never as a
+    /// live `Box`/`&mut`) so handing out disjoint sub-slices to
+    /// concurrent reader threads never materializes a reference to the
+    /// whole buffer — each `slice_mut`/`slice` derives only its own
+    /// range from the raw base.
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: disjoint-range discipline. Every writer obtains its range via
+// `slice_mut` on ranges planned from a validated manifest (partition
+// and chunk tables tile `[0, total_len)` exactly, so no two jobs touch
+// the same byte), which is the only way the buffer is mutated while
+// shared.
+unsafe impl Send for StreamBuffer {}
+unsafe impl Sync for StreamBuffer {}
+
+impl StreamBuffer {
+    /// A zero-filled buffer of `len` bytes. Prefer
+    /// [`IoRuntime::alloc_stream`], which counts the allocation.
+    pub fn zeroed(len: usize) -> StreamBuffer {
+        // `vec![0u8; len]` has capacity exactly `len`, so the allocation
+        // can be reconstituted by `Vec::from_raw_parts(ptr, len, len)`.
+        let slice = Box::into_raw(vec![0u8; len].into_boxed_slice());
+        StreamBuffer { ptr: slice as *mut u8, len }
+    }
+
+    /// Buffer length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True for the zero-length buffer.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `[start, start + len)`.
+    ///
+    /// # Safety
+    ///
+    /// The range must be in bounds and **disjoint** from every range any
+    /// other thread concurrently reads or writes through this buffer.
+    #[allow(clippy::mut_from_ref)] // disjoint-slice hand-out, see module docs
+    pub(crate) unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [u8] {
+        debug_assert!(start.checked_add(len).is_some_and(|e| e <= self.len));
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// Shared view of `[start, start + len)`.
+    ///
+    /// # Safety
+    ///
+    /// Same disjointness contract as [`StreamBuffer::slice_mut`]: no
+    /// concurrent writer may overlap the range.
+    pub(crate) unsafe fn slice(&self, start: usize, len: usize) -> &[u8] {
+        debug_assert!(start.checked_add(len).is_some_and(|e| e <= self.len));
+        std::slice::from_raw_parts(self.ptr.add(start), len)
+    }
+
+    /// Unwrap the (now exclusively owned) buffer into the assembled
+    /// stream. Errors if a reference is still alive — the loader only
+    /// calls this after every read ticket has completed.
+    pub fn into_vec(this: Arc<StreamBuffer>) -> Result<Vec<u8>> {
+        let buf = Arc::try_unwrap(this).map_err(|_| {
+            Error::Internal("stream buffer still shared after reads completed".into())
+        })?;
+        // SAFETY: ptr/len came from a Vec of exactly this length and
+        // capacity (see `zeroed`); ownership moves into the new Vec, so
+        // the buffer must not also free it on drop.
+        let stream = unsafe { Vec::from_raw_parts(buf.ptr, buf.len, buf.len) };
+        std::mem::forget(buf);
+        Ok(stream)
+    }
+}
+
+impl Drop for StreamBuffer {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len denote the boxed slice `zeroed` leaked;
+        // `into_vec` forgets the buffer before ownership could double.
+        unsafe {
+            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.ptr, self.len)));
+        }
+    }
+}
+
+/// One planned file→stream copy: `len` bytes at `file_off` in the
+/// source file land at `dest_off` in the stream buffer. Both the
+/// planner's input parts (one per chunk) and its output runs (merged)
+/// use this shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadPart {
+    /// Byte offset inside the source file.
+    pub file_off: u64,
+    /// Destination offset in the assembled stream.
+    pub dest_off: u64,
+    /// Length in bytes.
+    pub len: u64,
+}
+
+/// Coalesce `parts` (each typically one chunk) into contiguous runs.
+///
+/// Parts are sorted by file offset; consecutive parts merge **only**
+/// when byte-adjacent in the file *and* in the destination stream — a
+/// single positioned read of a merged run lands every byte at its final
+/// offset, so merging never reorders anything. Plans are built per
+/// file, so runs never span segments. With `coalesce` off the sorted
+/// parts are returned unmerged (the naive one-pread-per-chunk plan,
+/// kept for the `BENCH_load` comparison).
+pub fn plan_runs(mut parts: Vec<ReadPart>, coalesce: bool) -> Vec<ReadPart> {
+    parts.retain(|p| p.len > 0);
+    parts.sort_by_key(|p| p.file_off);
+    if !coalesce {
+        return parts;
+    }
+    let mut runs: Vec<ReadPart> = Vec::with_capacity(parts.len());
+    for p in parts {
+        match runs.last_mut() {
+            // checked arithmetic: a corrupt manifest can carry offsets
+            // near u64::MAX, which must fall through to "not adjacent"
+            // (and fail later bounds checks), not overflow here
+            Some(last)
+                if last.file_off.checked_add(last.len) == Some(p.file_off)
+                    && last.dest_off.checked_add(last.len) == Some(p.dest_off) =>
+            {
+                last.len += p.len
+            }
+            _ => runs.push(p),
+        }
+    }
+    runs
+}
+
+/// A chunk-hash verification folded into a read job: after the job's
+/// runs complete, stream bytes `[dest_off, dest_off + len)` must hash
+/// to `hash`.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkCheck {
+    /// Chunk index in the manifest table (error reporting).
+    pub index: usize,
+    /// Destination offset of the chunk in the assembled stream.
+    pub dest_off: u64,
+    /// Chunk length in bytes.
+    pub len: u64,
+    /// Expected content hash
+    /// ([`crate::serialize::format::checksum64_slice`]).
+    pub hash: u64,
+}
+
+/// Validation of a fixed-size file prefix (e.g. the FPSG segment
+/// header) before any payload run is read.
+pub struct PrefixCheck {
+    /// Prefix length to read from file offset 0.
+    pub len: usize,
+    /// Validator over the prefix bytes.
+    pub check: fn(&[u8]) -> Result<()>,
+}
+
+/// One unit of restore work for the runtime's reader pool: positioned
+/// reads from one file into disjoint ranges of a shared
+/// [`StreamBuffer`], plus the verification folded into the pass.
+pub struct ReadJob {
+    /// Source file (fully resolved — device routing already applied).
+    pub path: PathBuf,
+    /// The restore's shared assembly buffer.
+    pub dest: Arc<StreamBuffer>,
+    /// Planned contiguous runs (see [`plan_runs`]), disjoint in `dest`.
+    pub runs: Vec<ReadPart>,
+    /// Chunk hashes to verify after the runs complete.
+    pub checks: Vec<ChunkCheck>,
+    /// Parts merged away by coalescing (`parts - runs`), for
+    /// [`ReadStats::coalesced`].
+    pub coalesced: u64,
+    /// Exact file length the manifest promises (`None` skips the
+    /// check — segment files hold more than one checkpoint's chunks).
+    pub expect_file_len: Option<u64>,
+    /// Optional container-header validation before the payload reads.
+    pub prefix_check: Option<PrefixCheck>,
+    /// Engine override; `None` uses the runtime's configured kind.
+    pub kind: Option<EngineKind>,
+    /// What the file is, for error messages (`"partition"`, `"segment"`,
+    /// `"chunk"`).
+    pub label: &'static str,
+}
+
+impl ReadJob {
+    /// Total payload bytes this job reads.
+    pub fn len(&self) -> u64 {
+        self.runs.iter().map(|r| r.len).sum()
+    }
+
+    /// True when the job has no payload runs.
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    fn fail(&self, detail: impl std::fmt::Display) -> Error {
+        Error::Format(format!("{} {}: {detail}", self.label, self.path.display()))
+    }
+
+    /// Execute on a reader thread: open, validate, read runs into the
+    /// destination slices, verify folded chunk hashes.
+    pub(crate) fn execute(&self, io: &IoConfig) -> Result<ReadStats> {
+        let t0 = Instant::now();
+        // Mirror the write engines: buffered = small traditional reads,
+        // direct = one large positioned read per io_buf_size step.
+        let step = match self.kind.unwrap_or(io.kind) {
+            EngineKind::Buffered => io.buffered_chunk.max(1),
+            EngineKind::DirectSingle | EngineKind::DirectDouble => io.io_buf_size.max(1),
+        };
+        let file = std::fs::File::open(&self.path).map_err(|e| self.fail(e))?;
+        if let Some(expect) = self.expect_file_len {
+            let len = file.metadata().map_err(|e| self.fail(e))?.len();
+            if len != expect {
+                return Err(self.fail(format_args!(
+                    "is {len} bytes, manifest says {expect}"
+                )));
+            }
+        }
+        let mut stats = ReadStats {
+            jobs: 1,
+            runs: self.runs.len() as u64,
+            coalesced: self.coalesced,
+            ..ReadStats::default()
+        };
+        if let Some(pc) = &self.prefix_check {
+            let mut buf = vec![0u8; pc.len];
+            file.read_exact_at(&mut buf, 0).map_err(|e| self.fail(e))?;
+            stats.prefix_reads += 1;
+            (pc.check)(&buf).map_err(|e| self.fail(e))?;
+        }
+        for run in &self.runs {
+            run.dest_off
+                .checked_add(run.len)
+                .filter(|&e| e <= self.dest.len() as u64)
+                .ok_or_else(|| self.fail("read run past the end of the stream buffer"))?;
+            // corrupt manifests can carry offsets near u64::MAX; reject
+            // before any arithmetic below can wrap
+            let file_end = run
+                .file_off
+                .checked_add(run.len)
+                .ok_or_else(|| self.fail("read run file offset overflows"))?;
+            // SAFETY: runs of one restore are planned disjoint (the
+            // manifest tables tile the stream), in bounds per the check
+            // above.
+            let dst = unsafe { self.dest.slice_mut(run.dest_off as usize, run.len as usize) };
+            let mut done = 0usize;
+            while done < dst.len() {
+                let n = step.min(dst.len() - done);
+                file.read_exact_at(&mut dst[done..done + n], run.file_off + done as u64)
+                    .map_err(|e| {
+                        self.fail(format_args!(
+                            "bytes [{}..{file_end}): {e}",
+                            run.file_off + done as u64
+                        ))
+                    })?;
+                stats.preads += 1;
+                done += n;
+            }
+            stats.bytes += run.len;
+        }
+        for c in &self.checks {
+            // Same bounds discipline as the runs: a hand-built job (the
+            // fields are public) must error, not read out of bounds.
+            c.dest_off
+                .checked_add(c.len)
+                .filter(|&e| e <= self.dest.len() as u64)
+                .ok_or_else(|| {
+                    self.fail(format_args!(
+                        "chunk {} check past the end of the stream buffer",
+                        c.index
+                    ))
+                })?;
+            // SAFETY: in bounds per the check above, and the chunk range
+            // lies inside this job's own runs — all finished above.
+            let got =
+                checksum64_slice(unsafe { self.dest.slice(c.dest_off as usize, c.len as usize) });
+            if got != c.hash {
+                return Err(self.fail(format_args!(
+                    "chunk {} hash mismatch: computed {got:#x}, manifest {:#x}",
+                    c.index, c.hash
+                )));
+            }
+            stats.chunks_verified += 1;
+        }
+        stats.elapsed = t0.elapsed();
+        Ok(stats)
+    }
+}
+
+/// Counters from one read job, or the merged totals of a whole restore.
+#[derive(Debug, Clone, Default)]
+pub struct ReadStats {
+    /// Payload bytes read into the stream buffer.
+    pub bytes: u64,
+    /// Positioned payload reads issued (one per run under the direct
+    /// kinds while runs fit `io_buf_size`; `buffered_chunk`-sized steps
+    /// under the buffered kind).
+    pub preads: u64,
+    /// Small container-header validation reads (not payload).
+    pub prefix_reads: u64,
+    /// Contiguous runs after planning.
+    pub runs: u64,
+    /// Chunk reads merged away by the coalescing planner
+    /// (`chunks - runs` summed over segment jobs).
+    pub coalesced: u64,
+    /// Chunk-hash verifications folded into the read pass.
+    pub chunks_verified: u64,
+    /// Read jobs merged into these stats.
+    pub jobs: u64,
+    /// Wall time (max across merged jobs — they run concurrently).
+    pub elapsed: Duration,
+}
+
+impl ReadStats {
+    /// Fold another job's counters into these totals.
+    pub fn merge(&mut self, other: &ReadStats) {
+        self.bytes += other.bytes;
+        self.preads += other.preads;
+        self.prefix_reads += other.prefix_reads;
+        self.runs += other.runs;
+        self.coalesced += other.coalesced;
+        self.chunks_verified += other.chunks_verified;
+        self.jobs += other.jobs;
+        self.elapsed = self.elapsed.max(other.elapsed);
+    }
+}
+
+/// Submit every job to the runtime's reader pool and wait for all of
+/// them; returns the merged [`ReadStats`], or the first error after
+/// **all** tickets completed (so the shared stream buffer is no longer
+/// referenced by any reader thread either way).
+pub fn run_jobs(runtime: &IoRuntime, jobs: Vec<ReadJob>) -> Result<ReadStats> {
+    let tickets: Vec<ReadTicket> = jobs.into_iter().map(|j| runtime.submit_read(j)).collect();
+    let mut stats = ReadStats::default();
+    let mut first_err = None;
+    for t in tickets {
+        match t.wait() {
+            Ok(s) => stats.merge(&s),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::engine::scratch_dir;
+    use crate::io::runtime::IoRuntimeConfig;
+    use crate::util::rng::Rng;
+
+    fn part(file_off: u64, dest_off: u64, len: u64) -> ReadPart {
+        ReadPart { file_off, dest_off, len }
+    }
+
+    #[test]
+    fn planner_merges_adjacent_parts_only() {
+        // three chunks adjacent in file AND dest -> one run
+        let runs = plan_runs(vec![part(0, 0, 10), part(10, 10, 10), part(20, 20, 5)], true);
+        assert_eq!(runs, vec![part(0, 0, 25)]);
+        // file gap breaks the run
+        let runs = plan_runs(vec![part(0, 0, 10), part(14, 10, 10)], true);
+        assert_eq!(runs.len(), 2);
+        // dest gap breaks the run even if the file bytes are adjacent
+        let runs = plan_runs(vec![part(0, 0, 10), part(10, 99, 10)], true);
+        assert_eq!(runs.len(), 2);
+        // coalesce=false only sorts
+        let runs = plan_runs(vec![part(10, 10, 10), part(0, 0, 10)], false);
+        assert_eq!(runs, vec![part(0, 0, 10), part(10, 10, 10)]);
+        // zero-length parts vanish
+        assert!(plan_runs(vec![part(3, 3, 0)], true).is_empty());
+    }
+
+    #[test]
+    fn prop_planner_preserves_coverage_and_merges_only_adjacent() {
+        // The coalescing planner may merge chunks only when they are
+        // byte-adjacent (file and stream), and the merged runs must
+        // cover exactly the input bytes in the same file->dest mapping
+        // — i.e. it never reorders and never crosses a gap.
+        crate::prop::forall("read planner preserves byte mapping", 128, |g| {
+            // random disjoint parts along one file, identity-ish dest
+            // mapping with random per-part displacement
+            let n = g.usize(0, 24);
+            let mut file_off = 0u64;
+            let mut parts = Vec::new();
+            for _ in 0..n {
+                file_off += g.u64(0, 3); // occasional gaps
+                let len = g.u64(1, 5000);
+                let dest_off = file_off + if g.usize(0, 4) == 0 { g.u64(1, 9) << 32 } else { 0 };
+                parts.push(part(file_off, dest_off, len));
+                file_off += len;
+            }
+            let runs = plan_runs(parts.clone(), true);
+            // expand both sides into (file_byte -> dest_byte) mappings
+            let expand = |ps: &[ReadPart]| {
+                let mut m = std::collections::BTreeMap::new();
+                for p in ps {
+                    for i in 0..p.len {
+                        m.insert(p.file_off + i, p.dest_off + i);
+                    }
+                }
+                m
+            };
+            if expand(&parts) != expand(&runs) {
+                return false;
+            }
+            // runs must be sorted by file offset (no reordering) and
+            // separated by a genuine break on at least one axis
+            for w in runs.windows(2) {
+                if w[0].file_off + w[0].len > w[1].file_off {
+                    return false; // overlap or out of order
+                }
+                let file_adjacent = w[0].file_off + w[0].len == w[1].file_off;
+                let dest_adjacent = w[0].dest_off + w[0].len == w[1].dest_off;
+                if file_adjacent && dest_adjacent {
+                    return false; // should have been merged
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn job_reads_runs_into_disjoint_slices_and_verifies_hashes() {
+        let dir = scratch_dir("read-job").unwrap();
+        let rt = IoRuntime::new(IoRuntimeConfig::default());
+        let mut data = vec![0u8; 100_000];
+        Rng::new(3).fill_bytes(&mut data);
+        std::fs::write(dir.join("f.bin"), &data).unwrap();
+        let dest = rt.alloc_stream(60_000);
+        assert_eq!(rt.stream_allocations(), (1, 60_000));
+        // two scattered chunks, adjacent in neither axis
+        let parts =
+            vec![part(10_000, 0, 30_000), part(70_000, 30_000, 30_000)];
+        let checks: Vec<ChunkCheck> = parts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ChunkCheck {
+                index: i,
+                dest_off: p.dest_off,
+                len: p.len,
+                hash: checksum64_slice(
+                    &data[p.file_off as usize..(p.file_off + p.len) as usize],
+                ),
+            })
+            .collect();
+        let job = ReadJob {
+            path: dir.join("f.bin"),
+            dest: Arc::clone(&dest),
+            runs: plan_runs(parts, true),
+            checks,
+            coalesced: 0,
+            expect_file_len: Some(100_000),
+            prefix_check: None,
+            kind: None,
+            label: "segment",
+        };
+        let stats = rt.submit_read(job).wait().unwrap();
+        assert_eq!(stats.bytes, 60_000);
+        assert_eq!(stats.runs, 2);
+        assert_eq!(stats.preads, 2, "direct kind: one pread per run");
+        assert_eq!(stats.chunks_verified, 2);
+        let out = StreamBuffer::into_vec(dest).unwrap();
+        assert_eq!(&out[..30_000], &data[10_000..40_000]);
+        assert_eq!(&out[30_000..], &data[70_000..]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn buffered_kind_issues_small_reads() {
+        let dir = scratch_dir("read-buffered").unwrap();
+        let rt = IoRuntime::new(IoRuntimeConfig::default());
+        let data = vec![7u8; 256 << 10];
+        std::fs::write(dir.join("f.bin"), &data).unwrap();
+        let dest = rt.alloc_stream(data.len());
+        let job = ReadJob {
+            path: dir.join("f.bin"),
+            dest: Arc::clone(&dest),
+            runs: vec![part(0, 0, data.len() as u64)],
+            checks: Vec::new(),
+            coalesced: 0,
+            expect_file_len: None,
+            prefix_check: None,
+            kind: Some(EngineKind::Buffered),
+            label: "partition",
+        };
+        let stats = rt.submit_read(job).wait().unwrap();
+        // 256 KiB over 64 KiB buffered chunks -> 4 small reads
+        assert_eq!(stats.preads, 4);
+        assert_eq!(StreamBuffer::into_vec(dest).unwrap(), data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn job_failures_report_resolved_path() {
+        let rt = IoRuntime::new(IoRuntimeConfig::default());
+        let dest = rt.alloc_stream(10);
+        let missing = PathBuf::from("/nonexistent/fpck-feed/part-0.fpck");
+        let job = ReadJob {
+            path: missing.clone(),
+            dest,
+            runs: vec![part(0, 0, 10)],
+            checks: Vec::new(),
+            coalesced: 0,
+            expect_file_len: Some(10),
+            prefix_check: None,
+            kind: None,
+            label: "partition",
+        };
+        match rt.submit_read(job).wait() {
+            Err(Error::Format(msg)) => {
+                assert!(msg.contains("fpck-feed"), "error must carry the resolved path: {msg}")
+            }
+            other => panic!("expected open failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_file_length_is_rejected_before_reading() {
+        let dir = scratch_dir("read-len").unwrap();
+        let rt = IoRuntime::new(IoRuntimeConfig::default());
+        std::fs::write(dir.join("p.bin"), vec![1u8; 100]).unwrap();
+        let dest = rt.alloc_stream(200);
+        let job = ReadJob {
+            path: dir.join("p.bin"),
+            dest,
+            runs: vec![part(0, 0, 200)],
+            checks: Vec::new(),
+            coalesced: 0,
+            expect_file_len: Some(200),
+            prefix_check: None,
+            kind: None,
+            label: "partition",
+        };
+        match rt.submit_read(job).wait() {
+            Err(Error::Format(msg)) => {
+                assert!(msg.contains("100 bytes, manifest says 200"), "{msg}")
+            }
+            other => panic!("expected length error, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

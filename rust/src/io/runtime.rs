@@ -21,12 +21,17 @@
 //!   delivers the partition's [`WriteStats`] — the submission/completion
 //!   queue the checkpoint engine and the pipelined helper both feed;
 //! * a [`DeviceMap`] striping checkpoint partitions across the SSDs of
-//!   the training environment.
+//!   the training environment;
+//! * a persistent **reader pool** consuming [`crate::io::read::ReadJob`]s
+//!   (`submit_read -> ReadTicket`), the restore-side mirror of the
+//!   writer pool — see [`crate::io::read`] for the coalescing planner
+//!   and the single-copy stream buffer it serves.
 //!
 //! One runtime serves any number of concurrent checkpoints (pipelined
 //! helper + direct writes interleave through the same queues).
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver};
 use std::sync::Arc;
 
@@ -35,6 +40,7 @@ use crate::io::device::DeviceMap;
 use crate::io::direct_engine::DirectEngine;
 use crate::io::double_buffer::DrainPool;
 use crate::io::engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
+use crate::io::read::{ReadJob, ReadStats, StreamBuffer};
 use crate::io::sync_engine::BufferedEngine;
 use crate::serialize::writer::SerializedCheckpoint;
 use crate::util::threadpool::ThreadPool;
@@ -48,6 +54,9 @@ pub struct IoRuntimeConfig {
     pub io: IoConfig,
     /// Persistent partition-writer threads (the simulated rank writers).
     pub writer_threads: usize,
+    /// Persistent restore-reader threads (the parallel loaders of
+    /// §4.2's two-step load), servicing [`IoRuntime::submit_read`].
+    pub reader_threads: usize,
     /// Persistent drain workers shared by all staged sinks.
     pub drain_threads: usize,
     /// Staging buffers in the shared pool (each `io.io_buf_size` bytes).
@@ -61,6 +70,7 @@ impl Default for IoRuntimeConfig {
         IoRuntimeConfig {
             io: IoConfig::default(),
             writer_threads: 4,
+            reader_threads: 4,
             drain_threads: 2,
             staging_buffers: 4,
             devices: DeviceMap::single(),
@@ -183,6 +193,27 @@ impl Ticket {
     }
 }
 
+/// Completion handle for a submitted [`ReadJob`] — the restore-side
+/// [`Ticket`].
+pub struct ReadTicket {
+    rx: Receiver<Result<ReadStats>>,
+}
+
+impl ReadTicket {
+    /// Block until the job's runs are read and its folded checks pass;
+    /// returns the job's counters.
+    pub fn wait(self) -> Result<ReadStats> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Internal("reader pool dropped the job".into()))?
+    }
+
+    /// Non-blocking completion poll.
+    pub fn try_wait(&self) -> Option<Result<ReadStats>> {
+        self.rx.try_recv().ok()
+    }
+}
+
 /// Engine set + shared resources; lives behind an `Arc` so writer
 /// threads outlive any single submission site.
 struct RuntimeCore {
@@ -192,6 +223,11 @@ struct RuntimeCore {
     buffered: BufferedEngine,
     direct_single: DirectEngine,
     direct_double: DirectEngine,
+    /// Stream-assembly buffers handed out by [`IoRuntime::alloc_stream`]
+    /// (count, bytes) — the restore-side buffer accounting: a
+    /// single-copy load allocates exactly one stream of `total_len`.
+    stream_allocs: AtomicU64,
+    stream_alloc_bytes: AtomicU64,
 }
 
 impl RuntimeCore {
@@ -219,6 +255,7 @@ impl RuntimeCore {
 pub struct IoRuntime {
     core: Arc<RuntimeCore>,
     writers: ThreadPool,
+    readers: ThreadPool,
 }
 
 impl IoRuntime {
@@ -244,9 +281,12 @@ impl IoRuntime {
             io,
             staging,
             devices: cfg.devices,
+            stream_allocs: AtomicU64::new(0),
+            stream_alloc_bytes: AtomicU64::new(0),
         });
         let writers = ThreadPool::new(cfg.writer_threads.max(1), "ckpt-writer");
-        IoRuntime { core, writers }
+        let readers = ThreadPool::new(cfg.reader_threads.max(1), "ckpt-reader");
+        IoRuntime { core, writers, readers }
     }
 
     /// Construct with defaults around an [`IoConfig`], wrapped for
@@ -275,6 +315,29 @@ impl IoRuntime {
         self.writers.threads()
     }
 
+    /// Persistent restore-reader threads.
+    pub fn reader_threads(&self) -> usize {
+        self.readers.threads()
+    }
+
+    /// Allocate the single stream-assembly buffer of one restore,
+    /// counted by the runtime's stream-allocation accounting.
+    pub fn alloc_stream(&self, len: usize) -> Arc<StreamBuffer> {
+        self.core.stream_allocs.fetch_add(1, Ordering::Relaxed);
+        self.core.stream_alloc_bytes.fetch_add(len as u64, Ordering::Relaxed);
+        Arc::new(StreamBuffer::zeroed(len))
+    }
+
+    /// Stream-assembly buffers handed out so far as `(count, bytes)` —
+    /// the buffer-accounting counters behind the single-allocation
+    /// restore guarantee.
+    pub fn stream_allocations(&self) -> (u64, u64) {
+        (
+            self.core.stream_allocs.load(Ordering::Relaxed),
+            self.core.stream_alloc_bytes.load(Ordering::Relaxed),
+        )
+    }
+
     /// Submit a write job to the persistent writer pool; returns its
     /// completion ticket immediately.
     pub fn submit(&self, job: WriteJob) -> Ticket {
@@ -291,6 +354,21 @@ impl IoRuntime {
     pub fn write_bytes(&self, path: PathBuf, data: Arc<Vec<u8>>) -> Result<WriteStats> {
         self.submit(WriteJob::bytes(data, path)).wait()
     }
+
+    /// Submit a read job to the persistent reader pool; returns its
+    /// completion ticket immediately. The job's `Arc<StreamBuffer>` is
+    /// released *before* the ticket completes, so a loader that has
+    /// waited on every ticket holds the last reference.
+    pub fn submit_read(&self, job: ReadJob) -> ReadTicket {
+        let (tx, rx) = mpsc::channel();
+        let core = Arc::clone(&self.core);
+        self.readers.execute(move || {
+            let result = job.execute(&core.io);
+            drop(job); // release the stream buffer before signaling
+            let _ = tx.send(result);
+        });
+        ReadTicket { rx }
+    }
 }
 
 #[cfg(test)]
@@ -306,6 +384,7 @@ mod tests {
             drain_threads: 1,
             staging_buffers: buffers,
             devices: DeviceMap::single(),
+            ..IoRuntimeConfig::default()
         })
     }
 

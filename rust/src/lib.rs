@@ -14,7 +14,11 @@
 //!    All I/O resources live in a persistent [`io::IoRuntime`]: one
 //!    recycled staging pool, persistent writer/drain thread pools fed by
 //!    a submission/completion ticket queue, and an [`io::DeviceMap`]
-//!    striping checkpoint partitions across the available SSDs.
+//!    striping checkpoint partitions across the available SSDs. The
+//!    restore path is the mirror image ([`io::read`]): a persistent
+//!    reader pool assembling coalesced positioned reads into one
+//!    single-copy stream buffer, with verification folded into the
+//!    read pass.
 //! 2. **Parallel checkpoint writes across data-parallel ranks**
 //!    ([`checkpoint::plan`], [`checkpoint::strategy`]): byte-granularity
 //!    partitioning of the serialized checkpoint over DP replicas, with

@@ -101,6 +101,8 @@ fn train_spec(name: &'static str) -> ArgSpec {
         .opt("strategy", "rank0|replica|socket|node|fixedN", "replica")
         .opt("ckpt", "full | delta | deltaN (incremental, compact after N; \
                        --strategy applies to full only)", "full")
+        .opt("segment-bytes", "target payload bytes per delta segment file \
+                               (>= 4 KiB)", "64MiB")
         .opt("engine", "buffered|single|double", "double")
         .opt("io-buf", "IO buffer size", "32MiB")
         .opt("devices", "none | simN (N simulated SSDs) | dir,dir,...", "none")
@@ -138,6 +140,13 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
     io.io_buf_size = parsed.get_size("io-buf")? as usize;
     let ckpt_dir = PathBuf::from(parsed.get("ckpt-dir"));
     let devices = parse_devices(parsed.get("devices"), &ckpt_dir)?;
+    let segment_bytes = parsed.get_size("segment-bytes")?;
+    if segment_bytes < 4096 {
+        return Err(Error::Config(format!(
+            "--segment-bytes must be at least the 4 KiB alignment unit, got {segment_bytes} \
+             (segments pack 4 KiB-aligned chunks; smaller segments cannot hold one)"
+        )));
+    }
     let cfg = TrainerConfig {
         model: parsed.get("model").to_string(),
         steps: parsed.get_usize("steps")? as u64,
@@ -148,6 +157,7 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
         ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::parse(
             parsed.get("ckpt"),
         )?,
+        segment_bytes,
         io,
         devices,
         dp_writers: parsed.get_usize("writers")?,
@@ -159,7 +169,22 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
     };
     let mut trainer = if resume {
         let t = Trainer::resume(&manifest, cfg)?;
-        println!("resumed at step {}", t.state.step);
+        match &t.restore {
+            // the restore's read-path accounting, symmetric with the
+            // write-job/fsync metrics printed after the run
+            Some(r) => println!(
+                "resumed at step {}: restored {} in {} read jobs \
+                 ({} runs, {} coalesced chunk reads, {} preads) — {:.2} GB/s",
+                t.state.step,
+                human(r.total_bytes),
+                r.stats.jobs,
+                r.stats.runs,
+                r.stats.coalesced,
+                r.stats.preads,
+                r.gbps(),
+            ),
+            None => println!("resumed at step {}", t.state.step),
+        }
         t
     } else {
         Trainer::new(&manifest, cfg)?
@@ -199,6 +224,19 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
             jobs,
             r.summary("ckpt_write_jobs").mean,
             r.total("ckpt_fsyncs"),
+        );
+    }
+    let read_bytes = r.total("ckpt_read_bytes");
+    if read_bytes > 0.0 {
+        let restore_s = r.total("ckpt_restore_s");
+        println!(
+            "ckpt read jobs {:.0}, coalesced chunk reads {:.0}, preads {:.0} — \
+             restored {} at {:.2} GB/s",
+            r.total("ckpt_read_jobs"),
+            r.total("ckpt_read_coalesced"),
+            r.total("ckpt_read_preads"),
+            human(read_bytes as u64),
+            fastpersist::util::bytes::gbps(read_bytes as u64, restore_s),
         );
     }
     Ok(())

@@ -1,14 +1,39 @@
 //! Checkpoint reader: parse + verify a serialized checkpoint stream and
 //! reconstruct the [`TensorStore`].
+//!
+//! Verification is **folded** into the parse: reconstructing tensors
+//! already requires one pass over the data section, and that same pass
+//! produces the data digest. [`parse_verified`] additionally combines
+//! it with the (cheap) header digest into the manifest's composite
+//! stream digest — so a restore makes exactly one post-assembly pass
+//! over the stream instead of a digest pass *plus* a parse pass.
 
 use std::path::Path;
 
-use crate::serialize::format::{checksum64_slice, FormatHeader};
+use crate::serialize::format::{checksum64_slice, combine_digests, FormatHeader};
 use crate::tensor::{Tensor, TensorMeta, TensorStore};
 use crate::{Error, Result};
 
 /// Parse a full checkpoint stream from memory; verifies the data digest.
 pub fn parse_checkpoint(bytes: &[u8]) -> Result<(TensorStore, FormatHeader)> {
+    parse_inner(bytes, None)
+}
+
+/// Like [`parse_checkpoint`], additionally verifying the manifest's
+/// composite stream digest (header ‖ data halves, see
+/// [`crate::serialize::format::stream_digest_of`]) — folded into the
+/// parse's single data pass, not a separate pass over the stream.
+pub fn parse_verified(
+    bytes: &[u8],
+    stream_digest: u64,
+) -> Result<(TensorStore, FormatHeader)> {
+    parse_inner(bytes, Some(stream_digest))
+}
+
+fn parse_inner(
+    bytes: &[u8],
+    expect_stream_digest: Option<u64>,
+) -> Result<(TensorStore, FormatHeader)> {
     let (header, data_start) = FormatHeader::decode(bytes)?;
     let data = bytes
         .get(data_start..)
@@ -26,6 +51,16 @@ pub fn parse_checkpoint(bytes: &[u8]) -> Result<(TensorStore, FormatHeader)> {
             "digest mismatch: computed {digest:#x}, header {:#x}",
             header.digest
         )));
+    }
+    if let Some(expect) = expect_stream_digest {
+        // combine with the header half: same composite the writer's
+        // single-pass digest produced for the manifest
+        let got = combine_digests(checksum64_slice(&bytes[..data_start]), digest);
+        if got != expect {
+            return Err(Error::Format(format!(
+                "stream digest mismatch: computed {got:#x}, manifest {expect:#x}"
+            )));
+        }
     }
     TensorMeta::check_contiguous(&header.tensors)?;
     let mut store = TensorStore::new();
@@ -82,6 +117,22 @@ mod tests {
         let (loaded, header) = parse_checkpoint(&ser.to_bytes()).unwrap();
         assert!(loaded.content_eq(&store));
         assert_eq!(header.extra["lr"], Json::Float(0.001));
+    }
+
+    #[test]
+    fn parse_verified_checks_the_composite_stream_digest() {
+        let store = sample_store();
+        let ser = SerializedCheckpoint::new(&store, BTreeMap::new());
+        let bytes = ser.to_bytes();
+        // the writer's single-pass digest verifies through the parse
+        let (loaded, _) = parse_verified(&bytes, ser.stream_digest()).unwrap();
+        assert!(loaded.content_eq(&store));
+        // a wrong manifest digest is caught even though header and data
+        // are internally consistent
+        match parse_verified(&bytes, ser.stream_digest() ^ 1) {
+            Err(Error::Format(msg)) => assert!(msg.contains("stream digest"), "{msg}"),
+            other => panic!("expected stream-digest error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -17,12 +17,13 @@ use std::sync::Arc;
 
 use crate::checkpoint::delta::{self, CheckpointStrategy, DeltaCheckpointer};
 use crate::checkpoint::engine::CheckpointEngine;
-use crate::checkpoint::load::load_checkpoint;
+use crate::checkpoint::load::{load_checkpoint_with, RestoreOptions};
 use crate::checkpoint::pipeline::PipelinedCheckpointer;
 use crate::checkpoint::strategy::WriterStrategy;
 use crate::cluster::topology::RankPlacement;
 use crate::io::device::DeviceMap;
 use crate::io::engine::{EngineKind, IoConfig};
+use crate::io::read::ReadStats;
 use crate::io::runtime::{IoRuntime, IoRuntimeConfig};
 use crate::metrics::{Recorder, Timer};
 use crate::runtime::artifacts::ArtifactManifest;
@@ -82,6 +83,11 @@ pub struct TrainerConfig {
     /// Delta applies to `Sync` and `Pipelined` modes; `Baseline` is the
     /// torch.save stand-in and stays full-snapshot.
     pub ckpt_strategy: CheckpointStrategy,
+    /// Target payload bytes per delta segment file (`--segment-bytes`;
+    /// see [`crate::checkpoint::delta::DeltaConfig::segment_bytes`]).
+    /// Applied to the delta writer whatever `ckpt_strategy` spelled out;
+    /// must be at least the 4 KiB alignment unit.
+    pub segment_bytes: u64,
     /// Write-path tuning (engine kind, staging size, durability).
     pub io: IoConfig,
     /// Storage mount points to stripe checkpoint partitions across
@@ -119,6 +125,7 @@ impl TrainerConfig {
             mode: CkptRunMode::Pipelined,
             strategy: WriterStrategy::AllReplicas,
             ckpt_strategy: CheckpointStrategy::Full,
+            segment_bytes: delta::DeltaConfig::default().segment_bytes,
             io: IoConfig::fastpersist(),
             devices: DeviceMap::single(),
             dp_writers: 2,
@@ -131,6 +138,26 @@ impl TrainerConfig {
     }
 }
 
+/// Read-path accounting of the restore a resumed trainer booted from —
+/// the symmetric counterpart of the per-checkpoint write-job/fsync
+/// metrics.
+#[derive(Debug, Clone)]
+pub struct RestoreReport {
+    /// Merged counters from every read job of the restore.
+    pub stats: ReadStats,
+    /// Wall latency of the whole restore (read + verify + parse).
+    pub latency: std::time::Duration,
+    /// Stream bytes the restore assembled.
+    pub total_bytes: u64,
+}
+
+impl RestoreReport {
+    /// Restore throughput in decimal GB/s.
+    pub fn gbps(&self) -> f64 {
+        crate::util::bytes::gbps(self.total_bytes, self.latency.as_secs_f64())
+    }
+}
+
 /// The training driver.
 pub struct Trainer {
     /// The run's configuration.
@@ -139,6 +166,9 @@ pub struct Trainer {
     pub state: TrainState,
     /// Per-iteration metrics (loss, timings, counters).
     pub recorder: Recorder,
+    /// Read-path accounting of the checkpoint restore this trainer was
+    /// resumed from (`None` for fresh runs).
+    pub restore: Option<RestoreReport>,
     grad_exe: Executable,
     adam_exe: Executable,
     corpus: SyntheticCorpus,
@@ -180,17 +210,61 @@ impl Trainer {
     }
 
     /// Build a trainer resuming from the latest checkpoint in
-    /// `cfg.ckpt_dir` (error if none found).
+    /// `cfg.ckpt_dir` (error if none found). The restore goes through
+    /// the same shared [`IoRuntime`] the trainer will checkpoint with —
+    /// its reader pool, device map and stream-buffer accounting — and
+    /// the read-path counters land in [`Trainer::restore`] plus the
+    /// `ckpt_read_*` recorder metrics.
     pub fn resume(manifest: &ArtifactManifest, cfg: TrainerConfig) -> Result<Trainer> {
+        let runtime = Self::runtime_for(&cfg);
+        Self::resume_with_runtime(manifest, cfg, runtime)
+    }
+
+    /// Like [`Trainer::resume`], restoring through (and then submitting
+    /// checkpoints into) an injected shared runtime.
+    pub fn resume_with_runtime(
+        manifest: &ArtifactManifest,
+        cfg: TrainerConfig,
+        runtime: Arc<IoRuntime>,
+    ) -> Result<Trainer> {
         let artifact = manifest.config(&cfg.model)?.clone();
         let latest = Self::latest_checkpoint(&cfg.ckpt_dir)?
             .ok_or_else(|| Error::Config(format!(
                 "no checkpoint found under {}",
                 cfg.ckpt_dir.display()
             )))?;
-        let (store, header, _) = load_checkpoint(&latest, cfg.dp_writers.max(1))?;
-        let state = TrainState::from_store(&artifact, &store, &header.extra)?;
-        Self::with_state(manifest, cfg, state, None, true)
+        let loaded = load_checkpoint_with(&latest, &runtime, RestoreOptions::default())?;
+        let state = TrainState::from_store(&artifact, &loaded.store, &loaded.header.extra)?;
+        let mut trainer = Self::with_state(manifest, cfg, state, Some(runtime), true)?;
+        let report = RestoreReport {
+            total_bytes: loaded.manifest.total_len,
+            latency: loaded.latency,
+            stats: loaded.stats,
+        };
+        trainer.recorder.record("ckpt_read_bytes", report.stats.bytes as f64);
+        trainer.recorder.record("ckpt_read_jobs", report.stats.jobs as f64);
+        trainer.recorder.record("ckpt_read_preads", report.stats.preads as f64);
+        trainer.recorder.record("ckpt_read_coalesced", report.stats.coalesced as f64);
+        trainer.recorder.record("ckpt_restore_s", report.latency.as_secs_f64());
+        trainer.restore = Some(report);
+        Ok(trainer)
+    }
+
+    /// The persistent runtime a config implies: the trainer's staging
+    /// pool, writer/reader pools, and device map (shared by every
+    /// checkpoint write *and* the resume-time restore).
+    fn runtime_for(cfg: &TrainerConfig) -> Arc<IoRuntime> {
+        let defaults = IoRuntimeConfig::default();
+        Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: cfg.io.clone(),
+            devices: cfg.devices.clone(),
+            // "N writers" must mean N concurrent partition writes (and
+            // symmetric parallel restore reads): size both persistent
+            // pools to the DP writer count.
+            writer_threads: cfg.dp_writers.max(defaults.writer_threads),
+            reader_threads: cfg.dp_writers.max(defaults.reader_threads),
+            ..defaults
+        }))
     }
 
     fn with_state(
@@ -212,23 +286,19 @@ impl Trainer {
             .collect();
         // One persistent I/O runtime for the whole run: every checkpoint
         // (sync or pipelined) borrows its staging buffers and writer
-        // threads, and its device map routes the partitions. A caller
-        // may inject an already-shared runtime instead.
+        // threads, every restore its reader threads, and its device map
+        // routes the partitions. A caller may inject an already-shared
+        // runtime instead.
         let io_runtime = match shared_runtime {
             Some(rt) => rt,
-            None => {
-                let defaults = IoRuntimeConfig::default();
-                Arc::new(IoRuntime::new(IoRuntimeConfig {
-                    io: cfg.io.clone(),
-                    devices: cfg.devices.clone(),
-                    // "N writers" must mean N concurrent partition
-                    // writes: size the persistent pool to the DP writer
-                    // count.
-                    writer_threads: cfg.dp_writers.max(defaults.writer_threads),
-                    ..defaults
-                }))
-            }
+            None => Self::runtime_for(&cfg),
         };
+        if cfg.segment_bytes < 4096 {
+            return Err(Error::Config(format!(
+                "segment-bytes must be at least the 4 KiB alignment unit, got {}",
+                cfg.segment_bytes
+            )));
+        }
         let ckpt_on = cfg.ckpt_every > 0;
         let delta_cfg = match cfg.ckpt_strategy {
             CheckpointStrategy::Full => None,
@@ -239,7 +309,10 @@ impl Trainer {
         // Fresh runs always start a base — attaching would make the new
         // run's checkpoints reference whatever stale chain happens to
         // live in a reused directory.
-        let make_delta = |d| -> Result<DeltaCheckpointer> {
+        let make_delta = |d: delta::DeltaConfig| -> Result<DeltaCheckpointer> {
+            // thread the CLI/TrainerConfig segment-size knob into the
+            // delta writer's segment packing
+            let d = delta::DeltaConfig { segment_bytes: cfg.segment_bytes, ..d };
             let mut dk = DeltaCheckpointer::new(Arc::clone(&io_runtime), d);
             if resumed {
                 if let Some(latest) = Self::latest_checkpoint(&cfg.ckpt_dir)? {
@@ -288,6 +361,7 @@ impl Trainer {
             cfg,
             state,
             recorder: Recorder::new(),
+            restore: None,
             grad_exe,
             adam_exe,
             corpus,
@@ -635,7 +709,7 @@ mod tests {
             t.run().unwrap();
             let latest = Trainer::latest_checkpoint(&dir).unwrap().unwrap();
             let (store, header, _) =
-                crate::checkpoint::load::load_checkpoint(&latest, 2).unwrap();
+                crate::checkpoint::load::load_checkpoint(&latest, t.io_runtime()).unwrap();
             assert_eq!(header.extra["step"], crate::util::json::Json::Int(3));
             stores.push(store);
         }
@@ -681,11 +755,44 @@ mod tests {
             fsyncs.iter().zip(&jobs).all(|(f, j)| f == j),
             "durable delta writes fsync once per segment"
         );
-        // a delta-chain resume restores bit-identical state
+        // a delta-chain resume restores bit-identical state, and its
+        // read-path accounting is surfaced symmetrically with the
+        // write-job/fsync metrics
         let t2 = Trainer::resume(&m, cfg).unwrap();
         assert_eq!(t2.state.step, 5);
         assert_eq!(t2.state.theta, theta_after5);
+        let report = t2.restore.as_ref().expect("resume must report its restore");
+        assert!(report.stats.jobs > 0);
+        assert_eq!(report.stats.bytes, report.total_bytes);
+        assert!(report.stats.coalesced > 0, "chain restore must coalesce adjacent chunks");
+        assert_eq!(t2.recorder.samples("ckpt_read_jobs").len(), 1);
+        assert_eq!(
+            t2.recorder.total("ckpt_read_coalesced"),
+            report.stats.coalesced as f64
+        );
+        // the restore went through the trainer's own shared runtime:
+        // exactly one stream allocation of the manifest's total_len
+        assert_eq!(
+            t2.io_runtime().stream_allocations(),
+            (1, report.total_bytes),
+            "one restore = one stream buffer of total_len"
+        );
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn segment_bytes_below_alignment_is_rejected() {
+        let Some(m) = manifest() else { return };
+        let dir = scratch("train-segbytes");
+        let mut cfg = TrainerConfig::quick("tiny", dir.clone());
+        cfg.segment_bytes = 1024; // below the 4 KiB alignment unit
+        match Trainer::new(&m, cfg) {
+            Err(crate::Error::Config(msg)) => {
+                assert!(msg.contains("4 KiB"), "clear alignment error expected: {msg}")
+            }
+            other => panic!("expected config error, got {:?}", other.map(|_| ())),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -49,7 +49,7 @@ fn all_engines_and_strategies_roundtrip() {
             let engine = CheckpointEngine::new(IoConfig::with_kind(kind), strategy);
             let out = engine.write(&store, extra.clone(), &d, &dp_group(8)).unwrap();
             assert_eq!(out.manifest.step, 9);
-            let (loaded, header, manifest) = load_checkpoint(&d, 4).unwrap();
+            let (loaded, header, manifest) = load_checkpoint(&d, engine.runtime()).unwrap();
             assert!(loaded.content_eq(&store), "{kind:?}/{strategy:?}");
             assert_eq!(header.extra["step"], Json::Int(9));
             assert_eq!(manifest.total_len, out.total_bytes);
@@ -92,7 +92,7 @@ fn fuzz_roundtrip_many_shapes() {
         let d = dir.join(format!("f{seed}"));
         let engine = CheckpointEngine::new(IoConfig::with_kind(kind), WriterStrategy::AllReplicas);
         engine.write(&store, BTreeMap::new(), &d, &dp_group(dp)).unwrap();
-        let (loaded, _, _) = load_checkpoint(&d, 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&d, engine.runtime()).unwrap();
         assert!(loaded.content_eq(&store), "seed={seed}");
     }
     std::fs::remove_dir_all(&dir).unwrap();
@@ -113,7 +113,7 @@ fn concurrent_checkpoints_do_not_interfere() {
                     WriterStrategy::AllReplicas,
                 );
                 engine.write(&store, BTreeMap::new(), &d, &dp_group(2)).unwrap();
-                let (loaded, _, _) = load_checkpoint(&d, 2).unwrap();
+                let (loaded, _, _) = load_checkpoint(&d, engine.runtime()).unwrap();
                 assert!(loaded.content_eq(&store));
             });
         }

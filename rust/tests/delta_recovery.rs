@@ -88,10 +88,10 @@ fn interrupted_delta_flush_falls_back_to_last_complete_chain() {
     // unloadable directly
     let latest = Trainer::latest_checkpoint(&dir).unwrap().unwrap();
     assert!(latest.ends_with("step-00000002"), "latest = {latest:?}");
-    assert!(load_checkpoint(&step3, 2).is_err());
+    assert!(load_checkpoint(&step3, ck.runtime()).is_err());
 
     // the surviving chain reloads bit-identically
-    let (loaded, header, manifest) = load_checkpoint(&latest, 3).unwrap();
+    let (loaded, header, manifest) = load_checkpoint(&latest, ck.runtime()).unwrap();
     assert!(loaded.content_eq(&state_at_2));
     assert_eq!(header.extra["step"], Json::Int(2));
     assert_eq!(manifest.delta.as_ref().unwrap().chain_len, 1);
@@ -112,7 +112,7 @@ fn interrupted_delta_flush_falls_back_to_last_complete_chain() {
         out.written_bytes,
         out.total_bytes
     );
-    let (reloaded, _, _) = load_checkpoint(&dir.join("step-00000004"), 2).unwrap();
+    let (reloaded, _, _) = load_checkpoint(&dir.join("step-00000004"), ck.runtime()).unwrap();
     assert!(reloaded.content_eq(&s2));
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -137,7 +137,7 @@ fn base_delta_delta_chain_is_bit_identical_through_load() {
     for (i, snap) in snapshots.iter().enumerate() {
         let step = i as i64 + 1;
         let (loaded, header, _) =
-            load_checkpoint(&dir.join(format!("step-{step:08}")), 2).unwrap();
+            load_checkpoint(&dir.join(format!("step-{step:08}")), ck.runtime()).unwrap();
         assert!(loaded.content_eq(snap), "step {step}");
         assert_eq!(header.extra["step"], Json::Int(step));
         let a = fastpersist::serialize::writer::SerializedCheckpoint::new(&loaded, extra(step))
@@ -187,7 +187,8 @@ fn compaction_gc_reclaims_dead_segment_bytes_across_prune() {
     assert!(stats.reclaimed_bytes > 0, "GC must account reclaimed bytes");
     // kept checkpoints still load (rewrite preserved chunk offsets)
     for step in [3i64, 4] {
-        assert!(load_checkpoint(&dir.join(format!("step-{step:08}")), 2).is_ok(), "step {step}");
+        let d = dir.join(format!("step-{step:08}"));
+        assert!(load_checkpoint(&d, ck.runtime()).is_ok(), "step {step}");
     }
 
     // once the old chain ages out entirely, its directories disappear
@@ -196,6 +197,6 @@ fn compaction_gc_reclaims_dead_segment_bytes_across_prune() {
     assert!(!dir.join("step-00000001").exists());
     assert!(!dir.join("step-00000002").exists());
     assert!(!dir.join("step-00000003").exists());
-    assert!(load_checkpoint(&dir.join("step-00000004"), 2).is_ok());
+    assert!(load_checkpoint(&dir.join("step-00000004"), ck.runtime()).is_ok());
     std::fs::remove_dir_all(&dir).unwrap();
 }

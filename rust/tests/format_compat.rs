@@ -3,15 +3,22 @@
 //! `rust/tests/fixtures/v3/` holds a checked-in two-checkpoint delta
 //! chain in the **manifest v3** layout (uniform whole-stream chunk
 //! grid, one `chunk-NNNNNN.fpck` file per chunk) exactly as written by
-//! the pre-segment-store code. The current (v4, segment-file) reader
-//! must keep reloading it bit-identically — see `docs/FORMATS.md` for
-//! the version matrix.
+//! the pre-segment-store code, and `rust/tests/fixtures/v4/` the same
+//! logical chain in the **manifest v4** segment-store layout (FPSG
+//! segment files, header-split grid). The current ReadRuntime-based
+//! loader must keep reloading both bit-identically — see
+//! `docs/FORMATS.md` for the version matrix.
+//!
+//! The v4 fixture was produced by the `generate_v4_fixture` test below
+//! (`cargo test --test format_compat -- --ignored generate_v4_fixture`);
+//! regenerate it only when the *writer* intentionally changes layout,
+//! never to make the reader pass.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
-use fastpersist::checkpoint::load::load_checkpoint;
+use fastpersist::checkpoint::load::{load_checkpoint, load_checkpoint_with, RestoreOptions};
 use fastpersist::checkpoint::manifest::CheckpointManifest;
 use fastpersist::io::engine::IoConfig;
 use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
@@ -22,7 +29,18 @@ fn fixture_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/v3")
 }
 
-/// The deterministic tensor the fixture generator serialized: byte `i`
+fn fixture_dir_v4() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/v4")
+}
+
+fn runtime() -> Arc<IoRuntime> {
+    Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        ..IoRuntimeConfig::default()
+    }))
+}
+
+/// The deterministic tensor the fixture generators serialized: byte `i`
 /// is `(i * 131 + 7) % 256`, with step 2 XOR-ing `0x5a` over the 10%
 /// region starting at one third.
 fn expected_store(mutated: bool) -> TensorStore {
@@ -44,9 +62,10 @@ fn expected_store(mutated: bool) -> TensorStore {
 fn v3_per_chunk_file_checkpoints_reload_bit_identically() {
     let dir = fixture_dir();
     assert!(dir.join("step-00000001").is_dir(), "fixture missing: {dir:?}");
+    let rt = runtime();
 
     // the base (all chunks local, per-chunk files)
-    let (base, header, manifest) = load_checkpoint(&dir.join("step-00000001"), 3).unwrap();
+    let (base, header, manifest) = load_checkpoint(&dir.join("step-00000001"), &rt).unwrap();
     assert!(base.content_eq(&expected_store(false)), "v3 base reload diverged");
     assert_eq!(header.extra["step"], Json::Int(1));
     let delta = manifest.delta.as_ref().expect("fixture base is a delta-layout manifest");
@@ -54,8 +73,42 @@ fn v3_per_chunk_file_checkpoints_reload_bit_identically() {
     assert!(delta.chunks.iter().all(|c| c.seg.is_none()), "v3 chunks carry no segment refs");
 
     // the delta link: clean chunks resolved from the sibling base dir
-    let (linked, header, manifest) = load_checkpoint(&dir.join("step-00000002"), 3).unwrap();
+    let (linked, header, manifest) = load_checkpoint(&dir.join("step-00000002"), &rt).unwrap();
     assert!(linked.content_eq(&expected_store(true)), "v3 delta reload diverged");
+    assert_eq!(header.extra["step"], Json::Int(2));
+    let delta = manifest.delta.as_ref().unwrap();
+    assert_eq!(delta.chain_len, 1);
+    assert_eq!(delta.base.as_deref(), Some("step-00000001"));
+    assert!(delta.chunks.iter().any(|c| c.source.is_some()), "delta must inherit chunks");
+}
+
+#[test]
+fn v4_segment_checkpoints_reload_bit_identically() {
+    let dir = fixture_dir_v4();
+    assert!(dir.join("step-00000001").is_dir(), "fixture missing: {dir:?}");
+    let rt = runtime();
+
+    // the base: all chunks local, packed into segment files
+    let loaded =
+        load_checkpoint_with(&dir.join("step-00000001"), &rt, RestoreOptions::default()).unwrap();
+    assert!(loaded.store.content_eq(&expected_store(false)), "v4 base reload diverged");
+    assert_eq!(loaded.header.extra["step"], Json::Int(1));
+    let delta = loaded.manifest.delta.as_ref().expect("v4 base carries a delta section");
+    assert!(delta.header_len > 0, "v4 manifests use the header-split grid");
+    assert!(delta.chunks.iter().all(|c| c.seg.is_some()), "v4 chunks carry segment refs");
+    // chunk-hash verification is folded into the read pass, and the
+    // base's byte-adjacent chunks coalesce below one pread per chunk
+    assert_eq!(loaded.stats.chunks_verified as usize, delta.chunks.len());
+    assert!(
+        loaded.stats.preads < delta.chunks.len() as u64,
+        "adjacent v4 chunks must coalesce: {} preads for {} chunks",
+        loaded.stats.preads,
+        delta.chunks.len()
+    );
+
+    // the delta link: inherited chunks resolve into the base's segments
+    let (linked, header, manifest) = load_checkpoint(&dir.join("step-00000002"), &rt).unwrap();
+    assert!(linked.content_eq(&expected_store(true)), "v4 delta reload diverged");
     assert_eq!(header.extra["step"], Json::Int(2));
     let delta = manifest.delta.as_ref().unwrap();
     assert_eq!(delta.chain_len, 1);
@@ -68,12 +121,8 @@ fn v3_manifest_does_not_seed_a_v4_chain() {
     // A restarted writer pointed at a v3 checkpoint must fall back to
     // base mode (its uniform grid cannot seed the header-split segment
     // diff) rather than silently producing a mixed-layout chain.
-    let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
-        io: IoConfig::fastpersist().microbench(),
-        ..IoRuntimeConfig::default()
-    }));
     let mut ck = DeltaCheckpointer::new(
-        rt,
+        runtime(),
         DeltaConfig { chunk_size: 4096, max_chain: 8, ..DeltaConfig::default() },
     );
     let resumed = ck.resume_from(&fixture_dir().join("step-00000002")).unwrap();
@@ -82,12 +131,47 @@ fn v3_manifest_does_not_seed_a_v4_chain() {
 }
 
 #[test]
-fn fixture_manifest_reports_version_3() {
+fn fixture_manifests_report_their_versions() {
     let text =
         std::fs::read_to_string(fixture_dir().join("step-00000002/checkpoint.json")).unwrap();
     let v = Json::parse(&text).unwrap();
     assert_eq!(v.get("manifest_version").unwrap().as_i64().unwrap(), 3);
-    // and the current writer emits v4
-    assert_eq!(fastpersist::checkpoint::manifest::MANIFEST_VERSION, 4);
     let _ = CheckpointManifest::from_json(&v).unwrap();
+    // the v4 fixture is exactly what the current writer emits
+    let text =
+        std::fs::read_to_string(fixture_dir_v4().join("step-00000002/checkpoint.json")).unwrap();
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(
+        v.get("manifest_version").unwrap().as_i64().unwrap(),
+        fastpersist::checkpoint::manifest::MANIFEST_VERSION
+    );
+    let _ = CheckpointManifest::from_json(&v).unwrap();
+}
+
+/// Fixture generator — run by hand, never in CI:
+///
+/// ```text
+/// cargo test --test format_compat -- --ignored generate_v4_fixture
+/// ```
+///
+/// Writes the deterministic two-checkpoint chain of [`expected_store`]
+/// into `rust/tests/fixtures/v4/` with the *current* (v4) writer.
+#[test]
+#[ignore = "regenerates the committed v4 fixture"]
+fn generate_v4_fixture() {
+    let dir = fixture_dir_v4();
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut ck = DeltaCheckpointer::new(
+        runtime(),
+        DeltaConfig { chunk_size: 4096, max_chain: 8, ..DeltaConfig::default() },
+    );
+    let mut extra = std::collections::BTreeMap::new();
+    extra.insert("step".to_string(), Json::Int(1));
+    let out = ck.write(&expected_store(false), extra, &dir.join("step-00000001")).unwrap();
+    assert!(out.is_base);
+    let mut extra = std::collections::BTreeMap::new();
+    extra.insert("step".to_string(), Json::Int(2));
+    let out = ck.write(&expected_store(true), extra, &dir.join("step-00000002")).unwrap();
+    assert!(!out.is_base, "fixture step 2 must be a delta link");
 }

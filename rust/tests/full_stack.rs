@@ -25,6 +25,7 @@ fn cfg(model: &str, dir: PathBuf) -> TrainerConfig {
         mode: CkptRunMode::Pipelined,
         strategy: WriterStrategy::AllReplicas,
         ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::Full,
+        segment_bytes: 64 << 20,
         io: IoConfig::fastpersist().microbench(),
         devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,

@@ -81,10 +81,12 @@ fn interleaved_pipelined_and_direct_checkpoints_share_one_runtime() {
     assert_eq!(outcomes.len(), iters as usize);
 
     for i in 0..iters {
-        let (loaded, header, _) = load_checkpoint(&dir.join(format!("pipe{i}")), 2).unwrap();
+        let (loaded, header, _) =
+            load_checkpoint(&dir.join(format!("pipe{i}")), &runtime).unwrap();
         assert!(loaded.content_eq(&pipe_stores[i as usize]), "pipe{i}");
         assert_eq!(header.extra["step"], Json::Int(i));
-        let (loaded, header, _) = load_checkpoint(&dir.join(format!("direct{i}")), 2).unwrap();
+        let (loaded, header, _) =
+            load_checkpoint(&dir.join(format!("direct{i}")), &runtime).unwrap();
         assert!(loaded.content_eq(&direct_stores[i as usize]), "direct{i}");
         assert_eq!(header.extra["step"], Json::Int(i));
     }
@@ -113,7 +115,7 @@ fn steady_state_interleaving_never_allocates_staging_buffers() {
             scope.spawn(move || {
                 let s = store_with(10 + t, 80_000);
                 engine.write(&s, extra(t as i64), &d, &dp_group(2)).unwrap();
-                let (loaded, _, _) = load_checkpoint(&d, 2).unwrap();
+                let (loaded, _, _) = load_checkpoint(&d, engine.runtime()).unwrap();
                 assert!(loaded.content_eq(&s));
             });
         }
@@ -148,7 +150,7 @@ fn multi_device_dp8_roundtrip_is_bit_identical() {
         assert!(root.ends_with(&format!("ssd{}", i % 2)), "partition {i} on {root}");
     }
 
-    let (loaded, header, manifest) = load_checkpoint(&dir, 4).unwrap();
+    let (loaded, header, manifest) = load_checkpoint(&dir, engine.runtime()).unwrap();
     assert!(loaded.content_eq(&store), "multi-device reload must be bit-identical");
     assert_eq!(header.extra["step"], Json::Int(9));
     assert_eq!(manifest.digest, out.manifest.digest);
@@ -160,7 +162,10 @@ fn multi_device_dp8_roundtrip_is_bit_identical() {
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x5a;
     std::fs::write(&vpath, bytes).unwrap();
-    assert!(load_checkpoint(&dir, 2).is_err(), "digest must catch device-side corruption");
+    assert!(
+        load_checkpoint(&dir, engine.runtime()).is_err(),
+        "digest must catch device-side corruption"
+    );
 
     std::fs::remove_dir_all(&base).unwrap();
 }
@@ -170,7 +175,7 @@ fn pipelined_checkpoints_stripe_across_devices_too() {
     let base = scratch_dir("it-devpipe").unwrap();
     let devices = DeviceMap::simulated(3, &base.join("ssds")).unwrap();
     let runtime = shared_runtime(devices);
-    let engine = CheckpointEngine::with_runtime(runtime, WriterStrategy::AllReplicas);
+    let engine = CheckpointEngine::with_runtime(Arc::clone(&runtime), WriterStrategy::AllReplicas);
     let mut pipe = PipelinedCheckpointer::new(engine, dp_group(4));
 
     let mut stores = Vec::new();
@@ -183,7 +188,7 @@ fn pipelined_checkpoints_stripe_across_devices_too() {
     let outcomes = pipe.finish().unwrap();
     for (i, out) in outcomes.iter().enumerate() {
         assert_eq!(out.manifest.devices().len(), 3, "ck{i} must stripe over all devices");
-        let (loaded, _, _) = load_checkpoint(&base.join(format!("ck{i}")), 2).unwrap();
+        let (loaded, _, _) = load_checkpoint(&base.join(format!("ck{i}")), &runtime).unwrap();
         assert!(loaded.content_eq(&stores[i]));
     }
     std::fs::remove_dir_all(&base).unwrap();
