@@ -87,19 +87,36 @@ fn fsync_accounting(payload: usize, chunk_size: u64, group: &mut BenchGroup) {
     let d = delta.write(&store, extra(1), &base.join("step-00000001")).unwrap();
     let delta_lat = t0.elapsed().as_secs_f64();
 
+    // direct/bounce/queue-depth accounting across the segment writes
+    let qd = |stats: &[fastpersist::io::WriteStats]| {
+        stats.iter().map(|s| s.queue_depth_max).max().unwrap_or(0)
+    };
+    let direct_bytes = |stats: &[fastpersist::io::WriteStats]| {
+        stats.iter().map(|s| s.direct_bytes).sum::<u64>()
+    };
     println!(
-        "durable base:  {} chunks -> {} segment WriteJobs, {} fsyncs ({} per job)",
+        "durable base:  {} chunks -> {} segment WriteJobs, {} fsyncs ({} per job); \
+         direct {} over {} extents, bounce {}, qd_max {}",
         b.chunks_total,
         b.segments_written,
         b.fsyncs,
         human(b.bytes_per_job()),
+        human(direct_bytes(&b.stats)),
+        b.direct_extents(),
+        human(b.bounce_bytes()),
+        qd(&b.stats),
     );
     println!(
-        "durable delta: {} dirty chunks -> {} segment WriteJobs, {} fsyncs ({} per job)",
+        "durable delta: {} dirty chunks -> {} segment WriteJobs, {} fsyncs ({} per job); \
+         direct {} over {} extents, bounce {}, qd_max {}",
         d.chunks_written,
         d.segments_written,
         d.fsyncs,
         human(d.bytes_per_job()),
+        human(direct_bytes(&d.stats)),
+        d.direct_extents(),
+        human(d.bounce_bytes()),
+        qd(&d.stats),
     );
     assert_eq!(b.fsyncs, b.segments_written as u64, "one fsync per segment");
     assert!(
@@ -108,16 +125,30 @@ fn fsync_accounting(payload: usize, chunk_size: u64, group: &mut BenchGroup) {
     );
     group.results.push(BenchResult {
         name: format!(
-            "durable-base ({} chunks, {} jobs, {} fsyncs)",
-            b.chunks_total, b.segments_written, b.fsyncs
+            "durable-base ({} chunks, {} jobs, {} fsyncs, direct_bytes={} \
+             direct_extents={} bounce_bytes={} qd_max={})",
+            b.chunks_total,
+            b.segments_written,
+            b.fsyncs,
+            direct_bytes(&b.stats),
+            b.direct_extents(),
+            b.bounce_bytes(),
+            qd(&b.stats),
         ),
         summary: Summary::of(&[base_lat]),
         bytes_per_iter: Some(b.bytes_per_job()),
     });
     group.results.push(BenchResult {
         name: format!(
-            "durable-delta ({} dirty chunks, {} jobs, {} fsyncs)",
-            d.chunks_written, d.segments_written, d.fsyncs
+            "durable-delta ({} dirty chunks, {} jobs, {} fsyncs, direct_bytes={} \
+             direct_extents={} bounce_bytes={} qd_max={})",
+            d.chunks_written,
+            d.segments_written,
+            d.fsyncs,
+            direct_bytes(&d.stats),
+            d.direct_extents(),
+            d.bounce_bytes(),
+            qd(&d.stats),
         ),
         summary: Summary::of(&[delta_lat]),
         bytes_per_iter: Some(d.bytes_per_job()),

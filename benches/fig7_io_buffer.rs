@@ -65,6 +65,41 @@ fn main() {
         }
         groups.push(group);
     }
+    // Direct-path counter group (durable, probe-gated O_DIRECT): one
+    // real write per engine kind with the WriteStats counters in the
+    // row names, so BENCH_fig7.json proves whether the direct path was
+    // actually taken on this filesystem (direct_bytes > 0) or the
+    // probed fallback engaged (direct_bytes == 0).
+    let mut counters = BenchGroup::start("fig7: direct/bounce/queue-depth counters (durable)");
+    let data = Arc::new(vec![0x5au8; (8 * MB) as usize + 777]);
+    for (name, kind) in [
+        ("buffered", EngineKind::Buffered),
+        ("direct-single", EngineKind::DirectSingle),
+        ("direct-double", EngineKind::DirectDouble),
+    ] {
+        let rt = runtime_for(IoConfig::with_kind(kind)); // durable, try_o_direct on
+        let path = dir.join(format!("counters-{name}.bin"));
+        let s = rt
+            .submit(WriteJob::bytes(Arc::clone(&data), path.clone()))
+            .wait()
+            .unwrap();
+        assert_eq!(s.total_bytes, data.len() as u64);
+        counters.bench_bytes(
+            &format!(
+                "{name} o_direct={} direct_bytes={} direct_extents={} bounce_bytes={} \
+                 qd_max={}",
+                s.o_direct, s.direct_bytes, s.direct_extents, s.bounce_bytes, s.queue_depth_max
+            ),
+            data.len() as u64,
+            || {
+                rt.submit(WriteJob::bytes(Arc::clone(&data), path.clone()))
+                    .wait()
+                    .unwrap();
+            },
+        );
+    }
+    groups.push(counters);
+
     let refs: Vec<&BenchGroup> = groups.iter().collect();
     let _ = write_bench_json("fig7", &refs);
     let _ = std::fs::remove_dir_all(&dir);

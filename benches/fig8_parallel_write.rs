@@ -87,7 +87,39 @@ fn main() {
         });
     }
 
-    let _ = write_bench_json("fig8", &[&writers_group, &devices_group]);
+    // Part 2b: durable direct-path counters for a device-striped write —
+    // proves whether O_DIRECT actually engaged per device (or the probed
+    // fallback did) and what submission-queue depth the drains reached.
+    let mut counters_group =
+        BenchGroup::start("fig8: direct/bounce/queue-depth counters (durable, 2 devices)");
+    {
+        let devmap = DeviceMap::simulated(2, &dir.join("ssds-direct")).unwrap();
+        let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist(), // durable, try_o_direct on
+            devices: devmap,
+            ..IoRuntimeConfig::default()
+        }));
+        let engine = CheckpointEngine::with_runtime(rt, WriterStrategy::AllReplicas);
+        let g = group_of(4);
+        let d = dir.join("direct-counters");
+        let out = engine.write(&store, BTreeMap::new(), &d, &g).unwrap();
+        let direct_bytes: u64 = out.stats.iter().map(|s| s.direct_bytes).sum();
+        let qd_max = out.stats.iter().map(|s| s.queue_depth_max).max().unwrap_or(0);
+        counters_group.bench_bytes(
+            &format!(
+                "4 writers x 2 devices direct_bytes={direct_bytes} direct_extents={} \
+                 bounce_bytes={} qd_max={qd_max}",
+                out.direct_extents(),
+                out.bounce_bytes(),
+            ),
+            size as u64,
+            || {
+                engine.write(&store, BTreeMap::new(), &d, &g).unwrap();
+            },
+        );
+    }
+
+    let _ = write_bench_json("fig8", &[&writers_group, &devices_group, &counters_group]);
 
     println!("\nfig8 paper-scale simulation:");
     fastpersist::figures::fig8::run().unwrap();

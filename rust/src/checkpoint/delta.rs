@@ -331,6 +331,18 @@ impl DeltaOutcome {
         }
     }
 
+    /// Aligned extents drained through an O_DIRECT descriptor, summed
+    /// over every segment write (0 under a probed fallback).
+    pub fn direct_extents(&self) -> u64 {
+        self.stats.iter().map(|s| s.direct_extents).sum()
+    }
+
+    /// Sub-alignment bytes routed through zeroed bounce buffers, summed
+    /// over every segment write.
+    pub fn bounce_bytes(&self) -> u64 {
+        self.stats.iter().map(|s| s.bounce_bytes).sum()
+    }
+
     /// View as a generic [`CheckpointOutcome`] (the pipelined helper's
     /// common currency).
     pub fn into_outcome(self) -> CheckpointOutcome {

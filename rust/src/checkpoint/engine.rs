@@ -57,6 +57,20 @@ impl CheckpointOutcome {
     pub fn gbps(&self) -> f64 {
         crate::util::bytes::gbps(self.total_bytes, self.latency.as_secs_f64())
     }
+
+    /// Aligned extents drained through an O_DIRECT descriptor, summed
+    /// over every partition/segment write (0 under a probed fallback —
+    /// the trainer's `ckpt_direct_extents` metric).
+    pub fn direct_extents(&self) -> u64 {
+        self.stats.iter().map(|s| s.direct_extents).sum()
+    }
+
+    /// Sub-alignment bytes routed through zeroed bounce buffers, summed
+    /// over every partition/segment write (the trainer's
+    /// `ckpt_bounce_bytes` metric).
+    pub fn bounce_bytes(&self) -> u64 {
+        self.stats.iter().map(|s| s.bounce_bytes).sum()
+    }
 }
 
 /// The FastPersist checkpoint engine: a thin coordinator over a shared

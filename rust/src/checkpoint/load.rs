@@ -109,7 +109,7 @@ pub fn load_checkpoint_with(
     let jobs = if manifest.is_delta() {
         crate::checkpoint::delta::plan_delta_reads(dir, &manifest, &dest, opts.coalesce)?
     } else {
-        plan_partition_reads(dir, &manifest, &dest)
+        plan_partition_reads(dir, &manifest, &dest, runtime.read_split_bytes())
     };
     let stats = read::run_jobs(runtime, jobs)?;
     if stats.bytes != manifest.total_len {
@@ -126,35 +126,48 @@ pub fn load_checkpoint_with(
     Ok(LoadedCheckpoint { store, header, manifest, stats, latency: t0.elapsed() })
 }
 
-/// Read plan of a full (partitioned) checkpoint: one job per partition
-/// file, reading the file's whole extent into the stream range the
-/// manifest records for it. Errors from these jobs carry the fully
-/// *resolved* path (device routing applied), so a device-mapped
-/// partition whose mount or symlink target is gone reports exactly
-/// which path failed instead of a generic assembly error.
+/// Read plan of a full (partitioned) checkpoint: jobs per partition
+/// file, reading the file's extent into the stream range the manifest
+/// records for it. A partition larger than `split_bytes` is chopped
+/// into several parallel jobs (intra-partition read parallelism —
+/// [`crate::io::runtime::IoRuntimeConfig::read_split_bytes`]), so one huge
+/// partition no longer serializes restore on a single reader thread.
+/// Errors from these jobs carry the fully *resolved* path (device
+/// routing applied), so a device-mapped partition whose mount or
+/// symlink target is gone reports exactly which path failed instead of
+/// a generic assembly error.
 fn plan_partition_reads(
     dir: &Path,
     manifest: &CheckpointManifest,
     dest: &std::sync::Arc<StreamBuffer>,
+    split_bytes: u64,
 ) -> Vec<ReadJob> {
-    manifest
-        .partitions
-        .iter()
-        .map(|p| {
-            let len = p.end - p.start;
-            ReadJob {
-                path: partition_path(dir, p),
+    let split = split_bytes.max(1);
+    let mut jobs = Vec::with_capacity(manifest.partitions.len());
+    for p in &manifest.partitions {
+        let len = p.end - p.start;
+        let path = partition_path(dir, p);
+        let mut off = 0u64;
+        loop {
+            let piece = split.min(len - off);
+            jobs.push(ReadJob {
+                path: path.clone(),
                 dest: std::sync::Arc::clone(dest),
-                runs: vec![ReadPart { file_off: 0, dest_off: p.start, len }],
+                runs: vec![ReadPart { file_off: off, dest_off: p.start + off, len: piece }],
                 checks: Vec::new(),
                 coalesced: 0,
                 expect_file_len: Some(len),
                 prefix_check: None,
                 kind: None,
                 label: "partition",
+            });
+            off += piece;
+            if off >= len {
+                break;
             }
-        })
-        .collect()
+        }
+    }
+    jobs
 }
 
 #[cfg(test)]
@@ -290,6 +303,35 @@ mod tests {
             let (loaded, _, _) = load_checkpoint(&dir, &rt).unwrap();
             assert!(loaded.content_eq(&store));
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn huge_partition_splits_into_parallel_read_jobs() {
+        // Intra-partition parallelism: a single partition above the
+        // split threshold restores through several ReadJobs over
+        // disjoint ranges of the same file — and still assembles
+        // bit-identically through ONE stream allocation.
+        let dir = scratch_dir("load-split").unwrap();
+        let store = write_sample(&dir, 1); // one partition holds ~100 KB
+        let rt = IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::default().microbench(),
+            read_split_bytes: 16 << 10, // 16 KiB -> ~7 jobs for the payload
+            ..IoRuntimeConfig::default()
+        });
+        let loaded = load_checkpoint_with(&dir, &rt, RestoreOptions::default()).unwrap();
+        assert!(loaded.store.content_eq(&store));
+        let manifest = &loaded.manifest;
+        assert_eq!(manifest.partitions.len(), 1);
+        let expect_jobs = manifest.total_len.div_ceil(16 << 10);
+        assert_eq!(loaded.stats.jobs, expect_jobs, "split threshold must fan the read out");
+        assert!(loaded.stats.jobs > 1);
+        assert_eq!(loaded.stats.bytes, manifest.total_len);
+        assert_eq!(rt.stream_allocations().0, 1, "split jobs share one stream buffer");
+        // the default threshold leaves small partitions alone
+        let rt_default = test_runtime();
+        let one = load_checkpoint_with(&dir, &rt_default, RestoreOptions::default()).unwrap();
+        assert_eq!(one.stats.jobs, 1);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

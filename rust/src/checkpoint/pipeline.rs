@@ -27,9 +27,14 @@
 //!
 //! The helper owns no I/O resources: it submits partitions into the
 //! engine's shared [`crate::io::IoRuntime`] (staging pool + persistent
-//! writer/drain threads), so pipelined and direct checkpoints interleave
-//! through one submission queue, and back-to-back checkpoints reuse the
-//! same staging buffers.
+//! writer threads + per-device drain lanes), so pipelined and direct
+//! checkpoints interleave through one submission queue, and
+//! back-to-back checkpoints reuse the same staging buffers. Each
+//! submission is **planned** on the helper thread (the job's
+//! [`crate::io::WritePlan`] op schedule) and executed by the shared
+//! [`crate::io::WritePipeline`] — the helper inherits the same
+//! probe-gated O_DIRECT/bounce accounting as synchronous writes, so
+//! pipelined outcomes report `direct_bytes`/`bounce_bytes` too.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;

@@ -1,20 +1,73 @@
 //! Figure 12: projection to DP=128 (1024–2048 GPUs) for gpt3-6.7B and
-//! gpt3-13B, plus the 13B full-TP variant (§5.7).
+//! gpt3-13B, plus the 13B full-TP variant (§5.7) — and the restart
+//! model fed by a **measured** restore throughput.
 //!
 //! Paper anchors: up to 10.2× (6.7B) and 3.6× (13B) training speedup;
 //! 11.3× for 13B with full TP; FastPersist overhead stays < 2%.
+//!
+//! Recovery time used to assume write-bound restore. Since the
+//! ReadRuntime, this figure measures an actual small checkpoint restore
+//! (coalesced reads, single-copy assembly — `ReadStats` accounting) and
+//! scales the measured per-node read throughput to the projected
+//! cluster; the write-bound model remains the fallback when the
+//! measurement is unavailable.
+//!
+//! Substrate note: the measurement runs in `IoConfig::microbench()`
+//! mode, i.e. against the **page cache standing in for the NVMe
+//! array** — the same deliberate substitution every measured figure in
+//! this repo uses (ARCHITECTURE.md §1): the container's ~0.4 GB/s
+//! virtio disk would measure the device, not the restore software
+//! path. On a host with a real NVMe array, point FASTPERSIST_SCRATCH
+//! at it for a device-true number. The printout and the JSON label the
+//! substrate so the recovery column is never mistaken for cold-storage
+//! restore time.
 
-use crate::sim::project::fig12_sweep;
+use crate::sim::project::fig12_sweep_with_read;
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::Result;
 
+/// Measure real restore throughput (GB/s over read+verify+parse) with
+/// a small checkpoint through a ReadRuntime — the `ReadStats`-backed
+/// number the restart model consumes. `None` when the measurement
+/// cannot run (e.g. read-only scratch).
+fn measured_read_gbps() -> Option<f64> {
+    use crate::checkpoint::engine::CheckpointEngine;
+    use crate::checkpoint::load::{load_checkpoint_with, RestoreOptions};
+    use crate::checkpoint::strategy::WriterStrategy;
+    use crate::io::engine::IoConfig;
+    use crate::io::runtime::IoRuntime;
+    use crate::tensor::{DType, Tensor, TensorStore};
+    use crate::util::rng::Rng;
+
+    let dir = crate::io::engine::scratch_dir("fig12-restore").ok()?;
+    // inner closure so every early exit still reaches the cleanup below
+    let measured = (|| {
+        let rt = IoRuntime::shared(IoConfig::default().microbench());
+        let n = 8usize << 20;
+        let mut data = vec![0u8; n];
+        Rng::new(12).fill_bytes(&mut data);
+        let mut store = TensorStore::new();
+        store.push(Tensor::new("w", DType::U8, vec![n], data).ok()?).ok()?;
+        let engine =
+            CheckpointEngine::with_runtime(std::sync::Arc::clone(&rt), WriterStrategy::Rank0);
+        let ck = dir.join("ck");
+        engine.write_single(&store, Default::default(), &ck).ok()?;
+        let loaded = load_checkpoint_with(&ck, &rt, RestoreOptions::default()).ok()?;
+        let gbps = loaded.gbps();
+        (gbps.is_finite() && gbps > 0.0).then_some(gbps)
+    })();
+    let _ = std::fs::remove_dir_all(&dir);
+    measured
+}
+
 /// Print the projection table and save its JSON result.
 pub fn run() -> Result<()> {
-    let sweep = fig12_sweep()?;
+    let read_gbps = measured_read_gbps();
+    let sweep = fig12_sweep_with_read(read_gbps)?;
     let mut t = Table::new(vec![
         "model", "DP", "nodes", "baseline iter (s)", "FastPersist iter (s)", "speedup",
-        "FP overhead",
+        "FP overhead", "recovery (s)",
     ]);
     for p in &sweep {
         t.row(vec![
@@ -25,9 +78,18 @@ pub fn run() -> Result<()> {
             format!("{:.2}", p.fastpersist_iter),
             format!("{:.1}x", p.speedup),
             format!("{:.2}%", p.fp_overhead * 100.0),
+            format!("{:.1}", p.recovery_s),
         ]);
     }
     println!("\n== Figure 12: projection to DP<=128 (simulated) ==");
+    match read_gbps {
+        Some(g) => println!(
+            "restart model: measured restore throughput {g:.2} GB/s/node x node count \
+             (ReadRuntime restore on the pagecache-as-NVMe substrate, ARCHITECTURE.md §1 — \
+             set FASTPERSIST_SCRATCH to a real NVMe mount for device-true numbers)"
+        ),
+        None => println!("restart model: write-bound fallback (restore measurement unavailable)"),
+    }
     println!("paper: up to 10.2x (6.7B), 3.6x (13B), 11.3x (13B full-TP); FP overhead <2%\n{}",
         t.render());
     let json = Json::arr(sweep.iter().map(|p| {
@@ -39,6 +101,9 @@ pub fn run() -> Result<()> {
             ("fastpersist_iter_s", Json::from(p.fastpersist_iter)),
             ("speedup", Json::from(p.speedup)),
             ("fp_overhead", Json::from(p.fp_overhead)),
+            ("recovery_s", Json::from(p.recovery_s)),
+            ("recovery_measured", Json::Bool(p.recovery_measured)),
+            ("recovery_substrate", Json::str("pagecache-as-nvme")),
         ])
     }));
     super::save_result("fig12", &json)
@@ -47,7 +112,8 @@ pub fn run() -> Result<()> {
 #[cfg(test)]
 mod tests {
     // fig12 behaviour is covered by sim::project::tests; here we only
-    // check the harness runs end-to-end.
+    // check the harness (including the real restore measurement) runs
+    // end-to-end.
     #[test]
     fn runs_and_saves() {
         let dir = crate::io::engine::scratch_dir("fig12-results").unwrap();
@@ -56,5 +122,15 @@ mod tests {
         assert!(dir.join("fig12.json").exists());
         std::env::remove_var("FASTPERSIST_RESULTS");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn restore_measurement_produces_a_throughput() {
+        // the measurement is best-effort, but on a writable scratch it
+        // must produce a positive, finite GB/s
+        let g = super::measured_read_gbps();
+        if let Some(g) = g {
+            assert!(g > 0.0 && g.is_finite());
+        }
     }
 }

@@ -1,5 +1,7 @@
 //! Multi-device partition routing — the paper's "write parallelism
-//! across the SSDs available in the training environment" (§4.2).
+//! across the SSDs available in the training environment" (§4.2) —
+//! plus the per-device **O_DIRECT capability probe** backing the
+//! unified write pipeline's direct path.
 //!
 //! A [`DeviceMap`] is an ordered set of mount points (real NVMe mounts
 //! in production; sibling directories standing in for per-socket SSDs in
@@ -19,16 +21,235 @@
 //! The empty map is the single-device degenerate case: every partition
 //! lands directly in the checkpoint directory, which keeps single-disk
 //! layouts byte-compatible with the pre-DeviceMap format.
+//!
+//! **Direct-I/O capability.** Whether `O_DIRECT` works is a property of
+//! the *filesystem backing a device*, not of individual checkpoint
+//! files, so the map owns a [`DirectProbe`]: the first open on a device
+//! performs one real probe (O_DIRECT open + one aligned write of a
+//! scratch file) and the verdict is cached for the map's lifetime —
+//! clones share the cache. Filesystems that reject O_DIRECT (tmpfs,
+//! some overlay/network mounts) get a **logged buffered fallback**; the
+//! write pipeline and the read runtime both consult the same cache, so
+//! a device is probed once, not once per file.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use crate::serialize::format::checksum64_slice;
 use crate::{Error, Result};
 
+/// `O_DIRECT` without a libc dependency (Linux; zero elsewhere, where
+/// every open falls back to the buffered descriptor anyway).
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "x86")))]
+pub const O_DIRECT: i32 = 0o40000;
+/// `O_DIRECT` without a libc dependency (Linux; zero elsewhere, where
+/// every open falls back to the buffered descriptor anyway).
+#[cfg(all(
+    target_os = "linux",
+    not(any(target_arch = "x86_64", target_arch = "x86"))
+))]
+pub const O_DIRECT: i32 = 0o200000;
+/// `O_DIRECT` without a libc dependency (Linux; zero elsewhere, where
+/// every open falls back to the buffered descriptor anyway).
+#[cfg(not(target_os = "linux"))]
+pub const O_DIRECT: i32 = 0;
+
+/// Verdict of one O_DIRECT capability probe.
+#[derive(Debug, Clone)]
+pub enum DirectCapability {
+    /// The filesystem accepted an O_DIRECT open and an aligned write.
+    Supported,
+    /// The probe failed; the reason is logged once and direct I/O for
+    /// this device falls back to aligned buffered writes.
+    Unsupported(String),
+}
+
+impl DirectCapability {
+    /// True when the direct path may be used.
+    pub fn is_supported(&self) -> bool {
+        matches!(self, DirectCapability::Supported)
+    }
+}
+
+/// Cached per-filesystem O_DIRECT capability probes (shared by
+/// clones). The cache is keyed by the directory's `st_dev`, so every
+/// directory on one device shares a single probe — a trainer writing a
+/// new `step-NNNNNNNN` directory per iteration probes its checkpoint
+/// filesystem exactly once, not once per step.
+#[derive(Clone, Default)]
+pub struct DirectProbe {
+    cache: Arc<Mutex<HashMap<u64, ProbeEntry>>>,
+}
+
+/// One cached probe verdict. Definitive verdicts (success, or a
+/// capability errno) are served forever; transient failures (ENOSPC,
+/// EACCES, …) are served from cache too but re-probed every
+/// [`TRANSIENT_RETRY_EVERY`] queries, so a momentary condition neither
+/// disables the direct path forever nor causes per-job probe/log spam.
+struct ProbeEntry {
+    cap: DirectCapability,
+    definitive: bool,
+    queries: u64,
+}
+
+/// Cache-hit count after which a non-definitive (transient-failure)
+/// verdict is re-probed.
+const TRANSIENT_RETRY_EVERY: u64 = 64;
+
+impl DirectProbe {
+    /// Capability of the filesystem holding `dir`, probing it on the
+    /// first call and serving the cached verdict afterwards. A fallback
+    /// is logged with its reason (once per filesystem), so CI runs on
+    /// tmpfs show *why* the buffered path engaged.
+    pub fn capability(&self, dir: &Path) -> DirectCapability {
+        use std::os::unix::fs::MetadataExt;
+        // A capability query must never mutate the filesystem: an
+        // unreachable directory reports Unsupported WITHOUT probing,
+        // caching, or creating anything (the caller's open will surface
+        // the real error), and without tying unrelated unreachable
+        // paths to one cache entry.
+        let key = match std::fs::metadata(dir) {
+            Ok(m) => m.dev(),
+            Err(e) => {
+                return DirectCapability::Unsupported(format!(
+                    "cannot stat {}: {e}",
+                    dir.display()
+                ))
+            }
+        };
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(entry) = cache.get_mut(&key) {
+                entry.queries += 1;
+                if entry.definitive || entry.queries % TRANSIENT_RETRY_EVERY != 0 {
+                    return entry.cap.clone();
+                }
+                // fall through: periodically re-probe a transient failure
+            }
+        }
+        // Probe WITHOUT holding the cache lock: a hung mount must stall
+        // only the jobs routed to it, never every thread of the runtime
+        // (racing first-touch probes of one device are harmless — each
+        // uses a unique scratch name and the verdicts agree).
+        let (cap, definitive) = probe_o_direct(dir);
+        if let DirectCapability::Unsupported(reason) = &cap {
+            eprintln!(
+                "fastpersist: O_DIRECT unavailable for {} ({reason}); using the aligned \
+                 buffered fallback",
+                dir.display()
+            );
+        }
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, ProbeEntry { cap: cap.clone(), definitive, queries: 0 });
+        cap
+    }
+
+    /// Number of filesystems probed so far (test instrumentation: the
+    /// probe-once guarantee is `probed()` staying flat across repeated
+    /// opens on the same device).
+    pub fn probed(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// True when an errno denotes a verdict worth caching for the map's
+/// lifetime rather than a transient I/O condition: capability
+/// rejections — EINVAL (22), ENOSYS (38), ENOTSUP/EOPNOTSUPP (95) —
+/// plus access-class failures — EPERM (1), EACCES (13), EROFS (30) —
+/// which would otherwise make every job of a read-only-mount restore
+/// re-attempt (and re-log) the probe. Caching only ever disables an
+/// optimization, never correctness.
+fn is_capability_errno(e: &std::io::Error) -> bool {
+    matches!(
+        e.raw_os_error(),
+        Some(1) | Some(13) | Some(22) | Some(30) | Some(38) | Some(95)
+    )
+}
+
+/// One real capability probe: O_DIRECT open of a scratch file in `dir`
+/// (which the caller has verified exists) plus one aligned write from
+/// an aligned buffer (tmpfs rejects at open; some filesystems accept
+/// the open and fail the first write). The scratch file is removed
+/// whatever the outcome. Returns `(verdict, definitive)` — only
+/// definitive verdicts (success, or a capability errno) may be cached.
+fn probe_o_direct(dir: &Path) -> (DirectCapability, bool) {
+    if O_DIRECT == 0 {
+        return (
+            DirectCapability::Unsupported(
+                "O_DIRECT is not available on this platform".to_string(),
+            ),
+            true,
+        );
+    }
+    // unique scratch name: pid + a process-wide counter, so concurrent
+    // first-touch probes of one device never collide on a file
+    static PROBE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = PROBE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let path = dir.join(format!(".fp-direct-probe-{}-{seq}", std::process::id()));
+    let opened = {
+        use std::os::unix::fs::OpenOptionsExt;
+        std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .custom_flags(O_DIRECT)
+            .open(&path)
+    };
+    let file = match opened {
+        Ok(f) => f,
+        Err(e) => {
+            let _ = std::fs::remove_file(&path);
+            let definitive = is_capability_errno(&e);
+            return (
+                DirectCapability::Unsupported(format!("open(O_DIRECT) failed: {e}")),
+                definitive,
+            );
+        }
+    };
+    let buf = crate::io::buffer::AlignedBuf::new(
+        crate::io::align::DEFAULT_ALIGN,
+        crate::io::align::DEFAULT_ALIGN,
+    );
+    let result = {
+        use std::os::unix::fs::FileExt;
+        file.write_all_at(buf.as_slice(), 0)
+    };
+    drop(file);
+    let _ = std::fs::remove_file(&path);
+    match result {
+        Ok(()) => (DirectCapability::Supported, true),
+        Err(e) => {
+            let definitive = is_capability_errno(&e);
+            (
+                DirectCapability::Unsupported(format!("aligned O_DIRECT write failed: {e}")),
+                definitive,
+            )
+        }
+    }
+}
+
 /// Ordered set of storage mount points for checkpoint fan-out.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Clone, Default)]
 pub struct DeviceMap {
     roots: Vec<PathBuf>,
+    probe: DirectProbe,
+}
+
+impl PartialEq for DeviceMap {
+    fn eq(&self, other: &Self) -> bool {
+        self.roots == other.roots
+    }
+}
+
+impl Eq for DeviceMap {}
+
+impl std::fmt::Debug for DeviceMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceMap").field("roots", &self.roots).finish()
+    }
 }
 
 impl DeviceMap {
@@ -45,7 +266,7 @@ impl DeviceMap {
         for root in &roots {
             std::fs::create_dir_all(root)?;
         }
-        Ok(DeviceMap { roots })
+        Ok(DeviceMap { roots, probe: DirectProbe::default() })
     }
 
     /// `n` simulated SSDs as sibling dirs `base/ssd0..ssd{n-1}` — the
@@ -87,6 +308,41 @@ impl DeviceMap {
         } else {
             Some(index % self.roots.len())
         }
+    }
+
+    /// Device index whose root contains `path` (`None` when the path is
+    /// outside every configured root — the degenerate single-device
+    /// case). This is the submission-lane key of the write pipeline's
+    /// per-device drain queues.
+    pub fn device_of(&self, path: &Path) -> Option<usize> {
+        self.roots.iter().position(|root| path.starts_with(root))
+    }
+
+    /// Directory whose filesystem governs direct-I/O capability for
+    /// `path`: the device root when the path is device-routed, the
+    /// file's parent directory otherwise.
+    pub fn capability_dir(&self, path: &Path) -> PathBuf {
+        match self.device_of(path) {
+            Some(i) => self.roots[i].clone(),
+            None => path
+                .parent()
+                .filter(|p| !p.as_os_str().is_empty())
+                .map(Path::to_path_buf)
+                .unwrap_or_else(|| PathBuf::from(".")),
+        }
+    }
+
+    /// O_DIRECT capability of the filesystem holding `path` — probed
+    /// once per device (or per directory on the degenerate map) and
+    /// cached for the map's lifetime. Clones share the cache.
+    pub fn direct_capability_for(&self, path: &Path) -> DirectCapability {
+        self.probe.capability(&self.capability_dir(path))
+    }
+
+    /// The probe cache (test instrumentation: `probe().probed()` counts
+    /// distinct directories probed).
+    pub fn probe(&self) -> &DirectProbe {
+        &self.probe
     }
 
     /// Where partition `index` of the checkpoint in `dir` lives:
@@ -203,13 +459,60 @@ mod tests {
     }
 
     #[test]
+    fn device_of_matches_roots_only() {
+        let base = scratch_dir("devmap-of").unwrap();
+        let m = DeviceMap::simulated(2, &base.join("devices")).unwrap();
+        let inside = m.roots()[1].join("fpck-x").join("part-0.fpck");
+        assert_eq!(m.device_of(&inside), Some(1));
+        assert_eq!(m.device_of(&base.join("elsewhere.bin")), None);
+        assert_eq!(DeviceMap::single().device_of(&base), None);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn probe_runs_once_per_directory_and_is_cached() {
+        let base = scratch_dir("devmap-probe").unwrap();
+        let m = DeviceMap::from_roots(vec![base.clone()]).unwrap();
+        assert_eq!(m.probe().probed(), 0, "no probe before first capability query");
+        let first = m.direct_capability_for(&base.join("f.bin"));
+        let cached = m.probe().probed();
+        assert!(cached <= 1, "at most one definitive verdict per device");
+        // repeated queries (and queries through clones) never grow the
+        // cache past the one definitive verdict for this filesystem
+        let again = m.clone().direct_capability_for(&base.join("g.bin"));
+        assert_eq!(m.probe().probed(), cached, "capability must be cached per device");
+        if cached == 1 {
+            assert_eq!(first.is_supported(), again.is_supported());
+        }
+        // no probe litter left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&base)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".fp-direct-probe"))
+            .collect();
+        assert!(leftovers.is_empty(), "probe must clean up its scratch file");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn capability_dir_prefers_device_root() {
+        let base = scratch_dir("devmap-capdir").unwrap();
+        let m = DeviceMap::simulated(2, &base.join("devices")).unwrap();
+        let routed = m.roots()[0].join("fpck-t").join("part.fpck");
+        assert_eq!(m.capability_dir(&routed), m.roots()[0]);
+        let loose = base.join("ck").join("part.fpck");
+        assert_eq!(m.capability_dir(&loose), base.join("ck"));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
     fn prop_routing_tiles_partitions_onto_exactly_one_device() {
         crate::prop::forall("device routing tiles partitions", 128, |g| {
             let ndev = g.usize(1, 8);
             let nparts = g.usize(1, 64);
             let roots: Vec<PathBuf> =
                 (0..ndev).map(|i| PathBuf::from(format!("/virtual/dev{i}"))).collect();
-            let m = DeviceMap { roots };
+            let m = DeviceMap { roots, probe: DirectProbe::default() };
             let mut per_device = vec![0usize; ndev];
             for p in 0..nparts {
                 // exactly one device, in bounds

@@ -1,100 +1,62 @@
-//! NVMe-optimized write engine (paper §4.1): aligned direct writes from
-//! pinned staging buffers, single- or double-buffered.
+//! NVMe-optimized write *policy* (paper §4.1): aligned direct writes
+//! from pinned staging buffers, single- or double-buffered.
 //!
-//! The file is opened with `O_DIRECT` when the filesystem supports it
-//! (bypassing the page cache, as libaio/io_uring submission paths do);
-//! when it doesn't (overlayfs, tmpfs), the engine transparently falls
-//! back to aligned `pwrite` on a regular descriptor — the *structure* of
-//! the path (alignment, staging, overlap, prefix/suffix split) is
-//! identical, which is what the microbenchmarks measure.
+//! Since the unified pipeline ([`crate::io::write`]) this engine only
+//! *plans*: it derives the staged op schedule via
+//! [`crate::io::double_buffer::plan_staged`] (identical aligned
+//! extents for both kinds; the queue depth is the whole difference) and
+//! hands it to the one shared executor. O_DIRECT engagement, the
+//! per-device capability probe, the zeroed bounce tail, and the drain
+//! loop itself all live in the executor — there is no engine-private
+//! write code left.
 //!
 //! The engine does **not** own per-sink buffers or threads: staging
-//! buffers come from a [`BufferPool`] and drains go through a
-//! [`DrainPool`], both either private to the engine (standalone
-//! construction, resources created once per engine) or shared across
-//! every engine of an [`crate::io::runtime::IoRuntime`]. Either way,
-//! creating a sink allocates nothing.
+//! buffers and submission lanes come from a
+//! [`crate::io::write::WriteResources`], either private to the engine
+//! (standalone construction, resources created once per engine) or
+//! shared across every engine of an [`crate::io::runtime::IoRuntime`].
+//! Either way, planning and sink creation allocate nothing.
 
-use std::fs::{File, OpenOptions};
-use std::os::unix::fs::{FileExt, OpenOptionsExt};
 use std::path::Path;
-use std::sync::Arc;
-use std::time::Instant;
 
-use crate::io::buffer::BufferPool;
-use crate::io::double_buffer::{DrainPool, StagedWriter};
-use crate::io::engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
+use crate::io::double_buffer::{overlap_depth, plan_staged};
+use crate::io::engine::{EngineKind, IoConfig, Sink, WriteEngine};
+use crate::io::write::{WritePipeline, WritePlan, WriteResources};
 use crate::Result;
 
-/// `O_DIRECT` without a libc dependency (Linux; zero elsewhere, where
-/// the open falls back to the buffered descriptor anyway).
-#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "x86")))]
-const O_DIRECT: i32 = 0o40000;
-#[cfg(all(
-    target_os = "linux",
-    not(any(target_arch = "x86_64", target_arch = "x86"))
-))]
-const O_DIRECT: i32 = 0o200000;
-#[cfg(not(target_os = "linux"))]
-const O_DIRECT: i32 = 0;
-
-/// The NVMe-optimized (aligned, staged, direct) write engine.
+/// The NVMe-optimized (aligned, staged, direct) planning policy.
 pub struct DirectEngine {
     cfg: IoConfig,
-    pool: BufferPool,
-    drain: DrainPool,
+    res: WriteResources,
 }
 
 impl DirectEngine {
     /// Standalone engine owning its (engine-lifetime) staging pool and
-    /// drain worker.
+    /// submission lane.
     pub fn new(cfg: IoConfig) -> DirectEngine {
         let cfg = cfg.normalized();
-        let buffers = match cfg.kind {
-            EngineKind::DirectDouble => 2,
-            _ => 1,
-        };
-        let pool = BufferPool::with_align(buffers, cfg.io_buf_size, cfg.align);
-        let drain = DrainPool::new(1);
-        DirectEngine::with_resources(cfg, pool, drain)
+        let buffers = overlap_depth(cfg.kind, cfg.queue_depth);
+        let res = WriteResources::standalone(&cfg, buffers);
+        DirectEngine::with_resources(cfg, res)
     }
 
     /// Engine borrowing runtime-owned resources; the hot path never
     /// allocates staging memory or spawns threads.
-    pub fn with_resources(cfg: IoConfig, pool: BufferPool, drain: DrainPool) -> DirectEngine {
+    pub fn with_resources(cfg: IoConfig, res: WriteResources) -> DirectEngine {
         let mut cfg = cfg.normalized();
         // The shared pool's geometry wins: buffers were sized/aligned at
         // runtime construction.
-        cfg.align = pool.align();
-        let clamped = cfg.io_buf_size.min(pool.buf_size()).max(pool.align());
+        cfg.align = res.pool.align();
+        let clamped = cfg.io_buf_size.min(res.pool.buf_size()).max(res.pool.align());
         cfg.io_buf_size =
-            crate::io::align::align_down(clamped as u64, pool.align() as u64) as usize;
-        DirectEngine { cfg, pool, drain }
+            crate::io::align::align_down(clamped as u64, res.pool.align() as u64) as usize;
+        DirectEngine { cfg, res }
     }
 
-    /// Per-sink cap on in-flight staged buffers (Fig. 5 a/b).
-    fn max_inflight(&self) -> usize {
-        match self.cfg.kind {
-            EngineKind::DirectDouble => 2,
-            _ => 1,
-        }
-    }
-
-    /// Open `path` for direct writes; returns (file, o_direct_engaged).
-    fn open_direct(&self, path: &Path) -> Result<(File, bool)> {
-        if self.cfg.try_o_direct && O_DIRECT != 0 {
-            let attempt = OpenOptions::new()
-                .create(true)
-                .write(true)
-                .truncate(true)
-                .custom_flags(O_DIRECT)
-                .open(path);
-            if let Ok(f) = attempt {
-                return Ok((f, true));
-            }
-        }
-        let f = OpenOptions::new().create(true).write(true).truncate(true).open(path)?;
-        Ok((f, false))
+    /// The engine's normalized configuration (tests).
+    #[cfg(test)]
+    pub(crate) fn cfg(&self) -> &IoConfig {
+        &self.cfg
     }
 }
 
@@ -103,91 +65,26 @@ impl WriteEngine for DirectEngine {
         self.cfg.kind
     }
 
-    fn create(&self, path: &Path, expected_size: Option<u64>) -> Result<Box<dyn Sink>> {
-        let (direct_file, o_direct) = self.open_direct(path)?;
-        // Second, traditional descriptor for the unaligned suffix (and
-        // final truncate) — the paper's two-path file (§4.1).
-        let suffix_file = OpenOptions::new().write(true).open(path)?;
-        if let Some(size) = expected_size {
-            // Pre-allocate so parallel/aligned writes don't fight over
-            // metadata updates.
-            direct_file.set_len(crate::io::align::align_up(size, self.cfg.align as u64))?;
-        }
-        // Right-size the staged chunk to the data: pooled buffers are
-        // fixed-capacity, but a small checkpoint should drain after its
-        // last byte, not after a 32 MB high-water mark. Never below one
-        // alignment unit.
-        let chunk = match expected_size {
-            Some(size) => {
-                let need = crate::io::align::align_up(size, self.cfg.align as u64) as usize;
-                self.cfg.io_buf_size.min(need.max(self.cfg.align))
-            }
-            None => self.cfg.io_buf_size,
-        };
-        let writer = StagedWriter::new(
-            Arc::new(direct_file),
-            self.pool.clone(),
-            self.drain.clone(),
-            self.max_inflight(),
-            chunk,
-        );
-        Ok(Box::new(DirectSink {
-            writer: Some(writer),
-            suffix_file,
-            sync: self.cfg.sync_on_finish,
-            o_direct,
-            start: Instant::now(),
-        }))
-    }
-}
-
-struct DirectSink {
-    writer: Option<StagedWriter>,
-    suffix_file: File,
-    sync: bool,
-    o_direct: bool,
-    start: Instant,
-}
-
-impl Sink for DirectSink {
-    fn write(&mut self, data: &[u8]) -> Result<()> {
-        self.writer.as_mut().expect("sink finished").stage(data)
+    fn plan(&self, total: Option<u64>) -> WritePlan {
+        plan_staged(&self.cfg, total)
     }
 
-    fn finish(mut self: Box<Self>) -> Result<WriteStats> {
-        let writer = self.writer.take().unwrap();
-        let total = writer.staged_bytes();
-        let (suffix, suffix_offset, drain) = writer.finish()?;
-        if !suffix.is_empty() {
-            self.suffix_file.write_all_at(&suffix, suffix_offset)?;
-        }
-        // Trim pre-allocation padding to the logical length.
-        self.suffix_file.set_len(total)?;
-        let mut fsyncs = 0;
-        if self.sync {
-            // fdatasync is per-inode, not per-descriptor: one call
-            // covers bytes written through both paths (O_DIRECT bypasses
-            // the page cache but not the device cache; the suffix went
-            // through the page cache regardless).
-            self.suffix_file.sync_data()?;
-            fsyncs = 1;
-        }
-        Ok(WriteStats {
-            total_bytes: total,
-            aligned_bytes: drain.bytes,
-            suffix_bytes: suffix.len() as u64,
-            write_ops: drain.ops + u64::from(!suffix.is_empty()),
-            fsyncs,
-            elapsed: self.start.elapsed(),
-            o_direct: self.o_direct,
-        })
+    fn create_planned(
+        &self,
+        path: &Path,
+        plan: WritePlan,
+        expected_size: Option<u64>,
+    ) -> Result<Box<dyn Sink>> {
+        WritePipeline::open(&self.cfg, &self.res, plan, path, expected_size)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::io::engine::scratch_dir;
+    use crate::io::buffer::BufferPool;
+    use crate::io::engine::{scratch_dir, WriteStats};
+    use crate::io::write::DrainPool;
     use crate::util::rng::Rng;
 
     fn engine(kind: EngineKind, buf: usize) -> DirectEngine {
@@ -200,7 +97,10 @@ mod tests {
     }
 
     fn roundtrip(kind: EngineKind, buf: usize, data: &[u8], pieces: usize) -> WriteStats {
-        let dir = scratch_dir("direct-rt").unwrap();
+        // per-(kind, size, buf) dir: concurrent tests must not remove
+        // each other's scratch mid-write
+        let dir =
+            scratch_dir(&format!("direct-rt-{}-{}-{buf}", kind.name(), data.len())).unwrap();
         let path = dir.join(format!("{}-{}.bin", kind.name(), data.len()));
         let e = engine(kind, buf);
         let mut sink = e.create(&path, Some(data.len() as u64)).unwrap();
@@ -230,6 +130,7 @@ mod tests {
         let data = vec![3u8; 128 << 10]; // multiple of 4096
         let stats = roundtrip(EngineKind::DirectDouble, 32 << 10, &data, 3);
         assert_eq!(stats.suffix_bytes, 0);
+        assert_eq!(stats.bounce_bytes, 0, "no tail, no bounce");
         assert_eq!(stats.aligned_bytes, data.len() as u64);
     }
 
@@ -239,6 +140,7 @@ mod tests {
         let stats = roundtrip(EngineKind::DirectSingle, 4096, &data, 1);
         assert_eq!(stats.aligned_bytes, 0);
         assert_eq!(stats.suffix_bytes, 100);
+        assert_eq!(stats.bounce_bytes, 100, "tail goes through the bounce buffer");
     }
 
     #[test]
@@ -263,8 +165,8 @@ mod tests {
     #[test]
     fn config_rounds_buffer_to_alignment() {
         let e = engine(EngineKind::DirectSingle, 5000);
-        assert_eq!(e.cfg.io_buf_size % 4096, 0);
-        assert!(e.cfg.io_buf_size >= 5000);
+        assert_eq!(e.cfg().io_buf_size % 4096, 0);
+        assert!(e.cfg().io_buf_size >= 5000);
     }
 
     #[test]
@@ -276,8 +178,8 @@ mod tests {
         let mut sink = e.create(&dir.join("warm.bin"), Some(50_000)).unwrap();
         sink.write(&[1u8; 50_000]).unwrap();
         sink.finish().unwrap();
-        e.pool.prewarm();
-        let allocs = e.pool.allocations();
+        e.res.pool.prewarm();
+        let allocs = e.res.pool.allocations();
         for i in 0..5 {
             let path = dir.join(format!("f{i}.bin"));
             let data = vec![i as u8; 60_000 + i * 123];
@@ -287,28 +189,29 @@ mod tests {
             assert_eq!(std::fs::read(&path).unwrap(), data);
         }
         assert_eq!(
-            e.pool.allocations(),
+            e.res.pool.allocations(),
             allocs,
             "steady-state create()/finish() must not allocate"
         );
-        assert!(e.pool.acquires() >= 5, "sinks must check buffers out of the pool");
+        assert!(e.res.pool.acquires() >= 5, "sinks must check buffers out of the pool");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn shared_resources_between_engines() {
         let dir = scratch_dir("direct-shared").unwrap();
-        let pool = BufferPool::with_align(2, 8192, 4096);
-        let drain = DrainPool::new(1);
+        let res = crate::io::write::WriteResources {
+            pool: BufferPool::with_align(2, 8192, 4096),
+            drain: DrainPool::new(1),
+            devices: crate::io::device::DeviceMap::single(),
+        };
         let single = DirectEngine::with_resources(
             IoConfig { kind: EngineKind::DirectSingle, align: 4096, ..IoConfig::default() },
-            pool.clone(),
-            drain.clone(),
+            res.clone(),
         );
         let double = DirectEngine::with_resources(
             IoConfig { kind: EngineKind::DirectDouble, align: 4096, ..IoConfig::default() },
-            pool.clone(),
-            drain,
+            res.clone(),
         );
         for (tag, e) in [("s", &single), ("d", &double)] {
             let path = dir.join(format!("{tag}.bin"));
@@ -318,8 +221,8 @@ mod tests {
             sink.finish().unwrap();
             assert_eq!(std::fs::read(&path).unwrap(), data);
         }
-        assert!(pool.allocations() <= 2, "engines share the caller's capped pool");
-        assert!(pool.acquires() > 0, "engines must draw from the shared pool");
+        assert!(res.pool.allocations() <= 2, "engines share the caller's capped pool");
+        assert!(res.pool.acquires() > 0, "engines must draw from the shared pool");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,424 +1,90 @@
-//! Staged writer with single/double buffering (paper Fig. 5), built on
-//! *shared* runtime resources.
+//! Buffering-depth *policy* (paper Fig. 5): how deep the stage/drain
+//! pipeline of a staged write runs.
 //!
-//! The checkpoint byte stream is staged into aligned pinned buffers (the
-//! accelerator→DRAM hop) borrowed from a [`BufferPool`], and drained to
-//! storage by a persistent [`DrainPool`] (the DRAM→SSD hop). With a
-//! per-sink in-flight cap of 1 the two hops serialize (Fig. 5a, "single
-//! buffer mode"); with a cap of 2 the drain of buffer *k* overlaps the
-//! staging of buffer *k+1* (Fig. 5b, "double buffer mode").
+//! Before the unified pipeline, this module owned a `StagedWriter` with
+//! its own drain loop. That loop now lives once, in the shared executor
+//! ([`crate::io::write::WritePipeline`]); what remains here is the
+//! *decision* the two NVMe engine kinds actually differ by:
 //!
-//! Neither the buffers nor the drain threads are created per checkpoint:
-//! the [`crate::io::runtime::IoRuntime`] (or a standalone engine) owns
-//! both for its whole lifetime, and sinks only *borrow*. Drain writes
-//! are positioned (`pwrite`-style), so any number of sinks can share one
-//! drain pool without ordering coordination.
+//! * **single buffering** (Fig. 5a): queue depth 1 — the copy into the
+//!   staging buffer and its drain to storage strictly alternate;
+//! * **double buffering** (Fig. 5b): queue depth ≥ 2 — the drain of
+//!   extent *k* overlaps the staging of extent *k+1*, hiding the extra
+//!   host hop the missing GPU↔NVMe peer-DMA forces. The exact depth is
+//!   [`crate::io::engine::IoConfig::queue_depth`] (default 2; deeper
+//!   pipelines suit devices with spare submission-queue capacity).
+//!
+//! [`plan_staged`] is the policy entry point used by
+//! [`crate::io::direct_engine::DirectEngine`]: identical aligned
+//! extents, different queue depth — nothing else.
 
-use std::fs::File;
-use std::os::unix::fs::FileExt;
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use crate::io::engine::{EngineKind, IoConfig};
+use crate::io::write::WritePlan;
 
-use crate::io::buffer::{AlignedBuf, BufferPool};
-use crate::util::threadpool::ThreadPool;
-use crate::{Error, Result};
-
-/// Counters from the drain path.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct DrainStats {
-    /// Bytes drained to storage.
-    pub bytes: u64,
-    /// Positioned write ops issued.
-    pub ops: u64,
-}
-
-/// Persistent pool of drain workers shared by every staged sink.
-///
-/// A drain job is one positioned write of a staged buffer; the worker
-/// writes, returns the buffer to its staging pool, and reports the
-/// outcome on the submitting sink's completion channel. Workers never
-/// block on anything but the write syscall itself, so sinks waiting on
-/// completions (or on `BufferPool::acquire`) always make progress.
-#[derive(Clone)]
-pub struct DrainPool {
-    pool: Arc<ThreadPool>,
-}
-
-impl DrainPool {
-    /// A pool of `threads` persistent drain workers.
-    pub fn new(threads: usize) -> DrainPool {
-        DrainPool { pool: Arc::new(ThreadPool::new(threads.max(1), "ckpt-drain")) }
-    }
-
-    /// Number of drain workers.
-    pub fn threads(&self) -> usize {
-        self.pool.threads()
-    }
-
-    /// Submit one positioned write of `buf[..len]` at `offset`. The
-    /// buffer is returned to `staging` and the result (bytes written)
-    /// is sent on `done` regardless of success.
-    pub fn submit(
-        &self,
-        file: Arc<File>,
-        buf: AlignedBuf,
-        offset: u64,
-        len: usize,
-        staging: BufferPool,
-        done: Sender<Result<u64>>,
-    ) {
-        self.pool.execute(move || {
-            let result = file
-                .write_all_at(&buf.filled()[..len], offset)
-                .map(|()| len as u64)
-                .map_err(Error::Io);
-            // Recycle before reporting so producers blocked in acquire()
-            // wake even if the sink has stopped listening.
-            staging.release(buf);
-            let _ = done.send(result);
-        });
+/// The stage/drain overlap depth of `kind`: 1 for Fig. 5a
+/// (single-buffer serial), `queue_depth.max(2)` for Fig. 5b
+/// (double/deep buffering). The buffered baseline streams and has no
+/// submission queue, so it reports 1 as well.
+pub fn overlap_depth(kind: EngineKind, queue_depth: usize) -> usize {
+    match kind {
+        EngineKind::DirectDouble => queue_depth.max(2),
+        EngineKind::DirectSingle | EngineKind::Buffered => 1,
     }
 }
 
-/// Order-preserving staged writer over a file handle; buffers come from
-/// a shared pool, drains go through a shared drain pool.
-pub struct StagedWriter {
-    file: Arc<File>,
-    pool: BufferPool,
-    drain: DrainPool,
-    current: Option<AlignedBuf>,
-    /// Per-sink cap on submitted-but-unfinished drains: 1 = single
-    /// buffering, 2 = double buffering.
-    max_inflight: usize,
-    /// Bytes staged per buffer before submission (≤ pool buffer
-    /// capacity; right-sized to the expected stream so small checkpoints
-    /// drain promptly).
-    chunk: usize,
-    /// Next *file* offset at which the current buffer will land.
-    submit_offset: u64,
-    /// Total bytes staged so far (logical stream position).
-    staged: u64,
-    inflight: usize,
-    done_tx: Sender<Result<u64>>,
-    done_rx: Receiver<Result<u64>>,
-    stats: DrainStats,
-    err: Option<Error>,
-}
-
-impl StagedWriter {
-    /// `max_inflight` = 1 → single-buffer mode; 2 → double-buffer mode.
-    /// `chunk` is clamped to `[align, pool.buf_size()]` and must be an
-    /// alignment multiple. `file` is the (possibly O_DIRECT) handle the
-    /// drain workers write.
-    pub fn new(
-        file: Arc<File>,
-        pool: BufferPool,
-        drain: DrainPool,
-        max_inflight: usize,
-        chunk: usize,
-    ) -> StagedWriter {
-        assert!(max_inflight >= 1);
-        let chunk = chunk.clamp(pool.align(), pool.buf_size());
-        assert!(chunk % pool.align() == 0, "chunk must be an alignment multiple");
-        let (done_tx, done_rx) = mpsc::channel();
-        StagedWriter {
-            file,
-            pool,
-            drain,
-            current: None,
-            max_inflight,
-            chunk,
-            submit_offset: 0,
-            staged: 0,
-            inflight: 0,
-            done_tx,
-            done_rx,
-            stats: DrainStats::default(),
-            err: None,
-        }
-    }
-
-    /// Stage bytes; full chunks are submitted to the drain pool.
-    pub fn stage(&mut self, mut data: &[u8]) -> Result<()> {
-        while !data.is_empty() {
-            self.check_err()?;
-            if self.current.is_none() {
-                // Backpressure, two layers: the per-sink in-flight cap
-                // (single vs double buffering), then the global pool.
-                while self.inflight >= self.max_inflight {
-                    self.collect_one();
-                }
-                self.check_err()?;
-                self.current = Some(self.pool.acquire());
-            }
-            let buf = self.current.as_mut().unwrap();
-            let room = self.chunk - buf.len;
-            let n = room.min(data.len());
-            buf.stage(&data[..n]);
-            self.staged += n as u64;
-            data = &data[n..];
-            if buf.len == self.chunk {
-                self.submit_full();
-            }
-        }
-        Ok(())
-    }
-
-    fn submit_full(&mut self) {
-        let buf = self.current.take().expect("submit without buffer");
-        let len = buf.len;
-        self.submit_buf(buf, len);
-    }
-
-    fn submit_buf(&mut self, buf: AlignedBuf, len: usize) {
-        let offset = self.submit_offset;
-        self.submit_offset += len as u64;
-        self.inflight += 1;
-        self.drain.submit(
-            Arc::clone(&self.file),
-            buf,
-            offset,
-            len,
-            self.pool.clone(),
-            self.done_tx.clone(),
-        );
-    }
-
-    /// Receive one drain completion, folding it into stats/err.
-    fn collect_one(&mut self) {
-        match self.done_rx.recv() {
-            Ok(Ok(bytes)) => {
-                self.stats.bytes += bytes;
-                self.stats.ops += 1;
-                self.inflight -= 1;
-            }
-            Ok(Err(e)) => {
-                if self.err.is_none() {
-                    self.err = Some(e);
-                }
-                self.inflight -= 1;
-            }
-            Err(_) => {
-                if self.err.is_none() {
-                    self.err = Some(Error::Internal("drain pool died".into()));
-                }
-                self.inflight = 0;
-            }
-        }
-    }
-
-    fn check_err(&mut self) -> Result<()> {
-        if let Some(e) = self.err.take() {
-            return Err(e);
-        }
-        Ok(())
-    }
-
-    /// Total bytes staged (logical stream length).
-    pub fn staged_bytes(&self) -> u64 {
-        self.staged
-    }
-
-    /// Finish: submit the *aligned* prefix of the final partial buffer
-    /// through the drain pool, wait for all in-flight drains, return
-    /// `(suffix_bytes, suffix_offset, drain_stats)` — the caller writes
-    /// the sub-alignment suffix through the traditional path (§4.1).
-    pub fn finish(mut self) -> Result<(Vec<u8>, u64, DrainStats)> {
-        let align = self.pool.align();
-        let mut suffix = Vec::new();
-        if let Some(buf) = self.current.take() {
-            let filled = buf.len;
-            let aligned = crate::io::align::align_down(filled as u64, align as u64) as usize;
-            suffix.extend_from_slice(&buf.filled()[aligned..]);
-            if aligned > 0 {
-                self.submit_buf(buf, aligned);
-            } else {
-                self.pool.release(buf);
-            }
-        }
-        let suffix_offset = self.submit_offset;
-        while self.inflight > 0 {
-            self.collect_one();
-        }
-        self.check_err()?;
-        Ok((suffix, suffix_offset, self.stats))
-    }
-}
-
-impl Drop for StagedWriter {
-    fn drop(&mut self) {
-        // A sink dropped without finish() must not strand its staging
-        // buffer; in-flight buffers are recycled by the drain workers
-        // unconditionally.
-        if let Some(buf) = self.current.take() {
-            self.pool.release(buf);
-        }
-        // Wait out any in-flight drains (the pre-runtime code joined its
-        // drain thread here, and that join was load-bearing): a caller
-        // that drops a failed sink and immediately re-creates the same
-        // path must not race stale positioned writes into the new file.
-        while self.inflight > 0 {
-            match self.done_rx.recv() {
-                Ok(_) => self.inflight -= 1,
-                Err(_) => break,
-            }
-        }
-    }
+/// Plan a staged write for `cfg` (one of the direct kinds): chunk-sized
+/// aligned extents at the kind's overlap depth. This is the **entire**
+/// difference between the single- and double-buffered engines.
+pub fn plan_staged(cfg: &IoConfig, total: Option<u64>) -> WritePlan {
+    WritePlan::staged(cfg, total, overlap_depth(cfg.kind, cfg.queue_depth))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::io::engine::scratch_dir;
-    use crate::util::rng::Rng;
+    use crate::io::write::WriteOp;
 
-    fn run_staged(buffers: usize, buf_size: usize, pieces: &[Vec<u8>]) -> Vec<u8> {
-        let dir = scratch_dir(&format!("staged-{buffers}-{buf_size}")).unwrap();
-        let path = dir.join("out.bin");
-        let file = std::fs::OpenOptions::new()
-            .create(true)
-            .write(true)
-            .truncate(true)
-            .open(&path)
-            .unwrap();
-        let file = Arc::new(file);
-        let pool = BufferPool::with_align(buffers, buf_size, 512);
-        let drain = DrainPool::new(1);
-        let mut w = StagedWriter::new(Arc::clone(&file), pool, drain, buffers, buf_size);
-        for p in pieces {
-            w.stage(p).unwrap();
-        }
-        let total: usize = pieces.iter().map(|p| p.len()).sum();
-        assert_eq!(w.staged_bytes(), total as u64);
-        let (suffix, suffix_off, _stats) = w.finish().unwrap();
-        // caller-side suffix write
-        file.write_all_at(&suffix, suffix_off).unwrap();
-        file.set_len(total as u64).unwrap();
-        let out = std::fs::read(&path).unwrap();
-        std::fs::remove_dir_all(&dir).unwrap();
-        out
+    fn cfg(kind: EngineKind, queue_depth: usize) -> IoConfig {
+        IoConfig { kind, queue_depth, io_buf_size: 1 << 20, ..IoConfig::default() }.normalized()
     }
 
     #[test]
-    fn single_and_double_roundtrip() {
-        let mut rng = Rng::new(3);
-        let mut pieces = Vec::new();
-        for _ in 0..20 {
-            let len = rng.range_usize(1, 3000);
-            let mut p = vec![0u8; len];
-            rng.fill_bytes(&mut p);
-            pieces.push(p);
-        }
-        let expect: Vec<u8> = pieces.concat();
-        for buffers in [1, 2] {
-            let got = run_staged(buffers, 1024, &pieces);
-            assert_eq!(got, expect, "buffers={buffers}");
-        }
+    fn depths_match_fig5() {
+        assert_eq!(overlap_depth(EngineKind::DirectSingle, 2), 1);
+        assert_eq!(overlap_depth(EngineKind::DirectSingle, 8), 1, "single is serial by definition");
+        assert_eq!(overlap_depth(EngineKind::DirectDouble, 2), 2);
+        assert_eq!(overlap_depth(EngineKind::DirectDouble, 4), 4, "queue depth is configurable");
+        assert_eq!(overlap_depth(EngineKind::DirectDouble, 1), 2, "double means at least 2");
     }
 
     #[test]
-    fn exact_buffer_multiples() {
-        let data = vec![7u8; 4096];
-        let got = run_staged(2, 1024, &[data.clone()]);
-        assert_eq!(got, data);
+    fn plans_differ_only_in_depth() {
+        let total = Some(10u64 << 20);
+        let ps = plan_staged(&cfg(EngineKind::DirectSingle, 2), total);
+        let pd = plan_staged(&cfg(EngineKind::DirectDouble, 2), total);
+        assert_eq!(ps.extents, pd.extents, "identical extents");
+        assert_eq!(ps.ops(), pd.ops(), "identical op schedule");
+        assert_eq!(ps.chunk, pd.chunk);
+        assert_eq!(ps.queue_depth, 1);
+        assert_eq!(pd.queue_depth, 2);
     }
 
     #[test]
-    fn tiny_stream_all_suffix() {
-        let data = vec![1u8, 2, 3];
-        let got = run_staged(2, 1024, &[data.clone()]);
-        assert_eq!(got, data);
-    }
-
-    #[test]
-    fn empty_stream() {
-        let got = run_staged(1, 512, &[]);
-        assert!(got.is_empty());
-    }
-
-    #[test]
-    fn shared_pool_and_drain_serve_concurrent_sinks() {
-        // Many sinks over ONE pool and ONE drain pool: the multi-writer
-        // configuration the IoRuntime runs. Order within each file must
-        // hold; the pool must not leak buffers.
-        let dir = scratch_dir("staged-shared").unwrap();
-        let pool = BufferPool::with_align(3, 2048, 512);
-        let drain = DrainPool::new(2);
-        std::thread::scope(|scope| {
-            for i in 0..4usize {
-                let pool = pool.clone();
-                let drain = drain.clone();
-                let path = dir.join(format!("f{i}.bin"));
-                scope.spawn(move || {
-                    let data = vec![i as u8 + 1; 10_000 + i * 513];
-                    let file = Arc::new(
-                        std::fs::OpenOptions::new()
-                            .create(true)
-                            .write(true)
-                            .truncate(true)
-                            .open(&path)
-                            .unwrap(),
-                    );
-                    let mut w =
-                        StagedWriter::new(Arc::clone(&file), pool, drain, 2, 2048);
-                    for chunk in data.chunks(777) {
-                        w.stage(chunk).unwrap();
-                    }
-                    let (suffix, off, _) = w.finish().unwrap();
-                    file.write_all_at(&suffix, off).unwrap();
-                    file.set_len(data.len() as u64).unwrap();
-                    assert_eq!(std::fs::read(&path).unwrap(), data);
-                });
-            }
-        });
-        // every buffer returned to the pool (try_acquire can recycle or
-        // finish warm-up, but never exceed the cap)
-        let mut held = Vec::new();
-        for _ in 0..3 {
-            held.push(pool.try_acquire().expect("buffer leaked"));
-        }
-        assert!(pool.try_acquire().is_none(), "cap exceeded");
-        assert!(pool.allocations() <= 3);
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-
-    #[test]
-    fn dropped_sink_returns_buffer() {
-        let dir = scratch_dir("staged-drop").unwrap();
-        let pool = BufferPool::with_align(1, 1024, 512);
-        let drain = DrainPool::new(1);
-        let file = Arc::new(
-            std::fs::OpenOptions::new()
-                .create(true)
-                .write(true)
-                .truncate(true)
-                .open(dir.join("x.bin"))
-                .unwrap(),
+    fn schedule_interleaves_stage_and_drain_per_extent() {
+        let plan = plan_staged(&cfg(EngineKind::DirectDouble, 2), Some(3 << 20));
+        assert_eq!(plan.extents.len(), 3);
+        let ops = plan.ops();
+        assert_eq!(
+            ops[..6],
+            [
+                WriteOp::Stage(0),
+                WriteOp::Drain(0),
+                WriteOp::Stage(1),
+                WriteOp::Drain(1),
+                WriteOp::Stage(2),
+                WriteOp::Drain(2),
+            ]
         );
-        let mut w = StagedWriter::new(file, pool.clone(), drain, 1, 1024);
-        w.stage(&[1, 2, 3]).unwrap();
-        drop(w);
-        assert!(pool.try_acquire().is_some(), "current buffer not recycled on drop");
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-
-    #[test]
-    fn prop_order_preserved_any_chunking() {
-        crate::prop::forall("staged writer preserves order", 24, |g| {
-            let total = g.usize(0, 6000);
-            let mut data = vec![0u8; total];
-            Rng::new(g.u64(0, u64::MAX)).fill_bytes(&mut data);
-            // random chunking
-            let mut pieces = Vec::new();
-            let mut pos = 0;
-            while pos < total {
-                let n = g.usize(1, (total - pos).min(1500));
-                pieces.push(data[pos..pos + n].to_vec());
-                pos += n;
-            }
-            let buffers = g.usize(1, 2);
-            let got = run_staged(buffers, 512, &pieces);
-            got == data
-        });
+        assert_eq!(*ops.last().unwrap(), WriteOp::Fsync, "durable plan ends with fsync");
     }
 }

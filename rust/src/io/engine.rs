@@ -5,11 +5,18 @@
 //! This mirrors the paper's integration trick: `torch.save()` accepts a
 //! file-like object, and FastPersist slots in as a compatible writer so
 //! serialization is unchanged and only the disk writes differ (§5.1).
+//!
+//! Since the unified write pipeline ([`crate::io::write`]), an engine is
+//! a *planning policy*: [`WriteEngine::plan`] derives the op schedule
+//! ([`crate::io::write::WritePlan`]) for a stream, and
+//! [`WriteEngine::create_planned`] hands it to the one shared executor.
+//! No engine owns a drain loop of its own.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::io::align::DEFAULT_ALIGN;
+use crate::io::write::WritePlan;
 use crate::Result;
 
 /// Which write engine to use.
@@ -59,11 +66,18 @@ pub struct IoConfig {
     /// Baseline chunk size (torch.save-style small buffered writes —
     /// CPython's pickle framing emits ~64 KiB frames).
     pub buffered_chunk: usize,
+    /// Submission-queue depth of the overlapped ([`EngineKind::DirectDouble`])
+    /// plan: maximum staged extents in flight per sink. 2 is classic
+    /// double buffering (Fig. 5b); higher values deepen the pipeline on
+    /// devices with spare queue capacity. [`EngineKind::DirectSingle`]
+    /// is depth 1 by definition and ignores this knob.
+    pub queue_depth: usize,
     /// fsync/fdatasync on finish — durability is the point of the paper's
     /// no-volatile-snapshot design, so default true for ALL engines (fair
     /// comparisons).
     pub sync_on_finish: bool,
-    /// Try O_DIRECT; fall back to aligned pwrite if the fs refuses.
+    /// Try O_DIRECT; fall back to aligned pwrite if the per-device
+    /// capability probe (or an individual open) refuses.
     pub try_o_direct: bool,
 }
 
@@ -74,6 +88,7 @@ impl Default for IoConfig {
             io_buf_size: 32 << 20, // paper Fig. 7 best region for large ckpts
             align: DEFAULT_ALIGN,
             buffered_chunk: 64 << 10,
+            queue_depth: 2,
             sync_on_finish: true,
             try_o_direct: true,
         }
@@ -104,13 +119,14 @@ impl IoConfig {
 
     /// Normalize alignment/buffer sizing: align ≥ 512 and a power of
     /// two (callers guarantee the latter), IO buffer a nonzero multiple
-    /// of the alignment. Engines and the [`crate::io::runtime::IoRuntime`]
-    /// apply this once at construction so every sink sees coherent
-    /// geometry.
+    /// of the alignment, queue depth ≥ 1. Engines and the
+    /// [`crate::io::runtime::IoRuntime`] apply this once at
+    /// construction so every sink sees coherent geometry.
     pub fn normalized(mut self) -> IoConfig {
         let align = self.align.max(512);
         self.align = align;
         self.io_buf_size = self.io_buf_size.max(align).next_multiple_of(align);
+        self.queue_depth = self.queue_depth.max(1);
         self
     }
 
@@ -138,6 +154,19 @@ pub struct WriteStats {
     pub aligned_bytes: u64,
     /// Bytes written through the traditional suffix path.
     pub suffix_bytes: u64,
+    /// Bytes drained through an **O_DIRECT** descriptor (0 when the
+    /// per-device probe fell back to buffered). Always an alignment
+    /// multiple — the bounce path carries everything else.
+    pub direct_bytes: u64,
+    /// Aligned extents drained through the O_DIRECT descriptor.
+    pub direct_extents: u64,
+    /// Sub-alignment head/tail bytes routed through a zeroed bounce
+    /// buffer on the traditional descriptor instead of the direct fd.
+    pub bounce_bytes: u64,
+    /// High-water mark of staged extents in flight on the submission
+    /// queue (1 under Fig. 5a plans, up to [`IoConfig::queue_depth`]
+    /// under Fig. 5b plans; 0 for the streamed baseline).
+    pub queue_depth_max: u64,
     /// Number of storage write ops issued.
     pub write_ops: u64,
     /// Number of fsync/fdatasync calls issued at finish (0 when
@@ -167,18 +196,37 @@ pub trait Sink: Send {
     fn finish(self: Box<Self>) -> Result<WriteStats>;
 }
 
-/// Factory for sinks. An engine instance *borrows* its staging pool and
-/// drain workers — either private engine-lifetime resources (standalone
-/// construction) or the shared pools of an
-/// [`crate::io::runtime::IoRuntime`] — and is reused across
-/// checkpoints; `create` allocates no staging memory and spawns no
-/// threads.
+/// A write-planning policy over the unified executor. An engine
+/// instance *borrows* its staging pool and submission queues — either
+/// private engine-lifetime resources (standalone construction) or the
+/// shared pools of an [`crate::io::runtime::IoRuntime`] — and is reused
+/// across checkpoints; neither planning nor sink creation allocates
+/// staging memory or spawns threads.
 pub trait WriteEngine: Send + Sync {
     /// Which engine this is (for reporting).
     fn kind(&self) -> EngineKind;
-    /// Open a sink writing to `path`; `expected_size` (if known) lets the
-    /// engine pre-allocate the file.
-    fn create(&self, path: &Path, expected_size: Option<u64>) -> Result<Box<dyn Sink>>;
+
+    /// Derive this policy's op schedule for a stream of `total` bytes
+    /// (`None` plans an open-ended sink). This is the *only* thing the
+    /// engine kinds do differently.
+    fn plan(&self, total: Option<u64>) -> WritePlan;
+
+    /// Open a sink executing an already-constructed `plan` against
+    /// `path` — the submission-time half of plan-based execution
+    /// ([`crate::io::runtime::IoRuntime::submit`] plans on the
+    /// submitting thread and executes on a writer thread).
+    fn create_planned(
+        &self,
+        path: &Path,
+        plan: WritePlan,
+        expected_size: Option<u64>,
+    ) -> Result<Box<dyn Sink>>;
+
+    /// Open a sink writing to `path`; `expected_size` (if known) lets
+    /// the engine right-size its plan and pre-allocate the file.
+    fn create(&self, path: &Path, expected_size: Option<u64>) -> Result<Box<dyn Sink>> {
+        self.create_planned(path, self.plan(expected_size), expected_size)
+    }
 }
 
 /// Instantiate the engine described by `cfg`.
@@ -239,5 +287,27 @@ mod tests {
         assert_eq!(IoConfig::baseline().kind, EngineKind::Buffered);
         assert_eq!(IoConfig::fastpersist().kind, EngineKind::DirectDouble);
         assert_eq!(IoConfig::default().with_buf_size(123).io_buf_size, 123);
+        assert_eq!(IoConfig { queue_depth: 0, ..Default::default() }.normalized().queue_depth, 1);
+    }
+
+    #[test]
+    fn engines_plan_differently_but_only_plan() {
+        // The collapse invariant: the three kinds differ ONLY in the
+        // plan they produce — streamed vs staged, queue depth 1 vs >= 2.
+        let total = Some(1_000_000u64);
+        let buffered = build_engine(&IoConfig::baseline());
+        let single = build_engine(&IoConfig::with_kind(EngineKind::DirectSingle));
+        let double = build_engine(&IoConfig::with_kind(EngineKind::DirectDouble));
+        let pb = buffered.plan(total);
+        let ps = single.plan(total);
+        let pd = double.plan(total);
+        assert!(pb.streamed);
+        assert!(!ps.streamed && !pd.streamed);
+        assert_eq!(ps.queue_depth, 1);
+        assert!(pd.queue_depth >= 2);
+        for p in [&pb, &ps, &pd] {
+            p.validate(4096).unwrap();
+            assert_eq!(p.planned_bytes(), 1_000_000);
+        }
     }
 }

@@ -1,17 +1,27 @@
 //! NVMe-optimized write path (paper §4.1).
 //!
 //! The paper's first technique replaces the traditional buffered I/O
-//! stack (what `torch.save` uses) with an NVMe-aware path:
+//! stack (what `torch.save` uses) with an NVMe-aware path. Since the
+//! unified pipeline, that path is **plan-based**: every engine kind is
+//! a planning policy producing a [`write::WritePlan`] (an op schedule
+//! of Stage/Drain/Fsync over aligned extents), and ONE executor
+//! ([`write::WritePipeline`]) realizes every plan:
 //!
-//! * **Aligned direct writes** ([`direct_engine`]): data is written in
-//!   large, alignment-respecting chunks from DMA-able buffers —
-//!   `O_DIRECT` where the filesystem allows, aligned `pwrite` otherwise.
+//! * **Aligned direct writes** ([`write`]): staged extents are drained
+//!   in large, alignment-respecting positioned writes from DMA-able
+//!   buffers — `O_DIRECT` where the destination device's cached
+//!   capability probe allows ([`device::DeviceMap::direct_capability_for`]),
+//!   aligned `pwrite` otherwise, with the sub-alignment tail routed
+//!   through a zeroed bounce buffer so unaligned bytes never touch the
+//!   direct descriptor.
 //! * **Pinned staging buffers** ([`buffer`]): the accelerator→DRAM hop
 //!   lands in page-locked, alignment-guaranteed buffers from a reusable
 //!   pool (no allocation on the hot path).
-//! * **Double buffering** ([`double_buffer`]): two staging buffers let
-//!   the copy into buffer *k+1* overlap the drain of buffer *k* to
-//!   storage, hiding the extra hop the missing GPU↔NVMe peer-DMA forces.
+//! * **Buffering depth as policy** ([`double_buffer`]): single
+//!   buffering (Fig. 5a) and double buffering (Fig. 5b) are the *same
+//!   plan* at submission-queue depth 1 vs ≥ 2 — the drain of extent *k*
+//!   overlaps the staging of extent *k+1*, hiding the extra hop the
+//!   missing GPU↔NVMe peer-DMA forces.
 //! * **Pending-byte aggregation** ([`pending_queue`]): serialized-tensor
 //!   writes of arbitrary sizes are queued and flushed only at alignment
 //!   boundaries, preserving on-disk byte order exactly (§4.1 "data size
@@ -47,9 +57,13 @@ pub mod pending_queue;
 pub mod read;
 pub mod runtime;
 pub mod sync_engine;
+pub mod write;
 
 pub use buffer::{AlignedBuf, BufferPool};
-pub use device::DeviceMap;
+pub use device::{DeviceMap, DirectCapability};
 pub use engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
 pub use read::{ChunkCheck, ReadJob, ReadPart, ReadStats, StreamBuffer};
 pub use runtime::{IoRuntime, IoRuntimeConfig, ReadTicket, Ticket, WriteJob, WriteSource};
+pub use write::{
+    DrainJob, DrainPool, WriteExtent, WriteOp, WritePipeline, WritePlan, WriteResources,
+};

@@ -30,8 +30,22 @@
 //!   [`EngineKind::Buffered`] job reads in `buffered_chunk`-sized steps
 //!   (the torch.load-style small-read baseline) while the direct kinds
 //!   read each run in `io_buf_size`-sized steps — one large positioned
-//!   read per run at the default 32 MiB buffer. Reads need no staging
-//!   bounce: the destination slice *is* the final resting place.
+//!   read per run at the default 32 MiB buffer.
+//! * **O_DIRECT reads with aligned bounce buffers**: when the device's
+//!   capability probe allows it (the same cache the write pipeline
+//!   consults — [`crate::io::device::DeviceMap::direct_capability_for`]),
+//!   a direct-kind job opens its payload descriptor with `O_DIRECT` and
+//!   reads each run's **aligned enclosure** into an aligned staging
+//!   buffer borrowed from the runtime pool, copying the covered range
+//!   to its destination slice. The sub-alignment head/tail of every run
+//!   exists only inside that bounce buffer ([`ReadStats::bounce_bytes`]);
+//!   a probed fallback (tmpfs/CI) reads straight into the destination
+//!   slice as before.
+//! * **Readahead hints**: every opened payload file gets
+//!   `posix_fadvise(SEQUENTIAL)` + `(WILLNEED)` before its planned runs
+//!   execute (Linux only; a no-op elsewhere) — planned runs are large
+//!   and forward-ordered, exactly what the kernel readahead window
+//!   wants to know.
 //!
 //! [`ReadStats`] counts bytes, payload preads, planned runs, coalesced
 //! merges, and folded chunk verifications, so coalescing is testable
@@ -42,15 +56,54 @@
 //! -> ReadTicket`, `ReadTicket::wait() -> ReadStats`, serviced by the
 //! runtime's persistent reader pool.
 
+use std::fs::File;
 use std::os::unix::fs::FileExt;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::io::align::{align_down, align_up};
+use crate::io::buffer::{AlignedBuf, BufferPool};
+use crate::io::device::{DeviceMap, O_DIRECT};
 use crate::io::engine::{EngineKind, IoConfig};
 use crate::io::runtime::{IoRuntime, ReadTicket};
 use crate::serialize::format::checksum64_slice;
 use crate::{Error, Result};
+
+/// Read-side execution context a job borrows from its runtime: the
+/// device map (per-device O_DIRECT capability cache) and the staging
+/// pool (aligned bounce buffers for direct reads).
+pub(crate) struct ReadCtx<'a> {
+    /// Device map with the cached O_DIRECT capability probes.
+    pub devices: &'a DeviceMap,
+    /// Staging pool direct reads borrow their bounce buffers from.
+    pub staging: &'a BufferPool,
+}
+
+/// Issue `posix_fadvise(SEQUENTIAL)` + `(WILLNEED)` readahead hints for
+/// `file` — planned restore runs are large forward reads, exactly what
+/// the kernel readahead window wants to know. Linux-gated; a no-op
+/// elsewhere, and advisory (failures are ignored) everywhere.
+#[cfg(target_os = "linux")]
+fn fadvise_readahead(file: &File) {
+    use std::os::unix::io::AsRawFd;
+    extern "C" {
+        fn posix_fadvise(fd: i32, offset: i64, len: i64, advice: i32) -> i32;
+    }
+    const POSIX_FADV_SEQUENTIAL: i32 = 2;
+    const POSIX_FADV_WILLNEED: i32 = 3;
+    let fd = file.as_raw_fd();
+    // SAFETY: posix_fadvise is async-signal-safe, takes no pointers,
+    // and only ever *advises*; any error is ignored by contract.
+    unsafe {
+        let _ = posix_fadvise(fd, 0, 0, POSIX_FADV_SEQUENTIAL);
+        let _ = posix_fadvise(fd, 0, 0, POSIX_FADV_WILLNEED);
+    }
+}
+
+/// Readahead hints are Linux-only; elsewhere this is a no-op.
+#[cfg(not(target_os = "linux"))]
+fn fadvise_readahead(_file: &File) {}
 
 /// The single preallocated assembly buffer of one restore.
 ///
@@ -261,17 +314,43 @@ impl ReadJob {
         Error::Format(format!("{} {}: {detail}", self.label, self.path.display()))
     }
 
-    /// Execute on a reader thread: open, validate, read runs into the
-    /// destination slices, verify folded chunk hashes.
-    pub(crate) fn execute(&self, io: &IoConfig) -> Result<ReadStats> {
+    /// Execute on a reader thread: open (O_DIRECT when the device's
+    /// probe allows and the kind is direct), hint readahead, validate,
+    /// read runs into the destination slices, verify folded chunk
+    /// hashes.
+    pub(crate) fn execute(&self, io: &IoConfig, ctx: &ReadCtx<'_>) -> Result<ReadStats> {
         let t0 = Instant::now();
+        let kind = self.kind.unwrap_or(io.kind);
         // Mirror the write engines: buffered = small traditional reads,
         // direct = one large positioned read per io_buf_size step.
-        let step = match self.kind.unwrap_or(io.kind) {
+        let step = match kind {
             EngineKind::Buffered => io.buffered_chunk.max(1),
             EngineKind::DirectSingle | EngineKind::DirectDouble => io.io_buf_size.max(1),
         };
-        let file = std::fs::File::open(&self.path).map_err(|e| self.fail(e))?;
+        // Probe-gated O_DIRECT on the payload descriptor, mirroring the
+        // write pipeline's per-device capability cache (and its
+        // alignment gate: the probe validates DEFAULT_ALIGN-sized I/O,
+        // so only alignments that are a multiple of it are proven).
+        let mut direct_file = None;
+        if io.try_o_direct
+            && kind != EngineKind::Buffered
+            && O_DIRECT != 0
+            && ctx.staging.align() % crate::io::align::DEFAULT_ALIGN == 0
+            && ctx.devices.direct_capability_for(&self.path).is_supported()
+        {
+            use std::os::unix::fs::OpenOptionsExt;
+            direct_file = std::fs::OpenOptions::new()
+                .read(true)
+                .custom_flags(O_DIRECT)
+                .open(&self.path)
+                .ok();
+        }
+        let o_direct = direct_file.is_some();
+        let file = match direct_file {
+            Some(f) => f,
+            None => File::open(&self.path).map_err(|e| self.fail(e))?,
+        };
+        fadvise_readahead(&file);
         if let Some(expect) = self.expect_file_len {
             let len = file.metadata().map_err(|e| self.fail(e))?.len();
             if len != expect {
@@ -287,40 +366,57 @@ impl ReadJob {
             ..ReadStats::default()
         };
         if let Some(pc) = &self.prefix_check {
+            // Container-header validation is a tiny read that doesn't
+            // want DMA alignment: under O_DIRECT it goes through a
+            // second traditional descriptor.
             let mut buf = vec![0u8; pc.len];
-            file.read_exact_at(&mut buf, 0).map_err(|e| self.fail(e))?;
+            if o_direct {
+                let side = File::open(&self.path).map_err(|e| self.fail(e))?;
+                side.read_exact_at(&mut buf, 0).map_err(|e| self.fail(e))?;
+            } else {
+                file.read_exact_at(&mut buf, 0).map_err(|e| self.fail(e))?;
+            }
             stats.prefix_reads += 1;
             (pc.check)(&buf).map_err(|e| self.fail(e))?;
         }
+        // Bounds validation for every run, shared by both payload
+        // paths: corrupt manifests can carry offsets near u64::MAX,
+        // which must be rejected before any arithmetic below can wrap.
         for run in &self.runs {
             run.dest_off
                 .checked_add(run.len)
                 .filter(|&e| e <= self.dest.len() as u64)
                 .ok_or_else(|| self.fail("read run past the end of the stream buffer"))?;
-            // corrupt manifests can carry offsets near u64::MAX; reject
-            // before any arithmetic below can wrap
-            let file_end = run
-                .file_off
+            run.file_off
                 .checked_add(run.len)
                 .ok_or_else(|| self.fail("read run file offset overflows"))?;
-            // SAFETY: runs of one restore are planned disjoint (the
-            // manifest tables tile the stream), in bounds per the check
-            // above.
-            let dst = unsafe { self.dest.slice_mut(run.dest_off as usize, run.len as usize) };
-            let mut done = 0usize;
-            while done < dst.len() {
-                let n = step.min(dst.len() - done);
-                file.read_exact_at(&mut dst[done..done + n], run.file_off + done as u64)
-                    .map_err(|e| {
-                        self.fail(format_args!(
-                            "bytes [{}..{file_end}): {e}",
-                            run.file_off + done as u64
-                        ))
-                    })?;
-                stats.preads += 1;
-                done += n;
+        }
+        if o_direct {
+            // Borrow an aligned bounce buffer from the shared staging
+            // pool when one is free, but never block for it: a restore
+            // must not stall (or be stalled by) concurrent checkpoint
+            // writes on the same runtime. When the pool is busy, a
+            // private pool-geometry buffer serves this job instead.
+            let mut pooled = ctx.staging.try_acquire();
+            let mut private: Option<AlignedBuf> = None;
+            let bounce = match pooled.as_mut() {
+                Some(b) => b,
+                None => {
+                    // modest private buffer, not pool geometry: the
+                    // direct path copies out per block anyway, so a few
+                    // MiB costs little throughput and a busy restore
+                    // doesn't allocate+zero 32 MiB per job
+                    let cap = ctx.staging.buf_size().min(4 << 20).max(ctx.staging.align());
+                    private.insert(AlignedBuf::new(cap, ctx.staging.align()))
+                }
+            };
+            let outcome = self.read_runs_direct(&file, bounce, &mut stats);
+            if let Some(b) = pooled {
+                ctx.staging.release(b);
             }
-            stats.bytes += run.len;
+            outcome?;
+        } else {
+            self.read_runs_fallback(&file, step, &mut stats)?;
         }
         for c in &self.checks {
             // Same bounds discipline as the runs: a hand-built job (the
@@ -349,6 +445,101 @@ impl ReadJob {
         stats.elapsed = t0.elapsed();
         Ok(stats)
     }
+
+    /// Traditional payload path: positioned reads in `step`-sized
+    /// pieces straight into the destination slices (no staging bounce —
+    /// the destination *is* the final resting place).
+    fn read_runs_fallback(&self, file: &File, step: usize, stats: &mut ReadStats) -> Result<()> {
+        for run in &self.runs {
+            let file_end = run.file_off + run.len; // pre-validated
+            // SAFETY: runs of one restore are planned disjoint (the
+            // manifest tables tile the stream), in bounds per the
+            // validation pass in `execute`.
+            let dst = unsafe { self.dest.slice_mut(run.dest_off as usize, run.len as usize) };
+            let mut done = 0usize;
+            while done < dst.len() {
+                let n = step.min(dst.len() - done);
+                file.read_exact_at(&mut dst[done..done + n], run.file_off + done as u64)
+                    .map_err(|e| {
+                        self.fail(format_args!(
+                            "bytes [{}..{file_end}): {e}",
+                            run.file_off + done as u64
+                        ))
+                    })?;
+                stats.preads += 1;
+                done += n;
+            }
+            stats.bytes += run.len;
+        }
+        Ok(())
+    }
+
+    /// O_DIRECT payload path: read each run's **aligned enclosure**
+    /// into the aligned bounce buffer in pool-buffer-sized steps and
+    /// copy the covered range to its destination slice. Offset, length
+    /// and memory stay aligned on the direct descriptor; the
+    /// sub-alignment head/tail bytes of every run exist only inside the
+    /// zeroed bounce buffer ([`ReadStats::bounce_bytes`]). Short reads
+    /// are tolerated at end-of-file only.
+    fn read_runs_direct(
+        &self,
+        file: &File,
+        bounce: &mut AlignedBuf,
+        stats: &mut ReadStats,
+    ) -> Result<()> {
+        let align = bounce.align() as u64;
+        let cap = align_down(bounce.capacity() as u64, align).max(align);
+        for run in &self.runs {
+            if run.len == 0 {
+                continue;
+            }
+            let file_end = run.file_off + run.len; // pre-validated
+            // SAFETY: runs of one restore are planned disjoint (the
+            // manifest tables tile the stream), in bounds per the
+            // validation pass in `execute`.
+            let dst = unsafe { self.dest.slice_mut(run.dest_off as usize, run.len as usize) };
+            let mut pos = align_down(run.file_off, align);
+            while pos < file_end {
+                let want = cap.min(align_up(file_end - pos, align)) as usize;
+                let mut got = 0usize;
+                while got < want {
+                    let n = file
+                        .read_at(&mut bounce.as_mut_slice()[got..want], pos + got as u64)
+                        .map_err(|e| {
+                            self.fail(format_args!("bytes [{pos}..{file_end}): {e}"))
+                        })?;
+                    stats.preads += 1;
+                    if n == 0 {
+                        break; // end of file
+                    }
+                    got += n;
+                    if n % align as usize != 0 {
+                        // An unaligned count means the file's tail (or a
+                        // source that cannot honor aligned retries):
+                        // retrying at `pos + got` would violate the
+                        // direct-I/O alignment contract, so stop this
+                        // block — the coverage check below decides
+                        // whether the run was satisfied.
+                        break;
+                    }
+                }
+                let lo = run.file_off.max(pos);
+                let hi = file_end.min(pos + got as u64);
+                if lo >= hi || (got < want && hi < file_end) {
+                    return Err(self.fail(format_args!(
+                        "bytes [{pos}..{file_end}): unexpected end of file"
+                    )));
+                }
+                dst[(lo - run.file_off) as usize..(hi - run.file_off) as usize]
+                    .copy_from_slice(&bounce.as_slice()[(lo - pos) as usize..(hi - pos) as usize]);
+                stats.direct_bytes += hi - lo;
+                stats.bounce_bytes += got as u64 - (hi - lo);
+                pos += got as u64;
+            }
+            stats.bytes += run.len;
+        }
+        Ok(())
+    }
 }
 
 /// Counters from one read job, or the merged totals of a whole restore.
@@ -362,6 +553,12 @@ pub struct ReadStats {
     pub preads: u64,
     /// Small container-header validation reads (not payload).
     pub prefix_reads: u64,
+    /// Payload bytes that arrived through an **O_DIRECT** descriptor
+    /// (0 when the device's probe fell back to buffered reads).
+    pub direct_bytes: u64,
+    /// Sub-alignment head/tail bytes read into the aligned bounce
+    /// buffer and discarded (the alignment overreach of direct reads).
+    pub bounce_bytes: u64,
     /// Contiguous runs after planning.
     pub runs: u64,
     /// Chunk reads merged away by the coalescing planner
@@ -381,6 +578,8 @@ impl ReadStats {
         self.bytes += other.bytes;
         self.preads += other.preads;
         self.prefix_reads += other.prefix_reads;
+        self.direct_bytes += other.direct_bytes;
+        self.bounce_bytes += other.bounce_bytes;
         self.runs += other.runs;
         self.coalesced += other.coalesced;
         self.chunks_verified += other.chunks_verified;
@@ -491,10 +690,19 @@ mod tests {
         });
     }
 
+    fn fallback_runtime() -> IoRuntime {
+        // microbench() pins try_o_direct off, so pread counting is
+        // deterministic whatever filesystem the scratch dir lives on
+        IoRuntime::new(IoRuntimeConfig {
+            io: crate::io::engine::IoConfig::default().microbench(),
+            ..IoRuntimeConfig::default()
+        })
+    }
+
     #[test]
     fn job_reads_runs_into_disjoint_slices_and_verifies_hashes() {
         let dir = scratch_dir("read-job").unwrap();
-        let rt = IoRuntime::new(IoRuntimeConfig::default());
+        let rt = fallback_runtime();
         let mut data = vec![0u8; 100_000];
         Rng::new(3).fill_bytes(&mut data);
         std::fs::write(dir.join("f.bin"), &data).unwrap();
@@ -609,6 +817,73 @@ mod tests {
             }
             other => panic!("expected length error, got {other:?}"),
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn direct_read_path_assembles_identically_when_probe_allows() {
+        // With try_o_direct on, the job either engages O_DIRECT
+        // (aligned-enclosure reads through the bounce buffer) or falls
+        // back after the probe — both must assemble bit-identical bytes
+        // for a run with an unaligned head AND an unaligned tail.
+        let dir = scratch_dir("read-direct").unwrap();
+        let rt = IoRuntime::new(IoRuntimeConfig::default());
+        let mut data = vec![0u8; 200_000];
+        Rng::new(77).fill_bytes(&mut data);
+        std::fs::write(dir.join("f.bin"), &data).unwrap();
+        let dest = rt.alloc_stream(100_001);
+        let job = ReadJob {
+            path: dir.join("f.bin"),
+            dest: Arc::clone(&dest),
+            runs: vec![part(3, 0, 100_001)], // head off 3, tail unaligned
+            checks: Vec::new(),
+            coalesced: 0,
+            expect_file_len: Some(200_000),
+            prefix_check: None,
+            kind: None,
+            label: "segment",
+        };
+        let stats = rt.submit_read(job).wait().unwrap();
+        assert_eq!(stats.bytes, 100_001);
+        if stats.direct_bytes > 0 {
+            assert_eq!(
+                stats.direct_bytes, 100_001,
+                "every payload byte arrives through the direct fd"
+            );
+            assert!(stats.bounce_bytes > 0, "unaligned head/tail must pass through the bounce");
+            assert!(stats.bounce_bytes < 2 * 4096, "bounce carries only alignment overreach");
+        }
+        let out = StreamBuffer::into_vec(dest).unwrap();
+        assert_eq!(out.as_slice(), &data[3..3 + 100_001]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn direct_read_tolerates_enclosure_past_eof() {
+        // A run ending exactly at an unaligned EOF: the aligned
+        // enclosure extends past the end of the file, and the short
+        // read must still cover the run.
+        let dir = scratch_dir("read-eof").unwrap();
+        let rt = IoRuntime::new(IoRuntimeConfig::default());
+        let mut data = vec![0u8; 10_000]; // unaligned file length
+        Rng::new(5).fill_bytes(&mut data);
+        std::fs::write(dir.join("f.bin"), &data).unwrap();
+        let dest = rt.alloc_stream(9_000);
+        let job = ReadJob {
+            path: dir.join("f.bin"),
+            dest: Arc::clone(&dest),
+            runs: vec![part(1_000, 0, 9_000)], // ends at EOF
+            checks: Vec::new(),
+            coalesced: 0,
+            expect_file_len: Some(10_000),
+            prefix_check: None,
+            kind: None,
+            label: "segment",
+        };
+        let stats = rt.submit_read(job).wait().unwrap();
+        assert_eq!(stats.bytes, 9_000);
+        let out = StreamBuffer::into_vec(dest).unwrap();
+        assert_eq!(out.as_slice(), &data[1_000..]);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,31 +1,36 @@
 //! The persistent I/O runtime: shared staging buffers, a persistent
-//! writer pool with submission/completion tickets, and multi-device
-//! partition routing.
+//! writer pool with submission/completion tickets, per-device drain
+//! lanes, and multi-device partition routing.
 //!
 //! FastPersist's write-path speedups rest on two structural properties
 //! (§4.1, §4.3): the pinned staging buffers are **allocated once and
 //! recycled across checkpoints**, and the threads moving bytes are
-//! **long-lived workers**, not per-checkpoint spawns. The original
-//! engine code honored neither — every partition writer closure rebuilt
-//! its engine (and its buffers) per checkpoint. [`IoRuntime`] inverts
-//! that ownership:
+//! **long-lived workers**, not per-checkpoint spawns. [`IoRuntime`]
+//! owns both:
 //!
 //! * one aligned [`BufferPool`] (the pinned staging memory), created at
 //!   runtime construction, checked out by sinks and returned on finish —
 //!   [`BufferPool::allocations`] stays constant on the steady-state
 //!   path while [`BufferPool::acquires`] climbs;
-//! * one [`DrainPool`] of persistent drain workers servicing every
-//!   sink's staged-buffer writes (positioned, so order-free);
+//! * one [`crate::io::write::DrainPool`] of **per-device submission
+//!   queues** (at least one lane per configured device) servicing every
+//!   sink's staged-extent drains (positioned, so order-free);
 //! * one persistent **writer pool** consuming [`WriteJob`]s: a
-//!   submission returns a [`Ticket`] immediately, and `Ticket::wait`
-//!   delivers the partition's [`WriteStats`] — the submission/completion
-//!   queue the checkpoint engine and the pipelined helper both feed;
+//!   submission *plans* the job on the submitting thread (the job's
+//!   [`crate::io::write::WritePlan`] — extents, op schedule, queue
+//!   depth) and returns a [`Ticket`] immediately; a writer-pool thread
+//!   then *executes* the plan through the unified
+//!   [`crate::io::write::WritePipeline`], and `Ticket::wait` delivers
+//!   the partition's [`WriteStats`];
 //! * a [`DeviceMap`] striping checkpoint partitions across the SSDs of
-//!   the training environment;
+//!   the training environment and caching each device's **O_DIRECT
+//!   capability probe**;
 //! * a persistent **reader pool** consuming [`crate::io::read::ReadJob`]s
 //!   (`submit_read -> ReadTicket`), the restore-side mirror of the
 //!   writer pool — see [`crate::io::read`] for the coalescing planner
-//!   and the single-copy stream buffer it serves.
+//!   and the single-copy stream buffer it serves. Read jobs borrow the
+//!   same staging pool for their O_DIRECT bounce buffers and consult
+//!   the same capability cache.
 //!
 //! One runtime serves any number of concurrent checkpoints (pipelined
 //! helper + direct writes interleave through the same queues).
@@ -38,10 +43,10 @@ use std::sync::Arc;
 use crate::io::buffer::BufferPool;
 use crate::io::device::DeviceMap;
 use crate::io::direct_engine::DirectEngine;
-use crate::io::double_buffer::DrainPool;
-use crate::io::engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
-use crate::io::read::{ReadJob, ReadStats, StreamBuffer};
+use crate::io::engine::{EngineKind, IoConfig, WriteEngine, WriteStats};
+use crate::io::read::{ReadCtx, ReadJob, ReadStats, StreamBuffer};
 use crate::io::sync_engine::BufferedEngine;
+use crate::io::write::{DrainPool, WritePlan, WriteResources};
 use crate::serialize::writer::SerializedCheckpoint;
 use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
@@ -49,18 +54,25 @@ use crate::{Error, Result};
 /// Construction-time knobs for the runtime.
 #[derive(Debug, Clone)]
 pub struct IoRuntimeConfig {
-    /// Write-path tuning (engine kind, staging size, alignment,
-    /// durability) — normalized at construction.
+    /// Write-path tuning (engine kind, staging size, alignment, queue
+    /// depth, durability) — normalized at construction.
     pub io: IoConfig,
     /// Persistent partition-writer threads (the simulated rank writers).
     pub writer_threads: usize,
     /// Persistent restore-reader threads (the parallel loaders of
     /// §4.2's two-step load), servicing [`IoRuntime::submit_read`].
     pub reader_threads: usize,
-    /// Persistent drain workers shared by all staged sinks.
+    /// Drain submission lanes. The runtime creates
+    /// `max(drain_threads, devices.len(), 1)` lanes so every configured
+    /// device owns its own ordered submission queue.
     pub drain_threads: usize,
     /// Staging buffers in the shared pool (each `io.io_buf_size` bytes).
     pub staging_buffers: usize,
+    /// Split threshold for intra-partition restore parallelism: a
+    /// single partition larger than this is read by several parallel
+    /// [`ReadJob`]s instead of one, so one huge partition no longer
+    /// serializes restore on a single reader. Default 256 MiB.
+    pub read_split_bytes: u64,
     /// Mount points to stripe checkpoint partitions across.
     pub devices: DeviceMap,
 }
@@ -73,6 +85,7 @@ impl Default for IoRuntimeConfig {
             reader_threads: 4,
             drain_threads: 2,
             staging_buffers: 4,
+            read_split_bytes: 256 << 20,
             devices: DeviceMap::single(),
         }
     }
@@ -118,7 +131,7 @@ impl WriteSource {
         self.len() == 0
     }
 
-    fn write_to(&self, sink: &mut dyn Sink) -> Result<()> {
+    fn write_to(&self, sink: &mut dyn crate::io::engine::Sink) -> Result<()> {
         match self {
             WriteSource::Range { ser, start, end } => ser.write_range_to(*start, *end, sink),
             WriteSource::Chunks { ser, prefix, ranges } => {
@@ -220,6 +233,8 @@ struct RuntimeCore {
     io: IoConfig,
     staging: BufferPool,
     devices: DeviceMap,
+    read_split_bytes: u64,
+    drain_lanes: usize,
     buffered: BufferedEngine,
     direct_single: DirectEngine,
     direct_double: DirectEngine,
@@ -239,12 +254,19 @@ impl RuntimeCore {
         }
     }
 
-    fn execute(&self, job: &WriteJob) -> Result<WriteStats> {
+    /// Submission-time half: derive the job's op schedule.
+    fn plan_for(&self, job: &WriteJob) -> WritePlan {
+        self.engine_for(job.kind.unwrap_or(self.io.kind))
+            .plan(Some(job.source.len()))
+    }
+
+    /// Writer-thread half: realize an already-constructed plan.
+    fn execute_planned(&self, job: &WriteJob, plan: WritePlan) -> Result<WriteStats> {
         if let Some(parent) = job.path.parent() {
             std::fs::create_dir_all(parent)?;
         }
         let engine = self.engine_for(job.kind.unwrap_or(self.io.kind));
-        let mut sink = engine.create(&job.path, Some(job.source.len()))?;
+        let mut sink = engine.create_planned(&job.path, plan, Some(job.source.len()))?;
         job.source.write_to(sink.as_mut())?;
         sink.finish()
     }
@@ -260,27 +282,35 @@ pub struct IoRuntime {
 
 impl IoRuntime {
     /// Build the runtime: allocate-on-demand staging pool, persistent
-    /// drain + writer pools, device map.
+    /// per-device drain lanes + writer pool, device map.
     pub fn new(cfg: IoRuntimeConfig) -> IoRuntime {
         let io = cfg.io.normalized();
         let staging =
             BufferPool::with_align(cfg.staging_buffers.max(1), io.io_buf_size, io.align);
-        let drain = DrainPool::new(cfg.drain_threads);
+        let lanes = cfg.drain_threads.max(cfg.devices.len()).max(1);
+        let res = WriteResources {
+            pool: staging.clone(),
+            drain: DrainPool::new(lanes),
+            devices: cfg.devices.clone(),
+        };
         let core = Arc::new(RuntimeCore {
-            buffered: BufferedEngine::new(io.clone()),
+            buffered: BufferedEngine::with_resources(
+                IoConfig { kind: EngineKind::Buffered, ..io.clone() },
+                res.clone(),
+            ),
             direct_single: DirectEngine::with_resources(
                 IoConfig { kind: EngineKind::DirectSingle, ..io.clone() },
-                staging.clone(),
-                drain.clone(),
+                res.clone(),
             ),
             direct_double: DirectEngine::with_resources(
                 IoConfig { kind: EngineKind::DirectDouble, ..io.clone() },
-                staging.clone(),
-                drain,
+                res,
             ),
             io,
             staging,
             devices: cfg.devices,
+            read_split_bytes: cfg.read_split_bytes.max(1),
+            drain_lanes: lanes,
             stream_allocs: AtomicU64::new(0),
             stream_alloc_bytes: AtomicU64::new(0),
         });
@@ -320,6 +350,24 @@ impl IoRuntime {
         self.readers.threads()
     }
 
+    /// Intra-partition restore split threshold in bytes (see
+    /// [`IoRuntimeConfig::read_split_bytes`]).
+    pub fn read_split_bytes(&self) -> u64 {
+        self.core.read_split_bytes
+    }
+
+    /// Drain submission lanes — at least one per configured device.
+    pub fn drain_lanes(&self) -> usize {
+        self.core.drain_lanes
+    }
+
+    /// The op schedule the runtime would execute for `job` — the
+    /// submission-time plan (inspection/tests; [`IoRuntime::submit`]
+    /// calls this internally).
+    pub fn plan_job(&self, job: &WriteJob) -> WritePlan {
+        self.core.plan_for(job)
+    }
+
     /// Allocate the single stream-assembly buffer of one restore,
     /// counted by the runtime's stream-allocation accounting.
     pub fn alloc_stream(&self, len: usize) -> Arc<StreamBuffer> {
@@ -339,12 +387,15 @@ impl IoRuntime {
     }
 
     /// Submit a write job to the persistent writer pool; returns its
-    /// completion ticket immediately.
+    /// completion ticket immediately. The job is **planned here**, on
+    /// the submitting thread (policy dispatch + extent schedule); the
+    /// writer thread only executes the plan.
     pub fn submit(&self, job: WriteJob) -> Ticket {
+        let plan = self.core.plan_for(&job);
         let (tx, rx) = mpsc::channel();
         let core = Arc::clone(&self.core);
         self.writers.execute(move || {
-            let result = core.execute(&job);
+            let result = core.execute_planned(&job, plan);
             let _ = tx.send(result);
         });
         Ticket { rx }
@@ -363,7 +414,8 @@ impl IoRuntime {
         let (tx, rx) = mpsc::channel();
         let core = Arc::clone(&self.core);
         self.readers.execute(move || {
-            let result = job.execute(&core.io);
+            let ctx = ReadCtx { devices: &core.devices, staging: &core.staging };
+            let result = job.execute(&core.io, &ctx);
             drop(job); // release the stream buffer before signaling
             let _ = tx.send(result);
         });
@@ -399,6 +451,36 @@ mod tests {
         assert_eq!(stats.total_bytes, data.len() as u64);
         assert_eq!(std::fs::read(dir.join("a.bin")).unwrap(), *data);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn submission_plans_before_execution() {
+        // Plan construction happens at submission: the plan the runtime
+        // derives for a job tiles exactly the source bytes at the
+        // engine's queue depth, before any writer thread touches it.
+        let rt = runtime_with(2, 8 << 10);
+        let job = WriteJob::bytes(Arc::new(vec![5u8; 20_000]), PathBuf::from("/unused"));
+        let plan = rt.plan_job(&job);
+        plan.validate(rt.io_config().align as u64).unwrap();
+        assert_eq!(plan.planned_bytes(), 20_000);
+        assert!(plan.queue_depth >= 2, "default kind is direct-double");
+        let buffered = rt.plan_job(&job.with_kind(EngineKind::Buffered));
+        assert!(buffered.streamed);
+    }
+
+    #[test]
+    fn drain_lanes_cover_every_device() {
+        let base = scratch_dir("rt-lanes").unwrap();
+        let devices = DeviceMap::simulated(4, &base.join("ssds")).unwrap();
+        let rt = IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::default().microbench(),
+            drain_threads: 2,
+            devices,
+            ..IoRuntimeConfig::default()
+        });
+        // 4 devices > 2 drain_threads -> one lane per device
+        assert_eq!(rt.drain_lanes(), 4);
+        std::fs::remove_dir_all(&base).unwrap();
     }
 
     #[test]

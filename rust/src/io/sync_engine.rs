@@ -1,28 +1,39 @@
-//! Buffered write engine — the `torch.save()`-class baseline (§3.1).
+//! Buffered write *policy* — the `torch.save()`-class baseline (§3.1).
 //!
-//! Writes go through a std `BufWriter` in small chunks (default 1 MiB,
-//! matching the CPython buffered-writer behaviour torch.save inherits),
-//! no alignment, no staging buffers, no overlap. This is the engine the
-//! paper measures at ~3% of deliverable SSD bandwidth for a single
-//! writer.
+//! Since the unified pipeline ([`crate::io::write`]), this module plans
+//! and nothing else: the baseline's op schedule is **one streamed
+//! extent** covering the whole file
+//! ([`crate::io::write::WritePlan::streamed`]), which the shared
+//! executor realizes as std `BufWriter` writes in small chunks (default
+//! 64 KiB, matching the CPython buffered-writer behaviour torch.save
+//! inherits) — no alignment, no staging buffers, no overlap, no
+//! O_DIRECT. This is the engine the paper measures at ~3% of
+//! deliverable SSD bandwidth for a single writer.
 
-use std::fs::{File, OpenOptions};
-use std::io::{BufWriter, Write};
 use std::path::Path;
-use std::time::Instant;
 
-use crate::io::engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
+use crate::io::engine::{EngineKind, IoConfig, Sink, WriteEngine};
+use crate::io::write::{WritePipeline, WritePlan, WriteResources};
 use crate::Result;
 
-/// The buffered (torch.save-style) write engine.
+/// The buffered (torch.save-style) planning policy.
 pub struct BufferedEngine {
     cfg: IoConfig,
+    res: WriteResources,
 }
 
 impl BufferedEngine {
-    /// An engine writing through std buffered I/O per `cfg`.
+    /// A standalone buffered engine (private resources — the streamed
+    /// plan never touches the staging pool, so these cost nothing).
     pub fn new(cfg: IoConfig) -> BufferedEngine {
-        BufferedEngine { cfg }
+        let res = WriteResources::standalone(&cfg, 1);
+        BufferedEngine::with_resources(cfg, res)
+    }
+
+    /// A buffered engine borrowing shared runtime resources (kept so
+    /// the baseline and the FastPersist engines live on one runtime).
+    pub fn with_resources(cfg: IoConfig, res: WriteResources) -> BufferedEngine {
+        BufferedEngine { cfg: cfg.normalized(), res }
     }
 }
 
@@ -31,61 +42,17 @@ impl WriteEngine for BufferedEngine {
         EngineKind::Buffered
     }
 
-    fn create(&self, path: &Path, _expected_size: Option<u64>) -> Result<Box<dyn Sink>> {
-        let file = OpenOptions::new()
-            .create(true)
-            .write(true)
-            .truncate(true)
-            .open(path)?;
-        Ok(Box::new(BufferedSink {
-            writer: BufWriter::with_capacity(self.cfg.buffered_chunk, file),
-            chunk: self.cfg.buffered_chunk,
-            sync: self.cfg.sync_on_finish,
-            stats: WriteStats::default(),
-            start: Instant::now(),
-            scratch: Vec::new(),
-        }))
-    }
-}
-
-struct BufferedSink {
-    writer: BufWriter<File>,
-    chunk: usize,
-    sync: bool,
-    stats: WriteStats,
-    start: Instant,
-    /// Serialization scratch: torch.save's pickle framing copies tensor
-    /// bytes into Python-level buffers before they reach the OS — the
-    /// baseline pays that staging copy too (in small chunks, serially),
-    /// which is precisely the inefficiency §3.1 measures.
-    scratch: Vec<u8>,
-}
-
-impl Sink for BufferedSink {
-    fn write(&mut self, data: &[u8]) -> Result<()> {
-        // Feed the writer chunk-at-a-time through the serialization
-        // scratch: mirrors the many small copying writes of torch.save
-        // instead of one giant zero-copy write().
-        self.scratch.resize(self.chunk, 0);
-        for piece in data.chunks(self.chunk) {
-            self.scratch[..piece.len()].copy_from_slice(piece);
-            self.writer.write_all(&self.scratch[..piece.len()])?;
-            self.stats.write_ops += 1;
-        }
-        self.stats.total_bytes += data.len() as u64;
-        Ok(())
+    fn plan(&self, total: Option<u64>) -> WritePlan {
+        WritePlan::streamed(&self.cfg, total)
     }
 
-    fn finish(mut self: Box<Self>) -> Result<WriteStats> {
-        self.writer.flush()?;
-        let file = self.writer.into_inner().map_err(|e| e.into_error())?;
-        if self.sync {
-            file.sync_data()?;
-            self.stats.fsyncs = 1;
-        }
-        self.stats.suffix_bytes = self.stats.total_bytes; // all traditional path
-        self.stats.elapsed = self.start.elapsed();
-        Ok(self.stats)
+    fn create_planned(
+        &self,
+        path: &Path,
+        plan: WritePlan,
+        expected_size: Option<u64>,
+    ) -> Result<Box<dyn Sink>> {
+        WritePipeline::open(&self.cfg, &self.res, plan, path, expected_size)
     }
 }
 
@@ -111,6 +78,8 @@ mod tests {
         let stats = sink.finish().unwrap();
 
         assert_eq!(stats.total_bytes, data.len() as u64);
+        assert_eq!(stats.suffix_bytes, stats.total_bytes, "all traditional path");
+        assert_eq!(stats.direct_bytes, 0, "baseline never engages O_DIRECT");
         assert_eq!(std::fs::read(&path).unwrap(), data);
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -138,5 +107,15 @@ mod tests {
         assert_eq!(stats.total_bytes, 0);
         assert_eq!(std::fs::read(&path).unwrap().len(), 0);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn policy_plans_streamed_chunks() {
+        let engine = BufferedEngine::new(IoConfig::baseline());
+        let plan = engine.plan(Some(5 << 20));
+        assert!(plan.streamed);
+        assert_eq!(plan.queue_depth, 1);
+        assert_eq!(plan.chunk, 64 << 10);
+        assert_eq!(plan.planned_bytes(), 5 << 20);
     }
 }

@@ -1,0 +1,1047 @@
+//! The unified, plan-based write pipeline (paper §4.1) — ONE executor
+//! for every engine kind.
+//!
+//! PR 4 unified the restore path: reads are *planned* (coalesced runs)
+//! and *executed* by the runtime's reader pool. This module is the
+//! write-side mirror. A checkpoint write is described by a
+//! [`WritePlan`] — an explicit op schedule of [`WriteOp::Stage`] /
+//! [`WriteOp::Drain`] / [`WriteOp::Fsync`] steps over aligned
+//! [`WriteExtent`]s — and realized by one shared executor
+//! ([`WritePipeline`]) against the runtime's staging pool and
+//! **per-device submission queues** ([`DrainPool`]). The former three
+//! write engines survive only as *planning policies*:
+//!
+//! * **buffered** (torch.save baseline): one streamed extent covering
+//!   the whole file, executed as small copying writes
+//!   ([`crate::io::sync_engine`]);
+//! * **direct-single** (Fig. 5a): chunk-sized extents, stage→drain
+//!   serial — queue depth 1 ([`crate::io::direct_engine`] over
+//!   [`crate::io::double_buffer`]);
+//! * **direct-double** (Fig. 5b): the same extents with drains
+//!   overlapping stages — queue depth ≥ 2
+//!   ([`crate::io::double_buffer`]).
+//!
+//! There is no per-engine drain loop anywhere: every kind flows through
+//! [`WritePipeline::open`], which returns the one staged (or streamed)
+//! sink implementation.
+//!
+//! **Real O_DIRECT, end to end.** The staged executor opens its data
+//! descriptor with `O_DIRECT` whenever the destination device's probe
+//! says the filesystem accepts it ([`DeviceMap::direct_capability_for`]
+//! — probed once per device, cached, logged fallback otherwise). Every
+//! drain is then a fully aligned positioned write **directly from a
+//! pool staging buffer** (aligned base address, aligned offset, aligned
+//! length), and the sub-alignment tail of the stream goes through a
+//! **zeroed bounce buffer** on a second traditional descriptor — the
+//! unaligned bytes never touch the direct fd. [`WriteStats`] accounts
+//! the split (`direct_bytes`, `bounce_bytes`, `queue_depth_max`), so
+//! benches and tests can prove the direct path is actually taken.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::os::unix::fs::{FileExt, OpenOptionsExt};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::io::align::{align_down, align_up};
+use crate::io::buffer::{AlignedBuf, BufferPool};
+use crate::io::device::{DeviceMap, O_DIRECT};
+use crate::io::engine::{EngineKind, IoConfig, Sink, WriteStats};
+use crate::util::threadpool::ThreadPool;
+use crate::{Error, Result};
+
+/// One planned extent of the output file: stream bytes
+/// `[offset, offset + len)` land at the same file offsets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WriteExtent {
+    /// File (and stream) offset the extent starts at.
+    pub offset: u64,
+    /// Extent length in bytes.
+    pub len: u64,
+}
+
+impl WriteExtent {
+    /// One past the last byte of the extent.
+    pub fn end(&self) -> u64 {
+        self.offset + self.len
+    }
+}
+
+/// One step of a write plan's op schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteOp {
+    /// Copy stream bytes of extent `i` into a staging buffer (the
+    /// accelerator→pinned-DRAM hop).
+    Stage(usize),
+    /// Submit extent `i`'s staged buffer to the destination device's
+    /// submission queue (a positioned write; the DRAM→SSD hop).
+    Drain(usize),
+    /// Make the file durable (fdatasync) once every drain completed.
+    Fsync,
+}
+
+/// A planned checkpoint-file write: the op schedule the unified
+/// executor realizes. Policies ([`crate::io::sync_engine`],
+/// [`crate::io::direct_engine`], [`crate::io::double_buffer`]) differ
+/// **only** in how they construct this plan.
+#[derive(Debug, Clone)]
+pub struct WritePlan {
+    /// Engine kind the plan was derived from (reporting only).
+    pub kind: EngineKind,
+    /// Planned extents tiling `[0, total)` when the stream length is
+    /// known up front; empty for an open-ended sink, which synthesizes
+    /// `chunk`-sized extents as bytes arrive.
+    pub extents: Vec<WriteExtent>,
+    /// Staged bytes per extent — an alignment multiple, right-sized to
+    /// the stream so small checkpoints drain promptly.
+    pub chunk: usize,
+    /// Maximum drains in flight: 1 serializes stage/drain (Fig. 5a),
+    /// ≥ 2 overlaps the drain of extent *k* with the stage of *k+1*
+    /// (Fig. 5b).
+    pub queue_depth: usize,
+    /// Buffered baseline: execute as small streamed copies instead of
+    /// staged aligned drains.
+    pub streamed: bool,
+    /// fdatasync on finish (the plan's trailing [`WriteOp::Fsync`]).
+    pub sync: bool,
+}
+
+/// Tile `[0, total)` into `chunk`-sized extents: every extent except
+/// the last has exactly `chunk` bytes (an alignment multiple), and only
+/// the final extent may be shorter or end unaligned.
+pub fn plan_extents(total: u64, chunk: usize) -> Vec<WriteExtent> {
+    assert!(chunk > 0, "chunk must be positive");
+    let mut extents = Vec::with_capacity((total / chunk as u64) as usize + 1);
+    let mut offset = 0u64;
+    while offset < total {
+        let len = (chunk as u64).min(total - offset);
+        extents.push(WriteExtent { offset, len });
+        offset += len;
+    }
+    extents
+}
+
+fn schedule_ops(n_extents: usize, sync: bool) -> Vec<WriteOp> {
+    let mut ops = Vec::with_capacity(n_extents * 2 + 1);
+    for i in 0..n_extents {
+        ops.push(WriteOp::Stage(i));
+        ops.push(WriteOp::Drain(i));
+    }
+    if sync {
+        ops.push(WriteOp::Fsync);
+    }
+    ops
+}
+
+impl WritePlan {
+    /// A staged plan (the direct kinds): `chunk`-sized aligned extents
+    /// drained through the device submission queue at `queue_depth`.
+    /// `total` (when known) right-sizes the chunk so a small checkpoint
+    /// drains after its last byte instead of after a 32 MB high-water
+    /// mark.
+    pub fn staged(cfg: &IoConfig, total: Option<u64>, queue_depth: usize) -> WritePlan {
+        let align = cfg.align.max(1) as u64;
+        let chunk = match total {
+            Some(t) => cfg.io_buf_size.min(align_up(t, align).max(align) as usize),
+            None => cfg.io_buf_size,
+        };
+        let chunk = (align_down(chunk as u64, align) as usize).max(align as usize);
+        let extents = total.map(|t| plan_extents(t, chunk)).unwrap_or_default();
+        WritePlan {
+            kind: cfg.kind,
+            extents,
+            chunk,
+            queue_depth: queue_depth.max(1),
+            streamed: false,
+            sync: cfg.sync_on_finish,
+        }
+    }
+
+    /// The buffered-baseline plan: one streamed extent covering the
+    /// whole file, written as `buffered_chunk`-sized copies.
+    pub fn streamed(cfg: &IoConfig, total: Option<u64>) -> WritePlan {
+        let extents = match total {
+            Some(t) if t > 0 => vec![WriteExtent { offset: 0, len: t }],
+            _ => Vec::new(),
+        };
+        WritePlan {
+            kind: cfg.kind,
+            extents,
+            chunk: cfg.buffered_chunk.max(1),
+            queue_depth: 1,
+            streamed: true,
+            sync: cfg.sync_on_finish,
+        }
+    }
+
+    /// The op schedule over the planned extents (Stage/Drain
+    /// interleaved in stream order, then Fsync when durable) — derived
+    /// on demand so submissions don't allocate it. The executor
+    /// realizes exactly this schedule streamingly: bytes arriving at
+    /// the sink fill the current extent's staging buffer (its Stage
+    /// op), a full extent submits to its drain lane (its Drain op), and
+    /// each realized drain is checked against the schedule's extent
+    /// offsets ([`WritePlan::validate`] proves the schedule itself
+    /// well-formed).
+    pub fn ops(&self) -> Vec<WriteOp> {
+        schedule_ops(self.extents.len(), self.sync)
+    }
+
+    /// Total bytes the planned extents cover.
+    pub fn planned_bytes(&self) -> u64 {
+        self.extents.iter().map(|e| e.len).sum()
+    }
+
+    /// Validate the plan's structural invariants (used by the
+    /// property tests): extents cover `[0, planned_bytes)` exactly once
+    /// in order, every extent boundary except the final end is
+    /// `align`-aligned, and the op schedule stages each extent exactly
+    /// once before draining it.
+    pub fn validate(&self, align: u64) -> Result<()> {
+        let mut expect = 0u64;
+        for (i, e) in self.extents.iter().enumerate() {
+            if e.offset != expect {
+                return Err(Error::Internal(format!(
+                    "extent {i} starts at {} expected {expect} (gap or overlap)",
+                    e.offset
+                )));
+            }
+            if e.len == 0 {
+                return Err(Error::Internal(format!("extent {i} is empty")));
+            }
+            if !self.streamed && e.offset % align != 0 {
+                return Err(Error::Internal(format!("extent {i} offset unaligned")));
+            }
+            if !self.streamed && i + 1 < self.extents.len() && e.len % align != 0 {
+                return Err(Error::Internal(format!("interior extent {i} length unaligned")));
+            }
+            expect = e.end();
+        }
+        let ops = self.ops();
+        let mut staged = vec![false; self.extents.len()];
+        for op in &ops {
+            match *op {
+                WriteOp::Stage(i) => {
+                    if i >= staged.len() || staged[i] {
+                        return Err(Error::Internal(format!("extent {i} staged twice")));
+                    }
+                    staged[i] = true;
+                }
+                WriteOp::Drain(i) => {
+                    if i >= staged.len() || !staged[i] {
+                        return Err(Error::Internal(format!("extent {i} drained before staged")));
+                    }
+                }
+                WriteOp::Fsync => {}
+            }
+        }
+        if staged.iter().any(|s| !s) {
+            return Err(Error::Internal("plan leaves an extent unstaged".into()));
+        }
+        if self.sync != ops.last().map(|op| *op == WriteOp::Fsync).unwrap_or(false)
+            && !self.extents.is_empty()
+        {
+            return Err(Error::Internal("durable plan must end with Fsync".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Counters from the drain path of one sink.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DrainStats {
+    /// Bytes drained to storage.
+    pub bytes: u64,
+    /// Positioned write ops issued.
+    pub ops: u64,
+}
+
+/// One staged-extent drain: a positioned write of `buf[..len]` at
+/// `offset` of `file`, submitted to a [`DrainPool`] lane.
+pub struct DrainJob {
+    /// Destination descriptor (O_DIRECT when the pipeline engaged it).
+    pub file: Arc<File>,
+    /// Staged buffer holding the extent bytes (returned to the staging
+    /// pool by the drain worker).
+    pub buf: AlignedBuf,
+    /// File offset the extent lands at.
+    pub offset: u64,
+    /// Bytes of `buf` to write.
+    pub len: usize,
+}
+
+/// Per-device submission queues with persistent drain workers — the
+/// executor's DRAM→SSD stage.
+///
+/// Each *lane* is one ordered queue serviced by one persistent worker;
+/// the runtime creates at least one lane per configured device so every
+/// SSD has its own submission stream (drain writes are positioned, so
+/// any number of sinks share a lane without ordering coordination).
+/// A drain job writes a staged buffer, returns it to its staging pool,
+/// and reports the outcome on the submitting sink's completion channel;
+/// workers never block on anything but the write syscall itself.
+///
+/// Worker threads spawn lazily on the first submission, so a pool that
+/// only ever serves streamed (buffered-baseline) plans costs nothing.
+#[derive(Clone)]
+pub struct DrainPool {
+    count: usize,
+    lanes: Arc<std::sync::OnceLock<Vec<ThreadPool>>>,
+    rr: Arc<AtomicUsize>,
+}
+
+impl DrainPool {
+    /// A pool of `lanes` single-worker submission queues (workers
+    /// spawned on first use).
+    pub fn new(lanes: usize) -> DrainPool {
+        DrainPool {
+            count: lanes.max(1),
+            lanes: Arc::new(std::sync::OnceLock::new()),
+            rr: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Number of submission lanes (= persistent drain workers once
+    /// spawned).
+    pub fn lanes(&self) -> usize {
+        self.count
+    }
+
+    fn workers(&self) -> &Vec<ThreadPool> {
+        self.lanes.get_or_init(|| {
+            (0..self.count).map(|i| ThreadPool::new(1, &format!("ckpt-drain{i}"))).collect()
+        })
+    }
+
+    /// Lane for one drain to `device` (of `n_devices` configured).
+    /// Each device owns the lane group `{d, d+n, d+2n, …}` and
+    /// successive drains round-robin within their device's group — so
+    /// when the runtime has more drain workers than devices, one busy
+    /// device (or one deep-queue sink) still keeps several drains in
+    /// flight, while distinct devices never contend for a lane.
+    /// Unrouted drains (`None`, the degenerate map) round-robin over
+    /// all lanes.
+    pub fn lane_for(&self, device: Option<usize>, n_devices: usize) -> usize {
+        let lanes = self.lanes();
+        match device {
+            Some(d) => {
+                let n = n_devices.clamp(1, lanes);
+                let d = d % n;
+                // device d owns lanes {d, d+n, d+2n, …} below `lanes`,
+                // so remainder lanes are distributed instead of idling
+                let group = (lanes - d).div_ceil(n);
+                d + n * (self.rr.fetch_add(1, Ordering::Relaxed) % group)
+            }
+            None => self.rr.fetch_add(1, Ordering::Relaxed) % lanes,
+        }
+    }
+
+    /// Submit one [`DrainJob`] on `lane`'s queue. The buffer is
+    /// returned to `staging` and the result (bytes written) is sent on
+    /// `done` regardless of success.
+    pub fn submit(
+        &self,
+        lane: usize,
+        job: DrainJob,
+        staging: BufferPool,
+        done: Sender<Result<u64>>,
+    ) {
+        self.workers()[lane % self.count].execute(move || {
+            let DrainJob { file, buf, offset, len } = job;
+            let result = file
+                .write_all_at(&buf.filled()[..len], offset)
+                .map(|()| len as u64)
+                .map_err(Error::Io);
+            // Recycle before reporting so producers blocked in acquire()
+            // wake even if the sink has stopped listening.
+            staging.release(buf);
+            let _ = done.send(result);
+        });
+    }
+}
+
+/// The shared write-side resources a planning policy borrows: the
+/// pinned staging pool, the per-device submission queues, and the
+/// device map (routing + O_DIRECT capability cache). Runtime-owned in
+/// production; [`WriteResources::standalone`] builds a private set for
+/// one-off engines.
+#[derive(Clone)]
+pub struct WriteResources {
+    /// Aligned staging buffers (allocate-once, recycle-forever).
+    pub pool: BufferPool,
+    /// Per-device submission queues.
+    pub drain: DrainPool,
+    /// Partition routing + per-device O_DIRECT capability.
+    pub devices: DeviceMap,
+}
+
+impl WriteResources {
+    /// Private engine-lifetime resources: `buffers` staging buffers of
+    /// `cfg`'s geometry, one submission lane, the degenerate device
+    /// map.
+    pub fn standalone(cfg: &IoConfig, buffers: usize) -> WriteResources {
+        let cfg = cfg.clone().normalized();
+        WriteResources {
+            pool: BufferPool::with_align(buffers.max(1), cfg.io_buf_size, cfg.align),
+            drain: DrainPool::new(1),
+            devices: DeviceMap::single(),
+        }
+    }
+}
+
+/// The one write executor. [`WritePipeline::open`] realizes any
+/// [`WritePlan`] as a [`Sink`]; no other code path writes checkpoint
+/// bytes.
+pub struct WritePipeline;
+
+impl WritePipeline {
+    /// Open a sink executing `plan` against `path`. `expected_size`
+    /// (when known) pre-allocates the file so parallel aligned writes
+    /// don't fight over metadata updates.
+    pub fn open(
+        cfg: &IoConfig,
+        res: &WriteResources,
+        plan: WritePlan,
+        path: &Path,
+        expected_size: Option<u64>,
+    ) -> Result<Box<dyn Sink>> {
+        if plan.streamed {
+            StreamedSink::open(plan, path)
+        } else {
+            StagedSink::open(cfg, res, plan, path, expected_size)
+        }
+    }
+}
+
+/// Streamed executor: the torch.save-class baseline. One logical
+/// extent, written through a std `BufWriter` in small chunks through a
+/// serialization scratch — torch.save's pickle framing copies tensor
+/// bytes into Python-level buffers before they reach the OS, and the
+/// baseline pays that staging copy too (in small chunks, serially),
+/// which is precisely the inefficiency §3.1 measures.
+struct StreamedSink {
+    writer: BufWriter<File>,
+    chunk: usize,
+    sync: bool,
+    stats: WriteStats,
+    start: Instant,
+    scratch: Vec<u8>,
+}
+
+impl StreamedSink {
+    fn open(plan: WritePlan, path: &Path) -> Result<Box<dyn Sink>> {
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(Box::new(StreamedSink {
+            writer: BufWriter::with_capacity(plan.chunk, file),
+            chunk: plan.chunk,
+            sync: plan.sync,
+            stats: WriteStats::default(),
+            start: Instant::now(),
+            scratch: Vec::new(),
+        }))
+    }
+}
+
+impl Sink for StreamedSink {
+    fn write(&mut self, data: &[u8]) -> Result<()> {
+        self.scratch.resize(self.chunk, 0);
+        for piece in data.chunks(self.chunk) {
+            self.scratch[..piece.len()].copy_from_slice(piece);
+            self.writer.write_all(&self.scratch[..piece.len()])?;
+            self.stats.write_ops += 1;
+        }
+        self.stats.total_bytes += data.len() as u64;
+        Ok(())
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<WriteStats> {
+        self.writer.flush()?;
+        let file = self.writer.into_inner().map_err(|e| e.into_error())?;
+        if self.sync {
+            file.sync_data()?;
+            self.stats.fsyncs = 1;
+        }
+        self.stats.suffix_bytes = self.stats.total_bytes; // all traditional path
+        self.stats.elapsed = self.start.elapsed();
+        Ok(self.stats)
+    }
+}
+
+/// Staged executor: aligned extents staged into pool buffers and
+/// drained through per-device submission queues, O_DIRECT when the
+/// device's probe allows, zeroed bounce buffer for the sub-alignment
+/// tail.
+struct StagedSink {
+    /// Data descriptor the drain lanes write (O_DIRECT when engaged).
+    file: Arc<File>,
+    /// Traditional descriptor: bounce-tail write, truncate, fsync.
+    side: File,
+    pool: BufferPool,
+    drain: DrainPool,
+    /// Destination device (lane-group key) and configured device count:
+    /// each drain picks a lane from the device's group per submission,
+    /// so one sink's in-flight extents drain concurrently up to
+    /// min(queue_depth, lanes-per-device) — drains are positioned
+    /// writes, so rotating lanes never reorders anything.
+    device: Option<usize>,
+    n_devices: usize,
+    /// Resolved staged-chunk size (plan chunk clamped to the shared
+    /// pool's geometry).
+    chunk: usize,
+    align: usize,
+    queue_depth: usize,
+    sync: bool,
+    o_direct: bool,
+    /// The planned extents this sink realizes: each drain is checked
+    /// (debug builds) against the schedule's next extent offset;
+    /// streams that outgrow the plan synthesize further chunk-sized
+    /// extents.
+    extents: Vec<WriteExtent>,
+    extent_idx: usize,
+    current: Option<AlignedBuf>,
+    /// Next file offset at which the current buffer will land.
+    submit_offset: u64,
+    /// Total bytes staged so far (logical stream position).
+    staged: u64,
+    inflight: usize,
+    /// High-water mark of drains in flight ([`WriteStats::queue_depth_max`]).
+    inflight_max: usize,
+    done_tx: Sender<Result<u64>>,
+    done_rx: Receiver<Result<u64>>,
+    drained: DrainStats,
+    err: Option<Error>,
+    start: Instant,
+}
+
+impl StagedSink {
+    fn open(
+        cfg: &IoConfig,
+        res: &WriteResources,
+        plan: WritePlan,
+        path: &Path,
+        expected_size: Option<u64>,
+    ) -> Result<Box<dyn Sink>> {
+        let align = res.pool.align();
+        // Probe-gated O_DIRECT on the data descriptor: one capability
+        // probe per device (cached in the DeviceMap), with a belt-and-
+        // braces per-file fallback should an individual open still
+        // refuse the flag. The probe validates DEFAULT_ALIGN-sized
+        // I/O, which covers any configured alignment that is a
+        // multiple of it; smaller alignments are unproven and stay on
+        // the buffered fallback.
+        let mut direct_file = None;
+        if cfg.try_o_direct
+            && O_DIRECT != 0
+            && align % crate::io::align::DEFAULT_ALIGN == 0
+            && res.devices.direct_capability_for(path).is_supported()
+        {
+            direct_file = OpenOptions::new()
+                .create(true)
+                .write(true)
+                .truncate(true)
+                .custom_flags(O_DIRECT)
+                .open(path)
+                .ok();
+        }
+        let o_direct = direct_file.is_some();
+        let file = match direct_file {
+            Some(f) => f,
+            None => OpenOptions::new().create(true).write(true).truncate(true).open(path)?,
+        };
+        // Second, traditional descriptor for the bounce tail (and final
+        // truncate + fsync) — the paper's two-path file (§4.1).
+        let side = OpenOptions::new().write(true).open(path)?;
+        if let Some(size) = expected_size {
+            file.set_len(align_up(size, align as u64))?;
+        }
+        // The shared pool's geometry wins over the plan's chunk: buffers
+        // were sized/aligned at runtime construction.
+        let clamped = plan.chunk.clamp(align, res.pool.buf_size());
+        let chunk = (align_down(clamped as u64, align as u64) as usize).max(align);
+        let (done_tx, done_rx) = mpsc::channel();
+        Ok(Box::new(StagedSink {
+            file: Arc::new(file),
+            side,
+            pool: res.pool.clone(),
+            drain: res.drain.clone(),
+            device: res.devices.device_of(path),
+            n_devices: res.devices.len(),
+            chunk,
+            align,
+            queue_depth: plan.queue_depth.max(1),
+            sync: plan.sync,
+            o_direct,
+            extents: plan.extents,
+            extent_idx: 0,
+            current: None,
+            submit_offset: 0,
+            staged: 0,
+            inflight: 0,
+            inflight_max: 0,
+            done_tx,
+            done_rx,
+            drained: DrainStats::default(),
+            err: None,
+            start: Instant::now(),
+        }))
+    }
+
+    fn submit_buf(&mut self, buf: AlignedBuf, len: usize) {
+        let offset = self.submit_offset;
+        // The plan is a contract, not advisory: every realized drain
+        // must start exactly where the schedule's next extent starts.
+        // (The final extent may drain short — its sub-alignment tail
+        // leaves through the bounce path — and streams that outgrow
+        // their declared length continue past the planned extents.)
+        if let Some(e) = self.extents.get(self.extent_idx) {
+            debug_assert_eq!(e.offset, offset, "drain deviates from the planned extent schedule");
+        }
+        self.extent_idx += 1;
+        self.submit_offset += len as u64;
+        self.inflight += 1;
+        self.inflight_max = self.inflight_max.max(self.inflight);
+        // Lane chosen per DRAIN, rotating within the device's lane
+        // group: a single sink with queue_depth > 1 keeps several
+        // device writes in flight when the group has several workers.
+        let lane = self.drain.lane_for(self.device, self.n_devices);
+        self.drain.submit(
+            lane,
+            DrainJob { file: Arc::clone(&self.file), buf, offset, len },
+            self.pool.clone(),
+            self.done_tx.clone(),
+        );
+    }
+
+    /// Receive one drain completion, folding it into stats/err.
+    fn collect_one(&mut self) {
+        match self.done_rx.recv() {
+            Ok(Ok(bytes)) => {
+                self.drained.bytes += bytes;
+                self.drained.ops += 1;
+                self.inflight -= 1;
+            }
+            Ok(Err(e)) => {
+                if self.err.is_none() {
+                    self.err = Some(e);
+                }
+                self.inflight -= 1;
+            }
+            Err(_) => {
+                if self.err.is_none() {
+                    self.err = Some(Error::Internal("drain pool died".into()));
+                }
+                self.inflight = 0;
+            }
+        }
+    }
+
+    fn check_err(&mut self) -> Result<()> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        Ok(())
+    }
+}
+
+impl Sink for StagedSink {
+    fn write(&mut self, mut data: &[u8]) -> Result<()> {
+        while !data.is_empty() {
+            self.check_err()?;
+            if self.current.is_none() {
+                // Backpressure, two layers: the plan's queue depth
+                // (Fig. 5 single vs double buffering), then the global
+                // staging pool cap.
+                while self.inflight >= self.queue_depth {
+                    self.collect_one();
+                }
+                self.check_err()?;
+                self.current = Some(self.pool.acquire());
+            }
+            let buf = self.current.as_mut().unwrap();
+            let room = self.chunk - buf.len;
+            let n = room.min(data.len());
+            buf.stage(&data[..n]);
+            self.staged += n as u64;
+            data = &data[n..];
+            if buf.len == self.chunk {
+                let buf = self.current.take().expect("submit without buffer");
+                let len = buf.len;
+                self.submit_buf(buf, len);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<WriteStats> {
+        let total = self.staged;
+        let align = self.align as u64;
+        // Final partial extent: drain the aligned prefix through the
+        // submission queue, keep the sub-alignment tail for the bounce
+        // path.
+        let mut tail: Vec<u8> = Vec::new();
+        if let Some(buf) = self.current.take() {
+            let filled = buf.len;
+            let aligned = align_down(filled as u64, align) as usize;
+            tail.extend_from_slice(&buf.filled()[aligned..]);
+            if aligned > 0 {
+                self.submit_buf(buf, aligned);
+            } else {
+                self.pool.release(buf);
+            }
+        }
+        let tail_offset = self.submit_offset;
+        while self.inflight > 0 {
+            self.collect_one();
+        }
+        self.check_err()?;
+        let mut bounce_bytes = 0u64;
+        if !tail.is_empty() {
+            // Zeroed bounce buffer: the sub-alignment tail goes through
+            // the traditional descriptor at its exact length — the
+            // unaligned bytes never pass through the (possibly
+            // O_DIRECT) data fd, and the zeroed staging area can never
+            // leak heap garbage to disk.
+            let mut bounce = AlignedBuf::new(self.align, self.align);
+            bounce.stage(&tail);
+            self.side.write_all_at(bounce.filled(), tail_offset)?;
+            bounce_bytes = tail.len() as u64;
+        }
+        // Trim pre-allocation padding to the logical length.
+        self.side.set_len(total)?;
+        let mut fsyncs = 0;
+        if self.sync {
+            // fdatasync is per-inode, not per-descriptor: one call
+            // covers bytes written through both paths (O_DIRECT
+            // bypasses the page cache but not the device cache; the
+            // bounce tail went through the page cache regardless).
+            self.side.sync_data()?;
+            fsyncs = 1;
+        }
+        Ok(WriteStats {
+            total_bytes: total,
+            aligned_bytes: self.drained.bytes,
+            suffix_bytes: tail.len() as u64,
+            direct_bytes: if self.o_direct { self.drained.bytes } else { 0 },
+            direct_extents: if self.o_direct { self.drained.ops } else { 0 },
+            bounce_bytes,
+            queue_depth_max: self.inflight_max as u64,
+            write_ops: self.drained.ops + u64::from(!tail.is_empty()),
+            fsyncs,
+            elapsed: self.start.elapsed(),
+            o_direct: self.o_direct,
+        })
+    }
+}
+
+impl Drop for StagedSink {
+    fn drop(&mut self) {
+        // A sink dropped without finish() must not strand its staging
+        // buffer; in-flight buffers are recycled by the drain workers
+        // unconditionally.
+        if let Some(buf) = self.current.take() {
+            self.pool.release(buf);
+        }
+        // Wait out any in-flight drains: a caller that drops a failed
+        // sink and immediately re-creates the same path must not race
+        // stale positioned writes into the new file.
+        while self.inflight > 0 {
+            match self.done_rx.recv() {
+                Ok(_) => self.inflight -= 1,
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::engine::scratch_dir;
+    use crate::util::rng::Rng;
+
+    fn cfg(kind: EngineKind, buf: usize) -> IoConfig {
+        IoConfig { kind, io_buf_size: buf, align: 4096, ..IoConfig::default() }.normalized()
+    }
+
+    fn staged_plan(kind: EngineKind, buf: usize, total: Option<u64>) -> WritePlan {
+        let c = cfg(kind, buf);
+        let depth = crate::io::double_buffer::overlap_depth(kind, c.queue_depth);
+        WritePlan::staged(&c, total, depth)
+    }
+
+    fn roundtrip(kind: EngineKind, buf: usize, data: &[u8], pieces: usize) -> WriteStats {
+        // per-(kind, size, buf) dir: concurrent tests must not remove
+        // each other's scratch mid-write
+        let dir = scratch_dir(&format!("wpipe-rt-{}-{}-{buf}", kind.name(), data.len())).unwrap();
+        let path = dir.join(format!("{}-{}.bin", kind.name(), data.len()));
+        let c = cfg(kind, buf);
+        let res = WriteResources::standalone(&c, 2);
+        let plan = if kind == EngineKind::Buffered {
+            WritePlan::streamed(&c, Some(data.len() as u64))
+        } else {
+            staged_plan(kind, buf, Some(data.len() as u64))
+        };
+        let mut sink =
+            WritePipeline::open(&c, &res, plan, &path, Some(data.len() as u64)).unwrap();
+        for chunk in data.chunks(data.len().max(1) / pieces.max(1) + 1) {
+            sink.write(chunk).unwrap();
+        }
+        let stats = sink.finish().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), data, "kind={kind:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+        stats
+    }
+
+    #[test]
+    fn all_kinds_roundtrip_through_the_one_executor() {
+        let mut data = vec![0u8; 1_000_000 + 777];
+        Rng::new(5).fill_bytes(&mut data);
+        for kind in
+            [EngineKind::Buffered, EngineKind::DirectSingle, EngineKind::DirectDouble]
+        {
+            let stats = roundtrip(kind, 64 << 10, &data, 7);
+            assert_eq!(stats.total_bytes, data.len() as u64, "kind={kind:?}");
+            assert_eq!(
+                stats.aligned_bytes + stats.suffix_bytes,
+                stats.total_bytes,
+                "kind={kind:?}: every byte is aligned-path or traditional-path"
+            );
+            if kind == EngineKind::Buffered {
+                assert_eq!(stats.suffix_bytes, stats.total_bytes);
+                assert_eq!(stats.direct_bytes, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn queue_depth_caps_inflight_drains() {
+        let data = vec![7u8; 512 << 10];
+        let single = roundtrip(EngineKind::DirectSingle, 16 << 10, &data, 4);
+        assert!(single.queue_depth_max <= 1, "single: qd={}", single.queue_depth_max);
+        let double = roundtrip(EngineKind::DirectDouble, 16 << 10, &data, 4);
+        assert!(double.queue_depth_max <= 2, "double: qd={}", double.queue_depth_max);
+        assert!(double.queue_depth_max >= 1);
+    }
+
+    #[test]
+    fn direct_path_invariants_when_engaged() {
+        // Probe-dependent: on an O_DIRECT-capable scratch fs the direct
+        // counters must be aligned and complementary to the bounce
+        // bytes; on a rejecting fs they must be zero with the fallback
+        // engaged. Either way the bytes round-trip bit-identically
+        // (asserted inside roundtrip()).
+        let mut data = vec![0u8; 300_000 + 1234];
+        Rng::new(9).fill_bytes(&mut data);
+        let stats = roundtrip(EngineKind::DirectDouble, 64 << 10, &data, 5);
+        if stats.o_direct {
+            assert!(stats.direct_bytes > 0);
+            assert_eq!(stats.direct_bytes % 4096, 0, "direct writes must stay aligned");
+            assert_eq!(
+                stats.direct_bytes + stats.bounce_bytes,
+                stats.total_bytes,
+                "every byte goes through exactly one of the two paths"
+            );
+            assert!(stats.bounce_bytes < 4096, "bounce carries only the sub-alignment tail");
+        } else {
+            assert_eq!(stats.direct_bytes, 0);
+            assert_eq!(stats.direct_extents, 0);
+        }
+    }
+
+    #[test]
+    fn bounce_tail_roundtrips_bit_identically_with_and_without_o_direct() {
+        // The satellite acceptance: head/tail bytes round-trip
+        // bit-identically through the O_DIRECT attempt AND the forced
+        // buffered fallback, for tails of every size class.
+        let dir = scratch_dir("wpipe-bounce").unwrap();
+        for tail in [0usize, 1, 511, 4095] {
+            let mut data = vec![0u8; 16 * 4096 + tail]; // stream tail = `tail` bytes
+            Rng::new(tail as u64).fill_bytes(&mut data);
+            for try_direct in [true, false] {
+                let mut c = cfg(EngineKind::DirectDouble, 16 << 10);
+                c.try_o_direct = try_direct;
+                let res = WriteResources::standalone(&c, 2);
+                let plan = WritePlan::staged(&c, Some(data.len() as u64), 2);
+                let path = dir.join(format!("t{tail}-{try_direct}.bin"));
+                let mut sink =
+                    WritePipeline::open(&c, &res, plan, &path, Some(data.len() as u64))
+                        .unwrap();
+                sink.write(&data).unwrap();
+                let stats = sink.finish().unwrap();
+                assert_eq!(std::fs::read(&path).unwrap(), data, "tail={tail}");
+                assert_eq!(stats.total_bytes, data.len() as u64);
+                if !try_direct {
+                    assert!(!stats.o_direct, "fallback must not engage O_DIRECT");
+                    assert_eq!(stats.direct_bytes, 0);
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prop_planned_extents_cover_stream_exactly_once_and_stay_aligned() {
+        // Satellite: planned write extents cover [0, len) exactly once,
+        // all interior extent boundaries are alignment multiples, and
+        // the op schedule stages each extent exactly once before its
+        // drain.
+        crate::prop::forall("write plan extents tile the stream", 256, |g| {
+            let align = 512u64 << g.u64(0, 4); // 512 .. 8192
+            let total = g.u64(0, 5 << 20);
+            let kind = *g.choose(&[EngineKind::DirectSingle, EngineKind::DirectDouble]);
+            let c = IoConfig {
+                kind,
+                io_buf_size: (align as usize) << g.usize(0, 6),
+                align: align as usize,
+                ..IoConfig::default()
+            }
+            .normalized();
+            let depth = crate::io::double_buffer::overlap_depth(kind, c.queue_depth);
+            let plan = WritePlan::staged(&c, Some(total), depth);
+            if plan.validate(align).is_err() {
+                return false;
+            }
+            // exact coverage
+            if plan.planned_bytes() != total {
+                return false;
+            }
+            // chunk itself is aligned and positive
+            plan.chunk as u64 % align == 0 && plan.chunk > 0
+        });
+    }
+
+    #[test]
+    fn streamed_plan_validates_too() {
+        let c = cfg(EngineKind::Buffered, 1 << 20);
+        let plan = WritePlan::streamed(&c, Some(123_456));
+        plan.validate(4096).unwrap();
+        assert_eq!(plan.planned_bytes(), 123_456);
+        assert!(plan.streamed);
+        // unknown-length plans have no extents but stay executable
+        let open = WritePlan::streamed(&c, None);
+        assert!(open.extents.is_empty());
+        open.validate(4096).unwrap();
+    }
+
+    #[test]
+    fn open_ended_staged_sink_synthesizes_extents() {
+        let dir = scratch_dir("wpipe-open").unwrap();
+        let c = cfg(EngineKind::DirectDouble, 8192);
+        let res = WriteResources::standalone(&c, 2);
+        let plan = WritePlan::staged(&c, None, 2);
+        assert!(plan.extents.is_empty());
+        let path = dir.join("x.bin");
+        let data = vec![4u8; 10_000];
+        let mut sink = WritePipeline::open(&c, &res, plan, &path, None).unwrap();
+        sink.write(&data).unwrap();
+        sink.finish().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drain_lanes_serve_concurrent_sinks() {
+        // Many sinks over ONE pool and ONE drain pool: the multi-writer
+        // configuration the IoRuntime runs. Order within each file must
+        // hold; the pool must not leak buffers.
+        let dir = scratch_dir("wpipe-shared").unwrap();
+        let c = IoConfig { io_buf_size: 2048, align: 512, ..IoConfig::default() }.normalized();
+        let res = WriteResources {
+            pool: BufferPool::with_align(3, 2048, 512),
+            drain: DrainPool::new(2),
+            devices: DeviceMap::single(),
+        };
+        std::thread::scope(|scope| {
+            for i in 0..4usize {
+                let c = c.clone();
+                let res = res.clone();
+                let path = dir.join(format!("f{i}.bin"));
+                scope.spawn(move || {
+                    let data = vec![i as u8 + 1; 10_000 + i * 513];
+                    let plan = WritePlan::staged(&c, Some(data.len() as u64), 2);
+                    let mut sink =
+                        WritePipeline::open(&c, &res, plan, &path, Some(data.len() as u64))
+                            .unwrap();
+                    for chunk in data.chunks(777) {
+                        sink.write(chunk).unwrap();
+                    }
+                    sink.finish().unwrap();
+                    assert_eq!(std::fs::read(&path).unwrap(), data);
+                });
+            }
+        });
+        // every buffer returned to the pool
+        let mut held = Vec::new();
+        for _ in 0..3 {
+            held.push(res.pool.try_acquire().expect("buffer leaked"));
+        }
+        assert!(res.pool.try_acquire().is_none(), "cap exceeded");
+        assert!(res.pool.allocations() <= 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lane_groups_keep_devices_disjoint_and_saturated() {
+        use std::collections::BTreeSet;
+        let pool = DrainPool::new(4);
+        // 1 device over 4 lanes: sinks spread over every drain worker
+        let used: BTreeSet<usize> = (0..8).map(|_| pool.lane_for(Some(0), 1)).collect();
+        assert_eq!(used.len(), 4, "single device must keep every drain worker busy");
+        // 2 devices over 4 lanes: lane groups never overlap
+        let d0: BTreeSet<usize> = (0..8).map(|_| pool.lane_for(Some(0), 2)).collect();
+        let d1: BTreeSet<usize> = (0..8).map(|_| pool.lane_for(Some(1), 2)).collect();
+        assert!(d0.is_disjoint(&d1), "devices must not share a lane: {d0:?} vs {d1:?}");
+        assert_eq!(d0.len(), 2, "each device owns half the lanes");
+        // more devices than lanes: still in bounds, one lane per device mod lanes
+        for d in 0..8 {
+            assert!(pool.lane_for(Some(d), 8) < 4);
+        }
+        // unrouted sinks reach every lane too
+        let any: BTreeSet<usize> = (0..8).map(|_| pool.lane_for(None, 0)).collect();
+        assert_eq!(any.len(), 4);
+        // remainder lanes are distributed, not idled: 3 lanes over 2
+        // devices -> device 0 owns {0, 2}, device 1 owns {1}
+        let odd = DrainPool::new(3);
+        let d0: BTreeSet<usize> = (0..8).map(|_| odd.lane_for(Some(0), 2)).collect();
+        let d1: BTreeSet<usize> = (0..8).map(|_| odd.lane_for(Some(1), 2)).collect();
+        assert_eq!(d0, BTreeSet::from([0, 2]));
+        assert_eq!(d1, BTreeSet::from([1]));
+    }
+
+    #[test]
+    fn dropped_sink_returns_buffer() {
+        let dir = scratch_dir("wpipe-drop").unwrap();
+        let c = IoConfig { io_buf_size: 1024, align: 512, ..IoConfig::default() }.normalized();
+        let res = WriteResources {
+            pool: BufferPool::with_align(1, 1024, 512),
+            drain: DrainPool::new(1),
+            devices: DeviceMap::single(),
+        };
+        let plan = WritePlan::staged(&c, Some(1024), 1);
+        let mut sink =
+            WritePipeline::open(&c, &res, plan, &dir.join("x.bin"), None).unwrap();
+        sink.write(&[1, 2, 3]).unwrap();
+        drop(sink);
+        assert!(res.pool.try_acquire().is_some(), "current buffer not recycled on drop");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prop_order_preserved_any_chunking() {
+        crate::prop::forall("staged pipeline preserves order", 24, |g| {
+            let total = g.usize(0, 6000);
+            let mut data = vec![0u8; total];
+            Rng::new(g.u64(0, u64::MAX)).fill_bytes(&mut data);
+            let kind = *g.choose(&[EngineKind::DirectSingle, EngineKind::DirectDouble]);
+            let stats = roundtrip(kind, 512, &data, g.usize(1, 5));
+            stats.total_bytes == total as u64
+        });
+    }
+}

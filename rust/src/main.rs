@@ -225,6 +225,17 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
             r.summary("ckpt_write_jobs").mean,
             r.total("ckpt_fsyncs"),
         );
+        let direct_extents = r.total("ckpt_direct_extents");
+        println!(
+            "ckpt O_DIRECT extents {:.0}, bounce bytes {} — {}",
+            direct_extents,
+            human(r.total("ckpt_bounce_bytes") as u64),
+            if direct_extents > 0.0 {
+                "direct path engaged"
+            } else {
+                "buffered fallback (probe rejected O_DIRECT or durability off)"
+            },
+        );
     }
     let read_bytes = r.total("ckpt_read_bytes");
     if read_bytes > 0.0 {

@@ -1,11 +1,19 @@
 //! Projection to DP degrees beyond the physical cluster (paper §5.7,
 //! Fig. 12): scale the simulated cluster with DP (nodes = world/16) and
-//! compare baseline vs. FastPersist end-to-end iteration time.
+//! compare baseline vs. FastPersist end-to-end iteration time, plus the
+//! **restart model**: how long recovery from the latest checkpoint
+//! takes. Recovery is read-bound, not write-bound — the projection
+//! accepts a *measured* per-node restore throughput (a real
+//! [`crate::io::ReadStats`]-derived GB/s from the ReadRuntime, see
+//! [`crate::figures::fig12`]) and falls back to the write-path
+//! bandwidth model only when no measurement is available.
 
 use crate::checkpoint::strategy::WriterStrategy;
+use crate::cluster::bandwidth::WritePath;
 use crate::cluster::ClusterSpec;
 use crate::model::gpt3::{find, gpt3_13b_full_tp};
 use crate::model::GptModel;
+use crate::sim::ckpt_sim::simulate_model_checkpoint;
 use crate::sim::trainsim::{simulate_training, CkptMode};
 use crate::Result;
 
@@ -26,16 +34,52 @@ pub struct Projection {
     pub speedup: f64,
     /// FastPersist checkpoint overhead vs. compute-only training.
     pub fp_overhead: f64,
+    /// Restart-from-checkpoint time in seconds: checkpoint bytes over
+    /// the aggregate **read** bandwidth (measured per-node restore
+    /// throughput × nodes when available; the write-path model
+    /// otherwise — see [`project_with_read`]).
+    pub recovery_s: f64,
+    /// True when `recovery_s` used a measured read throughput instead
+    /// of the write-bound assumption.
+    pub recovery_measured: bool,
 }
 
-/// Project `model` to the given DP degree on a cluster sized to fit.
+/// Project `model` to the given DP degree on a cluster sized to fit,
+/// with the write-bound recovery fallback (no measured read
+/// throughput).
 pub fn project(model: &GptModel, dp: usize) -> Result<Projection> {
+    project_with_read(model, dp, None)
+}
+
+/// Like [`project`], with recovery modeled from `read_gbps` — a
+/// **measured** per-node restore throughput (e.g.
+/// [`crate::checkpoint::load::LoadedCheckpoint::gbps`] of a real
+/// restore through the ReadRuntime). Parallel per-node reads (§4.2's
+/// two-step load) scale the aggregate with the node count. `None`
+/// keeps the historical write-bound assumption: recovery at the
+/// simulated FastPersist *write* bandwidth.
+pub fn project_with_read(
+    model: &GptModel,
+    dp: usize,
+    read_gbps: Option<f64>,
+) -> Result<Projection> {
     let world = dp * model.mp();
     let nodes = world.div_ceil(16);
     let spec = ClusterSpec::dgx2(nodes);
     let strat = WriterStrategy::PerSocket;
     let base = simulate_training(&spec, model, dp, 1, CkptMode::Baseline)?;
     let fp = simulate_training(&spec, model, dp, 1, CkptMode::Pipelined(strat))?;
+    let agg_read_gbps = match read_gbps {
+        Some(g) if g > 0.0 => g * nodes as f64,
+        _ => {
+            // write-bound fallback: assume restore runs at the simulated
+            // FastPersist write bandwidth (the pre-ReadRuntime model)
+            simulate_model_checkpoint(&spec, model, dp, strat, WritePath::FastPersist)?
+                .result
+                .agg_gbps
+        }
+    };
+    let recovery_s = model.ckpt_bytes as f64 / (agg_read_gbps.max(1e-9) * 1e9);
     Ok(Projection {
         model: model.name.to_string(),
         dp,
@@ -44,23 +88,31 @@ pub fn project(model: &GptModel, dp: usize) -> Result<Projection> {
         fastpersist_iter: fp.iter,
         speedup: base.iter / fp.iter,
         fp_overhead: fp.slowdown - 1.0,
+        recovery_s,
+        recovery_measured: matches!(read_gbps, Some(g) if g > 0.0),
     })
 }
 
 /// The paper's Fig. 12 sweep: 6.7B and 13B (TP+PP), and 13B full-TP,
-/// projected to DP ∈ {16, 32, 64, 128}.
+/// projected to DP ∈ {16, 32, 64, 128}, write-bound recovery model.
 pub fn fig12_sweep() -> Result<Vec<Projection>> {
+    fig12_sweep_with_read(None)
+}
+
+/// [`fig12_sweep`] with the restart model fed by a measured per-node
+/// restore throughput (see [`project_with_read`]).
+pub fn fig12_sweep_with_read(read_gbps: Option<f64>) -> Result<Vec<Projection>> {
     let mut out = Vec::new();
     let dps = [16usize, 32, 64, 128];
     for dp in dps {
-        out.push(project(find("gpt3-6.7b").unwrap(), dp)?);
+        out.push(project_with_read(find("gpt3-6.7b").unwrap(), dp, read_gbps)?);
     }
     for dp in dps {
-        out.push(project(find("gpt3-13b").unwrap(), dp)?);
+        out.push(project_with_read(find("gpt3-13b").unwrap(), dp, read_gbps)?);
     }
     let full_tp = gpt3_13b_full_tp();
     for dp in dps {
-        let mut p = project(&full_tp, dp)?;
+        let mut p = project_with_read(&full_tp, dp, read_gbps)?;
         p.model = "gpt3-13b-fulltp".into();
         out.push(p);
     }
@@ -115,5 +167,25 @@ mod tests {
         let m = find("gpt3-13b").unwrap();
         let p = project(m, 128).unwrap();
         assert_eq!(p.nodes, 128 * 16 / 16);
+    }
+
+    #[test]
+    fn recovery_uses_measured_read_throughput_when_given() {
+        let m = find("gpt3-6.7b").unwrap();
+        let fallback = project_with_read(m, 16, None).unwrap();
+        assert!(fallback.recovery_s > 0.0);
+        assert!(!fallback.recovery_measured, "no measurement -> write-bound assumption");
+        let measured = project_with_read(m, 16, Some(2.0)).unwrap();
+        assert!(measured.recovery_measured);
+        // 16 nodes x 2 GB/s aggregate read bandwidth
+        let expect = m.ckpt_bytes as f64 / (2.0 * 16.0 * 1e9);
+        assert!((measured.recovery_s - expect).abs() < 1e-9, "{}", measured.recovery_s);
+        // faster measured reads shrink recovery
+        let faster = project_with_read(m, 16, Some(8.0)).unwrap();
+        assert!(faster.recovery_s < measured.recovery_s);
+        // non-positive measurements fall back instead of dividing by zero
+        let degenerate = project_with_read(m, 16, Some(0.0)).unwrap();
+        assert!(!degenerate.recovery_measured);
+        assert!((degenerate.recovery_s - fallback.recovery_s).abs() < 1e-9);
     }
 }

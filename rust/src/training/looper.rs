@@ -381,7 +381,7 @@ impl Trainer {
     /// metric is comparable across modes), while job/fsync counts come
     /// from the per-partition/per-segment [`crate::io::WriteStats`].
     fn harvest_pipe_outcomes(&mut self) {
-        let harvested: Vec<(f64, u64, u64, u64)> = match self.pipe.as_ref() {
+        let harvested: Vec<(f64, u64, u64, u64, u64, u64)> = match self.pipe.as_ref() {
             Some(pipe) => pipe.completed[self.pipe_seen..]
                 .iter()
                 .map(|o| {
@@ -390,17 +390,21 @@ impl Trainer {
                         o.written_bytes,
                         o.stats.len() as u64,
                         o.stats.iter().map(|s| s.fsyncs).sum::<u64>(),
+                        o.direct_extents(),
+                        o.bounce_bytes(),
                     )
                 })
                 .collect(),
             None => return,
         };
         self.pipe_seen += harvested.len();
-        for (latency, bytes, jobs, fsyncs) in harvested {
+        for (latency, bytes, jobs, fsyncs, direct_extents, bounce) in harvested {
             self.recorder.record("ckpt_latency_s", latency);
             self.recorder.record("ckpt_written_bytes", bytes as f64);
             self.recorder.record("ckpt_write_jobs", jobs as f64);
             self.recorder.record("ckpt_fsyncs", fsyncs as f64);
+            self.recorder.record("ckpt_direct_extents", direct_extents as f64);
+            self.recorder.record("ckpt_bounce_bytes", bounce as f64);
         }
     }
 
@@ -543,6 +547,8 @@ impl Trainer {
                     self.recorder.record("ckpt_written_bytes", out.written_bytes as f64);
                     self.recorder.record("ckpt_write_jobs", out.segments_written as f64);
                     self.recorder.record("ckpt_fsyncs", out.fsyncs as f64);
+                    self.recorder.record("ckpt_direct_extents", out.direct_extents() as f64);
+                    self.recorder.record("ckpt_bounce_bytes", out.bounce_bytes() as f64);
                     self.recorder.count("ckpts", 1);
                 }
                 // Baseline and Sync share the persistent engine built at
@@ -558,6 +564,8 @@ impl Trainer {
                     self.recorder.record("ckpt_write_jobs", out.stats.len() as f64);
                     self.recorder
                         .record("ckpt_fsyncs", out.stats.iter().map(|s| s.fsyncs).sum::<u64>() as f64);
+                    self.recorder.record("ckpt_direct_extents", out.direct_extents() as f64);
+                    self.recorder.record("ckpt_bounce_bytes", out.bounce_bytes() as f64);
                     self.recorder.count("ckpts", 1);
                 }
                 CkptRunMode::Pipelined => {
