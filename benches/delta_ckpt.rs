@@ -137,6 +137,7 @@ fn fsync_accounting(payload: usize, chunk_size: u64, group: &mut BenchGroup) {
         ),
         summary: Summary::of(&[base_lat]),
         bytes_per_iter: Some(b.bytes_per_job()),
+        extras: Vec::new(),
     });
     group.results.push(BenchResult {
         name: format!(
@@ -152,6 +153,7 @@ fn fsync_accounting(payload: usize, chunk_size: u64, group: &mut BenchGroup) {
         ),
         summary: Summary::of(&[delta_lat]),
         bytes_per_iter: Some(d.bytes_per_job()),
+        extras: Vec::new(),
     });
     let _ = std::fs::remove_dir_all(&base);
 }
@@ -258,6 +260,7 @@ fn main() {
         name: "full-snapshot".into(),
         summary: full,
         bytes_per_iter: Some(full_bytes / iters),
+        extras: Vec::new(),
     });
     group.results.push(BenchResult {
         name: format!(
@@ -266,6 +269,7 @@ fn main() {
         ),
         summary: dlt,
         bytes_per_iter: Some(delta_bytes / iters),
+        extras: Vec::new(),
     });
 
     println!("\n=== segment coalescing, durable (fsync per WriteJob) ===");

@@ -1,39 +1,277 @@
-//! Bench: Figure 11 — pipelined checkpointing, measured on REAL
-//! training (tiny GPT via PJRT) across gradient-accumulation settings,
-//! plus the paper-scale simulated sweep.
+//! Bench: Figure 11 — checkpoint/compute overlap, eager vs pipelined vs
+//! lazy, full vs delta.
 //!
-//! Real part: per-iteration wall time with sync vs pipelined
-//! checkpointing at GAS ∈ {1, 4, 16}. Higher GAS → more F+B per
-//! optimizer step → more room to hide the write (§2.1.2/§5.6.1).
+//! Two measured parts plus the paper-scale simulated sweep:
 //!
-//! All trainer runs submit into **one shared [`IoRuntime`]** (PR 1's
-//! persistent staging pool + writer pool), so back-to-back modes reuse
-//! the same staging buffers and writer threads — steady-state, not
-//! cold-start, numbers. Emits `BENCH_fig11.json` (benchkit JSON) for
-//! trajectory tracking.
+//! * **Synthetic overlap harness** (always runs, no AOT artifacts
+//!   needed): a mutating synthetic state checkpointed per "iteration"
+//!   (a calibrated busy-wait compute phase), across eager-sync,
+//!   pipelined, and lazy capture/flush modes. Every row reports
+//!   per-step `stall_s` (trainer-side blocked time: write latency for
+//!   eager, `wait_previous` for pipelined, capture copy + staged
+//!   backpressure for lazy) and `drain_s` (flush work that ran
+//!   concurrently with compute) — the ledger proving the overlap.
+//! * **Real trainer sweep** (when artifacts are present): tiny GPT via
+//!   PJRT at GAS ∈ {1, 4, 16}, sync vs pipelined vs lazy. Higher GAS →
+//!   more F+B per optimizer step → more room to hide the write
+//!   (§2.1.2/§5.6.1).
+//!
+//! All runs submit into **one shared [`IoRuntime`]** (persistent
+//! staging pool + writer pool), so back-to-back modes reuse the same
+//! staging buffers and writer threads — steady-state, not cold-start,
+//! numbers. Emits `BENCH_fig11.json` (benchkit JSON) for trajectory
+//! tracking; CI validates its schema (`tools/check_bench_schema.py`).
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use fastpersist::benchkit::{write_bench_json, BenchGroup, BenchResult};
-use fastpersist::checkpoint::delta::CheckpointStrategy;
+use fastpersist::checkpoint::delta::{CheckpointStrategy, DeltaCheckpointer, DeltaConfig};
+use fastpersist::checkpoint::engine::CheckpointEngine;
+use fastpersist::checkpoint::lazy::{LazyCheckpointer, LazyConfig};
+use fastpersist::checkpoint::pipeline::PipelinedCheckpointer;
 use fastpersist::checkpoint::strategy::WriterStrategy;
+use fastpersist::cluster::topology::RankPlacement;
 use fastpersist::io::engine::IoConfig;
 use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
 use fastpersist::runtime::artifacts::ArtifactManifest;
+use fastpersist::tensor::{DType, Tensor, TensorStore};
 use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
+use fastpersist::util::json::Json;
 use fastpersist::util::stats::Summary;
 use fastpersist::util::table::Table;
+
+fn group_of(writers: usize) -> Vec<RankPlacement> {
+    (0..writers)
+        .map(|r| RankPlacement { rank: r, node: 0, socket: r % 2, local_gpu: r })
+        .collect()
+}
+
+fn synthetic_store(nbytes: usize) -> TensorStore {
+    let mut s = TensorStore::new();
+    s.push(Tensor::new("w", DType::U8, vec![nbytes], vec![0x42u8; nbytes]).unwrap())
+        .unwrap();
+    s
+}
+
+/// Touch ~10% of the state (middle slice, step-dependent pattern) so
+/// delta flavors have real dirty chunks per step.
+fn mutate(store: &mut TensorStore, step: u64) {
+    let mut data = store.get("w").unwrap().data.as_ref().clone();
+    let n = data.len();
+    let (a, b) = (n * 45 / 100, n * 55 / 100);
+    for (i, x) in data[a..b].iter_mut().enumerate() {
+        *x ^= (step as u8).wrapping_add(i as u8) | 1;
+    }
+    store.update("w", data).unwrap();
+}
+
+fn extras_for(step: u64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Int(step as i64));
+    m
+}
+
+/// Stand-in for the F+B compute phase: spin for `d` so the flush
+/// helper has real wall-clock to overlap with.
+fn busy_compute(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// One synthetic checkpointing flavor wired to the shared runtime.
+enum Flavor {
+    SyncFull(CheckpointEngine, Vec<RankPlacement>),
+    Pipelined(PipelinedCheckpointer),
+    Lazy(LazyCheckpointer),
+}
+
+struct SynthReport {
+    iters: Vec<f64>,
+    /// Trainer-side blocked seconds across all steps.
+    stall_total: f64,
+    /// Helper-side flush seconds that ran concurrently with compute.
+    drain_total: f64,
+}
+
+fn run_synthetic(
+    runtime: &Arc<IoRuntime>,
+    flavor_name: &str,
+    dir: &Path,
+    steps: u64,
+    nbytes: usize,
+    compute: Duration,
+) -> SynthReport {
+    let dcfg = DeltaConfig { chunk_size: 64 << 10, ..DeltaConfig::default() };
+    let lcfg = LazyConfig { staging_bytes: 64 << 20, buf_size: 4 << 20, max_generations: 2 };
+    let group = group_of(2);
+    let mut flavor = match flavor_name {
+        "sync-full" => Flavor::SyncFull(
+            CheckpointEngine::with_runtime(Arc::clone(runtime), WriterStrategy::AllReplicas),
+            group,
+        ),
+        "pipelined-full" => Flavor::Pipelined(PipelinedCheckpointer::new(
+            CheckpointEngine::with_runtime(Arc::clone(runtime), WriterStrategy::AllReplicas),
+            group,
+        )),
+        "pipelined-delta" => Flavor::Pipelined(PipelinedCheckpointer::delta(
+            DeltaCheckpointer::new(Arc::clone(runtime), dcfg),
+        )),
+        "lazy-full" => Flavor::Lazy(LazyCheckpointer::full(
+            CheckpointEngine::with_runtime(Arc::clone(runtime), WriterStrategy::AllReplicas),
+            group,
+            lcfg,
+        )),
+        "lazy-delta" => Flavor::Lazy(LazyCheckpointer::delta(
+            DeltaCheckpointer::new(Arc::clone(runtime), dcfg),
+            lcfg,
+        )),
+        other => panic!("unknown flavor {other}"),
+    };
+    let mut store = synthetic_store(nbytes);
+    let mut iters = Vec::new();
+    let mut stall_total = 0.0f64;
+    for step in 1..=steps {
+        let it = Instant::now();
+        busy_compute(compute);
+        mutate(&mut store, step);
+        let sdir = dir.join(format!("step-{step:08}"));
+        let extras = extras_for(step);
+        match &mut flavor {
+            Flavor::SyncFull(engine, group) => {
+                let t = Instant::now();
+                engine.write(&store, extras, &sdir, group).unwrap();
+                stall_total += t.elapsed().as_secs_f64();
+            }
+            Flavor::Pipelined(pipe) => {
+                let t = Instant::now();
+                pipe.wait_previous().unwrap();
+                stall_total += t.elapsed().as_secs_f64();
+                pipe.request(&store, extras, sdir).unwrap();
+            }
+            Flavor::Lazy(lz) => {
+                lz.poll_completed().unwrap();
+                let cs = lz.capture(&store, extras, sdir).unwrap();
+                stall_total += (cs.stall + cs.copy).as_secs_f64();
+            }
+        }
+        iters.push(it.elapsed().as_secs_f64());
+    }
+    // Shutdown drain (outside the steady-state per-step stall): collect
+    // the concurrent-flush ledger.
+    let drain_total = match flavor {
+        Flavor::SyncFull(..) => 0.0,
+        Flavor::Pipelined(mut pipe) => {
+            pipe.wait_previous().unwrap();
+            pipe.completed.iter().map(|o| o.latency.as_secs_f64()).sum()
+        }
+        Flavor::Lazy(mut lz) => {
+            lz.wait_all().unwrap();
+            lz.completed.iter().map(|o| o.drain.as_secs_f64()).sum()
+        }
+    };
+    SynthReport { iters, stall_total, drain_total }
+}
+
+fn synthetic_part(runtime: &Arc<IoRuntime>, dir: &Path, fast: bool) -> BenchGroup {
+    let (steps, nbytes, compute) = if fast {
+        (4u64, 2usize << 20, Duration::from_millis(10))
+    } else {
+        (8u64, 4usize << 20, Duration::from_millis(20))
+    };
+    println!(
+        "\n=== fig11 (synthetic): {} steps x {} MiB state, {} ms compute/step ===",
+        steps,
+        nbytes >> 20,
+        compute.as_millis()
+    );
+    let mut group =
+        BenchGroup::new("fig11: per-step stall vs concurrent drain (synthetic, shared runtime)");
+    let mut table = Table::new(vec![
+        "mode", "iter p50 (ms)", "stall/step (ms)", "drain/step (ms)", "stall %",
+    ]);
+    for flavor in ["sync-full", "pipelined-full", "pipelined-delta", "lazy-full", "lazy-delta"] {
+        let d = dir.join(flavor);
+        let rep = run_synthetic(runtime, flavor, &d, steps, nbytes, compute);
+        let summary = Summary::of(&rep.iters);
+        let stall_s = rep.stall_total / steps as f64;
+        let drain_s = rep.drain_total / steps as f64;
+        let iter_total: f64 = rep.iters.iter().sum();
+        let stall_frac = if iter_total > 0.0 { rep.stall_total / iter_total } else { 0.0 };
+        table.row(vec![
+            flavor.to_string(),
+            format!("{:.1}", summary.p50 * 1e3),
+            format!("{:.2}", stall_s * 1e3),
+            format!("{:.2}", drain_s * 1e3),
+            format!("{:.1}%", stall_frac * 100.0),
+        ]);
+        let r = BenchResult {
+            name: format!("synthetic iter/{flavor}"),
+            summary,
+            bytes_per_iter: Some(nbytes as u64),
+            extras: Vec::new(),
+        }
+        .with_extra("stall_s", stall_s)
+        .with_extra("drain_s", drain_s)
+        .with_extra("stall_frac", stall_frac);
+        group.results.push(r);
+        if flavor == "lazy-delta" {
+            println!(
+                "  lazy-delta stall overhead: {:.2}% of step time (target < 5%) — {}",
+                stall_frac * 100.0,
+                if stall_frac < 0.05 { "ok" } else { "OVER" }
+            );
+        }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+    println!("{}", table.render());
+    // Per-lane drain counters: the flush traffic the modes above pushed
+    // through the shared runtime's submission lanes.
+    let lanes = runtime.drain_lane_stats();
+    let submitted: u64 = lanes.iter().map(|l| l.submissions).sum();
+    if submitted > 0 {
+        let busy: Vec<f64> = lanes.iter().map(|l| l.busy.as_secs_f64()).collect();
+        let max_queued = lanes.iter().map(|l| l.max_queued).max().unwrap_or(0);
+        println!(
+            "  drain lanes {}: {} submissions, max queued/lane {}",
+            lanes.len(),
+            submitted,
+            max_queued
+        );
+        group.results.push(
+            BenchResult {
+                name: format!(
+                    "drain-lane busy ({} lanes, {} submissions, max queued {})",
+                    lanes.len(),
+                    submitted,
+                    max_queued
+                ),
+                summary: Summary::of(&busy),
+                bytes_per_iter: None,
+                extras: Vec::new(),
+            }
+            .with_extra("submissions", submitted as f64)
+            .with_extra("max_queued", max_queued as f64),
+        );
+    }
+    group
+}
 
 fn run_mode(
     manifest: &ArtifactManifest,
     runtime: &Arc<IoRuntime>,
     mode: CkptRunMode,
     ga: u64,
-    dir: std::path::PathBuf,
-) -> (Vec<f64>, f64) {
+    dir: PathBuf,
+) -> (Vec<f64>, f64, f64) {
+    let steps = 8u64;
     let cfg = TrainerConfig {
         model: "tiny".into(),
-        steps: 8,
+        steps,
         ckpt_every: 1,
         ckpt_dir: dir,
         mode,
@@ -46,81 +284,117 @@ fn run_mode(
         grad_accum: ga,
         seed: 0,
         keep_last: 1,
+        lazy_staging_bytes: 256 << 20,
+        lazy_max_generations: 2,
         gc_occupancy: 0.5,
         log_every: 0,
     };
     let mut t = Trainer::new_with_runtime(manifest, cfg, Arc::clone(runtime)).unwrap();
     t.run().unwrap();
-    (t.recorder.samples("iter_s").to_vec(), t.total_stall() / 8.0)
+    (
+        t.recorder.samples("iter_s").to_vec(),
+        t.total_stall() / steps as f64,
+        t.recorder.total("drain_s") / steps as f64,
+    )
+}
+
+fn real_part(manifest: &ArtifactManifest, runtime: &Arc<IoRuntime>, dir: &Path) -> BenchGroup {
+    println!("\n=== fig11 (real): tiny GPT, per-iteration ckpt, sync vs pipelined vs lazy ===");
+    let mut group =
+        BenchGroup::new("fig11: sync vs pipelined vs lazy iteration time (shared runtime)");
+    let mut table = Table::new(vec![
+        "GAS",
+        "sync iter p50 (ms)",
+        "pipe iter p50 (ms)",
+        "lazy iter p50 (ms)",
+        "sync stall (ms)",
+        "pipe stall (ms)",
+        "lazy stall (ms)",
+        "lazy drain (ms)",
+    ]);
+    for ga in [1u64, 4, 16] {
+        let (sync_iters, sync_stall, _) =
+            run_mode(manifest, runtime, CkptRunMode::Sync, ga, dir.join(format!("s{ga}")));
+        let (pipe_iters, pipe_stall, _) =
+            run_mode(manifest, runtime, CkptRunMode::Pipelined, ga, dir.join(format!("p{ga}")));
+        let (lazy_iters, lazy_stall, lazy_drain) =
+            run_mode(manifest, runtime, CkptRunMode::Lazy, ga, dir.join(format!("l{ga}")));
+        let sync = Summary::of(&sync_iters);
+        let pipe = Summary::of(&pipe_iters);
+        let lazy = Summary::of(&lazy_iters);
+        table.row(vec![
+            ga.to_string(),
+            format!("{:.1}", sync.p50 * 1e3),
+            format!("{:.1}", pipe.p50 * 1e3),
+            format!("{:.1}", lazy.p50 * 1e3),
+            format!("{:.2}", sync_stall * 1e3),
+            format!("{:.2}", pipe_stall * 1e3),
+            format!("{:.2}", lazy_stall * 1e3),
+            format!("{:.2}", lazy_drain * 1e3),
+        ]);
+        group.results.push(
+            BenchResult {
+                name: format!("iter/sync ga{ga}"),
+                summary: sync,
+                bytes_per_iter: None,
+                extras: Vec::new(),
+            }
+            .with_extra("stall_s", sync_stall)
+            .with_extra("drain_s", 0.0),
+        );
+        group.results.push(
+            BenchResult {
+                name: format!("iter/pipelined ga{ga}"),
+                summary: pipe,
+                bytes_per_iter: None,
+                extras: Vec::new(),
+            }
+            .with_extra("stall_s", pipe_stall),
+        );
+        group.results.push(
+            BenchResult {
+                name: format!("iter/lazy ga{ga}"),
+                summary: lazy,
+                bytes_per_iter: None,
+                extras: Vec::new(),
+            }
+            .with_extra("stall_s", lazy_stall)
+            .with_extra("drain_s", lazy_drain),
+        );
+    }
+    println!("{}", table.render());
+    let allocs = runtime.staging().allocations();
+    println!("(shared runtime: {allocs} staging allocations across all 9 runs; single-vCPU");
+    println!(" containers show pipelining as removed *stall* — see ARCHITECTURE.md §1)");
+    group
 }
 
 fn main() {
-    let manifest = match ArtifactManifest::load(&ArtifactManifest::default_dir()) {
-        Ok(m) => m,
-        Err(e) => {
-            println!("skipping real part ({e}); simulated sweep only");
-            fastpersist::figures::fig11::run().unwrap();
-            return;
-        }
-    };
+    let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
     let dir = fastpersist::io::engine::scratch_dir("bench-fig11").unwrap();
-    // One persistent I/O runtime for every mode/GAS combination below:
-    // staging buffers are allocated once, writer threads live across
-    // all runs (the PR 1 steady-state regime).
+    // One persistent I/O runtime for every part below: staging buffers
+    // are allocated once, writer threads live across all runs.
     let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
         io: IoConfig::fastpersist().microbench(),
         ..IoRuntimeConfig::default()
     }));
     runtime.staging().prewarm();
-    println!("\n=== fig11 (real): tiny GPT, per-iteration ckpt, sync vs pipelined ===");
-    let mut group = BenchGroup::new("fig11: sync vs pipelined iteration time (shared runtime)");
-    let mut table = Table::new(vec![
-        "GAS", "sync iter p50 (ms)", "pipe iter p50 (ms)", "sync stall/iter (ms)",
-        "pipe stall/iter (ms)",
-    ]);
-    for ga in [1u64, 4, 16] {
-        let (sync_iters, sync_stall) = run_mode(
-            &manifest,
-            &runtime,
-            CkptRunMode::Sync,
-            ga,
-            dir.join(format!("s{ga}")),
-        );
-        let (pipe_iters, pipe_stall) = run_mode(
-            &manifest,
-            &runtime,
-            CkptRunMode::Pipelined,
-            ga,
-            dir.join(format!("p{ga}")),
-        );
-        let sync = Summary::of(&sync_iters);
-        let pipe = Summary::of(&pipe_iters);
-        table.row(vec![
-            ga.to_string(),
-            format!("{:.1}", sync.p50 * 1e3),
-            format!("{:.1}", pipe.p50 * 1e3),
-            format!("{:.2}", sync_stall * 1e3),
-            format!("{:.2}", pipe_stall * 1e3),
-        ]);
-        group.results.push(BenchResult {
-            name: format!("iter/sync ga{ga}"),
-            summary: sync,
-            bytes_per_iter: None,
-        });
-        group.results.push(BenchResult {
-            name: format!("iter/pipelined ga{ga}"),
-            summary: pipe,
-            bytes_per_iter: None,
-        });
+
+    let synth = synthetic_part(&runtime, &dir.join("synthetic"), fast);
+
+    let real = match ArtifactManifest::load(&ArtifactManifest::default_dir()) {
+        Ok(manifest) => Some(real_part(&manifest, &runtime, &dir)),
+        Err(e) => {
+            println!("(artifacts not available: {e}; synthetic part only)");
+            None
+        }
+    };
+
+    let mut groups: Vec<&BenchGroup> = vec![&synth];
+    if let Some(g) = real.as_ref() {
+        groups.push(g);
     }
-    println!("{}", table.render());
-    let allocs = runtime.staging().allocations();
-    println!(
-        "(shared runtime: {} staging allocations across all {} runs; single-vCPU",
-        allocs, 6
-    );
-    println!(" containers show pipelining as removed *stall* — see ARCHITECTURE.md §1)");
-    let _ = write_bench_json("fig11", &[&group]);
+    let _ = write_bench_json("fig11", &groups);
 
     fastpersist::figures::fig11::run().unwrap();
     let _ = std::fs::remove_dir_all(&dir);

@@ -98,6 +98,7 @@ fn row(label: String, summary: Summary, loaded: &LoadedCheckpoint) -> BenchResul
         ),
         summary,
         bytes_per_iter: Some(loaded.manifest.total_len),
+        extras: Vec::new(),
     }
 }
 

@@ -54,9 +54,17 @@ pub struct BenchResult {
     pub summary: Summary,
     /// Optional bytes processed per iteration (enables GB/s reporting).
     pub bytes_per_iter: Option<u64>,
+    /// Extra named scalar counters serialized alongside the timing
+    /// fields (e.g. per-step `stall_s` / `drain_s` for overlap benches).
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchResult {
+    /// Attach a named scalar to the result's JSON (builder-style).
+    pub fn with_extra(mut self, key: &str, value: f64) -> BenchResult {
+        self.extras.push((key.to_string(), value));
+        self
+    }
     /// Median throughput when `bytes_per_iter` is known.
     pub fn throughput_gbps(&self) -> Option<f64> {
         self.bytes_per_iter
@@ -79,6 +87,9 @@ impl BenchResult {
         }
         if let Some(t) = self.throughput_gbps() {
             fields.push(("gbps", Json::Float(t)));
+        }
+        for (k, v) in &self.extras {
+            fields.push((k.as_str(), Json::Float(*v)));
         }
         Json::obj(fields)
     }
@@ -134,7 +145,7 @@ fn bench_with_bytes(
     let keep = samples.len()
         - ((samples.len() as f64 * cfg.trim_frac).floor() as usize).min(samples.len() - 1);
     let summary = Summary::of(&samples[..keep]);
-    BenchResult { name: name.to_string(), summary, bytes_per_iter }
+    BenchResult { name: name.to_string(), summary, bytes_per_iter, extras: Vec::new() }
 }
 
 /// Format a duration in seconds with adaptive units.

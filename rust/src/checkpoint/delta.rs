@@ -35,6 +35,15 @@
 //!   entry points at the `(sibling directory, segment, offset)` that
 //!   physically holds the chunk's bytes.
 //!
+//! The same manifest-published-last discipline is what makes the
+//! [`crate::checkpoint::lazy`] flush path crash-safe: a lazy generation
+//! that dies between capture and manifest publish leaves segment bytes
+//! but no manifest, so it is invisible to recovery, and — because a
+//! skipped generation never executes [`DeltaCheckpointer::write`] — the
+//! writer's chunk table still describes the last *published* delta.
+//! The chain therefore stays consistent: the next flush diffs against
+//! durable state, never against a generation that was lost in flight.
+//!
 //! The resulting manifest (v4,
 //! [`crate::checkpoint::manifest::DeltaSection`]) is **fully
 //! resolved**: loading never walks ancestor manifests, it reads each

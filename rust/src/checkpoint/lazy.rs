@@ -1,0 +1,659 @@
+//! Lazy asynchronous checkpointing — the capture/flush split.
+//!
+//! The eager pipelined path ([`crate::checkpoint::pipeline`]) keeps the
+//! paper's strict *O_{i+1} ← C_i* dependency: the trainer blocks at the
+//! next step boundary until the previous checkpoint is durable. This
+//! module deliberately relaxes that dependency (the DataStates-LLM
+//! refinement of FastPersist pillar (iii)): training state is *captured*
+//! the instant the optimizer step ends — a bounded memcpy into pooled
+//! staging buffers, nothing else on the training thread — and a
+//! dedicated flush scheduler drains captured generations to durable
+//! storage across the following iterations.
+//!
+//! ```text
+//! trainer thread                     flush scheduler
+//! ──────────────                     ───────────────
+//! O_i
+//! capture(gen i)  ── memcpy ──────►  (queued)
+//! F_{i+1}, B_{i+1}, O_{i+1}          reassemble gen i, write via
+//! capture(gen i+1) ───────────────►    engine/delta chain, publish
+//! F_{i+2} ...                          manifest LAST, recycle buffers
+//! ```
+//!
+//! Each capture is tagged with a monotonically increasing **generation**
+//! number; generations flush strictly in order (FIFO channel, single
+//! scheduler thread), so the delta chain on the scheduler advances
+//! exactly as in the eager path and every published checkpoint keeps the
+//! manifest-publish-last commit point.
+//!
+//! **Backpressure state machine** (per generation):
+//!
+//! ```text
+//! capture ──► staged ──► draining ──► durable
+//!    │           (holds staging buffers until durable)
+//!    └─ stalls the trainer, measured, when either
+//!       (a) max_generations captures are not yet durable, or
+//!       (b) the staging budget is exhausted (acquire blocks).
+//! ```
+//!
+//! The price of the relaxed dependency is a bounded durability lag: on a
+//! crash, up to [`LazyConfig::max_generations`] of the newest steps may
+//! be lost, and recovery lands on the newest *published* generation
+//! (crash drill: `tests/lazy_async.rs`). The trainer-side cost is
+//! reported honestly as per-step `stall_s` (backpressure + capture
+//! memcpy); the overlapped flush work is reported separately as
+//! `drain_s` — the two columns `BENCH_fig11.json` compares eager vs
+//! lazy.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::checkpoint::delta::DeltaCheckpointer;
+use crate::checkpoint::engine::{CheckpointEngine, CheckpointOutcome};
+use crate::checkpoint::pipeline::HelperWriter;
+use crate::cluster::topology::RankPlacement;
+use crate::io::buffer::{AlignedBuf, BufferPool};
+use crate::tensor::{DType, Tensor, TensorStore};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Tuning knobs for the lazy capture/flush split.
+#[derive(Debug, Clone, Copy)]
+pub struct LazyConfig {
+    /// Staging budget in bytes for captured-but-not-yet-durable state.
+    /// Buffers return to the pool only when their generation is durable,
+    /// so this bounds the real memory cost of the durability lag.
+    pub staging_bytes: u64,
+    /// Granularity of the capture staging buffers (one pool buffer).
+    pub buf_size: usize,
+    /// Maximum generations captured but not yet durable before
+    /// [`LazyCheckpointer::capture`] stalls (measured). `1` restores the
+    /// eager pipelined durability semantics.
+    pub max_generations: usize,
+}
+
+impl Default for LazyConfig {
+    fn default() -> Self {
+        LazyConfig { staging_bytes: 256 << 20, buf_size: 32 << 20, max_generations: 2 }
+    }
+}
+
+impl LazyConfig {
+    fn normalized(mut self) -> LazyConfig {
+        self.buf_size = self.buf_size.max(4096);
+        self.staging_bytes = self.staging_bytes.max(self.buf_size as u64);
+        self.max_generations = self.max_generations.max(1);
+        self
+    }
+}
+
+/// Shape/dtype record for one captured tensor (payload lives in the
+/// staging buffers, concatenated in capture order).
+struct CapturedTensor {
+    name: String,
+    dtype: DType,
+    shape: Vec<usize>,
+    len: usize,
+}
+
+/// One generation-tagged snapshot: raw tensor payloads packed into
+/// staging buffers plus the metadata to reassemble them.
+struct Generation {
+    number: u64,
+    tensors: Vec<CapturedTensor>,
+    bufs: Vec<AlignedBuf>,
+    extra: BTreeMap<String, Json>,
+    dir: PathBuf,
+}
+
+impl Generation {
+    /// Rebuild the captured [`TensorStore`] from the packed buffers.
+    fn reassemble(&self) -> Result<TensorStore> {
+        let mut store = TensorStore::new();
+        let mut buf_idx = 0usize;
+        let mut pos = 0usize;
+        for t in &self.tensors {
+            let mut data = Vec::with_capacity(t.len);
+            while data.len() < t.len {
+                let buf = self.bufs.get(buf_idx).ok_or_else(|| {
+                    Error::Internal(format!(
+                        "generation {}: capture layout exhausted at tensor {:?}",
+                        self.number, t.name
+                    ))
+                })?;
+                let take = (buf.len - pos).min(t.len - data.len());
+                data.extend_from_slice(&buf.filled()[pos..pos + take]);
+                pos += take;
+                if pos == buf.len {
+                    buf_idx += 1;
+                    pos = 0;
+                }
+            }
+            store.push(Tensor::new(&t.name, t.dtype, t.shape.clone(), data)?)?;
+        }
+        Ok(store)
+    }
+}
+
+/// Trainer-side accounting of one [`LazyCheckpointer::capture`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct CaptureStats {
+    /// Generation number assigned to this snapshot.
+    pub generation: u64,
+    /// Payload bytes captured.
+    pub bytes: u64,
+    /// Staging buffers holding the snapshot until it is durable.
+    pub buffers: usize,
+    /// Time blocked on backpressure (generation cap + staging budget) —
+    /// the only way the flush path ever stalls the trainer.
+    pub stall: Duration,
+    /// Time spent memcpy-ing state into the staging buffers.
+    pub copy: Duration,
+}
+
+/// One durable lazy generation (scheduler-side accounting).
+pub struct LazyOutcome {
+    /// Generation number (capture order == publish order).
+    pub generation: u64,
+    /// The published checkpoint's outcome (manifest, write stats, ...).
+    pub outcome: CheckpointOutcome,
+    /// Flush-scheduler wall time for this generation (reassembly +
+    /// write + publish) — work overlapped with training, not stalled on.
+    pub drain: Duration,
+}
+
+/// Lazy asynchronous checkpoint executor: generation-tagged capture on
+/// the trainer thread, ordered flush on a dedicated scheduler thread,
+/// staged backpressure in between.
+pub struct LazyCheckpointer {
+    cfg: LazyConfig,
+    staging: BufferPool,
+    req_tx: Option<Sender<Generation>>,
+    done_rx: Receiver<Result<LazyOutcome>>,
+    helper: Option<JoinHandle<()>>,
+    inflight: usize,
+    next_generation: u64,
+    killed: Arc<AtomicBool>,
+    /// Cumulative time the trainer spent blocked on backpressure (and in
+    /// [`LazyCheckpointer::wait_all`]) — the lazy path's measured stall.
+    pub stall: Duration,
+    /// Outcomes of every durable generation, in generation order.
+    pub completed: Vec<LazyOutcome>,
+}
+
+impl LazyCheckpointer {
+    /// Lazy captures flushed as full parallel checkpoints over a fixed
+    /// DP writer `group`.
+    pub fn full(
+        engine: CheckpointEngine,
+        group: Vec<RankPlacement>,
+        cfg: LazyConfig,
+    ) -> LazyCheckpointer {
+        Self::with_writer(HelperWriter::Full { engine, group }, cfg)
+    }
+
+    /// Lazy captures flushed as incremental delta checkpoints; the chain
+    /// diff state lives on the flush scheduler, and because generations
+    /// flush strictly in order the chain advances exactly as it would
+    /// eagerly.
+    pub fn delta(ckpt: DeltaCheckpointer, cfg: LazyConfig) -> LazyCheckpointer {
+        Self::with_writer(HelperWriter::Delta(ckpt), cfg)
+    }
+
+    fn with_writer(mut writer: HelperWriter, cfg: LazyConfig) -> LazyCheckpointer {
+        let cfg = cfg.normalized();
+        let count = (cfg.staging_bytes / cfg.buf_size as u64).max(1) as usize;
+        // A dedicated capture pool, separate from the runtime's staging
+        // pool: flush-side WriteJobs acquire runtime buffers while a
+        // generation still holds its capture buffers, so sharing one
+        // pool could deadlock under budget pressure.
+        let staging = BufferPool::new(count, cfg.buf_size);
+        let (req_tx, req_rx) = mpsc::channel::<Generation>();
+        let (done_tx, done_rx) = mpsc::channel();
+        let killed = Arc::new(AtomicBool::new(false));
+        let crash = Arc::clone(&killed);
+        let pool = staging.clone();
+        let helper = std::thread::Builder::new()
+            .name("ckpt-lazy-flush".into())
+            .spawn(move || {
+                for generation in req_rx {
+                    if crash.load(Ordering::Relaxed) {
+                        // Crash drill: the scheduler "dies" between
+                        // capture and publish. Recycle the buffers (the
+                        // memory a real crash would lose) and report the
+                        // failure; nothing of this generation reaches
+                        // the checkpoint directory.
+                        let number = generation.number;
+                        for buf in generation.bufs {
+                            pool.release(buf);
+                        }
+                        let err = Error::Internal(format!(
+                            "lazy flush killed before generation {number} was published"
+                        ));
+                        if done_tx.send(Err(err)).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
+                    let t0 = Instant::now();
+                    let number = generation.number;
+                    let result = flush_generation(&mut writer, generation, &pool);
+                    let drain = t0.elapsed();
+                    let msg = result.map(|outcome| LazyOutcome { generation: number, outcome, drain });
+                    if done_tx.send(msg).is_err() {
+                        break; // trainer side gone
+                    }
+                }
+            })
+            .expect("spawn lazy flush scheduler");
+        LazyCheckpointer {
+            cfg,
+            staging,
+            req_tx: Some(req_tx),
+            done_rx,
+            helper: Some(helper),
+            inflight: 0,
+            next_generation: 0,
+            killed,
+            stall: Duration::ZERO,
+            completed: Vec::new(),
+        }
+    }
+
+    /// Snapshot `store` into staging buffers and queue it for flushing.
+    /// Call **after** the optimizer step. The only blocking is staged
+    /// backpressure, returned (and accumulated in
+    /// [`LazyCheckpointer::stall`]) as [`CaptureStats::stall`].
+    pub fn capture(
+        &mut self,
+        store: &TensorStore,
+        extra: BTreeMap<String, Json>,
+        dir: PathBuf,
+    ) -> Result<CaptureStats> {
+        let bytes = store.total_bytes();
+        let needed = ((bytes as usize).div_ceil(self.staging.buf_size())).max(1);
+        if needed > self.staging.count() {
+            return Err(Error::Config(format!(
+                "lazy staging budget too small for one generation: {} bytes of state need {} \
+                 buffers but the budget holds {} x {} bytes — raise the staging budget or the \
+                 buffer size",
+                bytes,
+                needed,
+                self.staging.count(),
+                self.staging.buf_size()
+            )));
+        }
+        let mut stall = Duration::ZERO;
+        // Backpressure (a): bounded durability lag. Drain completions of
+        // the oldest generations until fewer than max_generations are in
+        // flight; the wait is the trainer's measured stall.
+        while self.inflight >= self.cfg.max_generations {
+            let t0 = Instant::now();
+            let r = self.recv_one();
+            stall += t0.elapsed();
+            if let Err(e) = r {
+                self.stall += stall;
+                return Err(e);
+            }
+        }
+        // Capture: pure memcpy into pooled buffers, packed back to back.
+        // Backpressure (b): when every budget buffer is still held by a
+        // draining generation, acquire() blocks — also measured stall.
+        let mut bufs: Vec<AlignedBuf> = Vec::with_capacity(needed);
+        let mut tensors = Vec::with_capacity(store.len());
+        let mut copy = Duration::ZERO;
+        let mut current: Option<AlignedBuf> = None;
+        for t in store.iter() {
+            tensors.push(CapturedTensor {
+                name: t.name.clone(),
+                dtype: t.dtype,
+                shape: t.shape.clone(),
+                len: t.data.len(),
+            });
+            let mut src: &[u8] = t.data.as_slice();
+            while !src.is_empty() {
+                if current.as_ref().map_or(true, |b| b.remaining() == 0) {
+                    if let Some(full) = current.take() {
+                        bufs.push(full);
+                    }
+                    let t0 = Instant::now();
+                    current = Some(self.staging.acquire());
+                    stall += t0.elapsed();
+                }
+                let buf = current.as_mut().expect("staging buffer just acquired");
+                let t0 = Instant::now();
+                let n = buf.stage(src);
+                copy += t0.elapsed();
+                src = &src[n..];
+            }
+        }
+        if let Some(tail) = current.take() {
+            bufs.push(tail);
+        }
+        let generation = self.next_generation;
+        self.next_generation += 1;
+        let buffers = bufs.len();
+        self.req_tx
+            .as_ref()
+            .expect("lazy checkpointer finished")
+            .send(Generation { number: generation, tensors, bufs, extra, dir })
+            .map_err(|_| Error::Internal("lazy flush scheduler died".into()))?;
+        self.inflight += 1;
+        self.stall += stall;
+        Ok(CaptureStats { generation, bytes, buffers, stall, copy })
+    }
+
+    /// Harvest every already-finished generation without blocking.
+    /// Returns how many completed. Call once per training step so
+    /// `drain_s` accounting stays current.
+    pub fn poll_completed(&mut self) -> Result<usize> {
+        let mut n = 0usize;
+        loop {
+            match self.done_rx.try_recv() {
+                Ok(msg) => {
+                    self.inflight -= 1;
+                    self.completed.push(msg?);
+                    n += 1;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if self.inflight > 0 {
+                        return Err(Error::Internal("lazy flush scheduler died".into()));
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(n)
+    }
+
+    /// Block until every captured generation is durable (end of the
+    /// run, or a hard synchronization point). The wait is accumulated
+    /// into [`LazyCheckpointer::stall`].
+    pub fn wait_all(&mut self) -> Result<()> {
+        while self.inflight > 0 {
+            let t0 = Instant::now();
+            let r = self.recv_one();
+            self.stall += t0.elapsed();
+            r?;
+        }
+        Ok(())
+    }
+
+    fn recv_one(&mut self) -> Result<()> {
+        let msg = self
+            .done_rx
+            .recv()
+            .map_err(|_| Error::Internal("lazy flush scheduler died".into()))?;
+        self.inflight -= 1;
+        self.completed.push(msg?);
+        Ok(())
+    }
+
+    /// Generations captured but not yet durable.
+    pub fn in_flight(&self) -> usize {
+        self.inflight
+    }
+
+    /// The capture staging pool (budget introspection).
+    pub fn staging(&self) -> &BufferPool {
+        &self.staging
+    }
+
+    /// The normalized configuration in effect.
+    pub fn config(&self) -> &LazyConfig {
+        &self.cfg
+    }
+
+    /// Fault-injection hook for crash drills: generations whose flush
+    /// has not started when this is called are abandoned (buffers
+    /// recycled, an error reported) instead of written — simulating a
+    /// crash in the capture-to-publish window. A crash *mid*-write is
+    /// drilled separately by removing the manifest, which is always
+    /// published strictly last (see `tests/delta_recovery.rs`).
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::Relaxed);
+    }
+
+    /// Drain every outstanding generation and shut the scheduler down;
+    /// returns all completed outcomes.
+    pub fn finish(mut self) -> Result<Vec<LazyOutcome>> {
+        self.wait_all()?;
+        drop(self.req_tx.take());
+        if let Some(h) = self.helper.take() {
+            h.join().map_err(|_| Error::Internal("lazy flush scheduler panicked".into()))?;
+        }
+        Ok(std::mem::take(&mut self.completed))
+    }
+}
+
+impl Drop for LazyCheckpointer {
+    fn drop(&mut self) {
+        drop(self.req_tx.take());
+        if let Some(h) = self.helper.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Reassemble one generation and write it; staging buffers return to
+/// the capture pool only after the write attempt finishes, so the
+/// budget honestly bounds captured-but-not-durable bytes.
+fn flush_generation(
+    writer: &mut HelperWriter,
+    generation: Generation,
+    pool: &BufferPool,
+) -> Result<CheckpointOutcome> {
+    let result = generation
+        .reassemble()
+        .and_then(|snapshot| writer.write(&snapshot, generation.extra, &generation.dir));
+    for buf in generation.bufs {
+        pool.release(buf);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+    use crate::checkpoint::load::load_checkpoint;
+    use crate::checkpoint::strategy::WriterStrategy;
+    use crate::io::engine::{scratch_dir, IoConfig};
+    use crate::io::runtime::{IoRuntime, IoRuntimeConfig};
+    use crate::util::rng::Rng;
+
+    fn solo_group() -> Vec<RankPlacement> {
+        vec![RankPlacement { rank: 0, node: 0, socket: 0, local_gpu: 0 }]
+    }
+
+    fn small_cfg() -> LazyConfig {
+        LazyConfig { staging_bytes: 4 << 20, buf_size: 64 << 10, max_generations: 2 }
+    }
+
+    fn store_with(step: u8, nbytes: usize) -> TensorStore {
+        let mut s = TensorStore::new();
+        let mut data = vec![step; nbytes];
+        Rng::new(step as u64).fill_bytes(&mut data[..nbytes / 2]);
+        s.push(Tensor::new("w", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+        s
+    }
+
+    fn extra(step: i64) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        m.insert("step".into(), Json::Int(step));
+        m
+    }
+
+    #[test]
+    fn every_captured_generation_becomes_durable_in_order() {
+        let dir = scratch_dir("lazy-every").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let rt = std::sync::Arc::clone(engine.runtime());
+        let mut lazy = LazyCheckpointer::full(engine, solo_group(), small_cfg());
+        let iters = 5i64;
+        for i in 0..iters {
+            let store = store_with(i as u8, 200_000);
+            let stats = lazy.capture(&store, extra(i), dir.join(format!("step{i}"))).unwrap();
+            assert_eq!(stats.generation, i as u64);
+            assert_eq!(stats.bytes, 200_000);
+            assert!(lazy.in_flight() <= 2, "generation cap violated");
+        }
+        let outcomes = lazy.finish().unwrap();
+        assert_eq!(outcomes.len(), iters as usize);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.generation, i as u64, "generations must publish in order");
+        }
+        for i in 0..iters {
+            let (loaded, header, _) = load_checkpoint(&dir.join(format!("step{i}")), &rt).unwrap();
+            assert_eq!(header.extra["step"], Json::Int(i));
+            assert!(loaded.content_eq(&store_with(i as u8, 200_000)));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn capture_isolates_from_subsequent_mutation() {
+        // The checkpoint of generation i must contain the state at
+        // capture time even though the trainer mutates the live store
+        // immediately (the whole point of the memcpy capture).
+        let dir = scratch_dir("lazy-iso").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let rt = std::sync::Arc::clone(engine.runtime());
+        let mut lazy = LazyCheckpointer::full(engine, solo_group(), small_cfg());
+        let mut store = store_with(1, 500_000);
+        lazy.capture(&store, extra(1), dir.join("c1")).unwrap();
+        store.update("w", vec![99u8; 500_000]).unwrap();
+        lazy.wait_all().unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("c1"), &rt).unwrap();
+        assert!(loaded.content_eq(&store_with(1, 500_000)));
+        drop(lazy);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn generation_cap_of_one_restores_eager_semantics() {
+        let dir = scratch_dir("lazy-cap1").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let mut lazy = LazyCheckpointer::full(
+            engine,
+            solo_group(),
+            LazyConfig { max_generations: 1, ..small_cfg() },
+        );
+        for i in 0..4i64 {
+            let store = store_with(i as u8, 300_000);
+            lazy.capture(&store, extra(i), dir.join(format!("s{i}"))).unwrap();
+            assert!(lazy.in_flight() <= 1);
+        }
+        // With cap 1, the 4th capture must have waited on gen 3's flush.
+        assert!(lazy.completed.len() >= 3, "completed={}", lazy.completed.len());
+        lazy.wait_all().unwrap();
+        assert_eq!(lazy.completed.len(), 4);
+        drop(lazy);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn too_small_staging_budget_is_a_config_error_not_a_deadlock() {
+        let dir = scratch_dir("lazy-budget").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let mut lazy = LazyCheckpointer::full(
+            engine,
+            solo_group(),
+            LazyConfig { staging_bytes: 8192, buf_size: 4096, max_generations: 2 },
+        );
+        let store = store_with(0, 100_000); // needs 25 buffers, budget has 2
+        let err = lazy.capture(&store, extra(0), dir.join("c")).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "got {err}");
+        assert!(err.to_string().contains("staging budget"), "got {err}");
+        drop(lazy);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn steady_state_capture_never_allocates_past_the_budget() {
+        let dir = scratch_dir("lazy-alloc").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let cfg = LazyConfig { staging_bytes: 512 << 10, buf_size: 64 << 10, max_generations: 2 };
+        let mut lazy = LazyCheckpointer::full(engine, solo_group(), cfg);
+        for i in 0..10i64 {
+            let store = store_with(i as u8, 150_000);
+            lazy.capture(&store, extra(i), dir.join(format!("s{i}"))).unwrap();
+        }
+        lazy.wait_all().unwrap();
+        let pool = lazy.staging();
+        assert!(
+            pool.allocations() <= pool.count() as u64,
+            "capture pool must never allocate past its cap ({} > {})",
+            pool.allocations(),
+            pool.count()
+        );
+        assert!(pool.acquires() > pool.allocations(), "buffers must be recycled across captures");
+        drop(lazy);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn multi_tensor_store_reassembles_across_buffer_boundaries() {
+        // Tensors larger and smaller than one staging buffer, packed
+        // back to back, must reassemble bit-identically.
+        let dir = scratch_dir("lazy-multi").unwrap();
+        let engine = CheckpointEngine::fastpersist(WriterStrategy::AllReplicas);
+        let rt = std::sync::Arc::clone(engine.runtime());
+        let mut lazy = LazyCheckpointer::full(
+            engine,
+            solo_group(),
+            LazyConfig { staging_bytes: 1 << 20, buf_size: 8 << 10, max_generations: 2 },
+        );
+        let mut store = TensorStore::new();
+        let mut rng = Rng::new(7);
+        for (i, n) in [3usize, 20_000, 8192, 5, 70_001].iter().enumerate() {
+            let mut data = vec![0u8; *n];
+            rng.fill_bytes(&mut data);
+            store
+                .push(Tensor::new(&format!("t{i}"), DType::U8, vec![*n], data).unwrap())
+                .unwrap();
+        }
+        let stats = lazy.capture(&store, extra(0), dir.join("c")).unwrap();
+        assert!(stats.buffers > 1, "test must span multiple buffers");
+        lazy.wait_all().unwrap();
+        let (loaded, _, _) = load_checkpoint(&dir.join("c"), &rt).unwrap();
+        assert!(loaded.content_eq(&store));
+        drop(lazy);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lazy_delta_chain_matches_eager_chain_content() {
+        let dir = scratch_dir("lazy-delta-chain").unwrap();
+        let rt = std::sync::Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig::fastpersist().microbench(),
+            ..IoRuntimeConfig::default()
+        }));
+        let ckpt = DeltaCheckpointer::new(
+            std::sync::Arc::clone(&rt),
+            DeltaConfig { chunk_size: 4096, max_chain: 8, ..DeltaConfig::default() },
+        );
+        let mut lazy = LazyCheckpointer::delta(ckpt, small_cfg());
+        for i in 0..4i64 {
+            let store = store_with(i as u8, 120_000);
+            lazy.capture(&store, extra(i), dir.join(format!("step-{i:08}"))).unwrap();
+        }
+        let outcomes = lazy.finish().unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes[1].outcome.manifest.is_delta());
+        assert_eq!(outcomes[1].outcome.manifest.delta.as_ref().unwrap().chain_len, 1);
+        for i in 0..4i64 {
+            let (loaded, header, _) =
+                load_checkpoint(&dir.join(format!("step-{i:08}")), &rt).unwrap();
+            assert_eq!(header.extra["step"], Json::Int(i));
+            assert!(loaded.content_eq(&store_with(i as u8, 120_000)));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -13,6 +13,11 @@
 //!   communication-free.
 //! * [`pipeline`] — the decoupled executor overlapping checkpoint writes
 //!   with the next iteration's forward/backward (§4.3).
+//! * [`lazy`] — the capture/flush split on top of it: generation-tagged
+//!   memcpy capture into pooled staging buffers at step end, a flush
+//!   scheduler draining generations across following iterations, and
+//!   staged backpressure (staging budget + max generations in flight)
+//!   as the only trainer stall.
 //! * [`load`] — parallel checkpoint loading + allgather reassembly.
 //! * [`manifest`] — the per-checkpoint manifest tying partitions back
 //!   into one logical stream.
@@ -25,6 +30,7 @@
 
 pub mod delta;
 pub mod engine;
+pub mod lazy;
 pub mod load;
 pub mod manifest;
 pub mod pipeline;
@@ -33,6 +39,7 @@ pub mod strategy;
 
 pub use delta::{CheckpointStrategy, DeltaCheckpointer, DeltaConfig, DeltaOutcome};
 pub use engine::{CheckpointEngine, CheckpointOutcome};
+pub use lazy::{LazyCheckpointer, LazyConfig, LazyOutcome};
 pub use load::load_checkpoint;
 pub use manifest::CheckpointManifest;
 pub use pipeline::PipelinedCheckpointer;

@@ -37,7 +37,7 @@
 //! pipelined outcomes report `direct_bytes`/`bounce_bytes` too.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -55,24 +55,36 @@ struct Request {
     dir: PathBuf,
 }
 
-/// What the helper thread runs per request: a full parallel write or an
-/// incremental delta write (segment-packed — the helper inherits the
-/// same bounded WriteJob/fsync profile as synchronous delta writes).
-/// Owned by the helper so stateful writers (the delta chain diff state)
-/// live where the writes happen.
-enum HelperWriter {
-    Full { engine: CheckpointEngine, group: Vec<RankPlacement> },
+/// What a checkpoint worker thread runs per request: a full parallel
+/// write or an incremental delta write (segment-packed — the worker
+/// inherits the same bounded WriteJob/fsync profile as synchronous delta
+/// writes). Owned by the worker thread so stateful writers (the delta
+/// chain diff state) live where the writes happen. Shared between the
+/// eager pipelined helper here and the lazy flush scheduler
+/// ([`crate::checkpoint::lazy`]).
+pub(crate) enum HelperWriter {
+    /// Full-snapshot parallel write over a fixed DP writer group.
+    Full {
+        /// The shared-runtime checkpoint engine.
+        engine: CheckpointEngine,
+        /// The DP group used for every checkpoint (fixed at setup, §4.2).
+        group: Vec<RankPlacement>,
+    },
+    /// Incremental delta write (chain state lives on the worker thread).
     Delta(DeltaCheckpointer),
 }
 
 impl HelperWriter {
-    fn write(&mut self, req: Request) -> Result<CheckpointOutcome> {
+    pub(crate) fn write(
+        &mut self,
+        snapshot: &TensorStore,
+        extra: BTreeMap<String, Json>,
+        dir: &Path,
+    ) -> Result<CheckpointOutcome> {
         match self {
-            HelperWriter::Full { engine, group } => {
-                engine.write(&req.snapshot, req.extra, &req.dir, group)
-            }
+            HelperWriter::Full { engine, group } => engine.write(snapshot, extra, dir, group),
             HelperWriter::Delta(ckpt) => ckpt
-                .write(&req.snapshot, req.extra, &req.dir)
+                .write(snapshot, extra, dir)
                 .map(crate::checkpoint::delta::DeltaOutcome::into_outcome),
         }
     }
@@ -114,7 +126,8 @@ impl PipelinedCheckpointer {
             .spawn(move || {
                 // Infinite loop: block for a request, write, signal (§4.3).
                 for req in req_rx {
-                    let result = writer.write(req);
+                    let Request { snapshot, extra, dir } = req;
+                    let result = writer.write(&snapshot, extra, &dir);
                     if done_tx.send(result).is_err() {
                         break; // main side gone
                     }

@@ -176,6 +176,10 @@ pub struct WriteStats {
     pub fsyncs: u64,
     /// Wall time from sink creation to durable finish.
     pub elapsed: Duration,
+    /// Cumulative wall time drain-lane workers spent inside this sink's
+    /// positioned writes (the DRAM→SSD busy time; 0 for the streamed
+    /// baseline, whose writes happen inline on the submitting thread).
+    pub drain_busy: Duration,
     /// Whether O_DIRECT was actually engaged.
     pub o_direct: bool,
 }

@@ -65,5 +65,6 @@ pub use engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
 pub use read::{ChunkCheck, ReadJob, ReadPart, ReadStats, StreamBuffer};
 pub use runtime::{IoRuntime, IoRuntimeConfig, ReadTicket, Ticket, WriteJob, WriteSource};
 pub use write::{
-    DrainJob, DrainPool, WriteExtent, WriteOp, WritePipeline, WritePlan, WriteResources,
+    DrainDone, DrainJob, DrainPool, LaneStats, WriteExtent, WriteOp, WritePipeline, WritePlan,
+    WriteResources,
 };

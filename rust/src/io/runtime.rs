@@ -46,7 +46,7 @@ use crate::io::direct_engine::DirectEngine;
 use crate::io::engine::{EngineKind, IoConfig, WriteEngine, WriteStats};
 use crate::io::read::{ReadCtx, ReadJob, ReadStats, StreamBuffer};
 use crate::io::sync_engine::BufferedEngine;
-use crate::io::write::{DrainPool, WritePlan, WriteResources};
+use crate::io::write::{DrainPool, LaneStats, WritePlan, WriteResources};
 use crate::serialize::writer::SerializedCheckpoint;
 use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
@@ -235,6 +235,9 @@ struct RuntimeCore {
     devices: DeviceMap,
     read_split_bytes: u64,
     drain_lanes: usize,
+    /// Shared drain-lane pool (same instance every engine drains
+    /// through) — kept here so per-lane counters stay observable.
+    drain: DrainPool,
     buffered: BufferedEngine,
     direct_single: DirectEngine,
     direct_double: DirectEngine,
@@ -288,9 +291,10 @@ impl IoRuntime {
         let staging =
             BufferPool::with_align(cfg.staging_buffers.max(1), io.io_buf_size, io.align);
         let lanes = cfg.drain_threads.max(cfg.devices.len()).max(1);
+        let drain = DrainPool::new(lanes);
         let res = WriteResources {
             pool: staging.clone(),
-            drain: DrainPool::new(lanes),
+            drain: drain.clone(),
             devices: cfg.devices.clone(),
         };
         let core = Arc::new(RuntimeCore {
@@ -311,6 +315,7 @@ impl IoRuntime {
             devices: cfg.devices,
             read_split_bytes: cfg.read_split_bytes.max(1),
             drain_lanes: lanes,
+            drain,
             stream_allocs: AtomicU64::new(0),
             stream_alloc_bytes: AtomicU64::new(0),
         });
@@ -359,6 +364,13 @@ impl IoRuntime {
     /// Drain submission lanes — at least one per configured device.
     pub fn drain_lanes(&self) -> usize {
         self.core.drain_lanes
+    }
+
+    /// Point-in-time per-lane drain counters (submissions, cumulative
+    /// busy time, queued-job high-water mark) for every lane in the
+    /// shared [`DrainPool`].
+    pub fn drain_lane_stats(&self) -> Vec<LaneStats> {
+        self.core.drain.lane_stats()
     }
 
     /// The op schedule the runtime would execute for `job` — the

@@ -97,7 +97,8 @@ fn train_spec(name: &'static str) -> ArgSpec {
         .opt("steps", "training iterations", "100")
         .opt("ckpt-every", "checkpoint every n iterations (0=off)", "1")
         .opt("ckpt-dir", "checkpoint directory", "ckpts")
-        .opt("mode", "none|baseline|sync|pipelined", "pipelined")
+        .opt("mode", "none|baseline|sync|pipelined|lazy", "pipelined")
+        .flag("ckpt-lazy", "shorthand for --mode lazy (capture/flush split)")
         .opt("strategy", "rank0|replica|socket|node|fixedN", "replica")
         .opt("ckpt", "full | delta | deltaN (incremental, compact after N; \
                        --strategy applies to full only)", "full")
@@ -105,6 +106,12 @@ fn train_spec(name: &'static str) -> ArgSpec {
                                (>= 4 KiB)", "64MiB")
         .opt("engine", "buffered|single|double", "double")
         .opt("io-buf", "IO buffer size", "32MiB")
+        .opt("queue-depth", "submission-queue depth per write (>= 1; 1 = single \
+                             buffering, 2+ = double buffering)", "2")
+        .opt("ckpt-staging", "lazy-mode staging budget: cap on captured-but-not-\
+                              durable checkpoint bytes", "256MiB")
+        .opt("ckpt-gens", "lazy-mode max generations in flight (1 = eager \
+                           semantics)", "2")
         .opt("devices", "none | simN (N simulated SSDs) | dir,dir,...", "none")
         .opt("writers", "parallel DP writer threads", "2")
         .opt("ga", "gradient accumulation steps", "1")
@@ -138,6 +145,15 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
     let manifest = ArtifactManifest::load(&ArtifactManifest::default_dir())?;
     let mut io = IoConfig::with_kind(EngineKind::parse(parsed.get("engine"))?);
     io.io_buf_size = parsed.get_size("io-buf")? as usize;
+    let queue_depth = parsed.get_usize("queue-depth")?;
+    if queue_depth == 0 {
+        return Err(Error::Config(
+            "--queue-depth must be at least 1 (1 = single buffering, 2+ overlaps \
+             the drain of extent k with the staging of extent k+1)"
+                .into(),
+        ));
+    }
+    io.queue_depth = queue_depth;
     let ckpt_dir = PathBuf::from(parsed.get("ckpt-dir"));
     let devices = parse_devices(parsed.get("devices"), &ckpt_dir)?;
     let segment_bytes = parsed.get_size("segment-bytes")?;
@@ -152,7 +168,11 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
         steps: parsed.get_usize("steps")? as u64,
         ckpt_every: parsed.get_usize("ckpt-every")? as u64,
         ckpt_dir,
-        mode: CkptRunMode::parse(parsed.get("mode"))?,
+        mode: if parsed.has("ckpt-lazy") {
+            CkptRunMode::Lazy
+        } else {
+            CkptRunMode::parse(parsed.get("mode"))?
+        },
         strategy: WriterStrategy::parse(parsed.get("strategy"))?,
         ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::parse(
             parsed.get("ckpt"),
@@ -164,6 +184,8 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
         grad_accum: parsed.get_usize("ga")? as u64,
         seed: parsed.get_usize("seed")? as u64,
         keep_last: parsed.get_usize("keep-last")?,
+        lazy_staging_bytes: parsed.get_size("ckpt-staging")?,
+        lazy_max_generations: parsed.get_usize("ckpt-gens")?,
         gc_occupancy: parsed.get_f64("gc-occupancy")?.clamp(0.0, 1.0),
         log_every: parsed.get_usize("log-every")? as u64,
     };
@@ -235,6 +257,35 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
             } else {
                 "buffered fallback (probe rejected O_DIRECT or durability off)"
             },
+        );
+    }
+    let drain_total = r.total("drain_s");
+    if drain_total > 0.0 {
+        // the lazy split's ledger: trainer-side stall (capture copy +
+        // staged backpressure) vs helper-side flush time that ran
+        // concurrently with compute
+        let iter_total = r.total("iter_s");
+        println!(
+            "lazy overlap: stall {:.3} s (capture {:.3} s + backpressure {:.3} s) vs \
+             concurrent drain {:.3} s — {:.1}% of step time stalled",
+            trainer.total_stall(),
+            r.total("ckpt_capture_s"),
+            r.total("ckpt_backpressure_s"),
+            drain_total,
+            if iter_total > 0.0 { trainer.total_stall() / iter_total * 100.0 } else { 0.0 },
+        );
+    }
+    let lanes = trainer.io_runtime().drain_lane_stats();
+    let submitted: u64 = lanes.iter().map(|l| l.submissions).sum();
+    if submitted > 0 {
+        let busy: f64 = lanes.iter().map(|l| l.busy.as_secs_f64()).sum();
+        let max_queued = lanes.iter().map(|l| l.max_queued).max().unwrap_or(0);
+        println!(
+            "drain lanes {}: {} submissions, busy {:.3} s total, max queued/lane {}",
+            lanes.len(),
+            submitted,
+            busy,
+            max_queued,
         );
     }
     let read_bytes = r.total("ckpt_read_bytes");

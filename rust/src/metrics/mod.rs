@@ -79,6 +79,16 @@ impl Recorder {
         self.samples(name).iter().sum()
     }
 
+    /// Arithmetic mean of a series (0.0 if never recorded).
+    pub fn mean(&self, name: &str) -> f64 {
+        let s = self.samples(name);
+        if s.is_empty() {
+            0.0
+        } else {
+            s.iter().sum::<f64>() / s.len() as f64
+        }
+    }
+
     /// Serialize all series summaries + counters for a results file.
     pub fn to_json(&self) -> Json {
         let mut obj = Vec::new();
@@ -133,6 +143,8 @@ mod tests {
         assert_eq!(r.samples("lat").len(), 3);
         assert_eq!(r.summary("lat").p50, 2.0);
         assert_eq!(r.total("lat"), 6.0);
+        assert_eq!(r.mean("lat"), 2.0);
+        assert_eq!(r.mean("missing"), 0.0);
         assert_eq!(r.counter("ckpts"), 3);
         assert_eq!(r.counter("missing"), 0);
     }

@@ -1,0 +1,238 @@
+//! Crash drill for lazy asynchronous checkpointing.
+//!
+//! The lazy path's durability contract: a generation is either fully
+//! published (manifest present, loads bit-identically to its captured
+//! snapshot) or invisible (no manifest, recovery skips it) — never
+//! partial. A flush that dies between capture and manifest publish must
+//! leave recovery on the newest *published* generation, and a restarted
+//! writer must resume the delta chain from there.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+use fastpersist::prop_assert;
+use fastpersist::checkpoint::lazy::{LazyCheckpointer, LazyConfig};
+use fastpersist::checkpoint::load::load_checkpoint;
+use fastpersist::checkpoint::manifest::MANIFEST_FILE;
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::training::looper::Trainer;
+use fastpersist::util::json::Json;
+use fastpersist::util::rng::Rng;
+
+const CS: u64 = 4096;
+
+fn runtime() -> Arc<IoRuntime> {
+    Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        ..IoRuntimeConfig::default()
+    }))
+}
+
+fn delta_writer(rt: &Arc<IoRuntime>) -> DeltaCheckpointer {
+    DeltaCheckpointer::new(
+        Arc::clone(rt),
+        DeltaConfig { chunk_size: CS, max_chain: 16, ..DeltaConfig::default() },
+    )
+}
+
+fn lazy_cfg(max_generations: usize) -> LazyConfig {
+    LazyConfig { staging_bytes: 8 << 20, buf_size: 1 << 20, max_generations }
+}
+
+fn store(seed: u64, nbytes: usize) -> TensorStore {
+    let mut rng = Rng::new(seed);
+    let mut s = TensorStore::new();
+    let mut data = vec![0u8; nbytes];
+    rng.fill_bytes(&mut data);
+    s.push(Tensor::new("w", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+    s
+}
+
+fn mutate(s: &mut TensorStore, frac: f64, tag: u8) {
+    let t = s.get("w").unwrap();
+    let mut data = t.data.as_slice().to_vec();
+    let n = (data.len() as f64 * frac) as usize;
+    let start = data.len() / 4;
+    for b in &mut data[start..start + n] {
+        *b ^= tag | 1;
+    }
+    s.update("w", data).unwrap();
+}
+
+fn extra(step: i64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Int(step));
+    m
+}
+
+fn step_dir(dir: &std::path::Path, step: i64) -> std::path::PathBuf {
+    dir.join(format!("step-{step:08}"))
+}
+
+#[test]
+fn killed_lazy_flush_resumes_on_last_durable_generation() {
+    let dir = scratch_dir("lazy-crash").unwrap();
+    let rt = runtime();
+    let mut lazy = LazyCheckpointer::delta(delta_writer(&rt), lazy_cfg(2));
+
+    // three healthy generations, all durable
+    let mut s = store(42, 30 * CS as usize);
+    let mut snapshots = Vec::new();
+    for step in 1..=3i64 {
+        lazy.capture(&s, extra(step), step_dir(&dir, step)).unwrap();
+        snapshots.push(s.snapshot());
+        mutate(&mut s, 0.05, step as u8);
+    }
+    lazy.wait_all().unwrap();
+    let state_at_3 = &snapshots[2];
+
+    // the flush "dies" in the capture-to-publish window of generation 4:
+    // the capture succeeds on the trainer thread, but nothing of it may
+    // reach the checkpoint directory
+    lazy.kill();
+    lazy.capture(&s, extra(4), step_dir(&dir, 4)).unwrap();
+    let err = lazy.wait_all().unwrap_err();
+    assert!(err.to_string().contains("generation 3"), "got {err}");
+    drop(lazy);
+
+    // recovery: generation 4 is invisible — no manifest, no directory
+    // contents, discovery lands on the newest published generation
+    assert!(!step_dir(&dir, 4).join(MANIFEST_FILE).exists());
+    let latest = Trainer::latest_checkpoint(&dir).unwrap().unwrap();
+    assert!(latest.ends_with("step-00000003"), "latest = {latest:?}");
+    let (loaded, header, manifest) = load_checkpoint(&latest, &rt).unwrap();
+    assert!(loaded.content_eq(state_at_3));
+    assert_eq!(header.extra["step"], Json::Int(3));
+    assert_eq!(manifest.delta.as_ref().unwrap().chain_len, 2);
+
+    // a restarted lazy writer re-attaches the chain to the fallback
+    // checkpoint and continues it (no fresh base, clean chunks skipped)
+    let mut dk = delta_writer(&rt);
+    assert!(dk.resume_from(&latest).unwrap());
+    let mut lazy2 = LazyCheckpointer::delta(dk, lazy_cfg(2));
+    lazy2.capture(&s, extra(4), step_dir(&dir, 4)).unwrap();
+    let outcomes = lazy2.finish().unwrap();
+    assert_eq!(outcomes.len(), 1);
+    let m4 = &outcomes[0].outcome.manifest;
+    assert!(m4.is_delta(), "resumed lazy chain must continue, not restart");
+    assert_eq!(m4.delta.as_ref().unwrap().chain_len, 3);
+    let (reloaded, _, _) = load_checkpoint(&step_dir(&dir, 4), &rt).unwrap();
+    assert!(reloaded.content_eq(&s));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn no_generation_is_ever_partially_published() {
+    // Property: whatever point in the capture stream the flush dies at,
+    // every generation before it is fully durable (loads bit-identically
+    // to its captured snapshot) and every generation at/after it is
+    // invisible — there is no in-between state.
+    let dir = scratch_dir("lazy-prop").unwrap();
+    let root = dir.clone();
+    fastpersist::prop::forall("no partial lazy generation", 12, |g| {
+        let total = g.usize(1, 5) as i64;
+        let healthy = g.usize(0, total as usize) as i64;
+        let nbytes = g.usize(8, 24) * CS as usize;
+        let case_dir = root.join(format!("case-{total}-{healthy}-{nbytes}"));
+        let rt = runtime();
+        let mut lazy = LazyCheckpointer::delta(delta_writer(&rt), lazy_cfg(2));
+
+        let mut s = store(nbytes as u64, nbytes);
+        let mut snapshots = Vec::new();
+        for step in 1..=total {
+            if step == healthy + 1 {
+                // crash point: drain what was already captured (those
+                // generations were in flight, not lost), then the flush
+                // dies — everything captured from here on is abandoned
+                lazy.wait_all().unwrap();
+                lazy.kill();
+            }
+            let r = lazy.capture(&s, extra(step), step_dir(&case_dir, step));
+            if step <= healthy {
+                r.unwrap();
+            }
+            // after the kill a capture may legitimately return the flush
+            // failure early (backpressure drains a dead generation) —
+            // both outcomes are acceptable, so post-kill results are not
+            // unwrapped
+            snapshots.push(s.snapshot());
+            mutate(&mut s, 0.05, step as u8);
+        }
+        let _ = lazy.wait_all();
+        drop(lazy);
+
+        for step in 1..=total {
+            let d = step_dir(&case_dir, step);
+            if step <= healthy {
+                let (loaded, header, _) = load_checkpoint(&d, &rt).unwrap();
+                prop_assert!(
+                    g,
+                    loaded.content_eq(&snapshots[(step - 1) as usize]),
+                    "published generation {step} must match its captured snapshot"
+                );
+                prop_assert!(
+                    g,
+                    header.extra["step"] == Json::Int(step),
+                    "published generation {step} must carry its own extras"
+                );
+            } else {
+                prop_assert!(
+                    g,
+                    !d.join(MANIFEST_FILE).exists(),
+                    "killed generation {step} must not publish a manifest"
+                );
+                prop_assert!(
+                    g,
+                    load_checkpoint(&d, &rt).is_err(),
+                    "killed generation {step} must not be loadable"
+                );
+            }
+        }
+        let latest = Trainer::latest_checkpoint(&case_dir).unwrap();
+        if healthy == 0 {
+            prop_assert!(g, latest.is_none(), "no published generation, no recovery point");
+        } else {
+            let latest = latest.unwrap();
+            prop_assert!(
+                g,
+                latest.ends_with(format!("step-{healthy:08}")),
+                "recovery must land on the newest published generation, got {latest:?}"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&case_dir);
+        true
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn backpressure_bounds_generations_and_staging_bytes() {
+    let dir = scratch_dir("lazy-bp").unwrap();
+    let rt = runtime();
+    // tight budget: 2 buffers, 2 generations — steady state must cycle
+    // through the pool without ever allocating past it
+    let cfg = LazyConfig { staging_bytes: 2 << 20, buf_size: 1 << 20, max_generations: 2 };
+    let mut lazy = LazyCheckpointer::delta(delta_writer(&rt), cfg);
+    let mut s = store(7, 200 * 1024);
+    for step in 1..=8i64 {
+        let cs = lazy.capture(&s, extra(step), step_dir(&dir, step)).unwrap();
+        assert!(lazy.in_flight() <= 2, "generation cap violated at step {step}");
+        assert_eq!(cs.buffers, 1, "200 KiB fits one 1 MiB buffer");
+        mutate(&mut s, 0.1, step as u8);
+    }
+    lazy.wait_all().unwrap();
+    assert_eq!(lazy.in_flight(), 0);
+    assert_eq!(lazy.completed.len(), 8);
+    let pool = lazy.staging();
+    assert!(
+        pool.allocations() <= pool.count() as u64,
+        "staging must never allocate past the budget ({} > {})",
+        pool.allocations(),
+        pool.count()
+    );
+    drop(lazy);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

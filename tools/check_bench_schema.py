@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Validate the schema of a benchkit JSON file (default: BENCH_fig11.json).
+
+CI runs this after the fig11 bench smoke to guarantee the artifact the
+trajectory tooling consumes keeps its shape:
+
+  * top-level object with bench == "fig11" and a non-empty "groups" list
+  * every group has a name and a non-empty "results" list
+  * every result row has name plus numeric n, p50_s, mean_s, min_s,
+    max_s, rsd
+  * every lazy-path row (name contains "lazy") carries numeric stall_s
+    and drain_s extras — the whole point of the lazy bench is reporting
+    those two separately
+  * at least one lazy row exists (the synthetic section must always run,
+    artifacts or not)
+
+Exits non-zero with a one-line reason on the first violation.
+"""
+
+import json
+import sys
+
+REQUIRED_NUMERIC = ("n", "p50_s", "mean_s", "min_s", "max_s", "rsd")
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_fig11.json"
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    if doc.get("bench") != "fig11":
+        fail(f"bench must be 'fig11', got {doc.get('bench')!r}")
+    groups = doc.get("groups")
+    if not isinstance(groups, list) or not groups:
+        fail("'groups' must be a non-empty list")
+
+    results = []
+    for i, g in enumerate(groups):
+        if not isinstance(g, dict) or not isinstance(g.get("name"), str):
+            fail(f"group {i} must be an object with a string 'name'")
+        rows = g.get("results")
+        if not isinstance(rows, list) or not rows:
+            fail(f"group {g['name']!r} must have a non-empty 'results' list")
+        results.extend(rows)
+
+    lazy_rows = 0
+    for r in results:
+        if not isinstance(r, dict) or not isinstance(r.get("name"), str):
+            fail("every result must be an object with a string 'name'")
+        for key in REQUIRED_NUMERIC:
+            if not is_num(r.get(key)):
+                fail(f"result {r['name']!r}: {key} must be numeric, got {r.get(key)!r}")
+        if "lazy" in r["name"]:
+            lazy_rows += 1
+            for key in ("stall_s", "drain_s"):
+                if not is_num(r.get(key)):
+                    fail(
+                        f"lazy result {r['name']!r} must report numeric {key}, "
+                        f"got {r.get(key)!r}"
+                    )
+    if lazy_rows == 0:
+        fail("no lazy-path rows found — the synthetic lazy section must always run")
+
+    print(f"OK: {path}: {len(groups)} groups, {len(results)} results, {lazy_rows} lazy rows")
+
+
+if __name__ == "__main__":
+    main()
