@@ -665,7 +665,7 @@ impl DeltaCheckpointer {
         };
         let manifest = CheckpointManifest::from_delta(ser.total_len(), digest, step, delta);
         manifest.validate()?;
-        manifest.save(dir)?;
+        manifest.save_with(dir, self.runtime.io_config().fault.as_ref())?;
 
         // Remember the resolved table for the next diff.
         self.prev = Some(PrevCheckpoint {
@@ -896,6 +896,24 @@ pub fn prune_chain_with(
     protect: Option<u64>,
     policy: GcPolicy,
 ) -> Result<PruneStats> {
+    prune_chain_injected(parent, keep_last, devices, protect, policy, None)
+}
+
+/// [`prune_chain_with`] with a fault-injection hook on the segment-GC
+/// copy loop ([`crate::io::fault::FaultSite::GcCopy`] — one boundary per
+/// coalesced copy run of a sparse rewrite). An injected crash mid-copy
+/// surfaces [`crate::Error::FaultTripped`] and leaves the half-built
+/// `.fpseg.gc` temp in place (as a real crash would); the original
+/// segment is untouched — the rename never happened — and the next
+/// prune's orphan sweep reclaims the temp before retrying.
+pub fn prune_chain_injected(
+    parent: &Path,
+    keep_last: usize,
+    devices: &DeviceMap,
+    protect: Option<u64>,
+    policy: GcPolicy,
+    fault: Option<&crate::io::fault::FaultPlan>,
+) -> Result<PruneStats> {
     let mut stats = PruneStats::default();
     if keep_last == 0 {
         return Ok(stats);
@@ -993,11 +1011,11 @@ pub fn prune_chain_with(
             let live_here = live.get(&name);
             let segs_here = live_segs.get(&name);
             stats.removed_chunks += gc_chunk_files(path, live_here);
-            gc_segments(path, segs_here, policy, &mut stats);
+            gc_segments(path, segs_here, policy, fault, &mut stats)?;
             for root in devices.roots() {
                 let dev_dir = DeviceMap::resolve_in(root, path);
                 stats.removed_chunks += gc_chunk_files(&dev_dir, live_here);
-                gc_segments(&dev_dir, segs_here, policy, &mut stats);
+                gc_segments(&dev_dir, segs_here, policy, fault, &mut stats)?;
             }
             stats.demoted_dirs += 1;
         } else {
@@ -1047,9 +1065,10 @@ fn gc_segments(
     dir: &Path,
     live: Option<&BTreeMap<u32, SegmentLive>>,
     policy: GcPolicy,
+    fault: Option<&crate::io::fault::FaultPlan>,
     stats: &mut PruneStats,
-) {
-    let Ok(entries) = std::fs::read_dir(dir) else { return };
+) -> Result<()> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Ok(()) };
     for entry in entries.flatten() {
         let name = entry.file_name();
         let Some(name) = name.to_str() else { continue };
@@ -1098,24 +1117,31 @@ fn gc_segments(
                 // coarser than 4 KiB).
                 let reclaimable = dead_block_bytes(&l.ranges, apparent) > 0;
                 let latched = segment_compacted_live(&path) == Some(l.bytes);
-                if occupancy < policy.occupancy
-                    && reclaimable
-                    && !latched
-                    && rewrite_segment_sparse(&path, &l.ranges, l.bytes).is_ok()
-                {
-                    stats.rewritten_segments += 1;
-                    // account what the rewrite *actually* freed
-                    let after = std::fs::metadata(&path)
-                        .map(|m| {
-                            use std::os::unix::fs::MetadataExt;
-                            (m.blocks() * 512).min(m.len())
-                        })
-                        .unwrap_or(allocated);
-                    stats.reclaimed_bytes += allocated.saturating_sub(after);
+                if occupancy < policy.occupancy && reclaimable && !latched {
+                    match rewrite_segment_sparse(&path, &l.ranges, l.bytes, fault) {
+                        Ok(()) => {
+                            stats.rewritten_segments += 1;
+                            // account what the rewrite *actually* freed
+                            let after = std::fs::metadata(&path)
+                                .map(|m| {
+                                    use std::os::unix::fs::MetadataExt;
+                                    (m.blocks() * 512).min(m.len())
+                                })
+                                .unwrap_or(allocated);
+                            stats.reclaimed_bytes += allocated.saturating_sub(after);
+                        }
+                        // An injected crash surfaces (the "process" is
+                        // dead); ordinary rewrite failures stay best-
+                        // effort — the original segment is intact either
+                        // way.
+                        Err(e @ Error::FaultTripped(_)) => return Err(e),
+                        Err(_) => {}
+                    }
                 }
             }
         }
     }
+    Ok(())
 }
 
 /// Bytes in whole 4 KiB filesystem blocks of `[0, apparent)` covered by
@@ -1168,6 +1194,7 @@ fn rewrite_segment_sparse(
     path: &Path,
     live: &std::collections::BTreeSet<(u64, u64)>,
     live_bytes: u64,
+    fault: Option<&crate::io::fault::FaultPlan>,
 ) -> Result<()> {
     let tmp = path.with_extension("fpseg.gc");
     let result = (|| -> Result<()> {
@@ -1199,12 +1226,28 @@ fn rewrite_segment_sparse(
         );
         let mut buf = vec![0u8; 1 << 20];
         for run in runs {
+            // GcCopy op boundary: one coalesced copy run is about to
+            // land in the temp file. A torn fault copies only a prefix
+            // of the run before the "process dies"; abort dies before
+            // copying anything.
+            let torn = match fault {
+                Some(f) => {
+                    f.on_gc_copy()? == crate::io::fault::DrainDecision::Torn
+                }
+                None => false,
+            };
+            let limit = if torn { run.len / 2 } else { run.len };
             let mut done = 0u64;
-            while done < run.len {
-                let n = (buf.len() as u64).min(run.len - done) as usize;
+            while done < limit {
+                let n = (buf.len() as u64).min(limit - done) as usize;
                 src.read_exact_at(&mut buf[..n], run.file_off + done)?;
                 dst.write_all_at(&buf[..n], run.file_off + done)?;
                 done += n as u64;
+            }
+            if torn {
+                return Err(fault.expect("torn implies a plan").error(
+                    crate::io::fault::FaultSite::GcCopy,
+                ));
             }
         }
         dst.set_len(total)?;
@@ -1216,10 +1259,17 @@ fn rewrite_segment_sparse(
         std::fs::rename(&tmp, path)?;
         Ok(())
     })();
-    if result.is_err() {
-        // don't leave a dead copy of the live bytes behind (gc_segments
-        // also sweeps stale *.fpseg.gc orphans from crashes)
-        let _ = std::fs::remove_file(&tmp);
+    match &result {
+        // A simulated crash leaves the half-built temp behind — that is
+        // the orphan the next prune's sweep must reclaim.
+        Err(Error::FaultTripped(_)) => {}
+        Err(_) => {
+            // don't leave a dead copy of the live bytes behind
+            // (gc_segments also sweeps stale *.fpseg.gc orphans from
+            // crashes)
+            let _ = std::fs::remove_file(&tmp);
+        }
+        Ok(()) => {}
     }
     result
 }

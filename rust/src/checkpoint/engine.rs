@@ -185,9 +185,11 @@ impl CheckpointEngine {
         let stats: Vec<WriteStats> =
             tickets.into_iter().map(Ticket::wait).collect::<Result<Vec<_>>>()?;
 
-        // All partitions durable → publish the manifest (atomic rename).
+        // All partitions durable → publish the manifest (atomic rename;
+        // fault-aware so an injected crash can land between segment
+        // durability and the commit point).
         let manifest = CheckpointManifest::from_routed_plan(&plan, &routed, digest, step);
-        manifest.save(dir)?;
+        manifest.save_with(dir, self.runtime.io_config().fault.as_ref())?;
 
         Ok(CheckpointOutcome {
             total_bytes: ser.total_len(),

@@ -47,9 +47,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -178,7 +176,6 @@ pub struct LazyCheckpointer {
     helper: Option<JoinHandle<()>>,
     inflight: usize,
     next_generation: u64,
-    killed: Arc<AtomicBool>,
     /// Cumulative time the trainer spent blocked on backpressure (and in
     /// [`LazyCheckpointer::wait_all`]) — the lazy path's measured stall.
     pub stall: Duration,
@@ -215,31 +212,11 @@ impl LazyCheckpointer {
         let staging = BufferPool::new(count, cfg.buf_size);
         let (req_tx, req_rx) = mpsc::channel::<Generation>();
         let (done_tx, done_rx) = mpsc::channel();
-        let killed = Arc::new(AtomicBool::new(false));
-        let crash = Arc::clone(&killed);
         let pool = staging.clone();
         let helper = std::thread::Builder::new()
             .name("ckpt-lazy-flush".into())
             .spawn(move || {
                 for generation in req_rx {
-                    if crash.load(Ordering::Relaxed) {
-                        // Crash drill: the scheduler "dies" between
-                        // capture and publish. Recycle the buffers (the
-                        // memory a real crash would lose) and report the
-                        // failure; nothing of this generation reaches
-                        // the checkpoint directory.
-                        let number = generation.number;
-                        for buf in generation.bufs {
-                            pool.release(buf);
-                        }
-                        let err = Error::Internal(format!(
-                            "lazy flush killed before generation {number} was published"
-                        ));
-                        if done_tx.send(Err(err)).is_err() {
-                            break;
-                        }
-                        continue;
-                    }
                     let t0 = Instant::now();
                     let number = generation.number;
                     let result = flush_generation(&mut writer, generation, &pool);
@@ -259,7 +236,6 @@ impl LazyCheckpointer {
             helper: Some(helper),
             inflight: 0,
             next_generation: 0,
-            killed,
             stall: Duration::ZERO,
             completed: Vec::new(),
         }
@@ -408,16 +384,6 @@ impl LazyCheckpointer {
     /// The normalized configuration in effect.
     pub fn config(&self) -> &LazyConfig {
         &self.cfg
-    }
-
-    /// Fault-injection hook for crash drills: generations whose flush
-    /// has not started when this is called are abandoned (buffers
-    /// recycled, an error reported) instead of written — simulating a
-    /// crash in the capture-to-publish window. A crash *mid*-write is
-    /// drilled separately by removing the manifest, which is always
-    /// published strictly last (see `tests/delta_recovery.rs`).
-    pub fn kill(&self) {
-        self.killed.store(true, Ordering::Relaxed);
     }
 
     /// Drain every outstanding generation and shut the scheduler down;

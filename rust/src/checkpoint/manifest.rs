@@ -463,9 +463,29 @@ impl CheckpointManifest {
 
     /// Write the manifest into `dir` (atomic: temp file + rename).
     pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        self.save_with(dir, None)
+    }
+
+    /// [`CheckpointManifest::save`] with a fault-injection hook at the
+    /// publish boundary ([`crate::io::fault::FaultSite::Publish`] — the
+    /// rename that commits the checkpoint). An abort fires *before* the
+    /// rename, so the checkpoint never publishes; a stale-manifest fault
+    /// suppresses the rename but reports success, leaving the temp file
+    /// and whatever manifest was previously in place.
+    pub fn save_with(
+        &self,
+        dir: &Path,
+        fault: Option<&crate::io::fault::FaultPlan>,
+    ) -> Result<PathBuf> {
         let path = dir.join(MANIFEST_FILE);
         let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
         std::fs::write(&tmp, self.to_json().to_string_pretty())?;
+        if let Some(f) = fault {
+            use crate::io::fault::PublishDecision;
+            if f.on_publish()? == PublishDecision::Suppress {
+                return Ok(path);
+            }
+        }
         // atomic publish: the manifest appearing means the checkpoint is
         // complete and durable
         std::fs::rename(&tmp, &path)?;

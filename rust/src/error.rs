@@ -17,6 +17,10 @@ pub enum Error {
     Config(String),
     /// Internal invariant violation.
     Internal(String),
+    /// An injected fault fired (deterministic fault-injection layer,
+    /// [`crate::io::fault`]); only ever produced when a `FaultPlan` is
+    /// installed, i.e. under test.
+    FaultTripped(String),
 }
 
 /// Crate-wide result alias.
@@ -33,6 +37,7 @@ impl fmt::Display for Error {
             Error::Format(m) => write!(f, "checkpoint format error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Internal(m) => write!(f, "internal error: {m}"),
+            Error::FaultTripped(m) => write!(f, "injected fault: {m}"),
         }
     }
 }

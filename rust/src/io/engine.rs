@@ -79,6 +79,11 @@ pub struct IoConfig {
     /// Try O_DIRECT; fall back to aligned pwrite if the per-device
     /// capability probe (or an individual open) refuses.
     pub try_o_direct: bool,
+    /// Deterministic fault-injection plan ([`crate::io::fault`]). `None`
+    /// (the default, and the only production value) reduces every hook
+    /// to a single `Option` branch on the hot path; tests install a
+    /// [`crate::io::fault::FaultPlan`] to fire at chosen op boundaries.
+    pub fault: Option<crate::io::fault::FaultPlan>,
 }
 
 impl Default for IoConfig {
@@ -91,6 +96,7 @@ impl Default for IoConfig {
             queue_depth: 2,
             sync_on_finish: true,
             try_o_direct: true,
+            fault: None,
         }
     }
 }

@@ -1,0 +1,451 @@
+//! Deterministic fault injection over the write pipeline's op schedule.
+//!
+//! FastPersist's durability story rests on one invariant: **recovery
+//! always lands on the last durable generation, never a partial one**.
+//! The commit protocol that upholds it — segment/partition bytes first,
+//! fsync, manifest published last via atomic rename — is exercised here
+//! by a seedable, deterministic fault layer threaded through the one
+//! write executor ([`crate::io::write::WritePipeline`]) and the
+//! manifest publish points.
+//!
+//! A [`FaultPlan`] is installed per-runtime via
+//! [`crate::io::engine::IoConfig::fault`] (default `None`; every hot
+//! path guards the hook behind a single `Option` check, so a disabled
+//! plan costs one predictable branch). The executor consults the plan
+//! at every boundary of the realized op schedule:
+//!
+//! ```text
+//! Stage(k) ─► Drain(k) ─► … ─► Fsync ─► Publish (manifest rename)
+//!    │            │              │          │
+//!    │            │              │          └─ FaultSite::Publish
+//!    │            │              └─ FaultSite::Fsync
+//!    │            └─ FaultSite::Drain   (+ FaultSite::GcCopy on the
+//!    └─ FaultSite::Stage                 segment-GC sparse rewrite)
+//! ```
+//!
+//! Boundaries of each site class are counted in execution order; a plan
+//! armed with [`FaultPlan::fire_at`] fires at exactly the *n*-th
+//! boundary of its class, with one of four [`FaultKind`]s:
+//!
+//! * **Abort** — simulated process death: the boundary fails with
+//!   [`crate::Error::FaultTripped`] and the plan latches *halted*, so
+//!   every subsequent I/O boundary of the runtime fails too (a dead
+//!   process issues no more writes).
+//! * **TornWrite** — the drain writes only an aligned prefix of its
+//!   extent before the "process dies" (halts like Abort): the bytes of
+//!   a positioned write that was in flight at the moment of death.
+//! * **ShortFsync** — the fsync is silently skipped; later ops proceed
+//!   (a lying device / an elided flush). Non-halting.
+//! * **StaleManifest** — the manifest publish rename is suppressed but
+//!   reported as success, leaving the temp file and whatever manifest
+//!   was previously in place; later ops proceed. Non-halting — the
+//!   writer keeps going believing it published.
+//!
+//! [`FaultPlan::observe`] builds a disarmed plan that only counts
+//! boundaries — the probe pass the scenario matrix
+//! (`rust/tests/fault_matrix.rs`) runs first to enumerate every
+//! boundary of a plan shape before re-running it with a fault armed at
+//! each one.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::{Error, Result};
+
+/// What an armed [`FaultPlan`] does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Simulated process death at the boundary: the op fails with
+    /// [`Error::FaultTripped`] and the runtime halts all subsequent I/O.
+    Abort,
+    /// The drain writes only an aligned prefix of its extent, then the
+    /// process "dies" (halts like [`FaultKind::Abort`]). Only
+    /// meaningful at [`FaultSite::Drain`] / [`FaultSite::GcCopy`].
+    TornWrite,
+    /// The fsync is skipped; the op reports success and later ops
+    /// proceed. Only meaningful at [`FaultSite::Fsync`].
+    ShortFsync,
+    /// The manifest publish rename is suppressed but reported as
+    /// success (temp file left behind, any previous manifest stays in
+    /// place). Only meaningful at [`FaultSite::Publish`].
+    StaleManifest,
+}
+
+impl FaultKind {
+    /// Stable report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Abort => "abort",
+            FaultKind::TornWrite => "torn-write",
+            FaultKind::ShortFsync => "short-fsync",
+            FaultKind::StaleManifest => "stale-manifest",
+        }
+    }
+}
+
+/// The class of op boundary a [`FaultPlan`] addresses. Boundaries of
+/// each class are numbered 0, 1, 2, … in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultSite {
+    /// A [`crate::io::write::WriteOp::Stage`] boundary: a staging
+    /// buffer is about to be filled (streamed plans count their first
+    /// write here).
+    Stage,
+    /// A [`crate::io::write::WriteOp::Drain`] boundary: a staged extent
+    /// is about to be submitted to its drain lane (streamed plans count
+    /// their final flush here).
+    Drain,
+    /// A [`crate::io::write::WriteOp::Fsync`] boundary: the file is
+    /// about to be made durable.
+    Fsync,
+    /// A manifest publish point: the atomic rename that commits a
+    /// checkpoint ([`crate::checkpoint::manifest::CheckpointManifest::save_with`]).
+    Publish,
+    /// One copy run of the segment-GC sparse rewrite
+    /// ([`crate::checkpoint::delta::prune_chain_injected`]).
+    GcCopy,
+}
+
+impl FaultSite {
+    /// Every addressable site class, in declaration order.
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::Stage,
+        FaultSite::Drain,
+        FaultSite::Fsync,
+        FaultSite::Publish,
+        FaultSite::GcCopy,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Stage => 0,
+            FaultSite::Drain => 1,
+            FaultSite::Fsync => 2,
+            FaultSite::Publish => 3,
+            FaultSite::GcCopy => 4,
+        }
+    }
+
+    /// Stable report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Stage => "stage",
+            FaultSite::Drain => "drain",
+            FaultSite::Fsync => "fsync",
+            FaultSite::Publish => "publish",
+            FaultSite::GcCopy => "gc-copy",
+        }
+    }
+}
+
+/// What the caller of a drain-site check must do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainDecision {
+    /// No fault here: perform the full positioned write.
+    Full,
+    /// Torn write: write only an aligned prefix of the extent, then
+    /// fail the op with [`FaultPlan::error`] — the plan is already
+    /// halted.
+    Torn,
+}
+
+/// What the caller of a fsync-site check must do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncDecision {
+    /// Make the file durable as planned.
+    Sync,
+    /// Skip the fsync, report success (short fsync fired).
+    Skip,
+}
+
+/// What the caller of a publish-site check must do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PublishDecision {
+    /// Rename the temp manifest into place as planned.
+    Publish,
+    /// Suppress the rename but report success (stale manifest fired).
+    Suppress,
+}
+
+/// Shared trip state: every clone of a [`FaultPlan`] (the runtime's
+/// engines each hold a cloned [`crate::io::engine::IoConfig`]) sees the
+/// same counters and halt latch.
+#[derive(Debug, Default)]
+struct FaultState {
+    /// Armed trigger: `(kind, site, nth)`; `None` observes only.
+    trigger: Option<(FaultKind, FaultSite, u64)>,
+    /// Boundaries crossed so far, per site class.
+    crossed: [AtomicU64; 5],
+    /// Simulated process death: all subsequent boundaries fail.
+    halted: AtomicBool,
+    /// The armed trigger fired at least once.
+    tripped: AtomicBool,
+    /// Fsyncs skipped by [`FaultKind::ShortFsync`].
+    skipped_fsyncs: AtomicU64,
+    /// Publishes suppressed by [`FaultKind::StaleManifest`].
+    suppressed_publishes: AtomicU64,
+}
+
+/// A deterministic fault-injection plan, installed per-runtime through
+/// [`crate::io::engine::IoConfig::fault`]. Cloning shares state — keep
+/// a handle to the plan you installed to inspect
+/// [`FaultPlan::boundaries`] / [`FaultPlan::tripped`] afterwards, and
+/// to [`FaultPlan::heal`] the runtime for the recovery phase of a
+/// drill.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    state: Arc<FaultState>,
+}
+
+impl FaultPlan {
+    /// A disarmed plan that never fires — it only counts the boundaries
+    /// each site class crosses, for enumerating a scenario's schedule
+    /// before arming faults at each index.
+    pub fn observe() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// A plan firing `kind` at the `nth` (0-based, execution order)
+    /// boundary of `site`. Kinds are site-specific:
+    /// [`FaultKind::Abort`] fires anywhere, [`FaultKind::TornWrite`] at
+    /// [`FaultSite::Drain`]/[`FaultSite::GcCopy`],
+    /// [`FaultKind::ShortFsync`] at [`FaultSite::Fsync`], and
+    /// [`FaultKind::StaleManifest`] at [`FaultSite::Publish`]; a
+    /// mismatched pair can never fire.
+    pub fn fire_at(kind: FaultKind, site: FaultSite, nth: u64) -> FaultPlan {
+        debug_assert!(
+            match kind {
+                FaultKind::Abort => true,
+                FaultKind::TornWrite => matches!(site, FaultSite::Drain | FaultSite::GcCopy),
+                FaultKind::ShortFsync => site == FaultSite::Fsync,
+                FaultKind::StaleManifest => site == FaultSite::Publish,
+            },
+            "fault kind {kind:?} cannot fire at site {site:?}"
+        );
+        FaultPlan {
+            state: Arc::new(FaultState {
+                trigger: Some((kind, site, nth)),
+                ..FaultState::default()
+            }),
+        }
+    }
+
+    /// A plan firing `kind` at a pseudo-random boundary of `site`,
+    /// derived deterministically from `seed` (same seed, same trigger):
+    /// the seeded entry point of the extended fault sweep. `limit` is
+    /// an exclusive upper bound on the chosen index (pass the boundary
+    /// count of an [`FaultPlan::observe`] pass).
+    pub fn seeded(seed: u64, kind: FaultKind, site: FaultSite, limit: u64) -> FaultPlan {
+        // splitmix64: cheap, deterministic, good avalanche for a seed.
+        let mut z = seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        FaultPlan::fire_at(kind, site, z % limit.max(1))
+    }
+
+    /// How many boundaries of `site` have been crossed so far.
+    pub fn boundaries(&self, site: FaultSite) -> u64 {
+        self.state.crossed[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Whether the armed trigger fired.
+    pub fn tripped(&self) -> bool {
+        self.state.tripped.load(Ordering::Relaxed)
+    }
+
+    /// Whether the simulated process death latched: every subsequent
+    /// I/O boundary on this runtime fails with [`Error::FaultTripped`].
+    pub fn halted(&self) -> bool {
+        self.state.halted.load(Ordering::Relaxed)
+    }
+
+    /// Fsyncs skipped by a fired [`FaultKind::ShortFsync`].
+    pub fn skipped_fsyncs(&self) -> u64 {
+        self.state.skipped_fsyncs.load(Ordering::Relaxed)
+    }
+
+    /// Publishes suppressed by a fired [`FaultKind::StaleManifest`].
+    pub fn suppressed_publishes(&self) -> u64 {
+        self.state.suppressed_publishes.load(Ordering::Relaxed)
+    }
+
+    /// Clear the halt latch and disarm the trigger — the "process
+    /// restart" of a drill: the same runtime serves the recovery phase
+    /// without rebuilding its pools. Boundary counters keep counting.
+    pub fn heal(&self) {
+        self.state.halted.store(false, Ordering::SeqCst);
+        self.state.tripped.store(true, Ordering::Relaxed); // disarm below
+        // A healed plan must never fire again: firing is gated on
+        // tripped() being false for halting kinds and on the exact
+        // boundary index for the rest — marking it tripped disarms every
+        // kind because fire() checks the latch first.
+    }
+
+    /// The typed error a tripped/halted boundary surfaces.
+    pub fn error(&self, site: FaultSite) -> Error {
+        Error::FaultTripped(format!("injected fault at {} boundary", site.name()))
+    }
+
+    /// Cross one boundary of `site`: count it, fail if the runtime is
+    /// halted, and fire the armed trigger when this is its boundary.
+    /// Returns the kind that fired here, if any.
+    #[inline]
+    fn cross(&self, site: FaultSite) -> Result<Option<FaultKind>> {
+        let s = &*self.state;
+        if s.halted.load(Ordering::SeqCst) {
+            return Err(self.error(site));
+        }
+        let idx = s.crossed[site.index()].fetch_add(1, Ordering::SeqCst);
+        match s.trigger {
+            Some((kind, t_site, nth))
+                if t_site == site && idx == nth && !s.tripped.swap(true, Ordering::SeqCst) =>
+            {
+                match kind {
+                    FaultKind::Abort => {
+                        s.halted.store(true, Ordering::SeqCst);
+                        Err(self.error(site))
+                    }
+                    FaultKind::TornWrite => {
+                        s.halted.store(true, Ordering::SeqCst);
+                        Ok(Some(kind))
+                    }
+                    FaultKind::ShortFsync => {
+                        s.skipped_fsyncs.fetch_add(1, Ordering::Relaxed);
+                        Ok(Some(kind))
+                    }
+                    FaultKind::StaleManifest => {
+                        s.suppressed_publishes.fetch_add(1, Ordering::Relaxed);
+                        Ok(Some(kind))
+                    }
+                }
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// A [`FaultSite::Stage`] boundary (buffer about to be filled).
+    pub fn on_stage(&self) -> Result<()> {
+        self.cross(FaultSite::Stage).map(|_| ())
+    }
+
+    /// A [`FaultSite::Drain`] boundary (extent about to be submitted).
+    pub fn on_drain(&self) -> Result<DrainDecision> {
+        match self.cross(FaultSite::Drain)? {
+            Some(FaultKind::TornWrite) => Ok(DrainDecision::Torn),
+            _ => Ok(DrainDecision::Full),
+        }
+    }
+
+    /// A [`FaultSite::Fsync`] boundary (file about to be made durable).
+    pub fn on_fsync(&self) -> Result<FsyncDecision> {
+        match self.cross(FaultSite::Fsync)? {
+            Some(FaultKind::ShortFsync) => Ok(FsyncDecision::Skip),
+            _ => Ok(FsyncDecision::Sync),
+        }
+    }
+
+    /// A [`FaultSite::Publish`] boundary (manifest about to rename into
+    /// place).
+    pub fn on_publish(&self) -> Result<PublishDecision> {
+        match self.cross(FaultSite::Publish)? {
+            Some(FaultKind::StaleManifest) => Ok(PublishDecision::Suppress),
+            _ => Ok(PublishDecision::Publish),
+        }
+    }
+
+    /// A [`FaultSite::GcCopy`] boundary (one copy run of a sparse
+    /// segment rewrite). Torn here behaves like abort for the caller —
+    /// the rewrite stops mid-copy either way; the distinction is that a
+    /// torn run first copies a prefix, which the caller performs before
+    /// consulting the next boundary.
+    pub fn on_gc_copy(&self) -> Result<DrainDecision> {
+        match self.cross(FaultSite::GcCopy)? {
+            Some(FaultKind::TornWrite) => Ok(DrainDecision::Torn),
+            _ => Ok(DrainDecision::Full),
+        }
+    }
+
+    /// Fail fast when the runtime is halted (job-entry check: a dead
+    /// process submits nothing, so a halted runtime must not create or
+    /// truncate any file).
+    pub fn check_alive(&self, site: FaultSite) -> Result<()> {
+        if self.halted() {
+            return Err(self.error(site));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_counts_without_firing() {
+        let f = FaultPlan::observe();
+        for _ in 0..3 {
+            f.on_stage().unwrap();
+        }
+        assert_eq!(f.on_drain().unwrap(), DrainDecision::Full);
+        assert_eq!(f.on_fsync().unwrap(), FsyncDecision::Sync);
+        assert_eq!(f.on_publish().unwrap(), PublishDecision::Publish);
+        assert_eq!(f.boundaries(FaultSite::Stage), 3);
+        assert_eq!(f.boundaries(FaultSite::Drain), 1);
+        assert_eq!(f.boundaries(FaultSite::Fsync), 1);
+        assert_eq!(f.boundaries(FaultSite::Publish), 1);
+        assert!(!f.tripped() && !f.halted());
+    }
+
+    #[test]
+    fn abort_halts_every_subsequent_boundary() {
+        let f = FaultPlan::fire_at(FaultKind::Abort, FaultSite::Stage, 1);
+        f.on_stage().unwrap();
+        let err = f.on_stage().unwrap_err();
+        assert!(matches!(err, Error::FaultTripped(_)), "got {err}");
+        assert!(f.tripped() && f.halted());
+        assert!(f.on_drain().is_err());
+        assert!(f.on_fsync().is_err());
+        assert!(f.on_publish().is_err());
+        assert!(f.check_alive(FaultSite::Stage).is_err());
+        // clones share the trip state
+        let clone = f.clone();
+        assert!(clone.halted());
+        // heal: the runtime serves recovery, the trigger never re-fires
+        f.heal();
+        assert!(!f.halted());
+        f.on_stage().unwrap();
+        f.on_stage().unwrap();
+    }
+
+    #[test]
+    fn torn_and_short_and_stale_decisions() {
+        let torn = FaultPlan::fire_at(FaultKind::TornWrite, FaultSite::Drain, 0);
+        assert_eq!(torn.on_drain().unwrap(), DrainDecision::Torn);
+        assert!(torn.halted(), "torn write simulates death mid-write");
+
+        let short = FaultPlan::fire_at(FaultKind::ShortFsync, FaultSite::Fsync, 1);
+        assert_eq!(short.on_fsync().unwrap(), FsyncDecision::Sync);
+        assert_eq!(short.on_fsync().unwrap(), FsyncDecision::Skip);
+        assert_eq!(short.on_fsync().unwrap(), FsyncDecision::Sync, "fires once");
+        assert!(!short.halted(), "short fsync lets later ops proceed");
+        assert_eq!(short.skipped_fsyncs(), 1);
+
+        let stale = FaultPlan::fire_at(FaultKind::StaleManifest, FaultSite::Publish, 0);
+        assert_eq!(stale.on_publish().unwrap(), PublishDecision::Suppress);
+        assert_eq!(stale.on_publish().unwrap(), PublishDecision::Publish);
+        assert!(!stale.halted());
+        assert_eq!(stale.suppressed_publishes(), 1);
+    }
+
+    #[test]
+    fn seeded_trigger_is_deterministic_and_in_range() {
+        for seed in [0u64, 1, 7, 0xdead_beef] {
+            let a = FaultPlan::seeded(seed, FaultKind::Abort, FaultSite::Drain, 13);
+            let b = FaultPlan::seeded(seed, FaultKind::Abort, FaultSite::Drain, 13);
+            assert_eq!(a.state.trigger, b.state.trigger, "seed {seed}");
+            let (_, _, nth) = a.state.trigger.unwrap();
+            assert!(nth < 13);
+        }
+    }
+}

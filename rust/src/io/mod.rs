@@ -53,6 +53,7 @@ pub mod device;
 pub mod direct_engine;
 pub mod double_buffer;
 pub mod engine;
+pub mod fault;
 pub mod pending_queue;
 pub mod read;
 pub mod runtime;
@@ -62,6 +63,7 @@ pub mod write;
 pub use buffer::{AlignedBuf, BufferPool};
 pub use device::{DeviceMap, DirectCapability};
 pub use engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
+pub use fault::{FaultKind, FaultPlan, FaultSite};
 pub use read::{ChunkCheck, ReadJob, ReadPart, ReadStats, StreamBuffer};
 pub use runtime::{IoRuntime, IoRuntimeConfig, ReadTicket, Ticket, WriteJob, WriteSource};
 pub use write::{

@@ -265,6 +265,12 @@ impl RuntimeCore {
 
     /// Writer-thread half: realize an already-constructed plan.
     fn execute_planned(&self, job: &WriteJob, plan: WritePlan) -> Result<WriteStats> {
+        // A halted fault plan models process death: the runtime must not
+        // create directories or truncate destination files for jobs that
+        // were queued behind the fatal boundary.
+        if let Some(f) = &self.io.fault {
+            f.check_alive(crate::io::fault::FaultSite::Stage)?;
+        }
         if let Some(parent) = job.path.parent() {
             std::fs::create_dir_all(parent)?;
         }

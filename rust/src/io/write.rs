@@ -50,6 +50,7 @@ use crate::io::align::{align_down, align_up};
 use crate::io::buffer::{AlignedBuf, BufferPool};
 use crate::io::device::{DeviceMap, O_DIRECT};
 use crate::io::engine::{EngineKind, IoConfig, Sink, WriteStats};
+use crate::io::fault::{DrainDecision, FaultPlan, FaultSite, FsyncDecision};
 use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
 
@@ -509,7 +510,7 @@ impl WritePipeline {
         expected_size: Option<u64>,
     ) -> Result<Box<dyn Sink>> {
         if plan.streamed {
-            StreamedSink::open(plan, path)
+            StreamedSink::open(cfg, plan, path)
         } else {
             StagedSink::open(cfg, res, plan, path, expected_size)
         }
@@ -529,10 +530,18 @@ struct StreamedSink {
     stats: WriteStats,
     start: Instant,
     scratch: Vec<u8>,
+    /// Fault hooks (test-only; `None` in production). The streamed
+    /// schedule is `[Stage(0), Drain(0), Fsync?]`: Stage fires on the
+    /// first byte, Drain on the final flush, Fsync before sync_data.
+    fault: Option<FaultPlan>,
+    staged_once: bool,
 }
 
 impl StreamedSink {
-    fn open(plan: WritePlan, path: &Path) -> Result<Box<dyn Sink>> {
+    fn open(cfg: &IoConfig, plan: WritePlan, path: &Path) -> Result<Box<dyn Sink>> {
+        if let Some(f) = &cfg.fault {
+            f.check_alive(FaultSite::Stage)?;
+        }
         let file = OpenOptions::new()
             .create(true)
             .write(true)
@@ -545,12 +554,22 @@ impl StreamedSink {
             stats: WriteStats::default(),
             start: Instant::now(),
             scratch: Vec::new(),
+            fault: cfg.fault.clone(),
+            staged_once: false,
         }))
     }
 }
 
 impl Sink for StreamedSink {
     fn write(&mut self, data: &[u8]) -> Result<()> {
+        if let Some(f) = &self.fault {
+            if !self.staged_once {
+                self.staged_once = true;
+                f.on_stage()?;
+            } else {
+                f.check_alive(FaultSite::Stage)?;
+            }
+        }
         self.scratch.resize(self.chunk, 0);
         for piece in data.chunks(self.chunk) {
             self.scratch[..piece.len()].copy_from_slice(piece);
@@ -562,11 +581,25 @@ impl Sink for StreamedSink {
     }
 
     fn finish(mut self: Box<Self>) -> Result<WriteStats> {
+        if let Some(f) = &self.fault {
+            // Torn on a streamed plan is process death mid-flush: the
+            // BufWriter's earlier incidental flushes are whatever they
+            // are, the remainder never lands.
+            if f.on_drain()? == DrainDecision::Torn {
+                return Err(f.error(FaultSite::Drain));
+            }
+        }
         self.writer.flush()?;
         let file = self.writer.into_inner().map_err(|e| e.into_error())?;
         if self.sync {
-            file.sync_data()?;
-            self.stats.fsyncs = 1;
+            let decision = match &self.fault {
+                Some(f) => f.on_fsync()?,
+                None => FsyncDecision::Sync,
+            };
+            if decision == FsyncDecision::Sync {
+                file.sync_data()?;
+                self.stats.fsyncs = 1;
+            }
         }
         self.stats.suffix_bytes = self.stats.total_bytes; // all traditional path
         self.stats.elapsed = self.start.elapsed();
@@ -618,6 +651,10 @@ struct StagedSink {
     drained: DrainStats,
     err: Option<Error>,
     start: Instant,
+    /// Fault hooks (test-only; `None` in production): a Stage boundary
+    /// per staging-buffer acquisition, a Drain boundary per submission,
+    /// a Fsync boundary before the durable finish.
+    fault: Option<FaultPlan>,
 }
 
 impl StagedSink {
@@ -628,6 +665,12 @@ impl StagedSink {
         path: &Path,
         expected_size: Option<u64>,
     ) -> Result<Box<dyn Sink>> {
+        // A halted (simulated-dead) runtime must not create or truncate
+        // any file — opening the sink is itself an I/O the dead process
+        // never issues.
+        if let Some(f) = &cfg.fault {
+            f.check_alive(FaultSite::Stage)?;
+        }
         let align = res.pool.align();
         // Probe-gated O_DIRECT on the data descriptor: one capability
         // probe per device (cached in the DeviceMap), with a belt-and-
@@ -690,10 +733,39 @@ impl StagedSink {
             drained: DrainStats::default(),
             err: None,
             start: Instant::now(),
+            fault: cfg.fault.clone(),
         }))
     }
 
     fn submit_buf(&mut self, buf: AlignedBuf, len: usize) {
+        // Drain op boundary: the staged extent is about to hit the
+        // submission queue. A halting fault stops the submission; a torn
+        // write lands only an aligned prefix of the extent (the
+        // positioned write the process died inside of), synchronously,
+        // then stops.
+        if let Some(f) = &self.fault {
+            match f.on_drain() {
+                Ok(DrainDecision::Full) => {}
+                Ok(DrainDecision::Torn) => {
+                    let prefix = align_down((len / 2) as u64, self.align as u64) as usize;
+                    if prefix > 0 {
+                        let _ = self.file.write_all_at(&buf.filled()[..prefix], self.submit_offset);
+                    }
+                    self.pool.release(buf);
+                    if self.err.is_none() {
+                        self.err = Some(f.error(FaultSite::Drain));
+                    }
+                    return;
+                }
+                Err(e) => {
+                    self.pool.release(buf);
+                    if self.err.is_none() {
+                        self.err = Some(e);
+                    }
+                    return;
+                }
+            }
+        }
         let offset = self.submit_offset;
         // The plan is a contract, not advisory: every realized drain
         // must start exactly where the schedule's next extent starts.
@@ -756,6 +828,11 @@ impl Sink for StagedSink {
         while !data.is_empty() {
             self.check_err()?;
             if self.current.is_none() {
+                // Stage op boundary: a staging buffer is about to be
+                // filled for the next extent.
+                if let Some(f) = &self.fault {
+                    f.on_stage()?;
+                }
                 // Backpressure, two layers: the plan's queue depth
                 // (Fig. 5 single vs double buffering), then the global
                 // staging pool cap.
@@ -818,12 +895,19 @@ impl Sink for StagedSink {
         self.side.set_len(total)?;
         let mut fsyncs = 0;
         if self.sync {
-            // fdatasync is per-inode, not per-descriptor: one call
-            // covers bytes written through both paths (O_DIRECT
-            // bypasses the page cache but not the device cache; the
-            // bounce tail went through the page cache regardless).
-            self.side.sync_data()?;
-            fsyncs = 1;
+            // Fsync op boundary: the plan's trailing durability op.
+            let decision = match &self.fault {
+                Some(f) => f.on_fsync()?,
+                None => FsyncDecision::Sync,
+            };
+            if decision == FsyncDecision::Sync {
+                // fdatasync is per-inode, not per-descriptor: one call
+                // covers bytes written through both paths (O_DIRECT
+                // bypasses the page cache but not the device cache; the
+                // bounce tail went through the page cache regardless).
+                self.side.sync_data()?;
+                fsyncs = 1;
+            }
         }
         Ok(WriteStats {
             total_bytes: total,

@@ -11,19 +11,24 @@ use std::sync::Arc;
 
 use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
 use fastpersist::checkpoint::load::load_checkpoint;
-use fastpersist::checkpoint::manifest::MANIFEST_FILE;
 use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::fault::{FaultKind, FaultPlan, FaultSite};
 use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
 use fastpersist::tensor::{DType, Tensor, TensorStore};
 use fastpersist::training::looper::Trainer;
 use fastpersist::util::json::Json;
 use fastpersist::util::rng::Rng;
+use fastpersist::Error;
 
 const CS: u64 = 4096;
 
 fn runtime() -> Arc<IoRuntime> {
+    runtime_with(None)
+}
+
+fn runtime_with(fault: Option<FaultPlan>) -> Arc<IoRuntime> {
     Arc::new(IoRuntime::new(IoRuntimeConfig {
-        io: IoConfig::fastpersist().microbench(),
+        io: IoConfig { fault, ..IoConfig::fastpersist().microbench() },
         ..IoRuntimeConfig::default()
     }))
 }
@@ -57,7 +62,11 @@ fn extra(step: i64) -> BTreeMap<String, Json> {
 #[test]
 fn interrupted_delta_flush_falls_back_to_last_complete_chain() {
     let dir = scratch_dir("delta-crash").unwrap();
-    let rt = runtime();
+    // crash mid-flush of step 3: the injected fault fires at the third
+    // manifest publish (0-based boundary 2) — chunks hit storage, the
+    // atomic rename that would commit them never happens
+    let fault = FaultPlan::fire_at(FaultKind::Abort, FaultSite::Publish, 2);
+    let rt = runtime_with(Some(fault.clone()));
     let mut ck = DeltaCheckpointer::new(Arc::clone(&rt), DeltaConfig {
         chunk_size: CS,
         max_chain: 8,
@@ -71,18 +80,17 @@ fn interrupted_delta_flush_falls_back_to_last_complete_chain() {
     ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
     let state_at_2 = s.snapshot();
 
-    // "crash" mid-flush of step 3: chunks hit storage but the manifest
-    // was never published. Removing the manifest of a completed write
-    // reproduces that exact on-disk state (the manifest is written
-    // strictly last, via atomic rename).
     mutate(&mut s, 0.04, 2);
     let step3 = dir.join("step-00000003");
-    ck.write(&s, extra(3), &step3).unwrap();
-    std::fs::remove_file(step3.join(MANIFEST_FILE)).unwrap();
+    let err = ck.write(&s, extra(3), &step3).unwrap_err();
+    assert!(matches!(err, Error::FaultTripped(_)), "got {err}");
+    assert!(fault.tripped() && fault.halted());
     assert!(
         std::fs::read_dir(&step3).unwrap().flatten().count() > 0,
         "crash drill needs flushed chunks on disk"
     );
+    // "restart": the halted runtime comes back for the recovery phase
+    fault.heal();
 
     // recovery: the incomplete directory is invisible to discovery and
     // unloadable directly

@@ -1,0 +1,452 @@
+//! Durability scenario matrix: deterministic fault injection over the
+//! write pipeline's op schedule.
+//!
+//! Five representative plan shapes — full sync, staged direct I/O
+//! (queue depth ≥ 2), delta chain base+Δ+Δ, lazy multi-generation, and
+//! segment-GC sparse rewrite — are first probed with a disarmed
+//! `FaultPlan` to enumerate every Stage/Drain/Fsync/Publish (and, for
+//! GC, GcCopy) boundary of their realized schedules, then re-run with
+//! each fault kind armed at each boundary. After every injection the
+//! durability invariant is checked:
+//!
+//! * recovery lands on the newest *published* generation — manifest
+//!   present, loads bit-identically to its captured snapshot;
+//! * partially written generations are invisible — no manifest, not
+//!   loadable, skipped by discovery;
+//! * a restarted writer continues the chain from the recovery point.
+//!
+//! The quick (CI) sweep injects at the first, middle, and last boundary
+//! of every site class; `FAULT_MATRIX_FULL=1` extends that to every
+//! boundary index plus a seeded sweep through `FaultPlan::seeded`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use fastpersist::checkpoint::delta::{
+    prune_chain_injected, DeltaCheckpointer, DeltaConfig, GcPolicy,
+};
+use fastpersist::checkpoint::lazy::{LazyCheckpointer, LazyConfig};
+use fastpersist::checkpoint::load::load_checkpoint;
+use fastpersist::checkpoint::manifest::MANIFEST_FILE;
+use fastpersist::checkpoint::{CheckpointEngine, WriterStrategy};
+use fastpersist::io::device::DeviceMap;
+use fastpersist::io::engine::{scratch_dir, EngineKind, IoConfig};
+use fastpersist::io::fault::{FaultKind, FaultPlan, FaultSite};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::training::looper::Trainer;
+use fastpersist::util::json::Json;
+use fastpersist::util::rng::Rng;
+
+const CS: u64 = 4096;
+/// Small staging buffer so even a few tens of KiB cross several
+/// Stage/Drain boundaries per file.
+const BUF: usize = 16 << 10;
+
+fn full_sweep() -> bool {
+    std::env::var("FAULT_MATRIX_FULL").ok().as_deref() == Some("1")
+}
+
+/// Single-threaded, durable (fsync on) runtime so the op schedule — and
+/// with it every boundary index — is deterministic across runs.
+fn runtime_with(kind: EngineKind, fault: Option<FaultPlan>) -> Arc<IoRuntime> {
+    Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig { kind, io_buf_size: BUF, fault, ..IoConfig::default() },
+        writer_threads: 1,
+        drain_threads: 1,
+        ..IoRuntimeConfig::default()
+    }))
+}
+
+fn delta_writer(rt: &Arc<IoRuntime>, max_chain: u64) -> DeltaCheckpointer {
+    DeltaCheckpointer::new(
+        Arc::clone(rt),
+        DeltaConfig { chunk_size: CS, max_chain, ..DeltaConfig::default() },
+    )
+}
+
+fn store(seed: u64, nbytes: usize) -> TensorStore {
+    let mut rng = Rng::new(seed);
+    let mut s = TensorStore::new();
+    let mut data = vec![0u8; nbytes];
+    rng.fill_bytes(&mut data);
+    s.push(Tensor::new("w", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+    s
+}
+
+fn mutate(s: &mut TensorStore, frac: f64, tag: u8) {
+    let t = s.get("w").unwrap();
+    let mut data = t.data.as_slice().to_vec();
+    let n = (data.len() as f64 * frac) as usize;
+    let start = data.len() / 4;
+    for b in &mut data[start..start + n] {
+        *b ^= tag | 1;
+    }
+    s.update("w", data).unwrap();
+}
+
+fn extra(step: i64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Int(step));
+    m
+}
+
+fn step_dir(dir: &Path, step: i64) -> PathBuf {
+    dir.join(format!("step-{step:08}"))
+}
+
+// ---------------------------------------------------------------- shapes
+
+/// Full synchronous checkpoints through the buffered (torch.save-style)
+/// engine: Stage/Drain/Fsync once per step, manifest published last.
+fn run_full(fault: FaultPlan, dir: &Path) -> Vec<(i64, TensorStore)> {
+    let rt = runtime_with(EngineKind::Buffered, Some(fault));
+    let engine = CheckpointEngine::with_runtime(rt, WriterStrategy::Rank0);
+    let mut s = store(11, 12 * CS as usize);
+    let mut snaps = Vec::new();
+    for step in 1..=2i64 {
+        let _ = engine.write_single(&s, extra(step), &step_dir(dir, step));
+        snaps.push((step, s.snapshot()));
+        mutate(&mut s, 0.2, step as u8);
+    }
+    snaps
+}
+
+/// Full checkpoints through the staged double-buffered direct engine:
+/// several Stage/Drain boundaries per step (payload spans ≥ 3 staging
+/// buffers), queue depth 2.
+fn run_staged(fault: FaultPlan, dir: &Path) -> Vec<(i64, TensorStore)> {
+    let rt = runtime_with(EngineKind::DirectDouble, Some(fault));
+    let engine = CheckpointEngine::with_runtime(rt, WriterStrategy::Rank0);
+    let mut s = store(17, 12 * CS as usize);
+    let mut snaps = Vec::new();
+    for step in 1..=2i64 {
+        let _ = engine.write_single(&s, extra(step), &step_dir(dir, step));
+        snaps.push((step, s.snapshot()));
+        mutate(&mut s, 0.2, step as u8);
+    }
+    snaps
+}
+
+/// Incremental chain base+Δ+Δ: segment writes ride the staged pipeline,
+/// each link commits with its own manifest publish.
+fn run_delta(fault: FaultPlan, dir: &Path) -> Vec<(i64, TensorStore)> {
+    let rt = runtime_with(EngineKind::DirectDouble, Some(fault));
+    let mut ck = delta_writer(&rt, 8);
+    let mut s = store(23, 12 * CS as usize);
+    let mut snaps = Vec::new();
+    for step in 1..=3i64 {
+        let _ = ck.write(&s, extra(step), &step_dir(dir, step));
+        snaps.push((step, s.snapshot()));
+        mutate(&mut s, 0.05, step as u8);
+    }
+    snaps
+}
+
+/// Lazy asynchronous captures flushed as a delta chain on the scheduler
+/// thread: the fault fires mid-flush while the trainer keeps stepping.
+fn run_lazy(fault: FaultPlan, dir: &Path) -> Vec<(i64, TensorStore)> {
+    let rt = runtime_with(EngineKind::DirectDouble, Some(fault));
+    let cfg = LazyConfig { staging_bytes: 2 << 20, buf_size: 256 << 10, max_generations: 2 };
+    let mut lazy = LazyCheckpointer::delta(delta_writer(&rt, 8), cfg);
+    let mut s = store(31, 12 * CS as usize);
+    let mut snaps = Vec::new();
+    for step in 1..=3i64 {
+        // post-fault captures may surface the flush failure through
+        // backpressure — tolerated, the disk state is what's verified
+        let _ = lazy.capture(&s, extra(step), step_dir(dir, step));
+        snaps.push((step, s.snapshot()));
+        mutate(&mut s, 0.05, step as u8);
+    }
+    while lazy.in_flight() > 0 {
+        let _ = lazy.wait_all();
+    }
+    snaps
+}
+
+/// Chain with compaction (base, Δ, Δ, fresh base) followed by a pruning
+/// pass whose sparse segment rewrite crosses GcCopy boundaries.
+fn run_gc(fault: FaultPlan, dir: &Path) -> Vec<(i64, TensorStore)> {
+    let rt = runtime_with(EngineKind::DirectDouble, Some(fault.clone()));
+    let mut ck = delta_writer(&rt, 2);
+    let mut s = store(13, 16 * CS as usize);
+    let mut snaps = Vec::new();
+    for step in 1..=4i64 {
+        let _ = ck.write(&s, extra(step), &step_dir(dir, step));
+        snaps.push((step, s.snapshot()));
+        mutate(&mut s, 0.06, step as u8);
+    }
+    let _ = prune_chain_injected(
+        dir,
+        2,
+        &DeviceMap::single(),
+        Some(4),
+        GcPolicy { occupancy: 1.0 },
+        Some(&fault),
+    );
+    snaps
+}
+
+// ------------------------------------------------------------- restarts
+
+/// Restarted full writer: publishes one more step and recovery moves to
+/// it.
+fn restart_full_with(kind: EngineKind, dir: &Path, snaps: &[(i64, TensorStore)]) {
+    let rt = runtime_with(kind, None);
+    let engine = CheckpointEngine::with_runtime(Arc::clone(&rt), WriterStrategy::Rank0);
+    let (last, state) = snaps.last().expect("scenario ran");
+    let next = last + 1;
+    let mut s = state.snapshot();
+    mutate(&mut s, 0.2, 9);
+    engine.write_single(&s, extra(next), &step_dir(dir, next)).expect("restarted writer");
+    let latest = Trainer::latest_checkpoint(dir).unwrap().expect("restart published");
+    assert!(latest.ends_with(format!("step-{next:08}")), "latest = {latest:?}");
+    let (loaded, _, _) = load_checkpoint(&latest, &rt).expect("restart must load");
+    assert!(loaded.content_eq(&s));
+}
+
+fn restart_full(_fault: &FaultPlan, dir: &Path, snaps: &[(i64, TensorStore)]) {
+    restart_full_with(EngineKind::Buffered, dir, snaps);
+}
+
+fn restart_staged(_fault: &FaultPlan, dir: &Path, snaps: &[(i64, TensorStore)]) {
+    restart_full_with(EngineKind::DirectDouble, dir, snaps);
+}
+
+/// Restarted delta writer: re-attaches to the recovery point when one
+/// exists (continuing the chain, not restarting it) and publishes one
+/// more loadable step.
+fn restart_delta(_fault: &FaultPlan, dir: &Path, snaps: &[(i64, TensorStore)]) {
+    let rt = runtime_with(EngineKind::DirectDouble, None);
+    let mut ck = delta_writer(&rt, 8);
+    let latest = Trainer::latest_checkpoint(dir).unwrap();
+    let resumed = match &latest {
+        Some(l) => ck.resume_from(l).expect("resume from published checkpoint"),
+        None => false,
+    };
+    let (last, state) = snaps.last().expect("scenario ran");
+    let next = last + 1;
+    let mut s = state.snapshot();
+    mutate(&mut s, 0.05, 9);
+    let out = ck.write(&s, extra(next), &step_dir(dir, next)).expect("restarted writer");
+    assert_eq!(out.is_base, !resumed, "restart must continue a resumable chain");
+    let (loaded, _, _) = load_checkpoint(&step_dir(dir, next), &rt).expect("restart must load");
+    assert!(loaded.content_eq(&s));
+    let newest = Trainer::latest_checkpoint(dir).unwrap().expect("restart published");
+    assert!(newest.ends_with(format!("step-{next:08}")), "latest = {newest:?}");
+}
+
+/// Everything under `dir` named like a half-built GC rewrite temp.
+fn gc_orphans(dir: &Path) -> Vec<PathBuf> {
+    let mut found = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&d) else { continue };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.ends_with(".fpseg.gc"))
+            {
+                found.push(p);
+            }
+        }
+    }
+    found
+}
+
+/// GC epilogue: the next prune must converge — sweep any orphaned
+/// rewrite temp the injected crash left behind, finish the reclaim, and
+/// keep every surviving checkpoint loadable — before the usual restart.
+fn converge_gc(fault: &FaultPlan, dir: &Path, snaps: &[(i64, TensorStore)]) {
+    prune_chain_injected(
+        dir,
+        2,
+        &DeviceMap::single(),
+        Some(4),
+        GcPolicy { occupancy: 1.0 },
+        Some(fault),
+    )
+    .expect("healed prune must converge");
+    let orphans = gc_orphans(dir);
+    assert!(orphans.is_empty(), "GC temp orphans must not survive the next prune: {orphans:?}");
+    restart_delta(fault, dir, snaps);
+}
+
+// --------------------------------------------------------------- driver
+
+struct Scenario {
+    name: &'static str,
+    cells: &'static [(FaultKind, FaultSite)],
+    run: fn(FaultPlan, &Path) -> Vec<(i64, TensorStore)>,
+    epilogue: fn(&FaultPlan, &Path, &[(i64, TensorStore)]),
+}
+
+/// Kind × site cells every write shape is swept through.
+const WRITE_CELLS: &[(FaultKind, FaultSite)] = &[
+    (FaultKind::Abort, FaultSite::Stage),
+    (FaultKind::Abort, FaultSite::Drain),
+    (FaultKind::Abort, FaultSite::Fsync),
+    (FaultKind::Abort, FaultSite::Publish),
+    (FaultKind::TornWrite, FaultSite::Drain),
+    (FaultKind::ShortFsync, FaultSite::Fsync),
+    (FaultKind::StaleManifest, FaultSite::Publish),
+];
+
+/// The GC shape additionally sweeps the sparse-rewrite copy loop.
+const GC_CELLS: &[(FaultKind, FaultSite)] = &[
+    (FaultKind::Abort, FaultSite::Stage),
+    (FaultKind::Abort, FaultSite::Drain),
+    (FaultKind::Abort, FaultSite::Fsync),
+    (FaultKind::Abort, FaultSite::Publish),
+    (FaultKind::TornWrite, FaultSite::Drain),
+    (FaultKind::ShortFsync, FaultSite::Fsync),
+    (FaultKind::StaleManifest, FaultSite::Publish),
+    (FaultKind::Abort, FaultSite::GcCopy),
+    (FaultKind::TornWrite, FaultSite::GcCopy),
+];
+
+/// Quick sweep: first, middle, last boundary. Full sweep: all of them.
+fn pick_indices(n: u64) -> Vec<u64> {
+    if full_sweep() {
+        (0..n).collect()
+    } else {
+        let mut v = vec![0, n / 2, n.saturating_sub(1)];
+        v.dedup();
+        v
+    }
+}
+
+/// The durability invariant, checked from disk state alone: every
+/// manifest-bearing step loads bit-identically to its captured
+/// snapshot, every manifest-less step is unloadable, and discovery
+/// lands on the newest published step.
+fn verify_durability(dir: &Path, snaps: &[(i64, TensorStore)], ctx: &str) {
+    let rt = runtime_with(EngineKind::DirectDouble, None);
+    let mut expect_latest: Option<PathBuf> = None;
+    for (step, snap) in snaps {
+        let d = step_dir(dir, *step);
+        if d.join(MANIFEST_FILE).exists() {
+            let (loaded, header, _) = load_checkpoint(&d, &rt)
+                .unwrap_or_else(|e| panic!("{ctx}: published step {step} must load: {e}"));
+            assert!(
+                loaded.content_eq(snap),
+                "{ctx}: published step {step} must match its captured snapshot"
+            );
+            assert_eq!(header.extra["step"], Json::Int(*step), "{ctx}: step {step} extras");
+            expect_latest = Some(d);
+        } else {
+            assert!(
+                load_checkpoint(&d, &rt).is_err(),
+                "{ctx}: unpublished step {step} must not load"
+            );
+        }
+    }
+    let latest = Trainer::latest_checkpoint(dir).unwrap();
+    assert_eq!(latest, expect_latest, "{ctx}: recovery must land on the newest published step");
+}
+
+fn run_cell(s: &Scenario, root: &Path, ctx: &str, kind: FaultKind, fault: FaultPlan) {
+    let dir = root.join(ctx.replace(['/', '@', '[', ']', '#'], "-"));
+    let snaps = (s.run)(fault.clone(), &dir);
+    assert!(fault.tripped(), "{ctx}: armed fault must fire");
+    match kind {
+        FaultKind::Abort | FaultKind::TornWrite => {
+            assert!(fault.halted(), "{ctx}: {} must simulate process death", kind.name());
+        }
+        FaultKind::ShortFsync => {
+            assert_eq!(fault.skipped_fsyncs(), 1, "{ctx}: exactly one fsync elided");
+        }
+        FaultKind::StaleManifest => {
+            assert_eq!(fault.suppressed_publishes(), 1, "{ctx}: exactly one publish suppressed");
+        }
+    }
+    fault.heal();
+    verify_durability(&dir, &snaps, ctx);
+    (s.epilogue)(&fault, &dir, &snaps);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn run_matrix(s: &Scenario) {
+    let root = scratch_dir(&format!("fault-matrix-{}", s.name)).unwrap();
+    // Probe pass: enumerate the shape's op schedule with a disarmed
+    // plan, and confirm the fault-free run is fully durable.
+    let probe = FaultPlan::observe();
+    let probe_dir = root.join("probe");
+    let snaps = (s.run)(probe.clone(), &probe_dir);
+    assert!(!probe.tripped() && !probe.halted(), "observe() must never fire");
+    verify_durability(&probe_dir, &snaps, &format!("{}/probe", s.name));
+    let _ = std::fs::remove_dir_all(&probe_dir);
+
+    for &(kind, site) in s.cells {
+        let n = probe.boundaries(site);
+        assert!(n > 0, "{}: shape never crosses a {} boundary", s.name, site.name());
+        for nth in pick_indices(n) {
+            let ctx = format!("{}/{}@{}[{nth}]", s.name, kind.name(), site.name());
+            run_cell(s, &root, &ctx, kind, FaultPlan::fire_at(kind, site, nth));
+        }
+        if full_sweep() {
+            for seed in [0x5eed_0001u64, 0xfa57_9e12] {
+                let ctx = format!("{}/{}@{}#seed{seed:x}", s.name, kind.name(), site.name());
+                run_cell(s, &root, &ctx, kind, FaultPlan::seeded(seed, kind, site, n));
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------- tests
+
+#[test]
+fn full_sync_plan_survives_every_fault_boundary() {
+    run_matrix(&Scenario {
+        name: "full-sync",
+        cells: WRITE_CELLS,
+        run: run_full,
+        epilogue: restart_full,
+    });
+}
+
+#[test]
+fn staged_direct_plan_survives_every_fault_boundary() {
+    run_matrix(&Scenario {
+        name: "staged-direct",
+        cells: WRITE_CELLS,
+        run: run_staged,
+        epilogue: restart_staged,
+    });
+}
+
+#[test]
+fn delta_chain_plan_survives_every_fault_boundary() {
+    run_matrix(&Scenario {
+        name: "delta-chain",
+        cells: WRITE_CELLS,
+        run: run_delta,
+        epilogue: restart_delta,
+    });
+}
+
+#[test]
+fn lazy_multi_generation_plan_survives_every_fault_boundary() {
+    run_matrix(&Scenario {
+        name: "lazy-multi-gen",
+        cells: WRITE_CELLS,
+        run: run_lazy,
+        epilogue: restart_delta,
+    });
+}
+
+#[test]
+fn gc_sparse_rewrite_survives_every_fault_boundary() {
+    run_matrix(&Scenario {
+        name: "gc-rewrite",
+        cells: GC_CELLS,
+        run: run_gc,
+        epilogue: converge_gc,
+    });
+}

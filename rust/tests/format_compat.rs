@@ -14,13 +14,14 @@
 //! regenerate it only when the *writer* intentionally changes layout,
 //! never to make the reader pass.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
 use fastpersist::checkpoint::load::{load_checkpoint, load_checkpoint_with, RestoreOptions};
 use fastpersist::checkpoint::manifest::CheckpointManifest;
-use fastpersist::io::engine::IoConfig;
+use fastpersist::checkpoint::{CheckpointEngine, WriterStrategy};
+use fastpersist::io::engine::{scratch_dir, IoConfig};
 use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
 use fastpersist::tensor::{DType, Tensor, TensorStore};
 use fastpersist::util::json::Json;
@@ -146,6 +147,143 @@ fn fixture_manifests_report_their_versions() {
         fastpersist::checkpoint::manifest::MANIFEST_VERSION
     );
     let _ = CheckpointManifest::from_json(&v).unwrap();
+}
+
+// ------------------------------------------------------- corruption fuzz
+
+/// Recursively copy a fixture chain so every corruption case gets its
+/// own path — the parsed-manifest LRU is keyed by (path, mtime, length)
+/// and a fresh copy can never be served a stale parse.
+fn stage_chain(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap().flatten() {
+        let p = e.path();
+        let t = dst.join(e.file_name());
+        if p.is_dir() {
+            stage_chain(&p, &t);
+        } else {
+            std::fs::copy(&p, &t).unwrap();
+        }
+    }
+}
+
+/// Corrupt `rel` (a file inside the chain at `src`) with deterministic
+/// truncations and scattered single-byte flips. After every corruption
+/// the checkpoint at `step` must fail closed — a typed, renderable
+/// error — or load the exact expected content (a flip in dead bytes is
+/// benign). It must never panic and never load garbage.
+fn fuzz_file_fails_closed(src: &Path, rel: &str, step: &str, expected: &TensorStore, tag: &str) {
+    let rt = runtime();
+    let root = scratch_dir(&format!("format-fuzz-{tag}")).unwrap();
+    let original = std::fs::read(src.join(rel)).unwrap();
+    let n = original.len();
+    assert!(n > 8, "{tag}: fixture file {rel} is implausibly small");
+    let mut cases: Vec<(String, Vec<u8>)> = Vec::new();
+    for cut in [0, 1, n / 4, n / 2, n - 1] {
+        cases.push((format!("truncate-{cut}"), original[..cut].to_vec()));
+    }
+    let flips = 29.min(n);
+    for i in 0..flips {
+        let pos = i * n / flips;
+        let mut m = original.clone();
+        // alternate a low-bit flip (digit → neighboring digit) and a
+        // case/whitespace flip so both numeric and structural bytes of
+        // the format get hit
+        m[pos] ^= if i % 2 == 0 { 0x01 } else { 0x20 };
+        cases.push((format!("flip-{pos}"), m));
+    }
+    for (ctx, bytes) in cases {
+        let chain = root.join(&ctx);
+        stage_chain(src, &chain);
+        std::fs::write(chain.join(rel), &bytes).unwrap();
+        match load_checkpoint(&chain.join(step), &rt) {
+            Ok((loaded, _, _)) => assert!(
+                loaded.content_eq(expected),
+                "{tag}/{ctx}: a corrupted {rel} must never load garbage"
+            ),
+            Err(e) => {
+                let rendered = e.to_string();
+                assert!(!rendered.is_empty(), "{tag}/{ctx}: error must render");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&chain);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn corrupted_v3_manifest_fails_closed() {
+    fuzz_file_fails_closed(
+        &fixture_dir(),
+        "step-00000002/checkpoint.json",
+        "step-00000002",
+        &expected_store(true),
+        "v3-manifest",
+    );
+}
+
+#[test]
+fn corrupted_v4_manifest_fails_closed() {
+    fuzz_file_fails_closed(
+        &fixture_dir_v4(),
+        "step-00000002/checkpoint.json",
+        "step-00000002",
+        &expected_store(true),
+        "v4-manifest",
+    );
+}
+
+#[test]
+fn corrupted_v4_segment_fails_closed() {
+    // corrupt the base's segment store and reload both the base itself
+    // and the delta link that inherits chunks from it
+    let src = fixture_dir_v4();
+    let seg = std::fs::read_dir(src.join("step-00000001"))
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "fpseg"))
+        .expect("v4 fixture has a segment file");
+    let rel = format!("step-00000001/{}", seg.file_name().unwrap().to_str().unwrap());
+    fuzz_file_fails_closed(&src, &rel, "step-00000001", &expected_store(false), "v4-seg-base");
+    fuzz_file_fails_closed(&src, &rel, "step-00000002", &expected_store(true), "v4-seg-delta");
+}
+
+#[test]
+fn v2_manifest_reads_and_fuzzes_closed() {
+    // synthesize a v2 chain: a full (partitioned) checkpoint whose
+    // manifest is re-stamped v2, the oldest version this build reads
+    let root = scratch_dir("format-v2").unwrap();
+    let rt = runtime();
+    let engine = CheckpointEngine::with_runtime(Arc::clone(&rt), WriterStrategy::Rank0);
+    let dir = root.join("step-00000001");
+    let store = expected_store(false);
+    let mut extra = std::collections::BTreeMap::new();
+    extra.insert("step".to_string(), Json::Int(1));
+    engine.write_single(&store, extra, &dir).unwrap();
+    let mpath = dir.join("checkpoint.json");
+    let parsed = Json::parse(&std::fs::read_to_string(&mpath).unwrap()).unwrap();
+    let Json::Object(mut fields) = parsed else { panic!("manifest must be a JSON object") };
+    assert_eq!(
+        fields["manifest_version"],
+        Json::Int(fastpersist::checkpoint::manifest::MANIFEST_VERSION),
+        "the writer must stamp the current version"
+    );
+    fields.insert("manifest_version".into(), Json::Int(2));
+    // v2 predates the delta section entirely
+    fields.remove("delta");
+    std::fs::write(&mpath, Json::Object(fields).to_string_pretty()).unwrap();
+    let (loaded, _, _) = load_checkpoint(&dir, &rt).unwrap();
+    assert!(loaded.content_eq(&store), "v2 manifests must still read");
+    // ... and a corrupted v2 manifest fails closed like any other
+    fuzz_file_fails_closed(
+        &root,
+        "step-00000001/checkpoint.json",
+        "step-00000001",
+        &store,
+        "v2-manifest",
+    );
+    let _ = std::fs::remove_dir_all(&root);
 }
 
 /// Fixture generator — run by hand, never in CI:

@@ -11,22 +11,28 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
-use fastpersist::prop_assert;
 use fastpersist::checkpoint::lazy::{LazyCheckpointer, LazyConfig};
 use fastpersist::checkpoint::load::load_checkpoint;
 use fastpersist::checkpoint::manifest::MANIFEST_FILE;
 use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::fault::{FaultKind, FaultPlan, FaultSite};
 use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::prop_assert;
 use fastpersist::tensor::{DType, Tensor, TensorStore};
 use fastpersist::training::looper::Trainer;
 use fastpersist::util::json::Json;
 use fastpersist::util::rng::Rng;
+use fastpersist::Error;
 
 const CS: u64 = 4096;
 
 fn runtime() -> Arc<IoRuntime> {
+    runtime_with(None)
+}
+
+fn runtime_with(fault: Option<FaultPlan>) -> Arc<IoRuntime> {
     Arc::new(IoRuntime::new(IoRuntimeConfig {
-        io: IoConfig::fastpersist().microbench(),
+        io: IoConfig { fault, ..IoConfig::fastpersist().microbench() },
         ..IoRuntimeConfig::default()
     }))
 }
@@ -75,7 +81,12 @@ fn step_dir(dir: &std::path::Path, step: i64) -> std::path::PathBuf {
 #[test]
 fn killed_lazy_flush_resumes_on_last_durable_generation() {
     let dir = scratch_dir("lazy-crash").unwrap();
-    let rt = runtime();
+    // the flush "dies" in the capture-to-publish window of generation 4:
+    // the injected fault fires at the fourth manifest publish (0-based
+    // boundary 3), so generation 4's chunks may hit storage but its
+    // commit point is never reached
+    let fault = FaultPlan::fire_at(FaultKind::Abort, FaultSite::Publish, 3);
+    let rt = runtime_with(Some(fault.clone()));
     let mut lazy = LazyCheckpointer::delta(delta_writer(&rt), lazy_cfg(2));
 
     // three healthy generations, all durable
@@ -89,17 +100,16 @@ fn killed_lazy_flush_resumes_on_last_durable_generation() {
     lazy.wait_all().unwrap();
     let state_at_3 = &snapshots[2];
 
-    // the flush "dies" in the capture-to-publish window of generation 4:
-    // the capture succeeds on the trainer thread, but nothing of it may
-    // reach the checkpoint directory
-    lazy.kill();
     lazy.capture(&s, extra(4), step_dir(&dir, 4)).unwrap();
     let err = lazy.wait_all().unwrap_err();
-    assert!(err.to_string().contains("generation 3"), "got {err}");
+    assert!(matches!(err, Error::FaultTripped(_)), "got {err}");
+    assert!(fault.tripped() && fault.halted());
     drop(lazy);
 
-    // recovery: generation 4 is invisible — no manifest, no directory
-    // contents, discovery lands on the newest published generation
+    // recovery: generation 4 is invisible — no manifest, so discovery
+    // lands on the newest published generation. "Restart" the process
+    // by healing the halted runtime first.
+    fault.heal();
     assert!(!step_dir(&dir, 4).join(MANIFEST_FILE).exists());
     let latest = Trainer::latest_checkpoint(&dir).unwrap().unwrap();
     assert!(latest.ends_with("step-00000003"), "latest = {latest:?}");
@@ -137,32 +147,31 @@ fn no_generation_is_ever_partially_published() {
         let healthy = g.usize(0, total as usize) as i64;
         let nbytes = g.usize(8, 24) * CS as usize;
         let case_dir = root.join(format!("case-{total}-{healthy}-{nbytes}"));
-        let rt = runtime();
+        // crash point: the flush dies at generation healthy+1's publish
+        // boundary (never reached when healthy == total) — everything
+        // captured from there on is abandoned mid-flight
+        let fault = FaultPlan::fire_at(FaultKind::Abort, FaultSite::Publish, healthy as u64);
+        let rt = runtime_with(Some(fault.clone()));
         let mut lazy = LazyCheckpointer::delta(delta_writer(&rt), lazy_cfg(2));
 
         let mut s = store(nbytes as u64, nbytes);
         let mut snapshots = Vec::new();
         for step in 1..=total {
-            if step == healthy + 1 {
-                // crash point: drain what was already captured (those
-                // generations were in flight, not lost), then the flush
-                // dies — everything captured from here on is abandoned
-                lazy.wait_all().unwrap();
-                lazy.kill();
-            }
             let r = lazy.capture(&s, extra(step), step_dir(&case_dir, step));
             if step <= healthy {
                 r.unwrap();
             }
-            // after the kill a capture may legitimately return the flush
-            // failure early (backpressure drains a dead generation) —
-            // both outcomes are acceptable, so post-kill results are not
-            // unwrapped
+            // past the crash point a capture may legitimately surface
+            // the flush failure early (backpressure drains a dead
+            // generation) — both outcomes are acceptable, so those
+            // results are not unwrapped
             snapshots.push(s.snapshot());
             mutate(&mut s, 0.05, step as u8);
         }
         let _ = lazy.wait_all();
         drop(lazy);
+        // recovery phase below runs on a "restarted" (healed) runtime
+        fault.heal();
 
         for step in 1..=total {
             let d = step_dir(&case_dir, step);
