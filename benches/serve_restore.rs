@@ -1,0 +1,213 @@
+//! Bench: **restore-at-scale** through the serve layer — 1/4/16
+//! concurrent tenants restoring a delta-chain pool through one
+//! [`fastpersist::checkpoint::serve::RestoreService`], cold vs warm
+//! segment cache, mmap zero-copy vs buffered-pread serving.
+//!
+//! Workload: a base + 5-delta chain (segment stores, ~15%
+//! mutation/step) restored by N scoped tenant threads, each with its
+//! own [`RestoreSession`], steps assigned round-robin so tenants
+//! overlap on the same segments:
+//!
+//! * **cold** — a fresh service: every segment read misses the cache
+//!   and goes through the fair scheduler to disk;
+//! * **warm** — the same service again: segment reads hit the
+//!   byte-budgeted cache (mmap'd images by default);
+//! * **pread** — `ServeConfig { mmap: false }`: the buffered-read
+//!   fallback path, cached as heap images.
+//!
+//! Every restore is content-verified against the written state, so the
+//! numbers are for *correct* restores only. Row names carry the cache
+//! counters; each row's JSON gets a `p99_s` extra (tail latency is the
+//! serving-layer acceptance metric). Deterministic asserts: warm passes
+//! must hit the cache, the cache must stay within budget, and the entry
+//! lifecycle must reconcile — timing is reported, never asserted.
+//!
+//!     cargo bench --bench serve_restore
+//!     FASTPERSIST_BENCH_FAST=1 cargo bench --bench serve_restore   (CI-speed)
+//!
+//! [`RestoreSession`]: fastpersist::checkpoint::serve::RestoreSession
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastpersist::benchkit::{write_bench_json, BenchGroup, BenchResult};
+use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+use fastpersist::checkpoint::serve::{CacheStats, RestoreService, ServeConfig};
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::util::bytes::human;
+use fastpersist::util::json::Json;
+use fastpersist::util::rng::Rng;
+use fastpersist::util::stats::{percentile, Summary};
+use fastpersist::util::table::Table;
+
+fn extra(step: u64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Int(step as i64));
+    m
+}
+
+fn payload_store(payload: usize) -> TensorStore {
+    let mut store = TensorStore::new();
+    let mut data = vec![0u8; payload];
+    Rng::new(17).fill_bytes(&mut data);
+    store.push(Tensor::new("params", DType::U8, vec![payload], data).unwrap()).unwrap();
+    store
+}
+
+fn mutate(store: &mut TensorStore, frac: f64, step: u64) {
+    let t = store.get("params").unwrap();
+    let mut data = t.data.as_slice().to_vec();
+    let n = ((data.len() as f64) * frac) as usize;
+    let start = (step as usize * 3 * n) % (data.len() - n.max(1));
+    Rng::new(step ^ 0x5e47e).fill_bytes(&mut data[start..start + n]);
+    store.update("params", data).unwrap();
+}
+
+/// Base + `deltas` chain under `root`; returns each step's dir and
+/// expected state.
+fn write_chain(
+    root: &std::path::Path,
+    runtime: &Arc<IoRuntime>,
+    payload: usize,
+    deltas: u64,
+) -> (Vec<PathBuf>, Vec<TensorStore>) {
+    let mut delta = DeltaCheckpointer::new(
+        Arc::clone(runtime),
+        DeltaConfig { chunk_size: 256 << 10, max_chain: u64::MAX, ..DeltaConfig::default() },
+    );
+    let mut store = payload_store(payload);
+    let mut dirs = Vec::new();
+    let mut states = Vec::new();
+    for step in 0..=deltas {
+        if step > 0 {
+            mutate(&mut store, 0.15, step);
+        }
+        let dir = root.join(format!("step-{step:08}"));
+        delta.write(&store, extra(step), &dir).unwrap();
+        dirs.push(dir);
+        states.push(store.clone());
+    }
+    (dirs, states)
+}
+
+/// One pass: `tenants` scoped threads, each with its own session,
+/// restoring `per_tenant` round-robin-assigned steps. Returns every
+/// per-restore latency; each restore is content-verified.
+fn run_pass(
+    svc: &Arc<RestoreService>,
+    dirs: &[PathBuf],
+    states: &[TensorStore],
+    tenants: usize,
+    per_tenant: usize,
+) -> Vec<f64> {
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..tenants {
+            let svc = Arc::clone(svc);
+            handles.push(scope.spawn(move || {
+                let session = svc.session(format!("tenant-{t}"));
+                let mut lat = Vec::with_capacity(per_tenant);
+                for k in 0..per_tenant {
+                    let i = (t * 7 + k) % dirs.len();
+                    let t0 = Instant::now();
+                    let got = session.restore(&dirs[i]).unwrap();
+                    lat.push(t0.elapsed().as_secs_f64());
+                    assert!(got.store.content_eq(&states[i]), "tenant {t}: step {i} diverged");
+                }
+                lat
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Row with the cache counters in the name and tail latency as a
+/// `p99_s` extra.
+fn row(label: String, mut lat: Vec<f64>, bytes: u64, s: &CacheStats) -> BenchResult {
+    lat.sort_by(f64::total_cmp);
+    let p99 = percentile(&lat, 0.99);
+    BenchResult {
+        name: format!(
+            "{label} ({} hits, {} misses, {} cached)",
+            s.hits,
+            s.misses,
+            human(s.bytes_held)
+        ),
+        summary: Summary::of(&lat),
+        bytes_per_iter: Some(bytes),
+        extras: Vec::new(),
+    }
+    .with_extra("p99_s", p99)
+}
+
+fn main() {
+    let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
+    let payload: usize = if fast { 4 << 20 } else { 16 << 20 };
+    let per_tenant: usize = if fast { 3 } else { 6 };
+    let deltas: u64 = 5;
+    let budget: u64 = 256 << 20;
+
+    let base = scratch_dir("bench-serve").unwrap();
+    let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        reader_threads: 8,
+        ..IoRuntimeConfig::default()
+    }));
+    runtime.staging().prewarm();
+
+    let (dirs, states) = write_chain(&base.join("chain"), &runtime, payload, deltas);
+    let bytes = payload as u64;
+    let mut groups: Vec<BenchGroup> = Vec::new();
+    let mut table =
+        Table::new(vec!["tenants", "mode", "p50 (ms)", "p99 (ms)", "hits", "misses"]);
+
+    for tenants in [1usize, 4, 16] {
+        let mut group = BenchGroup::new(&format!(
+            "serve {} x {} steps to {tenants} tenant(s): cold vs warm, mmap vs pread",
+            human(payload as u64),
+            dirs.len()
+        ));
+        for (mode, mmap) in [("mmap", true), ("pread", false)] {
+            // fresh service per mode: the cold pass fills the cache,
+            // the warm pass reuses it
+            let svc = RestoreService::new(
+                Arc::clone(&runtime),
+                ServeConfig { admit_after: 1, mmap, ..ServeConfig::with_cache(budget) },
+            );
+            for phase in ["cold", "warm"] {
+                let lat = run_pass(&svc, &dirs, &states, tenants, per_tenant);
+                let s = svc.cache_stats();
+                if phase == "warm" {
+                    // deterministic acceptance: warm passes hit the cache
+                    assert!(s.hits > 0, "warm {mode} pass must hit the cache: {s:?}");
+                }
+                assert!(s.bytes_held <= s.budget, "cache over budget: {s:?}");
+                assert_eq!(
+                    s.entries,
+                    s.admitted - s.evicted - s.invalidated,
+                    "entry lifecycle must reconcile: {s:?}"
+                );
+                let r = row(format!("{tenants}t {phase} {mode}"), lat, bytes, &s);
+                table.row(vec![
+                    tenants.to_string(),
+                    format!("{phase} {mode}"),
+                    format!("{:.2}", r.summary.p50 * 1e3),
+                    format!("{:.2}", r.extras[0].1 * 1e3),
+                    s.hits.to_string(),
+                    s.misses.to_string(),
+                ]);
+                group.results.push(r);
+            }
+        }
+        groups.push(group);
+    }
+
+    println!("{}", table.render());
+    let refs: Vec<&BenchGroup> = groups.iter().collect();
+    let _ = write_bench_json("serve", &refs);
+    let _ = std::fs::remove_dir_all(&base);
+}

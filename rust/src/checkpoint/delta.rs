@@ -1019,6 +1019,9 @@ pub fn prune_chain_injected(
             }
             stats.demoted_dirs += 1;
         } else {
+            // drop cached segment images before the files go away (the
+            // tag must be computed while the dir still canonicalizes)
+            crate::checkpoint::serve::invalidate_checkpoint(path);
             devices.remove_checkpoint(path);
             let _ = std::fs::remove_dir_all(path);
             stats.removed_dirs += 1;
@@ -1102,6 +1105,7 @@ fn gc_segments(
         match live.and_then(|m| m.get(&idx)) {
             None => {
                 if std::fs::remove_file(&path).is_ok() {
+                    crate::checkpoint::serve::invalidate_path(&path);
                     stats.removed_segments += 1;
                     stats.reclaimed_bytes += payload;
                 }
@@ -1257,6 +1261,9 @@ fn rewrite_segment_sparse(
         // reference.
         dst.sync_data()?;
         std::fs::rename(&tmp, path)?;
+        // the compacted file replaced the original in place: any cached
+        // image of the old layout is now stale
+        crate::checkpoint::serve::invalidate_path(path);
         Ok(())
     })();
     match &result {

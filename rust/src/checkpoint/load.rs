@@ -102,16 +102,46 @@ pub fn load_checkpoint_with(
     opts: RestoreOptions,
 ) -> Result<LoadedCheckpoint> {
     let t0 = Instant::now();
-    let manifest = CheckpointManifest::load(dir)?;
+    // Parse through the process-wide manifest LRU: repeated restores of
+    // one step (and the serve layer's concurrent tenants) share a
+    // single parse instead of re-reading the chunk table every time.
+    let manifest = CheckpointManifest::load_cached(dir)?;
     // THE stream allocation: one buffer of total_len, assembled in
     // place by the read jobs (no per-part vectors, no concat).
     let dest = runtime.alloc_stream(manifest.total_len as usize);
-    let jobs = if manifest.is_delta() {
-        crate::checkpoint::delta::plan_delta_reads(dir, &manifest, &dest, opts.coalesce)?
-    } else {
-        plan_partition_reads(dir, &manifest, &dest, runtime.read_split_bytes())
-    };
+    let jobs = plan_restore_jobs(dir, &manifest, &dest, opts.coalesce, runtime)?;
     let stats = read::run_jobs(runtime, jobs)?;
+    finish_restore(dest, (*manifest).clone(), stats, t0)
+}
+
+/// Plan the read jobs of one restore: per-segment coalesced jobs for
+/// delta checkpoints, per-partition (split) jobs for full ones. Shared
+/// by the direct loader above and the serve layer's scheduler
+/// ([`crate::checkpoint::serve`]), which dispatches the same jobs
+/// through its cache and fairness machinery.
+pub(crate) fn plan_restore_jobs(
+    dir: &Path,
+    manifest: &CheckpointManifest,
+    dest: &std::sync::Arc<StreamBuffer>,
+    coalesce: bool,
+    runtime: &IoRuntime,
+) -> Result<Vec<ReadJob>> {
+    if manifest.is_delta() {
+        crate::checkpoint::delta::plan_delta_reads(dir, manifest, dest, coalesce)
+    } else {
+        Ok(plan_partition_reads(dir, manifest, dest, runtime.read_split_bytes()))
+    }
+}
+
+/// Post-assembly half of a restore, shared with the serve layer:
+/// account the assembled bytes against the manifest, unwrap the stream
+/// buffer, and run the single verification + parse pass.
+pub(crate) fn finish_restore(
+    dest: std::sync::Arc<StreamBuffer>,
+    manifest: CheckpointManifest,
+    stats: ReadStats,
+    t0: Instant,
+) -> Result<LoadedCheckpoint> {
     if stats.bytes != manifest.total_len {
         return Err(Error::Format(format!(
             "assembled {} bytes, manifest says {}",
@@ -332,6 +362,30 @@ mod tests {
         let rt_default = test_runtime();
         let one = load_checkpoint_with(&dir, &rt_default, RestoreOptions::default()).unwrap();
         assert_eq!(one.stats.jobs, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repeated_restores_share_one_manifest_parse() {
+        // Satellite fix: load_checkpoint routes the manifest parse
+        // through the process-wide LRU — a second restore of the same
+        // step is a cache hit, and a re-save invalidates it.
+        let dir = scratch_dir("load-manifest-cache").unwrap();
+        let store = write_sample(&dir, 2);
+        let rt = test_runtime();
+        let first = load_checkpoint_with(&dir, &rt, RestoreOptions::default()).unwrap();
+        assert!(first.store.content_eq(&store));
+        let (hits0, _) = crate::checkpoint::manifest::manifest_cache_stats();
+        let second = load_checkpoint_with(&dir, &rt, RestoreOptions::default()).unwrap();
+        assert!(second.store.content_eq(&store));
+        let (hits1, _) = crate::checkpoint::manifest::manifest_cache_stats();
+        assert!(hits1 > hits0, "second restore must hit the manifest cache");
+        // save-side invalidation: a re-published manifest is re-parsed
+        let mut bumped = first.manifest.clone();
+        bumped.step += 1;
+        bumped.save(&dir).unwrap();
+        let third = load_checkpoint_with(&dir, &rt, RestoreOptions::default()).unwrap();
+        assert_eq!(third.manifest.step, bumped.step, "stale manifest parse served");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

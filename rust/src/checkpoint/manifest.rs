@@ -33,6 +33,19 @@
 //! v3 manifests (per-chunk files, uniform whole-stream grid) are still
 //! read; v1 is rejected with a clear incompatibility error. See
 //! `docs/FORMATS.md` for the full version history.
+//!
+//! Manifest **v5** changes how the chunk *table* is encoded: instead of
+//! one JSON object per chunk (which dominates manifest size and parse
+//! time at ~100k chunks), the table is a **binary blob of fixed-width
+//! little-endian records** ([`CHUNK_RECORD_LEN`] bytes per chunk,
+//! hex-encoded into the `chunk_table` field) plus two small string
+//! tables (`sources`, `devices`) the records index into. The blob
+//! carries its own `checksum64` digest and is parsed **fail-closed**:
+//! record count, digest, string-table indices, non-zero lengths,
+//! in-bounds segment offsets, and per-segment extent monotonicity are
+//! all validated before a single chunk entry is accepted — a flipped or
+//! truncated byte yields a typed error, never a garbage table. v2–v4
+//! JSON chunk arrays are still read.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -40,21 +53,43 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::time::SystemTime;
 
 use crate::checkpoint::plan::{Partition, WritePlan};
+use crate::serialize::format::checksum64_slice;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
 /// File name of the manifest inside a checkpoint directory.
 pub const MANIFEST_FILE: &str = "checkpoint.json";
 
-/// Manifest schema version. v4 = v3 plus segment-store chunk addressing
-/// ([`SegmentRef`]) and the header-split chunk grid
-/// ([`DeltaSection::header_len`]). v3 (per-chunk-file deltas) and v2
-/// (composite stream digest, optional device assignments, no delta
-/// section) manifests are still read. v1 manifests (whole-stream
-/// `checksum64_slice` digest, no device field) are rejected with a
-/// clear incompatibility error rather than a misleading digest
-/// mismatch. The evolution table lives in `docs/FORMATS.md`.
-pub const MANIFEST_VERSION: i64 = 4;
+/// Manifest schema version. v5 = v4 with the chunk table encoded as a
+/// binary blob of fixed-width little-endian records (`chunk_table` +
+/// `sources`/`devices` string tables + a table digest) instead of a
+/// JSON array. v4 (JSON chunk array with segment addressing), v3
+/// (per-chunk-file deltas) and v2 (composite stream digest, optional
+/// device assignments, no delta section) manifests are still read. v1
+/// manifests (whole-stream `checksum64_slice` digest, no device field)
+/// are rejected with a clear incompatibility error rather than a
+/// misleading digest mismatch. The evolution table lives in
+/// `docs/FORMATS.md`.
+pub const MANIFEST_VERSION: i64 = 5;
+
+/// First manifest version carrying the binary chunk table.
+pub const MANIFEST_BINARY_TABLE_VERSION: i64 = 5;
+
+/// Fixed width in bytes of one binary chunk-table record (manifest v5).
+/// Layout, all little-endian:
+///
+/// ```text
+/// offset 0   chunk content hash          u64
+/// offset 8   chunk length in bytes       u64
+/// offset 16  source string-table index   u32  (0xffff_ffff = own dir)
+/// offset 20  device string-table index   u32  (0xffff_ffff = none)
+/// offset 24  segment index               u32  (0xffff_ffff = v3 chunk file)
+/// offset 28  segment byte offset         u64  (0 when no segment)
+/// ```
+pub const CHUNK_RECORD_LEN: usize = 36;
+
+/// String-table sentinel for "no entry" in binary chunk records.
+const NO_INDEX: u32 = u32::MAX;
 
 /// Oldest manifest version this build can still read (v2: same digest
 /// algorithm as v4, no delta section).
@@ -228,32 +263,48 @@ impl DeltaSection {
         Ok(())
     }
 
+    /// Serialize the delta section at [`MANIFEST_VERSION`]: the chunk
+    /// table as the v5 binary record blob plus its string tables and
+    /// digest.
     fn to_json(&self) -> Json {
+        let mut sources: Vec<&str> = Vec::new();
+        let mut devices: Vec<&str> = Vec::new();
+        let mut intern = |table: &mut Vec<&str>, s| -> u32 {
+            match table.iter().position(|t| *t == s) {
+                Some(i) => i as u32,
+                None => {
+                    table.push(s);
+                    (table.len() - 1) as u32
+                }
+            }
+        };
+        let mut records = Vec::with_capacity(self.chunks.len() * CHUNK_RECORD_LEN);
+        for c in &self.chunks {
+            let src = c.source.as_deref().map_or(NO_INDEX, |s| intern(&mut sources, s));
+            let dev = c.device.as_deref().map_or(NO_INDEX, |d| intern(&mut devices, d));
+            let (seg, off) = c.seg.map_or((NO_INDEX, 0), |r| (r.seg, r.offset));
+            records.extend_from_slice(&c.hash.to_le_bytes());
+            records.extend_from_slice(&c.len.to_le_bytes());
+            records.extend_from_slice(&src.to_le_bytes());
+            records.extend_from_slice(&dev.to_le_bytes());
+            records.extend_from_slice(&seg.to_le_bytes());
+            records.extend_from_slice(&off.to_le_bytes());
+        }
+        let digest = checksum64_slice(&records);
         let mut fields = vec![
             ("chain_len", Json::from(self.chain_len as i64)),
             ("chunk_size", Json::from(self.chunk_size as i64)),
-            (
-                "chunks",
-                Json::arr(self.chunks.iter().map(|c| {
-                    let mut f = vec![
-                        ("hash_hi", Json::from((c.hash >> 32) as i64)),
-                        ("hash_lo", Json::from((c.hash & 0xffff_ffff) as i64)),
-                        ("len", Json::from(c.len as i64)),
-                    ];
-                    if let Some(src) = &c.source {
-                        f.push(("source", Json::str(src)));
-                    }
-                    if let Some(dev) = &c.device {
-                        f.push(("device", Json::str(dev)));
-                    }
-                    if let Some(seg) = &c.seg {
-                        f.push(("seg", Json::from(seg.seg as i64)));
-                        f.push(("off", Json::from(seg.offset as i64)));
-                    }
-                    Json::obj(f)
-                })),
-            ),
+            ("chunk_count", Json::from(self.chunks.len() as i64)),
+            ("table_digest_hi", Json::from((digest >> 32) as i64)),
+            ("table_digest_lo", Json::from((digest & 0xffff_ffff) as i64)),
+            ("chunk_table", Json::str(&hex_encode(&records))),
         ];
+        if !sources.is_empty() {
+            fields.push(("sources", Json::arr(sources.iter().map(|s| Json::str(s)))));
+        }
+        if !devices.is_empty() {
+            fields.push(("devices", Json::arr(devices.iter().map(|d| Json::str(d)))));
+        }
         if self.header_len > 0 {
             fields.push(("header_len", Json::from(self.header_len as i64)));
         }
@@ -263,7 +314,7 @@ impl DeltaSection {
         Json::obj(fields)
     }
 
-    fn from_json(v: &Json) -> Result<DeltaSection> {
+    fn from_json(v: &Json, version: i64) -> Result<DeltaSection> {
         let base = match v.opt("base") {
             Some(b) => Some(b.as_str()?.to_string()),
             None => None,
@@ -272,8 +323,38 @@ impl DeltaSection {
             Some(h) => h.as_i64()? as u64,
             None => 0,
         };
-        let chunks = v
-            .get("chunks")?
+        // Fail closed on mixed encodings: a v5 manifest must carry the
+        // binary table and nothing else; v2–v4 the JSON array.
+        let binary = version >= MANIFEST_BINARY_TABLE_VERSION;
+        if binary && v.opt("chunks").is_some() {
+            return Err(Error::Format(format!(
+                "manifest v{version} must encode its chunk table as `chunk_table`, \
+                 found a JSON `chunks` array"
+            )));
+        }
+        if !binary && v.opt("chunk_table").is_some() {
+            return Err(Error::Format(format!(
+                "manifest v{version} predates the binary chunk table, \
+                 found a `chunk_table` field"
+            )));
+        }
+        let chunks = if binary {
+            Self::chunks_from_binary(v)?
+        } else {
+            Self::chunks_from_json_array(v)?
+        };
+        Ok(DeltaSection {
+            base,
+            chain_len: v.get("chain_len")?.as_i64()? as u64,
+            chunk_size: v.get("chunk_size")?.as_i64()? as u64,
+            header_len,
+            chunks,
+        })
+    }
+
+    /// Legacy (v2–v4) chunk table: one JSON object per chunk.
+    fn chunks_from_json_array(v: &Json) -> Result<Vec<ChunkEntry>> {
+        v.get("chunks")?
             .as_array()?
             .iter()
             .map(|c| {
@@ -302,15 +383,143 @@ impl DeltaSection {
                     seg,
                 })
             })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(DeltaSection {
-            base,
-            chain_len: v.get("chain_len")?.as_i64()? as u64,
-            chunk_size: v.get("chunk_size")?.as_i64()? as u64,
-            header_len,
-            chunks,
-        })
+            .collect::<Result<Vec<_>>>()
     }
+
+    /// Parse the v5 binary chunk table, **fail-closed**: every invariant
+    /// is checked before any entry is returned — record count and exact
+    /// blob length, table digest, string-table indices, non-zero chunk
+    /// lengths, segment offsets past the segment header with no
+    /// arithmetic overflow, and per-segment extent monotonicity (no two
+    /// chunks of one segment may overlap). A corrupted table yields a
+    /// typed [`Error::Format`], never a partial or garbage table.
+    fn chunks_from_binary(v: &Json) -> Result<Vec<ChunkEntry>> {
+        let fail = |detail: String| Error::Format(format!("manifest v5 chunk table: {detail}"));
+        let count = v.get("chunk_count")?.as_i64()?;
+        if count < 0 {
+            return Err(fail(format!("negative chunk_count {count}")));
+        }
+        let strings = |key: &str| -> Result<Vec<String>> {
+            match v.opt(key) {
+                Some(arr) => arr
+                    .as_array()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect(),
+                None => Ok(Vec::new()),
+            }
+        };
+        let sources = strings("sources")?;
+        let devices = strings("devices")?;
+        let bytes = hex_decode(v.get("chunk_table")?.as_str()?)
+            .map_err(|e| fail(format!("{e}")))?;
+        let expect = (count as usize)
+            .checked_mul(CHUNK_RECORD_LEN)
+            .ok_or_else(|| fail(format!("chunk_count {count} overflows")))?;
+        if bytes.len() != expect {
+            return Err(fail(format!(
+                "blob is {} bytes, chunk_count {count} needs exactly {expect}",
+                bytes.len()
+            )));
+        }
+        let hi = v.get("table_digest_hi")?.as_i64()? as u64;
+        let lo = v.get("table_digest_lo")?.as_i64()? as u64;
+        let want = (hi << 32) | (lo & 0xffff_ffff);
+        let got = checksum64_slice(&bytes);
+        if got != want {
+            return Err(fail(format!("digest mismatch: computed {got:#x}, manifest {want:#x}")));
+        }
+        let u32_at = |rec: &[u8], off: usize| {
+            u32::from_le_bytes(rec[off..off + 4].try_into().unwrap())
+        };
+        let u64_at = |rec: &[u8], off: usize| {
+            u64::from_le_bytes(rec[off..off + 8].try_into().unwrap())
+        };
+        let lookup = |table: &[String], idx: u32, what: &str, i: usize| -> Result<Option<String>> {
+            match idx {
+                NO_INDEX => Ok(None),
+                n => table.get(n as usize).cloned().map(Some).ok_or_else(|| {
+                    fail(format!("record {i} {what} index {n} out of range ({})", table.len()))
+                }),
+            }
+        };
+        let mut chunks = Vec::with_capacity(count as usize);
+        // (source index, segment, offset, len) of every segment-addressed
+        // record, for the monotonicity check below.
+        let mut extents: Vec<(u32, u32, u64, u64)> = Vec::new();
+        for (i, rec) in bytes.chunks_exact(CHUNK_RECORD_LEN).enumerate() {
+            let hash = u64_at(rec, 0);
+            let len = u64_at(rec, 8);
+            if len == 0 {
+                return Err(fail(format!("record {i} has zero length")));
+            }
+            let src_idx = u32_at(rec, 16);
+            let source = lookup(&sources, src_idx, "source", i)?;
+            let device = lookup(&devices, u32_at(rec, 20), "device", i)?;
+            let seg_idx = u32_at(rec, 24);
+            let offset = u64_at(rec, 28);
+            let seg = if seg_idx == NO_INDEX {
+                if offset != 0 {
+                    return Err(fail(format!(
+                        "record {i} has no segment but a nonzero offset {offset}"
+                    )));
+                }
+                None
+            } else {
+                if offset < crate::checkpoint::delta::SEGMENT_HEADER_LEN as u64 {
+                    return Err(fail(format!(
+                        "record {i} segment offset {offset} lands inside the segment header"
+                    )));
+                }
+                if offset.checked_add(len).is_none() {
+                    return Err(fail(format!("record {i} segment extent overflows")));
+                }
+                extents.push((src_idx, seg_idx, offset, len));
+                Some(SegmentRef { seg: seg_idx, offset })
+            };
+            chunks.push(ChunkEntry { hash, len, source, device, seg });
+        }
+        // Segment extents must be monotone: sorted by offset within one
+        // (source, segment) file, consecutive extents never overlap.
+        extents.sort_unstable();
+        for w in extents.windows(2) {
+            let ((s0, g0, off0, len0), (s1, g1, off1, _)) = (w[0], w[1]);
+            if s0 == s1 && g0 == g1 && off0 + len0 > off1 {
+                return Err(fail(format!(
+                    "segment {g0} extents overlap: [{off0}, {}) and offset {off1}",
+                    off0 + len0
+                )));
+            }
+        }
+        Ok(chunks)
+    }
+}
+
+/// Lowercase hex encoding of the binary chunk table.
+fn hex_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        out.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    out
+}
+
+/// Strict inverse of [`hex_encode`]: even length, `[0-9a-fA-F]` only.
+fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(Error::Format(format!("odd hex length {}", s.len())));
+    }
+    let digit = |c: char| {
+        c.to_digit(16)
+            .ok_or_else(|| Error::Format(format!("invalid hex byte {c:?}")))
+    };
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let mut chars = s.chars();
+    while let (Some(a), Some(b)) = (chars.next(), chars.next()) {
+        out.push(((digit(a)? as u8) << 4) | digit(b)? as u8);
+    }
+    Ok(out)
 }
 
 impl CheckpointManifest {
@@ -449,7 +658,7 @@ impl CheckpointManifest {
             })
             .collect::<Result<Vec<_>>>()?;
         let delta = match v.opt("delta") {
-            Some(d) => Some(DeltaSection::from_json(d)?),
+            Some(d) => Some(DeltaSection::from_json(d, version)?),
             None => None,
         };
         Ok(CheckpointManifest {
@@ -492,6 +701,9 @@ impl CheckpointManifest {
         // drop any cached parse of the overwritten file (a same-second
         // rewrite could otherwise serve the stale parse)
         invalidate_cached(&path);
+        // a (re)published manifest may redefine what this checkpoint's
+        // segments mean — drop the serve layer's cached images too
+        crate::checkpoint::serve::invalidate_checkpoint(dir);
         Ok(path)
     }
 
@@ -820,6 +1032,121 @@ mod tests {
         let mut m = delta_manifest();
         m.delta.as_mut().unwrap().chunk_size = 0;
         assert!(m.validate().is_err());
+    }
+
+    /// Re-encode a v5 manifest after mutating the raw chunk-table bytes,
+    /// restoring a valid digest so the per-record checks are reached.
+    fn rewrite_table(m: &CheckpointManifest, f: impl FnOnce(&mut Vec<u8>)) -> Json {
+        let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
+        let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
+        let hex = match delta.get("chunk_table") {
+            Some(Json::Str(s)) => s.clone(),
+            other => panic!("chunk_table missing: {other:?}"),
+        };
+        let mut bytes = hex_decode(&hex).unwrap();
+        f(&mut bytes);
+        let digest = checksum64_slice(&bytes);
+        delta.insert("chunk_count".into(), Json::Int((bytes.len() / CHUNK_RECORD_LEN) as i64));
+        delta.insert("table_digest_hi".into(), Json::Int((digest >> 32) as i64));
+        delta.insert("table_digest_lo".into(), Json::Int((digest & 0xffff_ffff) as i64));
+        delta.insert("chunk_table".into(), Json::Str(hex_encode(&bytes)));
+        Json::Object(fields)
+    }
+
+    fn expect_v5_reject(j: &Json, needle: &str) {
+        match CheckpointManifest::from_json(j) {
+            Err(Error::Format(msg)) => {
+                assert!(msg.contains(needle), "error {msg:?} missing {needle:?}")
+            }
+            other => panic!("expected fail-closed v5 error with {needle:?}, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v5_digest_mismatch_fails_closed() {
+        let m = segment_manifest();
+        let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
+        let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
+        let hex = match delta.get("chunk_table") {
+            Some(Json::Str(s)) => s.clone(),
+            other => panic!("chunk_table missing: {other:?}"),
+        };
+        // flip one nibble without updating the recorded digest
+        let mut flipped = hex.into_bytes();
+        flipped[3] = if flipped[3] == b'0' { b'1' } else { b'0' };
+        delta.insert("chunk_table".into(), Json::Str(String::from_utf8(flipped).unwrap()));
+        expect_v5_reject(&Json::Object(fields), "digest mismatch");
+    }
+
+    #[test]
+    fn v5_rejects_wrong_table_kind() {
+        // a v5 manifest carrying the legacy JSON array must not parse
+        let m = delta_manifest();
+        let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
+        let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
+        let legacy_chunks = Json::arr(std::iter::once(Json::obj(vec![
+            ("hash_hi", Json::Int(0)),
+            ("hash_lo", Json::Int(0x11)),
+            ("len", Json::Int(64)),
+        ])));
+        delta.insert("chunks".into(), legacy_chunks);
+        expect_v5_reject(&Json::Object(fields.clone()), "found a JSON `chunks` array");
+        // and a v4 manifest carrying a binary table must not parse either
+        fields.insert("manifest_version".into(), Json::Int(4));
+        let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
+        delta.remove("chunks");
+        match CheckpointManifest::from_json(&Json::Object(fields)) {
+            Err(Error::Format(msg)) => {
+                assert!(msg.contains("predates the binary chunk table"), "{msg}")
+            }
+            other => panic!("expected v4/chunk_table rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v5_record_invariants_fail_closed() {
+        let m = segment_manifest();
+        // zero chunk length
+        let j = rewrite_table(&m, |b| b[8..16].fill(0));
+        expect_v5_reject(&j, "zero length");
+        // source index out of range (record 1 carries the only source)
+        let j = rewrite_table(&m, |b| {
+            b[CHUNK_RECORD_LEN + 16..CHUNK_RECORD_LEN + 20]
+                .copy_from_slice(&7u32.to_le_bytes());
+        });
+        expect_v5_reject(&j, "source index 7 out of range");
+        // segment offset inside the segment header
+        let j = rewrite_table(&m, |b| b[28..36].copy_from_slice(&17u64.to_le_bytes()));
+        expect_v5_reject(&j, "inside the segment header");
+        // segment extent overflowing u64
+        let j = rewrite_table(&m, |b| b[28..36].copy_from_slice(&u64::MAX.to_le_bytes()));
+        expect_v5_reject(&j, "overflows");
+        // no segment but a nonzero offset
+        let j = rewrite_table(&m, |b| {
+            b[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+            b[28..36].copy_from_slice(&4096u64.to_le_bytes());
+        });
+        expect_v5_reject(&j, "no segment but a nonzero offset");
+        // overlapping extents within one segment: move record 2 (seg 0,
+        // off 4196) back so it overlaps record 0's [4096, 4196)
+        let j = rewrite_table(&m, |b| {
+            let off = 2 * CHUNK_RECORD_LEN + 28;
+            b[off..off + 8].copy_from_slice(&4150u64.to_le_bytes());
+        });
+        expect_v5_reject(&j, "extents overlap");
+        // truncated blob vs chunk_count
+        let j = rewrite_table(&m, |b| {
+            b.truncate(b.len() - 1);
+        });
+        expect_v5_reject(&j, "manifest v5 chunk table");
+    }
+
+    #[test]
+    fn v5_hex_round_trips_and_rejects_junk() {
+        let bytes: Vec<u8> = (0u16..=255).map(|b| b as u8).collect();
+        assert_eq!(hex_decode(&hex_encode(&bytes)).unwrap(), bytes);
+        assert!(hex_decode("abc").is_err(), "odd length");
+        assert!(hex_decode("zz").is_err(), "non-hex digit");
     }
 
     #[test]

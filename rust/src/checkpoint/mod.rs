@@ -27,6 +27,10 @@
 //!   device-striped segment files through the shared runtime, reference
 //!   the rest; with chain compaction and segment-granular garbage
 //!   collection.
+//! * [`serve`] — restore-at-scale: concurrent multi-tenant restore
+//!   sessions over one shared runtime, with fair read scheduling, a
+//!   byte-budgeted segment cache (mmap zero-copy with buffered
+//!   fallback), and GC-wired invalidation.
 
 pub mod delta;
 pub mod engine;
@@ -35,6 +39,7 @@ pub mod load;
 pub mod manifest;
 pub mod pipeline;
 pub mod plan;
+pub mod serve;
 pub mod strategy;
 
 pub use delta::{CheckpointStrategy, DeltaCheckpointer, DeltaConfig, DeltaOutcome};
@@ -44,4 +49,5 @@ pub use load::load_checkpoint;
 pub use manifest::CheckpointManifest;
 pub use pipeline::PipelinedCheckpointer;
 pub use plan::{Partition, WritePlan};
+pub use serve::{CacheStats, RestoreService, RestoreSession, ServeConfig};
 pub use strategy::WriterStrategy;

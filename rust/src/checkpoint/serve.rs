@@ -1,0 +1,1141 @@
+//! Restore-at-scale serving: concurrent multi-tenant restores over one
+//! shared [`IoRuntime`], backed by a byte-budgeted segment read cache.
+//!
+//! FastPersist's write path assumes checkpoints are consumed as fast as
+//! they are produced — by fault-tolerant resume *and* by downstream
+//! serving (evaluation workers, inference warm-up) fanning in on the
+//! same step directories. The loader ([`crate::checkpoint::load`])
+//! restores one checkpoint at a time; this module turns it into a
+//! service:
+//!
+//! * **[`RestoreService`]** owns the shared pieces: the I/O runtime,
+//!   the [`SegmentCache`], and a fair scheduler. Each consumer takes a
+//!   per-tenant [`RestoreSession`] handle and calls
+//!   [`RestoreSession::restore`] from its own thread.
+//! * **Fair scheduling.** Disk [`ReadJob`]s from all sessions funnel
+//!   through one round-robin scheduler that dispatches at most
+//!   `reader_threads` jobs at a time, one job per tenant per rotation —
+//!   a 16-segment restore cannot monopolize the reader pool while a
+//!   one-segment tenant starves. The dispatch order is recorded
+//!   ([`RestoreService::dispatch_log`]) so fairness is testable.
+//! * **Segment read cache.** Immutable `.fpseg` files are admitted
+//!   whole once they have been read [`ServeConfig::admit_after`] times,
+//!   held under a byte budget with LRU eviction, and served zero-copy
+//!   via mmap ([`crate::io::device::MappedFile`]) with a buffered
+//!   `Vec<u8>` fallback. Cache service runs the **same validation** as
+//!   a disk read ([`ReadJob::serve_from`]): container prefix, run
+//!   bounds, and every chunk hash — a poisoned or stale image can never
+//!   reach the caller; it is dropped and the job falls back to disk.
+//! * **Invalidation.** Segment GC ([`crate::checkpoint::delta`]) and
+//!   manifest publication call [`invalidate_path`] /
+//!   [`invalidate_checkpoint`], which fan out over every live cache via
+//!   a process-wide registry, so a pruned or rewritten segment is
+//!   dropped promptly. Freshness is additionally validated per hit
+//!   against the file's `(mtime, length)`, and correctness per chunk
+//!   hash — three independent layers.
+//!
+//! Restores that race GC are safe by construction: a cached image
+//! serves the pre-prune bytes (still hash-verified against the
+//! manifest being restored), a dropped entry falls through to the disk
+//! path, and a deleted file there yields a clean error — never a torn
+//! mix.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant, SystemTime};
+
+use crate::checkpoint::load::{finish_restore, plan_restore_jobs, LoadedCheckpoint};
+use crate::checkpoint::manifest::CheckpointManifest;
+use crate::io::device::{DeviceMap, MappedFile};
+use crate::io::read::{ReadJob, ReadStats};
+use crate::io::runtime::{IoRuntime, ReadTicket};
+use crate::{Error, Result};
+
+/// Tuning knobs of one [`RestoreService`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Segment-cache byte budget; `0` disables the cache entirely
+    /// (every job goes to disk through the fair scheduler).
+    pub cache_bytes: u64,
+    /// Accesses to one segment file before it is admitted (fetched
+    /// whole into the cache). `1` admits on first touch.
+    pub admit_after: u32,
+    /// Serve admitted segments from an mmap of the file (zero-copy)
+    /// instead of a heap snapshot. Falls back to the heap snapshot
+    /// where mmap is unavailable.
+    pub mmap: bool,
+    /// Coalesce byte-adjacent chunk reads in the planned jobs
+    /// (mirrors [`crate::checkpoint::load::RestoreOptions::coalesce`]).
+    pub coalesce: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { cache_bytes: 0, admit_after: 2, mmap: true, coalesce: true }
+    }
+}
+
+impl ServeConfig {
+    /// Default config with the cache enabled at `bytes` budget.
+    pub fn with_cache(bytes: u64) -> ServeConfig {
+        ServeConfig { cache_bytes: bytes, ..ServeConfig::default() }
+    }
+}
+
+/// Point-in-time counters of one [`SegmentCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Segment jobs served from a cached image.
+    pub hits: u64,
+    /// Segment jobs that found no (valid) cached image.
+    pub misses: u64,
+    /// Segment files fetched whole into the cache.
+    pub admitted: u64,
+    /// Entries evicted by the byte-budget LRU.
+    pub evicted: u64,
+    /// Entries dropped by invalidation (GC hooks, stale validators,
+    /// or a failed cache service).
+    pub invalidated: u64,
+    /// Admissions refused (file over budget, every resident entry
+    /// pinned, or the fetched image failed the job's validation).
+    pub rejected: u64,
+    /// Bytes fetched from disk into cache images (admission traffic).
+    pub fetched_bytes: u64,
+    /// Bytes currently held by resident entries.
+    pub bytes_held: u64,
+    /// Resident entries.
+    pub entries: u64,
+    /// The configured byte budget.
+    pub budget: u64,
+}
+
+/// Backing storage of one cached segment image.
+enum SegmentBytes {
+    /// Zero-copy mapping of the (immutable) segment file.
+    Mapped(MappedFile),
+    /// Heap snapshot — the portable fallback.
+    Heap(Vec<u8>),
+}
+
+impl SegmentBytes {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            SegmentBytes::Mapped(m) => m.bytes(),
+            SegmentBytes::Heap(v) => v,
+        }
+    }
+}
+
+/// One resident cache entry: the whole segment file image plus the
+/// freshness validator captured when it was fetched.
+struct Entry {
+    bytes: Arc<SegmentBytes>,
+    len: u64,
+    mtime: SystemTime,
+    file_len: u64,
+    last_use: u64,
+    pins: u32,
+}
+
+struct CacheInner {
+    entries: HashMap<PathBuf, Entry>,
+    bytes_held: u64,
+    tick: u64,
+    /// Per-path access counts driving admission. Bounded: cleared
+    /// wholesale past [`ACCESS_MAP_CAP`] (admission restarts counting —
+    /// an availability knob, never a correctness one).
+    accesses: HashMap<PathBuf, u32>,
+}
+
+/// Upper bound on the admission-counting map before it is reset.
+const ACCESS_MAP_CAP: usize = 1 << 16;
+
+/// Decrements its entry's pin count on drop. Held across a cache
+/// service so LRU eviction cannot drop the bytes an in-flight restore
+/// is copying from.
+struct PinGuard<'a> {
+    cache: &'a SegmentCache,
+    path: PathBuf,
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        let mut inner = self.cache.inner.lock().unwrap();
+        if let Some(e) = inner.entries.get_mut(&self.path) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+}
+
+/// Whole-file segment read cache: access-count admission, byte-budget
+/// LRU eviction that skips pinned entries, `(mtime, length)` freshness
+/// validation per hit, and registry-fanned invalidation.
+pub struct SegmentCache {
+    budget: u64,
+    admit_after: u32,
+    mmap: bool,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    admitted: AtomicU64,
+    evicted: AtomicU64,
+    invalidated: AtomicU64,
+    rejected: AtomicU64,
+    fetched_bytes: AtomicU64,
+}
+
+impl SegmentCache {
+    fn new(cfg: &ServeConfig) -> SegmentCache {
+        SegmentCache {
+            budget: cfg.cache_bytes,
+            admit_after: cfg.admit_after.max(1),
+            mmap: cfg.mmap,
+            inner: Mutex::new(CacheInner {
+                entries: HashMap::new(),
+                bytes_held: 0,
+                tick: 0,
+                accesses: HashMap::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            invalidated: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            fetched_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> CacheStats {
+        let (bytes_held, entries) = {
+            let inner = self.inner.lock().unwrap();
+            (inner.bytes_held, inner.entries.len() as u64)
+        };
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            invalidated: self.invalidated.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            fetched_bytes: self.fetched_bytes.load(Ordering::Relaxed),
+            bytes_held,
+            entries,
+            budget: self.budget,
+        }
+    }
+
+    /// `true` when `entry` still describes the file at `path` — the
+    /// per-hit freshness validator. A missing or rewritten file (new
+    /// length or mtime) invalidates the image.
+    fn still_valid(path: &Path, entry: &Entry) -> bool {
+        match std::fs::metadata(path) {
+            Ok(m) => {
+                m.len() == entry.file_len
+                    && m.modified().unwrap_or(SystemTime::UNIX_EPOCH) == entry.mtime
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Hit path: a valid resident image for `path`, pinned against
+    /// eviction until the returned guard drops.
+    fn lookup(&self, path: &Path) -> Option<(Arc<SegmentBytes>, PinGuard<'_>)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let valid = inner.entries.get(path).map(|e| Self::still_valid(path, e));
+        match valid {
+            Some(true) => {
+                let e = inner.entries.get_mut(path).expect("entry just checked");
+                e.last_use = tick;
+                e.pins += 1;
+                let bytes = Arc::clone(&e.bytes);
+                Some((bytes, PinGuard { cache: self, path: path.to_path_buf() }))
+            }
+            Some(false) => {
+                // stale image: drop it now (an Arc held by a concurrent
+                // reader keeps serving the old — still hash-verified —
+                // bytes; this entry just stops being findable)
+                let e = inner.entries.remove(path).expect("entry just checked");
+                inner.bytes_held -= e.len;
+                self.invalidated.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Miss path: count the access and, at the admission threshold,
+    /// fetch the whole file. Returns the fetched image (not yet
+    /// resident — [`SegmentCache::insert`] follows a successful serve).
+    fn note_miss_and_maybe_fetch(
+        &self,
+        path: &Path,
+    ) -> Option<(Arc<SegmentBytes>, SystemTime, u64)> {
+        let count = {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.accesses.len() >= ACCESS_MAP_CAP {
+                inner.accesses.clear();
+            }
+            let c = inner.accesses.entry(path.to_path_buf()).or_insert(0);
+            *c = c.saturating_add(1);
+            *c
+        };
+        if count < self.admit_after {
+            return None;
+        }
+        let meta = std::fs::metadata(path).ok()?;
+        let file_len = meta.len();
+        if file_len == 0 || file_len > self.budget {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        let bytes = self.fetch(path)?;
+        Some((bytes, mtime, file_len))
+    }
+
+    /// Read the whole file: mmap when configured and available, heap
+    /// snapshot otherwise.
+    fn fetch(&self, path: &Path) -> Option<Arc<SegmentBytes>> {
+        if self.mmap {
+            if let Ok(Some(m)) = MappedFile::map(path) {
+                self.fetched_bytes.fetch_add(m.bytes().len() as u64, Ordering::Relaxed);
+                return Some(Arc::new(SegmentBytes::Mapped(m)));
+            }
+        }
+        let v = std::fs::read(path).ok()?;
+        self.fetched_bytes.fetch_add(v.len() as u64, Ordering::Relaxed);
+        Some(Arc::new(SegmentBytes::Heap(v)))
+    }
+
+    /// Make a fetched image resident, evicting LRU **unpinned** entries
+    /// until it fits the budget. Refused (counted in `rejected`) when
+    /// the pinned residue leaves no room — bytes held never exceed the
+    /// budget, and a pinned entry is never the victim.
+    fn insert(&self, path: PathBuf, bytes: Arc<SegmentBytes>, mtime: SystemTime, file_len: u64) {
+        let len = bytes.as_slice().len() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.entries.contains_key(&path) {
+            return; // raced with another admission of the same file
+        }
+        while inner.bytes_held + len > self.budget {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = inner.entries.remove(&k).expect("victim just found");
+                    inner.bytes_held -= e.len;
+                    self.evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                None => {
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+        }
+        inner.tick += 1;
+        let last_use = inner.tick;
+        inner.bytes_held += len;
+        inner
+            .entries
+            .insert(path, Entry { bytes, len, mtime, file_len, last_use, pins: 0 });
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Serve `job` from the cache if possible. `Err(job)` hands the job
+    /// back for the disk path — on a plain miss, a refused admission,
+    /// or a cached/fetched image that failed the job's validation
+    /// (which also drops the offending entry).
+    fn try_serve(&self, job: ReadJob) -> std::result::Result<ReadStats, ReadJob> {
+        if self.budget == 0 {
+            return Err(job);
+        }
+        if let Some((bytes, _pin)) = self.lookup(&job.path) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            match job.serve_from(bytes.as_slice()) {
+                Ok(stats) => return Ok(stats),
+                Err(_) => {
+                    // poisoned or outdated image: drop it and let the
+                    // disk read decide (it re-verifies every chunk)
+                    drop(_pin);
+                    self.invalidate(&job.path);
+                    return Err(job);
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let Some((bytes, mtime, file_len)) = self.note_miss_and_maybe_fetch(&job.path) else {
+            return Err(job);
+        };
+        // Correctness gate before residency: the image must satisfy
+        // this job (prefix, bounds, chunk hashes) to be cached at all.
+        match job.serve_from(bytes.as_slice()) {
+            Ok(stats) => {
+                self.insert(job.path.clone(), bytes, mtime, file_len);
+                Ok(stats)
+            }
+            Err(_) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(job)
+            }
+        }
+    }
+
+    /// Drop the entry for `path` (regardless of pins — concurrent
+    /// readers keep their `Arc` to the old image) and its admission
+    /// count.
+    fn invalidate(&self, path: &Path) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.entries.remove(path) {
+            inner.bytes_held -= e.len;
+            self.invalidated.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.accesses.remove(path);
+    }
+
+    /// Drop every entry belonging to the checkpoint at `dir`: paths
+    /// under `dir` itself and paths under its device-side
+    /// `fpck-<tag>` directories.
+    fn invalidate_dir(&self, dir: &Path, tag: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let matches = |p: &Path| {
+            p.starts_with(dir) || p.iter().any(|c| c.to_str() == Some(tag))
+        };
+        let victims: Vec<PathBuf> =
+            inner.entries.keys().filter(|p| matches(p)).cloned().collect();
+        for k in victims {
+            let e = inner.entries.remove(&k).expect("victim just listed");
+            inner.bytes_held -= e.len;
+            self.invalidated.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.accesses.retain(|p, _| !matches(p));
+    }
+}
+
+/// Process-wide registry of live caches, so GC and manifest publication
+/// can invalidate across every service without owning one.
+fn registry() -> &'static Mutex<Vec<Weak<SegmentCache>>> {
+    static REG: OnceLock<Mutex<Vec<Weak<SegmentCache>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Drop the cached image of the segment file at `path` in every live
+/// cache. Called by segment GC right after a `.fpseg` is removed or
+/// rewritten. Paths are compared verbatim (same caveat as the manifest
+/// LRU); the per-hit `(mtime, length)` validator and the per-chunk
+/// hashes independently stop a differently-spelled stale path from
+/// serving wrong bytes.
+pub fn invalidate_path(path: &Path) {
+    let mut reg = registry().lock().unwrap();
+    reg.retain(|w| match w.upgrade() {
+        Some(c) => {
+            c.invalidate(path);
+            true
+        }
+        None => false,
+    });
+}
+
+/// Drop every cached image belonging to the checkpoint at `dir` (its
+/// own segment files and its device-side `fpck-<tag>` directories) in
+/// every live cache. Called when a checkpoint directory is pruned and
+/// when a manifest is (re)published into `dir`.
+pub fn invalidate_checkpoint(dir: &Path) {
+    let tag = DeviceMap::checkpoint_tag(dir);
+    let mut reg = registry().lock().unwrap();
+    reg.retain(|w| match w.upgrade() {
+        Some(c) => {
+            c.invalidate_dir(dir, &tag);
+            true
+        }
+        None => false,
+    });
+}
+
+/// One queued disk job awaiting fair dispatch.
+struct Pending {
+    job: ReadJob,
+    tx: Sender<Result<ReadStats>>,
+}
+
+/// One dispatched job whose ticket is being polled by the pump.
+struct Inflight {
+    ticket: ReadTicket,
+    tx: Sender<Result<ReadStats>>,
+}
+
+struct SchedState {
+    /// Per-session FIFO queues of undispatched jobs.
+    queues: BTreeMap<u64, VecDeque<Pending>>,
+    /// Round-robin rotation of session ids with queued work.
+    order: VecDeque<u64>,
+    /// Dispatched, incomplete jobs (bounded by the reader-thread cap).
+    inflight: Vec<Inflight>,
+    /// Session id per dispatch, in dispatch order (fairness
+    /// instrumentation; capped at [`DISPATCH_LOG_CAP`]).
+    dispatch_log: Vec<u64>,
+}
+
+/// Upper bound on the recorded dispatch log.
+const DISPATCH_LOG_CAP: usize = 1 << 16;
+
+/// Cooperative fair scheduler: sessions enqueue their jobs and then
+/// pump the shared state — completing finished tickets and dispatching
+/// one job per session with work, round-robin, while fewer than
+/// `reader_threads` jobs are in flight. There is no dedicated scheduler
+/// thread; any waiting session drives progress for all of them.
+struct FairScheduler {
+    state: Mutex<SchedState>,
+}
+
+impl FairScheduler {
+    fn new() -> FairScheduler {
+        FairScheduler {
+            state: Mutex::new(SchedState {
+                queues: BTreeMap::new(),
+                order: VecDeque::new(),
+                inflight: Vec::new(),
+                dispatch_log: Vec::new(),
+            }),
+        }
+    }
+
+    /// One pump round: retire completed tickets, then dispatch up to
+    /// the reader-thread cap, one job per session per rotation.
+    fn pump(&self, runtime: &IoRuntime) {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let mut i = 0;
+        while i < st.inflight.len() {
+            match st.inflight[i].ticket.try_wait() {
+                Some(res) => {
+                    let inf = st.inflight.swap_remove(i);
+                    let _ = inf.tx.send(res);
+                }
+                None => i += 1,
+            }
+        }
+        let cap = runtime.reader_threads().max(1);
+        while st.inflight.len() < cap {
+            let rotation = st.order.len();
+            let mut dispatched = false;
+            for _ in 0..rotation {
+                let Some(sid) = st.order.pop_front() else { break };
+                let Some(q) = st.queues.get_mut(&sid) else { continue };
+                let Some(p) = q.pop_front() else {
+                    st.queues.remove(&sid);
+                    continue;
+                };
+                if q.is_empty() {
+                    st.queues.remove(&sid);
+                } else {
+                    st.order.push_back(sid);
+                }
+                let ticket = runtime.submit_read(p.job);
+                st.inflight.push(Inflight { ticket, tx: p.tx });
+                if st.dispatch_log.len() < DISPATCH_LOG_CAP {
+                    st.dispatch_log.push(sid);
+                }
+                dispatched = true;
+                break;
+            }
+            if !dispatched {
+                break;
+            }
+        }
+    }
+
+    /// Run `jobs` for session `sid` through the shared rotation; blocks
+    /// (pumping) until **all** of them complete, so the caller's stream
+    /// buffer is no longer referenced whichever way this returns.
+    /// Returns the merged stats, or the first error.
+    fn run(&self, runtime: &IoRuntime, sid: u64, jobs: Vec<ReadJob>) -> Result<ReadStats> {
+        let total = jobs.len();
+        if total == 0 {
+            return Ok(ReadStats::default());
+        }
+        let (tx, rx): (Sender<Result<ReadStats>>, Receiver<Result<ReadStats>>) = mpsc::channel();
+        {
+            let mut st = self.state.lock().unwrap();
+            let had_work = st.queues.contains_key(&sid);
+            let q = st.queues.entry(sid).or_default();
+            for job in jobs {
+                q.push_back(Pending { job, tx: tx.clone() });
+            }
+            if !had_work {
+                st.order.push_back(sid);
+            }
+        }
+        drop(tx);
+        let mut stats = ReadStats::default();
+        let mut first_err = None;
+        let mut done = 0usize;
+        while done < total {
+            self.pump(runtime);
+            match rx.try_recv() {
+                Ok(res) => {
+                    done += 1;
+                    match res {
+                        Ok(s) => stats.merge(&s),
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                Err(TryRecvError::Empty) => std::thread::sleep(Duration::from_micros(200)),
+                Err(TryRecvError::Disconnected) => {
+                    return Err(Error::Internal(
+                        "restore scheduler dropped queued read jobs".into(),
+                    ));
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(stats),
+        }
+    }
+}
+
+/// The concurrent multi-tenant restore service. Construct once around a
+/// shared runtime, hand a [`RestoreSession`] to each consumer.
+pub struct RestoreService {
+    runtime: Arc<IoRuntime>,
+    cache: Arc<SegmentCache>,
+    sched: FairScheduler,
+    cfg: ServeConfig,
+    next_session: AtomicU64,
+}
+
+impl RestoreService {
+    /// Build a service over `runtime` and register its cache for
+    /// process-wide invalidation.
+    pub fn new(runtime: Arc<IoRuntime>, cfg: ServeConfig) -> Arc<RestoreService> {
+        let cache = Arc::new(SegmentCache::new(&cfg));
+        {
+            let mut reg = registry().lock().unwrap();
+            reg.retain(|w| w.strong_count() > 0);
+            reg.push(Arc::downgrade(&cache));
+        }
+        Arc::new(RestoreService {
+            runtime,
+            cache,
+            sched: FairScheduler::new(),
+            cfg,
+            next_session: AtomicU64::new(0),
+        })
+    }
+
+    /// A per-tenant handle. Sessions are cheap; take one per consumer
+    /// thread.
+    pub fn session(self: &Arc<Self>, tenant: impl Into<String>) -> RestoreSession {
+        RestoreSession {
+            service: Arc::clone(self),
+            tenant: tenant.into(),
+            id: self.next_session.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// The shared runtime restores execute on.
+    pub fn runtime(&self) -> &Arc<IoRuntime> {
+        &self.runtime
+    }
+
+    /// Segment-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Session id per dispatched disk job, in dispatch order — the
+    /// fairness record: within any window where several sessions had
+    /// queued work, their ids interleave instead of running back to
+    /// back.
+    pub fn dispatch_log(&self) -> Vec<u64> {
+        self.sched.state.lock().unwrap().dispatch_log.clone()
+    }
+}
+
+/// Per-tenant restore handle of a [`RestoreService`].
+pub struct RestoreSession {
+    service: Arc<RestoreService>,
+    tenant: String,
+    id: u64,
+}
+
+impl RestoreSession {
+    /// The tenant label this session was created with.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// The session id recorded in the service's dispatch log.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Restore the checkpoint at `dir`: segment jobs are served from
+    /// the cache when possible, everything else goes to disk through
+    /// the service's fair scheduler. Bit-identical to
+    /// [`crate::checkpoint::load::load_checkpoint`] — same planner,
+    /// same folded verification, same stream digest — whatever mix of
+    /// cache and disk served the bytes.
+    pub fn restore(&self, dir: &Path) -> Result<LoadedCheckpoint> {
+        let svc = &self.service;
+        let t0 = Instant::now();
+        let manifest = CheckpointManifest::load_cached(dir)?;
+        let dest = svc.runtime.alloc_stream(manifest.total_len as usize);
+        let jobs = plan_restore_jobs(dir, &manifest, &dest, svc.cfg.coalesce, &svc.runtime)?;
+        let mut stats = ReadStats::default();
+        let mut disk = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            // Only segment-store files are cacheable: they are immutable
+            // and shared across the chain. Partition and legacy chunk
+            // files restore through the disk path.
+            if job.label == "segment" {
+                match svc.cache.try_serve(job) {
+                    Ok(s) => stats.merge(&s),
+                    Err(job) => disk.push(job),
+                }
+            } else {
+                disk.push(job);
+            }
+        }
+        let disk_stats = svc.sched.run(&svc.runtime, self.id, disk)?;
+        stats.merge(&disk_stats);
+        finish_restore(dest, (*manifest).clone(), stats, t0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+    use crate::io::engine::{scratch_dir, IoConfig};
+    use crate::io::read::{plan_runs, ReadPart, StreamBuffer};
+    use crate::prop_assert;
+    use crate::tensor::{DType, Tensor, TensorStore};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap as Map;
+
+    fn runtime() -> Arc<IoRuntime> {
+        IoRuntime::shared(IoConfig::fastpersist().microbench())
+    }
+
+    fn store(seed: u64, nbytes: usize) -> TensorStore {
+        let mut data = vec![0u8; nbytes];
+        Rng::new(seed).fill_bytes(&mut data);
+        let mut s = TensorStore::new();
+        s.push(Tensor::new("payload", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+        s
+    }
+
+    fn mutate(s: &TensorStore, frac: f64, tag: u64) -> TensorStore {
+        let t = s.get("payload").unwrap();
+        let mut data = t.data.to_vec();
+        let span = (data.len() as f64 * frac) as usize;
+        let start = (tag as usize * 97) % data.len().saturating_sub(span.max(1)).max(1);
+        for (i, b) in data[start..(start + span).min(data.len())].iter_mut().enumerate() {
+            *b ^= (tag as u8).wrapping_add(i as u8) | 1;
+        }
+        let mut out = TensorStore::new();
+        out.push(Tensor::new("payload", DType::U8, vec![data.len()], data).unwrap()).unwrap();
+        out
+    }
+
+    /// Write a base + `n - 1` deltas under `parent`, returning the step
+    /// dirs and the final state of each step.
+    fn write_chain(
+        parent: &Path,
+        rt: &Arc<IoRuntime>,
+        n: usize,
+    ) -> (Vec<PathBuf>, Vec<TensorStore>) {
+        let mut ck = DeltaCheckpointer::new(
+            Arc::clone(rt),
+            DeltaConfig { chunk_size: 4096, max_chain: 16, segment_bytes: 16 << 10 },
+        );
+        let mut dirs = Vec::new();
+        let mut states = Vec::new();
+        let mut s = store(7, 96 * 1024);
+        for step in 0..n {
+            if step > 0 {
+                s = mutate(&s, 0.2, step as u64);
+            }
+            let dir = parent.join(format!("step-{:08}", step + 1));
+            let mut extra = Map::new();
+            extra.insert("step".to_string(), crate::util::json::Json::Int((step + 1) as i64));
+            ck.write(&s, extra, &dir).unwrap();
+            dirs.push(dir);
+            states.push(s.clone());
+        }
+        (dirs, states)
+    }
+
+    #[test]
+    fn serve_restores_bit_identical_and_warms_the_cache() {
+        let base = scratch_dir("serve-basic").unwrap();
+        let rt = runtime();
+        let (dirs, states) = write_chain(&base, &rt, 3);
+        let svc = RestoreService::new(Arc::clone(&rt), ServeConfig::with_cache(64 << 20));
+        let session = svc.session("eval-0");
+        // cold pass: all disk
+        for (dir, want) in dirs.iter().zip(&states) {
+            let got = session.restore(dir).unwrap();
+            assert!(got.store.content_eq(want), "cold restore must be bit-identical");
+        }
+        let cold = svc.cache_stats();
+        assert_eq!(cold.hits, 0, "first pass cannot hit");
+        assert!(cold.misses > 0);
+        // second + third passes: admission threshold (2) reached, hits
+        for _ in 0..2 {
+            for (dir, want) in dirs.iter().zip(&states) {
+                let got = session.restore(dir).unwrap();
+                assert!(got.store.content_eq(want), "warm restore must be bit-identical");
+            }
+        }
+        let warm = svc.cache_stats();
+        assert!(warm.hits > 0, "admitted segments must serve from cache: {warm:?}");
+        assert!(warm.admitted > 0);
+        assert!(warm.bytes_held <= warm.budget);
+        assert_eq!(
+            warm.entries,
+            warm.admitted - warm.evicted - warm.invalidated,
+            "entry lifecycle must reconcile: {warm:?}"
+        );
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn zero_budget_disables_the_cache() {
+        let base = scratch_dir("serve-nocache").unwrap();
+        let rt = runtime();
+        let (dirs, states) = write_chain(&base, &rt, 2);
+        let svc = RestoreService::new(Arc::clone(&rt), ServeConfig::default());
+        let session = svc.session("t");
+        for _ in 0..3 {
+            let got = session.restore(&dirs[1]).unwrap();
+            assert!(got.store.content_eq(&states[1]));
+        }
+        let s = svc.cache_stats();
+        assert_eq!((s.hits, s.admitted, s.entries, s.bytes_held), (0, 0, 0, 0), "{s:?}");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn invalidation_drops_entries_and_refetch_reverifies() {
+        let base = scratch_dir("serve-invalidate").unwrap();
+        let rt = runtime();
+        let (dirs, states) = write_chain(&base, &rt, 2);
+        let svc = RestoreService::new(
+            Arc::clone(&rt),
+            ServeConfig { admit_after: 1, ..ServeConfig::with_cache(64 << 20) },
+        );
+        let session = svc.session("t");
+        session.restore(&dirs[1]).unwrap();
+        let admitted = svc.cache_stats();
+        assert!(admitted.entries > 0, "admit_after=1 must admit on first pass");
+        // checkpoint-level invalidation drops every entry of the chain
+        for dir in &dirs {
+            invalidate_checkpoint(dir);
+        }
+        let dropped = svc.cache_stats();
+        assert_eq!(dropped.entries, 0, "{dropped:?}");
+        assert!(dropped.invalidated >= admitted.entries);
+        // refetch after the drop: served bytes still hash-verify
+        let got = session.restore(&dirs[1]).unwrap();
+        assert!(got.store.content_eq(&states[1]), "refetched segments must verify");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn poisoned_cache_image_falls_back_to_disk() {
+        // Corrupt the cached image (not the file): the hit must fail
+        // the folded hash check, drop the entry, and the disk path must
+        // serve the true bytes.
+        let base = scratch_dir("serve-poison").unwrap();
+        let rt = runtime();
+        let (dirs, states) = write_chain(&base, &rt, 2);
+        let svc = RestoreService::new(
+            Arc::clone(&rt),
+            ServeConfig { admit_after: 1, mmap: false, ..ServeConfig::with_cache(64 << 20) },
+        );
+        let session = svc.session("t");
+        session.restore(&dirs[1]).unwrap();
+        // poison every resident heap image in place
+        {
+            let mut inner = svc.cache.inner.lock().unwrap();
+            for e in inner.entries.values_mut() {
+                let poisoned: Vec<u8> = e
+                    .bytes
+                    .as_slice()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| if i % 4097 == 0 { b ^ 0x55 } else { *b })
+                    .collect();
+                e.bytes = Arc::new(SegmentBytes::Heap(poisoned));
+            }
+        }
+        let got = session.restore(&dirs[1]).unwrap();
+        assert!(got.store.content_eq(&states[1]), "poisoned cache must not reach the caller");
+        let s = svc.cache_stats();
+        assert!(s.invalidated > 0, "poisoned entries must be dropped: {s:?}");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn scheduler_interleaves_tenants_round_robin() {
+        let base = scratch_dir("serve-fair").unwrap();
+        let rt = Arc::new(IoRuntime::new(crate::io::runtime::IoRuntimeConfig {
+            io: IoConfig::fastpersist().microbench(),
+            reader_threads: 1, // serialize dispatch so the log is exact
+            ..crate::io::runtime::IoRuntimeConfig::default()
+        }));
+        let svc = RestoreService::new(Arc::clone(&rt), ServeConfig::default());
+        let sched = &svc.sched;
+        // two sessions, three one-run jobs each, enqueued before any
+        // pump: with one reader thread the rotation must alternate
+        let payload = vec![9u8; 4096];
+        let path = base.join("f.bin");
+        std::fs::write(&path, &payload).unwrap();
+        let mk_jobs = |n: usize, dest: &Arc<StreamBuffer>, off: usize| -> Vec<ReadJob> {
+            (0..n)
+                .map(|i| ReadJob {
+                    path: path.clone(),
+                    dest: Arc::clone(dest),
+                    runs: plan_runs(
+                        vec![ReadPart {
+                            file_off: 0,
+                            dest_off: (off + i * 4096) as u64,
+                            len: 4096,
+                        }],
+                        true,
+                    ),
+                    checks: Vec::new(),
+                    coalesced: 0,
+                    expect_file_len: Some(4096),
+                    prefix_check: None,
+                    kind: None,
+                    label: "partition",
+                })
+                .collect()
+        };
+        let dest = rt.alloc_stream(6 * 4096);
+        let jobs_a = mk_jobs(3, &dest, 0);
+        let jobs_b = mk_jobs(3, &dest, 3 * 4096);
+        // enqueue both sessions before the first pump so the rotation
+        // is fully deterministic, then drive the pump directly
+        let (tx_a, rx_a) = mpsc::channel();
+        let (tx_b, rx_b) = mpsc::channel();
+        {
+            let mut st = sched.state.lock().unwrap();
+            let qa = st.queues.entry(1).or_default();
+            for job in jobs_a {
+                qa.push_back(Pending { job, tx: tx_a.clone() });
+            }
+            st.order.push_back(1);
+            let qb = st.queues.entry(2).or_default();
+            for job in jobs_b {
+                qb.push_back(Pending { job, tx: tx_b.clone() });
+            }
+            st.order.push_back(2);
+        }
+        drop(tx_a);
+        drop(tx_b);
+        let mut done = 0;
+        while done < 6 {
+            sched.pump(&rt);
+            if let Ok(res) = rx_a.try_recv() {
+                res.unwrap();
+                done += 1;
+            }
+            if let Ok(res) = rx_b.try_recv() {
+                res.unwrap();
+                done += 1;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        // one reader thread, one dispatch per pump: strict alternation
+        assert_eq!(svc.dispatch_log(), vec![1, 2, 1, 2, 1, 2]);
+        drop(dest);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn prop_cache_budget_and_pins_hold_under_access_traces() {
+        // Seeded access-trace shrinker over the raw cache: random
+        // lookup/admit/pin/invalidate sequences must keep (1) bytes
+        // held <= budget, (2) pinned entries resident across evictions,
+        // (3) the entry lifecycle counters reconciled.
+        let base = scratch_dir("serve-prop").unwrap();
+        // 4 segment-sized files the traces draw from
+        let files: Vec<PathBuf> = (0..4)
+            .map(|i| {
+                let p = base.join(format!("seg-{i}.fpseg"));
+                let mut data = vec![0u8; 3000 + i * 1000];
+                Rng::new(i as u64).fill_bytes(&mut data);
+                std::fs::write(&p, &data).unwrap();
+                p
+            })
+            .collect();
+        crate::prop::forall("segment cache invariants", 64, |g| {
+            let budget = g.u64(3000, 9000);
+            let cache = SegmentCache::new(&ServeConfig {
+                cache_bytes: budget,
+                admit_after: 1,
+                mmap: false,
+                coalesce: true,
+            });
+            let nops = g.usize(1, 40);
+            let mut pins: Vec<(PathBuf, (Arc<SegmentBytes>, PinGuard<'_>))> = Vec::new();
+            for _ in 0..nops {
+                let f = &files[g.usize(0, files.len() - 1)];
+                match g.usize(0, 3) {
+                    0 => {
+                        // access: hit-or-admit, pin held transiently
+                        if cache.lookup(f).is_none() {
+                            if let Some((bytes, mtime, len)) = cache.note_miss_and_maybe_fetch(f)
+                            {
+                                cache.insert(f.clone(), bytes, mtime, len);
+                            }
+                        }
+                    }
+                    1 => {
+                        // pin: hold a guard across later operations
+                        if let Some(hit) = cache.lookup(f) {
+                            pins.push((f.clone(), hit));
+                        }
+                    }
+                    2 => {
+                        // unpin the oldest held guard
+                        if !pins.is_empty() {
+                            pins.remove(0);
+                        }
+                    }
+                    _ => cache.invalidate(f),
+                }
+                let s = cache.stats();
+                prop_assert!(
+                    g,
+                    s.bytes_held <= s.budget,
+                    "bytes held {} over budget {}",
+                    s.bytes_held,
+                    s.budget
+                );
+                prop_assert!(
+                    g,
+                    s.entries == s.admitted - s.evicted - s.invalidated,
+                    "lifecycle counters diverged: {s:?}"
+                );
+                // a pinned entry must stay resident unless explicitly
+                // invalidated; eviction alone may never drop it —
+                // verify by checking every held pin still resolves or
+                // was invalidated (never evicted): re-lookup through
+                // the map directly
+                let inner = cache.inner.lock().unwrap();
+                for (path, (bytes, _guard)) in &pins {
+                    if let Some(e) = inner.entries.get(path) {
+                        prop_assert!(g, e.pins > 0, "held guard but zero pin count");
+                        prop_assert!(
+                            g,
+                            Arc::ptr_eq(&e.bytes, bytes),
+                            "pinned entry was replaced under its guard"
+                        );
+                    }
+                    // absent is legal only via invalidate (op 3); the
+                    // eviction loop filters pins > 0, which the
+                    // ptr_eq/pin checks above pin down for residents
+                }
+                drop(inner);
+            }
+            drop(pins);
+            true
+        });
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn prop_eviction_never_drops_a_pinned_entry() {
+        // Directed shrinker: fill the cache, pin one entry, then admit
+        // files that force eviction — the pinned entry must survive
+        // every admission wave, and over-budget admissions must be
+        // refused rather than evict it.
+        let base = scratch_dir("serve-pin").unwrap();
+        let files: Vec<PathBuf> = (0..6)
+            .map(|i| {
+                let p = base.join(format!("seg-{i}.fpseg"));
+                std::fs::write(&p, vec![i as u8; 2048]).unwrap();
+                p
+            })
+            .collect();
+        crate::prop::forall("pinned entries survive eviction", 64, |g| {
+            let cache = SegmentCache::new(&ServeConfig {
+                cache_bytes: 4096, // room for exactly two 2048-byte files
+                admit_after: 1,
+                mmap: false,
+                coalesce: true,
+            });
+            let admit = |f: &PathBuf| {
+                if let Some((bytes, mtime, len)) = cache.note_miss_and_maybe_fetch(f) {
+                    cache.insert(f.clone(), bytes, mtime, len);
+                }
+            };
+            let pinned = &files[g.usize(0, files.len() - 1)];
+            admit(pinned);
+            let hit = cache.lookup(pinned);
+            prop_assert!(g, hit.is_some(), "freshly admitted entry must hit");
+            let _guard = hit;
+            // admission pressure: every other file, several rounds
+            for _ in 0..g.usize(2, 10) {
+                let f = &files[g.usize(0, files.len() - 1)];
+                if f != pinned {
+                    admit(f);
+                }
+                let inner = cache.inner.lock().unwrap();
+                prop_assert!(
+                    g,
+                    inner.entries.contains_key(pinned),
+                    "eviction dropped a pinned entry"
+                );
+                prop_assert!(g, inner.bytes_held <= 4096, "budget exceeded under pressure");
+                drop(inner);
+            }
+            true
+        });
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn stale_entry_is_dropped_when_the_file_changes() {
+        let base = scratch_dir("serve-stale").unwrap();
+        let path = base.join("seg-0.fpseg");
+        std::fs::write(&path, vec![1u8; 4096]).unwrap();
+        let cache = SegmentCache::new(&ServeConfig {
+            cache_bytes: 1 << 20,
+            admit_after: 1,
+            mmap: false,
+            coalesce: true,
+        });
+        if let Some((bytes, mtime, len)) = cache.note_miss_and_maybe_fetch(&path) {
+            cache.insert(path.clone(), bytes, mtime, len);
+        }
+        assert!(cache.lookup(&path).is_some());
+        // rewrite with a different length: the validator must reject
+        std::fs::write(&path, vec![2u8; 5000]).unwrap();
+        assert!(cache.lookup(&path).is_none(), "stale image must not hit");
+        let s = cache.stats();
+        assert_eq!(s.entries, 0);
+        assert!(s.invalidated > 0);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+}

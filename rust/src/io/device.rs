@@ -389,6 +389,112 @@ impl DeviceMap {
     }
 }
 
+/// A read-only memory-mapped view of an immutable file — the zero-copy
+/// serving path of the restore cache ([`crate::checkpoint::serve`]).
+///
+/// Segment stores are written once and only ever replaced wholesale (GC
+/// rewrites publish a new file via rename), so a mapping taken between
+/// invalidations observes a stable byte image. The mapping is dropped
+/// with the value; [`MappedFile::map`] returns `Ok(None)` where mmap is
+/// unavailable (non-Linux builds, or empty files, which cannot be
+/// mapped) so callers fall back to buffered reads.
+#[cfg(target_os = "linux")]
+pub struct MappedFile {
+    ptr: *mut u8,
+    len: usize,
+}
+
+#[cfg(target_os = "linux")]
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE over an immutable file;
+// the raw pointer is only ever exposed as a shared `&[u8]`.
+unsafe impl Send for MappedFile {}
+#[cfg(target_os = "linux")]
+// SAFETY: see the Send impl — all access is read-only.
+unsafe impl Sync for MappedFile {}
+
+#[cfg(target_os = "linux")]
+impl MappedFile {
+    /// Map the whole of `path` read-only. `Ok(None)` when the file is
+    /// empty (zero-length mappings are invalid); errors bubble up for
+    /// missing files or a refused mmap.
+    pub fn map(path: &Path) -> Result<Option<MappedFile>> {
+        use std::os::unix::io::AsRawFd;
+        extern "C" {
+            fn mmap(
+                addr: *mut u8,
+                len: usize,
+                prot: i32,
+                flags: i32,
+                fd: i32,
+                offset: i64,
+            ) -> *mut u8;
+        }
+        const PROT_READ: i32 = 1;
+        const MAP_PRIVATE: i32 = 2;
+        const MAP_FAILED: isize = -1;
+        let file = std::fs::File::open(path)
+            .map_err(|e| Error::Format(format!("mmap {}: {e}", path.display())))?;
+        let len = file
+            .metadata()
+            .map_err(|e| Error::Format(format!("mmap {}: {e}", path.display())))?
+            .len() as usize;
+        if len == 0 {
+            return Ok(None);
+        }
+        // SAFETY: fd is open for the duration of the call; the kernel
+        // validates every argument and reports failure via MAP_FAILED.
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr as isize == MAP_FAILED {
+            return Err(Error::Format(format!(
+                "mmap {}: {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            )));
+        }
+        Ok(Some(MappedFile { ptr, len }))
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len come from a successful mmap and stay valid
+        // until Drop; the mapping is private, so no writer mutates it.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        extern "C" {
+            fn munmap(addr: *mut u8, len: usize) -> i32;
+        }
+        // SAFETY: exact (ptr, len) pair returned by mmap, unmapped once.
+        unsafe {
+            let _ = munmap(self.ptr, self.len);
+        }
+    }
+}
+
+/// mmap is Linux-only in this build; other platforms always take the
+/// buffered fallback.
+#[cfg(not(target_os = "linux"))]
+pub struct MappedFile;
+
+#[cfg(not(target_os = "linux"))]
+impl MappedFile {
+    /// Always `Ok(None)`: no mapping support, callers fall back.
+    pub fn map(_path: &Path) -> Result<Option<MappedFile>> {
+        Ok(None)
+    }
+
+    /// Unreachable — `map` never constructs a value on this platform.
+    pub fn bytes(&self) -> &[u8] {
+        &[]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -502,6 +608,24 @@ mod tests {
         assert_eq!(m.capability_dir(&routed), m.roots()[0]);
         let loose = base.join("ck").join("part.fpck");
         assert_eq!(m.capability_dir(&loose), base.join("ck"));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn mapped_file_serves_exact_bytes() {
+        let base = scratch_dir("devmap-mmap").unwrap();
+        let path = base.join("seg.bin");
+        let payload: Vec<u8> = (0..8192u32).map(|i| (i * 31 + 5) as u8).collect();
+        std::fs::write(&path, &payload).unwrap();
+        match MappedFile::map(&path).unwrap() {
+            Some(m) => assert_eq!(m.bytes(), &payload[..], "mapping must mirror the file"),
+            None => assert!(cfg!(not(target_os = "linux")), "linux must map a non-empty file"),
+        }
+        // empty files cannot be mapped — callers must fall back
+        let empty = base.join("empty.bin");
+        std::fs::write(&empty, b"").unwrap();
+        assert!(MappedFile::map(&empty).unwrap().is_none());
+        assert!(MappedFile::map(&base.join("missing.bin")).is_err());
         std::fs::remove_dir_all(&base).unwrap();
     }
 

@@ -446,6 +446,84 @@ impl ReadJob {
         Ok(stats)
     }
 
+    /// Execute this job against an in-memory image of the source file
+    /// (the serve layer's segment cache / mmap path —
+    /// [`crate::checkpoint::serve`]) instead of the filesystem. Applies
+    /// the *same* validation as [`ReadJob::execute`]: expected file
+    /// length, container-prefix check, run bounds, and the folded chunk
+    /// hashes — a poisoned cache entry fails exactly like a corrupt
+    /// file. Issues no preads; `bytes` counts the copied payload.
+    pub(crate) fn serve_from(&self, src: &[u8]) -> Result<ReadStats> {
+        let t0 = Instant::now();
+        if let Some(expect) = self.expect_file_len {
+            if src.len() as u64 != expect {
+                return Err(self.fail(format_args!(
+                    "is {} bytes, manifest says {expect}",
+                    src.len()
+                )));
+            }
+        }
+        let mut stats = ReadStats {
+            jobs: 1,
+            runs: self.runs.len() as u64,
+            coalesced: self.coalesced,
+            ..ReadStats::default()
+        };
+        if let Some(pc) = &self.prefix_check {
+            let prefix = src
+                .get(..pc.len)
+                .ok_or_else(|| self.fail("cached image shorter than the container header"))?;
+            (pc.check)(prefix).map_err(|e| self.fail(e))?;
+        }
+        for run in &self.runs {
+            run.dest_off
+                .checked_add(run.len)
+                .filter(|&e| e <= self.dest.len() as u64)
+                .ok_or_else(|| self.fail("read run past the end of the stream buffer"))?;
+            let src_end = run
+                .file_off
+                .checked_add(run.len)
+                .filter(|&e| e <= src.len() as u64)
+                .ok_or_else(|| {
+                    self.fail(format_args!(
+                        "read run [{}..) past the cached image ({} bytes)",
+                        run.file_off,
+                        src.len()
+                    ))
+                })?;
+            // SAFETY: runs of one restore are planned disjoint (the
+            // manifest tables tile the stream), in bounds per the
+            // validation above.
+            let dst = unsafe { self.dest.slice_mut(run.dest_off as usize, run.len as usize) };
+            dst.copy_from_slice(&src[run.file_off as usize..src_end as usize]);
+            stats.bytes += run.len;
+        }
+        for c in &self.checks {
+            c.dest_off
+                .checked_add(c.len)
+                .filter(|&e| e <= self.dest.len() as u64)
+                .ok_or_else(|| {
+                    self.fail(format_args!(
+                        "chunk {} check past the end of the stream buffer",
+                        c.index
+                    ))
+                })?;
+            // SAFETY: in bounds per the check above, and the chunk range
+            // lies inside this job's own runs — all copied above.
+            let got =
+                checksum64_slice(unsafe { self.dest.slice(c.dest_off as usize, c.len as usize) });
+            if got != c.hash {
+                return Err(self.fail(format_args!(
+                    "chunk {} hash mismatch: computed {got:#x}, manifest {:#x}",
+                    c.index, c.hash
+                )));
+            }
+            stats.chunks_verified += 1;
+        }
+        stats.elapsed = t0.elapsed();
+        Ok(stats)
+    }
+
     /// Traditional payload path: positioned reads in `step`-sized
     /// pieces straight into the destination slices (no staging bounce —
     /// the destination *is* the final resting place).
@@ -856,6 +934,75 @@ mod tests {
         let out = StreamBuffer::into_vec(dest).unwrap();
         assert_eq!(out.as_slice(), &data[3..3 + 100_001]);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn serve_from_matches_disk_execution_and_fails_closed() {
+        let rt = fallback_runtime();
+        let mut data = vec![0u8; 50_000];
+        Rng::new(11).fill_bytes(&mut data);
+        let parts = vec![part(5_000, 0, 20_000), part(40_000, 20_000, 10_000)];
+        let checks: Vec<ChunkCheck> = parts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ChunkCheck {
+                index: i,
+                dest_off: p.dest_off,
+                len: p.len,
+                hash: checksum64_slice(
+                    &data[p.file_off as usize..(p.file_off + p.len) as usize],
+                ),
+            })
+            .collect();
+        let dest = rt.alloc_stream(30_000);
+        let job = ReadJob {
+            path: PathBuf::from("/cached/seg-000000.fpseg"),
+            dest: Arc::clone(&dest),
+            runs: plan_runs(parts, true),
+            checks,
+            coalesced: 0,
+            expect_file_len: Some(50_000),
+            prefix_check: None,
+            kind: None,
+            label: "segment",
+        };
+        let stats = job.serve_from(&data).unwrap();
+        assert_eq!(stats.bytes, 30_000);
+        assert_eq!(stats.preads, 0, "cache service issues no disk reads");
+        assert_eq!(stats.chunks_verified, 2);
+        drop(job);
+        let out = StreamBuffer::into_vec(dest).unwrap();
+        assert_eq!(&out[..20_000], &data[5_000..25_000]);
+        assert_eq!(&out[20_000..], &data[40_000..]);
+        // a poisoned image fails the folded hash check, not silently
+        let dest = rt.alloc_stream(10);
+        let job = ReadJob {
+            path: PathBuf::from("/cached/seg-000000.fpseg"),
+            dest,
+            runs: vec![part(0, 0, 10)],
+            checks: vec![ChunkCheck {
+                index: 0,
+                dest_off: 0,
+                len: 10,
+                hash: checksum64_slice(&data[..10]),
+            }],
+            coalesced: 0,
+            expect_file_len: None,
+            prefix_check: None,
+            kind: None,
+            label: "segment",
+        };
+        let mut poisoned = data[..10].to_vec();
+        poisoned[3] ^= 0x40;
+        match job.serve_from(&poisoned) {
+            Err(Error::Format(msg)) => assert!(msg.contains("hash mismatch"), "{msg}"),
+            other => panic!("expected poisoned-cache rejection, got {other:?}"),
+        }
+        // a truncated image is rejected by the bounds check
+        match job.serve_from(&data[..5]) {
+            Err(Error::Format(msg)) => assert!(msg.contains("past the cached image"), "{msg}"),
+            other => panic!("expected truncated-image rejection, got {other:?}"),
+        }
     }
 
     #[test]

@@ -246,6 +246,9 @@ struct RuntimeCore {
     /// single-copy load allocates exactly one stream of `total_len`.
     stream_allocs: AtomicU64,
     stream_alloc_bytes: AtomicU64,
+    /// Read jobs submitted but not yet completed — read-concurrency
+    /// observability for the serve layer and tests.
+    reads_inflight: AtomicU64,
 }
 
 impl RuntimeCore {
@@ -324,6 +327,7 @@ impl IoRuntime {
             drain,
             stream_allocs: AtomicU64::new(0),
             stream_alloc_bytes: AtomicU64::new(0),
+            reads_inflight: AtomicU64::new(0),
         });
         let writers = ThreadPool::new(cfg.writer_threads.max(1), "ckpt-writer");
         let readers = ThreadPool::new(cfg.reader_threads.max(1), "ckpt-reader");
@@ -431,13 +435,24 @@ impl IoRuntime {
     pub fn submit_read(&self, job: ReadJob) -> ReadTicket {
         let (tx, rx) = mpsc::channel();
         let core = Arc::clone(&self.core);
+        core.reads_inflight.fetch_add(1, Ordering::Relaxed);
         self.readers.execute(move || {
             let ctx = ReadCtx { devices: &core.devices, staging: &core.staging };
             let result = job.execute(&core.io, &ctx);
             drop(job); // release the stream buffer before signaling
+            core.reads_inflight.fetch_sub(1, Ordering::Relaxed);
             let _ = tx.send(result);
         });
         ReadTicket { rx }
+    }
+
+    /// Read jobs submitted to the reader pool whose results have not
+    /// yet been delivered — how saturated the pool is right now. The
+    /// serve layer ([`crate::checkpoint::serve`]) bounds its own
+    /// dispatch at [`IoRuntime::reader_threads`]; this counter makes
+    /// that concurrency observable.
+    pub fn reads_inflight(&self) -> u64 {
+        self.core.reads_inflight.load(Ordering::Relaxed)
     }
 }
 

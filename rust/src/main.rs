@@ -120,6 +120,8 @@ fn train_spec(name: &'static str) -> ArgSpec {
         .opt("gc-occupancy", "segment-GC rewrite threshold in [0,1]: demoted \
                               chunk stores below this live-byte occupancy are \
                               sparsely rewritten", "0.5")
+        .opt("serve-cache-bytes", "resume-restore segment cache budget \
+                                   (0 = restore without a cache)", "0")
         .opt("log-every", "progress print interval", "10")
 }
 
@@ -187,6 +189,7 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
         lazy_staging_bytes: parsed.get_size("ckpt-staging")?,
         lazy_max_generations: parsed.get_usize("ckpt-gens")?,
         gc_occupancy: parsed.get_f64("gc-occupancy")?.clamp(0.0, 1.0),
+        serve_cache_bytes: parsed.get_size("serve-cache-bytes")?,
         log_every: parsed.get_usize("log-every")? as u64,
     };
     let mut trainer = if resume {
@@ -206,6 +209,16 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
                 r.gbps(),
             ),
             None => println!("resumed at step {}", t.state.step),
+        }
+        let (hits, misses) =
+            (t.recorder.total("ckpt_cache_hits"), t.recorder.total("ckpt_cache_misses"));
+        if hits + misses > 0.0 {
+            println!(
+                "serve cache: {} hits / {} misses ({} budget)",
+                hits as u64,
+                misses as u64,
+                human(t.cfg.serve_cache_bytes),
+            );
         }
         t
     } else {

@@ -129,6 +129,13 @@ pub struct TrainerConfig {
     /// rewritten during pruning. 0.0 never rewrites; 1.0 rewrites on
     /// any dead chunk.
     pub gc_occupancy: f64,
+    /// Serve-layer segment cache budget for resume restores
+    /// (`--serve-cache-bytes`): when nonzero, [`Trainer::resume`]
+    /// restores through a [`crate::checkpoint::serve::RestoreService`]
+    /// whose segment cache holds up to this many bytes, and the cache
+    /// hit/miss counters land in the `ckpt_cache_*` recorder metrics.
+    /// 0 restores directly through the loader (no cache).
+    pub serve_cache_bytes: u64,
     /// Print a progress line every n steps (0 = silent).
     pub log_every: u64,
 }
@@ -155,6 +162,7 @@ impl TrainerConfig {
             lazy_staging_bytes: LazyConfig::default().staging_bytes,
             lazy_max_generations: LazyConfig::default().max_generations,
             gc_occupancy: delta::GcPolicy::default().occupancy,
+            serve_cache_bytes: 0,
             log_every: 0,
         }
     }
@@ -260,7 +268,18 @@ impl Trainer {
                 "no checkpoint found under {}",
                 cfg.ckpt_dir.display()
             )))?;
-        let loaded = load_checkpoint_with(&latest, &runtime, RestoreOptions::default())?;
+        let mut cache_stats = None;
+        let loaded = if cfg.serve_cache_bytes > 0 {
+            let service = crate::checkpoint::serve::RestoreService::new(
+                Arc::clone(&runtime),
+                crate::checkpoint::serve::ServeConfig::with_cache(cfg.serve_cache_bytes),
+            );
+            let loaded = service.session("trainer-resume").restore(&latest)?;
+            cache_stats = Some(service.cache_stats());
+            loaded
+        } else {
+            load_checkpoint_with(&latest, &runtime, RestoreOptions::default())?
+        };
         let state = TrainState::from_store(&artifact, &loaded.store, &loaded.header.extra)?;
         let mut trainer = Self::with_state(manifest, cfg, state, Some(runtime), true)?;
         let report = RestoreReport {
@@ -273,6 +292,10 @@ impl Trainer {
         trainer.recorder.record("ckpt_read_preads", report.stats.preads as f64);
         trainer.recorder.record("ckpt_read_coalesced", report.stats.coalesced as f64);
         trainer.recorder.record("ckpt_restore_s", report.latency.as_secs_f64());
+        if let Some(cs) = cache_stats {
+            trainer.recorder.record("ckpt_cache_hits", cs.hits as f64);
+            trainer.recorder.record("ckpt_cache_misses", cs.misses as f64);
+        }
         trainer.restore = Some(report);
         Ok(trainer)
     }

@@ -1,0 +1,223 @@
+#!/usr/bin/env python3
+"""Deterministic generator for the committed v5 fixture chain.
+
+Mirrors `rust/tests/fixtures/v4` (same logical tensor states, same FPSG
+segment packing) in the **manifest v5** encoding: the chunk table is a
+hex-encoded blob of fixed-width 36-byte little-endian records plus
+`sources`/`devices` string tables and a checksum64 table digest,
+replacing v4's JSON `chunks` array. Byte-for-byte it reproduces what
+the current Rust writer (`DeltaCheckpointer`, chunk_size 4096, single
+device) emits — see `docs/FORMATS.md` for the record layout. The
+Rust-side regeneration path is the ignored `generate_v5_fixture` test
+in `rust/tests/format_compat.rs`; this script exists so the fixture can
+be rebuilt without a Rust toolchain, and `format_compat.rs` verifies
+the result reloads bit-identically.
+
+Usage:  python3 gen_v5_fixture.py   (from this directory)
+"""
+
+import json
+import os
+import struct
+
+MASK = (1 << 64) - 1
+MUL = 0x9E3779B97F4A7C15
+CHUNK = 4096
+SEGMENT_HEADER_LEN = 4096
+HEADER_PAD = 256
+PREAMBLE_LEN = 16
+NO_INDEX = 0xFFFFFFFF
+RECORD = struct.Struct("<QQIIIQ")  # hash, len, src_idx, dev_idx, seg, off
+
+
+def checksum64(data: bytes) -> int:
+    """Port of serialize::format::checksum64_slice."""
+    h = 0xCBF29CE484222325
+    n = len(data) - len(data) % 8
+    for i in range(0, n, 8):
+        (word,) = struct.unpack_from("<Q", data, i)
+        h = ((h ^ word) * MUL) & MASK
+        h ^= h >> 29
+    rem = data[n:]
+    if rem:
+        carry = 0
+        for i, b in enumerate(rem):
+            carry |= b << (8 * i)
+        word = carry | (len(rem) << 56)
+        h = ((h ^ word) * MUL) & MASK
+        h ^= h >> 29
+    return h
+
+
+def combine_digests(header_digest: int, data_digest: int) -> int:
+    """Port of serialize::format::combine_digests."""
+    h = 0x84222325_CBF29CE4
+    h = ((h ^ header_digest) * MUL) & MASK
+    h ^= h >> 29
+    h = ((h ^ data_digest) * MUL) & MASK
+    h ^= h >> 29
+    return h
+
+
+def expected_data(mutated: bool) -> bytes:
+    nbytes = 6 * 4096 + 777
+    data = bytearray((i * 131 + 7) % 256 for i in range(nbytes))
+    if mutated:
+        start = nbytes // 3
+        n = nbytes // 10
+        for i in range(start, start + n):
+            data[i] ^= 0x5A
+    return bytes(data)
+
+
+def encode_header(data: bytes, step: int) -> bytes:
+    """FormatHeader::encode — compact JSON with BTreeMap-sorted keys,
+    space-padded so preamble+JSON is a HEADER_PAD multiple."""
+    digest = checksum64(data)
+    header = {
+        "data_len": len(data),
+        "digest_hi": digest >> 32,
+        "digest_lo": digest & 0xFFFFFFFF,
+        "extra": {"step": step},
+        "tensors": [{"dtype": "u8", "name": "w", "offset": 0, "shape": [len(data)]}],
+        "version": 1,
+    }
+    js = json.dumps(header, sort_keys=True, separators=(",", ":")).encode()
+    total = PREAMBLE_LEN + len(js)
+    total += -total % HEADER_PAD
+    hlen = total - PREAMBLE_LEN
+    out = b"FPCK" + struct.pack("<IQ", 1, hlen) + js
+    return out + b" " * (total - len(out))
+
+
+def grid_of(header: bytes, data: bytes):
+    """Header-split chunk grid: chunk 0 = header, rest tile the data."""
+    chunks = [(checksum64(header), len(header))]
+    for off in range(0, len(data), CHUNK):
+        piece = data[off : off + CHUNK]
+        chunks.append((checksum64(piece), len(piece)))
+    return chunks
+
+
+def encode_segment_header(index: int, chunks: int, payload_len: int) -> bytes:
+    out = b"FPSG" + struct.pack("<III", 1, index, chunks) + struct.pack("<Q", payload_len)
+    return out + b"\0" * (SEGMENT_HEADER_LEN - len(out))
+
+
+def encode_chunk_table(entries):
+    """The v5 binary chunk table: one RECORD per chunk plus the
+    first-appearance-interned string tables it indexes into.
+
+    `entries` is a list of (hash, len, source|None, device|None,
+    seg|None, off). Returns (hex_blob, digest, sources, devices)."""
+    sources, devices, records = [], [], bytearray()
+
+    def intern(table, s):
+        if s is None:
+            return NO_INDEX
+        if s not in table:
+            table.append(s)
+        return table.index(s)
+
+    for h, l, src, dev, seg, off in entries:
+        records += RECORD.pack(
+            h,
+            l,
+            intern(sources, src),
+            intern(devices, dev),
+            NO_INDEX if seg is None else seg,
+            0 if seg is None else off,
+        )
+    return bytes(records).hex(), checksum64(bytes(records)), sources, devices
+
+
+def write_checkpoint(dirname: str, step: int, mutated: bool, prev):
+    """Write one checkpoint the way DeltaCheckpointer::write does on a
+    single device: dirty chunks packed into one segment (data chunks in
+    stream order, header chunk last), fully resolved v5 manifest.
+    Returns this checkpoint's resolved table for the next diff."""
+    data = expected_data(mutated)
+    header = encode_header(data, step)
+    stream = header + data
+    grid = grid_of(header, data)
+    digest = combine_digests(checksum64(header), checksum64(data))
+
+    offsets = []
+    off = 0
+    for _, length in grid:
+        offsets.append(off)
+        off += length
+    dirty = [
+        i
+        for i, (h, l) in enumerate(grid)
+        if prev is None or prev[i][:2] != (h, l)
+    ]
+    # segment packing order: data chunks first, header chunk last
+    order = [i for i in dirty if i != 0] + [i for i in dirty if i == 0]
+    seg_ref, payload, ranges = {}, 0, []
+    for i in order:
+        seg_ref[i] = SEGMENT_HEADER_LEN + payload
+        s, e = offsets[i], offsets[i] + grid[i][1]
+        if ranges and ranges[-1][1] == s:
+            ranges[-1] = (ranges[-1][0], e)
+        else:
+            ranges.append((s, e))
+        payload += grid[i][1]
+
+    os.makedirs(dirname, exist_ok=True)
+    with open(os.path.join(dirname, "seg-000000.fpseg"), "wb") as f:
+        f.write(encode_segment_header(0, len(order), payload))
+        for s, e in ranges:
+            f.write(stream[s:e])
+
+    name = os.path.basename(dirname)
+    resolved, entries = [], []
+    for i, (h, l) in enumerate(grid):
+        if i in seg_ref:
+            # local chunk: no source (this dir), packed into segment 0
+            entries.append((h, l, None, None, 0, seg_ref[i]))
+            resolved.append((h, l, name, 0, seg_ref[i]))
+        else:
+            _, _, src, seg, soff = prev[i]
+            entries.append((h, l, src, None, seg, soff))
+            resolved.append((h, l, src, seg, soff))
+    table_hex, table_digest, sources, devices = encode_chunk_table(entries)
+    delta = {
+        "chain_len": 0 if prev is None else 1,
+        "chunk_size": CHUNK,
+        "chunk_count": len(entries),
+        "table_digest_hi": table_digest >> 32,
+        "table_digest_lo": table_digest & 0xFFFFFFFF,
+        "chunk_table": table_hex,
+        "header_len": len(header),
+    }
+    if sources:
+        delta["sources"] = sources
+    if devices:
+        delta["devices"] = devices
+    if prev is not None:
+        delta["base"] = "step-00000001"
+    manifest = {
+        "manifest_version": 5,
+        "total_len": len(stream),
+        "digest_hi": digest >> 32,
+        "digest_lo": digest & 0xFFFFFFFF,
+        "step": step,
+        "partitions": [],
+        "delta": delta,
+    }
+    with open(os.path.join(dirname, "checkpoint.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return resolved
+
+
+def main():
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "v5")
+    base = write_checkpoint(os.path.join(root, "step-00000001"), 1, False, None)
+    write_checkpoint(os.path.join(root, "step-00000002"), 2, True, base)
+    print(f"wrote v5 fixture under {root}")
+
+
+if __name__ == "__main__":
+    main()

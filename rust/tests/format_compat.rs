@@ -3,16 +3,26 @@
 //! `rust/tests/fixtures/v3/` holds a checked-in two-checkpoint delta
 //! chain in the **manifest v3** layout (uniform whole-stream chunk
 //! grid, one `chunk-NNNNNN.fpck` file per chunk) exactly as written by
-//! the pre-segment-store code, and `rust/tests/fixtures/v4/` the same
+//! the pre-segment-store code, `rust/tests/fixtures/v4/` the same
 //! logical chain in the **manifest v4** segment-store layout (FPSG
-//! segment files, header-split grid). The current ReadRuntime-based
-//! loader must keep reloading both bit-identically — see
+//! segment files, header-split grid, JSON `chunks` array), and
+//! `rust/tests/fixtures/v5/` the same chain again with the **manifest
+//! v5** binary chunk table (hex blob of 36-byte LE records + interned
+//! string tables + table digest). The current ReadRuntime-based loader
+//! must keep reloading all three bit-identically — see
 //! `docs/FORMATS.md` for the version matrix.
 //!
-//! The v4 fixture was produced by the `generate_v4_fixture` test below
-//! (`cargo test --test format_compat -- --ignored generate_v4_fixture`);
-//! regenerate it only when the *writer* intentionally changes layout,
-//! never to make the reader pass.
+//! The v5 fixture was produced by the `generate_v5_fixture` test below
+//! (`cargo test --test format_compat -- --ignored generate_v5_fixture`);
+//! the v3/v4 fixtures are frozen artifacts of older writers,
+//! regenerable only via the committed `gen_v4_fixture.py` /
+//! `gen_v5_fixture.py` scripts. Regenerate a fixture only when the
+//! *writer* intentionally changes layout, never to make the reader
+//! pass.
+//!
+//! The corruption fuzz runs 29 scattered byte flips per target by
+//! default; set `FASTPERSIST_FUZZ_FULL=1` (the nightly CI sweep) for a
+//! denser 257-flip pass.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -32,6 +42,10 @@ fn fixture_dir() -> PathBuf {
 
 fn fixture_dir_v4() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/v4")
+}
+
+fn fixture_dir_v5() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/v5")
 }
 
 fn runtime() -> Arc<IoRuntime> {
@@ -118,6 +132,36 @@ fn v4_segment_checkpoints_reload_bit_identically() {
 }
 
 #[test]
+fn v5_binary_table_checkpoints_reload_bit_identically() {
+    let dir = fixture_dir_v5();
+    assert!(dir.join("step-00000001").is_dir(), "fixture missing: {dir:?}");
+    let rt = runtime();
+
+    // the base: all chunks local, table decoded from the binary blob
+    let loaded =
+        load_checkpoint_with(&dir.join("step-00000001"), &rt, RestoreOptions::default()).unwrap();
+    assert!(loaded.store.content_eq(&expected_store(false)), "v5 base reload diverged");
+    assert_eq!(loaded.header.extra["step"], Json::Int(1));
+    let delta = loaded.manifest.delta.as_ref().expect("v5 base carries a delta section");
+    assert!(delta.header_len > 0, "v5 manifests use the header-split grid");
+    assert!(delta.chunks.iter().all(|c| c.seg.is_some()), "v5 chunks carry segment refs");
+    assert!(delta.chunks.iter().all(|c| c.source.is_none()), "base chunks are all local");
+    assert_eq!(loaded.stats.chunks_verified as usize, delta.chunks.len());
+
+    // the delta link: inherited chunks carry interned source names
+    let (linked, header, manifest) = load_checkpoint(&dir.join("step-00000002"), &rt).unwrap();
+    assert!(linked.content_eq(&expected_store(true)), "v5 delta reload diverged");
+    assert_eq!(header.extra["step"], Json::Int(2));
+    let delta = manifest.delta.as_ref().unwrap();
+    assert_eq!(delta.chain_len, 1);
+    assert_eq!(delta.base.as_deref(), Some("step-00000001"));
+    assert!(
+        delta.chunks.iter().any(|c| c.source.as_deref() == Some("step-00000001")),
+        "delta must inherit chunks through the sources table"
+    );
+}
+
+#[test]
 fn v3_manifest_does_not_seed_a_v4_chain() {
     // A restarted writer pointed at a v3 checkpoint must fall back to
     // base mode (its uniform grid cannot seed the header-split segment
@@ -138,15 +182,28 @@ fn fixture_manifests_report_their_versions() {
     let v = Json::parse(&text).unwrap();
     assert_eq!(v.get("manifest_version").unwrap().as_i64().unwrap(), 3);
     let _ = CheckpointManifest::from_json(&v).unwrap();
-    // the v4 fixture is exactly what the current writer emits
+    // the v4 fixture is frozen at the last JSON-chunk-array version
     let text =
         std::fs::read_to_string(fixture_dir_v4().join("step-00000002/checkpoint.json")).unwrap();
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(v.get("manifest_version").unwrap().as_i64().unwrap(), 4);
+    let _ = CheckpointManifest::from_json(&v).unwrap();
+    // the v5 fixture is exactly what the current writer emits
+    let text =
+        std::fs::read_to_string(fixture_dir_v5().join("step-00000002/checkpoint.json")).unwrap();
     let v = Json::parse(&text).unwrap();
     assert_eq!(
         v.get("manifest_version").unwrap().as_i64().unwrap(),
         fastpersist::checkpoint::manifest::MANIFEST_VERSION
     );
-    let _ = CheckpointManifest::from_json(&v).unwrap();
+    assert_eq!(fastpersist::checkpoint::manifest::MANIFEST_VERSION, 5);
+    let parsed = CheckpointManifest::from_json(&v).unwrap();
+    assert!(
+        v.get("delta").unwrap().opt("chunk_table").is_some(),
+        "v5 fixtures must carry the binary chunk table"
+    );
+    assert!(v.get("delta").unwrap().opt("chunks").is_none());
+    let _ = parsed;
 }
 
 // ------------------------------------------------------- corruption fuzz
@@ -182,7 +239,10 @@ fn fuzz_file_fails_closed(src: &Path, rel: &str, step: &str, expected: &TensorSt
     for cut in [0, 1, n / 4, n / 2, n - 1] {
         cases.push((format!("truncate-{cut}"), original[..cut].to_vec()));
     }
-    let flips = 29.min(n);
+    // nightly CI sets FASTPERSIST_FUZZ_FULL=1 for a denser sweep
+    let budget: usize =
+        if std::env::var("FASTPERSIST_FUZZ_FULL").is_ok_and(|v| v == "1") { 257 } else { 29 };
+    let flips = budget.min(n);
     for i in 0..flips {
         let pos = i * n / flips;
         let mut m = original.clone();
@@ -250,6 +310,35 @@ fn corrupted_v4_segment_fails_closed() {
 }
 
 #[test]
+fn corrupted_v5_manifest_fails_closed() {
+    // the checkpoint.json is dominated by the hex chunk table, so the
+    // scattered flips land throughout the binary records: corrupted
+    // hashes, lengths, string-table indices, segment offsets, the
+    // digest fields, and the hex encoding itself must all be caught
+    fuzz_file_fails_closed(
+        &fixture_dir_v5(),
+        "step-00000002/checkpoint.json",
+        "step-00000002",
+        &expected_store(true),
+        "v5-manifest",
+    );
+}
+
+#[test]
+fn corrupted_v5_segment_fails_closed() {
+    let src = fixture_dir_v5();
+    let seg = std::fs::read_dir(src.join("step-00000001"))
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "fpseg"))
+        .expect("v5 fixture has a segment file");
+    let rel = format!("step-00000001/{}", seg.file_name().unwrap().to_str().unwrap());
+    fuzz_file_fails_closed(&src, &rel, "step-00000001", &expected_store(false), "v5-seg-base");
+    fuzz_file_fails_closed(&src, &rel, "step-00000002", &expected_store(true), "v5-seg-delta");
+}
+
+#[test]
 fn v2_manifest_reads_and_fuzzes_closed() {
     // synthesize a v2 chain: a full (partitioned) checkpoint whose
     // manifest is re-stamped v2, the oldest version this build reads
@@ -289,15 +378,18 @@ fn v2_manifest_reads_and_fuzzes_closed() {
 /// Fixture generator — run by hand, never in CI:
 ///
 /// ```text
-/// cargo test --test format_compat -- --ignored generate_v4_fixture
+/// cargo test --test format_compat -- --ignored generate_v5_fixture
 /// ```
 ///
 /// Writes the deterministic two-checkpoint chain of [`expected_store`]
-/// into `rust/tests/fixtures/v4/` with the *current* (v4) writer.
+/// into `rust/tests/fixtures/v5/` with the *current* (v5) writer. The
+/// frozen v3/v4 fixtures come from older writers; rebuild them only via
+/// the committed `gen_v4_fixture.py` script (the current writer no
+/// longer emits those versions).
 #[test]
-#[ignore = "regenerates the committed v4 fixture"]
-fn generate_v4_fixture() {
-    let dir = fixture_dir_v4();
+#[ignore = "regenerates the committed v5 fixture"]
+fn generate_v5_fixture() {
+    let dir = fixture_dir_v5();
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
     let mut ck = DeltaCheckpointer::new(

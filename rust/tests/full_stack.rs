@@ -32,7 +32,10 @@ fn cfg(model: &str, dir: PathBuf) -> TrainerConfig {
         grad_accum: 1,
         seed: 42,
         keep_last: 0,
+        lazy_staging_bytes: 256 << 20,
+        lazy_max_generations: 2,
         gc_occupancy: 0.5,
+        serve_cache_bytes: 0,
         log_every: 0,
     }
 }

@@ -1,23 +1,32 @@
 #!/usr/bin/env python3
 """Validate the schema of a benchkit JSON file (default: BENCH_fig11.json).
 
-CI runs this after the fig11 bench smoke to guarantee the artifact the
-trajectory tooling consumes keeps its shape:
+CI runs this after each bench smoke to guarantee the artifacts the
+trajectory tooling consumes keep their shape. Common rules for every
+``BENCH_<tag>.json``:
 
-  * top-level object with bench == "fig11" and a non-empty "groups" list
-  * every group has a name and a non-empty "results" list
+  * top-level object with bench == <tag> (inferred from the filename)
+    and a non-empty "groups" list
+  * every group has a title (benchkit emits "title"; legacy "name" is
+    accepted) and a non-empty "results" list
   * every result row has name plus numeric n, p50_s, mean_s, min_s,
     max_s, rsd
-  * every lazy-path row (name contains "lazy") carries numeric stall_s
-    and drain_s extras — the whole point of the lazy bench is reporting
-    those two separately
-  * at least one lazy row exists (the synthetic section must always run,
-    artifacts or not)
+
+Tag-specific rules:
+
+  * fig11 — every lazy-path row (name contains "lazy") carries numeric
+    stall_s and drain_s extras, and at least one lazy row exists (the
+    synthetic section must always run, artifacts or not)
+  * serve — every row carries a numeric p99_s extra (tail latency is
+    the serving-layer acceptance metric), and both cold and warm rows
+    exist so the cache effect is actually measured
 
 Exits non-zero with a one-line reason on the first violation.
 """
 
 import json
+import os
+import re
 import sys
 
 REQUIRED_NUMERIC = ("n", "p50_s", "mean_s", "min_s", "max_s", "rsd")
@@ -32,40 +41,9 @@ def fail(msg):
     sys.exit(1)
 
 
-def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_fig11.json"
-    try:
-        with open(path, encoding="utf-8") as f:
-            doc = json.load(f)
-    except OSError as e:
-        fail(f"cannot read {path}: {e}")
-    except json.JSONDecodeError as e:
-        fail(f"{path} is not valid JSON: {e}")
-
-    if not isinstance(doc, dict):
-        fail("top level must be an object")
-    if doc.get("bench") != "fig11":
-        fail(f"bench must be 'fig11', got {doc.get('bench')!r}")
-    groups = doc.get("groups")
-    if not isinstance(groups, list) or not groups:
-        fail("'groups' must be a non-empty list")
-
-    results = []
-    for i, g in enumerate(groups):
-        if not isinstance(g, dict) or not isinstance(g.get("name"), str):
-            fail(f"group {i} must be an object with a string 'name'")
-        rows = g.get("results")
-        if not isinstance(rows, list) or not rows:
-            fail(f"group {g['name']!r} must have a non-empty 'results' list")
-        results.extend(rows)
-
+def check_fig11(results):
     lazy_rows = 0
     for r in results:
-        if not isinstance(r, dict) or not isinstance(r.get("name"), str):
-            fail("every result must be an object with a string 'name'")
-        for key in REQUIRED_NUMERIC:
-            if not is_num(r.get(key)):
-                fail(f"result {r['name']!r}: {key} must be numeric, got {r.get(key)!r}")
         if "lazy" in r["name"]:
             lazy_rows += 1
             for key in ("stall_s", "drain_s"):
@@ -76,8 +54,72 @@ def main():
                     )
     if lazy_rows == 0:
         fail("no lazy-path rows found — the synthetic lazy section must always run")
+    return f"{lazy_rows} lazy rows"
 
-    print(f"OK: {path}: {len(groups)} groups, {len(results)} results, {lazy_rows} lazy rows")
+
+def check_serve(results):
+    cold = warm = 0
+    for r in results:
+        if not is_num(r.get("p99_s")):
+            fail(
+                f"serve result {r['name']!r} must report numeric p99_s, "
+                f"got {r.get('p99_s')!r}"
+            )
+        if "cold" in r["name"]:
+            cold += 1
+        if "warm" in r["name"]:
+            warm += 1
+    if cold == 0 or warm == 0:
+        fail(f"serve bench must report both cold and warm rows (cold={cold}, warm={warm})")
+    return f"{cold} cold / {warm} warm rows"
+
+
+TAG_CHECKS = {"fig11": check_fig11, "serve": check_serve}
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_fig11.json"
+    m = re.fullmatch(r"BENCH_(\w+)\.json", os.path.basename(path))
+    if not m:
+        fail(f"{path}: file name must look like BENCH_<tag>.json")
+    tag = m.group(1)
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    if doc.get("bench") != tag:
+        fail(f"bench must be {tag!r}, got {doc.get('bench')!r}")
+    groups = doc.get("groups")
+    if not isinstance(groups, list) or not groups:
+        fail("'groups' must be a non-empty list")
+
+    results = []
+    for i, g in enumerate(groups):
+        title = g.get("title", g.get("name")) if isinstance(g, dict) else None
+        if not isinstance(title, str):
+            fail(f"group {i} must be an object with a string 'title'")
+        rows = g.get("results")
+        if not isinstance(rows, list) or not rows:
+            fail(f"group {title!r} must have a non-empty 'results' list")
+        results.extend(rows)
+
+    for r in results:
+        if not isinstance(r, dict) or not isinstance(r.get("name"), str):
+            fail("every result must be an object with a string 'name'")
+        for key in REQUIRED_NUMERIC:
+            if not is_num(r.get(key)):
+                fail(f"result {r['name']!r}: {key} must be numeric, got {r.get(key)!r}")
+
+    detail = ""
+    if tag in TAG_CHECKS:
+        detail = ", " + TAG_CHECKS[tag](results)
+    print(f"OK: {path}: {len(groups)} groups, {len(results)} results{detail}")
 
 
 if __name__ == "__main__":
