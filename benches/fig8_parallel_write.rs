@@ -20,7 +20,7 @@ use fastpersist::checkpoint::engine::CheckpointEngine;
 use fastpersist::checkpoint::strategy::WriterStrategy;
 use fastpersist::cluster::topology::RankPlacement;
 use fastpersist::io::device::DeviceMap;
-use fastpersist::io::engine::IoConfig;
+use fastpersist::io::engine::{IoBackend, IoConfig};
 use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
 use fastpersist::tensor::{DType, Tensor, TensorStore};
 
@@ -119,7 +119,46 @@ fn main() {
         );
     }
 
-    let _ = write_bench_json("fig8", &[&writers_group, &devices_group, &counters_group]);
+    // Part 2c: submission-backend sweep — per-extent sync vs batched
+    // ring vs auto-probed, durable config so the trailing fsync rides
+    // the submission path under test. Row names carry the resolved
+    // backend and the ring counters: on tmpfs/9p `ring` and `auto` fall
+    // back to sync (resolved=sync, batched_submissions=0) and the rows
+    // still emit, so trajectories stay comparable across environments.
+    let mut backend_group = BenchGroup::start(&format!(
+        "fig8: submission backend sweep ({} MiB store, durable, 4 writers)",
+        size >> 20
+    ));
+    for (backend, tag) in
+        [(IoBackend::Sync, "sync"), (IoBackend::Ring, "ring"), (IoBackend::Auto, "auto")]
+    {
+        let rt = Arc::new(IoRuntime::new(IoRuntimeConfig {
+            io: IoConfig { backend, ..IoConfig::fastpersist() },
+            ..IoRuntimeConfig::default()
+        }));
+        let engine = CheckpointEngine::with_runtime(Arc::clone(&rt), WriterStrategy::AllReplicas);
+        let g = group_of(4);
+        let d = dir.join(format!("backend-{tag}"));
+        let out = engine.write(&store, BTreeMap::new(), &d, &g).unwrap();
+        backend_group.bench_bytes(
+            &format!(
+                "backend={tag} resolved={} batched_submissions={} sqes_max={} reaped={}",
+                rt.submit_backend_name(&d),
+                out.batched_submissions(),
+                out.sqes_per_submit_max(),
+                out.completions_reaped(),
+            ),
+            size as u64,
+            || {
+                engine.write(&store, BTreeMap::new(), &d, &g).unwrap();
+            },
+        );
+    }
+
+    let _ = write_bench_json(
+        "fig8",
+        &[&writers_group, &devices_group, &counters_group, &backend_group],
+    );
 
     println!("\nfig8 paper-scale simulation:");
     fastpersist::figures::fig8::run().unwrap();

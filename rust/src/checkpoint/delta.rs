@@ -352,6 +352,23 @@ impl DeltaOutcome {
         self.stats.iter().map(|s| s.bounce_bytes).sum()
     }
 
+    /// Batched ring submission syscalls, summed over every segment
+    /// write (0 end to end on the sync backend).
+    pub fn batched_submissions(&self) -> u64 {
+        self.stats.iter().map(|s| s.batched_submissions).sum()
+    }
+
+    /// High-water count of sqes handed to the kernel in one submission
+    /// syscall, across every segment write.
+    pub fn sqes_per_submit_max(&self) -> u64 {
+        self.stats.iter().map(|s| s.sqes_per_submit_max).max().unwrap_or(0)
+    }
+
+    /// Ring completions reaped, summed over every segment write.
+    pub fn completions_reaped(&self) -> u64 {
+        self.stats.iter().map(|s| s.completions_reaped).sum()
+    }
+
     /// View as a generic [`CheckpointOutcome`] (the pipelined helper's
     /// common currency).
     pub fn into_outcome(self) -> CheckpointOutcome {
@@ -663,7 +680,8 @@ impl DeltaCheckpointer {
                 .map(|e| e.expect("every chunk entry filled"))
                 .collect(),
         };
-        let manifest = CheckpointManifest::from_delta(ser.total_len(), digest, step, delta);
+        let manifest = CheckpointManifest::from_delta(ser.total_len(), digest, step, delta)
+            .with_io_backend(self.runtime.submit_backend_name(dir));
         manifest.validate()?;
         manifest.save_with(dir, self.runtime.io_config().fault.as_ref())?;
 

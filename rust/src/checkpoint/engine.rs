@@ -71,6 +71,26 @@ impl CheckpointOutcome {
     pub fn bounce_bytes(&self) -> u64 {
         self.stats.iter().map(|s| s.bounce_bytes).sum()
     }
+
+    /// Batched ring submission syscalls, summed over every
+    /// partition/segment write (0 end to end on the sync backend — the
+    /// trainer's `ckpt_batched_submissions` metric and the proof of
+    /// which submission path ran).
+    pub fn batched_submissions(&self) -> u64 {
+        self.stats.iter().map(|s| s.batched_submissions).sum()
+    }
+
+    /// High-water count of sqes handed to the kernel in one submission
+    /// syscall, across every partition/segment write.
+    pub fn sqes_per_submit_max(&self) -> u64 {
+        self.stats.iter().map(|s| s.sqes_per_submit_max).max().unwrap_or(0)
+    }
+
+    /// Ring completions reaped, summed over every partition/segment
+    /// write (the trainer's `ckpt_completions_reaped` metric).
+    pub fn completions_reaped(&self) -> u64 {
+        self.stats.iter().map(|s| s.completions_reaped).sum()
+    }
 }
 
 /// The FastPersist checkpoint engine: a thin coordinator over a shared
@@ -188,7 +208,8 @@ impl CheckpointEngine {
         // All partitions durable → publish the manifest (atomic rename;
         // fault-aware so an injected crash can land between segment
         // durability and the commit point).
-        let manifest = CheckpointManifest::from_routed_plan(&plan, &routed, digest, step);
+        let manifest = CheckpointManifest::from_routed_plan(&plan, &routed, digest, step)
+            .with_io_backend(self.runtime.submit_backend_name(dir));
         manifest.save_with(dir, self.runtime.io_config().fault.as_ref())?;
 
         Ok(CheckpointOutcome {

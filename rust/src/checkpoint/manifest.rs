@@ -111,6 +111,13 @@ pub struct CheckpointManifest {
     pub partitions: Vec<PartitionEntry>,
     /// Chunk table of an incremental checkpoint; `None` for full ones.
     pub delta: Option<DeltaSection>,
+    /// Submission backend that drained this checkpoint's bytes
+    /// (`"sync"` or `"ring"`) — runtime info recorded like device
+    /// striping, so `fault_matrix` and restore logs can report which
+    /// path produced the checkpoint. `None` on manifests written before
+    /// the field existed (readers treat that as "sync"-era unknown);
+    /// optional in the JSON, so v2–v5 documents keep parsing.
+    pub io_backend: Option<String>,
 }
 
 /// One partition file of a full (non-delta) checkpoint.
@@ -556,6 +563,7 @@ impl CheckpointManifest {
                 })
                 .collect(),
             delta: None,
+            io_backend: None,
         }
     }
 
@@ -566,7 +574,22 @@ impl CheckpointManifest {
         step: u64,
         delta: DeltaSection,
     ) -> CheckpointManifest {
-        CheckpointManifest { total_len, digest, step, partitions: Vec::new(), delta: Some(delta) }
+        CheckpointManifest {
+            total_len,
+            digest,
+            step,
+            partitions: Vec::new(),
+            delta: Some(delta),
+            io_backend: None,
+        }
+    }
+
+    /// Stamp the submission backend that drained this checkpoint
+    /// (`"sync"` / `"ring"` — see
+    /// [`crate::io::runtime::IoRuntime::submit_backend_name`]).
+    pub fn with_io_backend(mut self, backend: &str) -> CheckpointManifest {
+        self.io_backend = Some(backend.to_string());
+        self
     }
 
     /// True if this manifest describes a chunked incremental checkpoint.
@@ -621,6 +644,9 @@ impl CheckpointManifest {
                 })),
             ),
         ];
+        if let Some(backend) = &self.io_backend {
+            fields.push(("io_backend", Json::str(backend)));
+        }
         if let Some(delta) = &self.delta {
             fields.push(("delta", delta.to_json()));
         }
@@ -661,12 +687,17 @@ impl CheckpointManifest {
             Some(d) => Some(DeltaSection::from_json(d, version)?),
             None => None,
         };
+        let io_backend = match v.opt("io_backend") {
+            Some(b) => Some(b.as_str()?.to_string()),
+            None => None,
+        };
         Ok(CheckpointManifest {
             total_len: v.get("total_len")?.as_i64()? as u64,
             digest: (hi << 32) | (lo & 0xffff_ffff),
             step: v.get("step")?.as_i64()? as u64,
             partitions,
             delta,
+            io_backend,
         })
     }
 
@@ -850,6 +881,21 @@ mod tests {
         let back = CheckpointManifest::load(&dir).unwrap();
         assert_eq!(back, m);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn io_backend_stamp_roundtrips_and_stays_optional() {
+        let m = manifest().with_io_backend("ring");
+        assert_eq!(m.io_backend.as_deref(), Some("ring"));
+        let back = CheckpointManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        // unstamped manifests (and every pre-field fixture) omit the key
+        let bare = manifest();
+        assert!(bare.io_backend.is_none());
+        let Json::Object(fields) = bare.to_json() else { panic!("manifest json is an object") };
+        assert!(!fields.contains_key("io_backend"));
+        let back = CheckpointManifest::from_json(&Json::Object(fields)).unwrap();
+        assert!(back.io_backend.is_none());
     }
 
     #[test]

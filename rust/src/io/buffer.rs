@@ -19,6 +19,13 @@ pub struct AlignedBuf {
     ptr: *mut u8,
     cap: usize,
     align: usize,
+    /// Stable pool slot identity (index into the owning pool's
+    /// registration table), assigned at creation and constant for the
+    /// buffer's lifetime. Batched submission backends use it to select
+    /// fixed-buffer (pre-registered) writes; `None` for buffers created
+    /// outside a pool (e.g. bounce buffers), which take the plain write
+    /// path.
+    slot: Option<u32>,
     /// Bytes currently staged (filled) in the buffer.
     pub len: usize,
 }
@@ -35,7 +42,20 @@ impl AlignedBuf {
         // zeroed so O_DIRECT tail padding never leaks heap garbage to disk
         let ptr = unsafe { alloc_zeroed(layout) };
         assert!(!ptr.is_null(), "aligned alloc failed");
-        AlignedBuf { ptr, cap, align, len: 0 }
+        AlignedBuf { ptr, cap, align, slot: None, len: 0 }
+    }
+
+    /// Stable pool slot identity (see the field docs); `None` when the
+    /// buffer was created outside a pool.
+    pub fn slot(&self) -> Option<u32> {
+        self.slot
+    }
+
+    /// Base address of the allocation — the registration identity a
+    /// batched backend pins with the kernel. Stable for the buffer's
+    /// lifetime.
+    pub fn base_addr(&self) -> usize {
+        self.ptr as usize
     }
 
     /// Total buffer capacity in bytes.
@@ -121,6 +141,10 @@ pub struct BufferPool {
     allocations: Arc<AtomicU64>,
     /// Cumulative successful checkouts (blocking + non-blocking).
     acquires: Arc<AtomicU64>,
+    /// Registration table: `(base address, capacity)` of every buffer
+    /// ever created, indexed by its slot id. Append-only, frozen once
+    /// `created == count`.
+    registration: Arc<Mutex<Vec<(usize, usize)>>>,
 }
 
 impl BufferPool {
@@ -143,20 +167,30 @@ impl BufferPool {
             created: Arc::new(Mutex::new(0)),
             allocations: Arc::new(AtomicU64::new(0)),
             acquires: Arc::new(AtomicU64::new(0)),
+            registration: Arc::new(Mutex::new(Vec::new())),
         }
     }
 
     /// Create a buffer if the cap allows (warm-up only).
     fn grow(&self) -> Option<AlignedBuf> {
-        {
+        let slot = {
             let mut created = self.created.lock().unwrap();
             if *created >= self.count {
                 return None;
             }
+            let slot = *created as u32;
             *created += 1;
-        }
+            slot
+        };
         self.allocations.fetch_add(1, Ordering::Relaxed);
-        Some(AlignedBuf::new(self.buf_size, self.align))
+        let mut buf = AlignedBuf::new(self.buf_size, self.align);
+        buf.slot = Some(slot);
+        {
+            let mut reg = self.registration.lock().unwrap();
+            debug_assert_eq!(reg.len(), slot as usize);
+            reg.push((buf.base_addr(), buf.capacity()));
+        }
+        Some(buf)
     }
 
     /// Get a free (recycled) buffer, cleared; blocks when the pool is at
@@ -236,6 +270,20 @@ impl BufferPool {
     pub fn acquires(&self) -> u64 {
         self.acquires.load(Ordering::Relaxed)
     }
+
+    /// Registration hook for batched submission backends: materialize
+    /// every buffer up to the cap (via [`BufferPool::prewarm`]) and
+    /// return the frozen `(base address, capacity)` table, indexed by
+    /// each buffer's [`AlignedBuf::slot`]. The addresses stay valid for
+    /// the pool's lifetime — buffers are never deallocated or replaced
+    /// once created — so a ring can pin them once at
+    /// [`crate::io::runtime::IoRuntime`] construction and service every
+    /// subsequent drain as a fixed-buffer write with zero per-op pin
+    /// cost. The caller must not outlive the pool.
+    pub fn registration_slots(&self) -> Vec<(usize, usize)> {
+        self.prewarm();
+        self.registration.lock().unwrap().clone()
+    }
 }
 
 #[cfg(test)]
@@ -306,6 +354,30 @@ mod tests {
         }
         assert_eq!(pool.allocations(), 2, "pool must never allocate past its cap");
         assert_eq!(pool.acquires(), 22);
+    }
+
+    #[test]
+    fn registration_slots_are_stable_identities() {
+        let pool = BufferPool::new(3, 256);
+        let table = pool.registration_slots();
+        assert_eq!(table.len(), 3);
+        assert_eq!(pool.allocations(), 3);
+        // every checked-out buffer carries the slot matching its base
+        // address in the frozen table, across recycling
+        for _ in 0..3 {
+            let a = pool.acquire();
+            let b = pool.acquire();
+            for buf in [&a, &b] {
+                let slot = buf.slot().expect("pooled buffers carry a slot") as usize;
+                assert_eq!(table[slot], (buf.base_addr(), buf.capacity()));
+            }
+            pool.release(a);
+            pool.release(b);
+        }
+        // re-querying does not grow the table
+        assert_eq!(pool.registration_slots(), table);
+        // standalone buffers have no slot (plain-write path)
+        assert_eq!(AlignedBuf::new(64, 512).slot(), None);
     }
 
     #[test]

@@ -31,6 +31,16 @@
 //! some overlay/network mounts) get a **logged buffered fallback**; the
 //! write pipeline and the read runtime both consult the same cache, so
 //! a device is probed once, not once per file.
+//!
+//! **Ring-submission capability.** The batched submission backend
+//! (`io/uring.rs`, behind the `io-uring` feature) gets the same
+//! treatment through a [`RingProbe`]: one real probe per filesystem
+//! (ring setup + one batched write with a chained flush on a scratch
+//! file), verdict cached by `st_dev`, fallback to the per-extent sync
+//! backend logged with its reason. Builds without the feature — and CI
+//! sandboxes whose seccomp policy rejects `io_uring_setup` — report
+//! `Unsupported` here, which is exactly how `--io-backend auto` keeps
+//! tmpfs/9p CI on the sync path deliberately.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -231,11 +241,103 @@ fn probe_o_direct(dir: &Path) -> (DirectCapability, bool) {
     }
 }
 
+/// Verdict of one ring-submission capability probe.
+#[derive(Debug, Clone)]
+pub enum RingCapability {
+    /// A probe ring wrote and flushed a scratch file on the filesystem.
+    Supported,
+    /// The probe failed (or the backend is not compiled in); the reason
+    /// is logged once and drains on this device use the per-extent sync
+    /// backend.
+    Unsupported(String),
+}
+
+impl RingCapability {
+    /// True when the batched ring path may be used.
+    pub fn is_supported(&self) -> bool {
+        matches!(self, RingCapability::Supported)
+    }
+
+    /// The fallback reason, when unsupported.
+    pub fn reason(&self) -> Option<&str> {
+        match self {
+            RingCapability::Supported => None,
+            RingCapability::Unsupported(r) => Some(r),
+        }
+    }
+}
+
+/// Cached per-filesystem ring-submission capability probes, keyed by
+/// `st_dev` exactly like [`DirectProbe`] and shared by clones. Ring
+/// verdicts are always cached definitively: a kernel or sandbox that
+/// rejects `io_uring_setup` will not change its mind mid-run, and the
+/// rare transient probe failure merely costs this process the batching
+/// optimization, never correctness.
+#[derive(Clone, Default)]
+pub struct RingProbe {
+    cache: Arc<Mutex<HashMap<u64, RingCapability>>>,
+}
+
+impl RingProbe {
+    /// Capability of the filesystem holding `dir`, probing on first
+    /// query and serving the cached verdict afterwards. A fallback is
+    /// logged with its reason once per filesystem, so CI logs show
+    /// *why* the sync submission path engaged.
+    pub fn capability(&self, dir: &Path) -> RingCapability {
+        use std::os::unix::fs::MetadataExt;
+        let key = match std::fs::metadata(dir) {
+            Ok(m) => m.dev(),
+            Err(e) => {
+                return RingCapability::Unsupported(format!("cannot stat {}: {e}", dir.display()))
+            }
+        };
+        if let Some(cap) = self.cache.lock().unwrap().get(&key) {
+            return cap.clone();
+        }
+        // Probe without holding the lock (same rationale as DirectProbe:
+        // a hung mount must not stall unrelated lanes).
+        let cap = match probe_ring_support(dir) {
+            Ok(()) => RingCapability::Supported,
+            Err(reason) => RingCapability::Unsupported(reason),
+        };
+        if let RingCapability::Unsupported(reason) = &cap {
+            eprintln!(
+                "fastpersist: ring submission unavailable for {} ({reason}); using per-extent \
+                 sync submission",
+                dir.display()
+            );
+        }
+        self.cache.lock().unwrap().insert(key, cap.clone());
+        cap
+    }
+
+    /// Number of filesystems probed so far (test instrumentation).
+    pub fn probed(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// One real ring capability probe, delegated to the io_uring module
+/// when it is compiled in.
+#[cfg(all(target_os = "linux", feature = "io-uring"))]
+fn probe_ring_support(dir: &Path) -> std::result::Result<(), String> {
+    crate::io::uring::probe_ring(dir)
+}
+
+/// Without the `io-uring` feature (or off Linux) the ring backend does
+/// not exist, so every filesystem is definitively unsupported.
+#[cfg(not(all(target_os = "linux", feature = "io-uring")))]
+fn probe_ring_support(dir: &Path) -> std::result::Result<(), String> {
+    let _ = dir;
+    Err("io-uring backend not compiled into this build".to_string())
+}
+
 /// Ordered set of storage mount points for checkpoint fan-out.
 #[derive(Clone, Default)]
 pub struct DeviceMap {
     roots: Vec<PathBuf>,
     probe: DirectProbe,
+    ring: RingProbe,
 }
 
 impl PartialEq for DeviceMap {
@@ -266,7 +368,7 @@ impl DeviceMap {
         for root in &roots {
             std::fs::create_dir_all(root)?;
         }
-        Ok(DeviceMap { roots, probe: DirectProbe::default() })
+        Ok(DeviceMap { roots, probe: DirectProbe::default(), ring: RingProbe::default() })
     }
 
     /// `n` simulated SSDs as sibling dirs `base/ssd0..ssd{n-1}` — the
@@ -343,6 +445,19 @@ impl DeviceMap {
     /// distinct directories probed).
     pub fn probe(&self) -> &DirectProbe {
         &self.probe
+    }
+
+    /// Ring-submission capability of the filesystem holding `path` —
+    /// probed once per device (or per directory on the degenerate map)
+    /// and cached for the map's lifetime, mirroring
+    /// [`Self::direct_capability_for`]. Clones share the cache.
+    pub fn ring_capability_for(&self, path: &Path) -> RingCapability {
+        self.ring.capability(&self.capability_dir(path))
+    }
+
+    /// The ring probe cache (test instrumentation).
+    pub fn ring_probe(&self) -> &RingProbe {
+        &self.ring
     }
 
     /// Where partition `index` of the checkpoint in `dir` lives:
@@ -601,6 +716,29 @@ mod tests {
     }
 
     #[test]
+    fn ring_probe_is_cached_and_feature_off_reports_reason() {
+        let base = scratch_dir("devmap-ringprobe").unwrap();
+        let m = DeviceMap::from_roots(vec![base.clone()]).unwrap();
+        assert_eq!(m.ring_probe().probed(), 0, "no probe before first query");
+        let first = m.ring_capability_for(&base.join("f.bin"));
+        assert_eq!(m.ring_probe().probed(), 1);
+        let again = m.clone().ring_capability_for(&base.join("g.bin"));
+        assert_eq!(m.ring_probe().probed(), 1, "ring capability must be cached per device");
+        assert_eq!(first.is_supported(), again.is_supported());
+        if !cfg!(feature = "io-uring") {
+            let reason = first.reason().expect("feature-off builds must be unsupported");
+            assert!(reason.contains("not compiled"), "fallback must say why: {reason}");
+        }
+        let leftovers: Vec<_> = std::fs::read_dir(&base)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".fp-ring-probe"))
+            .collect();
+        assert!(leftovers.is_empty(), "ring probe must clean up its scratch file");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
     fn capability_dir_prefers_device_root() {
         let base = scratch_dir("devmap-capdir").unwrap();
         let m = DeviceMap::simulated(2, &base.join("devices")).unwrap();
@@ -636,7 +774,7 @@ mod tests {
             let nparts = g.usize(1, 64);
             let roots: Vec<PathBuf> =
                 (0..ndev).map(|i| PathBuf::from(format!("/virtual/dev{i}"))).collect();
-            let m = DeviceMap { roots, probe: DirectProbe::default() };
+            let m = DeviceMap { roots, probe: DirectProbe::default(), ring: RingProbe::default() };
             let mut per_device = vec![0usize; ndev];
             for p in 0..nparts {
                 // exactly one device, in bounds

@@ -204,6 +204,7 @@ mod tests {
             pool: BufferPool::with_align(2, 8192, 4096),
             drain: DrainPool::new(1),
             devices: crate::io::device::DeviceMap::single(),
+            ring: None,
         };
         let single = DirectEngine::with_resources(
             IoConfig { kind: EngineKind::DirectSingle, align: 4096, ..IoConfig::default() },

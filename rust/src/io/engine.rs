@@ -54,6 +54,51 @@ impl EngineKind {
     }
 }
 
+/// Which drain-lane submission backend services staged extents.
+///
+/// The backend sits *under* the lane API ([`crate::io::write::DrainPool`]):
+/// plans, engines, and on-disk formats are identical across backends —
+/// only how lane workers hand extents to the kernel differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoBackend {
+    /// One positioned `pwrite` syscall per drained extent (the classic
+    /// lane worker loop). Works everywhere; the deliberate CI path on
+    /// tmpfs/9p filesystems.
+    Sync,
+    /// io_uring-style batched submission: lane workers queue up to
+    /// [`IoConfig::queue_depth`] extents into a submission ring and
+    /// issue ONE submission syscall per batch, with staging-pool
+    /// buffers pre-registered as fixed buffers. Requires Linux and the
+    /// `io-uring` cargo feature; resolution falls back to [`Self::Sync`]
+    /// with a logged reason otherwise.
+    Ring,
+    /// Probe the target filesystem once (cached like the O_DIRECT
+    /// probe) and pick [`Self::Ring`] where supported, else
+    /// [`Self::Sync`].
+    Auto,
+}
+
+impl IoBackend {
+    /// Stable CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            IoBackend::Sync => "sync",
+            IoBackend::Ring => "ring",
+            IoBackend::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI backend name.
+    pub fn parse(s: &str) -> Result<IoBackend> {
+        match s {
+            "sync" => Ok(IoBackend::Sync),
+            "ring" | "uring" | "io-uring" => Ok(IoBackend::Ring),
+            "auto" => Ok(IoBackend::Auto),
+            other => crate::config_err!("unknown io backend {other:?} (want sync|ring|auto)"),
+        }
+    }
+}
+
 /// Tuning knobs for the write path.
 #[derive(Debug, Clone)]
 pub struct IoConfig {
@@ -79,6 +124,11 @@ pub struct IoConfig {
     /// Try O_DIRECT; fall back to aligned pwrite if the per-device
     /// capability probe (or an individual open) refuses.
     pub try_o_direct: bool,
+    /// Drain-lane submission backend ([`IoBackend`]). `Auto` probes the
+    /// target filesystem and engages the batched ring path only where
+    /// the kernel supports it, so tmpfs/9p CI keeps exercising the sync
+    /// path deliberately.
+    pub backend: IoBackend,
     /// Deterministic fault-injection plan ([`crate::io::fault`]). `None`
     /// (the default, and the only production value) reduces every hook
     /// to a single `Option` branch on the hot path; tests install a
@@ -96,6 +146,7 @@ impl Default for IoConfig {
             queue_depth: 2,
             sync_on_finish: true,
             try_o_direct: true,
+            backend: IoBackend::Auto,
             fault: None,
         }
     }
@@ -180,6 +231,17 @@ pub struct WriteStats {
     /// coalescing win of segment stores shows up here: a base
     /// checkpoint costs one fsync per *segment*, not per chunk.
     pub fsyncs: u64,
+    /// Ring-backend submission syscalls issued (one per queue-depth
+    /// batch of drained extents). 0 on the sync backend — the proof of
+    /// which submission path actually ran.
+    pub batched_submissions: u64,
+    /// High-water mark of submission-queue entries handed to the kernel
+    /// in a single batched submission syscall (includes a chained
+    /// trailing-fsync op when one was linked). 0 on the sync backend.
+    pub sqes_per_submit_max: u64,
+    /// Completions reaped off the ring's completion queue. 0 on the
+    /// sync backend.
+    pub completions_reaped: u64,
     /// Wall time from sink creation to durable finish.
     pub elapsed: Duration,
     /// Cumulative wall time drain-lane workers spent inside this sink's
@@ -280,6 +342,17 @@ mod tests {
         assert_eq!(EngineKind::parse("torch").unwrap(), EngineKind::Buffered);
         assert_eq!(EngineKind::parse("single").unwrap(), EngineKind::DirectSingle);
         assert!(EngineKind::parse("x").is_err());
+    }
+
+    #[test]
+    fn backend_parse_and_names() {
+        assert_eq!(IoBackend::parse("sync").unwrap(), IoBackend::Sync);
+        assert_eq!(IoBackend::parse("ring").unwrap(), IoBackend::Ring);
+        assert_eq!(IoBackend::parse("io-uring").unwrap(), IoBackend::Ring);
+        assert_eq!(IoBackend::parse("auto").unwrap(), IoBackend::Auto);
+        assert!(IoBackend::parse("fancy").is_err());
+        assert_eq!(IoBackend::Ring.name(), "ring");
+        assert_eq!(IoConfig::default().backend, IoBackend::Auto);
     }
 
     #[test]

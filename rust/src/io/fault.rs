@@ -46,6 +46,18 @@
 //! (`rust/tests/fault_matrix.rs`) runs first to enumerate every
 //! boundary of a plan shape before re-running it with a fault armed at
 //! each one.
+//!
+//! **Batch-entry granularity.** The batched submission backend
+//! (`--io-backend ring`) queues several drain extents per kernel
+//! submission, but fault boundaries are consulted **per batch entry at
+//! enqueue time**, in the same execution order the sync backend drains
+//! them, so a scenario matrix enumerated against one backend addresses
+//! the identical Drain/Fsync boundaries on the other. Two ordering
+//! rules keep the semantics exact: a Torn/Abort drain fault first
+//! flushes every *previously queued* entry of the pending batch (those
+//! writes were issued before the "death"), and a fault-instrumented
+//! sink never chains its fsync into the ring — the Fsync boundary stays
+//! a distinct op exactly where the sync path has it.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;

@@ -14,6 +14,15 @@
 //!   aligned `pwrite` otherwise, with the sub-alignment tail routed
 //!   through a zeroed bounce buffer so unaligned bytes never touch the
 //!   direct descriptor.
+//! * **Batched kernel submission** ([`write::SubmitBackend`]): the
+//!   drain lanes speak to the kernel through a pluggable submission
+//!   backend — per-extent positioned writes ([`write::SyncBackend`]),
+//!   or, behind the `io-uring` feature on Linux, an io_uring ring that
+//!   submits a whole queue-depth batch (plus a chained flush op) in ONE
+//!   syscall against buffers registered once at pool creation
+//!   (`io/uring.rs`). `--io-backend auto` probes per filesystem
+//!   ([`device::DeviceMap::ring_capability_for`]) and falls back to
+//!   sync with a logged reason.
 //! * **Pinned staging buffers** ([`buffer`]): the accelerator→DRAM hop
 //!   lands in page-locked, alignment-guaranteed buffers from a reusable
 //!   pool (no allocation on the hot path).
@@ -58,15 +67,17 @@ pub mod pending_queue;
 pub mod read;
 pub mod runtime;
 pub mod sync_engine;
+#[cfg(all(target_os = "linux", feature = "io-uring"))]
+pub mod uring;
 pub mod write;
 
 pub use buffer::{AlignedBuf, BufferPool};
-pub use device::{DeviceMap, DirectCapability};
-pub use engine::{EngineKind, IoConfig, Sink, WriteEngine, WriteStats};
+pub use device::{DeviceMap, DirectCapability, RingCapability, RingProbe};
+pub use engine::{EngineKind, IoBackend, IoConfig, Sink, WriteEngine, WriteStats};
 pub use fault::{FaultKind, FaultPlan, FaultSite};
 pub use read::{ChunkCheck, ReadJob, ReadPart, ReadStats, StreamBuffer};
 pub use runtime::{IoRuntime, IoRuntimeConfig, ReadTicket, Ticket, WriteJob, WriteSource};
 pub use write::{
-    DrainDone, DrainJob, DrainPool, LaneStats, WriteExtent, WriteOp, WritePipeline, WritePlan,
-    WriteResources,
+    BatchEntry, BatchReport, BatchStats, DrainDone, DrainJob, DrainPool, LaneStats, SubmitBackend,
+    SyncBackend, WriteExtent, WriteOp, WritePipeline, WritePlan, WriteResources,
 };

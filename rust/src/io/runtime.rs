@@ -46,7 +46,7 @@ use crate::io::direct_engine::DirectEngine;
 use crate::io::engine::{EngineKind, IoConfig, WriteEngine, WriteStats};
 use crate::io::read::{ReadCtx, ReadJob, ReadStats, StreamBuffer};
 use crate::io::sync_engine::BufferedEngine;
-use crate::io::write::{DrainPool, LaneStats, WritePlan, WriteResources};
+use crate::io::write::{resolve_ring_backend, DrainPool, LaneStats, WritePlan, WriteResources};
 use crate::serialize::writer::SerializedCheckpoint;
 use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
@@ -235,6 +235,9 @@ struct RuntimeCore {
     devices: DeviceMap,
     read_split_bytes: u64,
     drain_lanes: usize,
+    /// Whether the batched ring backend resolved at construction; the
+    /// per-filesystem probe still decides per checkpoint directory.
+    ring_enabled: bool,
     /// Shared drain-lane pool (same instance every engine drains
     /// through) — kept here so per-lane counters stay observable.
     drain: DrainPool,
@@ -301,10 +304,16 @@ impl IoRuntime {
             BufferPool::with_align(cfg.staging_buffers.max(1), io.io_buf_size, io.align);
         let lanes = cfg.drain_threads.max(cfg.devices.len()).max(1);
         let drain = DrainPool::new(lanes);
+        // Backend selection happens once per runtime: resolving the ring
+        // backend here is what registers the staging pool's buffers with
+        // the ring path for the runtime's whole lifetime.
+        let ring = resolve_ring_backend(&io, &staging);
+        let ring_enabled = ring.is_some();
         let res = WriteResources {
             pool: staging.clone(),
             drain: drain.clone(),
             devices: cfg.devices.clone(),
+            ring,
         };
         let core = Arc::new(RuntimeCore {
             buffered: BufferedEngine::with_resources(
@@ -324,6 +333,7 @@ impl IoRuntime {
             devices: cfg.devices,
             read_split_bytes: cfg.read_split_bytes.max(1),
             drain_lanes: lanes,
+            ring_enabled,
             drain,
             stream_allocs: AtomicU64::new(0),
             stream_alloc_bytes: AtomicU64::new(0),
@@ -348,6 +358,26 @@ impl IoRuntime {
     /// The device map partitions are striped over.
     pub fn devices(&self) -> &DeviceMap {
         &self.core.devices
+    }
+
+    /// True when the batched ring backend resolved at construction
+    /// (feature compiled in, backend selected, process-level setup OK).
+    /// The per-filesystem probe still decides per directory.
+    pub fn ring_enabled(&self) -> bool {
+        self.core.ring_enabled
+    }
+
+    /// Name of the submission backend that will drain checkpoints
+    /// written under `dir`: `"ring"` when the batched backend resolved
+    /// AND the filesystem's cached capability probe accepts it,
+    /// `"sync"` otherwise. This is the string stamped into checkpoint
+    /// manifests (runtime info) and printed in the CLI summary.
+    pub fn submit_backend_name(&self, dir: &std::path::Path) -> &'static str {
+        if self.core.ring_enabled && self.core.devices.ring_capability_for(dir).is_supported() {
+            "ring"
+        } else {
+            "sync"
+        }
     }
 
     /// Shared staging pool (counters: `allocations()`, `acquires()`).

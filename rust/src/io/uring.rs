@@ -1,0 +1,654 @@
+//! Batched ring submission backend (io_uring) for the drain lanes.
+//!
+//! This is the Linux-only, `io-uring`-feature-gated implementation of
+//! [`SubmitBackend`]: instead of one `pwrite` syscall per drained
+//! extent, a lane worker queues up to the plan's queue depth of extents
+//! into a kernel submission ring and issues **one** `io_uring_enter`
+//! syscall per batch (FastPersist §4.1: saturate NVMe queue depths with
+//! deep, cheap submissions, not blocking per-extent syscalls). The
+//! trailing fsync is chained into the same submission as a
+//! drain-linked flush op (`IOSQE_IO_DRAIN` + `IORING_OP_FSYNC`): it
+//! starts only after every prior write in the ring completes, so one
+//! syscall both drains the final batch and makes the file durable.
+//!
+//! **Registered staging buffers.** At [`RingBackend::create`] the
+//! staging pool's buffers are materialized and their
+//! `(base address, capacity)` table frozen
+//! ([`crate::io::buffer::BufferPool::registration_slots`]). Each lane's
+//! ring registers that table once (`IORING_REGISTER_BUFFERS`), after
+//! which every drain is an `IORING_OP_WRITE_FIXED` against its buffer's
+//! stable slot — the kernel pins the pages once instead of per write.
+//! Buffers without a slot (bounce buffers, post-registration growth)
+//! take plain `IORING_OP_WRITE` sqes in the same batch.
+//!
+//! **Ring lifecycle.** Rings are per lane worker: each drain lane is a
+//! single persistent thread, so its ring needs no locking and its
+//! submission queue is single-producer by construction. The ring is
+//! created lazily on the lane's first batch (thread-local) and torn
+//! down with the thread. A backend instance only carries the frozen
+//! registration table and the ring geometry.
+//!
+//! Raw syscalls via the glibc `syscall(2)` wrapper — the same
+//! no-libc-crate convention as `fallocate` in [`crate::io::write`] and
+//! `mmap` in [`crate::io::device`]. Syscall numbers 425/426/427 are the
+//! asm-generic (and x86_64) io_uring numbers, identical across modern
+//! Linux architectures.
+//!
+//! Everything degrades gracefully: setup/registration/submission
+//! failures fall back to per-extent positioned writes inside the
+//! backend, and the per-filesystem probe ([`probe_ring`], cached by
+//! [`crate::io::device::DeviceMap::ring_capability_for`]) keeps
+//! unsupported mounts (seccomp'd containers, exotic filesystems) on the
+//! sync path with a logged reason.
+
+use std::cell::RefCell;
+use std::fs::File;
+use std::os::raw::{c_long, c_void};
+use std::os::unix::fs::FileExt;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::io::buffer::{AlignedBuf, BufferPool};
+use crate::io::engine::IoConfig;
+use crate::io::write::{BatchEntry, BatchReport, BatchStats, SubmitBackend};
+
+const SYS_IO_URING_SETUP: c_long = 425;
+const SYS_IO_URING_ENTER: c_long = 426;
+const SYS_IO_URING_REGISTER: c_long = 427;
+
+const IORING_OFF_SQ_RING: i64 = 0;
+const IORING_OFF_CQ_RING: i64 = 0x0800_0000;
+const IORING_OFF_SQES: i64 = 0x1000_0000;
+
+const IORING_ENTER_GETEVENTS: u32 = 1;
+const IORING_REGISTER_BUFFERS: u32 = 0;
+
+const IORING_OP_FSYNC: u8 = 3;
+const IORING_OP_WRITE_FIXED: u8 = 5;
+const IORING_OP_WRITE: u8 = 23;
+
+/// The flush op starts only after all prior sqes complete.
+const IOSQE_IO_DRAIN: u8 = 1 << 1;
+const IORING_FSYNC_DATASYNC: u32 = 1;
+
+const PROT_READ: i32 = 1;
+const PROT_WRITE: i32 = 2;
+const MAP_SHARED: i32 = 1;
+
+extern "C" {
+    fn syscall(num: c_long, ...) -> c_long;
+    fn mmap(
+        addr: *mut c_void,
+        len: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut c_void;
+    fn munmap(addr: *mut c_void, len: usize) -> i32;
+    fn close(fd: i32) -> i32;
+}
+
+fn map_failed(p: *mut c_void) -> bool {
+    p as isize == -1
+}
+
+#[repr(C)]
+#[derive(Default, Clone, Copy)]
+struct SqringOffsets {
+    head: u32,
+    tail: u32,
+    ring_mask: u32,
+    ring_entries: u32,
+    flags: u32,
+    dropped: u32,
+    array: u32,
+    resv1: u32,
+    user_addr: u64,
+}
+
+#[repr(C)]
+#[derive(Default, Clone, Copy)]
+struct CqringOffsets {
+    head: u32,
+    tail: u32,
+    ring_mask: u32,
+    ring_entries: u32,
+    overflow: u32,
+    cqes: u32,
+    flags: u32,
+    resv1: u32,
+    user_addr: u64,
+}
+
+#[repr(C)]
+#[derive(Default, Clone, Copy)]
+struct IoUringParams {
+    sq_entries: u32,
+    cq_entries: u32,
+    flags: u32,
+    sq_thread_cpu: u32,
+    sq_thread_idle: u32,
+    features: u32,
+    wq_fd: u32,
+    resv: [u32; 3],
+    sq_off: SqringOffsets,
+    cq_off: CqringOffsets,
+}
+
+/// 64-byte submission-queue entry (linux uapi `struct io_uring_sqe`,
+/// classic layout).
+#[repr(C)]
+#[derive(Default, Clone, Copy)]
+struct Sqe {
+    opcode: u8,
+    flags: u8,
+    ioprio: u16,
+    fd: i32,
+    off: u64,
+    addr: u64,
+    len: u32,
+    rw_flags: u32,
+    user_data: u64,
+    buf_index: u16,
+    personality: u16,
+    splice_fd_in: i32,
+    pad2: [u64; 2],
+}
+
+/// 16-byte completion-queue entry.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct Cqe {
+    user_data: u64,
+    res: i32,
+    flags: u32,
+}
+
+const _: () = assert!(std::mem::size_of::<Sqe>() == 64);
+const _: () = assert!(std::mem::size_of::<Cqe>() == 16);
+const _: () = assert!(std::mem::size_of::<IoUringParams>() == 120);
+
+#[repr(C)]
+struct Iovec {
+    base: *mut c_void,
+    len: usize,
+}
+
+fn os_err(what: &str) -> String {
+    format!("{what}: {}", std::io::Error::last_os_error())
+}
+
+/// One mmap'd io_uring instance owned by a single lane thread.
+struct Ring {
+    fd: i32,
+    sq_ring: *mut u8,
+    sq_ring_len: usize,
+    cq_ring: *mut u8,
+    cq_ring_len: usize,
+    sqes: *mut Sqe,
+    sqes_len: usize,
+    sq_tail: *mut u32,
+    sq_mask: u32,
+    sq_array: *mut u32,
+    cq_head: *mut u32,
+    cq_tail: *mut u32,
+    cq_mask: u32,
+    cqes: *mut Cqe,
+    entries: u32,
+    /// Fixed buffers registered: WRITE_FIXED usable for slotted buffers.
+    fixed: bool,
+    /// Number of registered slots (buf_index bound).
+    registered: u32,
+    /// Identity token of the registration table this ring pinned.
+    owner: usize,
+}
+
+impl Ring {
+    /// Set up a ring of `entries` sqes and register `slots` as fixed
+    /// buffers (registration failure downgrades to plain writes, it
+    /// does not fail the ring).
+    fn new(entries: u32, slots: &[(usize, usize)], owner: usize) -> Result<Ring, String> {
+        let mut params = IoUringParams::default();
+        let fd = unsafe {
+            syscall(SYS_IO_URING_SETUP, entries, &mut params as *mut IoUringParams) as i32
+        };
+        if fd < 0 {
+            return Err(os_err("io_uring_setup"));
+        }
+        let sq_ring_len = params.sq_off.array as usize + params.sq_entries as usize * 4;
+        let cq_ring_len =
+            params.cq_off.cqes as usize + params.cq_entries as usize * std::mem::size_of::<Cqe>();
+        let sqes_len = params.sq_entries as usize * std::mem::size_of::<Sqe>();
+        let prot = PROT_READ | PROT_WRITE;
+        unsafe {
+            let sq_ring =
+                mmap(std::ptr::null_mut(), sq_ring_len, prot, MAP_SHARED, fd, IORING_OFF_SQ_RING);
+            if map_failed(sq_ring) {
+                let e = os_err("mmap sq ring");
+                close(fd);
+                return Err(e);
+            }
+            let cq_ring =
+                mmap(std::ptr::null_mut(), cq_ring_len, prot, MAP_SHARED, fd, IORING_OFF_CQ_RING);
+            if map_failed(cq_ring) {
+                let e = os_err("mmap cq ring");
+                munmap(sq_ring, sq_ring_len);
+                close(fd);
+                return Err(e);
+            }
+            let sqes = mmap(std::ptr::null_mut(), sqes_len, prot, MAP_SHARED, fd, IORING_OFF_SQES);
+            if map_failed(sqes) {
+                let e = os_err("mmap sqes");
+                munmap(sq_ring, sq_ring_len);
+                munmap(cq_ring, cq_ring_len);
+                close(fd);
+                return Err(e);
+            }
+            let sq_ring = sq_ring as *mut u8;
+            let cq_ring = cq_ring as *mut u8;
+            let sq_mask = *(sq_ring.add(params.sq_off.ring_mask as usize) as *const u32);
+            let cq_mask = *(cq_ring.add(params.cq_off.ring_mask as usize) as *const u32);
+            let mut ring = Ring {
+                fd,
+                sq_ring,
+                sq_ring_len,
+                cq_ring,
+                cq_ring_len,
+                sqes: sqes as *mut Sqe,
+                sqes_len,
+                sq_tail: sq_ring.add(params.sq_off.tail as usize) as *mut u32,
+                sq_mask,
+                sq_array: sq_ring.add(params.sq_off.array as usize) as *mut u32,
+                cq_head: cq_ring.add(params.cq_off.head as usize) as *mut u32,
+                cq_tail: cq_ring.add(params.cq_off.tail as usize) as *mut u32,
+                cq_mask,
+                cqes: cq_ring.add(params.cq_off.cqes as usize) as *mut Cqe,
+                entries: params.sq_entries,
+                fixed: false,
+                registered: 0,
+                owner,
+            };
+            if !slots.is_empty() {
+                let iovecs: Vec<Iovec> = slots
+                    .iter()
+                    .map(|&(base, len)| Iovec { base: base as *mut c_void, len })
+                    .collect();
+                let ret = syscall(
+                    SYS_IO_URING_REGISTER,
+                    fd,
+                    IORING_REGISTER_BUFFERS,
+                    iovecs.as_ptr(),
+                    iovecs.len() as u32,
+                );
+                // EPERM (memlock limits) and friends: stay unregistered,
+                // plain writes still batch through the ring.
+                if ret == 0 {
+                    ring.fixed = true;
+                    ring.registered = iovecs.len() as u32;
+                }
+            }
+            Ok(ring)
+        }
+    }
+
+    /// Queue every entry (plus the optional drain-linked fsync), issue
+    /// one `io_uring_enter` submitting AND reaping the whole batch, and
+    /// map completions back to per-entry results. `Err` means the ring
+    /// itself failed (not an individual write) — the caller falls back
+    /// to positioned writes.
+    fn submit(
+        &mut self,
+        file: &File,
+        entries: &[BatchEntry],
+        link_fsync: bool,
+    ) -> Result<BatchReport, String> {
+        let n_writes = entries.len() as u32;
+        let n_ops = n_writes + u32::from(link_fsync);
+        if n_ops == 0 {
+            return Ok(BatchReport {
+                results: Vec::new(),
+                stats: BatchStats::default(),
+                fsync_err: None,
+            });
+        }
+        debug_assert!(n_ops <= self.entries, "batch larger than the ring");
+        let fd = file.as_raw_fd();
+        unsafe {
+            let tail_atomic = &*(self.sq_tail as *const AtomicU32);
+            let mut tail = tail_atomic.load(Ordering::Relaxed);
+            for (i, e) in entries.iter().enumerate() {
+                let idx = (tail & self.sq_mask) as usize;
+                let sqe = &mut *self.sqes.add(idx);
+                *sqe = Sqe::default();
+                match e.buf.slot() {
+                    // Fixed-buffer write: zero per-op pin cost against
+                    // the slot registered at backend creation.
+                    Some(slot) if self.fixed && slot < self.registered => {
+                        sqe.opcode = IORING_OP_WRITE_FIXED;
+                        sqe.buf_index = slot as u16;
+                    }
+                    _ => sqe.opcode = IORING_OP_WRITE,
+                }
+                sqe.fd = fd;
+                sqe.off = e.offset;
+                sqe.addr = e.buf.base_addr() as u64;
+                sqe.len = e.len as u32;
+                sqe.user_data = i as u64;
+                *self.sq_array.add(idx) = idx as u32;
+                tail = tail.wrapping_add(1);
+            }
+            if link_fsync {
+                let idx = (tail & self.sq_mask) as usize;
+                let sqe = &mut *self.sqes.add(idx);
+                *sqe = Sqe::default();
+                sqe.opcode = IORING_OP_FSYNC;
+                sqe.flags = IOSQE_IO_DRAIN;
+                sqe.fd = fd;
+                sqe.rw_flags = IORING_FSYNC_DATASYNC;
+                sqe.user_data = n_writes as u64;
+                *self.sq_array.add(idx) = idx as u32;
+                tail = tail.wrapping_add(1);
+            }
+            tail_atomic.store(tail, Ordering::Release);
+        }
+        // ONE submission syscall for the whole batch: submit n_ops and
+        // wait for all their completions in the same call. EINTR (and a
+        // kernel splitting the submission) retries, honestly counted.
+        let mut stats = BatchStats { sqes: n_ops as u64, ..BatchStats::default() };
+        let mut to_submit = n_ops;
+        let mut cqes: Vec<Cqe> = Vec::with_capacity(n_ops as usize);
+        while to_submit > 0 || (cqes.len() as u32) < n_ops {
+            let want = n_ops - cqes.len() as u32;
+            let ret = unsafe {
+                syscall(
+                    SYS_IO_URING_ENTER,
+                    self.fd,
+                    to_submit,
+                    want,
+                    IORING_ENTER_GETEVENTS,
+                    std::ptr::null::<c_void>(),
+                    0usize,
+                )
+            };
+            if ret < 0 {
+                let err = std::io::Error::last_os_error();
+                if err.raw_os_error() == Some(4) {
+                    continue; // EINTR before anything was submitted
+                }
+                return Err(format!("io_uring_enter: {err}"));
+            }
+            stats.submissions += 1;
+            to_submit -= (ret as u32).min(to_submit);
+            self.reap(&mut cqes);
+        }
+        stats.completions = cqes.len() as u64;
+        // Map completions back to entries (user_data = entry index).
+        let mut results: Vec<std::io::Result<()>> = Vec::with_capacity(entries.len());
+        for _ in entries {
+            results.push(Err(std::io::Error::other("write completion missing")));
+        }
+        let mut fsync_res: Option<i32> = None;
+        for cqe in &cqes {
+            let ud = cqe.user_data as usize;
+            if ud < entries.len() {
+                let e = &entries[ud];
+                results[ud] = if cqe.res < 0 {
+                    Err(std::io::Error::from_raw_os_error(-cqe.res))
+                } else if (cqe.res as usize) < e.len {
+                    // Short ring write (rare on regular files): finish
+                    // the extent with a positioned-write tail.
+                    let done = cqe.res as usize;
+                    file.write_all_at(&e.buf.filled()[done..e.len], e.offset + done as u64)
+                } else {
+                    Ok(())
+                };
+            } else {
+                fsync_res = Some(cqe.res);
+            }
+        }
+        let fsync_err = if link_fsync {
+            match fsync_res {
+                Some(res) if res >= 0 => {
+                    stats.fsync_done = true;
+                    None
+                }
+                Some(res) => Some(std::io::Error::from_raw_os_error(-res)),
+                None => Some(std::io::Error::other("fsync completion missing")),
+            }
+        } else {
+            None
+        };
+        Ok(BatchReport { results, stats, fsync_err })
+    }
+
+    /// Drain every available completion off the cq ring.
+    fn reap(&mut self, out: &mut Vec<Cqe>) {
+        unsafe {
+            let head_atomic = &*(self.cq_head as *const AtomicU32);
+            let tail = (*(self.cq_tail as *const AtomicU32)).load(Ordering::Acquire);
+            let mut head = head_atomic.load(Ordering::Relaxed);
+            while head != tail {
+                out.push(*self.cqes.add((head & self.cq_mask) as usize));
+                head = head.wrapping_add(1);
+            }
+            head_atomic.store(head, Ordering::Release);
+        }
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        unsafe {
+            munmap(self.sqes as *mut c_void, self.sqes_len);
+            munmap(self.cq_ring as *mut c_void, self.cq_ring_len);
+            munmap(self.sq_ring as *mut c_void, self.sq_ring_len);
+            close(self.fd);
+        }
+    }
+}
+
+/// Lane-thread ring slot: lazily created, poisoned on failure so a
+/// broken lane doesn't retry ring setup on every batch.
+enum LaneSlot {
+    Untried,
+    Ready(Ring),
+    Broken,
+}
+
+thread_local! {
+    static LANE_RING: RefCell<LaneSlot> = const { RefCell::new(LaneSlot::Untried) };
+}
+
+/// The batched [`SubmitBackend`]: per-lane io_uring rings over the
+/// staging pool's registered buffers. Create once per
+/// [`crate::io::runtime::IoRuntime`] (or standalone resource set) via
+/// [`RingBackend::create`]; clone-free sharing through
+/// `Arc<dyn SubmitBackend>`.
+pub struct RingBackend {
+    /// Ring size: smallest power of two fitting a full batch plus the
+    /// chained flush op.
+    entries: u32,
+    /// Frozen `(base address, capacity)` registration table of the
+    /// staging pool, pinned by each lane ring at creation. The Arc's
+    /// address doubles as the identity token lane rings check so a ring
+    /// never serves a table it did not register.
+    slots: Arc<Vec<(usize, usize)>>,
+}
+
+impl RingBackend {
+    /// Resolve the ring backend for `cfg` against `pool`: verify
+    /// io_uring works in this process (setup + teardown of a probe
+    /// ring), then freeze and adopt the pool's registration table.
+    /// Errors report why the environment cannot run the ring path.
+    pub fn create(cfg: &IoConfig, pool: &BufferPool) -> Result<RingBackend, String> {
+        drop(Ring::new(4, &[], 0)?);
+        let slots = Arc::new(pool.registration_slots());
+        let entries = (cfg.queue_depth.max(1) as u32 + 1).next_power_of_two().max(8);
+        Ok(RingBackend { entries, slots })
+    }
+
+    /// Run `f` against this lane's ring, creating (and registering) it
+    /// on first use. `None` when the ring cannot be built on this
+    /// thread — callers fall back to positioned writes.
+    fn with_ring<R>(&self, f: impl FnOnce(&mut Ring) -> R) -> Option<R> {
+        LANE_RING.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            let owner = Arc::as_ptr(&self.slots) as usize;
+            // A lane thread serves exactly one backend in practice; if
+            // it ever sees another (fresh runtime in tests), rebuild so
+            // registered slots always match the pool being drained.
+            if matches!(&*slot, LaneSlot::Ready(r) if r.owner != owner) {
+                *slot = LaneSlot::Untried;
+            }
+            if matches!(&*slot, LaneSlot::Untried) {
+                *slot = match Ring::new(self.entries, &self.slots, owner) {
+                    Ok(ring) => LaneSlot::Ready(ring),
+                    Err(_) => LaneSlot::Broken,
+                };
+            }
+            match &mut *slot {
+                LaneSlot::Ready(ring) => Some(f(ring)),
+                _ => None,
+            }
+        })
+    }
+}
+
+/// Per-extent positioned-write fallback used when the ring itself fails
+/// mid-flight: positioned writes are idempotent, so re-issuing a batch
+/// whose ring submission partially completed is safe.
+fn fallback_batch(file: &File, entries: &[BatchEntry], link_fsync: bool) -> BatchReport {
+    let mut results = Vec::with_capacity(entries.len());
+    for e in entries {
+        results.push(file.write_all_at(&e.buf.filled()[..e.len], e.offset));
+    }
+    let fsync_err = if link_fsync { file.sync_data().err() } else { None };
+    BatchReport {
+        results,
+        stats: BatchStats {
+            fsync_done: link_fsync && fsync_err.is_none(),
+            ..BatchStats::default()
+        },
+        fsync_err,
+    }
+}
+
+impl SubmitBackend for RingBackend {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn submit_batch(&self, file: &File, entries: &[BatchEntry], link_fsync: bool) -> BatchReport {
+        match self.with_ring(|ring| ring.submit(file, entries, link_fsync)) {
+            Some(Ok(report)) => report,
+            // Ring unavailable on this thread or failed as a whole:
+            // honest fallback (no batched_submissions counted).
+            Some(Err(_)) | None => fallback_batch(file, entries, link_fsync),
+        }
+    }
+}
+
+static PROBE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Capability probe for one filesystem: build a throwaway ring, write
+/// one aligned block to a scratch file in `dir` through it with a
+/// chained datasync flush, and verify every completion. Mirrors the
+/// O_DIRECT probe's contract: `Err(reason)` is a definitive "use the
+/// sync path here", cached per device by
+/// [`crate::io::device::DeviceMap::ring_capability_for`].
+pub fn probe_ring(dir: &Path) -> Result<(), String> {
+    let mut ring = Ring::new(4, &[], 0)?;
+    let name = format!(
+        ".fp-ring-probe-{}-{}",
+        std::process::id(),
+        PROBE_SEQ.fetch_add(1, Ordering::Relaxed)
+    );
+    let path = dir.join(name);
+    let result = (|| {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| format!("probe open: {e}"))?;
+        let len = 4096usize;
+        let mut buf = AlignedBuf::new(len, len);
+        buf.stage(&[7u8; 4096]);
+        let entry = BatchEntry { buf, offset: 0, len };
+        let report = ring.submit(&file, std::slice::from_ref(&entry), true)?;
+        match &report.results[0] {
+            Ok(()) => {}
+            Err(e) => return Err(format!("probe ring write: {e}")),
+        }
+        if let Some(e) = report.fsync_err {
+            return Err(format!("probe chained fsync: {e}"));
+        }
+        if report.stats.submissions == 0 {
+            return Err("probe made no batched submission".into());
+        }
+        Ok(())
+    })();
+    let _ = std::fs::remove_file(&path);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::engine::scratch_dir;
+
+    #[test]
+    fn sqe_cqe_layouts_are_abi_sized() {
+        assert_eq!(std::mem::size_of::<Sqe>(), 64);
+        assert_eq!(std::mem::size_of::<Cqe>(), 16);
+        assert_eq!(std::mem::size_of::<IoUringParams>(), 120);
+        assert_eq!(std::mem::size_of::<Iovec>(), 16);
+    }
+
+    #[test]
+    fn probe_and_batched_write_roundtrip_or_unsupported() {
+        // On a kernel/sandbox without io_uring the probe must fail with
+        // a reason (that is the graceful-skip contract the CI feature
+        // job relies on); where it passes, a multi-entry batch must
+        // land bit-identical bytes with one submission syscall.
+        let dir = scratch_dir("uring-probe").unwrap();
+        match probe_ring(&dir) {
+            Err(reason) => {
+                assert!(!reason.is_empty(), "unsupported probe must carry a reason");
+                eprintln!("skipping ring roundtrip: {reason}");
+            }
+            Ok(()) => {
+                let mut ring = Ring::new(8, &[], 0).unwrap();
+                let path = dir.join("batch.bin");
+                let file = std::fs::OpenOptions::new()
+                    .create(true)
+                    .write(true)
+                    .truncate(true)
+                    .open(&path)
+                    .unwrap();
+                let mut entries = Vec::new();
+                for i in 0..3u8 {
+                    let mut buf = AlignedBuf::new(4096, 4096);
+                    buf.stage(&[i + 1; 4096]);
+                    entries.push(BatchEntry { buf, offset: i as u64 * 4096, len: 4096 });
+                }
+                let report = ring.submit(&file, &entries, true).unwrap();
+                assert!(report.results.iter().all(|r| r.is_ok()));
+                assert!(report.fsync_err.is_none());
+                assert!(report.stats.fsync_done, "chained fsync must complete");
+                assert!(report.stats.submissions >= 1);
+                assert_eq!(report.stats.sqes, 4, "3 writes + 1 linked flush op");
+                assert_eq!(report.stats.completions, 4);
+                let mut want = Vec::new();
+                for i in 0..3u8 {
+                    want.extend_from_slice(&[i + 1; 4096]);
+                }
+                assert_eq!(std::fs::read(&path).unwrap(), want);
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -13,7 +13,7 @@ use std::process::ExitCode;
 use fastpersist::checkpoint::strategy::WriterStrategy;
 use fastpersist::figures;
 use fastpersist::io::device::DeviceMap;
-use fastpersist::io::engine::{EngineKind, IoConfig};
+use fastpersist::io::engine::{EngineKind, IoBackend, IoConfig};
 use fastpersist::runtime::artifacts::ArtifactManifest;
 use fastpersist::training::looper::{CkptRunMode, Trainer, TrainerConfig};
 use fastpersist::util::bytes::human;
@@ -105,6 +105,9 @@ fn train_spec(name: &'static str) -> ArgSpec {
         .opt("segment-bytes", "target payload bytes per delta segment file \
                                (>= 4 KiB)", "64MiB")
         .opt("engine", "buffered|single|double", "double")
+        .opt("io-backend", "sync | ring | auto drain-lane submission backend \
+                            (ring batches queue-depth extents per syscall; auto \
+                            probes and falls back to sync)", "auto")
         .opt("io-buf", "IO buffer size", "32MiB")
         .opt("queue-depth", "submission-queue depth per write (>= 1; 1 = single \
                              buffering, 2+ = double buffering)", "2")
@@ -146,6 +149,7 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
         .parse(args)?;
     let manifest = ArtifactManifest::load(&ArtifactManifest::default_dir())?;
     let mut io = IoConfig::with_kind(EngineKind::parse(parsed.get("engine"))?);
+    io.backend = IoBackend::parse(parsed.get("io-backend"))?;
     io.io_buf_size = parsed.get_size("io-buf")? as usize;
     let queue_depth = parsed.get_usize("queue-depth")?;
     if queue_depth == 0 {
@@ -199,7 +203,8 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
             // write-job/fsync metrics printed after the run
             Some(r) => println!(
                 "resumed at step {}: restored {} in {} read jobs \
-                 ({} runs, {} coalesced chunk reads, {} preads) — {:.2} GB/s",
+                 ({} runs, {} coalesced chunk reads, {} preads) — {:.2} GB/s \
+                 (checkpoint written via {} submission)",
                 t.state.step,
                 human(r.total_bytes),
                 r.stats.jobs,
@@ -207,6 +212,7 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
                 r.stats.coalesced,
                 r.stats.preads,
                 r.gbps(),
+                r.io_backend.as_deref().unwrap_or("pre-v6/unknown"),
             ),
             None => println!("resumed at step {}", t.state.step),
         }
@@ -271,6 +277,23 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
                 "buffered fallback (probe rejected O_DIRECT or durability off)"
             },
         );
+        // Which submission path drained the lanes: batched_submissions
+        // is zero end to end on the sync backend, non-zero proves the
+        // ring path issued one syscall per queue-depth batch.
+        let batched = r.total("ckpt_batched_submissions");
+        println!(
+            "ckpt submit backend {}: {:.0} batched submissions, {:.0} max sqes/submit, \
+             {:.0} completions reaped — {}",
+            trainer.io_runtime().submit_backend_name(&trainer.cfg.ckpt_dir),
+            batched,
+            r.summary("ckpt_sqes_per_submit_max").max,
+            r.total("ckpt_completions_reaped"),
+            if batched > 0.0 {
+                "ring path engaged"
+            } else {
+                "per-extent sync submission"
+            },
+        );
     }
     let drain_total = r.total("drain_s");
     if drain_total > 0.0 {
@@ -321,6 +344,7 @@ fn cmd_ckpt_write(args: Vec<String>) -> Result<()> {
     let spec = ArgSpec::new("fastpersist ckpt-write", "checkpoint write microbenchmark")
         .opt("size", "checkpoint payload size", "256MiB")
         .opt("engine", "buffered|single|double", "double")
+        .opt("io-backend", "sync | ring | auto drain-lane submission backend", "auto")
         .opt("io-buf", "IO buffer size", "32MiB")
         .opt("devices", "none | simN | dir,dir,...", "none")
         .opt("writers", "parallel writer threads", "1")
@@ -329,6 +353,7 @@ fn cmd_ckpt_write(args: Vec<String>) -> Result<()> {
     let parsed = spec.parse(args)?;
     let size = parsed.get_size("size")? as usize;
     let mut io = IoConfig::with_kind(EngineKind::parse(parsed.get("engine"))?);
+    io.backend = IoBackend::parse(parsed.get("io-backend"))?;
     io.io_buf_size = parsed.get_size("io-buf")? as usize;
     if !parsed.has("durable") {
         io = io.microbench();
@@ -357,12 +382,16 @@ fn cmd_ckpt_write(args: Vec<String>) -> Result<()> {
         writer_threads: writers.max(defaults.writer_threads),
         ..defaults
     }));
-    let engine = CheckpointEngine::with_runtime(runtime, WriterStrategy::AllReplicas);
+    let engine = CheckpointEngine::with_runtime(runtime.clone(), WriterStrategy::AllReplicas);
     let mut times = Vec::new();
+    let (mut batched, mut reaped, mut sqes_max) = (0u64, 0u64, 0u64);
     for i in 0..reps {
         let d = dir.join(format!("rep{i}"));
         let out = engine.write(&store, Default::default(), &d, &group)?;
         times.push(out.latency.as_secs_f64());
+        batched += out.batched_submissions();
+        reaped += out.completions_reaped();
+        sqes_max = sqes_max.max(out.sqes_per_submit_max());
         let _ = std::fs::remove_dir_all(&d);
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -374,6 +403,11 @@ fn cmd_ckpt_write(args: Vec<String>) -> Result<()> {
         writers,
         t * 1e3,
         size as f64 / 1e9 / t
+    );
+    println!(
+        "submit backend {}: {batched} batched submissions, {sqes_max} max sqes/submit, \
+         {reaped} completions reaped",
+        runtime.submit_backend_name(&dir),
     );
     let _ = std::fs::remove_dir_all(&dir);
     Ok(())

@@ -179,6 +179,10 @@ pub struct RestoreReport {
     pub latency: std::time::Duration,
     /// Stream bytes the restore assembled.
     pub total_bytes: u64,
+    /// Submission backend recorded in the restored checkpoint's
+    /// manifest (`"sync"` / `"ring"`; `None` on pre-field manifests) —
+    /// restore logs report which path produced the checkpoint.
+    pub io_backend: Option<String>,
 }
 
 impl RestoreReport {
@@ -286,6 +290,7 @@ impl Trainer {
             total_bytes: loaded.manifest.total_len,
             latency: loaded.latency,
             stats: loaded.stats,
+            io_backend: loaded.manifest.io_backend.clone(),
         };
         trainer.recorder.record("ckpt_read_bytes", report.stats.bytes as f64);
         trainer.recorder.record("ckpt_read_jobs", report.stats.jobs as f64);
@@ -452,7 +457,7 @@ impl Trainer {
     /// metric is comparable across modes), while job/fsync counts come
     /// from the per-partition/per-segment [`crate::io::WriteStats`].
     fn harvest_pipe_outcomes(&mut self) {
-        let harvested: Vec<(f64, u64, u64, u64, u64, u64)> = match self.pipe.as_ref() {
+        let harvested: Vec<(f64, u64, u64, u64, u64, u64, [u64; 3])> = match self.pipe.as_ref() {
             Some(pipe) => pipe.completed[self.pipe_seen..]
                 .iter()
                 .map(|o| {
@@ -463,19 +468,21 @@ impl Trainer {
                         o.stats.iter().map(|s| s.fsyncs).sum::<u64>(),
                         o.direct_extents(),
                         o.bounce_bytes(),
+                        [o.batched_submissions(), o.sqes_per_submit_max(), o.completions_reaped()],
                     )
                 })
                 .collect(),
             None => return,
         };
         self.pipe_seen += harvested.len();
-        for (latency, bytes, jobs, fsyncs, direct_extents, bounce) in harvested {
+        for (latency, bytes, jobs, fsyncs, direct_extents, bounce, ring) in harvested {
             self.recorder.record("ckpt_latency_s", latency);
             self.recorder.record("ckpt_written_bytes", bytes as f64);
             self.recorder.record("ckpt_write_jobs", jobs as f64);
             self.recorder.record("ckpt_fsyncs", fsyncs as f64);
             self.recorder.record("ckpt_direct_extents", direct_extents as f64);
             self.recorder.record("ckpt_bounce_bytes", bounce as f64);
+            self.record_ring_counters(ring);
         }
     }
 
@@ -485,25 +492,31 @@ impl Trainer {
     /// helper-side flush time per generation, the concurrent-work
     /// counterpart of the trainer-side `stall_s`.
     fn harvest_lazy_outcomes(&mut self) {
-        let harvested: Vec<(f64, f64, u64, u64, u64, u64, u64)> = match self.lazy.as_ref() {
-            Some(lz) => lz.completed[self.lazy_seen..]
-                .iter()
-                .map(|o| {
-                    (
-                        o.drain.as_secs_f64(),
-                        o.outcome.latency.as_secs_f64(),
-                        o.outcome.written_bytes,
-                        o.outcome.stats.len() as u64,
-                        o.outcome.stats.iter().map(|s| s.fsyncs).sum::<u64>(),
-                        o.outcome.direct_extents(),
-                        o.outcome.bounce_bytes(),
-                    )
-                })
-                .collect(),
-            None => return,
-        };
+        let harvested: Vec<(f64, f64, u64, u64, u64, u64, u64, [u64; 3])> =
+            match self.lazy.as_ref() {
+                Some(lz) => lz.completed[self.lazy_seen..]
+                    .iter()
+                    .map(|o| {
+                        (
+                            o.drain.as_secs_f64(),
+                            o.outcome.latency.as_secs_f64(),
+                            o.outcome.written_bytes,
+                            o.outcome.stats.len() as u64,
+                            o.outcome.stats.iter().map(|s| s.fsyncs).sum::<u64>(),
+                            o.outcome.direct_extents(),
+                            o.outcome.bounce_bytes(),
+                            [
+                                o.outcome.batched_submissions(),
+                                o.outcome.sqes_per_submit_max(),
+                                o.outcome.completions_reaped(),
+                            ],
+                        )
+                    })
+                    .collect(),
+                None => return,
+            };
         self.lazy_seen += harvested.len();
-        for (drain, latency, bytes, jobs, fsyncs, direct_extents, bounce) in harvested {
+        for (drain, latency, bytes, jobs, fsyncs, direct_extents, bounce, ring) in harvested {
             self.recorder.record("drain_s", drain);
             self.recorder.record("ckpt_latency_s", latency);
             self.recorder.record("ckpt_written_bytes", bytes as f64);
@@ -511,7 +524,18 @@ impl Trainer {
             self.recorder.record("ckpt_fsyncs", fsyncs as f64);
             self.recorder.record("ckpt_direct_extents", direct_extents as f64);
             self.recorder.record("ckpt_bounce_bytes", bounce as f64);
+            self.record_ring_counters(ring);
         }
+    }
+
+    /// Record one checkpoint's submission-backend counters:
+    /// `[batched_submissions, sqes_per_submit_max, completions_reaped]`.
+    /// All three stay zero end to end on the sync backend, which is the
+    /// CLI summary's (and the bench rows') proof of which path ran.
+    fn record_ring_counters(&mut self, ring: [u64; 3]) {
+        self.recorder.record("ckpt_batched_submissions", ring[0] as f64);
+        self.recorder.record("ckpt_sqes_per_submit_max", ring[1] as f64);
+        self.recorder.record("ckpt_completions_reaped", ring[2] as f64);
     }
 
     /// The run's persistent I/O runtime (staging-pool counters, device
@@ -667,6 +691,11 @@ impl Trainer {
                     self.recorder.record("ckpt_fsyncs", out.fsyncs as f64);
                     self.recorder.record("ckpt_direct_extents", out.direct_extents() as f64);
                     self.recorder.record("ckpt_bounce_bytes", out.bounce_bytes() as f64);
+                    self.record_ring_counters([
+                        out.batched_submissions(),
+                        out.sqes_per_submit_max(),
+                        out.completions_reaped(),
+                    ]);
                     self.recorder.count("ckpts", 1);
                 }
                 // Baseline and Sync share the persistent engine built at
@@ -684,6 +713,11 @@ impl Trainer {
                         .record("ckpt_fsyncs", out.stats.iter().map(|s| s.fsyncs).sum::<u64>() as f64);
                     self.recorder.record("ckpt_direct_extents", out.direct_extents() as f64);
                     self.recorder.record("ckpt_bounce_bytes", out.bounce_bytes() as f64);
+                    self.record_ring_counters([
+                        out.batched_submissions(),
+                        out.sqes_per_submit_max(),
+                        out.completions_reaped(),
+                    ]);
                     self.recorder.count("ckpts", 1);
                 }
                 CkptRunMode::Pipelined => {

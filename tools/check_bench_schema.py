@@ -14,6 +14,11 @@ trajectory tooling consumes keep their shape. Common rules for every
 
 Tag-specific rules:
 
+  * fig8 — the submission-backend sweep must emit one row per backend
+    (sync, ring, auto), each row name carrying resolved= plus the ring
+    counters (batched_submissions=, sqes_max=, reaped=); on tmpfs CI
+    ring/auto resolve to sync with zero counters, but the rows must
+    still be present so trajectories stay comparable
   * fig11 — every lazy-path row (name contains "lazy") carries numeric
     stall_s and drain_s extras, and at least one lazy row exists (the
     synthetic section must always run, artifacts or not)
@@ -74,7 +79,29 @@ def check_serve(results):
     return f"{cold} cold / {warm} warm rows"
 
 
-TAG_CHECKS = {"fig11": check_fig11, "serve": check_serve}
+def check_fig8(results):
+    backends = {}
+    for r in results:
+        m = re.search(r"\bbackend=(\w+)", r["name"])
+        if not m:
+            continue
+        backends[m.group(1)] = r["name"]
+        for key in ("resolved=", "batched_submissions=", "sqes_max=", "reaped="):
+            if key not in r["name"]:
+                fail(f"backend row {r['name']!r} must carry {key} in its name")
+    for want in ("sync", "ring", "auto"):
+        if want not in backends:
+            fail(
+                f"backend sweep must emit a backend={want} row "
+                f"(got {sorted(backends)})"
+            )
+    sync_row = backends["sync"]
+    if "batched_submissions=0" not in sync_row:
+        fail(f"sync backend row must report batched_submissions=0, got {sync_row!r}")
+    return f"backend rows: {', '.join(sorted(backends))}"
+
+
+TAG_CHECKS = {"fig8": check_fig8, "fig11": check_fig11, "serve": check_serve}
 
 
 def main():
