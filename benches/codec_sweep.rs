@@ -1,0 +1,224 @@
+//! Bench: the per-chunk codec stage — `none` vs `lz4` vs `qdelta`
+//! across full-snapshot and delta-chain workloads at two mutation
+//! rates.
+//!
+//! Workload: a structured low-entropy payload (512-byte value runs, the
+//! shape of embedding/weight pages that block compressors exploit),
+//! mutated per step by small-magnitude scattered updates
+//! (`wrapping_add(1)` every 64 bytes inside the dirty chunk subset) —
+//! the regime where quantized deltas against the chunk's previous bytes
+//! crush to near-nothing. Every cell writes a chain through the
+//! codec-capable [`DeltaCheckpointer`] (`max_chain = 0` is the
+//! full-snapshot shape: every checkpoint a fresh base), then restores
+//! the final checkpoint and asserts the decoded bytes are identical to
+//! the live store — the bit-identity acceptance check, per cell.
+//!
+//! Expectations encoded as assertions:
+//!   * `none` rows store exactly their raw bytes (ratio 1.0);
+//!   * at least one non-`none` codec reaches `bytes_encoded /
+//!     bytes_raw <= 0.5` on the delta-chain workload at the low
+//!     mutation rate;
+//!   * `qdelta` under the full-snapshot shape degrades to raw (a base
+//!     has no prior image to diff against) — ratio 1.0 by design.
+//!
+//! Emits `BENCH_codec.json`: one row per codec × workload × mutation
+//! rate, each carrying `bytes_raw` / `bytes_encoded` / `encode_s` /
+//! `decode_s` / `ratio` extras.
+//!
+//!     cargo bench --bench codec_sweep
+//!     FASTPERSIST_BENCH_FAST=1 cargo bench --bench codec_sweep   (CI-speed)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastpersist::benchkit::{write_bench_json, BenchGroup, BenchResult};
+use fastpersist::checkpoint::codec::CodecKind;
+use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
+use fastpersist::checkpoint::load::{load_checkpoint_with, RestoreOptions};
+use fastpersist::io::engine::{scratch_dir, IoConfig};
+use fastpersist::io::runtime::{IoRuntime, IoRuntimeConfig};
+use fastpersist::tensor::{DType, Tensor, TensorStore};
+use fastpersist::util::bytes::human;
+use fastpersist::util::json::Json;
+use fastpersist::util::stats::Summary;
+use fastpersist::util::table::Table;
+
+/// Structured low-entropy payload: 512-byte runs of a slowly varying
+/// value, the compressible shape of real weight/embedding pages.
+fn payload_store(n: usize) -> TensorStore {
+    let mut data = vec![0u8; n];
+    for (i, b) in data.iter_mut().enumerate() {
+        *b = ((i / 512) & 0xff) as u8;
+    }
+    let mut store = TensorStore::new();
+    store.push(Tensor::new("params", DType::U8, vec![n], data).unwrap()).unwrap();
+    store
+}
+
+/// Small-magnitude scattered updates in `rate` of the chunks: bump one
+/// byte every 64 inside each dirty chunk. The diff against the chunk's
+/// previous bytes is mostly zeros (qdelta crushes it); the runs between
+/// touched bytes stay intact (lz4 still compresses the raw chunk).
+fn mutate(store: &mut TensorStore, rate: f64, step: u64, chunk: usize) {
+    let t = store.get("params").unwrap();
+    let mut data = t.data.as_slice().to_vec();
+    let n_chunks = data.len().div_ceil(chunk).max(1);
+    let dirty = ((n_chunks as f64 * rate).ceil() as usize).clamp(1, n_chunks);
+    let stride = (n_chunks / dirty).max(1);
+    for k in 0..dirty {
+        let ci = ((step as usize).wrapping_mul(7) + k * stride) % n_chunks;
+        let start = ci * chunk;
+        let end = (start + chunk).min(data.len());
+        let mut off = start + 32;
+        while off < end {
+            data[off] = data[off].wrapping_add(1);
+            off += 64;
+        }
+    }
+    store.update("params", data).unwrap();
+}
+
+fn extra(step: u64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Int(step as i64));
+    m
+}
+
+/// One grid cell: a chain of `iters` writes under (codec, chain shape,
+/// mutation rate), then a decoded restore verified bit-identical to the
+/// live store. Returns the bench row and the achieved codec ratio.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    runtime: &Arc<IoRuntime>,
+    base: &Path,
+    codec: CodecKind,
+    kind: &str,
+    max_chain: u64,
+    rate: f64,
+    payload: usize,
+    chunk: u64,
+    iters: u64,
+) -> (BenchResult, f64) {
+    let dir = base.join(format!("{}-{}-m{:03}", codec.name(), kind, (rate * 100.0) as u32));
+    let mut writer = DeltaCheckpointer::new(
+        Arc::clone(runtime),
+        DeltaConfig { chunk_size: chunk, max_chain, codec, ..DeltaConfig::default() },
+    );
+    let mut store = payload_store(payload);
+    writer.write(&store, extra(0), &dir.join("step-00000000")).unwrap();
+
+    let mut lats = Vec::new();
+    let (mut raw, mut enc, mut stored) = (0u64, 0u64, 0u64);
+    let mut encode_s = 0f64;
+    for step in 1..=iters {
+        mutate(&mut store, rate, step, chunk as usize);
+        let t0 = Instant::now();
+        let out = writer.write(&store, extra(step), &dir.join(format!("step-{step:08}"))).unwrap();
+        lats.push(t0.elapsed().as_secs_f64());
+        raw += out.bytes_raw;
+        enc += out.bytes_encoded;
+        stored += out.written_bytes;
+        encode_s += out.encode.as_secs_f64();
+    }
+
+    // Bit-identity acceptance: the decoded restore of the chain tip must
+    // reproduce the live store exactly, whatever the codec did.
+    let loaded = load_checkpoint_with(
+        &dir.join(format!("step-{iters:08}")),
+        runtime,
+        RestoreOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(
+        loaded.store.get("params").unwrap().data.as_slice(),
+        store.get("params").unwrap().data.as_slice(),
+        "decoded restore must be byte-identical ({} {kind} m={rate})",
+        codec.name(),
+    );
+    let decode_s = loaded.stats.decode.as_secs_f64();
+
+    let ratio = if raw == 0 { 1.0 } else { enc as f64 / raw as f64 };
+    let result = BenchResult {
+        name: format!("codec={} {kind} m={rate:.2}", codec.name()),
+        summary: Summary::of(&lats),
+        bytes_per_iter: Some(stored / iters),
+        extras: vec![
+            ("bytes_raw".to_string(), raw as f64),
+            ("bytes_encoded".to_string(), enc as f64),
+            ("encode_s".to_string(), encode_s),
+            ("decode_s".to_string(), decode_s),
+            ("ratio".to_string(), ratio),
+        ],
+    };
+    println!("  {}  ratio {ratio:.3}", result.report_line());
+    (result, ratio)
+}
+
+fn main() {
+    let fast = std::env::var("FASTPERSIST_BENCH_FAST").as_deref() == Ok("1");
+    let payload: usize = if fast { 4 << 20 } else { 16 << 20 };
+    let iters: u64 = if fast { 3 } else { 6 };
+    let chunk: u64 = 256 << 10;
+    let rates = [0.02, 0.25];
+
+    let base = scratch_dir("bench-codec").unwrap();
+    let runtime = Arc::new(IoRuntime::new(IoRuntimeConfig {
+        io: IoConfig::fastpersist().microbench(),
+        ..IoRuntimeConfig::default()
+    }));
+    runtime.staging().prewarm();
+
+    println!(
+        "\n=== codec sweep ({} payload, {} chunks, {} steps/cell) ===",
+        human(payload as u64),
+        human(chunk),
+        iters,
+    );
+
+    let mut group = BenchGroup::new("codec sweep: none/lz4/qdelta x full/delta x mutation rate");
+    let mut table = Table::new(vec!["codec", "shape", "mutation", "stored/ckpt", "ratio"]);
+    let mut best_delta_low = f64::INFINITY;
+    for codec in [CodecKind::None, CodecKind::Lz4, CodecKind::QuantDelta] {
+        for (kind, max_chain) in [("full", 0u64), ("delta", u64::MAX)] {
+            for rate in rates {
+                let (r, ratio) = run_cell(
+                    &runtime, &base, codec, kind, max_chain, rate, payload, chunk, iters,
+                );
+                if codec == CodecKind::None {
+                    assert!(
+                        (ratio - 1.0).abs() < 1e-9,
+                        "codec none must store raw bytes exactly, got ratio {ratio}"
+                    );
+                }
+                if codec != CodecKind::None && kind == "delta" && rate == rates[0] {
+                    best_delta_low = best_delta_low.min(ratio);
+                }
+                table.row(vec![
+                    codec.name().to_string(),
+                    kind.to_string(),
+                    format!("{:.0}%", rate * 100.0),
+                    human(r.bytes_per_iter.unwrap_or(0)),
+                    format!("{ratio:.3}"),
+                ]);
+                group.results.push(r);
+            }
+        }
+    }
+    println!("{}", table.render());
+    // The headline acceptance: on the delta-chain workload at the low
+    // mutation rate, at least one codec must at least halve the stored
+    // bytes.
+    assert!(
+        best_delta_low <= 0.5,
+        "no codec reached bytes_encoded/bytes_raw <= 0.5 on the low-mutation \
+         delta workload (best {best_delta_low:.3})"
+    );
+    println!(
+        "best low-mutation delta-chain ratio {best_delta_low:.3} (target: <= 0.5)"
+    );
+
+    let _ = write_bench_json("codec", &[&group]);
+    let _ = std::fs::remove_dir_all(&base);
+}

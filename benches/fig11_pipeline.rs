@@ -278,6 +278,7 @@ fn run_mode(
         strategy: WriterStrategy::AllReplicas,
         ckpt_strategy: CheckpointStrategy::Full,
         segment_bytes: 64 << 20,
+        ckpt_codec: fastpersist::checkpoint::codec::CodecKind::None,
         io: IoConfig::fastpersist().microbench(),
         devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,

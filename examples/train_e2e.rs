@@ -30,13 +30,17 @@ fn main() -> fastpersist::Result<()> {
         strategy: WriterStrategy::AllReplicas,
         ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::Full,
         segment_bytes: 64 << 20,
+        ckpt_codec: fastpersist::checkpoint::codec::CodecKind::None,
         io: IoConfig::fastpersist().microbench(),
         devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,
         grad_accum: 1,
         seed: 0,
         keep_last: 2,
+        lazy_staging_bytes: 256 << 20,
+        lazy_max_generations: 2,
         gc_occupancy: 0.5,
+        serve_cache_bytes: 0,
         log_every: 10,
     };
     let mut trainer = Trainer::new(&manifest, cfg)?;

@@ -1,0 +1,743 @@
+//! Pluggable per-chunk codec stage for the checkpoint write path.
+//!
+//! FastPersist makes every written byte cheaper (parallel writers,
+//! O_DIRECT drains, ring submission); the complementary lever — the one
+//! Check-N-Run (arXiv:2010.08679) reports ~17x from — is writing fewer
+//! bytes. This module supplies that stage: dirty chunks are encoded
+//! **between serialization and segment packing**, so the
+//! [`crate::checkpoint::plan::WritePlan`] / drain-lane / ring mechanics
+//! below stay byte-oriented and untouched — they see opaque payloads of
+//! whatever length the codec produced.
+//!
+//! Three codecs:
+//!
+//! * [`CodecKind::None`] — identity; the chunk's raw bytes are stored.
+//! * [`CodecKind::Lz4`] — LZ77-style block compression in the spirit of
+//!   the LZ4 block format (greedy hash-chain matching, 4-bit
+//!   literal/match length nibbles with 255-run extensions, 16-bit match
+//!   offsets), implemented entirely in-repo so no dependency is added.
+//! * [`CodecKind::QuantDelta`] — a *quantized delta*: the wrapping
+//!   byte-difference against the chunk's **base** (the most recent
+//!   raw-stored version of the same chunk index) is stored as zero-runs
+//!   plus 4-bit-packed small diffs, with a raw-literal escape for bytes
+//!   whose diff does not quantize. Decoding is **exact** — the escape
+//!   op preserves full precision — so restores are always bit-identical
+//!   and chain compaction (which rewrites raw bytes) guarantees no
+//!   representation ever feeds a *second* level of quantization: diffs
+//!   are depth-1 against a raw base by construction.
+//!
+//! Every codec is lossless after decode. The manifest keeps the **raw**
+//! chunk hash, and the read path verifies the *decoded* bytes against
+//! it, so a corrupted encoded stream either fails the decoder's own
+//! fail-closed checks or trips the existing hash verification — garbage
+//! bytes are never handed to the caller.
+
+use crate::{Error, Result};
+
+/// Which codec encoded a chunk's stored bytes. The `u8` values are the
+/// on-disk codec ids in the manifest v6 chunk table — append-only,
+/// never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum CodecKind {
+    /// Identity: stored bytes are the chunk's raw bytes.
+    #[default]
+    None = 0,
+    /// In-repo LZ77 block compression ([`lz4_compress`]).
+    Lz4 = 1,
+    /// Quantized delta against the chunk's raw base ([`qdelta_encode`]).
+    QuantDelta = 2,
+}
+
+impl CodecKind {
+    /// CLI / manifest-facing name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecKind::None => "none",
+            CodecKind::Lz4 => "lz4",
+            CodecKind::QuantDelta => "qdelta",
+        }
+    }
+
+    /// Parse a CLI spelling (`none` / `lz4` / `qdelta`).
+    pub fn parse(s: &str) -> Result<CodecKind> {
+        match s {
+            "none" => Ok(CodecKind::None),
+            "lz4" => Ok(CodecKind::Lz4),
+            "qdelta" => Ok(CodecKind::QuantDelta),
+            other => Err(Error::Config(format!(
+                "unknown checkpoint codec {other:?} (expected none|lz4|qdelta)"
+            ))),
+        }
+    }
+
+    /// On-disk codec id (manifest v6 chunk record byte 36).
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`CodecKind::as_u8`], fail-closed on unknown ids.
+    pub fn from_u8(b: u8) -> Result<CodecKind> {
+        match b {
+            0 => Ok(CodecKind::None),
+            1 => Ok(CodecKind::Lz4),
+            2 => Ok(CodecKind::QuantDelta),
+            other => Err(Error::Format(format!("unknown codec id {other}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for CodecKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Encode one chunk under `kind`. `base` is the chunk's raw base bytes
+/// and is required (same length as `raw`) for [`CodecKind::QuantDelta`].
+/// Returns the encoded payload; callers apply their own benefit gate
+/// (store raw when the encoding didn't shrink).
+pub fn encode_chunk(kind: CodecKind, raw: &[u8], base: Option<&[u8]>) -> Result<Vec<u8>> {
+    match kind {
+        CodecKind::None => Ok(raw.to_vec()),
+        CodecKind::Lz4 => Ok(lz4_compress(raw)),
+        CodecKind::QuantDelta => {
+            let base = base.ok_or_else(|| {
+                Error::Format("qdelta encode requires a base chunk".into())
+            })?;
+            qdelta_encode(raw, base)
+        }
+    }
+}
+
+/// Decode one chunk's encoded payload into `dest` (whose length is the
+/// chunk's raw length). Fail-closed: truncated or malformed streams,
+/// output over- or underrun, and missing bases yield a typed error —
+/// never a panic, never a partially-filled `dest` reported as success.
+pub fn decode_chunk_into(
+    kind: CodecKind,
+    enc: &[u8],
+    base: Option<&[u8]>,
+    dest: &mut [u8],
+) -> Result<()> {
+    match kind {
+        CodecKind::None => {
+            if enc.len() != dest.len() {
+                return Err(Error::Format(format!(
+                    "codec none: stored {} bytes for a {}-byte chunk",
+                    enc.len(),
+                    dest.len()
+                )));
+            }
+            dest.copy_from_slice(enc);
+            Ok(())
+        }
+        CodecKind::Lz4 => lz4_decompress_into(enc, dest),
+        CodecKind::QuantDelta => {
+            let base = base.ok_or_else(|| {
+                Error::Format("qdelta decode requires the base chunk bytes".into())
+            })?;
+            qdelta_decode_into(enc, base, dest)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// LZ77 block codec
+// ---------------------------------------------------------------------
+
+/// Hash-table size for match finding (2^13 entries ≈ 32 KiB of u32s).
+const LZ_HASH_BITS: u32 = 13;
+/// Minimum match length worth a copy token.
+const LZ_MIN_MATCH: usize = 4;
+/// Maximum back-reference distance (16-bit offset field).
+const LZ_MAX_OFFSET: usize = 0xffff;
+
+fn lz_hash(word: u32) -> usize {
+    (word.wrapping_mul(2654435761) >> (32 - LZ_HASH_BITS)) as usize
+}
+
+fn lz_word(src: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(src[i..i + 4].try_into().unwrap())
+}
+
+/// Append `n` as a 255-run extension (LZ4 style): bytes of 255 summing
+/// toward `n`, terminated by the final byte < 255.
+fn push_run(out: &mut Vec<u8>, mut n: usize) {
+    while n >= 255 {
+        out.push(255);
+        n -= 255;
+    }
+    out.push(n as u8);
+}
+
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], m: Option<(usize, usize)>) {
+    let lit_code = literals.len().min(15);
+    // match code 0 is reserved for the terminal literals-only sequence;
+    // real matches are ≥ LZ_MIN_MATCH so their code is ≥ 1.
+    let match_code = m.map_or(0, |(_, len)| (len - (LZ_MIN_MATCH - 1)).min(15));
+    out.push(((lit_code as u8) << 4) | match_code as u8);
+    if literals.len() >= 15 {
+        push_run(out, literals.len() - 15);
+    }
+    out.extend_from_slice(literals);
+    if let Some((offset, len)) = m {
+        out.extend_from_slice(&(offset as u16).to_le_bytes());
+        if len - (LZ_MIN_MATCH - 1) >= 15 {
+            push_run(out, len - (LZ_MIN_MATCH - 1) - 15);
+        }
+    }
+}
+
+/// Greedy LZ77 block compression: single pass, one hash-table probe per
+/// position, matches ≥ [`LZ_MIN_MATCH`] bytes within a
+/// [`LZ_MAX_OFFSET`] window. Output grows at most a few bytes past the
+/// input for incompressible data (callers gate on size).
+pub fn lz4_compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + 16);
+    // table stores position + 1 so 0 means "empty"
+    let mut table = vec![0usize; 1 << LZ_HASH_BITS];
+    let mut i = 0usize;
+    let mut anchor = 0usize;
+    while i + LZ_MIN_MATCH <= src.len() {
+        let h = lz_hash(lz_word(src, i));
+        let cand = table[h];
+        table[h] = i + 1;
+        if cand > 0 {
+            let c = cand - 1;
+            if i - c <= LZ_MAX_OFFSET && lz_word(src, c) == lz_word(src, i) {
+                let mut len = LZ_MIN_MATCH;
+                while i + len < src.len() && src[c + len] == src[i + len] {
+                    len += 1;
+                }
+                emit_sequence(&mut out, &src[anchor..i], Some((i - c, len)));
+                i += len;
+                anchor = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    emit_sequence(&mut out, &src[anchor..], None);
+    out
+}
+
+/// Decode an [`lz4_compress`] stream into `dest`, which must be exactly
+/// the raw length. Every read and write is bounds-checked; malformed
+/// input (truncation, zero or out-of-window offsets, output overrun or
+/// underrun, trailing bytes) yields a typed error.
+pub fn lz4_decompress_into(src: &[u8], dest: &mut [u8]) -> Result<()> {
+    let fail = |d: String| Error::Format(format!("lz4 chunk: {d}"));
+    let read_run = |src: &[u8], i: &mut usize, mut n: usize| -> Result<usize> {
+        loop {
+            let b = *src.get(*i).ok_or_else(|| fail("truncated length run".into()))?;
+            *i += 1;
+            n = n
+                .checked_add(b as usize)
+                .ok_or_else(|| fail("length run overflows".into()))?;
+            if b < 255 {
+                return Ok(n);
+            }
+        }
+    };
+    let mut i = 0usize;
+    let mut o = 0usize;
+    loop {
+        let token = *src.get(i).ok_or_else(|| fail("truncated at token".into()))?;
+        i += 1;
+        let mut lit = (token >> 4) as usize;
+        if lit == 15 {
+            lit = read_run(src, &mut i, lit)?;
+        }
+        if !i.checked_add(lit).is_some_and(|e| e <= src.len()) {
+            return Err(fail(format!("literal run of {lit} bytes is truncated")));
+        }
+        if !o.checked_add(lit).is_some_and(|e| e <= dest.len()) {
+            return Err(fail(format!(
+                "literals overrun output ({} of {} bytes filled)",
+                o,
+                dest.len()
+            )));
+        }
+        dest[o..o + lit].copy_from_slice(&src[i..i + lit]);
+        i += lit;
+        o += lit;
+        let match_code = (token & 0x0f) as usize;
+        if match_code == 0 {
+            // terminal sequence: all input and all output must be used
+            if i != src.len() {
+                return Err(fail(format!("{} trailing bytes after terminal", src.len() - i)));
+            }
+            if o != dest.len() {
+                return Err(fail(format!("decoded {o} of {} bytes", dest.len())));
+            }
+            return Ok(());
+        }
+        if i + 2 > src.len() {
+            return Err(fail("truncated at match offset".into()));
+        }
+        let offset = u16::from_le_bytes(src[i..i + 2].try_into().unwrap()) as usize;
+        i += 2;
+        let mut mlen = match_code + (LZ_MIN_MATCH - 1);
+        if match_code == 15 {
+            mlen = read_run(src, &mut i, mlen)?;
+        }
+        if offset == 0 || offset > o {
+            return Err(fail(format!("match offset {offset} outside {o} produced bytes")));
+        }
+        if !o.checked_add(mlen).is_some_and(|e| e <= dest.len()) {
+            return Err(fail(format!(
+                "match of {mlen} bytes overruns output at {o}/{}",
+                dest.len()
+            )));
+        }
+        // byte-at-a-time: overlapping copies (offset < mlen) are the
+        // codec's run-length encoding and must see freshly-written bytes
+        for k in 0..mlen {
+            dest[o + k] = dest[o + k - offset];
+        }
+        o += mlen;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quantized delta codec
+// ---------------------------------------------------------------------
+
+/// qdelta op: `n` diff bytes are zero (chunk equals base here).
+const QD_ZERO: u8 = 0x00;
+/// qdelta op: `n` diffs quantized to 4-bit two's complement (−8..=7).
+const QD_NIBBLE: u8 = 0x01;
+/// qdelta op: `n` raw chunk bytes verbatim — the full-precision escape
+/// that keeps the codec exact.
+const QD_RAW: u8 = 0x02;
+
+/// Zero-runs shorter than this ride inside whatever op surrounds them.
+const QD_MIN_ZERO_RUN: usize = 4;
+/// Nibble runs shorter than this are not worth the op header.
+const QD_MIN_NIBBLE_RUN: usize = 8;
+
+fn push_varint(out: &mut Vec<u8>, mut n: u64) {
+    loop {
+        let b = (n & 0x7f) as u8;
+        n >>= 7;
+        if n == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn read_varint(src: &[u8], i: &mut usize) -> Result<u64> {
+    let mut n = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *src
+            .get(*i)
+            .ok_or_else(|| Error::Format("qdelta chunk: truncated varint".into()))?;
+        *i += 1;
+        if shift >= 63 && b > 1 {
+            return Err(Error::Format("qdelta chunk: varint overflows u64".into()));
+        }
+        n |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(n);
+        }
+        shift += 7;
+    }
+}
+
+/// True when the wrapping diff, read as a signed byte, fits a 4-bit
+/// two's-complement nibble (−8..=7).
+fn nibble_fits(d: u8) -> bool {
+    (-8..=7).contains(&(d as i8))
+}
+
+/// Encode `raw` as a quantized delta against `base` (same length).
+/// Layout: a sequence of `(op, varint n, payload)` records — zero runs
+/// carry no payload, nibble runs carry `ceil(n/2)` packed bytes, raw
+/// escapes carry `n` literal chunk bytes. Decoding is exact.
+pub fn qdelta_encode(raw: &[u8], base: &[u8]) -> Result<Vec<u8>> {
+    if raw.len() != base.len() {
+        return Err(Error::Format(format!(
+            "qdelta encode: chunk is {} bytes but base is {}",
+            raw.len(),
+            base.len()
+        )));
+    }
+    let diff = |i: usize| raw[i].wrapping_sub(base[i]);
+    let mut out = Vec::with_capacity(raw.len() / 8 + 16);
+    let mut i = 0usize;
+    let mut raw_start = 0usize; // pending raw-escape run [raw_start, i)
+    let flush_raw = |out: &mut Vec<u8>, start: usize, end: usize| {
+        if end > start {
+            out.push(QD_RAW);
+            push_varint(out, (end - start) as u64);
+            out.extend_from_slice(&raw[start..end]);
+        }
+    };
+    while i < raw.len() {
+        // zero run?
+        let mut z = i;
+        while z < raw.len() && diff(z) == 0 {
+            z += 1;
+        }
+        if z - i >= QD_MIN_ZERO_RUN {
+            flush_raw(&mut out, raw_start, i);
+            out.push(QD_ZERO);
+            push_varint(&mut out, (z - i) as u64);
+            i = z;
+            raw_start = i;
+            continue;
+        }
+        // nibble run? (small zero runs are nibble-representable and ride
+        // along; a long zero run ends the nibble scan so it gets its own
+        // cheaper op)
+        let mut n = i;
+        while n < raw.len() && nibble_fits(diff(n)) {
+            if diff(n) == 0 {
+                let mut z2 = n;
+                while z2 < raw.len() && diff(z2) == 0 {
+                    z2 += 1;
+                }
+                if z2 - n >= QD_MIN_ZERO_RUN {
+                    break;
+                }
+                n = z2;
+            } else {
+                n += 1;
+            }
+        }
+        if n - i >= QD_MIN_NIBBLE_RUN {
+            flush_raw(&mut out, raw_start, i);
+            let count = n - i;
+            out.push(QD_NIBBLE);
+            push_varint(&mut out, count as u64);
+            let mut byte = 0u8;
+            for (k, pos) in (i..n).enumerate() {
+                let nib = (diff(pos) as i8 as u8) & 0x0f;
+                if k % 2 == 0 {
+                    byte = nib;
+                } else {
+                    out.push(byte | (nib << 4));
+                }
+            }
+            if count % 2 == 1 {
+                out.push(byte);
+            }
+            i = n;
+            raw_start = i;
+            continue;
+        }
+        // neither: this byte joins the pending raw escape
+        i += 1;
+    }
+    flush_raw(&mut out, raw_start, i);
+    Ok(out)
+}
+
+/// Decode a [`qdelta_encode`] stream into `dest` using `base` (both the
+/// chunk's raw length). Fail-closed like [`lz4_decompress_into`].
+pub fn qdelta_decode_into(enc: &[u8], base: &[u8], dest: &mut [u8]) -> Result<()> {
+    let fail = |d: String| Error::Format(format!("qdelta chunk: {d}"));
+    if base.len() != dest.len() {
+        return Err(fail(format!(
+            "base is {} bytes but chunk is {}",
+            base.len(),
+            dest.len()
+        )));
+    }
+    let mut i = 0usize;
+    let mut o = 0usize;
+    while i < enc.len() {
+        let op = enc[i];
+        i += 1;
+        let n = read_varint(enc, &mut i)? as usize;
+        let in_bounds = o.checked_add(n).is_some_and(|end| end <= dest.len());
+        if !in_bounds {
+            return Err(fail(format!(
+                "op {op:#04x} of {n} bytes overruns output at {o}/{}",
+                dest.len()
+            )));
+        }
+        match op {
+            QD_ZERO => dest[o..o + n].copy_from_slice(&base[o..o + n]),
+            QD_NIBBLE => {
+                let nbytes = n.div_ceil(2);
+                if i + nbytes > enc.len() {
+                    return Err(fail("truncated nibble run".into()));
+                }
+                for k in 0..n {
+                    let byte = enc[i + k / 2];
+                    let nib = if k % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+                    // sign-extend the 4-bit two's-complement value
+                    let v = ((nib << 4) as i8) >> 4;
+                    dest[o + k] = base[o + k].wrapping_add(v as u8);
+                }
+                i += nbytes;
+            }
+            QD_RAW => {
+                if i + n > enc.len() {
+                    return Err(fail("truncated raw escape".into()));
+                }
+                dest[o..o + n].copy_from_slice(&enc[i..i + n]);
+                i += n;
+            }
+            other => return Err(fail(format!("unknown op {other:#04x}"))),
+        }
+        o += n;
+    }
+    if o != dest.len() {
+        return Err(fail(format!("decoded {o} of {} bytes", dest.len())));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift64* for reproducible payloads.
+    struct Rng(u64);
+    impl Rng {
+        fn new(seed: u64) -> Rng {
+            Rng(seed.max(1))
+        }
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            self.0 = x;
+            x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+        }
+        fn bytes(&mut self, n: usize) -> Vec<u8> {
+            (0..n).map(|_| self.next() as u8).collect()
+        }
+    }
+
+    /// Structured, compressible payload: long runs + periodic pattern.
+    fn structured(n: usize) -> Vec<u8> {
+        (0..n).map(|i| ((i >> 6) as u8).wrapping_mul(31)).collect()
+    }
+
+    #[test]
+    fn kind_names_ids_roundtrip() {
+        for kind in [CodecKind::None, CodecKind::Lz4, CodecKind::QuantDelta] {
+            assert_eq!(CodecKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(CodecKind::from_u8(kind.as_u8()).unwrap(), kind);
+        }
+        assert!(CodecKind::parse("gzip").is_err());
+        assert!(CodecKind::from_u8(3).is_err());
+        assert!(CodecKind::from_u8(255).is_err());
+    }
+
+    #[test]
+    fn lz4_roundtrips_structured_random_and_edge_sizes() {
+        let mut rng = Rng::new(7);
+        let mut cases = vec![
+            Vec::new(),
+            vec![0u8],
+            vec![7u8; 3],
+            vec![42u8; 4096],
+            structured(8192),
+            structured(100_003),
+        ];
+        for n in [1usize, 4, 15, 16, 17, 255, 4096, 70_000] {
+            cases.push(rng.bytes(n));
+        }
+        for raw in cases {
+            let enc = lz4_compress(&raw);
+            let mut dec = vec![0u8; raw.len()];
+            lz4_decompress_into(&enc, &mut dec).unwrap();
+            assert_eq!(dec, raw, "lz4 roundtrip failed for {} bytes", raw.len());
+        }
+    }
+
+    #[test]
+    fn lz4_compresses_structured_data() {
+        let raw = structured(65_536);
+        let enc = lz4_compress(&raw);
+        assert!(
+            enc.len() * 4 < raw.len(),
+            "structured payload should compress ≥4x, got {} / {}",
+            enc.len(),
+            raw.len()
+        );
+    }
+
+    #[test]
+    fn lz4_decode_fails_closed_on_malformed_input() {
+        let raw = structured(4096);
+        let enc = lz4_compress(&raw);
+        let mut dest = vec![0u8; raw.len()];
+        // truncations at every prefix must error or (never) panic
+        for cut in 0..enc.len().min(64) {
+            assert!(
+                lz4_decompress_into(&enc[..cut], &mut dest).is_err(),
+                "truncated stream (len {cut}) must fail"
+            );
+        }
+        // wrong output size: both directions fail
+        let mut small = vec![0u8; raw.len() - 1];
+        assert!(lz4_decompress_into(&enc, &mut small).is_err());
+        let mut big = vec![0u8; raw.len() + 1];
+        assert!(lz4_decompress_into(&enc, &mut big).is_err());
+        // trailing garbage after the terminal sequence
+        let mut trailing = enc.clone();
+        trailing.push(0);
+        assert!(lz4_decompress_into(&trailing, &mut dest).is_err());
+        // a zero match offset is invalid (no bytes produced yet)
+        let bad = vec![0x01u8, 0x00, 0x00]; // 0 literals, match code 1, offset 0
+        assert!(lz4_decompress_into(&bad, &mut dest).is_err());
+    }
+
+    #[test]
+    fn lz4_decode_never_panics_on_byte_flips() {
+        let raw = structured(2048);
+        let enc = lz4_compress(&raw);
+        let mut rng = Rng::new(0xfeed);
+        for _ in 0..500 {
+            let mut corrupt = enc.clone();
+            let pos = (rng.next() as usize) % corrupt.len();
+            corrupt[pos] ^= 1 << (rng.next() % 8);
+            let mut dest = vec![0u8; raw.len()];
+            // either a typed error or a decode the hash layer will catch —
+            // the property under test is "no panic, no overrun"
+            let _ = lz4_decompress_into(&corrupt, &mut dest);
+        }
+    }
+
+    #[test]
+    fn qdelta_roundtrips_and_shrinks_sparse_diffs() {
+        let mut rng = Rng::new(11);
+        let base = rng.bytes(100_000);
+        // mutate 1% of bytes arbitrarily, nudge another 5% by ±3
+        let mut raw = base.clone();
+        for _ in 0..1000 {
+            let i = (rng.next() as usize) % raw.len();
+            raw[i] = rng.next() as u8;
+        }
+        for _ in 0..5000 {
+            let i = (rng.next() as usize) % raw.len();
+            raw[i] = raw[i].wrapping_add((rng.next() % 7) as u8 + 1).wrapping_sub(3);
+        }
+        let enc = qdelta_encode(&raw, &base).unwrap();
+        assert!(
+            enc.len() * 2 < raw.len(),
+            "sparse diff should encode ≤ half, got {} / {}",
+            enc.len(),
+            raw.len()
+        );
+        let mut dec = vec![0u8; raw.len()];
+        qdelta_decode_into(&enc, &base, &mut dec).unwrap();
+        assert_eq!(dec, raw);
+    }
+
+    #[test]
+    fn qdelta_is_exact_on_dense_random_diffs() {
+        // worst case: every byte differs arbitrarily — the raw escape
+        // must preserve exact bytes (this is the "no quantization error"
+        // guarantee)
+        let mut rng = Rng::new(23);
+        let base = rng.bytes(10_000);
+        let raw = rng.bytes(10_000);
+        let enc = qdelta_encode(&raw, &base).unwrap();
+        let mut dec = vec![0u8; raw.len()];
+        qdelta_decode_into(&enc, &base, &mut dec).unwrap();
+        assert_eq!(dec, raw);
+    }
+
+    #[test]
+    fn qdelta_edge_cases_roundtrip() {
+        let cases: Vec<(Vec<u8>, Vec<u8>)> = vec![
+            (Vec::new(), Vec::new()),
+            (vec![1], vec![2]),
+            (vec![5; 7], vec![5; 7]),                       // identical
+            (vec![0; 4096], vec![255; 4096]),               // max diff everywhere
+            ((0..=255).collect(), (0..=255).rev().collect()), // odd nibble counts
+        ];
+        for (raw, base) in cases {
+            let enc = qdelta_encode(&raw, &base).unwrap();
+            let mut dec = vec![0u8; raw.len()];
+            qdelta_decode_into(&enc, &base, &mut dec).unwrap();
+            assert_eq!(dec, raw);
+        }
+    }
+
+    #[test]
+    fn qdelta_fails_closed() {
+        let base = structured(1024);
+        let mut raw = base.clone();
+        raw[100] = raw[100].wrapping_add(50);
+        let enc = qdelta_encode(&raw, &base).unwrap();
+        let mut dest = vec![0u8; raw.len()];
+        // length mismatches
+        assert!(qdelta_encode(&raw, &base[..1000]).is_err());
+        assert!(qdelta_decode_into(&enc, &base[..1000], &mut dest).is_err());
+        // truncations
+        for cut in 0..enc.len() {
+            assert!(
+                qdelta_decode_into(&enc[..cut], &base, &mut dest).is_err(),
+                "truncated qdelta (len {cut}) must fail"
+            );
+        }
+        // unknown op
+        let bad = vec![0x07u8, 0x01, 0x00];
+        assert!(qdelta_decode_into(&bad, &base, &mut dest).is_err());
+        // overrun: zero-run longer than the chunk
+        let mut overrun = Vec::new();
+        overrun.push(QD_ZERO);
+        push_varint(&mut overrun, (base.len() + 1) as u64);
+        assert!(qdelta_decode_into(&overrun, &base, &mut dest).is_err());
+        // underrun: valid ops that stop short
+        let mut short = Vec::new();
+        short.push(QD_ZERO);
+        push_varint(&mut short, (base.len() - 1) as u64);
+        assert!(qdelta_decode_into(&short, &base, &mut dest).is_err());
+        // varint overflow
+        let huge = vec![QD_ZERO, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x7f];
+        assert!(qdelta_decode_into(&huge, &base, &mut dest).is_err());
+    }
+
+    #[test]
+    fn qdelta_decode_never_panics_on_byte_flips() {
+        let mut rng = Rng::new(0xbeef);
+        let base = rng.bytes(2048);
+        let mut raw = base.clone();
+        for _ in 0..64 {
+            let i = (rng.next() as usize) % raw.len();
+            raw[i] = raw[i].wrapping_add(3);
+        }
+        let enc = qdelta_encode(&raw, &base).unwrap();
+        for _ in 0..500 {
+            let mut corrupt = enc.clone();
+            let pos = (rng.next() as usize) % corrupt.len();
+            corrupt[pos] ^= 1 << (rng.next() % 8);
+            let mut dest = vec![0u8; raw.len()];
+            let _ = qdelta_decode_into(&corrupt, &base, &mut dest);
+        }
+    }
+
+    #[test]
+    fn chunk_wrappers_dispatch_and_gate_bases() {
+        let mut rng = Rng::new(3);
+        let base = rng.bytes(4096);
+        let mut raw = base.clone();
+        raw[7] ^= 0xff;
+        for kind in [CodecKind::None, CodecKind::Lz4, CodecKind::QuantDelta] {
+            let enc = encode_chunk(kind, &raw, Some(&base)).unwrap();
+            let mut dec = vec![0u8; raw.len()];
+            decode_chunk_into(kind, &enc, Some(&base), &mut dec).unwrap();
+            assert_eq!(dec, raw, "{kind} wrapper roundtrip");
+        }
+        // qdelta without a base must fail both ways
+        assert!(encode_chunk(CodecKind::QuantDelta, &raw, None).is_err());
+        let enc = encode_chunk(CodecKind::QuantDelta, &raw, Some(&base)).unwrap();
+        let mut dec = vec![0u8; raw.len()];
+        assert!(decode_chunk_into(CodecKind::QuantDelta, &enc, None, &mut dec).is_err());
+        // codec none with a length mismatch fails closed
+        assert!(decode_chunk_into(CodecKind::None, &enc, None, &mut dec).is_err());
+    }
+}

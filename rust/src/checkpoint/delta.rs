@@ -44,6 +44,19 @@
 //! The chain therefore stays consistent: the next flush diffs against
 //! durable state, never against a generation that was lost in flight.
 //!
+//! Between serialization and segment packing sits the optional
+//! **codec stage** ([`crate::checkpoint::codec`], [`DeltaConfig::codec`]):
+//! each dirty chunk is independently encoded (`lz4` block compression,
+//! or `qdelta` quantized diffs against the chunk's last raw-stored
+//! bytes), stored raw whenever encoding does not shrink it, and
+//! recorded in the manifest chunk table with its codec id, encoded
+//! length, and (for qdelta) base extent. The WritePlan/drain-lane/ring
+//! mechanics below stay byte-oriented and codec-oblivious; decoding
+//! happens inside the read job, before the same folded raw-hash chunk
+//! checks. Base and compaction writes always store exact raw bytes, so
+//! quantized chains can never accumulate error past one compaction
+//! interval.
+//!
 //! The resulting manifest (v4,
 //! [`crate::checkpoint::manifest::DeltaSection`]) is **fully
 //! resolved**: loading never walks ancestor manifests, it reads each
@@ -134,14 +147,17 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::checkpoint::codec::{encode_chunk, CodecKind};
 use crate::checkpoint::engine::CheckpointOutcome;
 use crate::checkpoint::manifest::{
-    CheckpointManifest, ChunkEntry, DeltaSection, SegmentRef, MANIFEST_FILE,
+    CheckpointManifest, ChunkBaseRef, ChunkEntry, DeltaSection, SegmentRef, MANIFEST_FILE,
 };
 use crate::io::device::DeviceMap;
 use crate::io::engine::WriteStats;
-use crate::io::read::{plan_runs, ChunkCheck, PrefixCheck, ReadJob, ReadPart, StreamBuffer};
-use crate::io::runtime::{IoRuntime, Ticket, WriteJob};
+use crate::io::read::{
+    plan_runs, ChunkCheck, DecodeBase, DecodeSpec, PrefixCheck, ReadJob, ReadPart, StreamBuffer,
+};
+use crate::io::runtime::{IoRuntime, SegPart, Ticket, WriteJob};
 use crate::serialize::writer::SerializedCheckpoint;
 use crate::tensor::TensorStore;
 use crate::util::json::Json;
@@ -214,11 +230,24 @@ pub struct DeltaConfig {
     /// one per dirty chunk) — each segment is one WriteJob and one
     /// fsync.
     pub segment_bytes: u64,
+    /// Per-chunk codec applied between serialization and segment
+    /// packing ([`crate::checkpoint::codec`]). Chunks whose encoding
+    /// does not shrink them are stored raw (the benefit gate), so a
+    /// codec never inflates the stored payload. `QuantDelta` encodes
+    /// dirty chunks as quantized diffs against their last raw-stored
+    /// bytes; base/compaction writes always store exact raw bytes, so
+    /// quantization error can never accumulate across chains.
+    pub codec: CodecKind,
 }
 
 impl Default for DeltaConfig {
     fn default() -> Self {
-        DeltaConfig { chunk_size: 1 << 20, max_chain: 8, segment_bytes: 64 << 20 }
+        DeltaConfig {
+            chunk_size: 1 << 20,
+            max_chain: 8,
+            segment_bytes: 64 << 20,
+            codec: CodecKind::None,
+        }
     }
 }
 
@@ -319,6 +348,16 @@ pub struct DeltaOutcome {
     pub fsyncs: u64,
     /// True if this checkpoint is a chain base (all chunks local).
     pub is_base: bool,
+    /// Raw bytes of the dirty chunks — what an uncompressed write of
+    /// the same dirty set would have stored.
+    pub bytes_raw: u64,
+    /// Stored payload bytes after the codec stage (==
+    /// `written_bytes`; explicit so `bytes_encoded / bytes_raw` reads
+    /// as the codec ratio).
+    pub bytes_encoded: u64,
+    /// CPU time spent encoding dirty chunks (zero under
+    /// [`CodecKind::None`], which keeps the zero-copy write path).
+    pub encode: Duration,
 }
 
 impl DeltaOutcome {
@@ -378,6 +417,9 @@ impl DeltaOutcome {
             latency: self.latency,
             total_bytes: self.total_bytes,
             written_bytes: self.written_bytes,
+            bytes_raw: self.bytes_raw,
+            bytes_encoded: self.bytes_encoded,
+            encode: self.encode,
         }
     }
 }
@@ -400,15 +442,30 @@ struct ResolvedChunk {
     source: String,
     device: Option<String>,
     seg: SegmentRef,
+    codec: CodecKind,
+    enc_len: u64,
+    base: Option<ChunkBaseRef>,
 }
 
-/// One segment of a checkpoint's write plan: merged stream ranges of
-/// consecutive dirty chunks plus accounting.
+/// One segment of a checkpoint's write plan: an ordered mix of merged
+/// raw stream ranges and codec-encoded chunk payloads, plus accounting
+/// (`payload` counts *stored* bytes).
 #[derive(Default)]
 struct SegPlan {
-    ranges: Vec<(u64, u64)>,
+    parts: Vec<SegPart>,
     chunks: u32,
     payload: u64,
+}
+
+/// Raw-byte reference a future [`CodecKind::QuantDelta`] encode diffs
+/// against: the chunk's last raw-stored bytes and the durable segment
+/// extent that holds them (what the manifest's [`ChunkBaseRef`] will
+/// point the decoder at).
+struct QdRef {
+    bytes: Vec<u8>,
+    source: String,
+    device: Option<String>,
+    seg: SegmentRef,
 }
 
 /// Chunk-granular incremental checkpoint writer over a shared
@@ -423,13 +480,23 @@ pub struct DeltaCheckpointer {
     runtime: Arc<IoRuntime>,
     cfg: DeltaConfig,
     prev: Option<PrevCheckpoint>,
+    /// Per-chunk-index raw reference bytes for qdelta encoding (empty
+    /// unless the config codec is [`CodecKind::QuantDelta`]). Rebuilt
+    /// whenever a chunk stores raw bytes; cleared by resume (no raw
+    /// bytes survive a restart, so the next write re-seeds them).
+    qd_refs: BTreeMap<usize, QdRef>,
 }
 
 impl DeltaCheckpointer {
     /// A delta writer submitting into `runtime`; the first write is a
     /// base checkpoint.
     pub fn new(runtime: Arc<IoRuntime>, cfg: DeltaConfig) -> DeltaCheckpointer {
-        DeltaCheckpointer { runtime, cfg: cfg.normalized(), prev: None }
+        DeltaCheckpointer {
+            runtime,
+            cfg: cfg.normalized(),
+            prev: None,
+            qd_refs: BTreeMap::new(),
+        }
     }
 
     /// The runtime this writer submits into.
@@ -449,6 +516,10 @@ impl DeltaCheckpointer {
     /// per-chunk-file (v3) one leaves the writer in base mode and
     /// returns `false`.
     pub fn resume_from(&mut self, dir: &Path) -> Result<bool> {
+        // In-memory qdelta references never survive a restart; the next
+        // write stores its dirty chunks raw and re-seeds them (graceful
+        // degradation, never a correctness issue).
+        self.qd_refs.clear();
         let manifest = CheckpointManifest::load(dir)?;
         let Some(delta) = &manifest.delta else {
             self.prev = None;
@@ -474,6 +545,9 @@ impl DeltaCheckpointer {
                 source: c.source.clone().unwrap_or_else(|| dir_name.clone()),
                 device: c.device.clone(),
                 seg,
+                codec: c.codec,
+                enc_len: c.enc_len,
+                base: c.base.clone(),
             });
         }
         self.prev = Some(PrevCheckpoint {
@@ -555,6 +629,9 @@ impl DeltaCheckpointer {
             let clean = !is_base
                 && prev_chunks.get(i).is_some_and(|p| p.hash == ch.hash && p.len == ch.len);
             if clean {
+                // Inherited entries carry the codec fields of wherever
+                // the bytes physically live — a clean chunk that was
+                // stored lz4/qdelta stays encoded on disk.
                 let p = &prev_chunks[i];
                 entries[i] = Some(ChunkEntry {
                     hash: ch.hash,
@@ -562,6 +639,9 @@ impl DeltaCheckpointer {
                     source: Some(p.source.clone()),
                     device: p.device.clone(),
                     seg: Some(p.seg),
+                    codec: p.codec,
+                    enc_len: p.enc_len,
+                    base: p.base.clone(),
                 });
                 resolved[i] = Some(p.clone());
             } else {
@@ -571,19 +651,102 @@ impl DeltaCheckpointer {
             off += ch.len;
         }
 
+        // Codec stage (between serialization and segment packing):
+        // dirty chunks are encoded independently; an encoding that
+        // does not shrink its chunk is discarded and the chunk stores
+        // raw (the benefit gate), so the stored payload never exceeds
+        // the raw dirty bytes. CodecKind::None skips materialization
+        // entirely and keeps the zero-copy Range path.
+        let codec = self.cfg.codec;
+        if codec == CodecKind::QuantDelta {
+            // Stale references must not outlive the grid; a base write
+            // rewrites every chunk raw and re-seeds from scratch.
+            if is_base {
+                self.qd_refs.clear();
+            } else {
+                let n = grid.len();
+                self.qd_refs.retain(|&i, _| i < n);
+            }
+        } else {
+            self.qd_refs.clear();
+        }
+        let bytes_raw = written;
+        let mut encode = Duration::ZERO;
+        // Encoded payload (+ qdelta base ref) by chunk index; chunks
+        // absent here store raw bytes.
+        let mut enc_chunks: BTreeMap<usize, (Vec<u8>, Option<ChunkBaseRef>)> = BTreeMap::new();
+        // Raw bytes of qdelta-config dirty chunks that store raw: they
+        // re-seed the quantization references once routing is known.
+        let mut raw_dirty: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+        if codec != CodecKind::None {
+            let t_enc = Instant::now();
+            for &i in &dirty {
+                let (s, e) = (offsets[i], offsets[i] + grid[i].len);
+                let mut raw = Vec::with_capacity(grid[i].len as usize);
+                ser.emit_range(s, e, &mut |piece| {
+                    raw.extend_from_slice(piece);
+                    Ok(())
+                })?;
+                let encoded = match codec {
+                    CodecKind::None => None,
+                    CodecKind::Lz4 => Some((encode_chunk(codec, &raw, None)?, None)),
+                    // Quantized diffs only against a chunk whose exact
+                    // raw bytes are durably stored — never against an
+                    // encoded base, so quantization error cannot chain
+                    // — and never on a base/compaction write (those
+                    // store exact bytes by contract).
+                    CodecKind::QuantDelta => match self.qd_refs.get(&i) {
+                        Some(r) if !is_base && r.bytes.len() as u64 == grid[i].len => {
+                            let base = ChunkBaseRef {
+                                source: Some(r.source.clone()),
+                                device: r.device.clone(),
+                                seg: r.seg,
+                                len: grid[i].len,
+                            };
+                            Some((encode_chunk(codec, &raw, Some(&r.bytes))?, Some(base)))
+                        }
+                        _ => None,
+                    },
+                };
+                match encoded {
+                    Some((enc, base)) if (enc.len() as u64) < grid[i].len => {
+                        enc_chunks.insert(i, (enc, base));
+                    }
+                    _ => {
+                        if codec == CodecKind::QuantDelta {
+                            raw_dirty.insert(i, raw);
+                        }
+                    }
+                }
+            }
+            encode = t_enc.elapsed();
+        }
+        let stored: u64 = dirty
+            .iter()
+            .map(|&i| match enc_chunks.get(&i) {
+                Some((enc, _)) => enc.len() as u64,
+                None => grid[i].len,
+            })
+            .sum();
+        // Manifest codec fields by chunk index, recorded as encoded
+        // payloads move into their segment parts.
+        let mut enc_meta: BTreeMap<usize, (u64, Option<ChunkBaseRef>)> = BTreeMap::new();
+
         // Segment plan: enough segments to respect the size cap and to
         // keep every device writing, never more than one per dirty
-        // chunk. Consecutive dirty chunks merge into single stream
-        // ranges, so a base becomes a handful of large sequential
-        // writes.
+        // chunk. Consecutive raw dirty chunks merge into single stream
+        // ranges, so an uncoded base stays a handful of large
+        // sequential zero-copy writes; encoded chunks travel as owned
+        // buffers in the same segment order. Packing targets count
+        // *stored* bytes.
         let devices = self.runtime.devices();
         let mut segs: Vec<SegPlan> = Vec::new();
         let mut seg_ref: BTreeMap<usize, SegmentRef> = BTreeMap::new();
         if !dirty.is_empty() {
-            let by_size = written.div_ceil(self.cfg.segment_bytes).max(1) as usize;
+            let by_size = stored.div_ceil(self.cfg.segment_bytes).max(1) as usize;
             let min_parallel = if devices.is_empty() { 1 } else { devices.len() };
             let n_segs = by_size.max(min_parallel).min(dirty.len());
-            let target = written.div_ceil(n_segs as u64).max(1);
+            let target = stored.div_ceil(n_segs as u64).max(1);
             // Data chunks pack in stream order; the header chunk — whose
             // length is a 256-byte (not 4 KiB) multiple — packs LAST in
             // its segment, so data-chunk offsets stay 4 KiB-aligned for
@@ -611,13 +774,24 @@ impl DeltaCheckpointer {
                     seg: segs.len() as u32,
                     offset: SEGMENT_HEADER_LEN as u64 + cur.payload,
                 });
-                let (s, e) = (offsets[i], offsets[i] + grid[i].len);
-                match cur.ranges.last_mut() {
-                    Some(last) if last.1 == s => last.1 = e,
-                    _ => cur.ranges.push((s, e)),
-                }
+                let this_len = match enc_chunks.remove(&i) {
+                    Some((enc, base)) => {
+                        let n = enc.len() as u64;
+                        enc_meta.insert(i, (n, base));
+                        cur.parts.push(SegPart::Owned(enc));
+                        n
+                    }
+                    None => {
+                        let (s, e) = (offsets[i], offsets[i] + grid[i].len);
+                        match cur.parts.last_mut() {
+                            Some(SegPart::Raw { end, .. }) if *end == s => *end = e,
+                            _ => cur.parts.push(SegPart::Raw { start: s, end: e }),
+                        }
+                        grid[i].len
+                    }
+                };
                 cur.chunks += 1;
-                cur.payload += grid[i].len;
+                cur.payload += this_len;
             }
             if cur.chunks > 0 {
                 segs.push(cur);
@@ -625,22 +799,36 @@ impl DeltaCheckpointer {
         }
 
         // One WriteJob per segment through the persistent writer pool,
-        // striped across the device map by segment index.
-        let mut tickets: Vec<Ticket> = Vec::with_capacity(segs.len());
-        let mut seg_devices: Vec<Option<String>> = Vec::with_capacity(segs.len());
-        for (si, seg) in segs.iter().enumerate() {
+        // striped across the device map by segment index. All-raw
+        // segments keep the pre-codec zero-copy chunks path
+        // (byte-identical layout); segments holding encoded chunks go
+        // through the mixed parts path.
+        let n_segments = segs.len();
+        let mut tickets: Vec<Ticket> = Vec::with_capacity(n_segments);
+        let mut seg_devices: Vec<Option<String>> = Vec::with_capacity(n_segments);
+        for (si, seg) in segs.into_iter().enumerate() {
             let file = DeltaSection::segment_file(si);
             let (seg_dir, device) = match devices.partition_dir(dir, si) {
                 Some((d, root)) => (d, Some(root)),
                 None => (dir.to_path_buf(), None),
             };
             let header = encode_segment_header(si as u32, seg.chunks, seg.payload);
-            tickets.push(self.runtime.submit(WriteJob::chunks(
-                Arc::clone(&ser),
-                header,
-                seg.ranges.clone(),
-                seg_dir.join(file),
-            )));
+            let path = seg_dir.join(file);
+            let all_raw = seg.parts.iter().all(|p| matches!(p, SegPart::Raw { .. }));
+            let job = if all_raw {
+                let ranges = seg
+                    .parts
+                    .iter()
+                    .map(|p| match p {
+                        SegPart::Raw { start, end } => (*start, *end),
+                        SegPart::Owned(_) => unreachable!("all parts raw"),
+                    })
+                    .collect();
+                WriteJob::chunks(Arc::clone(&ser), header, ranges, path)
+            } else {
+                WriteJob::parts(Arc::clone(&ser), header, seg.parts, path)
+            };
+            tickets.push(self.runtime.submit(job));
             seg_devices.push(device);
         }
 
@@ -648,20 +836,39 @@ impl DeltaCheckpointer {
         for &i in &dirty {
             let r = seg_ref[&i];
             let device = seg_devices[r.seg as usize].clone();
+            let (ck, enc_len, base) = match enc_meta.remove(&i) {
+                Some((n, base)) => (codec, n, base),
+                None => (CodecKind::None, grid[i].len, None),
+            };
             entries[i] = Some(ChunkEntry {
                 hash: grid[i].hash,
                 len: grid[i].len,
                 source: None,
                 device: device.clone(),
                 seg: Some(r),
+                codec: ck,
+                enc_len,
+                base: base.clone(),
             });
             resolved[i] = Some(ResolvedChunk {
                 hash: grid[i].hash,
                 len: grid[i].len,
                 source: dir_name.clone(),
-                device,
+                device: device.clone(),
                 seg: r,
+                codec: ck,
+                enc_len,
+                base,
             });
+            // A chunk stored raw re-seeds the reference the next
+            // qdelta encode diffs against (and the durable base extent
+            // its manifest entry will point the decoder at).
+            if codec == CodecKind::QuantDelta && ck == CodecKind::None {
+                if let Some(bytes) = raw_dirty.remove(&i) {
+                    self.qd_refs
+                        .insert(i, QdRef { bytes, source: dir_name.clone(), device, seg: r });
+                }
+            }
         }
 
         let stats: Vec<WriteStats> =
@@ -699,12 +906,15 @@ impl DeltaCheckpointer {
 
         Ok(DeltaOutcome {
             total_bytes: ser.total_len(),
-            written_bytes: written,
+            written_bytes: stored,
             chunks_total: grid.len(),
             chunks_written: dirty.len(),
-            segments_written: segs.len(),
+            segments_written: n_segments,
             fsyncs,
             is_base,
+            bytes_raw,
+            bytes_encoded: stored,
+            encode,
             manifest,
             stats,
             latency: start.elapsed(),
@@ -749,6 +959,21 @@ pub fn segment_path(dir: &Path, entry: &ChunkEntry, seg: SegmentRef) -> PathBuf 
     owner_dir(dir, entry).join(DeltaSection::segment_file(seg.seg as usize))
 }
 
+/// On-disk location of the segment file holding the raw base bytes a
+/// qdelta-encoded chunk diffs against, for the delta checkpoint at
+/// `dir`. Same sibling-directory + device resolution as chunk owners.
+pub fn base_segment_path(dir: &Path, base: &ChunkBaseRef) -> PathBuf {
+    let owner = match &base.source {
+        Some(s) => dir.parent().map(Path::to_path_buf).unwrap_or_default().join(s),
+        None => dir.to_path_buf(),
+    };
+    let owner = match &base.device {
+        Some(root) => DeviceMap::resolve_in(Path::new(root), &owner),
+        None => owner,
+    };
+    owner.join(DeltaSection::segment_file(base.seg.seg as usize))
+}
+
 /// Plan the read jobs that reassemble the delta checkpoint at `dir`
 /// into `dest` (one job per segment file, with byte-adjacent chunks
 /// coalesced into single-pread runs when `coalesce` is set, plus one
@@ -773,27 +998,55 @@ pub(crate) fn plan_delta_reads(
         .as_ref()
         .ok_or_else(|| Error::Internal("plan_delta_reads on a full manifest".into()))?;
     manifest.validate()?;
-    type SegParts = (PathBuf, Vec<(ReadPart, ChunkCheck)>);
-    let mut seg_jobs: BTreeMap<(String, u32), SegParts> = BTreeMap::new();
+    #[derive(Default)]
+    struct SegJobAcc {
+        path: PathBuf,
+        parts: Vec<(ReadPart, ChunkCheck)>,
+        decodes: Vec<DecodeSpec>,
+        dec_checks: Vec<ChunkCheck>,
+    }
+    let mut seg_jobs: BTreeMap<(String, u32), SegJobAcc> = BTreeMap::new();
     let mut jobs: Vec<ReadJob> = Vec::new();
     let mut pos = 0u64;
     for (i, c) in delta.chunks.iter().enumerate() {
         match c.seg {
             Some(r) => {
                 let key = (c.source.clone().unwrap_or_default(), r.seg);
-                seg_jobs
-                    .entry(key)
-                    .or_insert_with(|| (segment_path(dir, c, r), Vec::new()))
-                    .1
-                    .push((
-                        ReadPart { file_off: r.offset, dest_off: pos, len: c.len },
-                        ChunkCheck { index: i, dest_off: pos, len: c.len, hash: c.hash },
-                    ));
+                let acc = seg_jobs.entry(key).or_insert_with(|| SegJobAcc {
+                    path: segment_path(dir, c, r),
+                    ..SegJobAcc::default()
+                });
+                let check = ChunkCheck { index: i, dest_off: pos, len: c.len, hash: c.hash };
+                if c.codec == CodecKind::None {
+                    acc.parts
+                        .push((ReadPart { file_off: r.offset, dest_off: pos, len: c.len }, check));
+                } else {
+                    // Encoded chunk: decoded inside the read job, then
+                    // hash-verified by the same folded raw-hash check
+                    // as an uncoded chunk. A qdelta base always reads
+                    // from its own (possibly different) segment file
+                    // via a plain side pread.
+                    acc.decodes.push(DecodeSpec {
+                        index: i,
+                        file_off: r.offset,
+                        enc_len: c.enc_len,
+                        dest_off: pos,
+                        raw_len: c.len,
+                        codec: c.codec,
+                        base: c.base.as_ref().map(|b| DecodeBase {
+                            path: base_segment_path(dir, b),
+                            file_off: b.seg.offset,
+                            len: b.len,
+                        }),
+                    });
+                    acc.dec_checks.push(check);
+                }
             }
             None => jobs.push(ReadJob {
                 path: chunk_path(dir, i, c),
                 dest: Arc::clone(dest),
                 runs: vec![ReadPart { file_off: 0, dest_off: pos, len: c.len }],
+                decodes: Vec::new(),
                 checks: vec![ChunkCheck { index: i, dest_off: pos, len: c.len, hash: c.hash }],
                 coalesced: 0,
                 expect_file_len: Some(c.len),
@@ -804,15 +1057,18 @@ pub(crate) fn plan_delta_reads(
         }
         pos += c.len;
     }
-    for (path, parts) in seg_jobs.into_values() {
-        let n_parts = parts.len();
-        let (ranges, checks): (Vec<ReadPart>, Vec<ChunkCheck>) = parts.into_iter().unzip();
+    for acc in seg_jobs.into_values() {
+        let n_parts = acc.parts.len();
+        let (ranges, mut checks): (Vec<ReadPart>, Vec<ChunkCheck>) =
+            acc.parts.into_iter().unzip();
+        checks.extend(acc.dec_checks);
         let runs = plan_runs(ranges, coalesce);
         jobs.push(ReadJob {
-            path,
+            path: acc.path,
             dest: Arc::clone(dest),
             coalesced: (n_parts - runs.len()) as u64,
             runs,
+            decodes: acc.decodes,
             checks,
             expect_file_len: None, // segments outlive any one checkpoint's view
             prefix_check: Some(PrefixCheck { len: 8, check: check_segment_header }),
@@ -1002,13 +1258,34 @@ pub fn prune_chain_injected(
                             .entry(r.seg)
                             .or_default();
                         // several kept manifests may inherit the same
-                        // chunk; count each live range once
-                        if seg.ranges.insert((r.offset, c.len)) {
-                            seg.bytes += c.len;
+                        // chunk; count each live range once. Encoded
+                        // chunks occupy their *stored* (encoded)
+                        // extent, not their raw length.
+                        if seg.ranges.insert((r.offset, c.stored_len())) {
+                            seg.bytes += c.stored_len();
                         }
                     }
                     None => {
                         live.entry(owner).or_default().insert(DeltaSection::chunk_file(i));
+                    }
+                }
+                // A qdelta chunk's raw base extent must outlive GC too:
+                // decoding reads those bytes from wherever they live.
+                if let Some(b) = &c.base {
+                    let bowner = match &b.source {
+                        Some(s) => {
+                            required.insert(s.clone());
+                            s.clone()
+                        }
+                        None => own.clone(),
+                    };
+                    let seg = live_segs
+                        .entry(bowner)
+                        .or_default()
+                        .entry(b.seg.seg)
+                        .or_default();
+                    if seg.ranges.insert((b.seg.offset, b.len)) {
+                        seg.bytes += b.len;
                     }
                 }
             }
@@ -1440,7 +1717,7 @@ mod tests {
         // small segments force several per device
         let mut ck = DeltaCheckpointer::new(
             rt,
-            DeltaConfig { chunk_size: CS, max_chain: 8, segment_bytes: 32 * CS },
+            DeltaConfig { chunk_size: CS, max_chain: 8, segment_bytes: 32 * CS, ..cfg(8) },
         );
         let n_chunks = 64usize;
         let s = store(31, n_chunks * CS as usize);
@@ -1709,6 +1986,189 @@ mod tests {
         let (loaded, _, _) = load_checkpoint(&dir.join("step-00000002"), ck.runtime()).unwrap();
         assert!(loaded.content_eq(&s));
         std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    /// Structured (compressible) payload: long runs + a slow ramp, the
+    /// kind of byte texture lz4 actually shrinks.
+    fn compressible_store(nbytes: usize) -> TensorStore {
+        let mut data = vec![0u8; nbytes];
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = (i / 512) as u8;
+        }
+        let mut s = TensorStore::new();
+        s.push(Tensor::new("w", DType::U8, vec![nbytes], data).unwrap()).unwrap();
+        s
+    }
+
+    /// Small-magnitude scatter mutation: add 1 (wrapping) to one byte
+    /// every `stride` bytes — dirties many chunks, each with a tiny
+    /// diff (what qdelta is built for).
+    fn scatter_mutate(s: &mut TensorStore, stride: usize) {
+        let t = s.get("w").unwrap();
+        let mut data = t.data.as_slice().to_vec();
+        let mut i = stride / 2;
+        while i < data.len() {
+            data[i] = data[i].wrapping_add(1);
+            i += stride;
+        }
+        s.update("w", data).unwrap();
+    }
+
+    fn cfg_codec(max_chain: u64, codec: CodecKind) -> DeltaConfig {
+        DeltaConfig { codec, ..cfg(max_chain) }
+    }
+
+    #[test]
+    fn lz4_chain_shrinks_and_reloads_bit_identically() {
+        let dir = scratch_dir("delta-lz4").unwrap();
+        let rt = runtime();
+        let mut ck = DeltaCheckpointer::new(Arc::clone(&rt), cfg_codec(8, CodecKind::Lz4));
+        let mut s = compressible_store(24 * CS as usize);
+        let base = ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        assert!(base.is_base);
+        // lz4 applies on bases too: structured payload must shrink
+        assert_eq!(base.bytes_raw, base.total_bytes);
+        assert!(
+            base.bytes_encoded * 2 < base.bytes_raw,
+            "lz4 must halve a structured base ({} of {})",
+            base.bytes_encoded,
+            base.bytes_raw
+        );
+        assert_eq!(base.written_bytes, base.bytes_encoded);
+        assert!(base.encode > Duration::ZERO);
+        let m = base.manifest.delta.as_ref().unwrap();
+        assert!(
+            m.chunks.iter().any(|c| c.codec == CodecKind::Lz4 && c.enc_len < c.len),
+            "some chunk must be stored lz4-encoded"
+        );
+        let (l0, _, _) = load_checkpoint(&dir.join("step-00000001"), &rt).unwrap();
+        assert!(l0.content_eq(&s));
+
+        mutate(&mut s, 0.1, 0x30);
+        let d1 = ck.write(&s, extra(2), &dir.join("step-00000002")).unwrap();
+        assert!(!d1.is_base);
+        assert!(d1.bytes_raw < d1.total_bytes, "delta writes only dirty chunks");
+        let (l1, _, _) = load_checkpoint(&dir.join("step-00000002"), &rt).unwrap();
+        assert!(l1.content_eq(&s));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lz4_restore_is_byte_identical_to_uncompressed_restore() {
+        // Bit-identity across codecs: the decoded restore of an lz4
+        // checkpoint equals the restore of a codec-less checkpoint of
+        // the same state, byte for byte.
+        let dir = scratch_dir("delta-codec-eq").unwrap();
+        let rt = runtime();
+        let s = compressible_store(12 * CS as usize);
+        let mut plain = DeltaCheckpointer::new(Arc::clone(&rt), cfg(8));
+        let mut coded = DeltaCheckpointer::new(Arc::clone(&rt), cfg_codec(8, CodecKind::Lz4));
+        plain.write(&s, extra(1), &dir.join("plain").join("step-00000001")).unwrap();
+        coded.write(&s, extra(1), &dir.join("coded").join("step-00000001")).unwrap();
+        let mp = CheckpointManifest::load(&dir.join("plain").join("step-00000001")).unwrap();
+        let mc = CheckpointManifest::load(&dir.join("coded").join("step-00000001")).unwrap();
+        let sp =
+            assemble_delta_stream(&dir.join("plain").join("step-00000001"), &mp, &rt).unwrap();
+        let sc =
+            assemble_delta_stream(&dir.join("coded").join("step-00000001"), &mc, &rt).unwrap();
+        assert_eq!(sp, sc, "decoded stream must be byte-identical to the uncompressed one");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn qdelta_chain_reloads_bit_identically_and_compacts_exact() {
+        let dir = scratch_dir("delta-qd").unwrap();
+        let rt = runtime();
+        let mut ck = DeltaCheckpointer::new(Arc::clone(&rt), cfg_codec(3, CodecKind::QuantDelta));
+        let mut s = store(23, 16 * CS as usize);
+        let base = ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        assert!(base.is_base);
+        // a base stores exact raw bytes — qdelta never applies to it
+        assert_eq!(base.bytes_encoded, base.bytes_raw);
+        assert!(base
+            .manifest
+            .delta
+            .as_ref()
+            .unwrap()
+            .chunks
+            .iter()
+            .all(|c| c.codec == CodecKind::None));
+
+        let mut snaps = Vec::new();
+        for step in 2..=4i64 {
+            scatter_mutate(&mut s, 3 * CS as usize);
+            let d = ck
+                .write(&s, extra(step), &dir.join(format!("step-0000000{step}")))
+                .unwrap();
+            assert!(!d.is_base);
+            // tiny scattered diffs must crush: quantized runs, not raw
+            assert!(
+                d.bytes_encoded * 2 < d.bytes_raw,
+                "step {step}: qdelta must shrink scattered point mutations ({} of {})",
+                d.bytes_encoded,
+                d.bytes_raw
+            );
+            let m = d.manifest.delta.as_ref().unwrap();
+            assert!(m
+                .chunks
+                .iter()
+                .filter(|c| c.codec == CodecKind::QuantDelta)
+                .all(|c| c.base.is_some() && c.enc_len < c.len));
+            snaps.push((step, s.snapshot()));
+        }
+        // every link decodes bit-identically
+        for (step, snap) in &snaps {
+            let (l, _, _) =
+                load_checkpoint(&dir.join(format!("step-0000000{step}")), &rt).unwrap();
+            assert!(l.content_eq(snap), "step {step} must reload bit-identically");
+        }
+        // chain is full (max_chain = 3): the next write compacts into a
+        // fresh base that stores exact raw bytes again
+        scatter_mutate(&mut s, 3 * CS as usize);
+        let compacted = ck.write(&s, extra(5), &dir.join("step-00000005")).unwrap();
+        assert!(compacted.is_base, "chain at max_chain must compact");
+        assert_eq!(compacted.bytes_encoded, compacted.bytes_raw);
+        assert!(compacted
+            .manifest
+            .delta
+            .as_ref()
+            .unwrap()
+            .chunks
+            .iter()
+            .all(|c| c.codec == CodecKind::None && c.base.is_none()));
+        let (l, _, _) = load_checkpoint(&dir.join("step-00000005"), &rt).unwrap();
+        assert!(l.content_eq(&s));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn qdelta_base_extents_survive_prune_gc() {
+        // A kept manifest's qdelta chunks reference raw base bytes in an
+        // OLDER directory; prune must keep those extents alive through
+        // demotion + sparse segment rewrite, or decode breaks.
+        let dir = scratch_dir("delta-qd-prune").unwrap();
+        let rt = runtime();
+        let mut ck = DeltaCheckpointer::new(Arc::clone(&rt), cfg_codec(8, CodecKind::QuantDelta));
+        let mut s = store(29, 12 * CS as usize);
+        ck.write(&s, extra(1), &dir.join("step-00000001")).unwrap();
+        for step in 2..=5i64 {
+            scatter_mutate(&mut s, 2 * CS as usize);
+            ck.write(&s, extra(step), &dir.join(format!("step-0000000{step}"))).unwrap();
+        }
+        let stats = prune_chain(&dir, 2, rt.devices(), Some(5)).unwrap();
+        assert!(stats.removed_dirs + stats.demoted_dirs > 0, "prune must reclaim something");
+        // the base directory holding the raw reference bytes was
+        // demoted, not removed
+        assert!(!dir.join("step-00000001").join(MANIFEST_FILE).exists());
+        assert!(dir.join("step-00000001").exists(), "base extents are still referenced");
+        for step in 4..=5 {
+            let (l, _, _) =
+                load_checkpoint(&dir.join(format!("step-0000000{step}")), &rt).unwrap();
+            if step == 5 {
+                assert!(l.content_eq(&s), "newest checkpoint must decode after GC");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -50,6 +50,17 @@ pub struct CheckpointOutcome {
     /// delta — the same quantity in both modes, so metrics comparing
     /// them stay consistent.
     pub written_bytes: u64,
+    /// Raw payload bytes of what this checkpoint persisted — what an
+    /// uncompressed write of the same dirty set would have written.
+    /// Equals `written_bytes` when no codec is active.
+    pub bytes_raw: u64,
+    /// Stored payload bytes after the codec stage (equals
+    /// `written_bytes`; kept explicit so the codec ratio
+    /// `bytes_encoded / bytes_raw` reads directly off the outcome).
+    pub bytes_encoded: u64,
+    /// CPU time spent in the per-chunk codec encode stage (zero when no
+    /// codec is active).
+    pub encode: Duration,
 }
 
 impl CheckpointOutcome {
@@ -215,6 +226,9 @@ impl CheckpointEngine {
         Ok(CheckpointOutcome {
             total_bytes: ser.total_len(),
             written_bytes: ser.total_len(),
+            bytes_raw: ser.total_len(),
+            bytes_encoded: ser.total_len(),
+            encode: Duration::ZERO,
             manifest,
             stats,
             latency: start.elapsed(),

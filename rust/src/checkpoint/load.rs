@@ -184,6 +184,7 @@ fn plan_partition_reads(
                 path: path.clone(),
                 dest: std::sync::Arc::clone(dest),
                 runs: vec![ReadPart { file_off: off, dest_off: p.start + off, len: piece }],
+                decodes: Vec::new(),
                 checks: Vec::new(),
                 coalesced: 0,
                 expect_file_len: Some(len),

@@ -46,12 +46,26 @@
 //! all validated before a single chunk entry is accepted — a flipped or
 //! truncated byte yields a typed error, never a garbage table. v2–v4
 //! JSON chunk arrays are still read.
+//!
+//! Manifest **v6** widens the binary record from 36 to
+//! [`CHUNK_RECORD_LEN_V6`] bytes to carry the **codec stage** (see
+//! [`crate::checkpoint::codec`]): each chunk records which codec
+//! encoded its stored bytes, the encoded length (the stored footprint —
+//! `len` stays the *raw* length and `hash` the *raw* content hash, so
+//! dirty detection and post-decode verification are codec-blind), and,
+//! for quantized-delta chunks, the segment address of the raw **base**
+//! chunk the diff was taken against. The codec fields are validated
+//! fail-closed exactly like the v5 fields: unknown codec ids, nonzero
+//! pad bytes, encoded lengths inconsistent with the codec, and missing
+//! or malformed base references are all typed errors. v2–v5 manifests
+//! are still read (v5's 36-byte records parse as codec `none`).
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::SystemTime;
 
+use crate::checkpoint::codec::CodecKind;
 use crate::checkpoint::plan::{Partition, WritePlan};
 use crate::serialize::format::checksum64_slice;
 use crate::util::json::Json;
@@ -60,23 +74,27 @@ use crate::{Error, Result};
 /// File name of the manifest inside a checkpoint directory.
 pub const MANIFEST_FILE: &str = "checkpoint.json";
 
-/// Manifest schema version. v5 = v4 with the chunk table encoded as a
-/// binary blob of fixed-width little-endian records (`chunk_table` +
-/// `sources`/`devices` string tables + a table digest) instead of a
-/// JSON array. v4 (JSON chunk array with segment addressing), v3
-/// (per-chunk-file deltas) and v2 (composite stream digest, optional
-/// device assignments, no delta section) manifests are still read. v1
-/// manifests (whole-stream `checksum64_slice` digest, no device field)
-/// are rejected with a clear incompatibility error rather than a
-/// misleading digest mismatch. The evolution table lives in
-/// `docs/FORMATS.md`.
-pub const MANIFEST_VERSION: i64 = 5;
+/// Manifest schema version. v6 = v5 with the binary chunk record
+/// widened to carry the codec stage (codec id, encoded length, and the
+/// quantized-delta base reference — see [`CHUNK_RECORD_LEN_V6`]). v5
+/// (36-byte binary records, codec-free), v4 (JSON chunk array with
+/// segment addressing), v3 (per-chunk-file deltas) and v2 (composite
+/// stream digest, optional device assignments, no delta section)
+/// manifests are still read. v1 manifests (whole-stream
+/// `checksum64_slice` digest, no device field) are rejected with a
+/// clear incompatibility error rather than a misleading digest
+/// mismatch. The evolution table lives in `docs/FORMATS.md`.
+pub const MANIFEST_VERSION: i64 = 6;
 
 /// First manifest version carrying the binary chunk table.
 pub const MANIFEST_BINARY_TABLE_VERSION: i64 = 5;
 
-/// Fixed width in bytes of one binary chunk-table record (manifest v5).
-/// Layout, all little-endian:
+/// First manifest version whose binary records carry codec fields
+/// ([`CHUNK_RECORD_LEN_V6`]-byte records).
+pub const MANIFEST_CODEC_VERSION: i64 = 6;
+
+/// Fixed width in bytes of one binary chunk-table record as written by
+/// manifest **v5** (still read). Layout, all little-endian:
 ///
 /// ```text
 /// offset 0   chunk content hash          u64
@@ -87,6 +105,26 @@ pub const MANIFEST_BINARY_TABLE_VERSION: i64 = 5;
 /// offset 28  segment byte offset         u64  (0 when no segment)
 /// ```
 pub const CHUNK_RECORD_LEN: usize = 36;
+
+/// Fixed width in bytes of one binary chunk-table record (manifest v6):
+/// the v5 layout above followed by the codec fields. `hash` and `len`
+/// always describe the chunk's **raw** bytes; `encoded len` is the
+/// stored footprint inside the segment. The base fields address the raw
+/// base chunk a `qdelta` diff was taken against and are the sentinel
+/// (`0xffff_ffff` indices, zero offset/length) for every other codec.
+/// Layout of the tail, all little-endian:
+///
+/// ```text
+/// offset 36  codec id                    u8   (0 none, 1 lz4, 2 qdelta)
+/// offset 37  reserved pad                3 bytes, must be zero
+/// offset 40  encoded length in bytes     u64  (== len when codec 0)
+/// offset 48  base source index           u32  (0xffff_ffff = none/own)
+/// offset 52  base device index           u32  (0xffff_ffff = none)
+/// offset 56  base segment index          u32  (0xffff_ffff = no base)
+/// offset 60  base segment byte offset    u64
+/// offset 68  base length in bytes        u64  (== len for qdelta)
+/// ```
+pub const CHUNK_RECORD_LEN_V6: usize = 76;
 
 /// String-table sentinel for "no entry" in binary chunk records.
 const NO_INDEX: u32 = u32::MAX;
@@ -181,11 +219,12 @@ pub struct SegmentRef {
 /// One fixed-size chunk of an incremental checkpoint's stream.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChunkEntry {
-    /// Content hash of the chunk's bytes
+    /// Content hash of the chunk's **raw** bytes
     /// ([`crate::serialize::format::checksum64_slice`]), used for dirty
-    /// detection when the *next* delta diffs against this table.
+    /// detection when the *next* delta diffs against this table, and to
+    /// verify the *decoded* bytes on restore — codec-blind either way.
     pub hash: u64,
-    /// Chunk length in bytes (== `chunk_size` except for the last).
+    /// Raw chunk length in bytes (== `chunk_size` except for the last).
     pub len: u64,
     /// Sibling directory name holding the chunk's bytes; `None` means
     /// this checkpoint's own directory (the chunk was written by this
@@ -198,6 +237,60 @@ pub struct ChunkEntry {
     /// the legacy v3 layout: one `chunk-NNNNNN.fpck` file per chunk,
     /// named by the chunk's index via [`DeltaSection::chunk_file`].
     pub seg: Option<SegmentRef>,
+    /// Codec that encoded the stored bytes (v6;
+    /// [`CodecKind::None`] for every pre-v6 manifest).
+    pub codec: CodecKind,
+    /// Stored (encoded) length in bytes — the chunk's footprint inside
+    /// its segment file. Equal to `len` when `codec` is `None`.
+    pub enc_len: u64,
+    /// For [`CodecKind::QuantDelta`] chunks: where the raw **base**
+    /// bytes the diff was taken against live. `None` for every other
+    /// codec. The base is always stored raw (diffs are depth-1), so
+    /// decoding never recurses.
+    pub base: Option<ChunkBaseRef>,
+}
+
+impl ChunkEntry {
+    /// A raw (codec-`None`) entry — the v5-and-earlier shape.
+    pub fn raw(
+        hash: u64,
+        len: u64,
+        source: Option<String>,
+        device: Option<String>,
+        seg: Option<SegmentRef>,
+    ) -> ChunkEntry {
+        ChunkEntry {
+            hash,
+            len,
+            source,
+            device,
+            seg,
+            codec: CodecKind::None,
+            enc_len: len,
+            base: None,
+        }
+    }
+
+    /// Bytes this chunk occupies on disk (the encoded length).
+    pub fn stored_len(&self) -> u64 {
+        self.enc_len
+    }
+}
+
+/// Segment address of the raw base chunk a quantized-delta chunk was
+/// diffed against (manifest v6). Mirrors the `source`/`device`/`seg`
+/// triple of a [`ChunkEntry`], resolved the same way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkBaseRef {
+    /// Sibling directory holding the base bytes; `None` = own dir.
+    pub source: Option<String>,
+    /// Device root of the base chunk's segment store.
+    pub device: Option<String>,
+    /// Segment address of the base chunk's raw bytes.
+    pub seg: SegmentRef,
+    /// Raw length of the base chunk — must equal the chunk's `len`
+    /// (the quantized diff is positionwise).
+    pub len: u64,
 }
 
 impl DeltaSection {
@@ -223,7 +316,10 @@ impl DeltaSection {
             .collect()
     }
 
-    /// Bytes held in *this* checkpoint's directory (the dirty chunks).
+    /// Bytes held in *this* checkpoint's directory (the dirty chunks),
+    /// counted at **raw** (decoded) length — codec-blind, like `hash`
+    /// and `len` themselves. The on-disk footprint of an encoded chunk
+    /// is its (smaller) `enc_len`.
     pub fn local_bytes(&self) -> u64 {
         self.chunks.iter().filter(|c| c.source.is_none()).map(|c| c.len).sum()
     }
@@ -253,6 +349,44 @@ impl DeltaSection {
                     c.len, self.chunk_size, self.header_len
                 )));
             }
+            match c.codec {
+                CodecKind::None => {
+                    if c.enc_len != c.len {
+                        return Err(Error::Format(format!(
+                            "chunk {i} is codec none but stores {} of {} bytes",
+                            c.enc_len, c.len
+                        )));
+                    }
+                    if c.base.is_some() {
+                        return Err(Error::Format(format!(
+                            "chunk {i} is codec none but carries a base reference"
+                        )));
+                    }
+                }
+                CodecKind::Lz4 => {
+                    if c.enc_len == 0 || c.seg.is_none() || c.base.is_some() {
+                        return Err(Error::Format(format!(
+                            "chunk {i} has a malformed lz4 entry \
+                             (enc_len {}, seg {:?}, base {:?})",
+                            c.enc_len, c.seg, c.base
+                        )));
+                    }
+                }
+                CodecKind::QuantDelta => {
+                    let base_ok = c
+                        .base
+                        .as_ref()
+                        .map(|b| b.len == c.len)
+                        .unwrap_or(false);
+                    if c.enc_len == 0 || c.seg.is_none() || !base_ok {
+                        return Err(Error::Format(format!(
+                            "chunk {i} has a malformed qdelta entry \
+                             (enc_len {}, seg {:?}, base {:?})",
+                            c.enc_len, c.seg, c.base
+                        )));
+                    }
+                }
+            }
             pos += c.len;
         }
         if pos != total_len {
@@ -271,7 +405,7 @@ impl DeltaSection {
     }
 
     /// Serialize the delta section at [`MANIFEST_VERSION`]: the chunk
-    /// table as the v5 binary record blob plus its string tables and
+    /// table as the v6 binary record blob plus its string tables and
     /// digest.
     fn to_json(&self) -> Json {
         let mut sources: Vec<&str> = Vec::new();
@@ -285,7 +419,7 @@ impl DeltaSection {
                 }
             }
         };
-        let mut records = Vec::with_capacity(self.chunks.len() * CHUNK_RECORD_LEN);
+        let mut records = Vec::with_capacity(self.chunks.len() * CHUNK_RECORD_LEN_V6);
         for c in &self.chunks {
             let src = c.source.as_deref().map_or(NO_INDEX, |s| intern(&mut sources, s));
             let dev = c.device.as_deref().map_or(NO_INDEX, |d| intern(&mut devices, d));
@@ -296,6 +430,25 @@ impl DeltaSection {
             records.extend_from_slice(&dev.to_le_bytes());
             records.extend_from_slice(&seg.to_le_bytes());
             records.extend_from_slice(&off.to_le_bytes());
+            // v6 codec tail
+            records.push(c.codec.as_u8());
+            records.extend_from_slice(&[0u8; 3]);
+            records.extend_from_slice(&c.enc_len.to_le_bytes());
+            let (bsrc, bdev, bseg, boff, blen) = match &c.base {
+                Some(b) => (
+                    b.source.as_deref().map_or(NO_INDEX, |s| intern(&mut sources, s)),
+                    b.device.as_deref().map_or(NO_INDEX, |d| intern(&mut devices, d)),
+                    b.seg.seg,
+                    b.seg.offset,
+                    b.len,
+                ),
+                None => (NO_INDEX, NO_INDEX, NO_INDEX, 0, 0),
+            };
+            records.extend_from_slice(&bsrc.to_le_bytes());
+            records.extend_from_slice(&bdev.to_le_bytes());
+            records.extend_from_slice(&bseg.to_le_bytes());
+            records.extend_from_slice(&boff.to_le_bytes());
+            records.extend_from_slice(&blen.to_le_bytes());
         }
         let digest = checksum64_slice(&records);
         let mut fields = vec![
@@ -346,7 +499,7 @@ impl DeltaSection {
             )));
         }
         let chunks = if binary {
-            Self::chunks_from_binary(v)?
+            Self::chunks_from_binary(v, version)?
         } else {
             Self::chunks_from_json_array(v)?
         };
@@ -382,26 +535,35 @@ impl DeltaSection {
                     }),
                     None => None,
                 };
-                Ok(ChunkEntry {
-                    hash: (hi << 32) | (lo & 0xffff_ffff),
-                    len: c.get("len")?.as_i64()? as u64,
+                Ok(ChunkEntry::raw(
+                    (hi << 32) | (lo & 0xffff_ffff),
+                    c.get("len")?.as_i64()? as u64,
                     source,
                     device,
                     seg,
-                })
+                ))
             })
             .collect::<Result<Vec<_>>>()
     }
 
-    /// Parse the v5 binary chunk table, **fail-closed**: every invariant
-    /// is checked before any entry is returned — record count and exact
-    /// blob length, table digest, string-table indices, non-zero chunk
-    /// lengths, segment offsets past the segment header with no
-    /// arithmetic overflow, and per-segment extent monotonicity (no two
-    /// chunks of one segment may overlap). A corrupted table yields a
+    /// Parse the binary chunk table (v5's 36-byte records or v6's
+    /// 76-byte records, selected by the manifest version),
+    /// **fail-closed**: every invariant is checked before any entry is
+    /// returned — record count and exact blob length, table digest,
+    /// string-table indices, non-zero chunk lengths, segment offsets
+    /// past the segment header with no arithmetic overflow, per-segment
+    /// extent monotonicity (no two chunks of one segment may overlap),
+    /// and (v6) codec-id validity, zero pad bytes, codec-consistent
+    /// encoded lengths and base references. A corrupted table yields a
     /// typed [`Error::Format`], never a partial or garbage table.
-    fn chunks_from_binary(v: &Json) -> Result<Vec<ChunkEntry>> {
-        let fail = |detail: String| Error::Format(format!("manifest v5 chunk table: {detail}"));
+    fn chunks_from_binary(v: &Json, version: i64) -> Result<Vec<ChunkEntry>> {
+        let fail =
+            |detail: String| Error::Format(format!("manifest v{version} chunk table: {detail}"));
+        let record_len = if version >= MANIFEST_CODEC_VERSION {
+            CHUNK_RECORD_LEN_V6
+        } else {
+            CHUNK_RECORD_LEN
+        };
         let count = v.get("chunk_count")?.as_i64()?;
         if count < 0 {
             return Err(fail(format!("negative chunk_count {count}")));
@@ -421,7 +583,7 @@ impl DeltaSection {
         let bytes = hex_decode(v.get("chunk_table")?.as_str()?)
             .map_err(|e| fail(format!("{e}")))?;
         let expect = (count as usize)
-            .checked_mul(CHUNK_RECORD_LEN)
+            .checked_mul(record_len)
             .ok_or_else(|| fail(format!("chunk_count {count} overflows")))?;
         if bytes.len() != expect {
             return Err(fail(format!(
@@ -450,11 +612,14 @@ impl DeltaSection {
                 }),
             }
         };
+        let header_len = crate::checkpoint::delta::SEGMENT_HEADER_LEN as u64;
         let mut chunks = Vec::with_capacity(count as usize);
-        // (source index, segment, offset, len) of every segment-addressed
-        // record, for the monotonicity check below.
+        // (source index, segment, offset, stored len) of every
+        // segment-addressed record, for the monotonicity check below.
+        // Base references are *aliases* of extents some manifest already
+        // owns, so they are bounds-checked but not entered here.
         let mut extents: Vec<(u32, u32, u64, u64)> = Vec::new();
-        for (i, rec) in bytes.chunks_exact(CHUNK_RECORD_LEN).enumerate() {
+        for (i, rec) in bytes.chunks_exact(record_len).enumerate() {
             let hash = u64_at(rec, 0);
             let len = u64_at(rec, 8);
             if len == 0 {
@@ -465,6 +630,104 @@ impl DeltaSection {
             let device = lookup(&devices, u32_at(rec, 20), "device", i)?;
             let seg_idx = u32_at(rec, 24);
             let offset = u64_at(rec, 28);
+            // v6 codec tail (pre-v6 records are implicitly raw)
+            let (codec, enc_len, base) = if record_len == CHUNK_RECORD_LEN_V6 {
+                let codec = CodecKind::from_u8(rec[36])
+                    .map_err(|_| fail(format!("record {i} has unknown codec id {}", rec[36])))?;
+                if rec[37..40] != [0u8; 3] {
+                    return Err(fail(format!("record {i} has nonzero pad bytes")));
+                }
+                let enc_len = u64_at(rec, 40);
+                let bsrc = u32_at(rec, 48);
+                let bdev = u32_at(rec, 52);
+                let bseg = u32_at(rec, 56);
+                let boff = u64_at(rec, 60);
+                let blen = u64_at(rec, 68);
+                let base = if bseg == NO_INDEX {
+                    if bsrc != NO_INDEX || bdev != NO_INDEX || boff != 0 || blen != 0 {
+                        return Err(fail(format!(
+                            "record {i} has no base segment but nonzero base fields"
+                        )));
+                    }
+                    None
+                } else {
+                    if boff < header_len {
+                        return Err(fail(format!(
+                            "record {i} base offset {boff} lands inside the segment header"
+                        )));
+                    }
+                    if boff.checked_add(blen).is_none() {
+                        return Err(fail(format!("record {i} base extent overflows")));
+                    }
+                    Some(ChunkBaseRef {
+                        source: lookup(&sources, bsrc, "base source", i)?,
+                        device: lookup(&devices, bdev, "base device", i)?,
+                        seg: SegmentRef { seg: bseg, offset: boff },
+                        len: blen,
+                    })
+                };
+                match codec {
+                    CodecKind::None => {
+                        if enc_len != len {
+                            return Err(fail(format!(
+                                "record {i} is codec none but encoded length {enc_len} \
+                                 != raw length {len}"
+                            )));
+                        }
+                        if base.is_some() {
+                            return Err(fail(format!(
+                                "record {i} is codec none but carries a base reference"
+                            )));
+                        }
+                    }
+                    CodecKind::Lz4 => {
+                        if enc_len == 0 {
+                            return Err(fail(format!(
+                                "record {i} is codec lz4 with zero encoded length"
+                            )));
+                        }
+                        if base.is_some() {
+                            return Err(fail(format!(
+                                "record {i} is codec lz4 but carries a base reference"
+                            )));
+                        }
+                        if seg_idx == NO_INDEX {
+                            return Err(fail(format!(
+                                "record {i} is codec lz4 without segment addressing"
+                            )));
+                        }
+                    }
+                    CodecKind::QuantDelta => {
+                        if enc_len == 0 {
+                            return Err(fail(format!(
+                                "record {i} is codec qdelta with zero encoded length"
+                            )));
+                        }
+                        if seg_idx == NO_INDEX {
+                            return Err(fail(format!(
+                                "record {i} is codec qdelta without segment addressing"
+                            )));
+                        }
+                        match &base {
+                            None => {
+                                return Err(fail(format!(
+                                    "record {i} is codec qdelta without a base reference"
+                                )));
+                            }
+                            Some(b) if b.len != len => {
+                                return Err(fail(format!(
+                                    "record {i} base length {} != raw length {len}",
+                                    b.len
+                                )));
+                            }
+                            Some(_) => {}
+                        }
+                    }
+                }
+                (codec, enc_len, base)
+            } else {
+                (CodecKind::None, len, None)
+            };
             let seg = if seg_idx == NO_INDEX {
                 if offset != 0 {
                     return Err(fail(format!(
@@ -473,18 +736,18 @@ impl DeltaSection {
                 }
                 None
             } else {
-                if offset < crate::checkpoint::delta::SEGMENT_HEADER_LEN as u64 {
+                if offset < header_len {
                     return Err(fail(format!(
                         "record {i} segment offset {offset} lands inside the segment header"
                     )));
                 }
-                if offset.checked_add(len).is_none() {
+                if offset.checked_add(enc_len).is_none() {
                     return Err(fail(format!("record {i} segment extent overflows")));
                 }
-                extents.push((src_idx, seg_idx, offset, len));
+                extents.push((src_idx, seg_idx, offset, enc_len));
                 Some(SegmentRef { seg: seg_idx, offset })
             };
-            chunks.push(ChunkEntry { hash, len, source, device, seg });
+            chunks.push(ChunkEntry { hash, len, source, device, seg, codec, enc_len, base });
         }
         // Segment extents must be monotone: sorted by offset within one
         // (source, segment) file, consecutive extents never overlap.
@@ -958,21 +1221,9 @@ mod tests {
             chunk_size: 64,
             header_len: 0,
             chunks: vec![
-                ChunkEntry {
-                    hash: 0x11,
-                    len: 64,
-                    source: Some("step-00000001".into()),
-                    device: None,
-                    seg: None,
-                },
-                ChunkEntry {
-                    hash: 0x22,
-                    len: 64,
-                    source: None,
-                    device: Some("/mnt/ssd1".into()),
-                    seg: None,
-                },
-                ChunkEntry { hash: 0x33, len: 10, source: None, device: None, seg: None },
+                ChunkEntry::raw(0x11, 64, Some("step-00000001".into()), None, None),
+                ChunkEntry::raw(0x22, 64, None, Some("/mnt/ssd1".into()), None),
+                ChunkEntry::raw(0x33, 10, None, None, None),
             ],
         };
         CheckpointManifest::from_delta(138, 0xfeed_f00d, 4, delta)
@@ -986,30 +1237,65 @@ mod tests {
             chunk_size: 64,
             header_len: 100,
             chunks: vec![
-                ChunkEntry {
-                    hash: 0xaa,
-                    len: 100, // header chunk: its own (padded) length
-                    source: None,
-                    device: None,
-                    seg: Some(SegmentRef { seg: 0, offset: 4096 }),
-                },
+                ChunkEntry::raw(
+                    0xaa,
+                    100, // header chunk: its own (padded) length
+                    None,
+                    None,
+                    Some(SegmentRef { seg: 0, offset: 4096 }),
+                ),
+                ChunkEntry::raw(
+                    0xbb,
+                    64,
+                    Some("step-00000003".into()),
+                    Some("/mnt/ssd0".into()),
+                    Some(SegmentRef { seg: 1, offset: 4096 + 640 }),
+                ),
+                ChunkEntry::raw(0xcc, 30, None, None, Some(SegmentRef { seg: 0, offset: 4196 })),
+            ],
+        };
+        CheckpointManifest::from_delta(194, 0xdead_0001, 9, delta)
+    }
+
+    /// v6-shaped delta section exercising all three codecs: a raw header
+    /// chunk, an lz4-compressed chunk, and a qdelta chunk whose base
+    /// lives in a sibling checkpoint's segment store.
+    fn codec_manifest() -> CheckpointManifest {
+        let delta = DeltaSection {
+            base: Some("step-00000003".into()),
+            chain_len: 1,
+            chunk_size: 64,
+            header_len: 100,
+            chunks: vec![
+                ChunkEntry::raw(0xaa, 100, None, None, Some(SegmentRef { seg: 0, offset: 4096 })),
                 ChunkEntry {
                     hash: 0xbb,
                     len: 64,
-                    source: Some("step-00000003".into()),
+                    source: None,
                     device: Some("/mnt/ssd0".into()),
-                    seg: Some(SegmentRef { seg: 1, offset: 4096 + 640 }),
+                    seg: Some(SegmentRef { seg: 0, offset: 4196 }),
+                    codec: CodecKind::Lz4,
+                    enc_len: 20,
+                    base: None,
                 },
                 ChunkEntry {
                     hash: 0xcc,
                     len: 30,
                     source: None,
                     device: None,
-                    seg: Some(SegmentRef { seg: 0, offset: 4196 }),
+                    seg: Some(SegmentRef { seg: 0, offset: 4216 }),
+                    codec: CodecKind::QuantDelta,
+                    enc_len: 9,
+                    base: Some(ChunkBaseRef {
+                        source: Some("step-00000003".into()),
+                        device: None,
+                        seg: SegmentRef { seg: 1, offset: 4096 },
+                        len: 30,
+                    }),
                 },
             ],
         };
-        CheckpointManifest::from_delta(194, 0xdead_0001, 9, delta)
+        CheckpointManifest::from_delta(194, 0xdead_0002, 10, delta)
     }
 
     #[test]
@@ -1080,8 +1366,10 @@ mod tests {
         assert!(m.validate().is_err());
     }
 
-    /// Re-encode a v5 manifest after mutating the raw chunk-table bytes,
-    /// restoring a valid digest so the per-record checks are reached.
+    /// Re-encode a binary-table manifest after mutating the raw
+    /// chunk-table bytes, restoring a valid digest so the per-record
+    /// checks are reached. Record width follows the written version
+    /// (v6 unless the caller rewrites `manifest_version` afterwards).
     fn rewrite_table(m: &CheckpointManifest, f: impl FnOnce(&mut Vec<u8>)) -> Json {
         let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
         let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
@@ -1092,24 +1380,25 @@ mod tests {
         let mut bytes = hex_decode(&hex).unwrap();
         f(&mut bytes);
         let digest = checksum64_slice(&bytes);
-        delta.insert("chunk_count".into(), Json::Int((bytes.len() / CHUNK_RECORD_LEN) as i64));
+        delta
+            .insert("chunk_count".into(), Json::Int((bytes.len() / CHUNK_RECORD_LEN_V6) as i64));
         delta.insert("table_digest_hi".into(), Json::Int((digest >> 32) as i64));
         delta.insert("table_digest_lo".into(), Json::Int((digest & 0xffff_ffff) as i64));
         delta.insert("chunk_table".into(), Json::Str(hex_encode(&bytes)));
         Json::Object(fields)
     }
 
-    fn expect_v5_reject(j: &Json, needle: &str) {
+    fn expect_table_reject(j: &Json, needle: &str) {
         match CheckpointManifest::from_json(j) {
             Err(Error::Format(msg)) => {
                 assert!(msg.contains(needle), "error {msg:?} missing {needle:?}")
             }
-            other => panic!("expected fail-closed v5 error with {needle:?}, got {other:?}"),
+            other => panic!("expected fail-closed table error with {needle:?}, got {other:?}"),
         }
     }
 
     #[test]
-    fn v5_digest_mismatch_fails_closed() {
+    fn table_digest_mismatch_fails_closed() {
         let m = segment_manifest();
         let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
         let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
@@ -1121,12 +1410,13 @@ mod tests {
         let mut flipped = hex.into_bytes();
         flipped[3] = if flipped[3] == b'0' { b'1' } else { b'0' };
         delta.insert("chunk_table".into(), Json::Str(String::from_utf8(flipped).unwrap()));
-        expect_v5_reject(&Json::Object(fields), "digest mismatch");
+        expect_table_reject(&Json::Object(fields), "digest mismatch");
     }
 
     #[test]
-    fn v5_rejects_wrong_table_kind() {
-        // a v5 manifest carrying the legacy JSON array must not parse
+    fn binary_table_rejects_wrong_table_kind() {
+        // a binary-table manifest carrying the legacy JSON array must
+        // not parse
         let m = delta_manifest();
         let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
         let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
@@ -1136,7 +1426,7 @@ mod tests {
             ("len", Json::Int(64)),
         ])));
         delta.insert("chunks".into(), legacy_chunks);
-        expect_v5_reject(&Json::Object(fields.clone()), "found a JSON `chunks` array");
+        expect_table_reject(&Json::Object(fields.clone()), "found a JSON `chunks` array");
         // and a v4 manifest carrying a binary table must not parse either
         fields.insert("manifest_version".into(), Json::Int(4));
         let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
@@ -1150,41 +1440,144 @@ mod tests {
     }
 
     #[test]
-    fn v5_record_invariants_fail_closed() {
+    fn record_invariants_fail_closed() {
         let m = segment_manifest();
         // zero chunk length
         let j = rewrite_table(&m, |b| b[8..16].fill(0));
-        expect_v5_reject(&j, "zero length");
+        expect_table_reject(&j, "zero length");
         // source index out of range (record 1 carries the only source)
         let j = rewrite_table(&m, |b| {
-            b[CHUNK_RECORD_LEN + 16..CHUNK_RECORD_LEN + 20]
+            b[CHUNK_RECORD_LEN_V6 + 16..CHUNK_RECORD_LEN_V6 + 20]
                 .copy_from_slice(&7u32.to_le_bytes());
         });
-        expect_v5_reject(&j, "source index 7 out of range");
+        expect_table_reject(&j, "source index 7 out of range");
         // segment offset inside the segment header
         let j = rewrite_table(&m, |b| b[28..36].copy_from_slice(&17u64.to_le_bytes()));
-        expect_v5_reject(&j, "inside the segment header");
+        expect_table_reject(&j, "inside the segment header");
         // segment extent overflowing u64
         let j = rewrite_table(&m, |b| b[28..36].copy_from_slice(&u64::MAX.to_le_bytes()));
-        expect_v5_reject(&j, "overflows");
+        expect_table_reject(&j, "overflows");
         // no segment but a nonzero offset
         let j = rewrite_table(&m, |b| {
             b[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
             b[28..36].copy_from_slice(&4096u64.to_le_bytes());
         });
-        expect_v5_reject(&j, "no segment but a nonzero offset");
+        expect_table_reject(&j, "no segment but a nonzero offset");
         // overlapping extents within one segment: move record 2 (seg 0,
         // off 4196) back so it overlaps record 0's [4096, 4196)
         let j = rewrite_table(&m, |b| {
-            let off = 2 * CHUNK_RECORD_LEN + 28;
+            let off = 2 * CHUNK_RECORD_LEN_V6 + 28;
             b[off..off + 8].copy_from_slice(&4150u64.to_le_bytes());
         });
-        expect_v5_reject(&j, "extents overlap");
+        expect_table_reject(&j, "extents overlap");
         // truncated blob vs chunk_count
         let j = rewrite_table(&m, |b| {
             b.truncate(b.len() - 1);
         });
-        expect_v5_reject(&j, "manifest v5 chunk table");
+        expect_table_reject(&j, "manifest v6 chunk table");
+    }
+
+    #[test]
+    fn v6_codec_fields_roundtrip() {
+        let m = codec_manifest();
+        m.validate().unwrap();
+        let back = CheckpointManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        let d = back.delta.as_ref().unwrap();
+        assert_eq!(d.chunks[1].codec, CodecKind::Lz4);
+        assert_eq!(d.chunks[1].enc_len, 20);
+        assert_eq!(d.chunks[2].codec, CodecKind::QuantDelta);
+        let b = d.chunks[2].base.as_ref().unwrap();
+        assert_eq!(b.source.as_deref(), Some("step-00000003"));
+        assert_eq!(b.seg, SegmentRef { seg: 1, offset: 4096 });
+        assert_eq!(b.len, 30);
+        // stored footprint is the encoded length
+        assert_eq!(d.chunks[1].stored_len(), 20);
+        assert_eq!(d.chunks[0].stored_len(), 100);
+    }
+
+    #[test]
+    fn v6_codec_invariants_fail_closed() {
+        let m = codec_manifest();
+        let r1 = CHUNK_RECORD_LEN_V6; // lz4 record
+        let r2 = 2 * CHUNK_RECORD_LEN_V6; // qdelta record
+        // unknown codec id
+        let j = rewrite_table(&m, |b| b[36] = 9);
+        expect_table_reject(&j, "unknown codec id 9");
+        // nonzero pad bytes
+        let j = rewrite_table(&m, |b| b[37] = 1);
+        expect_table_reject(&j, "nonzero pad");
+        // codec none with encoded length != raw length
+        let j = rewrite_table(&m, |b| b[40..48].copy_from_slice(&99u64.to_le_bytes()));
+        expect_table_reject(&j, "codec none but encoded length");
+        // codec none carrying base fields
+        let j = rewrite_table(&m, |b| {
+            b[56..60].copy_from_slice(&0u32.to_le_bytes()); // base seg
+            b[60..68].copy_from_slice(&4096u64.to_le_bytes()); // base off
+            b[68..76].copy_from_slice(&100u64.to_le_bytes()); // base len
+        });
+        expect_table_reject(&j, "codec none but carries a base reference");
+        // lz4 with zero encoded length
+        let j = rewrite_table(&m, |b| b[r1 + 40..r1 + 48].fill(0));
+        expect_table_reject(&j, "zero encoded length");
+        // lz4 carrying a base reference
+        let j = rewrite_table(&m, |b| {
+            b[r1 + 56..r1 + 60].copy_from_slice(&0u32.to_le_bytes());
+            b[r1 + 60..r1 + 68].copy_from_slice(&4096u64.to_le_bytes());
+            b[r1 + 68..r1 + 76].copy_from_slice(&64u64.to_le_bytes());
+        });
+        expect_table_reject(&j, "codec lz4 but carries a base reference");
+        // qdelta without a base (clear the base segment index)
+        let j = rewrite_table(&m, |b| {
+            b[r2 + 48..r2 + 56].copy_from_slice(&[0xff; 8]); // base src+dev
+            b[r2 + 56..r2 + 60].copy_from_slice(&u32::MAX.to_le_bytes());
+            b[r2 + 60..r2 + 76].fill(0);
+        });
+        expect_table_reject(&j, "qdelta without a base");
+        // base offset inside the segment header
+        let j = rewrite_table(&m, |b| b[r2 + 60..r2 + 68].copy_from_slice(&5u64.to_le_bytes()));
+        expect_table_reject(&j, "base offset 5 lands inside the segment header");
+        // base length disagreeing with the raw length
+        let j = rewrite_table(&m, |b| b[r2 + 68..r2 + 76].copy_from_slice(&7u64.to_le_bytes()));
+        expect_table_reject(&j, "base length 7 != raw length 30");
+        // sentinel base segment but leftover base fields
+        let j = rewrite_table(&m, |b| {
+            b[r2 + 56..r2 + 60].copy_from_slice(&u32::MAX.to_le_bytes());
+        });
+        expect_table_reject(&j, "no base segment but nonzero base fields");
+    }
+
+    /// A v5 document (36-byte records, no codec fields) must still parse
+    /// — with every entry implicitly raw. Serializes segment_manifest's
+    /// entries at the v5 record width by hand.
+    #[test]
+    fn v5_records_still_parse_as_codec_none() {
+        let m = segment_manifest();
+        let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
+        fields.insert("manifest_version".into(), Json::Int(5));
+        let Some(Json::Object(delta)) = fields.get_mut("delta") else { panic!("delta section") };
+        // rebuild the blob with 36-byte records (drop each codec tail)
+        let hex = match delta.get("chunk_table") {
+            Some(Json::Str(s)) => s.clone(),
+            other => panic!("chunk_table missing: {other:?}"),
+        };
+        let v6 = hex_decode(&hex).unwrap();
+        let mut v5 = Vec::new();
+        for rec in v6.chunks_exact(CHUNK_RECORD_LEN_V6) {
+            v5.extend_from_slice(&rec[..CHUNK_RECORD_LEN]);
+        }
+        let digest = checksum64_slice(&v5);
+        delta.insert("table_digest_hi".into(), Json::Int((digest >> 32) as i64));
+        delta.insert("table_digest_lo".into(), Json::Int((digest & 0xffff_ffff) as i64));
+        delta.insert("chunk_table".into(), Json::Str(hex_encode(&v5)));
+        let back = CheckpointManifest::from_json(&Json::Object(fields)).unwrap();
+        assert_eq!(back, m, "v5 records must parse to the same (raw) entries");
+        let d = back.delta.as_ref().unwrap();
+        assert!(d.chunks.iter().all(|c| c.codec == CodecKind::None && c.enc_len == c.len));
+        // and a v5 document must reject v6-width records (blob length)
+        let Json::Object(mut fields) = m.to_json() else { panic!("manifest json is an object") };
+        fields.insert("manifest_version".into(), Json::Int(5));
+        expect_table_reject(&Json::Object(fields), "manifest v5 chunk table");
     }
 
     #[test]
@@ -1208,6 +1601,60 @@ mod tests {
         let dir = crate::io::engine::scratch_dir("manifest-miss").unwrap();
         assert!(CheckpointManifest::load(&dir).is_err());
         assert!(CheckpointManifest::load_cached(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The LRU key is `(path, mtime, len)`. **Documented limitation:**
+    /// an *external* rewrite that preserves the file's byte length
+    /// within mtime granularity is invisible to the key and serves the
+    /// stale parse — the cache trusts metadata, by design. The reason
+    /// this cannot bite across the v6 codec bump: every in-repo publish
+    /// goes through [`CheckpointManifest::save_with`], which drops the
+    /// cached parse *explicitly* (content-blind), so a manifest
+    /// rewritten in place through the real path always re-parses — new
+    /// codec fields and all — even when mtime and length collide.
+    #[test]
+    fn cache_serves_stale_on_external_rewrite_but_never_through_publish() {
+        let dir = crate::io::engine::scratch_dir("manifest-codec-cache").unwrap();
+        let m = codec_manifest();
+        let path = m.save(&dir).unwrap();
+        let first = CheckpointManifest::load_cached(&dir).unwrap();
+        assert_eq!(first.delta.as_ref().unwrap().chunks[2].codec, CodecKind::QuantDelta);
+        let meta = std::fs::metadata(&path).unwrap();
+        let (mtime, len) = (meta.modified().unwrap(), meta.len());
+        // external rewrite: same byte length (flip hex digits inside the
+        // chunk table), mtime forced back — the cache cannot see it
+        let mut bytes = std::fs::read(&path).unwrap();
+        let pos = {
+            let text = String::from_utf8_lossy(&bytes);
+            text.find("chunk_table").expect("table field present") + 20
+        };
+        bytes[pos] = if bytes[pos] == b'0' { b'1' } else { b'0' };
+        std::fs::write(&path, &bytes).unwrap();
+        let f = std::fs::File::options().write(true).open(&path).unwrap();
+        f.set_modified(mtime).unwrap();
+        drop(f);
+        let meta2 = std::fs::metadata(&path).unwrap();
+        assert_eq!((meta2.modified().unwrap(), meta2.len()), (mtime, len));
+        let stale = CheckpointManifest::load_cached(&dir).unwrap();
+        assert_eq!(
+            *stale, *first,
+            "equal (path, mtime, len) serves the cached parse — documented limitation"
+        );
+        // ...but the publish path invalidates content-blind: a rewrite
+        // through save() re-parses even if we force the old mtime back
+        let mut m2 = codec_manifest();
+        m2.delta.as_mut().unwrap().chunks[2].enc_len = 11;
+        m2.save(&dir).unwrap();
+        let f = std::fs::File::options().write(true).open(&path).unwrap();
+        f.set_modified(mtime).unwrap();
+        drop(f);
+        let fresh = CheckpointManifest::load_cached(&dir).unwrap();
+        assert_eq!(
+            fresh.delta.as_ref().unwrap().chunks[2].enc_len,
+            11,
+            "published rewrite must never serve a stale parse"
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

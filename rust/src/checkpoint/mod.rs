@@ -27,11 +27,16 @@
 //!   device-striped segment files through the shared runtime, reference
 //!   the rest; with chain compaction and segment-granular garbage
 //!   collection.
+//! * [`codec`] — the pluggable per-chunk codec stage (identity, in-repo
+//!   LZ77 block compression, quantized delta encoding) applied between
+//!   serialization and segment packing, with exact-byte decoding
+//!   verified by the read path's chunk hashes.
 //! * [`serve`] — restore-at-scale: concurrent multi-tenant restore
 //!   sessions over one shared runtime, with fair read scheduling, a
 //!   byte-budgeted segment cache (mmap zero-copy with buffered
 //!   fallback), and GC-wired invalidation.
 
+pub mod codec;
 pub mod delta;
 pub mod engine;
 pub mod lazy;
@@ -42,6 +47,7 @@ pub mod plan;
 pub mod serve;
 pub mod strategy;
 
+pub use codec::CodecKind;
 pub use delta::{CheckpointStrategy, DeltaCheckpointer, DeltaConfig, DeltaOutcome};
 pub use engine::{CheckpointEngine, CheckpointOutcome};
 pub use lazy::{LazyCheckpointer, LazyConfig, LazyOutcome};

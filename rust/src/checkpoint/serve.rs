@@ -763,7 +763,12 @@ mod tests {
     ) -> (Vec<PathBuf>, Vec<TensorStore>) {
         let mut ck = DeltaCheckpointer::new(
             Arc::clone(rt),
-            DeltaConfig { chunk_size: 4096, max_chain: 16, segment_bytes: 16 << 10 },
+            DeltaConfig {
+                chunk_size: 4096,
+                max_chain: 16,
+                segment_bytes: 16 << 10,
+                ..DeltaConfig::default()
+            },
         );
         let mut dirs = Vec::new();
         let mut states = Vec::new();
@@ -921,6 +926,7 @@ mod tests {
                         }],
                         true,
                     ),
+                    decodes: Vec::new(),
                     checks: Vec::new(),
                     coalesced: 0,
                     expect_file_len: Some(4096),

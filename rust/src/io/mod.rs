@@ -76,7 +76,7 @@ pub use device::{DeviceMap, DirectCapability, RingCapability, RingProbe};
 pub use engine::{EngineKind, IoBackend, IoConfig, Sink, WriteEngine, WriteStats};
 pub use fault::{FaultKind, FaultPlan, FaultSite};
 pub use read::{ChunkCheck, ReadJob, ReadPart, ReadStats, StreamBuffer};
-pub use runtime::{IoRuntime, IoRuntimeConfig, ReadTicket, Ticket, WriteJob, WriteSource};
+pub use runtime::{IoRuntime, IoRuntimeConfig, ReadTicket, SegPart, Ticket, WriteJob, WriteSource};
 pub use write::{
     BatchEntry, BatchReport, BatchStats, DrainDone, DrainJob, DrainPool, LaneStats, SubmitBackend,
     SyncBackend, WriteExtent, WriteOp, WritePipeline, WritePlan, WriteResources,

@@ -62,6 +62,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::checkpoint::codec::{decode_chunk_into, CodecKind};
 use crate::io::align::{align_down, align_up};
 use crate::io::buffer::{AlignedBuf, BufferPool};
 use crate::io::device::{DeviceMap, O_DIRECT};
@@ -263,6 +264,45 @@ pub struct ChunkCheck {
     pub hash: u64,
 }
 
+/// One codec-encoded chunk a read job decodes after its raw runs land
+/// (see [`crate::checkpoint::codec`]). The encoded image lives in the
+/// job's source file; the decoded (raw) bytes land at `dest_off` in the
+/// stream buffer, where the chunk's folded [`ChunkCheck`] — which
+/// always records the **raw** hash — verifies them exactly like an
+/// unencoded chunk's.
+#[derive(Debug, Clone)]
+pub struct DecodeSpec {
+    /// Chunk index in the manifest table (error reporting).
+    pub index: usize,
+    /// Byte offset of the encoded image inside the job's source file.
+    pub file_off: u64,
+    /// Encoded (stored) length in bytes.
+    pub enc_len: u64,
+    /// Destination offset of the **decoded** chunk in the stream.
+    pub dest_off: u64,
+    /// Raw (decoded) chunk length in bytes.
+    pub raw_len: u64,
+    /// The codec that produced the image.
+    pub codec: CodecKind,
+    /// Base-chunk extent for delta codecs (`None` for self-contained
+    /// codecs like LZ4).
+    pub base: Option<DecodeBase>,
+}
+
+/// Resolved on-disk location of a delta codec's base chunk: always read
+/// through a plain side descriptor, even when the owning job was served
+/// from a cached segment image (the base lives in a *different*
+/// segment, possibly a different checkpoint directory's).
+#[derive(Debug, Clone)]
+pub struct DecodeBase {
+    /// Fully resolved segment file holding the raw base bytes.
+    pub path: PathBuf,
+    /// Byte offset of the base chunk inside that file.
+    pub file_off: u64,
+    /// Base length in bytes (equals the chunk's raw length).
+    pub len: u64,
+}
+
 /// Validation of a fixed-size file prefix (e.g. the FPSG segment
 /// header) before any payload run is read.
 pub struct PrefixCheck {
@@ -282,7 +322,11 @@ pub struct ReadJob {
     pub dest: Arc<StreamBuffer>,
     /// Planned contiguous runs (see [`plan_runs`]), disjoint in `dest`.
     pub runs: Vec<ReadPart>,
-    /// Chunk hashes to verify after the runs complete.
+    /// Codec-encoded chunks to decode after the runs complete, disjoint
+    /// in `dest` from the runs and from each other (the manifest table
+    /// tiles the stream).
+    pub decodes: Vec<DecodeSpec>,
+    /// Chunk hashes to verify after the runs and decodes complete.
     pub checks: Vec<ChunkCheck>,
     /// Parts merged away by coalescing (`parts - runs`), for
     /// [`ReadStats::coalesced`].
@@ -300,14 +344,16 @@ pub struct ReadJob {
 }
 
 impl ReadJob {
-    /// Total payload bytes this job reads.
+    /// Total **raw** payload bytes this job lands in the stream buffer
+    /// (decoded chunks count at their raw length).
     pub fn len(&self) -> u64 {
-        self.runs.iter().map(|r| r.len).sum()
+        self.runs.iter().map(|r| r.len).sum::<u64>()
+            + self.decodes.iter().map(|d| d.raw_len).sum::<u64>()
     }
 
-    /// True when the job has no payload runs.
+    /// True when the job has no payload runs or decodes.
     pub fn is_empty(&self) -> bool {
-        self.runs.is_empty()
+        self.runs.is_empty() && self.decodes.is_empty()
     }
 
     fn fail(&self, detail: impl std::fmt::Display) -> Error {
@@ -391,6 +437,7 @@ impl ReadJob {
                 .checked_add(run.len)
                 .ok_or_else(|| self.fail("read run file offset overflows"))?;
         }
+        self.validate_decode_bounds()?;
         if o_direct {
             // Borrow an aligned bounce buffer from the shared staging
             // pool when one is free, but never block for it: a restore
@@ -417,6 +464,27 @@ impl ReadJob {
             outcome?;
         } else {
             self.read_runs_fallback(&file, step, &mut stats)?;
+        }
+        if !self.decodes.is_empty() {
+            // Encoded images and base chunks are small unaligned
+            // extents: like the prefix check, they go through plain
+            // side descriptors, never the O_DIRECT payload fd.
+            let enc_file = if o_direct {
+                Some(File::open(&self.path).map_err(|e| self.fail(e))?)
+            } else {
+                None
+            };
+            self.run_decodes(
+                |off, buf| {
+                    enc_file
+                        .as_ref()
+                        .unwrap_or(&file)
+                        .read_exact_at(buf, off)
+                        .map_err(Error::from)
+                },
+                true,
+                &mut stats,
+            )?;
         }
         for c in &self.checks {
             // Same bounds discipline as the runs: a hand-built job (the
@@ -498,6 +566,27 @@ impl ReadJob {
             dst.copy_from_slice(&src[run.file_off as usize..src_end as usize]);
             stats.bytes += run.len;
         }
+        if !self.decodes.is_empty() {
+            self.validate_decode_bounds()?;
+            self.run_decodes(
+                |off, buf| {
+                    let start = off as usize;
+                    let end = start.checked_add(buf.len()).filter(|&e| e <= src.len());
+                    match end {
+                        Some(e) => {
+                            buf.copy_from_slice(&src[start..e]);
+                            Ok(())
+                        }
+                        None => Err(Error::Format(format!(
+                            "encoded bytes [{off}..) past the cached image ({} bytes)",
+                            src.len()
+                        ))),
+                    }
+                },
+                false,
+                &mut stats,
+            )?;
+        }
         for c in &self.checks {
             c.dest_off
                 .checked_add(c.len)
@@ -522,6 +611,101 @@ impl ReadJob {
         }
         stats.elapsed = t0.elapsed();
         Ok(stats)
+    }
+
+    /// Bounds discipline for the decode specs, mirroring the run
+    /// validation: a hand-built or corrupt spec must error before any
+    /// arithmetic below can wrap or any slice can go out of bounds.
+    fn validate_decode_bounds(&self) -> Result<()> {
+        for d in &self.decodes {
+            d.dest_off
+                .checked_add(d.raw_len)
+                .filter(|&e| e <= self.dest.len() as u64)
+                .ok_or_else(|| {
+                    self.fail(format_args!(
+                        "chunk {} decode past the end of the stream buffer",
+                        d.index
+                    ))
+                })?;
+            d.file_off.checked_add(d.enc_len).ok_or_else(|| {
+                self.fail(format_args!("chunk {} encoded extent overflows", d.index))
+            })?;
+            if let Some(b) = &d.base {
+                b.file_off.checked_add(b.len).ok_or_else(|| {
+                    self.fail(format_args!("chunk {} base extent overflows", d.index))
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode pass shared by disk execution and cache service: fetch
+    /// each spec's encoded image via `read_enc` (positioned read from
+    /// the source file, or a copy out of the cached image), fetch its
+    /// base chunk — always from disk, bases live in *other* segment
+    /// files — and decode into the chunk's destination slice. The
+    /// folded [`ChunkCheck`]s that run afterwards verify the decoded
+    /// bytes against the manifest's raw hash, so a codec bug or corrupt
+    /// image fails exactly like a corrupt raw chunk.
+    fn run_decodes(
+        &self,
+        mut read_enc: impl FnMut(u64, &mut [u8]) -> Result<()>,
+        enc_is_pread: bool,
+        stats: &mut ReadStats,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let mut bases: std::collections::BTreeMap<&PathBuf, File> =
+            std::collections::BTreeMap::new();
+        for d in &self.decodes {
+            let mut enc = vec![0u8; d.enc_len as usize];
+            read_enc(d.file_off, &mut enc).map_err(|e| {
+                self.fail(format_args!(
+                    "chunk {} encoded bytes [{}..): {e}",
+                    d.index, d.file_off
+                ))
+            })?;
+            if enc_is_pread {
+                stats.preads += 1;
+            }
+            let base: Option<Vec<u8>> = match &d.base {
+                Some(b) => {
+                    if !bases.contains_key(&b.path) {
+                        let f = File::open(&b.path).map_err(|e| {
+                            self.fail(format_args!(
+                                "chunk {} base {}: {e}",
+                                d.index,
+                                b.path.display()
+                            ))
+                        })?;
+                        bases.insert(&b.path, f);
+                    }
+                    let mut buf = vec![0u8; b.len as usize];
+                    bases[&b.path].read_exact_at(&mut buf, b.file_off).map_err(|e| {
+                        self.fail(format_args!(
+                            "chunk {} base bytes [{}..) of {}: {e}",
+                            d.index,
+                            b.file_off,
+                            b.path.display()
+                        ))
+                    })?;
+                    stats.preads += 1;
+                    Some(buf)
+                }
+                None => None,
+            };
+            // SAFETY: in bounds per `validate_decode_bounds`, and the
+            // decoded chunk's range is disjoint from every run and
+            // every other decode (planned from a validated manifest
+            // table that tiles the stream).
+            let dst = unsafe { self.dest.slice_mut(d.dest_off as usize, d.raw_len as usize) };
+            decode_chunk_into(d.codec, &enc, base.as_deref(), dst)
+                .map_err(|e| self.fail(format_args!("chunk {} decode: {e}", d.index)))?;
+            stats.bytes += d.raw_len;
+            stats.bytes_encoded += d.enc_len;
+            stats.chunks_decoded += 1;
+        }
+        stats.decode += t0.elapsed();
+        Ok(())
     }
 
     /// Traditional payload path: positioned reads in `step`-sized
@@ -644,6 +828,15 @@ pub struct ReadStats {
     pub coalesced: u64,
     /// Chunk-hash verifications folded into the read pass.
     pub chunks_verified: u64,
+    /// Encoded (stored) bytes of the codec-encoded chunks this restore
+    /// decoded — what the chunks actually occupied on disk or in cache.
+    /// Their decoded raw bytes are counted in [`ReadStats::bytes`].
+    pub bytes_encoded: u64,
+    /// Codec-encoded chunks decoded inside the read pass.
+    pub chunks_decoded: u64,
+    /// CPU time spent fetching + decoding encoded chunks (summed across
+    /// merged jobs — decode cost is additive even when jobs overlap).
+    pub decode: Duration,
     /// Read jobs merged into these stats.
     pub jobs: u64,
     /// Wall time (max across merged jobs — they run concurrently).
@@ -661,6 +854,9 @@ impl ReadStats {
         self.runs += other.runs;
         self.coalesced += other.coalesced;
         self.chunks_verified += other.chunks_verified;
+        self.bytes_encoded += other.bytes_encoded;
+        self.chunks_decoded += other.chunks_decoded;
+        self.decode += other.decode;
         self.jobs += other.jobs;
         self.elapsed = self.elapsed.max(other.elapsed);
     }
@@ -805,6 +1001,7 @@ mod tests {
             path: dir.join("f.bin"),
             dest: Arc::clone(&dest),
             runs: plan_runs(parts, true),
+            decodes: Vec::new(),
             checks,
             coalesced: 0,
             expect_file_len: Some(100_000),
@@ -834,6 +1031,7 @@ mod tests {
             path: dir.join("f.bin"),
             dest: Arc::clone(&dest),
             runs: vec![part(0, 0, data.len() as u64)],
+            decodes: Vec::new(),
             checks: Vec::new(),
             coalesced: 0,
             expect_file_len: None,
@@ -857,6 +1055,7 @@ mod tests {
             path: missing.clone(),
             dest,
             runs: vec![part(0, 0, 10)],
+            decodes: Vec::new(),
             checks: Vec::new(),
             coalesced: 0,
             expect_file_len: Some(10),
@@ -882,6 +1081,7 @@ mod tests {
             path: dir.join("p.bin"),
             dest,
             runs: vec![part(0, 0, 200)],
+            decodes: Vec::new(),
             checks: Vec::new(),
             coalesced: 0,
             expect_file_len: Some(200),
@@ -914,6 +1114,7 @@ mod tests {
             path: dir.join("f.bin"),
             dest: Arc::clone(&dest),
             runs: vec![part(3, 0, 100_001)], // head off 3, tail unaligned
+            decodes: Vec::new(),
             checks: Vec::new(),
             coalesced: 0,
             expect_file_len: Some(200_000),
@@ -959,6 +1160,7 @@ mod tests {
             path: PathBuf::from("/cached/seg-000000.fpseg"),
             dest: Arc::clone(&dest),
             runs: plan_runs(parts, true),
+            decodes: Vec::new(),
             checks,
             coalesced: 0,
             expect_file_len: Some(50_000),
@@ -980,6 +1182,7 @@ mod tests {
             path: PathBuf::from("/cached/seg-000000.fpseg"),
             dest,
             runs: vec![part(0, 0, 10)],
+            decodes: Vec::new(),
             checks: vec![ChunkCheck {
                 index: 0,
                 dest_off: 0,
@@ -1020,6 +1223,7 @@ mod tests {
             path: dir.join("f.bin"),
             dest: Arc::clone(&dest),
             runs: vec![part(1_000, 0, 9_000)], // ends at EOF
+            decodes: Vec::new(),
             checks: Vec::new(),
             coalesced: 0,
             expect_file_len: Some(10_000),

@@ -110,8 +110,50 @@ pub enum WriteSource {
         /// `prefix`.
         ranges: Vec<(u64, u64)>,
     },
+    /// A segment store whose payload mixes **raw** stream ranges with
+    /// **codec-encoded** chunk images (see
+    /// [`crate::checkpoint::codec`]): the parts are written back to
+    /// back after `prefix`, in order. Raw parts stay zero-copy
+    /// references into the serialized stream; encoded parts are owned
+    /// buffers produced by the encode stage. The drain/fsync mechanics
+    /// below this source are identical to [`WriteSource::Chunks`] —
+    /// codecs change *what bytes* a segment holds, never *how* they
+    /// reach the device.
+    Parts {
+        /// The serialized checkpoint the raw parts index into.
+        ser: Arc<SerializedCheckpoint>,
+        /// Segment-header bytes written before the first part.
+        prefix: Vec<u8>,
+        /// Payload pieces, written in order after `prefix`.
+        parts: Vec<SegPart>,
+    },
     /// A raw byte buffer (microbenchmarks, single-file helpers).
     Bytes(Arc<Vec<u8>>),
+}
+
+/// One payload piece of a [`WriteSource::Parts`] segment.
+pub enum SegPart {
+    /// Stream byte range `[start, end)` of the job's serialized
+    /// checkpoint, written verbatim (an unencoded chunk, or a merged
+    /// run of adjacent unencoded chunks).
+    Raw { start: u64, end: u64 },
+    /// Codec-encoded chunk bytes, owned by the job.
+    Owned(Vec<u8>),
+}
+
+impl SegPart {
+    /// Bytes this part contributes to the segment payload.
+    pub fn len(&self) -> u64 {
+        match self {
+            SegPart::Raw { start, end } => end - start,
+            SegPart::Owned(b) => b.len() as u64,
+        }
+    }
+
+    /// True for zero-length parts.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 impl WriteSource {
@@ -121,6 +163,9 @@ impl WriteSource {
             WriteSource::Range { start, end, .. } => end - start,
             WriteSource::Chunks { prefix, ranges, .. } => {
                 prefix.len() as u64 + ranges.iter().map(|(s, e)| e - s).sum::<u64>()
+            }
+            WriteSource::Parts { prefix, parts, .. } => {
+                prefix.len() as u64 + parts.iter().map(SegPart::len).sum::<u64>()
             }
             WriteSource::Bytes(b) => b.len() as u64,
         }
@@ -139,6 +184,24 @@ impl WriteSource {
                     sink.write(prefix)?;
                 }
                 ser.write_ranges_to(ranges, sink)
+            }
+            WriteSource::Parts { ser, prefix, parts } => {
+                if !prefix.is_empty() {
+                    sink.write(prefix)?;
+                }
+                for part in parts {
+                    match part {
+                        SegPart::Raw { start, end } => {
+                            ser.write_range_to(*start, *end, sink)?;
+                        }
+                        SegPart::Owned(b) => {
+                            if !b.is_empty() {
+                                sink.write(b)?;
+                            }
+                        }
+                    }
+                }
+                Ok(())
             }
             WriteSource::Bytes(b) => sink.write(b.as_slice()),
         }
@@ -178,6 +241,19 @@ impl WriteJob {
         path: PathBuf,
     ) -> WriteJob {
         WriteJob { source: WriteSource::Chunks { ser, prefix, ranges }, path, kind: None }
+    }
+
+    /// A mixed segment-store job: `prefix` (segment header) followed by
+    /// raw stream ranges and owned codec-encoded buffers, in part
+    /// order. The encoded-chunk counterpart of [`WriteJob::chunks`] —
+    /// still one file and one fsync per job.
+    pub fn parts(
+        ser: Arc<SerializedCheckpoint>,
+        prefix: Vec<u8>,
+        parts: Vec<SegPart>,
+        path: PathBuf,
+    ) -> WriteJob {
+        WriteJob { source: WriteSource::Parts { ser, prefix, parts }, path, kind: None }
     }
 
     /// Override the engine kind for this job only.
@@ -606,6 +682,45 @@ mod tests {
         for (s0, e0) in ranges {
             expect.extend_from_slice(&full[s0 as usize..e0 as usize]);
         }
+        assert_eq!(stats.total_bytes, expect.len() as u64);
+        assert_eq!(std::fs::read(dir.join("seg.bin")).unwrap(), expect);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn parts_source_interleaves_raw_ranges_and_owned_buffers() {
+        use crate::serialize::writer::SerializedCheckpoint;
+        use crate::tensor::{DType, Tensor, TensorStore};
+        let dir = scratch_dir("rt-parts").unwrap();
+        let rt = runtime_with(2, 8 << 10);
+        let mut s = TensorStore::new();
+        let mut data = vec![0u8; 40_000];
+        Rng::new(11).fill_bytes(&mut data);
+        s.push(Tensor::new("w", DType::U8, vec![40_000], data).unwrap()).unwrap();
+        let ser = Arc::new(SerializedCheckpoint::new(&s, Default::default()));
+        let full = ser.to_bytes();
+        let total = ser.total_len();
+        let prefix = vec![3u8; 32];
+        let enc_a = vec![0xabu8; 777];
+        let enc_b: Vec<u8> = (0..500u32).map(|i| (i % 251) as u8).collect();
+        let parts = vec![
+            SegPart::Raw { start: 0, end: 2000 },
+            SegPart::Owned(enc_a.clone()),
+            SegPart::Raw { start: 10_000, end: 12_345 },
+            SegPart::Owned(Vec::new()), // gated-out encodings vanish
+            SegPart::Owned(enc_b.clone()),
+            SegPart::Raw { start: total - 7, end: total },
+        ];
+        let expect_len: u64 = prefix.len() as u64 + parts.iter().map(SegPart::len).sum::<u64>();
+        let job = WriteJob::parts(Arc::clone(&ser), prefix.clone(), parts, dir.join("seg.bin"));
+        assert_eq!(job.source.len(), expect_len);
+        let stats = rt.submit(job).wait().unwrap();
+        let mut expect = prefix;
+        expect.extend_from_slice(&full[..2000]);
+        expect.extend_from_slice(&enc_a);
+        expect.extend_from_slice(&full[10_000..12_345]);
+        expect.extend_from_slice(&enc_b);
+        expect.extend_from_slice(&full[total as usize - 7..]);
         assert_eq!(stats.total_bytes, expect.len() as u64);
         assert_eq!(std::fs::read(dir.join("seg.bin")).unwrap(), expect);
         std::fs::remove_dir_all(&dir).unwrap();

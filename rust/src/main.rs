@@ -104,6 +104,11 @@ fn train_spec(name: &'static str) -> ArgSpec {
                        --strategy applies to full only)", "full")
         .opt("segment-bytes", "target payload bytes per delta segment file \
                                (>= 4 KiB)", "64MiB")
+        .opt("ckpt-codec", "none | lz4 | qdelta per-chunk codec between \
+                            serialization and segment packing (lz4 = in-repo \
+                            block compression; qdelta = quantized diffs vs the \
+                            chunk's last stored bytes, exact raw restored at \
+                            base/compaction)", "none")
         .opt("engine", "buffered|single|double", "double")
         .opt("io-backend", "sync | ring | auto drain-lane submission backend \
                             (ring batches queue-depth extents per syscall; auto \
@@ -184,6 +189,7 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
             parsed.get("ckpt"),
         )?,
         segment_bytes,
+        ckpt_codec: fastpersist::checkpoint::codec::CodecKind::parse(parsed.get("ckpt-codec"))?,
         io,
         devices,
         dp_writers: parsed.get_usize("writers")?,
@@ -255,6 +261,23 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
             human(written as u64),
             human(trainer.state.checkpoint_bytes()),
             trainer.cfg.ckpt_strategy.name(),
+        );
+    }
+    let bytes_raw = r.total("ckpt_bytes_raw");
+    if bytes_raw > 0.0
+        && trainer.cfg.ckpt_codec != fastpersist::checkpoint::codec::CodecKind::None
+    {
+        // the codec ledger: stored/raw is the achieved ratio (1.0 means
+        // the benefit gate kept everything raw), encode is CPU time
+        // spent in the codec stage
+        let bytes_enc = r.total("ckpt_bytes_encoded");
+        println!(
+            "ckpt codec {}: {} raw -> {} stored ({:.2}x ratio), encode {:.3} s",
+            trainer.cfg.ckpt_codec.name(),
+            human(bytes_raw as u64),
+            human(bytes_enc as u64),
+            bytes_enc / bytes_raw,
+            r.total("ckpt_encode_s"),
         );
     }
     let jobs = r.total("ckpt_write_jobs");
@@ -336,6 +359,15 @@ fn cmd_train(args: Vec<String>, resume: bool) -> Result<()> {
             human(read_bytes as u64),
             fastpersist::util::bytes::gbps(read_bytes as u64, restore_s),
         );
+        let decoded = r.total("ckpt_read_chunks_decoded");
+        if decoded > 0.0 {
+            println!(
+                "ckpt decode: {:.0} encoded chunks ({}) decoded in {:.3} s",
+                decoded,
+                human(r.total("ckpt_read_bytes_encoded") as u64),
+                r.total("ckpt_decode_s"),
+            );
+        }
     }
     Ok(())
 }

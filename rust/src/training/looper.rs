@@ -15,8 +15,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::checkpoint::codec::CodecKind;
 use crate::checkpoint::delta::{self, CheckpointStrategy, DeltaCheckpointer};
-use crate::checkpoint::engine::CheckpointEngine;
+use crate::checkpoint::engine::{CheckpointEngine, CheckpointOutcome};
 use crate::checkpoint::lazy::{LazyCheckpointer, LazyConfig};
 use crate::checkpoint::load::{load_checkpoint_with, RestoreOptions};
 use crate::checkpoint::pipeline::PipelinedCheckpointer;
@@ -97,6 +98,15 @@ pub struct TrainerConfig {
     /// Applied to the delta writer whatever `ckpt_strategy` spelled out;
     /// must be at least the 4 KiB alignment unit.
     pub segment_bytes: u64,
+    /// Per-chunk codec applied between serialization and segment
+    /// packing (`--ckpt-codec`; see [`crate::checkpoint::codec`]).
+    /// Under `CheckpointStrategy::Full` a non-`None` codec routes the
+    /// write through the codec-capable delta writer with `max_chain = 0`
+    /// (every checkpoint a fresh base) — the partitioned full engine
+    /// stays codec-oblivious, and the `strategy` knob is then inert as
+    /// under delta. `Baseline` rejects any codec: it is the torch.save
+    /// stand-in and must write plain bytes.
+    pub ckpt_codec: CodecKind,
     /// Write-path tuning (engine kind, staging size, durability).
     pub io: IoConfig,
     /// Storage mount points to stripe checkpoint partitions across
@@ -153,6 +163,7 @@ impl TrainerConfig {
             strategy: WriterStrategy::AllReplicas,
             ckpt_strategy: CheckpointStrategy::Full,
             segment_bytes: delta::DeltaConfig::default().segment_bytes,
+            ckpt_codec: CodecKind::None,
             io: IoConfig::fastpersist(),
             devices: DeviceMap::single(),
             dp_writers: 2,
@@ -189,6 +200,39 @@ impl RestoreReport {
     /// Restore throughput in decimal GB/s.
     pub fn gbps(&self) -> f64 {
         crate::util::bytes::gbps(self.total_bytes, self.latency.as_secs_f64())
+    }
+}
+
+/// One completed checkpoint's recorder-bound counters, copied out of a
+/// helper-owned outcome list before the borrow on the checkpointer is
+/// released (the recorder needs `&mut self`).
+struct HarvestedCkpt {
+    latency: f64,
+    bytes: u64,
+    jobs: u64,
+    fsyncs: u64,
+    direct_extents: u64,
+    bounce: u64,
+    ring: [u64; 3],
+    bytes_raw: u64,
+    bytes_encoded: u64,
+    encode_s: f64,
+}
+
+impl HarvestedCkpt {
+    fn of(o: &CheckpointOutcome) -> HarvestedCkpt {
+        HarvestedCkpt {
+            latency: o.latency.as_secs_f64(),
+            bytes: o.written_bytes,
+            jobs: o.stats.len() as u64,
+            fsyncs: o.stats.iter().map(|s| s.fsyncs).sum::<u64>(),
+            direct_extents: o.direct_extents(),
+            bounce: o.bounce_bytes(),
+            ring: [o.batched_submissions(), o.sqes_per_submit_max(), o.completions_reaped()],
+            bytes_raw: o.bytes_raw,
+            bytes_encoded: o.bytes_encoded,
+            encode_s: o.encode.as_secs_f64(),
+        }
     }
 }
 
@@ -296,6 +340,9 @@ impl Trainer {
         trainer.recorder.record("ckpt_read_jobs", report.stats.jobs as f64);
         trainer.recorder.record("ckpt_read_preads", report.stats.preads as f64);
         trainer.recorder.record("ckpt_read_coalesced", report.stats.coalesced as f64);
+        trainer.recorder.record("ckpt_read_bytes_encoded", report.stats.bytes_encoded as f64);
+        trainer.recorder.record("ckpt_read_chunks_decoded", report.stats.chunks_decoded as f64);
+        trainer.recorder.record("ckpt_decode_s", report.stats.decode.as_secs_f64());
         trainer.recorder.record("ckpt_restore_s", report.latency.as_secs_f64());
         if let Some(cs) = cache_stats {
             trainer.recorder.record("ckpt_cache_hits", cs.hits as f64);
@@ -356,6 +403,15 @@ impl Trainer {
         }
         let ckpt_on = cfg.ckpt_every > 0;
         let delta_cfg = match cfg.ckpt_strategy {
+            // Full snapshots with a codec route through the delta writer
+            // at max_chain = 0: every checkpoint is a fresh base (no
+            // diffing, no chain) but the encode stage applies. QuantDelta
+            // has no prior image to diff against on a base, so it
+            // degrades to storing raw bytes here; lz4 compresses as
+            // usual.
+            CheckpointStrategy::Full if cfg.ckpt_codec != CodecKind::None => {
+                Some(delta::DeltaConfig { max_chain: 0, ..delta::DeltaConfig::default() })
+            }
             CheckpointStrategy::Full => None,
             CheckpointStrategy::Delta(d) => Some(d),
         };
@@ -367,7 +423,11 @@ impl Trainer {
         let make_delta = |d: delta::DeltaConfig| -> Result<DeltaCheckpointer> {
             // thread the CLI/TrainerConfig segment-size knob into the
             // delta writer's segment packing
-            let d = delta::DeltaConfig { segment_bytes: cfg.segment_bytes, ..d };
+            let d = delta::DeltaConfig {
+                segment_bytes: cfg.segment_bytes,
+                codec: cfg.ckpt_codec,
+                ..d
+            };
             let mut dk = DeltaCheckpointer::new(Arc::clone(&io_runtime), d);
             if resumed {
                 if let Some(latest) = Self::latest_checkpoint(&cfg.ckpt_dir)? {
@@ -383,6 +443,13 @@ impl Trainer {
         match cfg.mode {
             CkptRunMode::None => {}
             CkptRunMode::Baseline if ckpt_on => {
+                if cfg.ckpt_codec != CodecKind::None {
+                    return Err(Error::Config(
+                        "baseline mode is the torch.save stand-in and writes plain \
+                         full snapshots; --ckpt-codec needs mode sync, pipelined, or lazy"
+                            .into(),
+                    ));
+                }
                 if delta_cfg.is_some() {
                     return Err(Error::Config(
                         "baseline mode is the full-snapshot torch.save stand-in; \
@@ -457,32 +524,13 @@ impl Trainer {
     /// metric is comparable across modes), while job/fsync counts come
     /// from the per-partition/per-segment [`crate::io::WriteStats`].
     fn harvest_pipe_outcomes(&mut self) {
-        let harvested: Vec<(f64, u64, u64, u64, u64, u64, [u64; 3])> = match self.pipe.as_ref() {
-            Some(pipe) => pipe.completed[self.pipe_seen..]
-                .iter()
-                .map(|o| {
-                    (
-                        o.latency.as_secs_f64(),
-                        o.written_bytes,
-                        o.stats.len() as u64,
-                        o.stats.iter().map(|s| s.fsyncs).sum::<u64>(),
-                        o.direct_extents(),
-                        o.bounce_bytes(),
-                        [o.batched_submissions(), o.sqes_per_submit_max(), o.completions_reaped()],
-                    )
-                })
-                .collect(),
+        let harvested: Vec<HarvestedCkpt> = match self.pipe.as_ref() {
+            Some(pipe) => pipe.completed[self.pipe_seen..].iter().map(HarvestedCkpt::of).collect(),
             None => return,
         };
         self.pipe_seen += harvested.len();
-        for (latency, bytes, jobs, fsyncs, direct_extents, bounce, ring) in harvested {
-            self.recorder.record("ckpt_latency_s", latency);
-            self.recorder.record("ckpt_written_bytes", bytes as f64);
-            self.recorder.record("ckpt_write_jobs", jobs as f64);
-            self.recorder.record("ckpt_fsyncs", fsyncs as f64);
-            self.recorder.record("ckpt_direct_extents", direct_extents as f64);
-            self.recorder.record("ckpt_bounce_bytes", bounce as f64);
-            self.record_ring_counters(ring);
+        for h in harvested {
+            self.record_ckpt_outcome(h);
         }
     }
 
@@ -492,40 +540,37 @@ impl Trainer {
     /// helper-side flush time per generation, the concurrent-work
     /// counterpart of the trainer-side `stall_s`.
     fn harvest_lazy_outcomes(&mut self) {
-        let harvested: Vec<(f64, f64, u64, u64, u64, u64, u64, [u64; 3])> =
-            match self.lazy.as_ref() {
-                Some(lz) => lz.completed[self.lazy_seen..]
-                    .iter()
-                    .map(|o| {
-                        (
-                            o.drain.as_secs_f64(),
-                            o.outcome.latency.as_secs_f64(),
-                            o.outcome.written_bytes,
-                            o.outcome.stats.len() as u64,
-                            o.outcome.stats.iter().map(|s| s.fsyncs).sum::<u64>(),
-                            o.outcome.direct_extents(),
-                            o.outcome.bounce_bytes(),
-                            [
-                                o.outcome.batched_submissions(),
-                                o.outcome.sqes_per_submit_max(),
-                                o.outcome.completions_reaped(),
-                            ],
-                        )
-                    })
-                    .collect(),
-                None => return,
-            };
+        let harvested: Vec<(f64, HarvestedCkpt)> = match self.lazy.as_ref() {
+            Some(lz) => lz.completed[self.lazy_seen..]
+                .iter()
+                .map(|o| (o.drain.as_secs_f64(), HarvestedCkpt::of(&o.outcome)))
+                .collect(),
+            None => return,
+        };
         self.lazy_seen += harvested.len();
-        for (drain, latency, bytes, jobs, fsyncs, direct_extents, bounce, ring) in harvested {
+        for (drain, h) in harvested {
             self.recorder.record("drain_s", drain);
-            self.recorder.record("ckpt_latency_s", latency);
-            self.recorder.record("ckpt_written_bytes", bytes as f64);
-            self.recorder.record("ckpt_write_jobs", jobs as f64);
-            self.recorder.record("ckpt_fsyncs", fsyncs as f64);
-            self.recorder.record("ckpt_direct_extents", direct_extents as f64);
-            self.recorder.record("ckpt_bounce_bytes", bounce as f64);
-            self.record_ring_counters(ring);
+            self.record_ckpt_outcome(h);
         }
+    }
+
+    /// Record one completed checkpoint's shared metric series — the same
+    /// names whatever mode produced it, so the series stay comparable
+    /// across modes. The codec counters (`ckpt_bytes_raw` /
+    /// `ckpt_bytes_encoded` / `ckpt_encode_s`) land here too:
+    /// `bytes_encoded / bytes_raw` is the achieved codec ratio, 1.0 when
+    /// no codec is active.
+    fn record_ckpt_outcome(&mut self, h: HarvestedCkpt) {
+        self.recorder.record("ckpt_latency_s", h.latency);
+        self.recorder.record("ckpt_written_bytes", h.bytes as f64);
+        self.recorder.record("ckpt_write_jobs", h.jobs as f64);
+        self.recorder.record("ckpt_fsyncs", h.fsyncs as f64);
+        self.recorder.record("ckpt_direct_extents", h.direct_extents as f64);
+        self.recorder.record("ckpt_bounce_bytes", h.bounce as f64);
+        self.recorder.record("ckpt_bytes_raw", h.bytes_raw as f64);
+        self.recorder.record("ckpt_bytes_encoded", h.bytes_encoded as f64);
+        self.recorder.record("ckpt_encode_s", h.encode_s);
+        self.record_ring_counters(h.ring);
     }
 
     /// Record one checkpoint's submission-backend counters:
@@ -691,6 +736,9 @@ impl Trainer {
                     self.recorder.record("ckpt_fsyncs", out.fsyncs as f64);
                     self.recorder.record("ckpt_direct_extents", out.direct_extents() as f64);
                     self.recorder.record("ckpt_bounce_bytes", out.bounce_bytes() as f64);
+                    self.recorder.record("ckpt_bytes_raw", out.bytes_raw as f64);
+                    self.recorder.record("ckpt_bytes_encoded", out.bytes_encoded as f64);
+                    self.recorder.record("ckpt_encode_s", out.encode.as_secs_f64());
                     self.record_ring_counters([
                         out.batched_submissions(),
                         out.sqes_per_submit_max(),
@@ -706,18 +754,8 @@ impl Trainer {
                     let engine = self.engine.as_ref().expect("sync mode has engine");
                     let out = engine.write(&store, extras, &dir, &self.group)?;
                     self.recorder.record("stall_s", ck.secs());
-                    self.recorder.record("ckpt_latency_s", out.latency.as_secs_f64());
-                    self.recorder.record("ckpt_written_bytes", out.written_bytes as f64);
-                    self.recorder.record("ckpt_write_jobs", out.stats.len() as f64);
-                    self.recorder
-                        .record("ckpt_fsyncs", out.stats.iter().map(|s| s.fsyncs).sum::<u64>() as f64);
-                    self.recorder.record("ckpt_direct_extents", out.direct_extents() as f64);
-                    self.recorder.record("ckpt_bounce_bytes", out.bounce_bytes() as f64);
-                    self.record_ring_counters([
-                        out.batched_submissions(),
-                        out.sqes_per_submit_max(),
-                        out.completions_reaped(),
-                    ]);
+                    let h = HarvestedCkpt::of(&out);
+                    self.record_ckpt_outcome(h);
                     self.recorder.count("ckpts", 1);
                 }
                 CkptRunMode::Pipelined => {

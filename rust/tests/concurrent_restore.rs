@@ -67,7 +67,7 @@ fn write_delta_chain(
 ) -> (Vec<PathBuf>, Vec<TensorStore>) {
     let mut ck = DeltaCheckpointer::new(
         Arc::clone(rt),
-        DeltaConfig { chunk_size: 4096, max_chain: 32, segment_bytes },
+        DeltaConfig { chunk_size: 4096, max_chain: 32, segment_bytes, ..DeltaConfig::default() },
     );
     let mut dirs = Vec::new();
     let mut states = Vec::new();

@@ -23,6 +23,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+use fastpersist::checkpoint::codec::CodecKind;
 use fastpersist::checkpoint::delta::{
     prune_chain_injected, DeltaCheckpointer, DeltaConfig, GcPolicy,
 };
@@ -66,6 +67,18 @@ fn delta_writer(rt: &Arc<IoRuntime>, max_chain: u64) -> DeltaCheckpointer {
     )
 }
 
+fn qdelta_writer(rt: &Arc<IoRuntime>, max_chain: u64) -> DeltaCheckpointer {
+    DeltaCheckpointer::new(
+        Arc::clone(rt),
+        DeltaConfig {
+            chunk_size: CS,
+            max_chain,
+            codec: CodecKind::QuantDelta,
+            ..DeltaConfig::default()
+        },
+    )
+}
+
 fn store(seed: u64, nbytes: usize) -> TensorStore {
     let mut rng = Rng::new(seed);
     let mut s = TensorStore::new();
@@ -82,6 +95,23 @@ fn mutate(s: &mut TensorStore, frac: f64, tag: u8) {
     let start = data.len() / 4;
     for b in &mut data[start..start + n] {
         *b ^= tag | 1;
+    }
+    s.update("w", data).unwrap();
+}
+
+/// Small-magnitude scattered updates (bump one byte every 64 across a
+/// sliding window): the dirty chunks' diffs against their previously
+/// stored bytes are mostly zero runs, so the qdelta codec actually
+/// encodes them instead of the benefit gate falling back to raw.
+fn scatter_mutate(s: &mut TensorStore, step: u64) {
+    let t = s.get("w").unwrap();
+    let mut data = t.data.as_slice().to_vec();
+    let start = (step as usize * 3 * CS as usize) % (data.len() / 2);
+    let end = (start + 4 * CS as usize).min(data.len());
+    let mut off = start;
+    while off < end {
+        data[off] = data[off].wrapping_add(1);
+        off += 64;
     }
     s.update("w", data).unwrap();
 }
@@ -140,6 +170,24 @@ fn run_delta(fault: FaultPlan, dir: &Path) -> Vec<(i64, TensorStore)> {
         let _ = ck.write(&s, extra(step), &step_dir(dir, step));
         snaps.push((step, s.snapshot()));
         mutate(&mut s, 0.05, step as u8);
+    }
+    snaps
+}
+
+/// Quantized-delta chain base+Δ+Δ: dirty chunks store encoded diffs
+/// against base extents in older directories, so every
+/// Stage/Drain/Fsync/Publish boundary is crossed with codec metadata in
+/// flight — and recovery must *decode* through surviving base
+/// references to prove the durable generation bit-exact.
+fn run_qdelta(fault: FaultPlan, dir: &Path) -> Vec<(i64, TensorStore)> {
+    let rt = runtime_with(EngineKind::DirectDouble, Some(fault));
+    let mut ck = qdelta_writer(&rt, 8);
+    let mut s = store(41, 12 * CS as usize);
+    let mut snaps = Vec::new();
+    for step in 1..=3i64 {
+        let _ = ck.write(&s, extra(step), &step_dir(dir, step));
+        snaps.push((step, s.snapshot()));
+        scatter_mutate(&mut s, step as u64);
     }
     snaps
 }
@@ -219,7 +267,26 @@ fn restart_staged(_fault: &FaultPlan, dir: &Path, snaps: &[(i64, TensorStore)]) 
 /// more loadable step.
 fn restart_delta(_fault: &FaultPlan, dir: &Path, snaps: &[(i64, TensorStore)]) {
     let rt = runtime_with(EngineKind::DirectDouble, None);
-    let mut ck = delta_writer(&rt, 8);
+    let ck = delta_writer(&rt, 8);
+    restart_chain(ck, &rt, dir, snaps);
+}
+
+/// Restarted quantized-delta writer: resume drops the in-memory diff
+/// references (the next write's dirty chunks degrade to raw storage)
+/// but must still continue the chain and publish a loadable step whose
+/// *inherited* chunks decode through their recorded base refs.
+fn restart_qdelta(_fault: &FaultPlan, dir: &Path, snaps: &[(i64, TensorStore)]) {
+    let rt = runtime_with(EngineKind::DirectDouble, None);
+    let ck = qdelta_writer(&rt, 8);
+    restart_chain(ck, &rt, dir, snaps);
+}
+
+fn restart_chain(
+    mut ck: DeltaCheckpointer,
+    rt: &Arc<IoRuntime>,
+    dir: &Path,
+    snaps: &[(i64, TensorStore)],
+) {
     let latest = Trainer::latest_checkpoint(dir).unwrap();
     let resumed = match &latest {
         Some(l) => ck.resume_from(l).expect("resume from published checkpoint"),
@@ -231,7 +298,7 @@ fn restart_delta(_fault: &FaultPlan, dir: &Path, snaps: &[(i64, TensorStore)]) {
     mutate(&mut s, 0.05, 9);
     let out = ck.write(&s, extra(next), &step_dir(dir, next)).expect("restarted writer");
     assert_eq!(out.is_base, !resumed, "restart must continue a resumable chain");
-    let (loaded, _, _) = load_checkpoint(&step_dir(dir, next), &rt).expect("restart must load");
+    let (loaded, _, _) = load_checkpoint(&step_dir(dir, next), rt).expect("restart must load");
     assert!(loaded.content_eq(&s));
     let newest = Trainer::latest_checkpoint(dir).unwrap().expect("restart published");
     assert!(newest.ends_with(format!("step-{next:08}")), "latest = {newest:?}");
@@ -428,6 +495,16 @@ fn delta_chain_plan_survives_every_fault_boundary() {
         cells: WRITE_CELLS,
         run: run_delta,
         epilogue: restart_delta,
+    });
+}
+
+#[test]
+fn qdelta_chain_plan_survives_every_fault_boundary() {
+    run_matrix(&Scenario {
+        name: "qdelta-chain",
+        cells: WRITE_CELLS,
+        run: run_qdelta,
+        epilogue: restart_qdelta,
     });
 }
 

@@ -1,0 +1,383 @@
+#!/usr/bin/env python3
+"""Deterministic generator for the committed v6 fixture chain.
+
+Mirrors `rust/tests/fixtures/v5` (same logical tensor states, same FPSG
+segment packing) in the **manifest v6** encoding: the binary chunk
+record widens from 36 to 76 bytes to carry the codec stage — codec id,
+encoded length, and the quantized-delta base reference — and the chain
+is written with the `lz4` codec, so dirty chunks are stored as in-repo
+LZ77 block streams (the compressor below is a line-for-line port of
+`checkpoint::codec::lz4_compress`, greedy hash-chain matching with
+4-bit length nibbles and 16-bit offsets). Chunks whose encoding does
+not shrink them store raw (the benefit gate), exactly like the Rust
+writer; `hash` and `len` always describe the chunk's *raw* bytes. See
+`docs/FORMATS.md` for the record layout.
+
+The Rust-side regeneration path is the ignored `generate_v6_fixture`
+test in `rust/tests/format_compat.rs`; this script exists so the
+fixture can be rebuilt without a Rust toolchain, and `format_compat.rs`
+verifies the result reloads bit-identically. The script also re-decodes
+everything it wrote (segments -> lz4 -> stream digest) before exiting,
+so a generation bug fails here, not in CI.
+
+Usage:  python3 gen_v6_fixture.py   (from this directory)
+"""
+
+import json
+import os
+import struct
+
+MASK = (1 << 64) - 1
+MUL = 0x9E3779B97F4A7C15
+CHUNK = 4096
+SEGMENT_HEADER_LEN = 4096
+HEADER_PAD = 256
+PREAMBLE_LEN = 16
+NO_INDEX = 0xFFFFFFFF
+CODEC_NONE = 0
+CODEC_LZ4 = 1
+# v6 record: the 36-byte v5 layout + codec id, 3 pad bytes, encoded
+# length, and the qdelta base reference (sentinel here: lz4 has no base)
+RECORD_V6 = struct.Struct("<QQIIIQB3xQIIIQQ")
+
+
+def checksum64(data: bytes) -> int:
+    """Port of serialize::format::checksum64_slice."""
+    h = 0xCBF29CE484222325
+    n = len(data) - len(data) % 8
+    for i in range(0, n, 8):
+        (word,) = struct.unpack_from("<Q", data, i)
+        h = ((h ^ word) * MUL) & MASK
+        h ^= h >> 29
+    rem = data[n:]
+    if rem:
+        carry = 0
+        for i, b in enumerate(rem):
+            carry |= b << (8 * i)
+        word = carry | (len(rem) << 56)
+        h = ((h ^ word) * MUL) & MASK
+        h ^= h >> 29
+    return h
+
+
+def combine_digests(header_digest: int, data_digest: int) -> int:
+    """Port of serialize::format::combine_digests."""
+    h = 0x84222325_CBF29CE4
+    h = ((h ^ header_digest) * MUL) & MASK
+    h ^= h >> 29
+    h = ((h ^ data_digest) * MUL) & MASK
+    h ^= h >> 29
+    return h
+
+
+# ------------------------------------------------------------------ lz4
+# Port of checkpoint::codec::lz4_compress / lz4_decompress_into.
+
+LZ_HASH_BITS = 13
+LZ_MIN_MATCH = 4
+LZ_MAX_OFFSET = 0xFFFF
+
+
+def _push_run(out: bytearray, n: int):
+    while n >= 255:
+        out.append(255)
+        n -= 255
+    out.append(n)
+
+
+def _emit_sequence(out: bytearray, literals: bytes, m):
+    lit_code = min(len(literals), 15)
+    match_code = 0 if m is None else min(m[1] - (LZ_MIN_MATCH - 1), 15)
+    out.append((lit_code << 4) | match_code)
+    if len(literals) >= 15:
+        _push_run(out, len(literals) - 15)
+    out += literals
+    if m is not None:
+        offset, length = m
+        out += offset.to_bytes(2, "little")
+        if length - (LZ_MIN_MATCH - 1) >= 15:
+            _push_run(out, length - (LZ_MIN_MATCH - 1) - 15)
+
+
+def lz4_compress(src: bytes) -> bytes:
+    out = bytearray()
+    table = [0] * (1 << LZ_HASH_BITS)
+    n = len(src)
+
+    def word(p):
+        return int.from_bytes(src[p : p + 4], "little")
+
+    i = anchor = 0
+    while i + LZ_MIN_MATCH <= n:
+        w = word(i)
+        h = ((w * 2654435761) & 0xFFFFFFFF) >> (32 - LZ_HASH_BITS)
+        cand = table[h]
+        table[h] = i + 1
+        if cand > 0:
+            c = cand - 1
+            if i - c <= LZ_MAX_OFFSET and word(c) == w:
+                length = LZ_MIN_MATCH
+                while i + length < n and src[c + length] == src[i + length]:
+                    length += 1
+                _emit_sequence(out, src[anchor:i], (i - c, length))
+                i += length
+                anchor = i
+                continue
+        i += 1
+    _emit_sequence(out, src[anchor:], None)
+    return bytes(out)
+
+
+def lz4_decompress(src: bytes, raw_len: int) -> bytes:
+    """Reference decoder for the self-check at the end of generation."""
+    dest = bytearray()
+    i = 0
+    while True:
+        token = src[i]
+        i += 1
+        lit = token >> 4
+        if lit == 15:
+            while True:
+                b = src[i]
+                i += 1
+                lit += b
+                if b < 255:
+                    break
+        dest += src[i : i + lit]
+        i += lit
+        mcode = token & 0x0F
+        if mcode == 0:
+            assert i == len(src) and len(dest) == raw_len, "bad terminal"
+            return bytes(dest)
+        offset = int.from_bytes(src[i : i + 2], "little")
+        i += 2
+        mlen = mcode + (LZ_MIN_MATCH - 1)
+        if mcode == 15:
+            while True:
+                b = src[i]
+                i += 1
+                mlen += b
+                if b < 255:
+                    break
+        assert 0 < offset <= len(dest), "bad offset"
+        for _ in range(mlen):
+            dest.append(dest[-offset])
+
+
+# ------------------------------------------------------- fixture content
+
+
+def expected_data(mutated: bool) -> bytes:
+    nbytes = 6 * 4096 + 777
+    data = bytearray((i * 131 + 7) % 256 for i in range(nbytes))
+    if mutated:
+        start = nbytes // 3
+        n = nbytes // 10
+        for i in range(start, start + n):
+            data[i] ^= 0x5A
+    return bytes(data)
+
+
+def encode_header(data: bytes, step: int) -> bytes:
+    """FormatHeader::encode — compact JSON with BTreeMap-sorted keys,
+    space-padded so preamble+JSON is a HEADER_PAD multiple."""
+    digest = checksum64(data)
+    header = {
+        "data_len": len(data),
+        "digest_hi": digest >> 32,
+        "digest_lo": digest & 0xFFFFFFFF,
+        "extra": {"step": step},
+        "tensors": [{"dtype": "u8", "name": "w", "offset": 0, "shape": [len(data)]}],
+        "version": 1,
+    }
+    js = json.dumps(header, sort_keys=True, separators=(",", ":")).encode()
+    total = PREAMBLE_LEN + len(js)
+    total += -total % HEADER_PAD
+    hlen = total - PREAMBLE_LEN
+    out = b"FPCK" + struct.pack("<IQ", 1, hlen) + js
+    return out + b" " * (total - len(out))
+
+
+def grid_of(header: bytes, data: bytes):
+    """Header-split chunk grid: chunk 0 = header, rest tile the data."""
+    chunks = [(checksum64(header), len(header))]
+    for off in range(0, len(data), CHUNK):
+        piece = data[off : off + CHUNK]
+        chunks.append((checksum64(piece), len(piece)))
+    return chunks
+
+
+def encode_segment_header(index: int, chunks: int, payload_len: int) -> bytes:
+    out = b"FPSG" + struct.pack("<III", 1, index, chunks) + struct.pack("<Q", payload_len)
+    return out + b"\0" * (SEGMENT_HEADER_LEN - len(out))
+
+
+def encode_chunk_table(entries):
+    """The v6 binary chunk table: one RECORD_V6 per chunk plus the
+    first-appearance-interned string tables it indexes into.
+
+    `entries` is a list of (hash, len, source|None, device|None, seg,
+    off, codec, enc_len). The qdelta base fields are always the sentinel
+    here — this fixture's codec is lz4, which never carries a base.
+    Returns (hex_blob, digest, sources, devices)."""
+    sources, devices, records = [], [], bytearray()
+
+    def intern(table, s):
+        if s is None:
+            return NO_INDEX
+        if s not in table:
+            table.append(s)
+        return table.index(s)
+
+    for h, l, src, dev, seg, off, codec, enc_len in entries:
+        records += RECORD_V6.pack(
+            h,
+            l,
+            intern(sources, src),
+            intern(devices, dev),
+            seg,
+            off,
+            codec,
+            enc_len,
+            NO_INDEX,  # base source: none
+            NO_INDEX,  # base device: none
+            NO_INDEX,  # base segment: no base
+            0,
+            0,
+        )
+    return bytes(records).hex(), checksum64(bytes(records)), sources, devices
+
+
+def write_checkpoint(dirname: str, step: int, mutated: bool, prev):
+    """Write one checkpoint the way DeltaCheckpointer::write does on a
+    single device with `codec: lz4`: dirty chunks are lz4-encoded (raw
+    when encoding does not shrink — the benefit gate), packed into one
+    segment in stream order with the header chunk last, and recorded in
+    a fully resolved v6 manifest. Returns this checkpoint's resolved
+    table for the next diff."""
+    data = expected_data(mutated)
+    header = encode_header(data, step)
+    stream = header + data
+    grid = grid_of(header, data)
+    digest = combine_digests(checksum64(header), checksum64(data))
+
+    offsets = []
+    off = 0
+    for _, length in grid:
+        offsets.append(off)
+        off += length
+    dirty = [
+        i
+        for i, (h, l) in enumerate(grid)
+        if prev is None or prev[i][:2] != (h, l)
+    ]
+    # codec stage: encode each dirty chunk, keep only shrinking encodings
+    stored_bytes = {}
+    codec_of = {}
+    for i in dirty:
+        raw = stream[offsets[i] : offsets[i] + grid[i][1]]
+        enc = lz4_compress(raw)
+        if len(enc) < len(raw):
+            stored_bytes[i], codec_of[i] = enc, CODEC_LZ4
+        else:
+            stored_bytes[i], codec_of[i] = raw, CODEC_NONE
+    # segment packing order: data chunks first, header chunk last
+    order = [i for i in dirty if i != 0] + [i for i in dirty if i == 0]
+    seg_ref, payload = {}, 0
+    for i in order:
+        seg_ref[i] = SEGMENT_HEADER_LEN + payload
+        payload += len(stored_bytes[i])
+
+    os.makedirs(dirname, exist_ok=True)
+    with open(os.path.join(dirname, "seg-000000.fpseg"), "wb") as f:
+        f.write(encode_segment_header(0, len(order), payload))
+        for i in order:
+            f.write(stored_bytes[i])
+
+    name = os.path.basename(dirname)
+    resolved, entries = [], []
+    for i, (h, l) in enumerate(grid):
+        if i in seg_ref:
+            # dirty chunk: no source (this dir), packed into segment 0
+            ck, el = codec_of[i], len(stored_bytes[i])
+            entries.append((h, l, None, None, 0, seg_ref[i], ck, el))
+            resolved.append((h, l, name, 0, seg_ref[i], ck, el))
+        else:
+            # clean chunk: inherit where (and how) the bytes are stored
+            _, _, src, seg, soff, ck, el = prev[i]
+            entries.append((h, l, src, None, seg, soff, ck, el))
+            resolved.append((h, l, src, seg, soff, ck, el))
+    table_hex, table_digest, sources, devices = encode_chunk_table(entries)
+    delta = {
+        "chain_len": 0 if prev is None else 1,
+        "chunk_size": CHUNK,
+        "chunk_count": len(entries),
+        "table_digest_hi": table_digest >> 32,
+        "table_digest_lo": table_digest & 0xFFFFFFFF,
+        "chunk_table": table_hex,
+        "header_len": len(header),
+    }
+    if sources:
+        delta["sources"] = sources
+    if devices:
+        delta["devices"] = devices
+    if prev is not None:
+        delta["base"] = "step-00000001"
+    manifest = {
+        "manifest_version": 6,
+        "total_len": len(stream),
+        "digest_hi": digest >> 32,
+        "digest_lo": digest & 0xFFFFFFFF,
+        "step": step,
+        "partitions": [],
+        "io_backend": "sync",
+        "delta": delta,
+    }
+    with open(os.path.join(dirname, "checkpoint.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return resolved
+
+
+def verify_checkpoint(root: str, name: str, mutated: bool, lz4_expected: int):
+    """Self-check: re-decode the chain member at `name` purely from the
+    files on disk (manifest -> records -> segment reads -> lz4 decode)
+    and assert the reassembled stream is bit-identical."""
+    with open(os.path.join(root, name, "checkpoint.json")) as f:
+        m = json.load(f)
+    records = bytes.fromhex(m["delta"]["chunk_table"])
+    want = (m["delta"]["table_digest_hi"] << 32) | m["delta"]["table_digest_lo"]
+    assert checksum64(records) == want, "table digest mismatch"
+    sources = m["delta"].get("sources", [])
+    data = expected_data(mutated)
+    header = encode_header(data, m["step"])
+    stream = header + data
+    out, pos, n_lz4 = bytearray(), 0, 0
+    for k in range(m["delta"]["chunk_count"]):
+        rec = RECORD_V6.unpack_from(records, k * RECORD_V6.size)
+        h, l, src_idx, _dev, _seg, off, codec, enc_len = rec[:8]
+        src = name if src_idx == NO_INDEX else sources[src_idx]
+        with open(os.path.join(root, src, "seg-000000.fpseg"), "rb") as f:
+            f.seek(off)
+            enc = f.read(enc_len)
+        raw = enc if codec == CODEC_NONE else lz4_decompress(enc, l)
+        assert checksum64(raw) == h, f"chunk {k} hash mismatch"
+        n_lz4 += codec == CODEC_LZ4
+        out += raw
+        pos += l
+    assert pos == m["total_len"] and bytes(out) == stream, f"{name} diverged"
+    assert n_lz4 >= lz4_expected, f"{name}: only {n_lz4} lz4 chunks"
+    print(f"  {name}: {len(out)} bytes OK, {n_lz4} lz4-encoded chunks")
+
+
+def main():
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "v6")
+    base = write_checkpoint(os.path.join(root, "step-00000001"), 1, False, None)
+    write_checkpoint(os.path.join(root, "step-00000002"), 2, True, base)
+    verify_checkpoint(root, "step-00000001", False, lz4_expected=1)
+    verify_checkpoint(root, "step-00000002", True, lz4_expected=1)
+    print(f"wrote v6 fixture under {root}")
+
+
+if __name__ == "__main__":
+    main()

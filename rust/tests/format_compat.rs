@@ -8,17 +8,20 @@
 //! segment files, header-split grid, JSON `chunks` array), and
 //! `rust/tests/fixtures/v5/` the same chain again with the **manifest
 //! v5** binary chunk table (hex blob of 36-byte LE records + interned
-//! string tables + table digest). The current ReadRuntime-based loader
-//! must keep reloading all three bit-identically — see
-//! `docs/FORMATS.md` for the version matrix.
+//! string tables + table digest), and `rust/tests/fixtures/v6/` the
+//! chain once more with the **manifest v6** codec-carrying records
+//! (76-byte LE: codec id + encoded length + qdelta base reference) and
+//! every chunk stored through the in-repo `lz4` block codec. The
+//! current ReadRuntime-based loader must keep reloading all four
+//! bit-identically — see `docs/FORMATS.md` for the version matrix.
 //!
-//! The v5 fixture was produced by the `generate_v5_fixture` test below
-//! (`cargo test --test format_compat -- --ignored generate_v5_fixture`);
-//! the v3/v4 fixtures are frozen artifacts of older writers,
+//! The v6 fixture was produced by the `generate_v6_fixture` test below
+//! (`cargo test --test format_compat -- --ignored generate_v6_fixture`);
+//! the v3/v4/v5 fixtures are frozen artifacts of older writers,
 //! regenerable only via the committed `gen_v4_fixture.py` /
-//! `gen_v5_fixture.py` scripts. Regenerate a fixture only when the
-//! *writer* intentionally changes layout, never to make the reader
-//! pass.
+//! `gen_v5_fixture.py` / `gen_v6_fixture.py` scripts. Regenerate a
+//! fixture only when the *writer* intentionally changes layout, never
+//! to make the reader pass.
 //!
 //! The corruption fuzz runs 29 scattered byte flips per target by
 //! default; set `FASTPERSIST_FUZZ_FULL=1` (the nightly CI sweep) for a
@@ -27,6 +30,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+use fastpersist::checkpoint::codec::CodecKind;
 use fastpersist::checkpoint::delta::{DeltaCheckpointer, DeltaConfig};
 use fastpersist::checkpoint::load::{load_checkpoint, load_checkpoint_with, RestoreOptions};
 use fastpersist::checkpoint::manifest::CheckpointManifest;
@@ -46,6 +50,10 @@ fn fixture_dir_v4() -> PathBuf {
 
 fn fixture_dir_v5() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/v5")
+}
+
+fn fixture_dir_v6() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/v6")
 }
 
 fn runtime() -> Arc<IoRuntime> {
@@ -162,6 +170,51 @@ fn v5_binary_table_checkpoints_reload_bit_identically() {
 }
 
 #[test]
+fn v6_codec_table_checkpoints_reload_bit_identically() {
+    let dir = fixture_dir_v6();
+    assert!(dir.join("step-00000001").is_dir(), "fixture missing: {dir:?}");
+    let rt = runtime();
+
+    // the base: every chunk of the committed fixture is lz4-encoded,
+    // so the whole restore flows through the decode stage — and must
+    // still come back bit-identical with every raw hash verified
+    let loaded =
+        load_checkpoint_with(&dir.join("step-00000001"), &rt, RestoreOptions::default()).unwrap();
+    assert!(loaded.store.content_eq(&expected_store(false)), "v6 base reload diverged");
+    assert_eq!(loaded.header.extra["step"], Json::Int(1));
+    let delta = loaded.manifest.delta.as_ref().expect("v6 base carries a delta section");
+    assert!(
+        delta.chunks.iter().all(|c| c.codec == CodecKind::Lz4 && c.enc_len < c.len),
+        "the committed v6 base stores every chunk lz4-encoded and shrunk"
+    );
+    assert!(delta.chunks.iter().all(|c| c.base.is_none()), "lz4 chunks carry no base refs");
+    assert_eq!(loaded.stats.chunks_verified as usize, delta.chunks.len());
+    assert_eq!(loaded.stats.chunks_decoded as usize, delta.chunks.len());
+    assert!(
+        loaded.stats.bytes_encoded > 0 && loaded.stats.bytes_encoded < loaded.stats.bytes,
+        "decode stats must show fewer encoded than raw bytes ({} / {})",
+        loaded.stats.bytes_encoded,
+        loaded.stats.bytes
+    );
+
+    // the delta link: inherited chunks keep the codec of wherever
+    // their bytes physically live (the base's segment store)
+    let (linked, header, manifest) = load_checkpoint(&dir.join("step-00000002"), &rt).unwrap();
+    assert!(linked.content_eq(&expected_store(true)), "v6 delta reload diverged");
+    assert_eq!(header.extra["step"], Json::Int(2));
+    let delta = manifest.delta.as_ref().unwrap();
+    assert_eq!(delta.chain_len, 1);
+    assert_eq!(delta.base.as_deref(), Some("step-00000001"));
+    assert!(
+        delta
+            .chunks
+            .iter()
+            .any(|c| c.source.as_deref() == Some("step-00000001") && c.codec == CodecKind::Lz4),
+        "inherited chunks must keep the codec fields of their source"
+    );
+}
+
+#[test]
 fn v3_manifest_does_not_seed_a_v4_chain() {
     // A restarted writer pointed at a v3 checkpoint must fall back to
     // base mode (its uniform grid cannot seed the header-split segment
@@ -188,19 +241,26 @@ fn fixture_manifests_report_their_versions() {
     let v = Json::parse(&text).unwrap();
     assert_eq!(v.get("manifest_version").unwrap().as_i64().unwrap(), 4);
     let _ = CheckpointManifest::from_json(&v).unwrap();
-    // the v5 fixture is exactly what the current writer emits
+    // the v5 fixture is frozen at the last codec-free binary-table
+    // version (36-byte records, no codec tail)
     let text =
         std::fs::read_to_string(fixture_dir_v5().join("step-00000002/checkpoint.json")).unwrap();
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(v.get("manifest_version").unwrap().as_i64().unwrap(), 5);
+    let _ = CheckpointManifest::from_json(&v).unwrap();
+    // the v6 fixture is exactly what the current writer emits
+    let text =
+        std::fs::read_to_string(fixture_dir_v6().join("step-00000002/checkpoint.json")).unwrap();
     let v = Json::parse(&text).unwrap();
     assert_eq!(
         v.get("manifest_version").unwrap().as_i64().unwrap(),
         fastpersist::checkpoint::manifest::MANIFEST_VERSION
     );
-    assert_eq!(fastpersist::checkpoint::manifest::MANIFEST_VERSION, 5);
+    assert_eq!(fastpersist::checkpoint::manifest::MANIFEST_VERSION, 6);
     let parsed = CheckpointManifest::from_json(&v).unwrap();
     assert!(
         v.get("delta").unwrap().opt("chunk_table").is_some(),
-        "v5 fixtures must carry the binary chunk table"
+        "v6 fixtures must carry the binary chunk table"
     );
     assert!(v.get("delta").unwrap().opt("chunks").is_none());
     let _ = parsed;
@@ -339,6 +399,38 @@ fn corrupted_v5_segment_fails_closed() {
 }
 
 #[test]
+fn corrupted_v6_manifest_fails_closed() {
+    // v6 hex-table flips additionally land in the codec tail of each
+    // record: codec ids, pad bytes, encoded lengths, and the qdelta
+    // base-reference sentinels — all must be caught (the table digest
+    // first, the per-field codec validation behind it), never panic
+    fuzz_file_fails_closed(
+        &fixture_dir_v6(),
+        "step-00000002/checkpoint.json",
+        "step-00000002",
+        &expected_store(true),
+        "v6-manifest",
+    );
+}
+
+#[test]
+fn corrupted_v6_segment_fails_closed() {
+    // v6 segments hold lz4 streams, so flips corrupt *encoded* bytes:
+    // either the decoder's own fail-closed checks trip or the decoded
+    // bytes miss the raw chunk hash — garbage must never load
+    let src = fixture_dir_v6();
+    let seg = std::fs::read_dir(src.join("step-00000001"))
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "fpseg"))
+        .expect("v6 fixture has a segment file");
+    let rel = format!("step-00000001/{}", seg.file_name().unwrap().to_str().unwrap());
+    fuzz_file_fails_closed(&src, &rel, "step-00000001", &expected_store(false), "v6-seg-base");
+    fuzz_file_fails_closed(&src, &rel, "step-00000002", &expected_store(true), "v6-seg-delta");
+}
+
+#[test]
 fn v2_manifest_reads_and_fuzzes_closed() {
     // synthesize a v2 chain: a full (partitioned) checkpoint whose
     // manifest is re-stamped v2, the oldest version this build reads
@@ -378,23 +470,30 @@ fn v2_manifest_reads_and_fuzzes_closed() {
 /// Fixture generator — run by hand, never in CI:
 ///
 /// ```text
-/// cargo test --test format_compat -- --ignored generate_v5_fixture
+/// cargo test --test format_compat -- --ignored generate_v6_fixture
 /// ```
 ///
 /// Writes the deterministic two-checkpoint chain of [`expected_store`]
-/// into `rust/tests/fixtures/v5/` with the *current* (v5) writer. The
-/// frozen v3/v4 fixtures come from older writers; rebuild them only via
-/// the committed `gen_v4_fixture.py` script (the current writer no
-/// longer emits those versions).
+/// into `rust/tests/fixtures/v6/` with the *current* (v6) writer under
+/// the `lz4` codec. The frozen v3/v4/v5 fixtures come from older
+/// writers; rebuild them only via the committed `gen_v4_fixture.py` /
+/// `gen_v5_fixture.py` scripts (the current writer no longer emits
+/// those versions). `gen_v6_fixture.py` is the toolchain-free mirror
+/// of this test and self-verifies what it wrote.
 #[test]
-#[ignore = "regenerates the committed v5 fixture"]
-fn generate_v5_fixture() {
-    let dir = fixture_dir_v5();
+#[ignore = "regenerates the committed v6 fixture"]
+fn generate_v6_fixture() {
+    let dir = fixture_dir_v6();
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
     let mut ck = DeltaCheckpointer::new(
         runtime(),
-        DeltaConfig { chunk_size: 4096, max_chain: 8, ..DeltaConfig::default() },
+        DeltaConfig {
+            chunk_size: 4096,
+            max_chain: 8,
+            codec: CodecKind::Lz4,
+            ..DeltaConfig::default()
+        },
     );
     let mut extra = std::collections::BTreeMap::new();
     extra.insert("step".to_string(), Json::Int(1));

@@ -26,6 +26,7 @@ fn cfg(model: &str, dir: PathBuf) -> TrainerConfig {
         strategy: WriterStrategy::AllReplicas,
         ckpt_strategy: fastpersist::checkpoint::delta::CheckpointStrategy::Full,
         segment_bytes: 64 << 20,
+        ckpt_codec: fastpersist::checkpoint::codec::CodecKind::None,
         io: IoConfig::fastpersist().microbench(),
         devices: fastpersist::io::device::DeviceMap::single(),
         dp_writers: 2,

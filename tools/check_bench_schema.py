@@ -25,6 +25,13 @@ Tag-specific rules:
   * serve — every row carries a numeric p99_s extra (tail latency is
     the serving-layer acceptance metric), and both cold and warm rows
     exist so the cache effect is actually measured
+  * codec — every row carries numeric bytes_raw, bytes_encoded,
+    encode_s and decode_s extras; rows exist for all three codecs
+    (codec=none, codec=lz4, codec=qdelta) so the sweep stays
+    comparable; codec=none rows store exactly their raw bytes
+    (bytes_encoded == bytes_raw); and at least one non-none codec
+    halves the stored bytes on a delta-chain row (the headline
+    acceptance ratio)
 
 Exits non-zero with a one-line reason on the first violation.
 """
@@ -101,7 +108,49 @@ def check_fig8(results):
     return f"backend rows: {', '.join(sorted(backends))}"
 
 
-TAG_CHECKS = {"fig8": check_fig8, "fig11": check_fig11, "serve": check_serve}
+def check_codec(results):
+    codecs = set()
+    best_delta = None
+    for r in results:
+        m = re.search(r"\bcodec=(\w+)", r["name"])
+        if not m:
+            fail(f"codec result {r['name']!r} must carry codec=<name> in its name")
+        codec = m.group(1)
+        codecs.add(codec)
+        for key in ("bytes_raw", "bytes_encoded", "encode_s", "decode_s"):
+            if not is_num(r.get(key)):
+                fail(
+                    f"codec result {r['name']!r} must report numeric {key}, "
+                    f"got {r.get(key)!r}"
+                )
+        if codec == "none" and r["bytes_encoded"] != r["bytes_raw"]:
+            fail(
+                f"codec=none row {r['name']!r} must store raw bytes exactly "
+                f"(bytes_encoded={r['bytes_encoded']}, bytes_raw={r['bytes_raw']})"
+            )
+        if codec != "none" and "delta" in r["name"] and r["bytes_raw"] > 0:
+            ratio = r["bytes_encoded"] / r["bytes_raw"]
+            if best_delta is None or ratio < best_delta:
+                best_delta = ratio
+    for want in ("none", "lz4", "qdelta"):
+        if want not in codecs:
+            fail(f"codec sweep must emit codec={want} rows (got {sorted(codecs)})")
+    if best_delta is None:
+        fail("codec sweep must include non-none delta-chain rows")
+    if best_delta > 0.5:
+        fail(
+            f"no non-none codec reached bytes_encoded/bytes_raw <= 0.5 on a "
+            f"delta-chain row (best {best_delta:.3f})"
+        )
+    return f"codecs: {', '.join(sorted(codecs))}, best delta ratio {best_delta:.3f}"
+
+
+TAG_CHECKS = {
+    "fig8": check_fig8,
+    "fig11": check_fig11,
+    "serve": check_serve,
+    "codec": check_codec,
+}
 
 
 def main():
